@@ -1,0 +1,86 @@
+//! Quickstart: the three ways to run a fused 2D DCT with mddct.
+//!
+//!   1. direct plan API       (lowest overhead, single transform)
+//!   2. transform service     (batching + plan cache, production path)
+//!   3. PJRT artifact         (the JAX/Pallas AOT kernel, if built)
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use mddct::coordinator::{Service, ServiceConfig, TransformOp};
+use mddct::dct::{Dct2, Idct2};
+use mddct::runtime::{Manifest, PjrtHandle, DEFAULT_ARTIFACT_DIR};
+use mddct::util::rng::Rng;
+
+fn main() {
+    let n = 256;
+    let mut rng = Rng::new(1);
+    let x = rng.normal_vec(n * n);
+
+    // --- 1. direct plan API -------------------------------------------
+    let dct = Dct2::new(n, n);
+    let mut y = vec![0.0; n * n];
+    let times = dct.forward_timed(&x, &mut y);
+    println!(
+        "[plan]    dct2d {n}x{n}: {:.3} ms (pre {:.3} + fft {:.3} + post {:.3})",
+        times.total() * 1e3,
+        times.pre * 1e3,
+        times.fft * 1e3,
+        times.post * 1e3
+    );
+
+    // verify invertibility
+    let idct = Idct2::new(n, n);
+    let mut back = vec![0.0; n * n];
+    idct.forward(&y, &mut back);
+    let err = x
+        .iter()
+        .zip(&back)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("[plan]    roundtrip max error: {err:.2e}");
+    assert!(err < 1e-9);
+
+    // --- 2. transform service ------------------------------------------
+    let svc = Service::start_native(ServiceConfig::default());
+    let resp = svc
+        .transform(TransformOp::Dct2d, vec![n, n], x.clone())
+        .expect("service transform");
+    let diff = resp
+        .output
+        .iter()
+        .zip(&y)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!(
+        "[service] dct2d via {} backend, latency {:.3} ms, matches plan path: {}",
+        resp.backend,
+        resp.latency * 1e3,
+        diff < 1e-9
+    );
+
+    // --- 3. PJRT artifact (optional) -----------------------------------
+    match Manifest::load(DEFAULT_ARTIFACT_DIR) {
+        Ok(m) if m.entries.contains_key("dct2d_256x256") => {
+            let handle = PjrtHandle::spawn(DEFAULT_ARTIFACT_DIR);
+            let t0 = std::time::Instant::now();
+            let out = handle
+                .run("dct2d_256x256", vec![x.clone()])
+                .expect("pjrt run");
+            let dt = t0.elapsed().as_secs_f64();
+            let scale = y.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+            let maxrel = out[0]
+                .iter()
+                .zip(&y)
+                .map(|(a, b)| (a - b).abs() / scale)
+                .fold(0.0f64, f64::max);
+            println!(
+                "[pjrt]    dct2d artifact (f32, first call incl. XLA compile): \
+                 {:.1} ms, max rel err vs native f64: {maxrel:.2e}",
+                dt * 1e3
+            );
+            assert!(maxrel < 1e-3);
+        }
+        _ => println!("[pjrt]    artifacts/ not built — run `make artifacts` first"),
+    }
+    println!("quickstart OK");
+}

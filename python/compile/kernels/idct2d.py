@@ -1,0 +1,100 @@
+"""L1 kernels for the fused 2D IDCT (paper Algorithm 2, lines 5-8).
+
+Three-stage decomposition (mirror image of the forward transform):
+  preprocess  : build the onesided Hermitian spectrum from the real input
+                (Eq. 15, with the conjugated twiddles and global 1/4 the
+                printed formula is missing -- see DESIGN.md)
+  2D IRFFT    : performed by the L2 pipeline (jnp.fft.irfft2)
+  postprocess : inverse butterfly reorder (Eq. 16)
+
+The preprocess reads four mirrored input elements per spectrum entry and
+writes each onesided entry exactly once, matching the paper's "each thread
+reads four elements from the input matrix and writes two elements [one
+complex] to the output" description of the 2D IDCT preprocessing.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .common import pallas_wrap, twiddle, unreorder_2d
+
+__all__ = [
+    "idct2d_preprocess_jnp",
+    "idct2d_preprocess_pallas",
+    "idct2d_postprocess_jnp",
+    "idct2d_postprocess_pallas",
+]
+
+
+def _zflip_rows(x):
+    """Zero-boundary row flip: out[0]=0, out[k]=x[N1-k]."""
+    return jnp.concatenate(
+        [jnp.zeros_like(x[:1, :]), jnp.flip(x[1:, :], axis=0)], axis=0
+    )
+
+
+def _pre_math(x, ar, ai, br, bi, h):
+    """V[:, :H] = (conj(a) conj(b) / 4) * (x - f12 - j (f1 + f2)).
+
+    ar/ai: twiddle a(k1)=e^{-j pi k1/2N1} as (N1, 1) columns;
+    br/bi: twiddle b(k2) restricted to the H onesided columns.
+    Returns (Vre, Vim) of shape (N1, H).
+    """
+    n1, n2 = x.shape
+    xl = x[:, :h]
+    # f2 on the onesided columns: out[:,0]=0, out[:,k2]=x[:,N2-k2]
+    f2 = jnp.concatenate(
+        [jnp.zeros_like(x[:, :1]), jnp.flip(x[:, n2 - h + 1 :], axis=1)], axis=1
+    )
+    f1 = _zflip_rows(xl)
+    f12 = _zflip_rows(f2)
+    p = xl - f12
+    q = f1 + f2
+    # c = conj(a)*conj(b) = (ar*br - ai*bi) - j(ar*bi + ai*br)
+    cr = ar * br - ai * bi
+    ci = -(ar * bi + ai * br)
+    # V = c/4 * (p - j q)
+    vre = 0.25 * (cr * p + ci * q)
+    vim = 0.25 * (ci * p - cr * q)
+    return vre, vim
+
+
+def idct2d_preprocess_jnp(x):
+    """Eq. (15) (corrected) on the onesided columns, plain jnp."""
+    n1, n2 = x.shape
+    h = n2 // 2 + 1
+    ar, ai = twiddle(n1, x.dtype)
+    br, bi = twiddle(n2, x.dtype)
+    return _pre_math(x, ar[:, None], ai[:, None], br[:h], bi[:h], h)
+
+
+def idct2d_preprocess_pallas(x):
+    """Pallas version of the corrected Eq. (15) preprocess."""
+    import jax
+
+    n1, n2 = x.shape
+    h = n2 // 2 + 1
+    ar, ai = twiddle(n1, x.dtype)
+    br, bi = twiddle(n2, x.dtype)
+    out = jax.ShapeDtypeStruct((n1, h), x.dtype)
+    return pallas_wrap(
+        lambda xv, arv, aiv, brv, biv: _pre_math(
+            xv, arv[:, None], aiv[:, None], brv, biv, h
+        ),
+        (out, out),
+        x, ar, ai, br[:h], bi[:h],
+    )
+
+
+def idct2d_postprocess_jnp(v):
+    """Eq. (16): inverse butterfly reorder of the IRFFT output."""
+    return unreorder_2d(v)
+
+
+def idct2d_postprocess_pallas(v):
+    """Pallas version of the Eq. (16) reorder."""
+    import jax
+
+    return pallas_wrap(
+        unreorder_2d, jax.ShapeDtypeStruct(v.shape, v.dtype), v
+    )

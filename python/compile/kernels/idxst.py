@@ -1,0 +1,95 @@
+"""L1 kernels for IDXST and the fused DREAMPlace transforms (paper §V-B).
+
+DREAMPlace (Eq. 21) defines
+    IDXST({x_n})_k = (-1)^k IDCT({x_{N-n}})_k,   x_N := 0,
+and the 2D combinations (Eq. 22)
+    IDCT_IDXST(x) = IDCT(IDXST(x)^T)^T  (1D IDCT along rows,
+                                         then 1D IDXST along columns)
+    IDXST_IDCT(x) = IDXST(IDCT(x)^T)^T.
+
+Because the reverse-shift S and the (-1)^k sign flip are linear maps that
+commute with the transform along the *other* axis, both combinations fold
+into the SAME fused three-stage 2D IDCT (validated numerically, DESIGN.md):
+
+    IDCT_IDXST(x) = diag((-1)^{k1}) . IDCT2D(S_rows x)
+    IDXST_IDCT(x) = IDCT2D(S_cols x) . diag((-1)^{k2})
+
+so the paradigm covers them with an O(N^2) fold into pre/postprocessing,
+which is exactly the paper's claim of "stable performance regardless of
+transform types".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import pallas_wrap
+
+__all__ = [
+    "shift_rows", "shift_cols",
+    "sign_rows", "sign_cols",
+    "shift_last",
+    "sign_last",
+    "shift_rows_pallas", "sign_rows_pallas",
+]
+
+
+def shift_rows(x):
+    """S_rows: out[0,:] = 0, out[k,:] = x[N1-k,:] (zero reverse-shift)."""
+    return jnp.concatenate(
+        [jnp.zeros_like(x[:1, :]), jnp.flip(x[1:, :], axis=0)], axis=0
+    )
+
+
+def shift_cols(x):
+    """S_cols: out[:,0] = 0, out[:,k] = x[:,N2-k]."""
+    return jnp.concatenate(
+        [jnp.zeros_like(x[:, :1]), jnp.flip(x[:, 1:], axis=1)], axis=1
+    )
+
+
+def shift_last(x):
+    """S along the last axis for arbitrary-rank input (1D baseline path)."""
+    return jnp.concatenate(
+        [jnp.zeros_like(x[..., :1]), jnp.flip(x[..., 1:], axis=-1)], axis=-1
+    )
+
+
+def _signs(n, dtype):
+    return jnp.asarray((-1.0) ** np.arange(n), dtype=dtype)
+
+
+def sign_rows(x):
+    """diag((-1)^{k1}) . x"""
+    return x * _signs(x.shape[0], x.dtype)[:, None]
+
+
+def sign_cols(x):
+    """x . diag((-1)^{k2})"""
+    return x * _signs(x.shape[1], x.dtype)[None, :]
+
+
+def sign_last(x):
+    """(-1)^k scaling along the last axis."""
+    return x * _signs(x.shape[-1], x.dtype)
+
+
+def shift_rows_pallas(x):
+    """Pallas form of S_rows (fused into the IDCT preprocess on TPU)."""
+    return pallas_wrap(shift_rows, jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+
+
+def sign_rows_pallas(x):
+    """Pallas form of the (-1)^{k1} postprocess fold.
+
+    The sign vector is an explicit kernel operand (Pallas kernels may not
+    capture array constants), mirroring the precomputed-coefficient
+    convention used for twiddles.
+    """
+    s = _signs(x.shape[0], x.dtype)
+    return pallas_wrap(
+        lambda xv, sv: xv * sv[:, None],
+        jax.ShapeDtypeStruct(x.shape, x.dtype),
+        x, s,
+    )

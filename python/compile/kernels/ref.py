@@ -1,0 +1,125 @@
+"""Pure-jnp correctness oracles for every transform in the library.
+
+These are direct O(N^2) cosine/sine-matrix implementations, deliberately
+independent of any FFT so they can arbitrate between the FFT-based fast
+paths (kernels + model pipelines) and the Rust native backend.
+
+Conventions (see DESIGN.md "Mathematical conventions"):
+  dct(x)[k]  = 2 sum_n x[n] cos(pi k (2n+1) / 2N)      (DCT-II, scipy-style)
+  idct       = exact inverse of dct
+  idxst(x)_k = (-1)^k idct({x[N-n]})_k with x[N] := 0   (DREAMPlace Eq. 21)
+2D transforms are separable applications along each axis.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "dct_mat",
+    "idct_mat",
+    "idxst_mat",
+    "dct1d_ref",
+    "idct1d_ref",
+    "idxst1d_ref",
+    "dct2d_ref",
+    "idct2d_ref",
+    "idct_idxst_ref",
+    "idxst_idct_ref",
+    "compress_ref",
+    "dst_mat",
+    "dst1d_ref",
+    "dst2d_ref",
+]
+
+
+def dct_mat(n: int, dtype=np.float64) -> np.ndarray:
+    """DCT-II matrix C with (C x)[k] = 2 sum_n x[n] cos(pi k (2n+1)/2N)."""
+    k = np.arange(n)[:, None]
+    m = np.arange(n)[None, :]
+    return (2.0 * np.cos(np.pi * k * (2 * m + 1) / (2 * n))).astype(dtype)
+
+
+def idct_mat(n: int, dtype=np.float64) -> np.ndarray:
+    """Exact inverse of :func:`dct_mat` in closed form (DCT-III / 2N)."""
+    k = np.arange(n)[:, None]
+    m = np.arange(n)[None, :]
+    c = 2.0 * np.cos(np.pi * m * (2 * k + 1) / (2 * n))
+    c[:, 0] = 1.0
+    return (c / (2.0 * n)).astype(dtype)
+
+
+def idxst_mat(n: int, dtype=np.float64) -> np.ndarray:
+    """IDXST matrix: idxst(x) = sign . idct(S x), S the zero reverse-shift."""
+    s = np.zeros((n, n))
+    for i in range(1, n):
+        s[i, n - i] = 1.0  # (S x)[i] = x[N - i]; (S x)[0] = x[N] = 0
+    sign = np.diag((-1.0) ** np.arange(n))
+    return (sign @ idct_mat(n) @ s).astype(dtype)
+
+
+def _apply_last(mat: np.ndarray, x):
+    return jnp.matmul(x, jnp.asarray(mat, dtype=x.dtype).T)
+
+
+def _apply_first(mat: np.ndarray, x):
+    return jnp.matmul(jnp.asarray(mat, dtype=x.dtype), x)
+
+
+def dct1d_ref(x):
+    """DCT-II along the last axis."""
+    return _apply_last(dct_mat(x.shape[-1]), x)
+
+
+def idct1d_ref(x):
+    """Inverse DCT along the last axis."""
+    return _apply_last(idct_mat(x.shape[-1]), x)
+
+
+def idxst1d_ref(x):
+    """IDXST along the last axis."""
+    return _apply_last(idxst_mat(x.shape[-1]), x)
+
+
+def dct2d_ref(x):
+    """Separable 2D DCT-II: rows then columns (order is immaterial)."""
+    return _apply_first(dct_mat(x.shape[0]), _apply_last(dct_mat(x.shape[1]), x))
+
+
+def idct2d_ref(x):
+    """Separable 2D inverse DCT."""
+    return _apply_first(idct_mat(x.shape[0]), _apply_last(idct_mat(x.shape[1]), x))
+
+
+def idct_idxst_ref(x):
+    """Paper Eq. (22): 1D IDCT along rows, then 1D IDXST along columns."""
+    return _apply_first(idxst_mat(x.shape[0]), _apply_last(idct_mat(x.shape[1]), x))
+
+
+def idxst_idct_ref(x):
+    """Paper Eq. (22): 1D IDXST along rows, then 1D IDCT along columns."""
+    return _apply_first(idct_mat(x.shape[0]), _apply_last(idxst_mat(x.shape[1]), x))
+
+
+def dst_mat(n: int, dtype=np.float64) -> np.ndarray:
+    """DST-II matrix: (S x)[k] = 2 sum_n x[n] sin(pi (k+1)(2n+1)/2N)."""
+    k = np.arange(n)[:, None]
+    m = np.arange(n)[None, :]
+    return (2.0 * np.sin(np.pi * (k + 1) * (2 * m + 1) / (2 * n))).astype(dtype)
+
+
+def dst1d_ref(x):
+    """DST-II along the last axis."""
+    return _apply_last(dst_mat(x.shape[-1]), x)
+
+
+def dst2d_ref(x):
+    """Separable 2D DST-II."""
+    return _apply_first(dst_mat(x.shape[0]), _apply_last(dst_mat(x.shape[1]), x))
+
+
+def compress_ref(x, eps):
+    """Image-compression oracle, Alg. 3: dct -> magnitude threshold -> idct."""
+    b = dct2d_ref(x)
+    c = jnp.where(jnp.abs(b) >= eps, b, jnp.zeros_like(b))
+    return idct2d_ref(c)

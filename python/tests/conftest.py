@@ -1,0 +1,13 @@
+import jax
+import pytest
+
+# The paper evaluates in double precision; enable x64 so the oracles are
+# exact enough to arbitrate (f32 paths are tested with looser tolerances).
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture
+def rng():
+    import numpy as np
+
+    return np.random.default_rng(1234)

@@ -1,0 +1,65 @@
+"""IDXST and the DREAMPlace 2D combinations (paper §V-B, Eqs. 21-22)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import ref as R
+
+
+def _rand(rng, shape):
+    return jnp.asarray(rng.standard_normal(shape))
+
+
+def _close(got, want):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-8, atol=1e-9)
+
+
+def test_idxst_definition(rng):
+    """Eq. (21): IDXST({x_n})_k = (-1)^k IDCT({x_{N-n}})_k, x_N = 0."""
+    n = 12
+    x = _rand(rng, n)
+    xs = jnp.concatenate([jnp.zeros(1), jnp.flip(x[1:])])
+    want = R.idct1d_ref(xs) * jnp.asarray((-1.0) ** np.arange(n))
+    _close(R.idxst1d_ref(x), want)
+
+
+def test_idxst_ignores_dc(rng):
+    """x_0 never enters Eq. (21) (the sine series has no DC term)."""
+    x = _rand(rng, 9)
+    y = x.at[0].set(123.456)
+    _close(R.idxst1d_ref(x), R.idxst1d_ref(y))
+
+
+@pytest.mark.parametrize("shape", [(4, 4), (8, 8), (6, 10), (5, 7), (16, 16)])
+def test_fused_combos_match_oracle(rng, shape):
+    x = _rand(rng, shape)
+    _close(M.idct_idxst(x), R.idct_idxst_ref(x))
+    _close(M.idxst_idct(x), R.idxst_idct_ref(x))
+
+
+@pytest.mark.parametrize("shape", [(8, 8), (6, 10)])
+def test_row_column_combos_match_oracle(rng, shape):
+    x = _rand(rng, shape)
+    _close(M.rc_idct_idxst(x), R.idct_idxst_ref(x))
+    _close(M.rc_idxst_idct(x), R.idxst_idct_ref(x))
+
+
+def test_combos_transpose_relation(rng):
+    """Eq. (22): IDCT_IDXST(x) = IDXST_IDCT(x^T)^T."""
+    x = _rand(rng, (8, 12))
+    _close(M.idct_idxst(x), M.idxst_idct(x.T).T)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n1=st.integers(min_value=2, max_value=16),
+    n2=st.integers(min_value=2, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_hypothesis_fused_equals_row_column(n1, n2, seed):
+    x = jnp.asarray(np.random.default_rng(seed).standard_normal((n1, n2)))
+    _close(M.idct_idxst(x), M.rc_idct_idxst(x))
+    _close(M.idxst_idct(x), M.rc_idxst_idct(x))

@@ -1,0 +1,187 @@
+"""Kernel vs oracle: the CORE correctness signal (L1 against ref.py).
+
+Every preprocess/postprocess kernel (both the jnp and the Pallas
+implementation) is checked against the direct O(N^2) cosine/sine-matrix
+oracles, over even/odd/rectangular/degenerate shapes and both dtypes.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import common as C
+from compile.kernels import ref as R
+
+SHAPES_2D = [(4, 4), (8, 8), (16, 16), (6, 10), (5, 7), (1, 8), (8, 1), (32, 8)]
+SIZES_1D = [1, 2, 3, 4, 8, 15, 16, 31, 64]
+
+
+def _rand(rng, shape, dtype=np.float64):
+    return jnp.asarray(rng.standard_normal(shape).astype(dtype))
+
+
+def _close(got, want, dtype=np.float64):
+    got, want = np.asarray(got), np.asarray(want)
+    if dtype == np.float32:
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+    else:
+        np.testing.assert_allclose(got, want, rtol=1e-8, atol=1e-9)
+
+
+# ------------------------------------------------------------- 1D DCT ----
+
+@pytest.mark.parametrize("n", SIZES_1D)
+@pytest.mark.parametrize(
+    "algo", ["dct1d_4n", "dct1d_2n_mirror", "dct1d_2n_pad", "dct1d_n"]
+)
+def test_1d_algorithms_match_oracle(rng, n, algo):
+    x = _rand(rng, n)
+    _close(M.PIPELINES[algo](x), R.dct1d_ref(x))
+
+
+@pytest.mark.parametrize("n", SIZES_1D)
+def test_idct1d_matches_oracle(rng, n):
+    x = _rand(rng, n)
+    _close(M.idct1d(x), R.idct1d_ref(x))
+
+
+@pytest.mark.parametrize("n", [8, 15, 16])
+def test_dct1d_n_pallas(rng, n):
+    x = _rand(rng, n)
+    _close(M.dct1d_n(x, impl="pallas"), R.dct1d_ref(x))
+
+
+def test_1d_batched_rows(rng):
+    """1D kernels accept matrices (the row-column baseline feeds them)."""
+    x = _rand(rng, (5, 16))
+    want = np.stack([np.asarray(R.dct1d_ref(x[i])) for i in range(5)])
+    _close(M.dct1d_n(x), want)
+    _close(M.idct1d(x), np.stack([np.asarray(R.idct1d_ref(x[i])) for i in range(5)]))
+
+
+def test_reorder_1d_is_permutation():
+    n = 16
+    x = jnp.arange(n, dtype=jnp.float64)
+    v = C.reorder_1d(x)
+    assert sorted(np.asarray(v).tolist()) == list(range(n))
+    _close(C.unreorder_1d(v), x)
+
+
+# ------------------------------------------------------------- 2D DCT ----
+
+@pytest.mark.parametrize("shape", SHAPES_2D)
+def test_dct2d_matches_oracle(rng, shape):
+    x = _rand(rng, shape)
+    _close(M.dct2d(x), R.dct2d_ref(x))
+
+
+@pytest.mark.parametrize("shape", SHAPES_2D)
+def test_idct2d_matches_oracle(rng, shape):
+    x = _rand(rng, shape)
+    _close(M.idct2d(x), R.idct2d_ref(x))
+
+
+@pytest.mark.parametrize("shape", [(8, 8), (6, 10), (16, 16), (5, 7)])
+def test_dct2d_pallas_matches_oracle(rng, shape):
+    x = _rand(rng, shape)
+    _close(M.dct2d(x, impl="pallas"), R.dct2d_ref(x))
+    _close(M.idct2d(x, impl="pallas"), R.idct2d_ref(x))
+
+
+@pytest.mark.parametrize("shape", SHAPES_2D)
+def test_row_column_baseline_matches_oracle(rng, shape):
+    x = _rand(rng, shape)
+    _close(M.rc_dct2d(x), R.dct2d_ref(x))
+    _close(M.rc_idct2d(x), R.idct2d_ref(x))
+
+
+def test_fused_equals_row_column(rng):
+    """The paper's central claim of exactness: fusion changes no numerics
+    beyond roundoff."""
+    x = _rand(rng, (24, 24))
+    _close(M.dct2d(x), M.rc_dct2d(x))
+    _close(M.idct2d(x), M.rc_idct2d(x))
+
+
+def test_reorder_2d_is_permutation():
+    x = jnp.arange(48, dtype=jnp.float64).reshape(6, 8)
+    v = C.reorder_2d(x)
+    assert sorted(np.asarray(v).ravel().tolist()) == list(range(48))
+    _close(C.unreorder_2d(v), x)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_dct2d_dtypes(rng, dtype):
+    x = _rand(rng, (16, 16), dtype)
+    assert np.asarray(M.dct2d(x)).dtype == dtype
+    _close(M.dct2d(x), R.dct2d_ref(x), dtype)
+
+
+# -------------------------------------------------- hypothesis sweeps ----
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n1=st.integers(min_value=1, max_value=24),
+    n2=st.integers(min_value=1, max_value=24),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_hypothesis_dct2d_roundtrip(n1, n2, seed):
+    """idct2d(dct2d(x)) == x for arbitrary (odd/even/degenerate) shapes."""
+    x = jnp.asarray(np.random.default_rng(seed).standard_normal((n1, n2)))
+    _close(M.idct2d(M.dct2d(x)), x)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_hypothesis_1d_all_algorithms_agree(n, seed):
+    x = jnp.asarray(np.random.default_rng(seed).standard_normal(n))
+    a = M.dct1d_n(x)
+    _close(M.dct1d_4n(x), a)
+    _close(M.dct1d_2n_mirror(x), a)
+    _close(M.dct1d_2n_pad(x), a)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n1=st.integers(min_value=2, max_value=16),
+    n2=st.integers(min_value=2, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_hypothesis_linearity(n1, n2, seed):
+    g = np.random.default_rng(seed)
+    x = jnp.asarray(g.standard_normal((n1, n2)))
+    y = jnp.asarray(g.standard_normal((n1, n2)))
+    _close(M.dct2d(2.5 * x - y), 2.5 * M.dct2d(x) - M.dct2d(y))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n1=st.sampled_from([4, 6, 8, 12]),
+    n2=st.sampled_from([4, 6, 8, 12]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_hypothesis_pallas_equals_jnp(n1, n2, seed):
+    x = jnp.asarray(np.random.default_rng(seed).standard_normal((n1, n2)))
+    _close(M.dct2d(x, impl="pallas"), M.dct2d(x))
+    _close(M.idct2d(x, impl="pallas"), M.idct2d(x))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=48),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_hypothesis_hermitian_symmetry(n, seed):
+    """RFFT of the reordered real input is the onesided half of the full
+    spectrum -- the redundancy the postprocess exploits (Eq. 12)."""
+    x = np.random.default_rng(seed).standard_normal(n)
+    v = np.asarray(C.reorder_1d(jnp.asarray(x)))
+    full = np.fft.fft(v)
+    half = np.fft.rfft(v)
+    for k in range(len(half)):
+        np.testing.assert_allclose(full[k], half[k], atol=1e-10)
+        np.testing.assert_allclose(full[(n - k) % n], np.conj(half[k]), atol=1e-10)

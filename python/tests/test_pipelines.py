@@ -1,0 +1,88 @@
+"""Application pipelines (L2): image compression and DREAMPlace force."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref as R
+
+
+def _close(got, want, tol=1e-8):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_compress_matches_oracle(rng):
+    x = jnp.asarray(rng.standard_normal((16, 16)))
+    _close(M.image_compress(x, jnp.asarray(0.7)), R.compress_ref(x, 0.7))
+
+
+def test_compress_eps_zero_is_identity(rng):
+    x = jnp.asarray(rng.standard_normal((12, 12)))
+    _close(M.image_compress(x, jnp.asarray(0.0)), x)
+
+
+def test_compress_eps_huge_zeroes_everything(rng):
+    x = jnp.asarray(rng.standard_normal((12, 12)))
+    _close(M.image_compress(x, jnp.asarray(1e12)), jnp.zeros_like(x))
+
+
+def test_compress_energy_decreases(rng):
+    """Thresholding can only remove spectral energy (Parseval-monotone)."""
+    x = jnp.asarray(rng.standard_normal((16, 16)))
+    b = R.dct2d_ref(x)
+    for eps in [0.1, 1.0, 5.0]:
+        c = jnp.where(jnp.abs(b) >= eps, b, 0.0)
+        assert float(jnp.sum(c * c)) <= float(jnp.sum(b * b)) + 1e-12
+
+
+def test_placement_force_is_gradient_of_potential(rng):
+    """xi ~ -grad(phi): spectral force field vs central differences of the
+    spectral potential, on a smooth density (loose tolerance: different
+    discretizations of the same derivative)."""
+    n = 64
+    i = np.arange(n)
+    gx, gy = np.meshgrid(i, i, indexing="ij")
+    rho = np.exp(-((gx - 32.0) ** 2 + (gy - 24.0) ** 2) / 60.0)
+    phi, xi_x, xi_y = M.placement_force(jnp.asarray(rho))
+    phi = np.asarray(phi)
+    fd_x = np.zeros_like(phi)
+    fd_x[1:-1, :] = (phi[2:, :] - phi[:-2, :]) / 2.0
+    fd_y = np.zeros_like(phi)
+    fd_y[:, 1:-1] = (phi[:, 2:] - phi[:, :-2]) / 2.0
+    # compare in the interior, relative to the field magnitude
+    sx = np.abs(np.asarray(xi_x)[4:-4, 4:-4] + fd_x[4:-4, 4:-4]).max()
+    scale = np.abs(fd_x).max()
+    assert sx < 0.15 * scale, f"xi_x vs -grad phi mismatch: {sx} vs {scale}"
+    sy = np.abs(np.asarray(xi_y)[4:-4, 4:-4] + fd_y[4:-4, 4:-4]).max()
+    assert sy < 0.15 * np.abs(fd_y).max()
+
+
+def test_placement_potential_solves_poisson(rng):
+    """Discrete spectral check: DCT2D(phi) * (wu^2 + wv^2) == DCT2D(rho)
+    away from the gauge-fixed (0,0) mode."""
+    n = 32
+    rho = rng.standard_normal((n, n))
+    phi, _, _ = M.placement_force(jnp.asarray(rho))
+    a_rho = np.asarray(R.dct2d_ref(jnp.asarray(rho)))
+    a_phi = np.asarray(R.dct2d_ref(phi))
+    wu = np.pi * np.arange(n)[:, None] / n
+    wv = np.pi * np.arange(n)[None, :] / n
+    w2 = wu**2 + wv**2
+    lhs = (a_phi * w2)[1:, 1:]
+    rhs = a_rho[1:, 1:]
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-6, atol=1e-6)
+
+
+def test_rfft2d_matches_numpy(rng):
+    x = rng.standard_normal((12, 20))
+    re, im = M.rfft2d(jnp.asarray(x))
+    want = np.fft.rfft2(x)
+    _close(re, want.real)
+    _close(im, want.imag)
+
+
+def test_irfft2d_inverts_rfft2d(rng):
+    x = rng.standard_normal((10, 14))
+    re, im = M.rfft2d(jnp.asarray(x))
+    _close(M.irfft2d(re, im, 10, 14), x)

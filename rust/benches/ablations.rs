@@ -1,0 +1,134 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!   A. packed even-N RFFT vs full complex FFT        (fft::rfft)
+//!   B. vectorized column FFT vs strided per-column   (§Perf iter. 2)
+//!   C. thread-local scratch pool vs fresh allocation (§Perf iter. 1)
+//!   D. DST via DCT-fold vs direct O(N^2) evaluation  (§III-D extension)
+//!
+//! Run: `cargo bench --bench ablations`
+
+use mddct::bench::{black_box, ms, time_fn, BenchConfig, Table};
+use mddct::dct::dst::{dst2d_direct, Dst2};
+use mddct::dct::Dct2;
+use mddct::fft::radix2::Radix2Plan;
+use mddct::fft::{onesided_len, plan, C64, RfftPlan};
+use mddct::util::rng::Rng;
+
+fn main() {
+    let cfg = BenchConfig::from_env(BenchConfig::default());
+
+    // ---- A: packed RFFT vs full complex FFT ---------------------------
+    println!("\nAblation A: even-N packed RFFT vs full complex FFT of real input");
+    let mut t = Table::new(&["N", "packed rfft ms", "full cfft ms", "speedup"]);
+    for n in [1 << 14, 1 << 16, 1 << 18] {
+        let mut rng = Rng::new(n as u64);
+        let x = rng.normal_vec(n);
+        let rp = RfftPlan::new(n);
+        let mut spec = vec![C64::default(); onesided_len(n)];
+        let packed = time_fn(&cfg, || {
+            rp.forward(&x, &mut spec);
+            black_box(&spec);
+        })
+        .mean;
+        let fp = plan(n);
+        let full = time_fn(&cfg, || {
+            let mut buf: Vec<C64> = x.iter().map(|&r| C64::new(r, 0.0)).collect();
+            fp.forward(&mut buf);
+            black_box(&buf);
+        })
+        .mean;
+        t.row(&[n.to_string(), ms(packed), ms(full), format!("{:.2}x", full / packed)]);
+    }
+    t.print();
+
+    // ---- B: vectorized vs strided column FFT --------------------------
+    println!("\nAblation B: column FFT, vectorized whole-row butterflies vs strided gather");
+    let mut t = Table::new(&["n1 x ncols", "vectorized ms", "strided ms", "speedup"]);
+    for (n1, ncols) in [(1024usize, 513usize), (2048, 1025)] {
+        let mut rng = Rng::new((n1 * ncols) as u64);
+        let base: Vec<C64> =
+            (0..n1 * ncols).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+        let p = Radix2Plan::new(n1);
+        let mut data = base.clone();
+        let vec_t = time_fn(&cfg, || {
+            data.copy_from_slice(&base);
+            p.transform_cols(&mut data, ncols, false);
+            black_box(&data);
+        })
+        .mean;
+        let strided = time_fn(&cfg, || {
+            data.copy_from_slice(&base);
+            let mut colbuf = vec![C64::default(); n1];
+            for c in 0..ncols {
+                for r in 0..n1 {
+                    colbuf[r] = data[r * ncols + c];
+                }
+                p.forward(&mut colbuf);
+                for r in 0..n1 {
+                    data[r * ncols + c] = colbuf[r];
+                }
+            }
+            black_box(&data);
+        })
+        .mean;
+        t.row(&[
+            format!("{n1} x {ncols}"),
+            ms(vec_t),
+            ms(strided),
+            format!("{:.2}x", strided / vec_t),
+        ]);
+    }
+    t.print();
+
+    // ---- C: scratch pool vs fresh allocation --------------------------
+    println!("\nAblation C: fused DCT with scratch pool (current) vs fresh-allocation cost model");
+    let n = 1024;
+    let mut rng = Rng::new(77);
+    let x = rng.normal_vec(n * n);
+    let mut out = vec![0.0; n * n];
+    let dct = Dct2::new(n, n);
+    let pooled = time_fn(&cfg, || {
+        dct.forward(&x, &mut out);
+        black_box(&out);
+    })
+    .mean;
+    // model the old behaviour: same transform + the two buffer
+    // allocations and first-touch passes it used to pay
+    let alloc = time_fn(&cfg, || {
+        let pre = vec![0.0f64; n * n];
+        let spec = vec![C64::default(); n * (n / 2 + 1)];
+        black_box((&pre, &spec));
+        dct.forward(&x, &mut out);
+        black_box(&out);
+    })
+    .mean;
+    println!(
+        "  pooled {:.2} ms vs +fresh-alloc {:.2} ms  ({:.2}x) — §Perf iteration 1",
+        pooled * 1e3,
+        alloc * 1e3,
+        alloc / pooled
+    );
+
+    // ---- D: DST via fold vs direct ------------------------------------
+    println!("\nAblation D: 2D DST via DCT fold vs direct O(N^2.N) evaluation");
+    let n = 128;
+    let x = rng.normal_vec(n * n);
+    let mut y = vec![0.0; n * n];
+    let dst = Dst2::new(n, n);
+    let fold = time_fn(&cfg, || {
+        dst.forward(&x, &mut y);
+        black_box(&y);
+    })
+    .mean;
+    let quick = BenchConfig { iters: 3, warmup_iters: 1, ..cfg };
+    let direct = time_fn(&quick, || {
+        black_box(dst2d_direct(&x, n, n));
+    })
+    .mean;
+    println!(
+        "  fold {:.3} ms vs direct {:.1} ms  ({:.0}x) — the paradigm covers the DST family",
+        fold * 1e3,
+        direct * 1e3,
+        direct / fold
+    );
+}

@@ -1,0 +1,55 @@
+//! Figure 6 — runtime breakdown of the fused 2D DCT (N = 1024):
+//! preprocessing vs RFFT vs postprocessing shares.
+//!
+//! Paper shape: RFFT dominates (~80%), pre+post together ~20%, post >
+//! pre (extra arithmetic), i.e. the fused stages add little over the
+//! attainable FFT floor.
+//!
+//! Run: `cargo bench --bench fig6_breakdown`
+
+use mddct::bench::{ms, time_fn, BenchConfig, Table};
+use mddct::dct::{Dct2, StageTimes};
+use mddct::util::rng::Rng;
+
+fn main() {
+    let cfg = BenchConfig::from_env(BenchConfig::paper());
+    println!("\nFigure 6: runtime breakdown of the fused 2D DCT\n");
+
+    let mut t = Table::new(&["N", "pre ms", "rfft ms", "post ms", "pre %", "rfft %", "post %"]);
+    for n in [512usize, 1024, 2048] {
+        let mut rng = Rng::new(n as u64);
+        let x = rng.normal_vec(n * n);
+        let mut out = vec![0.0; n * n];
+        let plan = Dct2::new(n, n);
+        let mut acc = StageTimes::default();
+        let s = time_fn(&cfg, || {
+            let st = plan.forward_timed(&x, &mut out);
+            acc.pre += st.pre;
+            acc.fft += st.fft;
+            acc.post += st.post;
+        });
+        let k = s.n as f64;
+        let (pre, fft, post) = (acc.pre / k, acc.fft / k, acc.post / k);
+        let total = pre + fft + post;
+        t.row(&[
+            n.to_string(),
+            ms(pre),
+            ms(fft),
+            ms(post),
+            format!("{:.1}%", pre / total * 100.0),
+            format!("{:.1}%", fft / total * 100.0),
+            format!("{:.1}%", post / total * 100.0),
+        ]);
+        // the paper's Fig-6 ascii bar
+        if n == 1024 {
+            let bar = |f: f64| "#".repeat((f / total * 50.0).round() as usize);
+            println!("N=1024 breakdown:");
+            println!("  pre  |{}", bar(pre));
+            println!("  rfft |{}", bar(fft));
+            println!("  post |{}", bar(post));
+            println!();
+        }
+    }
+    t.print();
+    println!("shape check: RFFT dominates; pre+post are the minority share (paper ~20%)");
+}

@@ -1,0 +1,50 @@
+//! Table II — 2D DCT preprocessing time with gather vs scatter.
+//!
+//! Paper: N = 512..8192 on a Titan Xp; gather (coalesced writes) and
+//! scatter (coalesced reads) perform the same. Here the CPU analogue is
+//! sequential-write vs sequential-read loop order; the reproduced claim
+//! is that the two orders are equivalent, so the library's choice of
+//! scatter is free.
+//!
+//! Run: `cargo bench --bench table2_gather_scatter`
+
+use mddct::bench::{black_box, ms, time_fn, BenchConfig, Table};
+use mddct::dct::reorder::{reorder_2d_gather, reorder_2d_scatter};
+use mddct::util::rng::Rng;
+
+fn main() {
+    let cfg = BenchConfig::from_env(BenchConfig::default());
+    println!("\nTable II: 2D DCT preprocessing time (ms), gather vs scatter");
+    println!("(paper: 0.013..2.57 ms on Titan Xp; claim = the two are equal)\n");
+
+    let sizes = [512usize, 1024, 2048, 4096, 8192];
+    let mut gather_row = vec!["Gather".to_string()];
+    let mut scatter_row = vec!["Scatter".to_string()];
+    let mut ratio_row = vec!["Gather/Scatter".to_string()];
+    for &n in &sizes {
+        let mut rng = Rng::new(n as u64);
+        let x = rng.normal_vec(n * n);
+        let mut out = vec![0.0; n * n];
+        let g = time_fn(&cfg, || {
+            reorder_2d_gather(&x, &mut out, n, n);
+            black_box(&out);
+        });
+        let s = time_fn(&cfg, || {
+            reorder_2d_scatter(&x, &mut out, n, n);
+            black_box(&out);
+        });
+        gather_row.push(ms(g.mean));
+        scatter_row.push(ms(s.mean));
+        ratio_row.push(format!("{:.2}", g.mean / s.mean));
+    }
+
+    let headers: Vec<String> =
+        std::iter::once("N".to_string()).chain(sizes.iter().map(|n| n.to_string())).collect();
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr_refs);
+    t.row(&gather_row);
+    t.row(&scatter_row);
+    t.row(&ratio_row);
+    t.print();
+    println!("shape check: ratios ~1.0 reproduce the paper's \"similar performance\" claim");
+}

@@ -1,0 +1,84 @@
+//! Table IV — execution time of the four 1D-DCT-via-FFT algorithms,
+//! N = 2^14 .. 2^18 (microseconds).
+//!
+//! Paper shape: the N-point algorithm wins at every size, with the gap
+//! widening as N grows (it transforms 1/4 the points of the 4N method).
+//!
+//! Run: `cargo bench --bench table4_1d_algorithms`
+//! Set MDDCT_TABLE4_PJRT=1 to also time the AOT artifacts.
+
+use mddct::bench::{black_box, time_fn, us, BenchConfig, Table};
+use mddct::dct::{Algo1d, Dct1d};
+use mddct::util::rng::Rng;
+
+fn main() {
+    let cfg = BenchConfig::from_env(BenchConfig::default());
+    println!("\nTable IV: four algorithms of 1D DCT via 1D FFT (microseconds)\n");
+
+    let sizes: Vec<usize> = (14..=18).map(|e| 1usize << e).collect();
+    let headers: Vec<String> = std::iter::once("Input size N".to_string())
+        .chain(Algo1d::ALL.iter().map(|a| a.name().to_string()))
+        .collect();
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr_refs);
+    let mut n_wins = true;
+    for &n in &sizes {
+        let mut rng = Rng::new(n as u64);
+        let x = rng.normal_vec(n);
+        let mut out = vec![0.0; n];
+        let mut row = vec![format!("2^{}", n.trailing_zeros())];
+        let mut times = Vec::new();
+        for algo in Algo1d::ALL {
+            let plan = Dct1d::new(n, algo);
+            let s = time_fn(&cfg, || {
+                plan.forward(&x, &mut out);
+                black_box(&out);
+            });
+            times.push(s.mean);
+            row.push(us(s.mean));
+        }
+        n_wins &= times[3]
+            <= *times[..3].iter().min_by(|a, b| a.partial_cmp(b).unwrap()).unwrap() * 1.05;
+        t.row(&row);
+    }
+    t.print();
+    println!(
+        "shape check (paper): N-point fastest at every size -> {}",
+        if n_wins { "REPRODUCED" } else { "NOT reproduced (see EXPERIMENTS.md)" }
+    );
+
+    if std::env::var("MDDCT_TABLE4_PJRT").is_ok() {
+        pjrt_variant(&cfg);
+    }
+}
+
+/// Same comparison through the AOT artifacts (XLA's DUCC FFT, f32).
+fn pjrt_variant(cfg: &BenchConfig) {
+    use mddct::runtime::{Manifest, PjrtHandle, DEFAULT_ARTIFACT_DIR};
+    let Ok(_m) = Manifest::load(DEFAULT_ARTIFACT_DIR) else {
+        println!("(artifacts missing; skipping PJRT variant)");
+        return;
+    };
+    let handle = PjrtHandle::spawn(DEFAULT_ARTIFACT_DIR);
+    println!("\nPJRT artifact variant (f32, XLA DUCC FFT), microseconds:");
+    let mut t = Table::new(&["N", "4N", "Mirrored 2N", "Padded 2N", "N-point"]);
+    for n in [1024usize, 4096, 16384] {
+        let mut rng = Rng::new(n as u64);
+        let x = rng.normal_vec(n);
+        let mut row = vec![n.to_string()];
+        for name in [
+            format!("dct1d_4n_{n}"),
+            format!("dct1d_2n_mirror_{n}"),
+            format!("dct1d_2n_pad_{n}"),
+            format!("dct1d_n_{n}"),
+        ] {
+            let _ = handle.run(&name, vec![x.clone()]); // warm compile
+            let s = time_fn(cfg, || {
+                black_box(handle.run(&name, vec![x.clone()]).unwrap());
+            });
+            row.push(us(s.mean));
+        }
+        t.row(&row);
+    }
+    t.print();
+}

@@ -1,0 +1,117 @@
+//! Table V — 2D DCT/IDCT execution time and ratios:
+//! direct-matmul ("MATLAB" stand-in) / row-column / fused-via-RFFT2D /
+//! raw RFFT2D, plus the IDCT trio, on the paper's size grid.
+//!
+//! Paper shape to reproduce: fused ~2x faster than row-column at every
+//! size; fused within ~1.3x of the raw RFFT2D (pre/post overhead small);
+//! the library baseline an order of magnitude slower.
+//!
+//! Sizes: 512^2..2048^2 native (the paper's 4096/8192 rows can be enabled
+//! with MDDCT_TABLE5_LARGE=1; the direct-matmul column caps at 1024 to
+//! keep runtime sane). Rectangles 64x4096 / 4096x64 cover the paper's
+//! 100x10000 aspect observation.
+//!
+//! Run: `cargo bench --bench table5_2d_dct`
+
+use mddct::bench::{black_box, ms, ratio, time_fn, BenchConfig, Table};
+use mddct::dct::direct::dct2d_direct;
+use mddct::dct::{Dct2, Idct2, RowColumn};
+use mddct::fft::{C64, Rfft2Plan};
+use mddct::util::rng::Rng;
+
+fn main() {
+    let cfg = BenchConfig::from_env(BenchConfig::default());
+    println!("\nTable V: 2D DCT/IDCT execution time in ms (ratio to fused DCT/IDCT)\n");
+
+    let mut shapes: Vec<(usize, usize)> =
+        vec![(512, 512), (1024, 1024), (2048, 2048), (64, 4096), (4096, 64)];
+    if std::env::var("MDDCT_TABLE5_LARGE").is_ok() {
+        shapes.push((4096, 4096));
+        shapes.push((8192, 8192));
+    }
+
+    let mut t = Table::new(&[
+        "N1", "N2", "matmul(MATLAB-sub)", "DCT rc", "DCT fused", "RFFT2D",
+        "IDCT rc", "IDCT fused", "IRFFT2D",
+    ]);
+    let mut rc_ratios = Vec::new();
+    let mut fft_gaps = Vec::new();
+    for &(n1, n2) in &shapes {
+        let mut rng = Rng::new((n1 * n2) as u64);
+        let x = rng.normal_vec(n1 * n2);
+        let mut out = vec![0.0; n1 * n2];
+
+        // fused DCT
+        let dct = Dct2::new(n1, n2);
+        let t_fused = time_fn(&cfg, || {
+            dct.forward(&x, &mut out);
+            black_box(&out);
+        })
+        .mean;
+        // row-column DCT
+        let rc = RowColumn::dct2(n1, n2);
+        let t_rc = time_fn(&cfg, || {
+            rc.forward(&x, &mut out);
+            black_box(&out);
+        })
+        .mean;
+        // raw RFFT2D
+        let rfft = Rfft2Plan::new(n1, n2);
+        let mut spec = vec![C64::default(); n1 * rfft.h2];
+        let t_fft = time_fn(&cfg, || {
+            rfft.forward(&x, &mut spec);
+            black_box(&spec);
+        })
+        .mean;
+        // direct matmul (library-baseline stand-in), capped for runtime
+        let t_matmul = if n1.max(n2) <= 1024 {
+            let quick = BenchConfig { iters: 3, warmup_iters: 1, ..cfg };
+            Some(time_fn(&quick, || { black_box(dct2d_direct(&x, n1, n2)); }).mean)
+        } else {
+            None
+        };
+        // IDCT trio
+        let idct = Idct2::new(n1, n2);
+        let t_ifused = time_fn(&cfg, || {
+            idct.forward(&x, &mut out);
+            black_box(&out);
+        })
+        .mean;
+        let irc = RowColumn::idct2(n1, n2);
+        let t_irc = time_fn(&cfg, || {
+            irc.forward(&x, &mut out);
+            black_box(&out);
+        })
+        .mean;
+        let mut back = vec![0.0; n1 * n2];
+        let t_ifft = time_fn(&cfg, || {
+            rfft.inverse(&spec, &mut back);
+            black_box(&back);
+        })
+        .mean;
+
+        t.row(&[
+            n1.to_string(),
+            n2.to_string(),
+            t_matmul
+                .map(|v| format!("{} {}", ms(v), ratio(v, t_fused)))
+                .unwrap_or_else(|| "-".into()),
+            format!("{} {}", ms(t_rc), ratio(t_rc, t_fused)),
+            format!("{} (1)", ms(t_fused)),
+            format!("{} {}", ms(t_fft), ratio(t_fft, t_fused)),
+            format!("{} {}", ms(t_irc), ratio(t_irc, t_ifused)),
+            format!("{} (1)", ms(t_ifused)),
+            format!("{} {}", ms(t_ifft), ratio(t_ifft, t_ifused)),
+        ]);
+        rc_ratios.push(t_rc / t_fused);
+        fft_gaps.push(t_fused / t_fft);
+    }
+    t.print();
+    let mean_rc = rc_ratios.iter().sum::<f64>() / rc_ratios.len() as f64;
+    let mean_gap = fft_gaps.iter().sum::<f64>() / fft_gaps.len() as f64;
+    println!(
+        "shape check: row-column/fused mean {:.2}x (paper ~2x); fused/RFFT2D mean \
+         {:.2}x (paper ~1.2-1.3x)",
+        mean_rc, mean_gap
+    );
+}

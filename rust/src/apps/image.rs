@@ -1,0 +1,151 @@
+//! Image compression via whole-image 2D DCT (paper §V-A, Algorithm 3).
+//!
+//! Unlike 8x8-block JPEG, the paper's pipeline transforms the full image,
+//! thresholds small spectral magnitudes (Eq. 20), and inverse-transforms.
+//! Since the threshold fuses with the transform stages, Amdahl's p = 1
+//! and the application inherits the full transform speedup.
+
+use crate::dct::{Dct2, Idct2};
+use crate::util::rng::Rng;
+
+/// Result of one compression run.
+#[derive(Debug, Clone)]
+pub struct CompressionReport {
+    pub eps: f64,
+    /// fraction of spectral coefficients zeroed
+    pub sparsity: f64,
+    /// peak signal-to-noise ratio of the reconstruction (dB)
+    pub psnr_db: f64,
+}
+
+/// Whole-image compressor with cached plans.
+pub struct Compressor {
+    n1: usize,
+    n2: usize,
+    dct: Dct2,
+    idct: Idct2,
+}
+
+impl Compressor {
+    pub fn new(n1: usize, n2: usize) -> Compressor {
+        Compressor { n1, n2, dct: Dct2::new(n1, n2), idct: Idct2::new(n1, n2) }
+    }
+
+    /// Algorithm 3: B = DCT(A); C = threshold(B); D = IDCT(C).
+    /// Returns (reconstruction, #zeroed).
+    pub fn compress(&self, image: &[f64], eps: f64) -> (Vec<f64>, usize) {
+        let n = self.n1 * self.n2;
+        assert_eq!(image.len(), n);
+        let mut spec = vec![0.0; n];
+        self.dct.forward(image, &mut spec);
+        let mut zeroed = 0;
+        for v in spec.iter_mut() {
+            if v.abs() < eps {
+                *v = 0.0;
+                zeroed += 1;
+            }
+        }
+        let mut out = vec![0.0; n];
+        self.idct.forward(&spec, &mut out);
+        (out, zeroed)
+    }
+
+    /// Compress and report sparsity + PSNR against the original.
+    pub fn report(&self, image: &[f64], eps: f64) -> CompressionReport {
+        let (rec, zeroed) = self.compress(image, eps);
+        CompressionReport {
+            eps,
+            sparsity: zeroed as f64 / image.len() as f64,
+            psnr_db: psnr(image, &rec, dynamic_range(image)),
+        }
+    }
+}
+
+fn dynamic_range(x: &[f64]) -> f64 {
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &v in x {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    (hi - lo).max(f64::EPSILON)
+}
+
+/// Peak signal-to-noise ratio in dB.
+pub fn psnr(a: &[f64], b: &[f64], peak: f64) -> f64 {
+    let mse: f64 =
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>() / a.len() as f64;
+    if mse == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * ((peak * peak) / mse).log10()
+    }
+}
+
+/// Synthetic test image: smooth low-frequency content + edges + noise
+/// (the spectral profile real photographs have, so magnitude
+/// thresholding behaves realistically).
+pub fn synthetic_image(n1: usize, n2: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut img = vec![0.0; n1 * n2];
+    for r in 0..n1 {
+        for c in 0..n2 {
+            let x = r as f64 / n1 as f64;
+            let y = c as f64 / n2 as f64;
+            // smooth base
+            let mut v = 128.0
+                + 60.0 * (2.0 * std::f64::consts::PI * x).sin()
+                + 40.0 * (3.0 * std::f64::consts::PI * y).cos()
+                + 25.0 * (5.0 * std::f64::consts::PI * (x + y)).sin();
+            // blocky structure (edges)
+            if (x - 0.5).abs() < 0.2 && (y - 0.5).abs() < 0.3 {
+                v += 50.0;
+            }
+            // sensor noise
+            v += 2.0 * rng.normal();
+            img[r * n2 + c] = v;
+        }
+    }
+    img
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eps_zero_is_lossless() {
+        let img = synthetic_image(32, 32, 1);
+        let (rec, zeroed) = Compressor::new(32, 32).compress(&img, 0.0);
+        assert_eq!(zeroed, 0);
+        for (a, b) in img.iter().zip(&rec) {
+            assert!((a - b).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn higher_eps_more_sparsity_lower_psnr() {
+        let img = synthetic_image(64, 64, 2);
+        let c = Compressor::new(64, 64);
+        let r1 = c.report(&img, 1.0);
+        let r2 = c.report(&img, 100.0);
+        let r3 = c.report(&img, 2000.0);
+        assert!(r1.sparsity <= r2.sparsity && r2.sparsity <= r3.sparsity);
+        assert!(r1.psnr_db >= r2.psnr_db && r2.psnr_db >= r3.psnr_db);
+        assert!(r3.sparsity > 0.5, "large eps should zero most coefficients");
+        assert!(r2.psnr_db > 20.0, "moderate compression should stay faithful");
+    }
+
+    #[test]
+    fn psnr_of_identical_is_infinite() {
+        let x = vec![1.0, 2.0, 3.0];
+        assert!(psnr(&x, &x, 1.0).is_infinite());
+    }
+
+    #[test]
+    fn rectangular_images_work() {
+        let img = synthetic_image(24, 56, 3);
+        let c = Compressor::new(24, 56);
+        let r = c.report(&img, 50.0);
+        assert!(r.sparsity > 0.0 && r.psnr_db.is_finite());
+    }
+}

@@ -1,0 +1,152 @@
+//! Synthetic ISPD-2005-like placement benchmarks.
+//!
+//! The paper's Table VII times DREAMPlace's electric potential + force
+//! step on the eight ISPD 2005 contest designs. The real netlists are
+//! external data we cannot ship, but the transform-side workload depends
+//! only on (a) the density-grid dimensions and (b) the number of movable
+//! cells feeding the density map / gradient scatter (the non-transform
+//! work that dilutes the end-to-end speedup on the bigger designs —
+//! the Amdahl effect the paper calls out). We therefore synthesize
+//! circuits with the published cell counts and the bin sizes DREAMPlace
+//! derives for them.
+
+use crate::util::rng::Rng;
+
+/// One synthetic benchmark instance.
+#[derive(Debug, Clone)]
+pub struct IspdBenchmark {
+    pub name: &'static str,
+    /// movable cell count (published ISPD 2005 sizes)
+    pub cells: usize,
+    /// density grid (DREAMPlace uses pow2 bins scaled to the design)
+    pub grid: usize,
+}
+
+/// The eight Table VII designs with their published cell counts.
+pub const ISPD2005: [IspdBenchmark; 8] = [
+    IspdBenchmark { name: "adaptec1", cells: 211_447, grid: 256 },
+    IspdBenchmark { name: "adaptec2", cells: 255_023, grid: 512 },
+    IspdBenchmark { name: "adaptec3", cells: 451_650, grid: 512 },
+    IspdBenchmark { name: "adaptec4", cells: 496_045, grid: 512 },
+    IspdBenchmark { name: "bigblue1", cells: 278_164, grid: 256 },
+    IspdBenchmark { name: "bigblue2", cells: 557_866, grid: 512 },
+    IspdBenchmark { name: "bigblue3", cells: 1_096_812, grid: 1024 },
+    IspdBenchmark { name: "bigblue4", cells: 2_177_353, grid: 1024 },
+];
+
+/// A synthetic circuit: cell positions + sizes on a unit die.
+#[derive(Debug, Clone)]
+pub struct Circuit {
+    pub name: &'static str,
+    pub grid: usize,
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+    pub w: Vec<f64>,
+    pub h: Vec<f64>,
+}
+
+impl IspdBenchmark {
+    /// Generate the synthetic circuit: clustered initial placement
+    /// (placers start from heavily overlapping clusters).
+    pub fn generate(&self, seed: u64) -> Circuit {
+        let mut rng = Rng::new(seed ^ self.cells as u64);
+        let n = self.cells;
+        let mut x = Vec::with_capacity(n);
+        let mut y = Vec::with_capacity(n);
+        let mut w = Vec::with_capacity(n);
+        let mut h = Vec::with_capacity(n);
+        // a handful of attraction clusters, like netlist connectivity creates
+        let clusters = 8 + (n / 100_000);
+        let centers: Vec<(f64, f64)> = (0..clusters)
+            .map(|_| (rng.range_f64(0.2, 0.8), rng.range_f64(0.2, 0.8)))
+            .collect();
+        let cell_area = 0.5 / n as f64; // ~50% utilization
+        let side = cell_area.sqrt();
+        for _ in 0..n {
+            let (cx, cy) = centers[rng.below(clusters)];
+            x.push((cx + 0.08 * rng.normal()).clamp(0.0, 1.0 - side));
+            y.push((cy + 0.08 * rng.normal()).clamp(0.0, 1.0 - side));
+            let s = rng.range_f64(0.6, 1.8);
+            w.push(side * s);
+            h.push(side / s);
+        }
+        Circuit { name: self.name, grid: self.grid, x, y, w, h }
+    }
+}
+
+impl Circuit {
+    pub fn cells(&self) -> usize {
+        self.x.len()
+    }
+
+    /// Bilinear density-map accumulation (DREAMPlace Alg. 4 line 1 —
+    /// part of the non-transform work in the Amdahl analysis).
+    pub fn density_map(&self, grid: usize) -> Vec<f64> {
+        let mut rho = vec![0.0; grid * grid];
+        let g = grid as f64;
+        for i in 0..self.cells() {
+            let area = self.w[i] * self.h[i];
+            let gx = (self.x[i] * g).min(g - 1.000001);
+            let gy = (self.y[i] * g).min(g - 1.000001);
+            let (ix, iy) = (gx as usize, gy as usize);
+            let (fx, fy) = (gx - ix as f64, gy - iy as f64);
+            let (ix1, iy1) = ((ix + 1).min(grid - 1), (iy + 1).min(grid - 1));
+            rho[ix * grid + iy] += area * (1.0 - fx) * (1.0 - fy);
+            rho[ix1 * grid + iy] += area * fx * (1.0 - fy);
+            rho[ix * grid + iy1] += area * (1.0 - fx) * fy;
+            rho[ix1 * grid + iy1] += area * fx * fy;
+        }
+        rho
+    }
+
+    /// Overlap proxy: sum of squared density above the mean (the
+    /// quantity electrostatic spreading minimizes).
+    pub fn density_overflow(&self, grid: usize) -> f64 {
+        let rho = self.density_map(grid);
+        let mean = rho.iter().sum::<f64>() / rho.len() as f64;
+        rho.iter().map(|&d| (d - mean).max(0.0).powi(2)).sum::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_has_eight_designs_in_paper_order() {
+        assert_eq!(ISPD2005.len(), 8);
+        assert_eq!(ISPD2005[0].name, "adaptec1");
+        assert_eq!(ISPD2005[7].name, "bigblue4");
+        assert!(ISPD2005[7].cells > ISPD2005[0].cells * 10);
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let small = IspdBenchmark { name: "t", cells: 5000, grid: 64 };
+        let a = small.generate(7);
+        let b = small.generate(7);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.w, b.w);
+    }
+
+    #[test]
+    fn density_conserves_total_area() {
+        let small = IspdBenchmark { name: "t", cells: 2000, grid: 64 };
+        let c = small.generate(1);
+        let rho = c.density_map(64);
+        let total_area: f64 = c.w.iter().zip(&c.h).map(|(w, h)| w * h).sum();
+        let total_rho: f64 = rho.iter().sum();
+        assert!(
+            (total_rho - total_area).abs() < 1e-9 * total_area.max(1.0),
+            "{total_rho} vs {total_area}"
+        );
+    }
+
+    #[test]
+    fn cells_inside_die() {
+        let small = IspdBenchmark { name: "t", cells: 3000, grid: 64 };
+        let c = small.generate(2);
+        assert!(c.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(c.y.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+}

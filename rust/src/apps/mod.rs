@@ -1,0 +1,14 @@
+//! Applications built on the transform library (paper §V case studies):
+//! whole-image compression, the spectral Poisson substrate, and the
+//! DREAMPlace-style electrostatic placement engine with synthetic
+//! ISPD-2005-scale benchmarks.
+
+pub mod image;
+pub mod ispd;
+pub mod placement;
+pub mod poisson;
+
+pub use image::{psnr, synthetic_image, Compressor};
+pub use ispd::{Circuit, IspdBenchmark, ISPD2005};
+pub use placement::{PlacementEngine, StepReport};
+pub use poisson::{Field, PoissonSolver, SolverBackend};

@@ -1,0 +1,132 @@
+//! Electrostatic placement engine (DREAMPlace §V-B, Algorithm 4):
+//! the end-to-end application driver for the paper's case study.
+//!
+//! Each iteration:
+//!   1. build the density map from cell positions        (scatter)
+//!   2. spectral solve: potential + force (the transform-heavy core,
+//!      timed separately -- this is the Table VII region)
+//!   3. gather per-cell forces from the field, move cells (gradient step)
+//!
+//! The engine supports both transform backends so examples and Table VII
+//! can A/B fused vs row-column with everything else identical.
+
+use std::time::Instant;
+
+use super::ispd::Circuit;
+use super::poisson::{PoissonSolver, SolverBackend};
+
+/// Per-iteration report.
+#[derive(Debug, Clone)]
+pub struct StepReport {
+    pub iter: usize,
+    /// wall time of the transform-heavy spectral solve (Table VII region)
+    pub transform_seconds: f64,
+    /// wall time of everything else (density + gather + move)
+    pub other_seconds: f64,
+    /// density overflow after the step (must trend down)
+    pub overflow: f64,
+}
+
+/// The placement engine.
+pub struct PlacementEngine {
+    pub grid: usize,
+    solver: PoissonSolver,
+    step_size: f64,
+}
+
+impl PlacementEngine {
+    pub fn new(grid: usize, backend: SolverBackend) -> PlacementEngine {
+        PlacementEngine {
+            grid,
+            solver: PoissonSolver::new(grid, grid, backend),
+            step_size: 1.0,
+        }
+    }
+
+    /// Run one electrostatic spreading iteration in place.
+    pub fn step(&self, circuit: &mut Circuit, iter: usize) -> StepReport {
+        let grid = self.grid;
+        let g = grid as f64;
+        let t0 = Instant::now();
+        let rho = circuit.density_map(grid);
+        let t_density = t0.elapsed().as_secs_f64();
+
+        let (field, transform_seconds) = self.solver.solve(&rho);
+
+        let t1 = Instant::now();
+        // gather force at each cell (nearest bin) and move along it
+        let scale = self.step_size * g;
+        for i in 0..circuit.cells() {
+            let ix = ((circuit.x[i] * g) as usize).min(grid - 1);
+            let iy = ((circuit.y[i] * g) as usize).min(grid - 1);
+            let fx = field.xi_x[ix * grid + iy];
+            let fy = field.xi_y[ix * grid + iy];
+            circuit.x[i] = (circuit.x[i] + scale * fx).clamp(0.0, 1.0 - 1e-9);
+            circuit.y[i] = (circuit.y[i] + scale * fy).clamp(0.0, 1.0 - 1e-9);
+        }
+        let overflow = circuit.density_overflow(grid);
+        let t_gather = t1.elapsed().as_secs_f64();
+
+        StepReport {
+            iter,
+            transform_seconds,
+            other_seconds: t_density + t_gather,
+            overflow,
+        }
+    }
+
+    /// Run `iters` iterations, returning per-step reports.
+    pub fn run(&self, circuit: &mut Circuit, iters: usize) -> Vec<StepReport> {
+        (0..iters).map(|i| self.step(circuit, i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::ispd::IspdBenchmark;
+
+    fn tiny() -> Circuit {
+        IspdBenchmark { name: "tiny", cells: 4000, grid: 32 }.generate(9)
+    }
+
+    #[test]
+    fn spreading_reduces_density_overflow() {
+        let mut c = tiny();
+        let before = c.density_overflow(32);
+        let engine = PlacementEngine::new(32, SolverBackend::Fused);
+        let reports = engine.run(&mut c, 12);
+        let after = reports.last().unwrap().overflow;
+        assert!(
+            after < before * 0.8,
+            "overflow should drop: before {before}, after {after}"
+        );
+    }
+
+    #[test]
+    fn fused_and_row_column_trajectories_match() {
+        let mut a = tiny();
+        let mut b = tiny();
+        PlacementEngine::new(32, SolverBackend::Fused).run(&mut a, 3);
+        PlacementEngine::new(32, SolverBackend::RowColumn).run(&mut b, 3);
+        for (x, y) in a.x.iter().zip(&b.x) {
+            assert!((x - y).abs() < 1e-9, "same physics, different backend");
+        }
+    }
+
+    #[test]
+    fn reports_time_both_regions() {
+        let mut c = tiny();
+        let r = PlacementEngine::new(32, SolverBackend::Fused).step(&mut c, 0);
+        assert!(r.transform_seconds > 0.0);
+        assert!(r.other_seconds > 0.0);
+    }
+
+    #[test]
+    fn cells_stay_in_die() {
+        let mut c = tiny();
+        PlacementEngine::new(32, SolverBackend::Fused).run(&mut c, 5);
+        assert!(c.x.iter().all(|&v| (0.0..1.0).contains(&v)));
+        assert!(c.y.iter().all(|&v| (0.0..1.0).contains(&v)));
+    }
+}

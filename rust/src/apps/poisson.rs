@@ -1,0 +1,214 @@
+//! Spectral Poisson solver (paper §V-B): the electrostatic substrate
+//! DREAMPlace builds on.
+//!
+//! With Neumann (reflective) boundary conditions the cosine basis
+//! diagonalizes the Laplacian: for a_uv = DCT2D(rho) and continuous
+//! frequencies w_u = pi u / N1, w_v = pi v / N2,
+//!
+//!   phi  = IDCT2D      ( a_uv       / (w_u^2 + w_v^2) )   potential
+//!   xi_x = IDCT_IDXST  ( a_uv  w_u  / (w_u^2 + w_v^2) )   field along rows
+//!   xi_y = IDXST_IDCT  ( a_uv  w_v  / (w_u^2 + w_v^2) )   field along cols
+//!
+//! (gauge: the (0,0) mode is dropped). The sine-basis fields are exactly
+//! the analytic -grad phi, which is why DREAMPlace needs IDXST.
+
+use crate::dct::{Combo, Dct2, Idct2, IdxstCombo, StageTimes};
+
+/// Potential + field of one density map.
+#[derive(Debug, Clone)]
+pub struct Field {
+    pub phi: Vec<f64>,
+    pub xi_x: Vec<f64>,
+    pub xi_y: Vec<f64>,
+}
+
+/// Which 2D backend the solver uses (the Table VII A/B switch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolverBackend {
+    /// fused three-stage transforms (ours)
+    Fused,
+    /// row-column transforms (baseline)
+    RowColumn,
+}
+
+/// Spectral Poisson solver with cached plans for one grid size.
+pub struct PoissonSolver {
+    pub n1: usize,
+    pub n2: usize,
+    backend: SolverBackend,
+    dct: Dct2,
+    idct: Idct2,
+    idct_idxst: IdxstCombo,
+    idxst_idct: IdxstCombo,
+    rc_dct: crate::dct::RowColumn,
+    rc_idct: crate::dct::RowColumn,
+    rc_idct_idxst: crate::dct::RowColumn,
+    rc_idxst_idct: crate::dct::RowColumn,
+    /// precomputed 1 / (w_u^2 + w_v^2), zero at (0,0)
+    inv_w2: Vec<f64>,
+    wu: Vec<f64>,
+    wv: Vec<f64>,
+}
+
+impl PoissonSolver {
+    pub fn new(n1: usize, n2: usize, backend: SolverBackend) -> PoissonSolver {
+        let wu: Vec<f64> =
+            (0..n1).map(|u| std::f64::consts::PI * u as f64 / n1 as f64).collect();
+        let wv: Vec<f64> =
+            (0..n2).map(|v| std::f64::consts::PI * v as f64 / n2 as f64).collect();
+        let mut inv_w2 = vec![0.0; n1 * n2];
+        for u in 0..n1 {
+            for v in 0..n2 {
+                let w2 = wu[u] * wu[u] + wv[v] * wv[v];
+                inv_w2[u * n2 + v] = if w2 > 0.0 { 1.0 / w2 } else { 0.0 };
+            }
+        }
+        PoissonSolver {
+            n1,
+            n2,
+            backend,
+            dct: Dct2::new(n1, n2),
+            idct: Idct2::new(n1, n2),
+            idct_idxst: IdxstCombo::new(n1, n2, Combo::IdctIdxst),
+            idxst_idct: IdxstCombo::new(n1, n2, Combo::IdxstIdct),
+            rc_dct: crate::dct::RowColumn::dct2(n1, n2),
+            rc_idct: crate::dct::RowColumn::idct2(n1, n2),
+            rc_idct_idxst: crate::dct::RowColumn::idct_idxst(n1, n2),
+            rc_idxst_idct: crate::dct::RowColumn::idxst_idct(n1, n2),
+            inv_w2,
+            wu,
+            wv,
+        }
+    }
+
+    /// Paper Algorithm 4 lines 2-4: potential + force from a density map.
+    /// Returns the field and the transform-stage wall time (for Table VII
+    /// the baseline/ours comparison times exactly this region).
+    pub fn solve(&self, density: &[f64]) -> (Field, f64) {
+        let (n1, n2) = (self.n1, self.n2);
+        assert_eq!(density.len(), n1 * n2);
+        let t0 = std::time::Instant::now();
+        // line 2: a = DCT2D(rho)
+        let mut a = vec![0.0; n1 * n2];
+        match self.backend {
+            SolverBackend::Fused => self.dct.forward(density, &mut a),
+            SolverBackend::RowColumn => self.rc_dct.forward(density, &mut a),
+        }
+        // line 3: scaled coefficient maps
+        let mut c_phi = vec![0.0; n1 * n2];
+        let mut c_x = vec![0.0; n1 * n2];
+        let mut c_y = vec![0.0; n1 * n2];
+        for u in 0..n1 {
+            for v in 0..n2 {
+                let i = u * n2 + v;
+                let s = a[i] * self.inv_w2[i];
+                c_phi[i] = s;
+                c_x[i] = s * self.wu[u];
+                c_y[i] = s * self.wv[v];
+            }
+        }
+        // line 4: inverse transforms
+        let mut phi = vec![0.0; n1 * n2];
+        let mut xi_x = vec![0.0; n1 * n2];
+        let mut xi_y = vec![0.0; n1 * n2];
+        match self.backend {
+            SolverBackend::Fused => {
+                self.idct.forward(&c_phi, &mut phi);
+                self.idct_idxst.forward(&c_x, &mut xi_x);
+                self.idxst_idct.forward(&c_y, &mut xi_y);
+            }
+            SolverBackend::RowColumn => {
+                self.rc_idct.forward(&c_phi, &mut phi);
+                self.rc_idct_idxst.forward(&c_x, &mut xi_x);
+                self.rc_idxst_idct.forward(&c_y, &mut xi_y);
+            }
+        }
+        (Field { phi, xi_x, xi_y }, t0.elapsed().as_secs_f64())
+    }
+
+    /// Stage breakdown of the fused forward DCT (Fig. 6 instrumentation).
+    pub fn dct_stage_times(&self, density: &[f64]) -> StageTimes {
+        let mut out = vec![0.0; density.len()];
+        self.dct.forward_timed(density, &mut out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dct::direct::dct2d_direct;
+    use crate::util::rng::Rng;
+
+    fn gaussian_density(n: usize) -> Vec<f64> {
+        let mut rho = vec![0.0; n * n];
+        for r in 0..n {
+            for c in 0..n {
+                let dx = r as f64 - n as f64 / 2.0;
+                let dy = c as f64 - n as f64 / 3.0;
+                rho[r * n + c] = (-(dx * dx + dy * dy) / (n as f64)).exp();
+            }
+        }
+        rho
+    }
+
+    #[test]
+    fn fused_and_row_column_agree() {
+        let rho = gaussian_density(32);
+        let (a, _) = PoissonSolver::new(32, 32, SolverBackend::Fused).solve(&rho);
+        let (b, _) = PoissonSolver::new(32, 32, SolverBackend::RowColumn).solve(&rho);
+        for (x, y) in a.phi.iter().zip(&b.phi) {
+            assert!((x - y).abs() < 1e-9);
+        }
+        for (x, y) in a.xi_x.iter().zip(&b.xi_x) {
+            assert!((x - y).abs() < 1e-9);
+        }
+        for (x, y) in a.xi_y.iter().zip(&b.xi_y) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn potential_solves_poisson_in_spectral_sense() {
+        // DCT2D(phi) .* w2 == DCT2D(rho) away from the (0,0) gauge mode
+        let mut rng = Rng::new(300);
+        let n = 16;
+        let rho = rng.normal_vec(n * n);
+        let solver = PoissonSolver::new(n, n, SolverBackend::Fused);
+        let (f, _) = solver.solve(&rho);
+        let a_rho = dct2d_direct(&rho, n, n);
+        let a_phi = dct2d_direct(&f.phi, n, n);
+        for u in 0..n {
+            for v in 0..n {
+                if u == 0 && v == 0 {
+                    continue;
+                }
+                let w2 = solver.wu[u].powi(2) + solver.wv[v].powi(2);
+                let lhs = a_phi[u * n + v] * w2;
+                let rhs = a_rho[u * n + v];
+                assert!(
+                    (lhs - rhs).abs() < 1e-6 * rhs.abs().max(1.0),
+                    "({u},{v}): {lhs} vs {rhs}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn field_points_away_from_charge_blob() {
+        // force on the positive-x side of the blob should push further +x
+        let n = 32;
+        let rho = gaussian_density(n);
+        let (f, _) = PoissonSolver::new(n, n, SolverBackend::Fused).solve(&rho);
+        // centroid of the blob is ~(n/2, n/3); sample on either side
+        let lo = f.xi_x[(n / 2 - 8) * n + n / 3];
+        let hi = f.xi_x[(n / 2 + 8) * n + n / 3];
+        assert!(lo.signum() != hi.signum(), "field must change sign across blob");
+    }
+
+    #[test]
+    fn solve_reports_positive_time() {
+        let rho = gaussian_density(16);
+        let (_, t) = PoissonSolver::new(16, 16, SolverBackend::Fused).solve(&rho);
+        assert!(t > 0.0);
+    }
+}

@@ -1,0 +1,100 @@
+//! Timing harness (criterion substitute): warmup + timed iterations with
+//! summary statistics, plus a black_box to defeat dead-code elimination.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline(always)]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable; thin wrapper for a single import site
+    std::hint::black_box(x)
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub iters: usize,
+    /// hard cap on total measured seconds (large sizes stop early)
+    pub max_seconds: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 3, iters: 20, max_seconds: 10.0 }
+    }
+}
+
+impl BenchConfig {
+    /// Paper-style config: "average execution time of 100 runs".
+    pub fn paper() -> BenchConfig {
+        BenchConfig { warmup_iters: 5, iters: 100, max_seconds: 30.0 }
+    }
+
+    /// Quick config for CI-ish runs.
+    pub fn quick() -> BenchConfig {
+        BenchConfig { warmup_iters: 1, iters: 5, max_seconds: 2.0 }
+    }
+
+    /// Honor `MDDCT_BENCH_ITERS` / `MDDCT_BENCH_QUICK` env overrides.
+    pub fn from_env(default: BenchConfig) -> BenchConfig {
+        let mut cfg = default;
+        if std::env::var("MDDCT_BENCH_QUICK").is_ok() {
+            cfg = BenchConfig::quick();
+        }
+        if let Ok(s) = std::env::var("MDDCT_BENCH_ITERS") {
+            if let Ok(n) = s.parse::<usize>() {
+                cfg.iters = n.max(1);
+            }
+        }
+        cfg
+    }
+}
+
+/// Time `f` under `cfg`; returns per-iteration summaries in seconds.
+pub fn time_fn(cfg: &BenchConfig, mut f: impl FnMut()) -> Summary {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.iters);
+    let budget = Instant::now();
+    for _ in 0..cfg.iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if budget.elapsed().as_secs_f64() > cfg.max_seconds && !samples.is_empty() {
+            break;
+        }
+    }
+    Summary::of(&samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn times_a_known_sleep() {
+        let cfg = BenchConfig { warmup_iters: 0, iters: 3, max_seconds: 5.0 };
+        let s = time_fn(&cfg, || std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(s.mean >= 0.002, "mean {}", s.mean);
+        assert_eq!(s.n, 3);
+    }
+
+    #[test]
+    fn respects_budget() {
+        let cfg = BenchConfig { warmup_iters: 0, iters: 1000, max_seconds: 0.05 };
+        let s = time_fn(&cfg, || std::thread::sleep(std::time::Duration::from_millis(5)));
+        assert!(s.n < 1000);
+    }
+
+    #[test]
+    fn env_quick_override() {
+        std::env::set_var("MDDCT_BENCH_QUICK", "1");
+        let cfg = BenchConfig::from_env(BenchConfig::paper());
+        assert_eq!(cfg.iters, BenchConfig::quick().iters);
+        std::env::remove_var("MDDCT_BENCH_QUICK");
+    }
+}

@@ -1,0 +1,11 @@
+//! Benchmark substrate (criterion substitute) + the analytic models
+//! behind Tables III and VI. The per-table bench binaries live in
+//! `rust/benches/` and print the same rows/series the paper reports.
+
+pub mod harness;
+pub mod intensity;
+pub mod roofline;
+pub mod table;
+
+pub use harness::{black_box, time_fn, BenchConfig};
+pub use table::{ms, ratio, us, Table};

@@ -1,0 +1,104 @@
+//! Roofline substitute for Table VI's GPU utilization counters.
+//!
+//! nvprof occupancy has no CPU analogue; the quantity Table VI actually
+//! argues about is "the kernels are memory-bound and close to peak
+//! bandwidth". We therefore (1) measure the machine's practical memory
+//! bandwidth with a STREAM-like triad, (2) model the bytes each kernel
+//! stage must move, and (3) report achieved/peak bandwidth fractions.
+
+use std::time::Instant;
+
+/// Measured machine characteristics.
+#[derive(Debug, Clone, Copy)]
+pub struct MachineRoofline {
+    /// practical single-thread copy bandwidth, bytes/s
+    pub copy_bw: f64,
+    /// practical single-thread triad (a = b + s*c) bandwidth, bytes/s
+    pub triad_bw: f64,
+}
+
+/// STREAM-like bandwidth measurement (single thread — the native
+/// backend's transforms are single-threaded per request).
+pub fn measure_machine(len: usize, reps: usize) -> MachineRoofline {
+    let mut a = vec![1.0f64; len];
+    let b = vec![2.0f64; len];
+    let c = vec![3.0f64; len];
+    // copy: 2 * 8 bytes per element per pass
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        a.copy_from_slice(&b);
+        std::hint::black_box(&a);
+    }
+    let copy_bw = (2 * 8 * len * reps) as f64 / t0.elapsed().as_secs_f64();
+    // triad: 3 * 8 bytes per element per pass
+    let t1 = Instant::now();
+    for _ in 0..reps {
+        for i in 0..len {
+            a[i] = b[i] + 0.5 * c[i];
+        }
+        std::hint::black_box(&a);
+    }
+    let triad_bw = (3 * 8 * len * reps) as f64 / t1.elapsed().as_secs_f64();
+    MachineRoofline { copy_bw, triad_bw }
+}
+
+/// Bytes a kernel stage must move (f64 elements).
+#[derive(Debug, Clone, Copy)]
+pub struct StageTraffic {
+    pub reads: usize,
+    pub writes: usize,
+}
+
+impl StageTraffic {
+    pub fn bytes(&self) -> f64 {
+        ((self.reads + self.writes) * 8) as f64
+    }
+}
+
+/// Traffic model of the 2D DCT preprocess: N^2 reads + N^2 writes
+/// (each element touched exactly once — the paper's §III-A invariant).
+pub fn preprocess_traffic(n1: usize, n2: usize) -> StageTraffic {
+    StageTraffic { reads: n1 * n2, writes: n1 * n2 }
+}
+
+/// Traffic model of the efficient postprocess: N1*H2 complex reads
+/// (2 scalars) + N^2 scalar writes.
+pub fn postprocess_traffic(n1: usize, n2: usize) -> StageTraffic {
+    let h2 = n2 / 2 + 1;
+    StageTraffic { reads: 2 * n1 * h2, writes: n1 * n2 }
+}
+
+/// Achieved fraction of the roofline for a measured stage time.
+pub fn achieved_fraction(traffic: StageTraffic, seconds: f64, roof_bw: f64) -> f64 {
+    (traffic.bytes() / seconds) / roof_bw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_is_plausible() {
+        let m = measure_machine(1 << 20, 3);
+        // any machine this runs on moves > 100 MB/s and < 1 TB/s per core
+        assert!(m.copy_bw > 1e8 && m.copy_bw < 1e12, "copy {}", m.copy_bw);
+        assert!(m.triad_bw > 1e8 && m.triad_bw < 1e12, "triad {}", m.triad_bw);
+    }
+
+    #[test]
+    fn traffic_models() {
+        let pre = preprocess_traffic(1024, 1024);
+        assert_eq!(pre.reads, 1024 * 1024);
+        assert_eq!(pre.bytes(), (2.0 * 8.0) * 1024.0 * 1024.0);
+        let post = postprocess_traffic(1024, 1024);
+        assert_eq!(post.reads, 2 * 1024 * 513);
+        assert_eq!(post.writes, 1024 * 1024);
+    }
+
+    #[test]
+    fn fraction_sane() {
+        let t = preprocess_traffic(256, 256);
+        let f = achieved_fraction(t, 1.0, t.bytes());
+        assert!((f - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,110 @@
+//! ASCII table formatting for the paper-table benches.
+
+/// Simple column-aligned table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| format!("+{}", "-".repeat(w + 2)))
+            .collect::<String>()
+            + "+";
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::new();
+            for i in 0..ncol {
+                s.push_str(&format!("| {:width$} ", cells[i], width = widths[i]));
+            }
+            s.push('|');
+            s
+        };
+        let mut out = String::new();
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format seconds as milliseconds with sensible precision.
+pub fn ms(seconds: f64) -> String {
+    let v = seconds * 1e3;
+    if v >= 100.0 {
+        format!("{v:.1}")
+    } else if v >= 1.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+/// Format seconds as microseconds.
+pub fn us(seconds: f64) -> String {
+    format!("{:.2}", seconds * 1e6)
+}
+
+/// Format a ratio like the paper's "(2.10)" columns.
+pub fn ratio(this: f64, base: f64) -> String {
+    format!("({:.2})", this / base)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["N", "time"]);
+        t.row(&["512".into(), "0.12".into()]);
+        t.row(&["16384".into(), "25.78".into()]);
+        let s = t.render();
+        assert!(s.contains("| N     | time  |"));
+        assert!(s.lines().count() >= 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn rejects_wrong_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["x".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(ms(0.02578), "25.78");
+        assert_eq!(us(0.00010162), "101.62");
+        assert_eq!(ratio(2.0, 1.0), "(2.00)");
+    }
+}

@@ -1,0 +1,107 @@
+//! Minimal CLI argument parser (clap substitute): subcommands with
+//! `--flag value` / `--flag` options and positional arguments.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first bare word = subcommand, `--k v` or
+    /// `--k=v` = option, `--k` before another flag/end = boolean.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(stripped.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(stripped.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_bool(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> usize {
+        self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag_f64(&self, name: &str, default: f64) -> f64 {
+        self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("transform --op dct2d --n1 512 --n2=1024 input.bin");
+        assert_eq!(a.command.as_deref(), Some("transform"));
+        assert_eq!(a.flag("op"), Some("dct2d"));
+        assert_eq!(a.flag_usize("n1", 0), 512);
+        assert_eq!(a.flag_usize("n2", 0), 1024);
+        assert_eq!(a.positional, vec!["input.bin"]);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse("serve --pjrt --workers 4");
+        assert!(a.flag_bool("pjrt"));
+        assert_eq!(a.flag_usize("workers", 1), 4);
+        assert!(!a.flag_bool("missing"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.flag_f64("eps", 2.5), 2.5);
+        assert_eq!(a.flag_str("backend", "native"), "native");
+    }
+
+    #[test]
+    fn trailing_bool_flag() {
+        let a = parse("bench --quick");
+        assert!(a.flag_bool("quick"));
+    }
+}

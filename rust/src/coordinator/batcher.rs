@@ -1,0 +1,175 @@
+//! Dynamic batching: drain the request queue, group by (op, shape) plan
+//! key, and emit batches bounded by `max_batch` / `max_wait`.
+//!
+//! The paper's transforms are stateless and shape-specialized, so
+//! batching = amortizing plan lookup + improving cache locality by
+//! running same-shape requests back to back on one worker (and, for the
+//! multi-GPU discussion in §III-D, the unit of embarrassing
+//! parallelism across devices — here across worker threads).
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use super::request::{PlanKey, Request, Response};
+
+/// A queued request plus its reply channel and enqueue timestamp.
+pub struct Pending {
+    pub request: Request,
+    pub reply: Sender<Result<Response, String>>,
+    pub enqueued: Instant,
+}
+
+/// A batch of same-key requests ready for one worker.
+pub struct Batch {
+    pub key: PlanKey,
+    pub items: Vec<Pending>,
+}
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// max requests per batch
+    pub max_batch: usize,
+    /// max time a request may wait for co-batching
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(200) }
+    }
+}
+
+/// Run the batching loop: drain `rx`, form batches, push to `tx`.
+/// Returns when the request channel closes.
+pub fn run_batcher(rx: Receiver<Pending>, tx: Sender<Batch>, policy: BatchPolicy) {
+    let mut open: HashMap<PlanKey, Vec<Pending>> = HashMap::new();
+    let mut oldest: Option<Instant> = None;
+    loop {
+        // Wait for work, bounded by the flush deadline of the oldest
+        // request currently held back for co-batching.
+        let timeout = match oldest {
+            Some(t0) => policy
+                .max_wait
+                .checked_sub(t0.elapsed())
+                .unwrap_or(Duration::ZERO),
+            None => Duration::from_millis(50),
+        };
+        match rx.recv_timeout(timeout) {
+            Ok(p) => {
+                let key = p.request.key();
+                if oldest.is_none() {
+                    oldest = Some(p.enqueued);
+                }
+                let q = open.entry(key.clone()).or_default();
+                q.push(p);
+                if q.len() >= policy.max_batch {
+                    let items = open.remove(&key).unwrap();
+                    if tx.send(Batch { key, items }).is_err() {
+                        return;
+                    }
+                    if open.is_empty() {
+                        oldest = None;
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                // flush everything currently held
+                for (key, items) in open.drain() {
+                    if tx.send(Batch { key, items }).is_err() {
+                        return;
+                    }
+                }
+                oldest = None;
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                for (key, items) in open.drain() {
+                    let _ = tx.send(Batch { key, items });
+                }
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::TransformOp;
+    use std::sync::mpsc::channel;
+
+    fn pending(id: u64, shape: Vec<usize>) -> (Pending, Receiver<Result<Response, String>>) {
+        let (tx, rx) = channel();
+        let numel = shape.iter().product();
+        (
+            Pending {
+                request: Request {
+                    id,
+                    op: TransformOp::Dct2d,
+                    shape,
+                    data: vec![0.0; numel],
+                },
+                reply: tx,
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn groups_same_key_and_flushes_on_timeout() {
+        let (req_tx, req_rx) = channel();
+        let (batch_tx, batch_rx) = channel();
+        let policy =
+            BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(5) };
+        let h = std::thread::spawn(move || run_batcher(req_rx, batch_tx, policy));
+
+        let (p1, _r1) = pending(1, vec![4, 4]);
+        let (p2, _r2) = pending(2, vec![4, 4]);
+        let (p3, _r3) = pending(3, vec![8, 8]);
+        req_tx.send(p1).unwrap();
+        req_tx.send(p2).unwrap();
+        req_tx.send(p3).unwrap();
+
+        let mut batches = vec![batch_rx.recv_timeout(Duration::from_secs(1)).unwrap()];
+        batches.push(batch_rx.recv_timeout(Duration::from_secs(1)).unwrap());
+        batches.sort_by_key(|b| b.items.len());
+        assert_eq!(batches[0].items.len(), 1); // the 8x8 singleton
+        assert_eq!(batches[1].items.len(), 2); // the two 4x4s co-batched
+        drop(req_tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn emits_full_batch_immediately() {
+        let (req_tx, req_rx) = channel();
+        let (batch_tx, batch_rx) = channel();
+        let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(10) };
+        let h = std::thread::spawn(move || run_batcher(req_rx, batch_tx, policy));
+        let (p1, _r1) = pending(1, vec![4, 4]);
+        let (p2, _r2) = pending(2, vec![4, 4]);
+        req_tx.send(p1).unwrap();
+        req_tx.send(p2).unwrap();
+        // despite the huge max_wait, a full batch must flush at once
+        let b = batch_rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(b.items.len(), 2);
+        drop(req_tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn drains_on_disconnect() {
+        let (req_tx, req_rx) = channel();
+        let (batch_tx, batch_rx) = channel();
+        let h = std::thread::spawn(move || {
+            run_batcher(req_rx, batch_tx, BatchPolicy::default())
+        });
+        let (p1, _r1) = pending(1, vec![2, 2]);
+        req_tx.send(p1).unwrap();
+        drop(req_tx);
+        let b = batch_rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(b.items.len(), 1);
+        h.join().unwrap();
+    }
+}

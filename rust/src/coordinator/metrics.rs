@@ -1,0 +1,92 @@
+//! Service metrics: per-op counters, latency histograms, batch sizes.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::stats::LatencyHistogram;
+
+#[derive(Debug, Default)]
+struct OpMetrics {
+    requests: u64,
+    errors: u64,
+    latency: LatencyHistogram,
+    batch_sum: u64,
+    batch_max: usize,
+}
+
+/// Thread-safe metrics registry.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<BTreeMap<String, OpMetrics>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record(&self, op: &str, latency: f64, batch: usize) {
+        let mut m = self.inner.lock().unwrap();
+        let e = m.entry(op.to_string()).or_default();
+        e.requests += 1;
+        e.latency.record(latency);
+        e.batch_sum += batch as u64;
+        e.batch_max = e.batch_max.max(batch);
+    }
+
+    pub fn record_error(&self, op: &str) {
+        let mut m = self.inner.lock().unwrap();
+        m.entry(op.to_string()).or_default().errors += 1;
+    }
+
+    pub fn total_requests(&self) -> u64 {
+        self.inner.lock().unwrap().values().map(|e| e.requests).sum()
+    }
+
+    /// JSON snapshot (dumped by the CLI's `metrics` output).
+    pub fn snapshot(&self) -> Json {
+        let m = self.inner.lock().unwrap();
+        let mut root = BTreeMap::new();
+        for (op, e) in m.iter() {
+            let mut o = BTreeMap::new();
+            o.insert("requests".into(), Json::Num(e.requests as f64));
+            o.insert("errors".into(), Json::Num(e.errors as f64));
+            o.insert("mean_latency_s".into(), Json::Num(e.latency.mean()));
+            o.insert("p50_latency_s".into(), Json::Num(e.latency.quantile(0.5)));
+            o.insert("p95_latency_s".into(), Json::Num(e.latency.quantile(0.95)));
+            o.insert("max_latency_s".into(), Json::Num(e.latency.max));
+            let mean_batch = if e.requests > 0 {
+                e.batch_sum as f64 / e.requests as f64
+            } else {
+                0.0
+            };
+            o.insert("mean_batch".into(), Json::Num(mean_batch));
+            o.insert("max_batch".into(), Json::Num(e.batch_max as f64));
+            root.insert(op.clone(), Json::Obj(o));
+        }
+        Json::Obj(root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record("dct2d", 0.001, 4);
+        m.record("dct2d", 0.003, 2);
+        m.record_error("idct2d");
+        assert_eq!(m.total_requests(), 2);
+        let snap = m.snapshot();
+        let d = snap.get("dct2d").unwrap();
+        assert_eq!(d.get("requests").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(d.get("mean_batch").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(
+            snap.get("idct2d").unwrap().get("errors").unwrap().as_f64().unwrap(),
+            1.0
+        );
+    }
+}

@@ -1,0 +1,22 @@
+//! L3 coordinator: the transform service a downstream application embeds
+//! or runs as a daemon.
+//!
+//! * [`request`]    — ops, requests, responses, plan keys
+//! * [`plan_cache`] — shape-specialized native plan cache
+//! * [`router`]     — native vs PJRT-artifact backend routing
+//! * [`batcher`]    — dynamic batching by (op, shape)
+//! * [`service`]    — thread-pool service facade (submit/wait)
+//! * [`metrics`]    — counters + latency/batch histograms
+
+pub mod batcher;
+pub mod metrics;
+pub mod plan_cache;
+pub mod request;
+pub mod router;
+pub mod service;
+
+pub use batcher::BatchPolicy;
+pub use plan_cache::{NativePlan, PlanCache};
+pub use request::{PlanKey, Request, Response, TransformOp};
+pub use router::{BackendPolicy, Route, Router};
+pub use service::{Handle, Service, ServiceConfig};

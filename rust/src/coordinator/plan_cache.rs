@@ -1,0 +1,197 @@
+//! Native-backend plan cache: one prepared transform plan per
+//! (op, shape), built on first use and shared across workers.
+//!
+//! This is the service-level analogue of cuFFT plan reuse: the paper
+//! amortizes twiddle precomputation across repeated calls; we amortize
+//! whole plan objects (twiddles + FFT plans + permutations).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::dct::{Combo, Dct1d, Dct2, Dct3d, Dst2, Idct1d, Idct2, Idst2, Idxst1d, IdxstCombo, RowColumn};
+
+use super::request::{PlanKey, TransformOp};
+
+/// A prepared native transform plan.
+pub enum NativePlan {
+    Dct2(Dct2),
+    Idct2(Idct2),
+    RcDct2(RowColumn),
+    RcIdct2(RowColumn),
+    Dct1(Dct1d),
+    Idct1(Idct1d),
+    Idxst1(Idxst1d),
+    Combo(IdxstCombo),
+    Dct3(Dct3d),
+    Dst2(Dst2),
+    Idst2(Idst2),
+}
+
+impl NativePlan {
+    /// Build the plan for a key. Panics on rank mismatch (validated
+    /// upstream by `Request::validate`).
+    pub fn build(key: &PlanKey) -> NativePlan {
+        let s = &key.shape;
+        match key.op {
+            TransformOp::Dct2d => NativePlan::Dct2(Dct2::new(s[0], s[1])),
+            TransformOp::Idct2d => NativePlan::Idct2(Idct2::new(s[0], s[1])),
+            TransformOp::RcDct2d => NativePlan::RcDct2(RowColumn::dct2(s[0], s[1])),
+            TransformOp::RcIdct2d => NativePlan::RcIdct2(RowColumn::idct2(s[0], s[1])),
+            TransformOp::Dct1d(algo) => NativePlan::Dct1(Dct1d::new(s[0], algo)),
+            TransformOp::Idct1d => NativePlan::Idct1(Idct1d::new(s[0])),
+            TransformOp::Idxst1d => NativePlan::Idxst1(Idxst1d::new(s[0])),
+            TransformOp::IdctIdxst => {
+                NativePlan::Combo(IdxstCombo::new(s[0], s[1], Combo::IdctIdxst))
+            }
+            TransformOp::IdxstIdct => {
+                NativePlan::Combo(IdxstCombo::new(s[0], s[1], Combo::IdxstIdct))
+            }
+            TransformOp::Dct3d => NativePlan::Dct3(Dct3d::new(s[0], s[1], s[2])),
+            TransformOp::Dst2d => NativePlan::Dst2(Dst2::new(s[0], s[1])),
+            TransformOp::Idst2d => NativePlan::Idst2(Idst2::new(s[0], s[1])),
+        }
+    }
+
+    /// Execute on one payload.
+    pub fn execute(&self, data: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; data.len()];
+        match self {
+            NativePlan::Dct2(p) => p.forward(data, &mut out),
+            NativePlan::Idct2(p) => p.forward(data, &mut out),
+            NativePlan::RcDct2(p) | NativePlan::RcIdct2(p) => p.forward(data, &mut out),
+            NativePlan::Dct1(p) => p.forward(data, &mut out),
+            NativePlan::Idct1(p) => p.forward(data, &mut out),
+            NativePlan::Idxst1(p) => p.forward(data, &mut out),
+            NativePlan::Combo(p) => p.forward(data, &mut out),
+            NativePlan::Dct3(p) => p.forward(data, &mut out),
+            NativePlan::Dst2(p) => p.forward(data, &mut out),
+            NativePlan::Idst2(p) => p.forward(data, &mut out),
+        }
+        out
+    }
+}
+
+/// Cache statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+/// Thread-safe (op, shape) -> plan cache.
+pub struct PlanCache {
+    plans: RwLock<HashMap<PlanKey, Arc<NativePlan>>>,
+    stats: Mutex<CacheStats>,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache { plans: RwLock::new(HashMap::new()), stats: Mutex::new(CacheStats::default()) }
+    }
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        Self::default()
+    }
+
+    /// Fetch (or build) the plan for a key.
+    pub fn get(&self, key: &PlanKey) -> Arc<NativePlan> {
+        if let Some(p) = self.plans.read().unwrap().get(key) {
+            self.stats.lock().unwrap().hits += 1;
+            return p.clone();
+        }
+        let mut w = self.plans.write().unwrap();
+        // double-checked: another thread may have built it meanwhile
+        if let Some(p) = w.get(key) {
+            self.stats.lock().unwrap().hits += 1;
+            return p.clone();
+        }
+        let plan = Arc::new(NativePlan::build(key));
+        w.insert(key.clone(), plan.clone());
+        self.stats.lock().unwrap().misses += 1;
+        plan
+    }
+
+    pub fn len(&self) -> usize {
+        self.plans.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        *self.stats.lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dct::direct::dct2d_direct;
+    use crate::dct::Algo1d;
+    use crate::util::prop::check_close;
+    use crate::util::rng::Rng;
+
+    fn key(op: TransformOp, shape: &[usize]) -> PlanKey {
+        PlanKey { op, shape: shape.to_vec() }
+    }
+
+    #[test]
+    fn plans_execute_correctly() {
+        let mut rng = Rng::new(80);
+        let x = rng.normal_vec(8 * 12);
+        let cache = PlanCache::new();
+        let plan = cache.get(&key(TransformOp::Dct2d, &[8, 12]));
+        check_close(&plan.execute(&x), &dct2d_direct(&x, 8, 12), 1e-9).unwrap();
+        // fused == row-column through the cache too
+        let rc = cache.get(&key(TransformOp::RcDct2d, &[8, 12]));
+        check_close(&rc.execute(&x), &dct2d_direct(&x, 8, 12), 1e-9).unwrap();
+    }
+
+    #[test]
+    fn cache_hit_miss_accounting() {
+        let cache = PlanCache::new();
+        let k = key(TransformOp::Dct2d, &[16, 16]);
+        let a = cache.get(&k);
+        let b = cache.get(&k);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(cache.len(), 1);
+        cache.get(&key(TransformOp::Idct2d, &[16, 16]));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn all_ops_build_and_roundtrip_sane() {
+        let mut rng = Rng::new(81);
+        let cache = PlanCache::new();
+        let x1 = rng.normal_vec(16);
+        for op in [
+            TransformOp::Dct1d(Algo1d::NPoint),
+            TransformOp::Dct1d(Algo1d::FourN),
+            TransformOp::Idct1d,
+            TransformOp::Idxst1d,
+        ] {
+            let y = cache.get(&key(op, &[16])).execute(&x1);
+            assert_eq!(y.len(), 16);
+            assert!(y.iter().all(|v| v.is_finite()), "{op:?}");
+        }
+        let x2 = rng.normal_vec(6 * 8);
+        for op in [
+            TransformOp::Dct2d,
+            TransformOp::Idct2d,
+            TransformOp::RcDct2d,
+            TransformOp::RcIdct2d,
+            TransformOp::IdctIdxst,
+            TransformOp::IdxstIdct,
+        ] {
+            let y = cache.get(&key(op, &[6, 8])).execute(&x2);
+            assert!(y.iter().all(|v| v.is_finite()), "{op:?}");
+        }
+        let x3 = rng.normal_vec(4 * 4 * 4);
+        let y = cache.get(&key(TransformOp::Dct3d, &[4, 4, 4])).execute(&x3);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,197 @@
+//! Request/response types for the transform service.
+
+use crate::dct::Algo1d;
+
+/// A transform the service can execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TransformOp {
+    /// Fused 2D DCT (the paper's headline path)
+    Dct2d,
+    /// Fused 2D IDCT
+    Idct2d,
+    /// Row-column 2D DCT (baseline; exposed for A/B benchmarking)
+    RcDct2d,
+    /// Row-column 2D IDCT
+    RcIdct2d,
+    /// 1D DCT with a chosen Algorithm-1 variant
+    Dct1d(Algo1d),
+    /// 1D inverse DCT
+    Idct1d,
+    /// 1D IDXST (DREAMPlace Eq. 21)
+    Idxst1d,
+    /// Fused IDCT_IDXST (rows IDCT, cols IDXST)
+    IdctIdxst,
+    /// Fused IDXST_IDCT
+    IdxstIdct,
+    /// Fused 3D DCT
+    Dct3d,
+    /// Fused 2D DST-II (DST family via folds, §III-D extensibility)
+    Dst2d,
+    /// Fused 2D inverse DST
+    Idst2d,
+}
+
+impl TransformOp {
+    /// Tensor rank this op expects.
+    pub fn rank(self) -> usize {
+        match self {
+            TransformOp::Dct1d(_) | TransformOp::Idct1d | TransformOp::Idxst1d => 1,
+            TransformOp::Dct3d => 3,
+            _ => 2,
+        }
+    }
+
+    /// Artifact-name prefix for the PJRT backend (None = native only).
+    pub fn artifact_prefix(self) -> Option<&'static str> {
+        match self {
+            TransformOp::Dct2d => Some("dct2d_"),
+            TransformOp::Idct2d => Some("idct2d_"),
+            TransformOp::RcDct2d => Some("rc_dct2d_"),
+            TransformOp::RcIdct2d => Some("rc_idct2d_"),
+            TransformOp::Dct1d(Algo1d::NPoint) => Some("dct1d_n_"),
+            TransformOp::Dct1d(Algo1d::FourN) => Some("dct1d_4n_"),
+            TransformOp::Dct1d(Algo1d::Mirror2N) => Some("dct1d_2n_mirror_"),
+            TransformOp::Dct1d(Algo1d::Pad2N) => Some("dct1d_2n_pad_"),
+            TransformOp::Idct1d => Some("idct1d_"),
+            TransformOp::IdctIdxst => Some("idct_idxst_"),
+            TransformOp::IdxstIdct => Some("idxst_idct_"),
+            TransformOp::Dst2d => Some("dst2d_"),
+            TransformOp::Idst2d => Some("idst2d_"),
+            TransformOp::Idxst1d | TransformOp::Dct3d => None,
+        }
+    }
+
+    /// Artifact name for a concrete shape, e.g. `dct2d_256x256`.
+    pub fn artifact_name(self, shape: &[usize]) -> Option<String> {
+        let prefix = self.artifact_prefix()?;
+        let dims: Vec<String> = shape.iter().map(|d| d.to_string()).collect();
+        Some(format!("{prefix}{}", dims.join("x")))
+    }
+
+    pub fn name(self) -> String {
+        match self {
+            TransformOp::Dct2d => "dct2d".into(),
+            TransformOp::Idct2d => "idct2d".into(),
+            TransformOp::RcDct2d => "rc_dct2d".into(),
+            TransformOp::RcIdct2d => "rc_idct2d".into(),
+            TransformOp::Dct1d(a) => format!("dct1d_{}", a.name()),
+            TransformOp::Idct1d => "idct1d".into(),
+            TransformOp::Idxst1d => "idxst1d".into(),
+            TransformOp::IdctIdxst => "idct_idxst".into(),
+            TransformOp::IdxstIdct => "idxst_idct".into(),
+            TransformOp::Dct3d => "dct3d".into(),
+            TransformOp::Dst2d => "dst2d".into(),
+            TransformOp::Idst2d => "idst2d".into(),
+        }
+    }
+}
+
+/// Routing key: requests with equal keys share a plan / executable and can
+/// be batched together.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub op: TransformOp,
+    pub shape: Vec<usize>,
+}
+
+/// A transform request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub op: TransformOp,
+    pub shape: Vec<usize>,
+    pub data: Vec<f64>,
+}
+
+impl Request {
+    pub fn key(&self) -> PlanKey {
+        PlanKey { op: self.op, shape: self.shape.clone() }
+    }
+
+    /// Validate shape/rank/payload consistency.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.shape.len() != self.op.rank() {
+            return Err(format!(
+                "{} expects rank {}, got shape {:?}",
+                self.op.name(),
+                self.op.rank(),
+                self.shape
+            ));
+        }
+        if self.shape.iter().any(|&d| d == 0) {
+            return Err(format!("zero dimension in shape {:?}", self.shape));
+        }
+        let numel: usize = self.shape.iter().product();
+        if self.data.len() != numel {
+            return Err(format!(
+                "payload {} elements, shape {:?} needs {numel}",
+                self.data.len(),
+                self.shape
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// A completed transform.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    /// transform outputs (single tensor for all current ops)
+    pub output: Vec<f64>,
+    /// which backend executed it
+    pub backend: &'static str,
+    /// end-to-end seconds inside the service (queue + execute)
+    pub latency: f64,
+    /// how many requests shared the executing batch
+    pub batch_size: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranks() {
+        assert_eq!(TransformOp::Dct2d.rank(), 2);
+        assert_eq!(TransformOp::Idct1d.rank(), 1);
+        assert_eq!(TransformOp::Dct3d.rank(), 3);
+    }
+
+    #[test]
+    fn artifact_names() {
+        assert_eq!(
+            TransformOp::Dct2d.artifact_name(&[256, 256]).unwrap(),
+            "dct2d_256x256"
+        );
+        assert_eq!(
+            TransformOp::Dct1d(Algo1d::NPoint).artifact_name(&[1024]).unwrap(),
+            "dct1d_n_1024"
+        );
+        assert!(TransformOp::Dct3d.artifact_name(&[4, 4, 4]).is_none());
+    }
+
+    #[test]
+    fn validation() {
+        let ok = Request { id: 1, op: TransformOp::Dct2d, shape: vec![4, 4], data: vec![0.0; 16] };
+        assert!(ok.validate().is_ok());
+        let bad_rank =
+            Request { id: 2, op: TransformOp::Dct2d, shape: vec![4], data: vec![0.0; 4] };
+        assert!(bad_rank.validate().is_err());
+        let bad_len =
+            Request { id: 3, op: TransformOp::Dct2d, shape: vec![4, 4], data: vec![0.0; 15] };
+        assert!(bad_len.validate().is_err());
+        let zero_dim =
+            Request { id: 4, op: TransformOp::Dct2d, shape: vec![0, 4], data: vec![] };
+        assert!(zero_dim.validate().is_err());
+    }
+
+    #[test]
+    fn plan_keys_group_by_op_and_shape() {
+        let a = Request { id: 1, op: TransformOp::Dct2d, shape: vec![8, 8], data: vec![0.0; 64] };
+        let b = Request { id: 2, op: TransformOp::Dct2d, shape: vec![8, 8], data: vec![1.0; 64] };
+        let c = Request { id: 3, op: TransformOp::Idct2d, shape: vec![8, 8], data: vec![1.0; 64] };
+        assert_eq!(a.key(), b.key());
+        assert_ne!(a.key(), c.key());
+    }
+}

@@ -1,0 +1,146 @@
+//! Backend routing: decide, per (op, shape), whether a batch runs on the
+//! native Rust transform library or on an AOT PJRT artifact, and execute
+//! it there.
+//!
+//! The PJRT backend is reached through [`PjrtHandle`] (a channel to the
+//! single-owner PJRT thread); routing decisions use the parsed manifest
+//! directly, so no PJRT call is needed to decide.
+
+use std::collections::BTreeSet;
+
+use super::plan_cache::PlanCache;
+use super::request::PlanKey;
+use crate::runtime::{Manifest, PjrtHandle};
+
+/// Routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendPolicy {
+    /// Always the native Rust library (works for every size).
+    #[default]
+    NativeOnly,
+    /// Use a PJRT artifact when the manifest has this exact (op, shape);
+    /// fall back to native otherwise.
+    PreferPjrt,
+}
+
+/// Where a batch was routed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    Native,
+    Pjrt,
+}
+
+impl Route {
+    pub fn label(self) -> &'static str {
+        match self {
+            Route::Native => "native",
+            Route::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// The router owns the native plan cache and (optionally) the PJRT handle.
+pub struct Router {
+    pub policy: BackendPolicy,
+    pub plans: PlanCache,
+    pjrt: Option<PjrtHandle>,
+    artifact_names: BTreeSet<String>,
+}
+
+impl Router {
+    pub fn native_only() -> Router {
+        Router {
+            policy: BackendPolicy::NativeOnly,
+            plans: PlanCache::new(),
+            pjrt: None,
+            artifact_names: BTreeSet::new(),
+        }
+    }
+
+    /// Prefer PJRT artifacts listed in `manifest`, executing via `handle`.
+    pub fn with_pjrt(handle: PjrtHandle, manifest: &Manifest) -> Router {
+        Router {
+            policy: BackendPolicy::PreferPjrt,
+            plans: PlanCache::new(),
+            pjrt: Some(handle),
+            artifact_names: manifest.entries.keys().cloned().collect(),
+        }
+    }
+
+    /// Decide the route for a key (PJRT only when an artifact exists).
+    pub fn route(&self, key: &PlanKey) -> Route {
+        if self.policy == BackendPolicy::PreferPjrt && self.pjrt.is_some() {
+            if let Some(name) = key.op.artifact_name(&key.shape) {
+                if self.artifact_names.contains(&name) {
+                    return Route::Pjrt;
+                }
+            }
+        }
+        Route::Native
+    }
+
+    /// Execute one payload for a key on the routed backend.
+    pub fn execute(&self, key: &PlanKey, data: &[f64]) -> Result<(Vec<f64>, Route), String> {
+        match self.route(key) {
+            Route::Native => {
+                let plan = self.plans.get(key);
+                Ok((plan.execute(data), Route::Native))
+            }
+            Route::Pjrt => {
+                let handle = self.pjrt.as_ref().expect("route checked");
+                let name = key.op.artifact_name(&key.shape).expect("route checked");
+                let outs = handle
+                    .run(&name, vec![data.to_vec()])
+                    .map_err(|e| format!("{e:#}"))?;
+                Ok((outs.into_iter().next().unwrap_or_default(), Route::Pjrt))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::TransformOp;
+    use crate::dct::direct::dct2d_direct;
+    use crate::util::prop::check_close;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn native_only_routes_native() {
+        let r = Router::native_only();
+        let key = PlanKey { op: TransformOp::Dct2d, shape: vec![8, 8] };
+        assert_eq!(r.route(&key), Route::Native);
+        let mut rng = Rng::new(90);
+        let x = rng.normal_vec(64);
+        let (y, route) = r.execute(&key, &x).unwrap();
+        assert_eq!(route, Route::Native);
+        check_close(&y, &dct2d_direct(&x, 8, 8), 1e-9).unwrap();
+    }
+
+    #[test]
+    fn ops_without_artifacts_stay_native() {
+        let r = Router::native_only();
+        let key = PlanKey { op: TransformOp::Dct3d, shape: vec![4, 4, 4] };
+        assert_eq!(r.route(&key), Route::Native);
+    }
+
+    #[test]
+    fn prefer_pjrt_falls_back_when_shape_missing() {
+        // manifest without the requested shape -> native route
+        let manifest = Manifest::parse(
+            r#"{"version":1,"dtype":"f32","entries":[
+                {"name":"dct2d_64x64","pipeline":"dct2d","file":"x.hlo.txt",
+                 "inputs":[{"shape":[64,64],"dtype":"f32"}],
+                 "outputs":[{"shape":[64,64],"dtype":"f32"}]}]}"#,
+            std::path::PathBuf::from("/nonexistent"),
+        )
+        .unwrap();
+        let handle = PjrtHandle::spawn("/nonexistent");
+        let r = Router::with_pjrt(handle, &manifest);
+        let hit = PlanKey { op: TransformOp::Dct2d, shape: vec![64, 64] };
+        let miss = PlanKey { op: TransformOp::Dct2d, shape: vec![63, 63] };
+        assert_eq!(r.route(&hit), Route::Pjrt);
+        assert_eq!(r.route(&miss), Route::Native);
+    }
+}

@@ -1,0 +1,280 @@
+//! The transform service: the L3 coordinator facade.
+//!
+//! Architecture (std-thread substitute for the usual tokio stack — the
+//! offline crate set has no async runtime):
+//!
+//! ```text
+//!  submit() ──> request mpsc ──> batcher thread ──> batch mpsc ──┐
+//!                                                                ▼
+//!                                                      worker pool (N threads)
+//!                                                                │
+//!  Handle::wait() <── per-request reply channel <────────────────┘
+//! ```
+//!
+//! Workers execute batches through the [`Router`] (native plans or PJRT
+//! artifacts) and record metrics. Shape-specialized plans are cached, so
+//! steady-state request cost is transform + channel hops only.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::batcher::{run_batcher, Batch, BatchPolicy, Pending};
+use super::metrics::Metrics;
+use super::request::{Request, Response, TransformOp};
+use super::router::Router;
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub workers: usize,
+    pub batch: BatchPolicy,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            batch: BatchPolicy::default(),
+        }
+    }
+}
+
+/// Handle to an in-flight request.
+pub struct Handle {
+    rx: Receiver<Result<Response, String>>,
+}
+
+impl Handle {
+    /// Block until the transform completes.
+    pub fn wait(self) -> Result<Response, String> {
+        self.rx.recv().map_err(|_| "service shut down".to_string())?
+    }
+}
+
+/// The running transform service.
+pub struct Service {
+    req_tx: Option<Sender<Pending>>,
+    batcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+    pub metrics: Arc<Metrics>,
+    pub router: Arc<Router>,
+}
+
+impl Service {
+    /// Start the service with `router` as the execution backend.
+    pub fn start(config: ServiceConfig, router: Router) -> Service {
+        let router = Arc::new(router);
+        let metrics = Arc::new(Metrics::new());
+        let (req_tx, req_rx) = channel::<Pending>();
+        let (batch_tx, batch_rx) = channel::<Batch>();
+        let policy = config.batch;
+        let batcher =
+            std::thread::spawn(move || run_batcher(req_rx, batch_tx, policy));
+
+        // Work distribution: workers pull batches from the shared queue.
+        let shared_rx = Arc::new(Mutex::new(batch_rx));
+        let mut workers = Vec::new();
+        for w in 0..config.workers.max(1) {
+            let rx = shared_rx.clone();
+            let router = router.clone();
+            let metrics = metrics.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("mddct-worker-{w}"))
+                    .spawn(move || worker_loop(rx, router, metrics))
+                    .expect("spawn worker"),
+            );
+        }
+        Service {
+            req_tx: Some(req_tx),
+            batcher: Some(batcher),
+            workers,
+            next_id: AtomicU64::new(1),
+            metrics,
+            router,
+        }
+    }
+
+    /// Start with the native backend only (the common configuration).
+    pub fn start_native(config: ServiceConfig) -> Service {
+        Self::start(config, Router::native_only())
+    }
+
+    /// Submit a transform; returns immediately with a wait handle.
+    pub fn submit(
+        &self,
+        op: TransformOp,
+        shape: Vec<usize>,
+        data: Vec<f64>,
+    ) -> Result<Handle, String> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let request = Request { id, op, shape, data };
+        request.validate()?;
+        let (reply, rx) = channel();
+        self.req_tx
+            .as_ref()
+            .expect("service running")
+            .send(Pending { request, reply, enqueued: Instant::now() })
+            .map_err(|_| "service shut down".to_string())?;
+        Ok(Handle { rx })
+    }
+
+    /// Submit and block for the result.
+    pub fn transform(
+        &self,
+        op: TransformOp,
+        shape: Vec<usize>,
+        data: Vec<f64>,
+    ) -> Result<Response, String> {
+        self.submit(op, shape, data)?.wait()
+    }
+
+    /// Submit many, wait for all (order preserved).
+    pub fn transform_many(
+        &self,
+        reqs: Vec<(TransformOp, Vec<usize>, Vec<f64>)>,
+    ) -> Result<Vec<Response>, String> {
+        let handles: Result<Vec<Handle>, String> = reqs
+            .into_iter()
+            .map(|(op, shape, data)| self.submit(op, shape, data))
+            .collect();
+        handles?.into_iter().map(Handle::wait).collect()
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        // closing the request channel winds down batcher then workers
+        self.req_tx.take();
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<Receiver<Batch>>>,
+    router: Arc<Router>,
+    metrics: Arc<Metrics>,
+) {
+    loop {
+        // hold the lock only while receiving, not while executing
+        let batch = match rx.lock().unwrap().recv() {
+            Ok(b) => b,
+            Err(_) => return,
+        };
+        let n = batch.items.len();
+        let op_name = batch.key.op.name();
+        for pending in batch.items {
+            let t0 = pending.enqueued;
+            let result = router.execute(&batch.key, &pending.request.data);
+            let latency = t0.elapsed().as_secs_f64();
+            let response = match result {
+                Ok((output, route)) => {
+                    metrics.record(&op_name, latency, n);
+                    Ok(Response {
+                        id: pending.request.id,
+                        output,
+                        backend: route.label(),
+                        latency,
+                        batch_size: n,
+                    })
+                }
+                Err(e) => {
+                    metrics.record_error(&op_name);
+                    Err(e)
+                }
+            };
+            let _ = pending.reply.send(response);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dct::direct::{dct2d_direct, idct2d_direct};
+    use crate::util::prop::check_close;
+    use crate::util::rng::Rng;
+
+    fn svc(workers: usize) -> Service {
+        Service::start_native(ServiceConfig {
+            workers,
+            batch: BatchPolicy::default(),
+        })
+    }
+
+    #[test]
+    fn transform_roundtrip() {
+        let s = svc(2);
+        let mut rng = Rng::new(200);
+        let x = rng.normal_vec(12 * 12);
+        let r = s.transform(TransformOp::Dct2d, vec![12, 12], x.clone()).unwrap();
+        check_close(&r.output, &dct2d_direct(&x, 12, 12), 1e-9).unwrap();
+        assert_eq!(r.backend, "native");
+        let back = s
+            .transform(TransformOp::Idct2d, vec![12, 12], r.output.clone())
+            .unwrap();
+        check_close(&back.output, &x, 1e-9).unwrap();
+        assert!(s.metrics.total_requests() >= 2);
+    }
+
+    #[test]
+    fn rejects_invalid_requests() {
+        let s = svc(1);
+        assert!(s.transform(TransformOp::Dct2d, vec![4], vec![0.0; 4]).is_err());
+        assert!(s.transform(TransformOp::Dct2d, vec![4, 4], vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn many_concurrent_requests_no_loss() {
+        let s = svc(4);
+        let mut rng = Rng::new(201);
+        let mut reqs = Vec::new();
+        let mut wants = Vec::new();
+        for i in 0..64 {
+            let (n1, n2) = if i % 2 == 0 { (8, 8) } else { (6, 10) };
+            let x = rng.normal_vec(n1 * n2);
+            wants.push(dct2d_direct(&x, n1, n2));
+            reqs.push((TransformOp::Dct2d, vec![n1, n2], x));
+        }
+        let out = s.transform_many(reqs).unwrap();
+        assert_eq!(out.len(), 64);
+        for (r, w) in out.iter().zip(&wants) {
+            check_close(&r.output, w, 1e-9).unwrap();
+        }
+        // same-shape requests must have been co-batched at least once
+        let snap = s.metrics.snapshot();
+        let mb = snap
+            .get("dct2d")
+            .and_then(|d| d.get("max_batch"))
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        assert!(mb >= 1.0);
+    }
+
+    #[test]
+    fn mixed_ops_route_correctly() {
+        let s = svc(2);
+        let mut rng = Rng::new(202);
+        let x = rng.normal_vec(9 * 9);
+        let a = s.transform(TransformOp::IdctIdxst, vec![9, 9], x.clone()).unwrap();
+        let b = s.transform(TransformOp::RcIdct2d, vec![9, 9], x.clone()).unwrap();
+        assert!(a.output.iter().all(|v| v.is_finite()));
+        check_close(&b.output, &idct2d_direct(&x, 9, 9), 1e-9).unwrap();
+    }
+
+    #[test]
+    fn shutdown_is_clean() {
+        let s = svc(2);
+        let _ = s.transform(TransformOp::Dct2d, vec![4, 4], vec![1.0; 16]);
+        drop(s); // must not hang or panic
+    }
+}

@@ -1,0 +1,291 @@
+//! The four 1D DCT-via-FFT algorithms (paper Algorithm 1) plus the
+//! inverse and IDXST — native backend.
+//!
+//! Each plan owns its RFFT plan + twiddle table, so repeated calls do no
+//! trig. The N-point variant is the library default (the paper shows it
+//! dominates in Table IV); the 4N/2N variants exist as first-class
+//! citizens because Table IV benchmarks all four.
+
+use std::sync::Arc;
+
+use crate::fft::{onesided_len, C64, RfftPlan};
+
+use super::twiddle::{twiddle, Twiddle};
+
+/// Which Algorithm-1 variant a [`Dct1d`] plan uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algo1d {
+    /// 4N-point FFT of the zero-interleaved extension (Eq. 3/4)
+    FourN,
+    /// 2N-point FFT of the mirrored extension (Eq. 5/6)
+    Mirror2N,
+    /// 2N-point FFT of the zero-padded extension (Eq. 7/8)
+    Pad2N,
+    /// N-point FFT of the butterfly reorder (Eq. 9/11) — the fast one
+    NPoint,
+}
+
+impl Algo1d {
+    pub const ALL: [Algo1d; 4] = [Algo1d::FourN, Algo1d::Mirror2N, Algo1d::Pad2N, Algo1d::NPoint];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Algo1d::FourN => "4N",
+            Algo1d::Mirror2N => "Mirrored 2N",
+            Algo1d::Pad2N => "Padded 2N",
+            Algo1d::NPoint => "N",
+        }
+    }
+
+    /// FFT length this variant transforms for input length n.
+    pub fn fft_len(self, n: usize) -> usize {
+        match self {
+            Algo1d::FourN => 4 * n,
+            Algo1d::Mirror2N | Algo1d::Pad2N => 2 * n,
+            Algo1d::NPoint => n,
+        }
+    }
+}
+
+/// Forward 1D DCT plan.
+#[derive(Debug, Clone)]
+pub struct Dct1d {
+    pub n: usize,
+    pub algo: Algo1d,
+    rfft: RfftPlan,
+    tw: Arc<Twiddle>,
+}
+
+impl Dct1d {
+    pub fn new(n: usize, algo: Algo1d) -> Dct1d {
+        Dct1d { n, algo, rfft: RfftPlan::new(algo.fft_len(n)), tw: twiddle(n) }
+    }
+
+    /// Compute the DCT of `x` into `out` (both length n).
+    pub fn forward(&self, x: &[f64], out: &mut [f64]) {
+        let n = self.n;
+        assert_eq!(x.len(), n);
+        assert_eq!(out.len(), n);
+        let m = self.algo.fft_len(n);
+        let mut pre = crate::util::scratch::take_f64(m);
+        self.preprocess(x, &mut pre);
+        let mut spec = crate::util::scratch::take_c64(onesided_len(m));
+        self.rfft.forward(&pre, &mut spec);
+        self.postprocess(&spec, out);
+        crate::util::scratch::give_f64(pre);
+        crate::util::scratch::give_c64(spec);
+    }
+
+    /// Preprocessing stage only (exposed for stage-level benches).
+    pub fn preprocess(&self, x: &[f64], pre: &mut [f64]) {
+        let n = self.n;
+        match self.algo {
+            Algo1d::FourN => {
+                pre.fill(0.0);
+                for i in 0..n {
+                    pre[2 * i + 1] = x[i];
+                    pre[2 * n + 2 * i + 1] = x[n - 1 - i];
+                }
+            }
+            Algo1d::Mirror2N => {
+                pre[..n].copy_from_slice(x);
+                for i in 0..n {
+                    pre[n + i] = x[n - 1 - i];
+                }
+            }
+            Algo1d::Pad2N => {
+                pre[..n].copy_from_slice(x);
+                pre[n..].fill(0.0);
+            }
+            Algo1d::NPoint => super::reorder::reorder_1d_scatter(x, pre),
+        }
+    }
+
+    /// Postprocessing stage only (exposed for stage-level benches).
+    pub fn postprocess(&self, spec: &[C64], out: &mut [f64]) {
+        let n = self.n;
+        match self.algo {
+            Algo1d::FourN => {
+                for (k, o) in out.iter_mut().enumerate() {
+                    *o = spec[k].re; // Eq. (4)
+                }
+            }
+            Algo1d::Mirror2N => {
+                for (k, o) in out.iter_mut().enumerate() {
+                    let w = self.tw.at(k);
+                    *o = (w * spec[k]).re; // Eq. (6)
+                }
+            }
+            Algo1d::Pad2N => {
+                for (k, o) in out.iter_mut().enumerate() {
+                    let w = self.tw.at(k);
+                    *o = 2.0 * (w * spec[k]).re; // Eq. (8)
+                }
+            }
+            Algo1d::NPoint => {
+                // Eq. (11): onesided spectrum + Hermitian right half
+                let h = onesided_len(n);
+                for k in 0..h.min(n) {
+                    out[k] = 2.0 * (self.tw.at(k) * spec[k]).re;
+                }
+                for k in h..n {
+                    out[k] = 2.0 * (self.tw.at(k) * spec[n - k].conj()).re;
+                }
+            }
+        }
+    }
+}
+
+/// Inverse 1D DCT plan (N-point IRFFT; the 1D restriction of Eq. 15/16).
+#[derive(Debug, Clone)]
+pub struct Idct1d {
+    pub n: usize,
+    rfft: RfftPlan,
+    tw: Arc<Twiddle>,
+}
+
+impl Idct1d {
+    pub fn new(n: usize) -> Idct1d {
+        Idct1d { n, rfft: RfftPlan::new(n), tw: twiddle(n) }
+    }
+
+    pub fn forward(&self, x: &[f64], out: &mut [f64]) {
+        let n = self.n;
+        assert_eq!(x.len(), n);
+        assert_eq!(out.len(), n);
+        let h = onesided_len(n);
+        let mut spec = crate::util::scratch::take_c64(h);
+        self.preprocess(x, &mut spec);
+        let mut v = crate::util::scratch::take_f64(n);
+        self.rfft.inverse(&spec, &mut v);
+        super::reorder::unreorder_1d(&v, out);
+        crate::util::scratch::give_c64(spec);
+        crate::util::scratch::give_f64(v);
+    }
+
+    /// Build the onesided spectrum: V(k) = conj(w_k)/2 (x_k - j x~_k).
+    pub fn preprocess(&self, x: &[f64], spec: &mut [C64]) {
+        let n = self.n;
+        for (k, s) in spec.iter_mut().enumerate() {
+            let xt = if k == 0 { 0.0 } else { x[n - k] };
+            let wc = self.tw.conj_at(k);
+            // wc/2 * (x[k] - j*xt)
+            *s = (wc * C64::new(x[k], -xt)).scale(0.5);
+        }
+    }
+}
+
+/// 1D IDXST plan (paper Eq. 21): sign-flipped IDCT of the reverse-shift.
+#[derive(Debug, Clone)]
+pub struct Idxst1d {
+    idct: Idct1d,
+}
+
+impl Idxst1d {
+    pub fn new(n: usize) -> Idxst1d {
+        Idxst1d { idct: Idct1d::new(n) }
+    }
+
+    /// Transform length.
+    pub fn len(&self) -> usize {
+        self.idct.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn forward(&self, x: &[f64], out: &mut [f64]) {
+        let n = self.idct.n;
+        let mut shifted = vec![0.0; n];
+        for i in 1..n {
+            shifted[i] = x[n - i];
+        }
+        self.idct.forward(&shifted, out);
+        for (k, o) in out.iter_mut().enumerate() {
+            if k % 2 == 1 {
+                *o = -*o;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dct::direct::{dct1d_direct, idct1d_direct, idxst1d_direct};
+    use crate::util::prop::{check_close, forall, sizes};
+
+    #[test]
+    fn all_algorithms_match_direct() {
+        forall(40, sizes(1, 100), |rng, &n| {
+            let x = rng.normal_vec(n);
+            let want = dct1d_direct(&x);
+            for algo in Algo1d::ALL {
+                let plan = Dct1d::new(n, algo);
+                let mut out = vec![0.0; n];
+                plan.forward(&x, &mut out);
+                check_close(&out, &want, 1e-9)
+                    .map_err(|e| format!("{} failed: {e}", algo.name()))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn idct_matches_direct_and_inverts() {
+        forall(40, sizes(1, 100), |rng, &n| {
+            let x = rng.normal_vec(n);
+            let plan = Idct1d::new(n);
+            let mut out = vec![0.0; n];
+            plan.forward(&x, &mut out);
+            check_close(&out, &idct1d_direct(&x), 1e-9)?;
+            // roundtrip
+            let fwd = Dct1d::new(n, Algo1d::NPoint);
+            let mut y = vec![0.0; n];
+            fwd.forward(&x, &mut y);
+            let mut back = vec![0.0; n];
+            plan.forward(&y, &mut back);
+            check_close(&back, &x, 1e-9)
+        });
+    }
+
+    #[test]
+    fn idxst_matches_direct() {
+        forall(30, sizes(1, 64), |rng, &n| {
+            let x = rng.normal_vec(n);
+            let plan = Idxst1d::new(n);
+            let mut out = vec![0.0; n];
+            plan.forward(&x, &mut out);
+            check_close(&out, &idxst1d_direct(&x), 1e-9)
+        });
+    }
+
+    #[test]
+    fn fft_lengths_per_algo() {
+        assert_eq!(Algo1d::FourN.fft_len(100), 400);
+        assert_eq!(Algo1d::Mirror2N.fft_len(100), 200);
+        assert_eq!(Algo1d::Pad2N.fft_len(100), 200);
+        assert_eq!(Algo1d::NPoint.fft_len(100), 100);
+    }
+
+    #[test]
+    fn linearity() {
+        forall(20, sizes(2, 64), |rng, &n| {
+            let x = rng.normal_vec(n);
+            let y = rng.normal_vec(n);
+            let plan = Dct1d::new(n, Algo1d::NPoint);
+            let combo: Vec<f64> =
+                x.iter().zip(&y).map(|(a, b)| 3.0 * a - 0.5 * b).collect();
+            let mut fc = vec![0.0; n];
+            plan.forward(&combo, &mut fc);
+            let mut fx = vec![0.0; n];
+            plan.forward(&x, &mut fx);
+            let mut fy = vec![0.0; n];
+            plan.forward(&y, &mut fy);
+            let want: Vec<f64> =
+                fx.iter().zip(&fy).map(|(a, b)| 3.0 * a - 0.5 * b).collect();
+            check_close(&fc, &want, 1e-9)
+        });
+    }
+}

@@ -1,0 +1,311 @@
+//! Fused 2D DCT / IDCT — the paper's headline contribution (Algorithm 2 +
+//! the §III-B efficient postprocessing).
+//!
+//! Forward:  Eq. (13) fused reorder -> 2D RFFT -> paired-quadrant combine
+//!           (4 outputs per 2 onesided-spectrum reads, Eqs. 17/18).
+//! Inverse:  onesided Hermitian spectrum build (corrected Eq. 15, 4 reads
+//!           per entry) -> 2D IRFFT -> Eq. (16) unreorder.
+//!
+//! Only 3 full-matrix memory stages per transform vs. the row-column
+//! method's 8 (Fig. 5) — that is the entire speedup story, reproduced by
+//! `benches/table5_2d_dct.rs`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::fft::{onesided_len, C64, Rfft2Plan};
+
+use super::reorder::{reorder_2d_scatter, unreorder_2d};
+use super::twiddle::{twiddle, Twiddle};
+use crate::util::scratch;
+
+/// Per-stage wall-clock breakdown (Figure 6).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageTimes {
+    pub pre: f64,
+    pub fft: f64,
+    pub post: f64,
+}
+
+impl StageTimes {
+    pub fn total(&self) -> f64 {
+        self.pre + self.fft + self.post
+    }
+}
+
+/// Fused 2D DCT plan.
+#[derive(Debug, Clone)]
+pub struct Dct2 {
+    pub n1: usize,
+    pub n2: usize,
+    h2: usize,
+    rfft2: Rfft2Plan,
+    tw1: Arc<Twiddle>,
+    tw2: Arc<Twiddle>,
+}
+
+impl Dct2 {
+    pub fn new(n1: usize, n2: usize) -> Dct2 {
+        Dct2 {
+            n1,
+            n2,
+            h2: onesided_len(n2),
+            rfft2: Rfft2Plan::new(n1, n2),
+            tw1: twiddle(n1),
+            tw2: twiddle(n2),
+        }
+    }
+
+    /// Compute the 2D DCT of row-major `x` into `out`.
+    pub fn forward(&self, x: &[f64], out: &mut [f64]) {
+        self.forward_timed(x, out);
+    }
+
+    /// Forward transform returning the per-stage breakdown (Fig. 6).
+    pub fn forward_timed(&self, x: &[f64], out: &mut [f64]) -> StageTimes {
+        let (n1, n2, h2) = (self.n1, self.n2, self.h2);
+        assert_eq!(x.len(), n1 * n2);
+        assert_eq!(out.len(), n1 * n2);
+
+        let t0 = Instant::now();
+        let mut pre = scratch::take_f64(n1 * n2);
+        reorder_2d_scatter(x, &mut pre, n1, n2);
+        let t1 = Instant::now();
+        let mut spec = scratch::take_c64(n1 * h2);
+        self.rfft2.forward(&pre, &mut spec);
+        let t2 = Instant::now();
+        self.postprocess(&spec, out);
+        let t3 = Instant::now();
+        scratch::give_f64(pre);
+        scratch::give_c64(spec);
+        StageTimes {
+            pre: (t1 - t0).as_secs_f64(),
+            fft: (t2 - t1).as_secs_f64(),
+            post: (t3 - t2).as_secs_f64(),
+        }
+    }
+
+    /// Efficient postprocess (§III-B): row pairs (k1, N1-k1); each
+    /// iteration reads V(k1,k2) and V(m1,k2) once and writes the four
+    /// outputs y(k1,k2), y(m1,k2), y(k1,N2-k2), y(m1,N2-k2).
+    ///
+    /// Derivation (validated against the direct oracle): with
+    ///   P = a b V1,  Q = a conj(b) conj(V2),
+    ///   R = conj(a b-bar) V2 = conj(a) b V2,  S = conj(a b) conj(V1),
+    ///   y(k1,  k2)    =  2 Re(P + Q)
+    ///   y(k1,  N2-k2) = -2 Im(P - Q)
+    ///   y(m1,  k2)    =  2 Im(R + S)
+    ///   y(m1,  N2-k2) =  2 Re(R - S)
+    pub fn postprocess(&self, spec: &[C64], out: &mut [f64]) {
+        let (n1, n2, h2) = (self.n1, self.n2, self.h2);
+        for k1 in 0..=n1 / 2 {
+            let m1 = (n1 - k1) % n1;
+            let a = self.tw1.at(k1);
+            let row1 = k1 * h2;
+            let row2 = m1 * h2;
+            for k2 in 0..h2 {
+                let b = self.tw2.at(k2);
+                let ab = a * b;
+                let abc = a * b.conj();
+                let v1 = spec[row1 + k2];
+                let v2 = spec[row2 + k2];
+                let p = ab * v1;
+                let q = abc * v2.conj();
+                out[k1 * n2 + k2] = 2.0 * (p.re + q.re);
+                let k2r = n2 - k2; // right-half partner column
+                let has_col = k2 > 0 && k2r != k2;
+                if has_col {
+                    out[k1 * n2 + k2r] = -2.0 * (p.im - q.im);
+                }
+                if m1 != k1 {
+                    let r = abc.conj() * v2;
+                    let s = ab.conj() * v1.conj();
+                    out[m1 * n2 + k2] = 2.0 * (r.im + s.im);
+                    if has_col {
+                        out[m1 * n2 + k2r] = 2.0 * (r.re - s.re);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Naive postprocess (Table III's comparison row): one independent
+    /// "thread" per output element, each re-reading its two spectrum
+    /// entries and redoing the full twiddle math.
+    pub fn postprocess_naive(&self, spec: &[C64], out: &mut [f64]) {
+        let (n1, n2, h2) = (self.n1, self.n2, self.h2);
+        let read = |k1: usize, k2: usize| -> C64 {
+            // onesided accessor with Hermitian reconstruction
+            if k2 < h2 {
+                spec[k1 * h2 + k2]
+            } else {
+                spec[((n1 - k1) % n1) * h2 + (n2 - k2)].conj()
+            }
+        };
+        for k1 in 0..n1 {
+            let a = self.tw1.at(k1);
+            let m1 = (n1 - k1) % n1;
+            for k2 in 0..n2 {
+                let b = self.tw2.at(k2);
+                let v1 = read(k1, k2);
+                let v2 = read(m1, k2).conj();
+                out[k1 * n2 + k2] = 2.0 * (a * (b * v1 + b.conj() * v2)).re;
+            }
+        }
+    }
+}
+
+/// Fused 2D IDCT plan.
+#[derive(Debug, Clone)]
+pub struct Idct2 {
+    pub n1: usize,
+    pub n2: usize,
+    h2: usize,
+    rfft2: Rfft2Plan,
+    tw1: Arc<Twiddle>,
+    tw2: Arc<Twiddle>,
+}
+
+impl Idct2 {
+    pub fn new(n1: usize, n2: usize) -> Idct2 {
+        Idct2 {
+            n1,
+            n2,
+            h2: onesided_len(n2),
+            rfft2: Rfft2Plan::new(n1, n2),
+            tw1: twiddle(n1),
+            tw2: twiddle(n2),
+        }
+    }
+
+    pub fn forward(&self, x: &[f64], out: &mut [f64]) {
+        self.forward_timed(x, out);
+    }
+
+    /// Inverse transform with the per-stage breakdown.
+    pub fn forward_timed(&self, x: &[f64], out: &mut [f64]) -> StageTimes {
+        let (n1, n2, h2) = (self.n1, self.n2, self.h2);
+        assert_eq!(x.len(), n1 * n2);
+        assert_eq!(out.len(), n1 * n2);
+
+        let t0 = Instant::now();
+        let mut spec = scratch::take_c64(n1 * h2);
+        self.preprocess(x, &mut spec);
+        let t1 = Instant::now();
+        let mut v = scratch::take_f64(n1 * n2);
+        self.rfft2.inverse(&spec, &mut v);
+        let t2 = Instant::now();
+        unreorder_2d(&v, out, n1, n2);
+        let t3 = Instant::now();
+        scratch::give_c64(spec);
+        scratch::give_f64(v);
+        StageTimes {
+            pre: (t1 - t0).as_secs_f64(),
+            fft: (t2 - t1).as_secs_f64(),
+            post: (t3 - t2).as_secs_f64(),
+        }
+    }
+
+    /// Onesided spectrum build (corrected Eq. 15): each entry reads the
+    /// four mirrored inputs x(k1,k2), x(m1,k2), x(k1,m2), x(m1,m2) with
+    /// zero boundaries, and writes one complex value:
+    ///   V = conj(a) conj(b) / 4 * ( (x11 - x22) - j (x21 + x12) )
+    pub fn preprocess(&self, x: &[f64], spec: &mut [C64]) {
+        let (n1, n2, h2) = (self.n1, self.n2, self.h2);
+        for k1 in 0..n1 {
+            let ac = self.tw1.conj_at(k1);
+            for k2 in 0..h2 {
+                let bc = self.tw2.conj_at(k2);
+                let x11 = x[k1 * n2 + k2];
+                let x21 = if k1 == 0 { 0.0 } else { x[(n1 - k1) * n2 + k2] };
+                let x12 = if k2 == 0 { 0.0 } else { x[k1 * n2 + (n2 - k2)] };
+                let x22 = if k1 == 0 || k2 == 0 {
+                    0.0
+                } else {
+                    x[(n1 - k1) * n2 + (n2 - k2)]
+                };
+                let z = C64::new(x11 - x22, -(x21 + x12));
+                spec[k1 * h2 + k2] = (ac * bc * z).scale(0.25);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dct::direct::{dct2d_direct, idct2d_direct};
+    use crate::util::prop::{check_close, forall, shapes};
+
+    #[test]
+    fn dct2_matches_direct() {
+        forall(30, shapes(1, 24), |rng, &(n1, n2)| {
+            let x = rng.normal_vec(n1 * n2);
+            let plan = Dct2::new(n1, n2);
+            let mut out = vec![0.0; n1 * n2];
+            plan.forward(&x, &mut out);
+            check_close(&out, &dct2d_direct(&x, n1, n2), 1e-9)
+        });
+    }
+
+    #[test]
+    fn idct2_matches_direct() {
+        forall(30, shapes(1, 24), |rng, &(n1, n2)| {
+            let x = rng.normal_vec(n1 * n2);
+            let plan = Idct2::new(n1, n2);
+            let mut out = vec![0.0; n1 * n2];
+            plan.forward(&x, &mut out);
+            check_close(&out, &idct2d_direct(&x, n1, n2), 1e-9)
+        });
+    }
+
+    #[test]
+    fn roundtrip_identity() {
+        forall(20, shapes(1, 32), |rng, &(n1, n2)| {
+            let x = rng.normal_vec(n1 * n2);
+            let mut y = vec![0.0; n1 * n2];
+            Dct2::new(n1, n2).forward(&x, &mut y);
+            let mut back = vec![0.0; n1 * n2];
+            Idct2::new(n1, n2).forward(&y, &mut back);
+            check_close(&back, &x, 1e-9)
+        });
+    }
+
+    #[test]
+    fn efficient_equals_naive_postprocess() {
+        forall(20, shapes(2, 24), |rng, &(n1, n2)| {
+            let x = rng.normal_vec(n1 * n2);
+            let plan = Dct2::new(n1, n2);
+            let mut pre = vec![0.0; n1 * n2];
+            super::super::reorder::reorder_2d_scatter(&x, &mut pre, n1, n2);
+            let mut spec = vec![C64::default(); n1 * onesided_len(n2)];
+            plan.rfft2.forward(&pre, &mut spec);
+            let mut a = vec![0.0; n1 * n2];
+            let mut b = vec![0.0; n1 * n2];
+            plan.postprocess(&spec, &mut a);
+            plan.postprocess_naive(&spec, &mut b);
+            check_close(&a, &b, 1e-10)
+        });
+    }
+
+    #[test]
+    fn stage_times_are_populated() {
+        let (n1, n2) = (64, 64);
+        let x = vec![1.0; n1 * n2];
+        let mut out = vec![0.0; n1 * n2];
+        let t = Dct2::new(n1, n2).forward_timed(&x, &mut out);
+        assert!(t.pre >= 0.0 && t.fft > 0.0 && t.post >= 0.0);
+        assert!(t.total() > 0.0);
+    }
+
+    #[test]
+    fn constant_input_concentrates_dc() {
+        let (n1, n2) = (8, 8);
+        let x = vec![1.0; n1 * n2];
+        let mut y = vec![0.0; n1 * n2];
+        Dct2::new(n1, n2).forward(&x, &mut y);
+        assert!((y[0] - 4.0 * (n1 * n2) as f64).abs() < 1e-9);
+        let rest: f64 = y[1..].iter().map(|v| v.abs()).sum();
+        assert!(rest < 1e-8, "non-DC energy {rest}");
+    }
+}

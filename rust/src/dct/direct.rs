@@ -1,0 +1,202 @@
+//! Direct O(N^2) transforms — the in-Rust oracle (mirrors python ref.py)
+//! and the "unoptimized library baseline" stand-in for Table V's MATLAB
+//! column.
+//!
+//! Conventions match DESIGN.md:
+//!   dct(x)[k]  = 2 sum_n x[n] cos(pi k (2n+1) / 2N)
+//!   idct       = exact inverse of dct
+//!   idxst(x)_k = (-1)^k idct({x[N-n]})_k, x[N] := 0
+
+/// Direct 1D DCT-II along a slice.
+pub fn dct1d_direct(x: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    let mut out = vec![0.0; n];
+    for (k, o) in out.iter_mut().enumerate() {
+        let mut acc = 0.0;
+        for (m, &v) in x.iter().enumerate() {
+            acc += v
+                * (std::f64::consts::PI * k as f64 * (2 * m + 1) as f64
+                    / (2.0 * n as f64))
+                    .cos();
+        }
+        *o = 2.0 * acc;
+    }
+    out
+}
+
+/// Direct 1D inverse DCT.
+pub fn idct1d_direct(x: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    let mut out = vec![0.0; n];
+    for (k, o) in out.iter_mut().enumerate() {
+        let mut acc = x[0];
+        for (m, &v) in x.iter().enumerate().skip(1) {
+            acc += 2.0
+                * v
+                * (std::f64::consts::PI * m as f64 * (2 * k + 1) as f64
+                    / (2.0 * n as f64))
+                    .cos();
+        }
+        *o = acc / (2.0 * n as f64);
+    }
+    out
+}
+
+/// Direct 1D IDXST (paper Eq. 21).
+pub fn idxst1d_direct(x: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    let mut shifted = vec![0.0; n];
+    for i in 1..n {
+        shifted[i] = x[n - i];
+    }
+    let mut y = idct1d_direct(&shifted);
+    for (k, v) in y.iter_mut().enumerate() {
+        if k % 2 == 1 {
+            *v = -*v;
+        }
+    }
+    y
+}
+
+fn apply_rows(f: impl Fn(&[f64]) -> Vec<f64>, x: &[f64], n1: usize, n2: usize) -> Vec<f64> {
+    let mut out = vec![0.0; n1 * n2];
+    for r in 0..n1 {
+        out[r * n2..(r + 1) * n2].copy_from_slice(&f(&x[r * n2..(r + 1) * n2]));
+    }
+    out
+}
+
+fn apply_cols(f: impl Fn(&[f64]) -> Vec<f64>, x: &[f64], n1: usize, n2: usize) -> Vec<f64> {
+    let mut out = vec![0.0; n1 * n2];
+    let mut col = vec![0.0; n1];
+    for c in 0..n2 {
+        for r in 0..n1 {
+            col[r] = x[r * n2 + c];
+        }
+        let y = f(&col);
+        for r in 0..n1 {
+            out[r * n2 + c] = y[r];
+        }
+    }
+    out
+}
+
+/// Direct separable 2D DCT (rows then columns).
+pub fn dct2d_direct(x: &[f64], n1: usize, n2: usize) -> Vec<f64> {
+    apply_cols(dct1d_direct, &apply_rows(dct1d_direct, x, n1, n2), n1, n2)
+}
+
+/// Direct separable 2D IDCT.
+pub fn idct2d_direct(x: &[f64], n1: usize, n2: usize) -> Vec<f64> {
+    apply_cols(idct1d_direct, &apply_rows(idct1d_direct, x, n1, n2), n1, n2)
+}
+
+/// Direct IDCT_IDXST (IDCT along rows, IDXST along columns; Eq. 22).
+pub fn idct_idxst_direct(x: &[f64], n1: usize, n2: usize) -> Vec<f64> {
+    apply_cols(idxst1d_direct, &apply_rows(idct1d_direct, x, n1, n2), n1, n2)
+}
+
+/// Direct IDXST_IDCT (IDXST along rows, IDCT along columns; Eq. 22).
+pub fn idxst_idct_direct(x: &[f64], n1: usize, n2: usize) -> Vec<f64> {
+    apply_cols(idct1d_direct, &apply_rows(idxst1d_direct, x, n1, n2), n1, n2)
+}
+
+/// Direct separable 3D DCT (oracle for the 3D extension).
+pub fn dct3d_direct(x: &[f64], n1: usize, n2: usize, n3: usize) -> Vec<f64> {
+    // along dim 3
+    let mut a = vec![0.0; n1 * n2 * n3];
+    for s in 0..n1 * n2 {
+        a[s * n3..(s + 1) * n3].copy_from_slice(&dct1d_direct(&x[s * n3..(s + 1) * n3]));
+    }
+    // along dim 2
+    let mut b = vec![0.0; n1 * n2 * n3];
+    let mut buf = vec![0.0; n2];
+    for i in 0..n1 {
+        for c in 0..n3 {
+            for j in 0..n2 {
+                buf[j] = a[(i * n2 + j) * n3 + c];
+            }
+            let y = dct1d_direct(&buf);
+            for j in 0..n2 {
+                b[(i * n2 + j) * n3 + c] = y[j];
+            }
+        }
+    }
+    // along dim 1
+    let mut out = vec![0.0; n1 * n2 * n3];
+    let mut buf1 = vec![0.0; n1];
+    for j in 0..n2 {
+        for c in 0..n3 {
+            for i in 0..n1 {
+                buf1[i] = b[(i * n2 + j) * n3 + c];
+            }
+            let y = dct1d_direct(&buf1);
+            for i in 0..n1 {
+                out[(i * n2 + j) * n3 + c] = y[i];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check_close;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn idct_inverts_dct() {
+        let mut rng = Rng::new(40);
+        for &n in &[1usize, 2, 5, 8, 13] {
+            let x = rng.normal_vec(n);
+            check_close(&idct1d_direct(&dct1d_direct(&x)), &x, 1e-10).unwrap();
+        }
+    }
+
+    #[test]
+    fn dct_dc_term_is_double_sum() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = dct1d_direct(&x);
+        assert!((y[0] - 20.0).abs() < 1e-12); // 2 * sum
+    }
+
+    #[test]
+    fn dct2d_separable_order_invariant() {
+        let mut rng = Rng::new(41);
+        let (n1, n2) = (6, 9);
+        let x = rng.normal_vec(n1 * n2);
+        let a = dct2d_direct(&x, n1, n2);
+        let b = apply_rows(dct1d_direct, &apply_cols(dct1d_direct, &x, n1, n2), n1, n2);
+        check_close(&a, &b, 1e-10).unwrap();
+    }
+
+    #[test]
+    fn idct2d_inverts_dct2d() {
+        let mut rng = Rng::new(42);
+        let (n1, n2) = (7, 5);
+        let x = rng.normal_vec(n1 * n2);
+        check_close(&idct2d_direct(&dct2d_direct(&x, n1, n2), n1, n2), &x, 1e-10).unwrap();
+    }
+
+    #[test]
+    fn idxst_ignores_dc_input() {
+        let mut rng = Rng::new(43);
+        let mut x = rng.normal_vec(9);
+        let a = idxst1d_direct(&x);
+        x[0] = 1e6;
+        let b = idxst1d_direct(&x);
+        check_close(&a, &b, 1e-12).unwrap();
+    }
+
+    #[test]
+    fn dct3d_dc_is_8x_sum() {
+        // X[0,0,0] = 2^3 * sum(x)
+        let mut rng = Rng::new(44);
+        let (n1, n2, n3) = (3, 4, 5);
+        let x = rng.normal_vec(n1 * n2 * n3);
+        let y = dct3d_direct(&x, n1, n2, n3);
+        let sum: f64 = x.iter().sum();
+        assert!((y[0] - 8.0 * sum).abs() < 1e-9);
+    }
+}

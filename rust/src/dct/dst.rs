@@ -1,0 +1,244 @@
+//! Discrete sine transforms via the same fused paradigm — the paper's
+//! §III-D extensibility claim ("as long as the Fourier-related transforms
+//! can be computed via FFT with preprocessing and postprocessing, they
+//! can be accelerated using our paradigm").
+//!
+//! DST-II folds onto the fused DCT-II core with O(N) pre/post work
+//! (validated against the direct sine oracle):
+//!
+//!   DST2(x)_k  = DCT2( (-1)^n x_n )_{N-1-k}
+//!   IDST(y)    = (-1)^n ⊙ IDCT( reverse(y) )        (exact inverse)
+//!
+//! and the 2D versions apply the folds on both axes around `Dct2`/`Idct2`,
+//! keeping the 3-stage memory profile (the folds fuse into the butterfly
+//! reorder's index maps; here they are separate O(N^2) passes for
+//! clarity, still a small constant against the FFT).
+
+use super::dct2d::{Dct2, Idct2};
+use super::dct1d::{Algo1d, Dct1d, Idct1d};
+
+/// Direct O(N^2) DST-II oracle: y_k = 2 sum_n x_n sin(pi(k+1)(2n+1)/2N).
+pub fn dst1d_direct(x: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    let mut out = vec![0.0; n];
+    for (k, o) in out.iter_mut().enumerate() {
+        let mut acc = 0.0;
+        for (m, &v) in x.iter().enumerate() {
+            acc += v
+                * (std::f64::consts::PI * (k + 1) as f64 * (2 * m + 1) as f64
+                    / (2.0 * n as f64))
+                    .sin();
+        }
+        *o = 2.0 * acc;
+    }
+    out
+}
+
+/// Direct separable 2D DST-II oracle.
+pub fn dst2d_direct(x: &[f64], n1: usize, n2: usize) -> Vec<f64> {
+    let mut rows = vec![0.0; n1 * n2];
+    for r in 0..n1 {
+        rows[r * n2..(r + 1) * n2].copy_from_slice(&dst1d_direct(&x[r * n2..(r + 1) * n2]));
+    }
+    let mut out = vec![0.0; n1 * n2];
+    let mut col = vec![0.0; n1];
+    for c in 0..n2 {
+        for r in 0..n1 {
+            col[r] = rows[r * n2 + c];
+        }
+        let y = dst1d_direct(&col);
+        for r in 0..n1 {
+            out[r * n2 + c] = y[r];
+        }
+    }
+    out
+}
+
+/// Fused 1D DST-II plan (folds around the N-point DCT).
+#[derive(Debug, Clone)]
+pub struct Dst1d {
+    dct: Dct1d,
+}
+
+impl Dst1d {
+    pub fn new(n: usize) -> Dst1d {
+        Dst1d { dct: Dct1d::new(n, Algo1d::NPoint) }
+    }
+
+    pub fn forward(&self, x: &[f64], out: &mut [f64]) {
+        let n = self.dct.n;
+        let mut folded = crate::util::scratch::take_f64(n);
+        for (i, (f, &v)) in folded.iter_mut().zip(x).enumerate() {
+            *f = if i % 2 == 0 { v } else { -v };
+        }
+        let mut y = crate::util::scratch::take_f64(n);
+        self.dct.forward(&folded, &mut y);
+        for k in 0..n {
+            out[k] = y[n - 1 - k];
+        }
+        crate::util::scratch::give_f64(folded);
+        crate::util::scratch::give_f64(y);
+    }
+}
+
+/// Fused 1D inverse DST plan (exact inverse of [`Dst1d`]).
+#[derive(Debug, Clone)]
+pub struct Idst1d {
+    idct: Idct1d,
+}
+
+impl Idst1d {
+    pub fn new(n: usize) -> Idst1d {
+        Idst1d { idct: Idct1d::new(n) }
+    }
+
+    pub fn forward(&self, x: &[f64], out: &mut [f64]) {
+        let n = x.len();
+        let mut rev = crate::util::scratch::take_f64(n);
+        for k in 0..n {
+            rev[k] = x[n - 1 - k];
+        }
+        self.idct.forward(&rev, out);
+        for (i, o) in out.iter_mut().enumerate() {
+            if i % 2 == 1 {
+                *o = -*o;
+            }
+        }
+        crate::util::scratch::give_f64(rev);
+    }
+}
+
+/// Fused 2D DST-II plan (folds on both axes around the fused 2D DCT).
+#[derive(Debug, Clone)]
+pub struct Dst2 {
+    pub n1: usize,
+    pub n2: usize,
+    dct: Dct2,
+}
+
+impl Dst2 {
+    pub fn new(n1: usize, n2: usize) -> Dst2 {
+        Dst2 { n1, n2, dct: Dct2::new(n1, n2) }
+    }
+
+    pub fn forward(&self, x: &[f64], out: &mut [f64]) {
+        let (n1, n2) = (self.n1, self.n2);
+        assert_eq!(x.len(), n1 * n2);
+        assert_eq!(out.len(), n1 * n2);
+        // input fold: checkerboard sign (-1)^{n1+n2}
+        let mut folded = crate::util::scratch::take_f64(n1 * n2);
+        for r in 0..n1 {
+            for c in 0..n2 {
+                let v = x[r * n2 + c];
+                folded[r * n2 + c] = if (r + c) % 2 == 0 { v } else { -v };
+            }
+        }
+        let mut y = crate::util::scratch::take_f64(n1 * n2);
+        self.dct.forward(&folded, &mut y);
+        // output fold: reverse both axes
+        for r in 0..n1 {
+            for c in 0..n2 {
+                out[r * n2 + c] = y[(n1 - 1 - r) * n2 + (n2 - 1 - c)];
+            }
+        }
+        crate::util::scratch::give_f64(folded);
+        crate::util::scratch::give_f64(y);
+    }
+}
+
+/// Fused 2D inverse DST plan.
+#[derive(Debug, Clone)]
+pub struct Idst2 {
+    pub n1: usize,
+    pub n2: usize,
+    idct: Idct2,
+}
+
+impl Idst2 {
+    pub fn new(n1: usize, n2: usize) -> Idst2 {
+        Idst2 { n1, n2, idct: Idct2::new(n1, n2) }
+    }
+
+    pub fn forward(&self, x: &[f64], out: &mut [f64]) {
+        let (n1, n2) = (self.n1, self.n2);
+        assert_eq!(x.len(), n1 * n2);
+        assert_eq!(out.len(), n1 * n2);
+        let mut rev = crate::util::scratch::take_f64(n1 * n2);
+        for r in 0..n1 {
+            for c in 0..n2 {
+                rev[r * n2 + c] = x[(n1 - 1 - r) * n2 + (n2 - 1 - c)];
+            }
+        }
+        self.idct.forward(&rev, out);
+        for r in 0..n1 {
+            for c in 0..n2 {
+                if (r + c) % 2 == 1 {
+                    out[r * n2 + c] = -out[r * n2 + c];
+                }
+            }
+        }
+        crate::util::scratch::give_f64(rev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check_close, forall, shapes, sizes};
+
+    #[test]
+    fn dst1d_matches_direct() {
+        forall(40, sizes(1, 80), |rng, &n| {
+            let x = rng.normal_vec(n);
+            let mut out = vec![0.0; n];
+            Dst1d::new(n).forward(&x, &mut out);
+            check_close(&out, &dst1d_direct(&x), 1e-9)
+        });
+    }
+
+    #[test]
+    fn idst1d_inverts() {
+        forall(40, sizes(1, 80), |rng, &n| {
+            let x = rng.normal_vec(n);
+            let mut y = vec![0.0; n];
+            Dst1d::new(n).forward(&x, &mut y);
+            let mut back = vec![0.0; n];
+            Idst1d::new(n).forward(&y, &mut back);
+            check_close(&back, &x, 1e-9)
+        });
+    }
+
+    #[test]
+    fn dst2d_matches_direct() {
+        forall(25, shapes(1, 20), |rng, &(n1, n2)| {
+            let x = rng.normal_vec(n1 * n2);
+            let mut out = vec![0.0; n1 * n2];
+            Dst2::new(n1, n2).forward(&x, &mut out);
+            check_close(&out, &dst2d_direct(&x, n1, n2), 1e-9)
+        });
+    }
+
+    #[test]
+    fn idst2d_inverts() {
+        forall(25, shapes(1, 24), |rng, &(n1, n2)| {
+            let x = rng.normal_vec(n1 * n2);
+            let mut y = vec![0.0; n1 * n2];
+            Dst2::new(n1, n2).forward(&x, &mut y);
+            let mut back = vec![0.0; n1 * n2];
+            Idst2::new(n1, n2).forward(&y, &mut back);
+            check_close(&back, &x, 1e-9)
+        });
+    }
+
+    #[test]
+    fn dst_dc_free_for_constant_input() {
+        // a constant signal has no energy in the *even* sine modes only;
+        // check the known closed form for k = N-1 (the highest mode)
+        let n = 8;
+        let x = vec![1.0; n];
+        let mut y = vec![0.0; n];
+        Dst1d::new(n).forward(&x, &mut y);
+        let direct = dst1d_direct(&x);
+        check_close(&y, &direct, 1e-10).unwrap();
+    }
+}

@@ -1,0 +1,35 @@
+//! The paper's transform library: fused three-stage MD DCT/IDCT/IDXST,
+//! the four 1D algorithms, the row-column baseline, and the direct
+//! O(N^2) oracle.
+//!
+//! | paper concept | module |
+//! |---|---|
+//! | Algorithm 1 (four 1D DCTs via FFT) | [`dct1d`] |
+//! | Algorithm 2 (fused 2D DCT/IDCT) + §III-B postprocess | [`dct2d`] |
+//! | Eq. 13/16 butterfly reorders, gather/scatter (§III-A) | [`reorder`] |
+//! | IDXST / IDCT_IDXST / IDXST_IDCT (§V-B) | [`idxst2d`] |
+//! | Row-column baseline (Fig. 5 left) | [`row_column`] |
+//! | 3D extension (§III-D) | [`dct3d`] |
+//! | 4D via two rounds of 2D (§III-D) | [`dct4d`] |
+//! | DST family via folds (§III-D extensibility) | [`dst`] |
+//! | Direct O(N^2) oracle / MATLAB stand-in | [`direct`] |
+//! | Precomputed twiddles (texture-cache analogue) | [`twiddle`] |
+
+pub mod dct1d;
+pub mod dct2d;
+pub mod dct3d;
+pub mod dct4d;
+pub mod direct;
+pub mod dst;
+pub mod idxst2d;
+pub mod reorder;
+pub mod row_column;
+pub mod twiddle;
+
+pub use dct1d::{Algo1d, Dct1d, Idct1d, Idxst1d};
+pub use dct2d::{Dct2, Idct2, StageTimes};
+pub use dct3d::Dct3d;
+pub use dct4d::Dct4d;
+pub use dst::{Dst1d, Dst2, Idst1d, Idst2};
+pub use idxst2d::{Combo, IdxstCombo};
+pub use row_column::RowColumn;

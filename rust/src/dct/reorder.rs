@@ -1,0 +1,170 @@
+//! Butterfly (even/odd) reorderings — the paper's preprocessing stage
+//! (Eq. 9 / Eq. 13) in both *gather* and *scatter* traversal orders
+//! (paper §III-A, Fig. 3, Table II).
+//!
+//! On a GPU the two orders trade coalesced reads for coalesced writes; on
+//! a CPU they trade sequential reads for sequential writes. Both are
+//! exposed so `benches/table2_gather_scatter.rs` can reproduce Table II's
+//! observation that they perform the same; the library default is scatter
+//! (sequential reads), matching the paper's choice.
+
+/// 1D butterfly reorder source index: v[i] = x[src_index_1d(i, n)].
+#[inline(always)]
+pub fn src_index_1d(i: usize, n: usize) -> usize {
+    let half = (n + 1) / 2; // ceil(n/2) entries come from even positions
+    if i < half {
+        2 * i
+    } else {
+        2 * (n - i) - 1
+    }
+}
+
+/// 1D butterfly destination index: v[dst_index_1d(i, n)] = x[i].
+#[inline(always)]
+pub fn dst_index_1d(i: usize, n: usize) -> usize {
+    if i % 2 == 0 {
+        i / 2
+    } else {
+        n - (i + 1) / 2
+    }
+}
+
+/// 1D reorder, gather order (loop over outputs; sequential writes).
+pub fn reorder_1d_gather(x: &[f64], out: &mut [f64]) {
+    let n = x.len();
+    debug_assert_eq!(out.len(), n);
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = x[src_index_1d(i, n)];
+    }
+}
+
+/// 1D reorder, scatter order (loop over inputs; sequential reads).
+pub fn reorder_1d_scatter(x: &[f64], out: &mut [f64]) {
+    let n = x.len();
+    debug_assert_eq!(out.len(), n);
+    for (i, &v) in x.iter().enumerate() {
+        out[dst_index_1d(i, n)] = v;
+    }
+}
+
+/// Inverse 1D reorder (Eq. 16 restricted to one axis).
+pub fn unreorder_1d(v: &[f64], out: &mut [f64]) {
+    let n = v.len();
+    debug_assert_eq!(out.len(), n);
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = v[dst_index_1d(i, n)];
+    }
+}
+
+/// 2D fused butterfly reorder (Eq. 13), gather order: one pass over the
+/// output matrix, reading x[src1][src2].
+pub fn reorder_2d_gather(x: &[f64], out: &mut [f64], n1: usize, n2: usize) {
+    debug_assert_eq!(x.len(), n1 * n2);
+    debug_assert_eq!(out.len(), n1 * n2);
+    for r in 0..n1 {
+        let sr = src_index_1d(r, n1);
+        let dst = &mut out[r * n2..(r + 1) * n2];
+        let src = &x[sr * n2..(sr + 1) * n2];
+        for (c, d) in dst.iter_mut().enumerate() {
+            *d = src[src_index_1d(c, n2)];
+        }
+    }
+}
+
+/// 2D fused butterfly reorder (Eq. 13), scatter order: one pass over the
+/// input matrix, writing out[dst1][dst2]. Sequential reads, strided
+/// writes — the order the paper adopts.
+pub fn reorder_2d_scatter(x: &[f64], out: &mut [f64], n1: usize, n2: usize) {
+    debug_assert_eq!(x.len(), n1 * n2);
+    debug_assert_eq!(out.len(), n1 * n2);
+    for r in 0..n1 {
+        let dr = dst_index_1d(r, n1);
+        let src = &x[r * n2..(r + 1) * n2];
+        let dst = &mut out[dr * n2..(dr + 1) * n2];
+        for (c, &v) in src.iter().enumerate() {
+            dst[dst_index_1d(c, n2)] = v;
+        }
+    }
+}
+
+/// Inverse of the 2D reorder (Eq. 16): y[r][c] = v[dst1(r)][dst2(c)].
+pub fn unreorder_2d(v: &[f64], out: &mut [f64], n1: usize, n2: usize) {
+    debug_assert_eq!(v.len(), n1 * n2);
+    debug_assert_eq!(out.len(), n1 * n2);
+    for r in 0..n1 {
+        let sr = dst_index_1d(r, n1);
+        let src = &v[sr * n2..(sr + 1) * n2];
+        let dst = &mut out[r * n2..(r + 1) * n2];
+        for (c, d) in dst.iter_mut().enumerate() {
+            *d = src[dst_index_1d(c, n2)];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, shapes, sizes};
+
+    #[test]
+    fn index_maps_are_inverse() {
+        for n in 1..64 {
+            for i in 0..n {
+                assert_eq!(dst_index_1d(src_index_1d(i, n), n), i, "n={n} i={i}");
+                assert_eq!(src_index_1d(dst_index_1d(i, n), n), i, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_equals_scatter_1d() {
+        forall(50, sizes(1, 97), |rng, &n| {
+            let x = rng.normal_vec(n);
+            let mut a = vec![0.0; n];
+            let mut b = vec![0.0; n];
+            reorder_1d_gather(&x, &mut a);
+            reorder_1d_scatter(&x, &mut b);
+            if a == b {
+                Ok(())
+            } else {
+                Err(format!("gather != scatter at n={n}"))
+            }
+        });
+    }
+
+    #[test]
+    fn matches_paper_eq9_example() {
+        // N = 8: v = [x0, x2, x4, x6, x7, x5, x3, x1]
+        let x: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        let mut v = vec![0.0; 8];
+        reorder_1d_gather(&x, &mut v);
+        assert_eq!(v, vec![0.0, 2.0, 4.0, 6.0, 7.0, 5.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn reorder_2d_is_bijective_and_orders_agree() {
+        forall(30, shapes(1, 24), |rng, &(n1, n2)| {
+            let x = rng.normal_vec(n1 * n2);
+            let mut g = vec![0.0; n1 * n2];
+            let mut s = vec![0.0; n1 * n2];
+            reorder_2d_gather(&x, &mut g, n1, n2);
+            reorder_2d_scatter(&x, &mut s, n1, n2);
+            if g != s {
+                return Err("gather != scatter".into());
+            }
+            let mut back = vec![0.0; n1 * n2];
+            unreorder_2d(&g, &mut back, n1, n2);
+            crate::util::prop::check_close(&back, &x, 0.0)
+        });
+    }
+
+    #[test]
+    fn unreorder_1d_inverts() {
+        let x: Vec<f64> = (0..13).map(|i| i as f64).collect();
+        let mut v = vec![0.0; 13];
+        let mut back = vec![0.0; 13];
+        reorder_1d_scatter(&x, &mut v);
+        unreorder_1d(&v, &mut back);
+        assert_eq!(back, x);
+    }
+}

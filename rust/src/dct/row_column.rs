@@ -1,0 +1,190 @@
+//! Row-column 2D transforms — the paper's strengthened baseline.
+//!
+//! "We implement and optimize the row-column method based on our 1D
+//! DCT/IDCT implementation, which is better than the public
+//! implementations we can find." Each 1D pass is the best (N-point)
+//! algorithm; the method still pays the 8 full-matrix memory stages of
+//! Fig. 5 (2 x (pre + FFT + post) + 2 transposes), which is what the
+//! fused path eliminates.
+
+use super::dct1d::{Algo1d, Dct1d, Idct1d, Idxst1d};
+
+/// Transpose a row-major (n1 x n2) matrix into `out` (n2 x n1).
+pub fn transpose(x: &[f64], out: &mut [f64], n1: usize, n2: usize) {
+    debug_assert_eq!(x.len(), n1 * n2);
+    debug_assert_eq!(out.len(), n1 * n2);
+    // simple blocked transpose for cache friendliness
+    const B: usize = 32;
+    for rb in (0..n1).step_by(B) {
+        for cb in (0..n2).step_by(B) {
+            for r in rb..(rb + B).min(n1) {
+                for c in cb..(cb + B).min(n2) {
+                    out[c * n1 + r] = x[r * n2 + c];
+                }
+            }
+        }
+    }
+}
+
+/// One of the supported per-axis 1D transforms.
+#[derive(Debug, Clone)]
+enum Axis1d {
+    Dct(Dct1d),
+    Idct(Idct1d),
+    Idxst(Idxst1d),
+}
+
+impl Axis1d {
+    fn n(&self) -> usize {
+        match self {
+            Axis1d::Dct(p) => p.n,
+            Axis1d::Idct(p) => p.n,
+            Axis1d::Idxst(p) => p.len(),
+        }
+    }
+
+    fn forward(&self, x: &[f64], out: &mut [f64]) {
+        match self {
+            Axis1d::Dct(p) => p.forward(x, out),
+            Axis1d::Idct(p) => p.forward(x, out),
+            Axis1d::Idxst(p) => p.forward(x, out),
+        }
+    }
+}
+
+/// Generic row-column plan: apply `row` along rows, transpose, apply
+/// `col` along (what are now) rows, transpose back.
+#[derive(Debug, Clone)]
+pub struct RowColumn {
+    pub n1: usize,
+    pub n2: usize,
+    row: Axis1d,
+    col: Axis1d,
+}
+
+impl RowColumn {
+    /// Row-column 2D DCT.
+    pub fn dct2(n1: usize, n2: usize) -> RowColumn {
+        RowColumn {
+            n1,
+            n2,
+            row: Axis1d::Dct(Dct1d::new(n2, Algo1d::NPoint)),
+            col: Axis1d::Dct(Dct1d::new(n1, Algo1d::NPoint)),
+        }
+    }
+
+    /// Row-column 2D IDCT.
+    pub fn idct2(n1: usize, n2: usize) -> RowColumn {
+        RowColumn {
+            n1,
+            n2,
+            row: Axis1d::Idct(Idct1d::new(n2)),
+            col: Axis1d::Idct(Idct1d::new(n1)),
+        }
+    }
+
+    /// Row-column IDCT_IDXST (1D IDCT rows, 1D IDXST cols).
+    pub fn idct_idxst(n1: usize, n2: usize) -> RowColumn {
+        RowColumn {
+            n1,
+            n2,
+            row: Axis1d::Idct(Idct1d::new(n2)),
+            col: Axis1d::Idxst(Idxst1d::new(n1)),
+        }
+    }
+
+    /// Row-column IDXST_IDCT (1D IDXST rows, 1D IDCT cols).
+    pub fn idxst_idct(n1: usize, n2: usize) -> RowColumn {
+        RowColumn {
+            n1,
+            n2,
+            row: Axis1d::Idxst(Idxst1d::new(n2)),
+            col: Axis1d::Idct(Idct1d::new(n1)),
+        }
+    }
+
+    /// Execute the row-column pipeline (8 full-matrix memory stages).
+    pub fn forward(&self, x: &[f64], out: &mut [f64]) {
+        let (n1, n2) = (self.n1, self.n2);
+        assert_eq!(x.len(), n1 * n2);
+        assert_eq!(out.len(), n1 * n2);
+        debug_assert_eq!(self.row.n(), n2);
+        debug_assert_eq!(self.col.n(), n1);
+        // pass 1: 1D transform along each row
+        let mut a = vec![0.0; n1 * n2];
+        for r in 0..n1 {
+            self.row.forward(&x[r * n2..(r + 1) * n2], &mut a[r * n2..(r + 1) * n2]);
+        }
+        // transpose
+        let mut at = vec![0.0; n1 * n2];
+        transpose(&a, &mut at, n1, n2);
+        // pass 2: 1D transform along each (former) column
+        let mut b = vec![0.0; n1 * n2];
+        for r in 0..n2 {
+            self.col.forward(&at[r * n1..(r + 1) * n1], &mut b[r * n1..(r + 1) * n1]);
+        }
+        // transpose back
+        transpose(&b, out, n2, n1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dct::dct2d::{Dct2, Idct2};
+    use crate::dct::direct::{
+        dct2d_direct, idct2d_direct, idct_idxst_direct, idxst_idct_direct,
+    };
+    use crate::util::prop::{check_close, forall, shapes};
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = crate::util::rng::Rng::new(60);
+        let (n1, n2) = (13, 37);
+        let x = rng.normal_vec(n1 * n2);
+        let mut t = vec![0.0; n1 * n2];
+        let mut back = vec![0.0; n1 * n2];
+        transpose(&x, &mut t, n1, n2);
+        transpose(&t, &mut back, n2, n1);
+        assert_eq!(back, x);
+    }
+
+    #[test]
+    fn rc_dct_matches_direct_and_fused() {
+        forall(25, shapes(1, 20), |rng, &(n1, n2)| {
+            let x = rng.normal_vec(n1 * n2);
+            let mut rc = vec![0.0; n1 * n2];
+            RowColumn::dct2(n1, n2).forward(&x, &mut rc);
+            check_close(&rc, &dct2d_direct(&x, n1, n2), 1e-9)?;
+            let mut fused = vec![0.0; n1 * n2];
+            Dct2::new(n1, n2).forward(&x, &mut fused);
+            check_close(&rc, &fused, 1e-9)
+        });
+    }
+
+    #[test]
+    fn rc_idct_matches_direct_and_fused() {
+        forall(25, shapes(1, 20), |rng, &(n1, n2)| {
+            let x = rng.normal_vec(n1 * n2);
+            let mut rc = vec![0.0; n1 * n2];
+            RowColumn::idct2(n1, n2).forward(&x, &mut rc);
+            check_close(&rc, &idct2d_direct(&x, n1, n2), 1e-9)?;
+            let mut fused = vec![0.0; n1 * n2];
+            Idct2::new(n1, n2).forward(&x, &mut fused);
+            check_close(&rc, &fused, 1e-9)
+        });
+    }
+
+    #[test]
+    fn rc_combos_match_direct() {
+        forall(20, shapes(1, 16), |rng, &(n1, n2)| {
+            let x = rng.normal_vec(n1 * n2);
+            let mut a = vec![0.0; n1 * n2];
+            RowColumn::idct_idxst(n1, n2).forward(&x, &mut a);
+            check_close(&a, &idct_idxst_direct(&x, n1, n2), 1e-9)?;
+            let mut b = vec![0.0; n1 * n2];
+            RowColumn::idxst_idct(n1, n2).forward(&x, &mut b);
+            check_close(&b, &idxst_idct_direct(&x, n1, n2), 1e-9)
+        });
+    }
+}

@@ -1,0 +1,79 @@
+//! Precomputed DCT twiddle tables w(k) = e^{-j pi k / 2N}.
+//!
+//! The paper: "the terms of a and b ... are pre-computed and fixed before
+//! the call of the DCT procedures" (texture cache on the GPU). Tables are
+//! cached per size alongside the FFT plans.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use once_cell::sync::Lazy;
+
+use crate::fft::C64;
+
+/// Twiddle table for one size: w[k] = e^{-j pi k / 2n}, k = 0..n-1.
+#[derive(Debug, Clone)]
+pub struct Twiddle {
+    pub n: usize,
+    pub w: Vec<C64>,
+}
+
+impl Twiddle {
+    pub fn new(n: usize) -> Twiddle {
+        let step = -std::f64::consts::PI / (2.0 * n as f64);
+        Twiddle { n, w: (0..n).map(|k| C64::cis(step * k as f64)).collect() }
+    }
+
+    /// w[k] (the paper's `a` / `b` coefficients).
+    #[inline(always)]
+    pub fn at(&self, k: usize) -> C64 {
+        self.w[k]
+    }
+
+    /// conj(w[k]) -- the paper stores only `a` and derives `a-bar`.
+    #[inline(always)]
+    pub fn conj_at(&self, k: usize) -> C64 {
+        self.w[k].conj()
+    }
+}
+
+static TW_CACHE: Lazy<Mutex<HashMap<usize, Arc<Twiddle>>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// Fetch (or build and cache) the twiddle table for size n.
+pub fn twiddle(n: usize) -> Arc<Twiddle> {
+    let mut cache = TW_CACHE.lock().unwrap();
+    cache.entry(n).or_insert_with(|| Arc::new(Twiddle::new(n))).clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn values_on_unit_circle() {
+        let t = Twiddle::new(16);
+        for k in 0..16 {
+            assert!((t.at(k).abs() - 1.0).abs() < 1e-14);
+        }
+        assert!((t.at(0) - C64::new(1.0, 0.0)).abs() < 1e-14);
+    }
+
+    #[test]
+    fn angle_is_minus_pi_k_over_2n() {
+        let n = 8;
+        let t = Twiddle::new(n);
+        for k in 0..n {
+            let want = C64::cis(-std::f64::consts::PI * k as f64 / (2.0 * n as f64));
+            assert!((t.at(k) - want).abs() < 1e-14);
+            assert!((t.conj_at(k) - want.conj()).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn cache_shares_instances() {
+        let a = twiddle(24);
+        let b = twiddle(24);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

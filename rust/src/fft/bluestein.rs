@@ -1,0 +1,152 @@
+//! Bluestein (chirp-z) FFT for arbitrary N (the paper's "N can be any
+//! positive integer" requirement).
+//!
+//! x_k = sum_n x_n w^{nk} with w = e^{-2 pi j / N}; writing
+//! nk = (n^2 + k^2 - (k-n)^2)/2 turns the DFT into a circular convolution
+//! that we evaluate with a power-of-two radix-2 FFT of size M >= 2N-1.
+
+use super::complex::C64;
+use super::radix2::Radix2Plan;
+
+/// Precomputed Bluestein plan for one size.
+#[derive(Debug, Clone)]
+pub struct BluesteinPlan {
+    pub n: usize,
+    m: usize,
+    inner: Radix2Plan,
+    /// chirp a_n = e^{-j pi n^2 / N}
+    chirp: Vec<C64>,
+    /// FFT of the zero-padded conjugate-chirp kernel
+    kernel_fft: Vec<C64>,
+}
+
+impl BluesteinPlan {
+    pub fn new(n: usize) -> BluesteinPlan {
+        assert!(n >= 1);
+        let m = (2 * n - 1).next_power_of_two();
+        let inner = Radix2Plan::new(m);
+        // n^2 mod 2N avoids precision loss for large n
+        let chirp: Vec<C64> = (0..n)
+            .map(|i| {
+                let sq = (i * i) % (2 * n);
+                C64::cis(-std::f64::consts::PI * sq as f64 / n as f64)
+            })
+            .collect();
+        let mut kernel = vec![C64::default(); m];
+        for i in 0..n {
+            let c = chirp[i].conj();
+            kernel[i] = c;
+            if i > 0 {
+                kernel[m - i] = c;
+            }
+        }
+        inner.forward(&mut kernel);
+        BluesteinPlan { n, m, inner, chirp, kernel_fft: kernel }
+    }
+
+    /// Forward DFT (unnormalized, negative-exponent convention).
+    pub fn forward(&self, data: &mut [C64]) {
+        self.transform(data, false)
+    }
+
+    /// Inverse DFT including 1/N normalization.
+    pub fn inverse(&self, data: &mut [C64]) {
+        // IDFT(x)_k = conj(DFT(conj(x))_k) / N
+        for v in data.iter_mut() {
+            *v = v.conj();
+        }
+        self.transform(data, false);
+        let inv = 1.0 / self.n as f64;
+        for v in data.iter_mut() {
+            *v = v.conj().scale(inv);
+        }
+    }
+
+    fn transform(&self, data: &mut [C64], _invert: bool) {
+        let (n, m) = (self.n, self.m);
+        assert_eq!(data.len(), n);
+        let mut buf = crate::util::scratch::take_c64(m);
+        buf[n..].fill(C64::default());
+        for i in 0..n {
+            buf[i] = data[i] * self.chirp[i];
+        }
+        self.inner.forward(&mut buf);
+        for (b, k) in buf.iter_mut().zip(&self.kernel_fft) {
+            *b = *b * *k;
+        }
+        self.inner.inverse(&mut buf);
+        for i in 0..n {
+            data[i] = buf[i] * self.chirp[i];
+        }
+        crate::util::scratch::give_c64(buf);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::radix2::dft_naive;
+    use crate::util::rng::Rng;
+
+    fn rand_c(rng: &mut Rng, n: usize) -> Vec<C64> {
+        (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect()
+    }
+
+    #[test]
+    fn matches_naive_dft_arbitrary_n() {
+        let mut rng = Rng::new(10);
+        for &n in &[1usize, 2, 3, 5, 7, 12, 17, 100, 127, 360] {
+            let x = rand_c(&mut rng, n);
+            let mut y = x.clone();
+            BluesteinPlan::new(n).forward(&mut y);
+            let want = dft_naive(&x, false);
+            for (i, (a, b)) in y.iter().zip(&want).enumerate() {
+                assert!((*a - *b).abs() < 1e-8 * (n as f64), "n={n} idx={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn agrees_with_radix2_on_pow2() {
+        let mut rng = Rng::new(11);
+        let n = 64;
+        let x = rand_c(&mut rng, n);
+        let mut a = x.clone();
+        let mut b = x.clone();
+        BluesteinPlan::new(n).forward(&mut a);
+        crate::fft::radix2::Radix2Plan::new(n).forward(&mut b);
+        for (u, v) in a.iter().zip(&b) {
+            assert!((*u - *v).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let mut rng = Rng::new(12);
+        for &n in &[3usize, 10, 31, 100] {
+            let plan = BluesteinPlan::new(n);
+            let x = rand_c(&mut rng, n);
+            let mut y = x.clone();
+            plan.forward(&mut y);
+            plan.inverse(&mut y);
+            for (u, v) in y.iter().zip(&x) {
+                assert!((*u - *v).abs() < 1e-9, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn prime_sizes() {
+        let mut rng = Rng::new(13);
+        for &n in &[101usize, 257, 509] {
+            let plan = BluesteinPlan::new(n);
+            let x = rand_c(&mut rng, n);
+            let mut y = x.clone();
+            plan.forward(&mut y);
+            plan.inverse(&mut y);
+            for (u, v) in y.iter().zip(&x) {
+                assert!((*u - *v).abs() < 1e-8, "n={n}");
+            }
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! Double-precision complex numbers (num-complex substitute).
+
+use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// A complex number with f64 components.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+pub const ZERO: C64 = C64 { re: 0.0, im: 0.0 };
+pub const ONE: C64 = C64 { re: 1.0, im: 0.0 };
+
+impl C64 {
+    #[inline(always)]
+    pub fn new(re: f64, im: f64) -> C64 {
+        C64 { re, im }
+    }
+
+    /// e^{j theta}
+    #[inline(always)]
+    pub fn cis(theta: f64) -> C64 {
+        let (s, c) = theta.sin_cos();
+        C64 { re: c, im: s }
+    }
+
+    #[inline(always)]
+    pub fn conj(self) -> C64 {
+        C64 { re: self.re, im: -self.im }
+    }
+
+    #[inline(always)]
+    pub fn norm_sqr(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    pub fn abs(self) -> f64 {
+        self.norm_sqr().sqrt()
+    }
+
+    /// Multiply by j (90° rotation) without multiplications.
+    #[inline(always)]
+    pub fn mul_j(self) -> C64 {
+        C64 { re: -self.im, im: self.re }
+    }
+
+    /// Scale by a real factor.
+    #[inline(always)]
+    pub fn scale(self, s: f64) -> C64 {
+        C64 { re: self.re * s, im: self.im * s }
+    }
+}
+
+impl Add for C64 {
+    type Output = C64;
+    #[inline(always)]
+    fn add(self, o: C64) -> C64 {
+        C64 { re: self.re + o.re, im: self.im + o.im }
+    }
+}
+
+impl Sub for C64 {
+    type Output = C64;
+    #[inline(always)]
+    fn sub(self, o: C64) -> C64 {
+        C64 { re: self.re - o.re, im: self.im - o.im }
+    }
+}
+
+impl Mul for C64 {
+    type Output = C64;
+    #[inline(always)]
+    fn mul(self, o: C64) -> C64 {
+        C64 {
+            re: self.re * o.re - self.im * o.im,
+            im: self.re * o.im + self.im * o.re,
+        }
+    }
+}
+
+impl Div for C64 {
+    type Output = C64;
+    #[inline(always)]
+    fn div(self, o: C64) -> C64 {
+        let d = o.norm_sqr();
+        C64 {
+            re: (self.re * o.re + self.im * o.im) / d,
+            im: (self.im * o.re - self.re * o.im) / d,
+        }
+    }
+}
+
+impl Neg for C64 {
+    type Output = C64;
+    #[inline(always)]
+    fn neg(self) -> C64 {
+        C64 { re: -self.re, im: -self.im }
+    }
+}
+
+impl AddAssign for C64 {
+    #[inline(always)]
+    fn add_assign(&mut self, o: C64) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+
+impl SubAssign for C64 {
+    #[inline(always)]
+    fn sub_assign(&mut self, o: C64) {
+        self.re -= o.re;
+        self.im -= o.im;
+    }
+}
+
+impl MulAssign for C64 {
+    #[inline(always)]
+    fn mul_assign(&mut self, o: C64) {
+        *self = *self * o;
+    }
+}
+
+impl From<f64> for C64 {
+    fn from(re: f64) -> C64 {
+        C64 { re, im: 0.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: C64, b: C64) -> bool {
+        (a.re - b.re).abs() < 1e-12 && (a.im - b.im).abs() < 1e-12
+    }
+
+    #[test]
+    fn field_ops() {
+        let a = C64::new(1.0, 2.0);
+        let b = C64::new(3.0, -1.0);
+        assert!(close(a + b, C64::new(4.0, 1.0)));
+        assert!(close(a - b, C64::new(-2.0, 3.0)));
+        assert!(close(a * b, C64::new(5.0, 5.0)));
+        assert!(close((a * b) / b, a));
+        assert!(close(-a, C64::new(-1.0, -2.0)));
+    }
+
+    #[test]
+    fn cis_and_conj() {
+        let w = C64::cis(std::f64::consts::FRAC_PI_2);
+        assert!(close(w, C64::new(0.0, 1.0)));
+        assert!(close(w.conj(), C64::new(0.0, -1.0)));
+        assert!((C64::cis(0.7).abs() - 1.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn mul_j_is_rotation() {
+        let a = C64::new(2.0, 3.0);
+        assert!(close(a.mul_j(), a * C64::new(0.0, 1.0)));
+    }
+}

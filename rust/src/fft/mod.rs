@@ -1,0 +1,19 @@
+//! Native FFT substrate (cuFFT/FFTW substitute, built from scratch).
+//!
+//! The paper's paradigm delegates the O(N log N) stage to a
+//! highly-optimized FFT library; in the native Rust backend that library
+//! is this module: radix-2 + Bluestein complex FFTs, a real-input RFFT
+//! with the even-N packing trick, 2D/3D transforms, and a process-wide
+//! plan cache.
+
+pub mod bluestein;
+pub mod complex;
+pub mod nd;
+pub mod plan;
+pub mod radix2;
+pub mod rfft;
+
+pub use complex::C64;
+pub use nd::Rfft2Plan;
+pub use plan::{cached_plan_count, plan, FftPlan};
+pub use rfft::{onesided_len, RfftPlan};

@@ -1,0 +1,242 @@
+//! Multi-dimensional FFTs over row-major matrices (the paper's "MD FFT"
+//! stage): 2D RFFT/IRFFT (rows real-to-complex, columns complex) and a 3D
+//! RFFT for the 3D-DCT extension discussed in §III-D.
+
+use super::complex::C64;
+use super::plan::plan;
+use super::rfft::{onesided_len, RfftPlan};
+
+/// 2D RFFT plan for an (n1 x n2) real matrix -> (n1 x h2) onesided spectrum.
+#[derive(Debug, Clone)]
+pub struct Rfft2Plan {
+    pub n1: usize,
+    pub n2: usize,
+    pub h2: usize,
+    row: RfftPlan,
+    col: std::sync::Arc<super::plan::FftPlan>,
+}
+
+impl Rfft2Plan {
+    pub fn new(n1: usize, n2: usize) -> Rfft2Plan {
+        Rfft2Plan {
+            n1,
+            n2,
+            h2: onesided_len(n2),
+            row: RfftPlan::new(n2),
+            col: plan(n1),
+        }
+    }
+
+    /// Forward: real row-major (n1*n2) -> complex row-major (n1*h2).
+    pub fn forward(&self, x: &[f64], out: &mut [C64]) {
+        let (n1, h2) = (self.n1, self.h2);
+        assert_eq!(x.len(), n1 * self.n2);
+        assert_eq!(out.len(), n1 * h2);
+        // rows: real FFT
+        for r in 0..n1 {
+            self.row
+                .forward(&x[r * self.n2..(r + 1) * self.n2], &mut out[r * h2..(r + 1) * h2]);
+        }
+        // columns: complex FFT along axis 0, vectorized across columns
+        // when n1 is a power of two (sequential access); fallback to
+        // column-at-a-time for Bluestein sizes.
+        match &*self.col {
+            super::plan::FftPlan::Radix2(p) => p.transform_cols(out, h2, false),
+            _ => {
+                let mut colbuf = vec![C64::default(); n1];
+                for c in 0..h2 {
+                    for r in 0..n1 {
+                        colbuf[r] = out[r * h2 + c];
+                    }
+                    self.col.forward(&mut colbuf);
+                    for r in 0..n1 {
+                        out[r * h2 + c] = colbuf[r];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Inverse: complex onesided (n1*h2) -> real (n1*n2), normalized.
+    pub fn inverse(&self, spec: &[C64], out: &mut [f64]) {
+        let (n1, h2) = (self.n1, self.h2);
+        assert_eq!(spec.len(), n1 * h2);
+        assert_eq!(out.len(), n1 * self.n2);
+        let mut work = crate::util::scratch::take_c64(spec.len());
+        work.copy_from_slice(spec);
+        match &*self.col {
+            super::plan::FftPlan::Radix2(p) => p.transform_cols(&mut work, h2, true),
+            _ => {
+                let mut colbuf = vec![C64::default(); n1];
+                for c in 0..h2 {
+                    for r in 0..n1 {
+                        colbuf[r] = work[r * h2 + c];
+                    }
+                    self.col.inverse(&mut colbuf);
+                    for r in 0..n1 {
+                        work[r * h2 + c] = colbuf[r];
+                    }
+                }
+            }
+        }
+        for r in 0..n1 {
+            self.row
+                .inverse(&work[r * h2..(r + 1) * h2], &mut out[r * self.n2..(r + 1) * self.n2]);
+        }
+        crate::util::scratch::give_c64(work);
+    }
+}
+
+/// Full complex 2D FFT (tests / odd corners); row-major in place.
+pub fn fft2_inplace(data: &mut [C64], n1: usize, n2: usize, invert: bool) {
+    assert_eq!(data.len(), n1 * n2);
+    let prow = plan(n2);
+    for r in 0..n1 {
+        let row = &mut data[r * n2..(r + 1) * n2];
+        if invert {
+            prow.inverse(row);
+        } else {
+            prow.forward(row);
+        }
+    }
+    let pcol = plan(n1);
+    let mut colbuf = vec![C64::default(); n1];
+    for c in 0..n2 {
+        for r in 0..n1 {
+            colbuf[r] = data[r * n2 + c];
+        }
+        if invert {
+            pcol.inverse(&mut colbuf);
+        } else {
+            pcol.forward(&mut colbuf);
+        }
+        for r in 0..n1 {
+            data[r * n2 + c] = colbuf[r];
+        }
+    }
+}
+
+/// 3D RFFT: (n1 x n2 x n3) real -> (n1 x n2 x h3) onesided complex.
+/// Used by the 3D-DCT extension (paper §III-D).
+pub fn rfft3(x: &[f64], n1: usize, n2: usize, n3: usize) -> Vec<C64> {
+    assert_eq!(x.len(), n1 * n2 * n3);
+    let h3 = onesided_len(n3);
+    let rp = RfftPlan::new(n3);
+    let mut out = vec![C64::default(); n1 * n2 * h3];
+    for s in 0..n1 * n2 {
+        rp.forward(&x[s * n3..(s + 1) * n3], &mut out[s * h3..(s + 1) * h3]);
+    }
+    // FFT along dim 2 (n2) then dim 1 (n1)
+    let p2 = plan(n2);
+    let mut buf2 = vec![C64::default(); n2];
+    for i in 0..n1 {
+        for c in 0..h3 {
+            for j in 0..n2 {
+                buf2[j] = out[(i * n2 + j) * h3 + c];
+            }
+            p2.forward(&mut buf2);
+            for j in 0..n2 {
+                out[(i * n2 + j) * h3 + c] = buf2[j];
+            }
+        }
+    }
+    let p1 = plan(n1);
+    let mut buf1 = vec![C64::default(); n1];
+    for j in 0..n2 {
+        for c in 0..h3 {
+            for i in 0..n1 {
+                buf1[i] = out[(i * n2 + j) * h3 + c];
+            }
+            p1.forward(&mut buf1);
+            for i in 0..n1 {
+                out[(i * n2 + j) * h3 + c] = buf1[i];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// O(N^2) 2D DFT oracle.
+    fn dft2_naive(x: &[f64], n1: usize, n2: usize) -> Vec<C64> {
+        let mut out = vec![C64::default(); n1 * n2];
+        for k1 in 0..n1 {
+            for k2 in 0..n2 {
+                let mut acc = C64::default();
+                for m1 in 0..n1 {
+                    for m2 in 0..n2 {
+                        let theta = -2.0 * std::f64::consts::PI
+                            * (k1 as f64 * m1 as f64 / n1 as f64
+                                + k2 as f64 * m2 as f64 / n2 as f64);
+                        acc += C64::cis(theta).scale(x[m1 * n2 + m2]);
+                    }
+                }
+                out[k1 * n2 + k2] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn rfft2_matches_naive() {
+        let mut rng = Rng::new(30);
+        for &(n1, n2) in &[(2usize, 2usize), (4, 4), (3, 5), (8, 6), (5, 8), (16, 16)] {
+            let x = rng.normal_vec(n1 * n2);
+            let want = dft2_naive(&x, n1, n2);
+            let plan = Rfft2Plan::new(n1, n2);
+            let mut got = vec![C64::default(); n1 * plan.h2];
+            plan.forward(&x, &mut got);
+            for r in 0..n1 {
+                for c in 0..plan.h2 {
+                    let diff = (got[r * plan.h2 + c] - want[r * n2 + c]).abs();
+                    assert!(diff < 1e-8, "({n1},{n2}) at ({r},{c}): {diff}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rfft2_roundtrip() {
+        let mut rng = Rng::new(31);
+        for &(n1, n2) in &[(4usize, 4usize), (6, 10), (5, 7), (32, 32), (16, 48)] {
+            let x = rng.normal_vec(n1 * n2);
+            let plan = Rfft2Plan::new(n1, n2);
+            let mut spec = vec![C64::default(); n1 * plan.h2];
+            plan.forward(&x, &mut spec);
+            let mut back = vec![0.0; n1 * n2];
+            plan.inverse(&spec, &mut back);
+            for (a, b) in back.iter().zip(&x) {
+                assert!((a - b).abs() < 1e-9, "({n1},{n2})");
+            }
+        }
+    }
+
+    #[test]
+    fn fft2_inplace_roundtrip() {
+        let mut rng = Rng::new(32);
+        let (n1, n2) = (8, 12);
+        let x: Vec<C64> =
+            (0..n1 * n2).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+        let mut y = x.clone();
+        fft2_inplace(&mut y, n1, n2, false);
+        fft2_inplace(&mut y, n1, n2, true);
+        for (a, b) in y.iter().zip(&x) {
+            assert!((*a - *b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn rfft3_dc_bin_is_total_sum() {
+        let mut rng = Rng::new(33);
+        let (n1, n2, n3) = (4, 6, 8);
+        let x = rng.normal_vec(n1 * n2 * n3);
+        let spec = rfft3(&x, n1, n2, n3);
+        let total: f64 = x.iter().sum();
+        assert!((spec[0].re - total).abs() < 1e-9);
+        assert!(spec[0].im.abs() < 1e-10);
+    }
+}

@@ -1,0 +1,110 @@
+//! Size-dispatching FFT plans + a process-wide plan cache.
+//!
+//! Mirrors the cuFFT/FFTW "plan" concept the paper relies on: building a
+//! plan does all trig/permutation precomputation; executing it is
+//! allocation-light. Plans are cached per size in a global table so the
+//! service hot path never rebuilds twiddles.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use once_cell::sync::Lazy;
+
+use super::bluestein::BluesteinPlan;
+use super::complex::C64;
+use super::radix2::Radix2Plan;
+
+/// A complex FFT plan for one size (radix-2 when possible, Bluestein else).
+#[derive(Debug, Clone)]
+pub enum FftPlan {
+    Radix2(Radix2Plan),
+    Bluestein(BluesteinPlan),
+}
+
+impl FftPlan {
+    pub fn new(n: usize) -> FftPlan {
+        if n.is_power_of_two() {
+            FftPlan::Radix2(Radix2Plan::new(n))
+        } else {
+            FftPlan::Bluestein(BluesteinPlan::new(n))
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            FftPlan::Radix2(p) => p.n,
+            FftPlan::Bluestein(p) => p.n,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// In-place forward DFT (unnormalized).
+    pub fn forward(&self, data: &mut [C64]) {
+        match self {
+            FftPlan::Radix2(p) => p.forward(data),
+            FftPlan::Bluestein(p) => p.forward(data),
+        }
+    }
+
+    /// In-place inverse DFT (normalized by 1/N).
+    pub fn inverse(&self, data: &mut [C64]) {
+        match self {
+            FftPlan::Radix2(p) => p.inverse(data),
+            FftPlan::Bluestein(p) => p.inverse(data),
+        }
+    }
+}
+
+static PLAN_CACHE: Lazy<Mutex<HashMap<usize, Arc<FftPlan>>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// Fetch (or build and cache) the plan for size `n`.
+pub fn plan(n: usize) -> Arc<FftPlan> {
+    let mut cache = PLAN_CACHE.lock().unwrap();
+    cache.entry(n).or_insert_with(|| Arc::new(FftPlan::new(n))).clone()
+}
+
+/// Number of cached FFT plans (metrics/introspection).
+pub fn cached_plan_count() -> usize {
+    PLAN_CACHE.lock().unwrap().len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dispatches_by_size() {
+        assert!(matches!(FftPlan::new(64), FftPlan::Radix2(_)));
+        assert!(matches!(FftPlan::new(100), FftPlan::Bluestein(_)));
+        assert_eq!(FftPlan::new(100).len(), 100);
+    }
+
+    #[test]
+    fn cache_returns_same_plan() {
+        let a = plan(48);
+        let b = plan(48);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(cached_plan_count() >= 1);
+    }
+
+    #[test]
+    fn plan_roundtrip_mixed_sizes() {
+        let mut rng = Rng::new(4);
+        for &n in &[6usize, 8, 30, 128] {
+            let p = plan(n);
+            let x: Vec<C64> =
+                (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+            let mut y = x.clone();
+            p.forward(&mut y);
+            p.inverse(&mut y);
+            for (u, v) in y.iter().zip(&x) {
+                assert!((*u - *v).abs() < 1e-9);
+            }
+        }
+    }
+}

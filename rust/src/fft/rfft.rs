@@ -1,0 +1,185 @@
+//! Real-input FFT (RFFT) and its inverse, exploiting Hermitian symmetry.
+//!
+//! For even N the classic N/2-complex packing trick halves the transform
+//! size (Sorensen et al., the optimization cuFFT's R2C path uses); odd N
+//! falls back to a full complex FFT. Output is the onesided spectrum of
+//! length H = N/2 + 1, matching cuFFT/numpy `rfft`.
+
+use std::sync::Arc;
+
+use super::complex::C64;
+use super::plan::{plan, FftPlan};
+use crate::util::scratch;
+
+/// Onesided spectrum length for a length-n real signal.
+#[inline]
+pub fn onesided_len(n: usize) -> usize {
+    n / 2 + 1
+}
+
+/// Plan for real-input FFTs of one size.
+#[derive(Debug, Clone)]
+pub struct RfftPlan {
+    pub n: usize,
+    /// half-size complex plan (even n), or full-size plan (odd n)
+    inner: Arc<FftPlan>,
+    /// split twiddles e^{-j pi k / (n/2)}... for the even-n recombination
+    twiddle: Vec<C64>,
+    even: bool,
+}
+
+impl RfftPlan {
+    pub fn new(n: usize) -> RfftPlan {
+        assert!(n >= 1);
+        let even = n % 2 == 0 && n > 1;
+        if even {
+            let half = n / 2;
+            let tw = (0..half / 2 + 1)
+                .map(|k| C64::cis(-2.0 * std::f64::consts::PI * k as f64 / n as f64))
+                .collect();
+            RfftPlan { n, inner: plan(half), twiddle: tw, even }
+        } else {
+            RfftPlan { n, inner: plan(n), twiddle: Vec::new(), even }
+        }
+    }
+
+    /// Forward RFFT: real input (len n) -> onesided spectrum (len n/2+1).
+    pub fn forward(&self, x: &[f64], out: &mut [C64]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(out.len(), onesided_len(self.n));
+        if !self.even {
+            // full complex transform of the (real) input
+            let mut buf = scratch::take_c64(self.n);
+            for (b, &r) in buf.iter_mut().zip(x) {
+                *b = C64::new(r, 0.0);
+            }
+            self.inner.forward(&mut buf);
+            out.copy_from_slice(&buf[..onesided_len(self.n)]);
+            scratch::give_c64(buf);
+            return;
+        }
+        let half = self.n / 2;
+        // pack: z[m] = x[2m] + j x[2m+1]
+        let mut z = scratch::take_c64(half);
+        for (m, zm) in z.iter_mut().enumerate() {
+            *zm = C64::new(x[2 * m], x[2 * m + 1]);
+        }
+        self.inner.forward(&mut z);
+        // unpack: X[k] = E[k] + w^k O[k]
+        //   E[k] = (Z[k] + conj(Z[h-k]))/2, O[k] = -j(Z[k] - conj(Z[h-k]))/2
+        for k in 0..=half {
+            let zk = if k == half { z[0] } else { z[k] };
+            let zc = z[(half - k) % half].conj();
+            let e = (zk + zc).scale(0.5);
+            let o = (zk - zc).mul_j().scale(-0.5);
+            out[k] = e + self.twiddle_at(k) * o;
+        }
+        scratch::give_c64(z);
+    }
+
+    fn twiddle_at(&self, k: usize) -> C64 {
+        let half = self.n / 2;
+        if k <= half / 2 {
+            self.twiddle[k]
+        } else {
+            // w^k = -conj(w^{half-k}) since w^{half} = e^{-j pi} = -1
+            -self.twiddle[half - k].conj()
+        }
+    }
+
+    /// Inverse RFFT: onesided spectrum -> real output (len n), normalized.
+    pub fn inverse(&self, spec: &[C64], out: &mut [f64]) {
+        assert_eq!(spec.len(), onesided_len(self.n));
+        assert_eq!(out.len(), self.n);
+        if !self.even {
+            // reconstruct the full Hermitian spectrum, inverse, take re
+            let n = self.n;
+            let mut buf = scratch::take_c64(n);
+            buf[..spec.len()].copy_from_slice(spec);
+            for k in spec.len()..n {
+                buf[k] = spec[n - k].conj();
+            }
+            self.inner.inverse(&mut buf);
+            for (o, b) in out.iter_mut().zip(buf.iter()) {
+                *o = b.re;
+            }
+            scratch::give_c64(buf);
+            return;
+        }
+        let half = self.n / 2;
+        // invert the unpack: Z[k] = E[k] + j w^{-k}-weighted O[k]
+        let mut z = scratch::take_c64(half);
+        for k in 0..half {
+            let xk = spec[k];
+            let xc = spec[half - k].conj();
+            let e = (xk + xc).scale(0.5);
+            let o = (xk - xc).scale(0.5) * self.twiddle_at(k).conj();
+            // z[k] = e + j*o
+            z[k] = e + o.mul_j();
+        }
+        self.inner.inverse(&mut z);
+        for m in 0..half {
+            out[2 * m] = z[m].re;
+            out[2 * m + 1] = z[m].im;
+        }
+        scratch::give_c64(z);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::radix2::dft_naive;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn forward_matches_full_dft() {
+        let mut rng = Rng::new(20);
+        for &n in &[1usize, 2, 3, 4, 5, 8, 12, 15, 16, 64, 100, 257] {
+            let x = rng.normal_vec(n);
+            let cx: Vec<C64> = x.iter().map(|&r| C64::new(r, 0.0)).collect();
+            let want = dft_naive(&cx, false);
+            let plan = RfftPlan::new(n);
+            let mut got = vec![C64::default(); onesided_len(n)];
+            plan.forward(&x, &mut got);
+            for k in 0..onesided_len(n) {
+                assert!(
+                    (got[k] - want[k]).abs() < 1e-8 * (n as f64).max(1.0),
+                    "n={n} k={k}: {:?} vs {:?}",
+                    got[k],
+                    want[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_even_and_odd() {
+        let mut rng = Rng::new(21);
+        for &n in &[2usize, 4, 6, 7, 9, 16, 33, 128, 1000] {
+            let x = rng.normal_vec(n);
+            let plan = RfftPlan::new(n);
+            let mut spec = vec![C64::default(); onesided_len(n)];
+            plan.forward(&x, &mut spec);
+            let mut back = vec![0.0; n];
+            plan.inverse(&spec, &mut back);
+            for (a, b) in back.iter().zip(&x) {
+                assert!((a - b).abs() < 1e-9, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn dc_and_nyquist_are_real() {
+        let mut rng = Rng::new(22);
+        let n = 64;
+        let x = rng.normal_vec(n);
+        let plan = RfftPlan::new(n);
+        let mut spec = vec![C64::default(); onesided_len(n)];
+        plan.forward(&x, &mut spec);
+        assert!(spec[0].im.abs() < 1e-10);
+        assert!(spec[n / 2].im.abs() < 1e-10);
+        let sum: f64 = x.iter().sum();
+        assert!((spec[0].re - sum).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,26 @@
+//! # mddct — fused multi-dimensional Fourier-related transforms
+//!
+//! Production-shaped reproduction of *"A New Acceleration Paradigm for
+//! Discrete Cosine Transform and Other Fourier-Related Transforms"*
+//! (Jiang, Gu, Pan; 2021): MD DCT/IDCT/IDXST computed as a single fused
+//! `preprocess -> MD RFFT -> postprocess` pipeline instead of the
+//! row-column method.
+//!
+//! Layers:
+//! * [`fft`]  — native FFT substrate (radix-2/Bluestein, RFFT, 2D/3D, plans)
+//! * [`dct`]  — the paper's transforms: fused three-stage + baselines
+//! * [`runtime`] — PJRT executor for the JAX/Pallas AOT artifacts
+//! * [`coordinator`] — transform service: plans, batching, workers, metrics
+//! * [`apps`] — image compression & electrostatic placement built on top
+//! * [`bench`] — harness regenerating every paper table/figure
+//! * [`util`] — offline substrates (json, rng, property testing, stats)
+
+pub mod dct;
+pub mod fft;
+pub mod util;
+// remaining layers added below as they land
+pub mod apps;
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod runtime;

@@ -1,0 +1,224 @@
+//! `mddct` — CLI for the fused multi-dimensional transform service.
+//!
+//! Subcommands:
+//!   info                          library + backend report
+//!   transform --op <op> --n1 A [--n2 B] [--seed S] [--pjrt]
+//!                                 run one transform on random data
+//!   serve --requests N [--workers W] [--pjrt]
+//!                                 throughput demo of the service loop
+//!   compress --n 512 --eps 10     whole-image compression case study
+//!   place --bench adaptec1 --iters 8
+//!                                 electrostatic placement case study
+//!   warmup                        pre-compile all PJRT artifacts
+
+use mddct::apps::{Compressor, PlacementEngine, SolverBackend, ISPD2005};
+use mddct::cli::Args;
+use mddct::coordinator::{BatchPolicy, Router, Service, ServiceConfig, TransformOp};
+use mddct::dct::Algo1d;
+use mddct::runtime::{Manifest, PjrtHandle, DEFAULT_ARTIFACT_DIR};
+use mddct::util::rng::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.command.as_deref() {
+        Some("info") | None => cmd_info(&args),
+        Some("transform") => cmd_transform(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("compress") => cmd_compress(&args),
+        Some("place") => cmd_place(&args),
+        Some("warmup") => cmd_warmup(&args),
+        Some(other) => {
+            eprintln!("unknown command '{other}'");
+            eprintln!("commands: info transform serve compress place warmup");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn parse_op(name: &str) -> Option<TransformOp> {
+    Some(match name {
+        "dct2d" => TransformOp::Dct2d,
+        "idct2d" => TransformOp::Idct2d,
+        "rc_dct2d" => TransformOp::RcDct2d,
+        "rc_idct2d" => TransformOp::RcIdct2d,
+        "dct1d" | "dct1d_n" => TransformOp::Dct1d(Algo1d::NPoint),
+        "dct1d_4n" => TransformOp::Dct1d(Algo1d::FourN),
+        "dct1d_2n_mirror" => TransformOp::Dct1d(Algo1d::Mirror2N),
+        "dct1d_2n_pad" => TransformOp::Dct1d(Algo1d::Pad2N),
+        "idct1d" => TransformOp::Idct1d,
+        "idxst1d" => TransformOp::Idxst1d,
+        "idct_idxst" => TransformOp::IdctIdxst,
+        "idxst_idct" => TransformOp::IdxstIdct,
+        "dct3d" => TransformOp::Dct3d,
+        "dst2d" => TransformOp::Dst2d,
+        "idst2d" => TransformOp::Idst2d,
+        _ => return None,
+    })
+}
+
+fn make_router(args: &Args) -> Router {
+    if args.flag_bool("pjrt") {
+        match Manifest::load(args.flag_str("artifacts", DEFAULT_ARTIFACT_DIR)) {
+            Ok(m) => {
+                let handle =
+                    PjrtHandle::spawn(args.flag_str("artifacts", DEFAULT_ARTIFACT_DIR));
+                return Router::with_pjrt(handle, &m);
+            }
+            Err(e) => eprintln!("pjrt unavailable ({e:#}); using native backend"),
+        }
+    }
+    Router::native_only()
+}
+
+fn service(args: &Args) -> Service {
+    let cfg = ServiceConfig {
+        workers: args.flag_usize("workers", 4),
+        batch: BatchPolicy::default(),
+    };
+    Service::start(cfg, make_router(args))
+}
+
+fn cmd_info(args: &Args) -> i32 {
+    println!("mddct — fused MD DCT / Fourier-related transform service");
+    println!("native backend : radix-2/Bluestein RFFT + fused three-stage DCT (f64)");
+    match Manifest::load(args.flag_str("artifacts", DEFAULT_ARTIFACT_DIR)) {
+        Ok(m) => {
+            println!("artifacts      : {} entries (dtype {})", m.entries.len(), m.dtype);
+            let handle = PjrtHandle::spawn(args.flag_str("artifacts", DEFAULT_ARTIFACT_DIR));
+            match handle.platform() {
+                Ok(p) => println!("pjrt platform  : {p}"),
+                Err(e) => println!("pjrt platform  : unavailable ({e:#})"),
+            }
+        }
+        Err(e) => println!("artifacts      : none ({e:#})"),
+    }
+    0
+}
+
+fn cmd_transform(args: &Args) -> i32 {
+    let op_name = args.flag_str("op", "dct2d");
+    let Some(op) = parse_op(op_name) else {
+        eprintln!("unknown op '{op_name}'");
+        return 2;
+    };
+    let n1 = args.flag_usize("n1", 256);
+    let shape = match op.rank() {
+        1 => vec![n1],
+        2 => vec![n1, args.flag_usize("n2", n1)],
+        _ => vec![n1, args.flag_usize("n2", n1), args.flag_usize("n3", n1)],
+    };
+    let numel: usize = shape.iter().product();
+    let mut rng = Rng::new(args.flag_usize("seed", 42) as u64);
+    let data = rng.normal_vec(numel);
+    let svc = service(args);
+    match svc.transform(op, shape.clone(), data) {
+        Ok(r) => {
+            println!(
+                "{op_name} {shape:?}: backend={} latency={:.3} ms  checksum={:.6e}",
+                r.backend,
+                r.latency * 1e3,
+                r.output.iter().sum::<f64>()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("transform failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let requests = args.flag_usize("requests", 256);
+    let n = args.flag_usize("n", 256);
+    let svc = service(args);
+    let mut rng = Rng::new(7);
+    let payloads: Vec<Vec<f64>> =
+        (0..requests).map(|_| rng.normal_vec(n * n)).collect();
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = payloads
+        .into_iter()
+        .map(|p| svc.submit(TransformOp::Dct2d, vec![n, n], p).unwrap())
+        .collect();
+    let mut ok = 0;
+    for h in handles {
+        if h.wait().is_ok() {
+            ok += 1;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "served {ok}/{requests} dct2d {n}x{n} in {dt:.3}s  ({:.1} req/s)",
+        ok as f64 / dt
+    );
+    println!("metrics: {}", svc.metrics.snapshot());
+    0
+}
+
+fn cmd_compress(args: &Args) -> i32 {
+    let n = args.flag_usize("n", 512);
+    let eps = args.flag_f64("eps", 10.0);
+    let img = mddct::apps::synthetic_image(n, n, 11);
+    let rep = Compressor::new(n, n).report(&img, eps);
+    println!(
+        "compress {n}x{n} eps={eps}: sparsity={:.1}%  psnr={:.2} dB",
+        rep.sparsity * 100.0,
+        rep.psnr_db
+    );
+    0
+}
+
+fn cmd_place(args: &Args) -> i32 {
+    let name = args.flag_str("bench", "adaptec1");
+    let Some(b) = ISPD2005.iter().find(|b| b.name == name) else {
+        eprintln!("unknown benchmark '{name}'");
+        return 2;
+    };
+    let iters = args.flag_usize("iters", 4);
+    let backend = if args.flag_str("backend", "fused") == "rowcol" {
+        SolverBackend::RowColumn
+    } else {
+        SolverBackend::Fused
+    };
+    let mut circuit = b.generate(1);
+    let engine = PlacementEngine::new(b.grid, backend);
+    println!("{name}: {} cells, {}x{} grid", circuit.cells(), b.grid, b.grid);
+    for r in engine.run(&mut circuit, iters) {
+        println!(
+            "  iter {:2}: transform {:.2} ms, other {:.2} ms, overflow {:.4e}",
+            r.iter,
+            r.transform_seconds * 1e3,
+            r.other_seconds * 1e3,
+            r.overflow
+        );
+    }
+    0
+}
+
+fn cmd_warmup(args: &Args) -> i32 {
+    let dir = args.flag_str("artifacts", DEFAULT_ARTIFACT_DIR);
+    let m = match Manifest::load(dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e:#}");
+            return 1;
+        }
+    };
+    let handle = PjrtHandle::spawn(dir);
+    let mut total = 0.0;
+    for name in m.entries.keys() {
+        match handle.warmup(name) {
+            Ok(s) => {
+                total += s;
+                println!("  {name}: compiled in {:.2}s", s);
+            }
+            Err(e) => {
+                eprintln!("  {name}: FAILED {e:#}");
+                return 1;
+            }
+        }
+    }
+    println!("warmed {} executables in {total:.1}s total", m.entries.len());
+    0
+}

@@ -1,0 +1,186 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime. `make artifacts` writes `artifacts/manifest.json` +
+//! one `<name>.hlo.txt` per compiled pipeline; this module parses it.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Tensor spec (shape + dtype) for one artifact input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("spec missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("spec missing dtype"))?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One AOT-compiled pipeline.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub pipeline: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub dtype: String,
+    pub entries: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (tested without touching the filesystem).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest is not valid json")?;
+        let version = j.get("version").and_then(Json::as_f64).unwrap_or(0.0);
+        if version != 1.0 {
+            bail!("unsupported manifest version {version}");
+        }
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .unwrap_or("f32")
+            .to_string();
+        let mut entries = BTreeMap::new();
+        for e in j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+        {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("entry missing name"))?
+                .to_string();
+            let pipeline = e
+                .get("pipeline")
+                .and_then(Json::as_str)
+                .unwrap_or(&name)
+                .to_string();
+            let file = dir.join(
+                e.get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry {name} missing file"))?,
+            );
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                e.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("entry {name} missing {key}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            let entry = ArtifactEntry {
+                name: name.clone(),
+                pipeline,
+                file,
+                inputs: parse_specs("inputs")?,
+                outputs: parse_specs("outputs")?,
+            };
+            entries.insert(name, entry);
+        }
+        Ok(Manifest { dir, dtype, entries })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest ({} entries)", self.entries.len()))
+    }
+
+    /// Names matching a prefix (e.g. all `dct2d_*` shapes).
+    pub fn names_with_prefix(&self, prefix: &str) -> Vec<&str> {
+        self.entries
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .map(|s| s.as_str())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "dtype": "f32",
+      "entries": [
+        {"name": "dct2d_8x8", "pipeline": "dct2d", "file": "dct2d_8x8.hlo.txt",
+         "inputs": [{"shape": [8, 8], "dtype": "f32"}],
+         "outputs": [{"shape": [8, 8], "dtype": "f32"}]},
+        {"name": "rfft2d_8x8", "pipeline": "rfft2d", "file": "rfft2d_8x8.hlo.txt",
+         "inputs": [{"shape": [8, 8], "dtype": "f32"}],
+         "outputs": [{"shape": [8, 5], "dtype": "f32"}, {"shape": [8, 5], "dtype": "f32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.dtype, "f32");
+        assert_eq!(m.entries.len(), 2);
+        let e = m.get("dct2d_8x8").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![8, 8]);
+        assert_eq!(e.inputs[0].numel(), 64);
+        assert_eq!(e.file, PathBuf::from("/tmp/a/dct2d_8x8.hlo.txt"));
+        let r = m.get("rfft2d_8x8").unwrap();
+        assert_eq!(r.outputs.len(), 2);
+        assert_eq!(r.outputs[0].shape, vec![8, 5]);
+    }
+
+    #[test]
+    fn prefix_lookup() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/x")).unwrap();
+        assert_eq!(m.names_with_prefix("dct2d_"), vec!["dct2d_8x8"]);
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = r#"{"version": 9, "entries": []}"#;
+        assert!(Manifest::parse(bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let bad = r#"{"version": 1, "entries": [{"name": "x"}]}"#;
+        assert!(Manifest::parse(bad, PathBuf::new()).is_err());
+    }
+}

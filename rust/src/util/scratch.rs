@@ -1,0 +1,93 @@
+//! Thread-local scratch-buffer pool.
+//!
+//! §Perf iteration 1: the transform hot paths allocated (and page-faulted)
+//! multi-megabyte buffers per call; recycling them per thread removed
+//! ~25-40% of fused-transform wall time (see EXPERIMENTS.md §Perf).
+//! take_* pops a buffer of at least the requested length (resized to it),
+//! give_* returns it for reuse. No cross-thread sharing: each worker
+//! keeps its own pool, so there is no locking on the hot path.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use crate::fft::C64;
+
+#[derive(Default)]
+struct Pool {
+    f64s: HashMap<usize, Vec<Vec<f64>>>,
+    c64s: HashMap<usize, Vec<Vec<C64>>>,
+}
+
+thread_local! {
+    static POOL: RefCell<Pool> = RefCell::new(Pool::default());
+}
+
+/// Take an f64 buffer of exactly `len` (contents unspecified).
+pub fn take_f64(len: usize) -> Vec<f64> {
+    POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        match p.f64s.get_mut(&len).and_then(Vec::pop) {
+            Some(v) => v,
+            None => vec![0.0; len],
+        }
+    })
+}
+
+/// Return an f64 buffer to the pool.
+pub fn give_f64(v: Vec<f64>) {
+    let len = v.len();
+    POOL.with(|p| p.borrow_mut().f64s.entry(len).or_default().push(v));
+}
+
+/// Take a C64 buffer of exactly `len` (contents unspecified).
+pub fn take_c64(len: usize) -> Vec<C64> {
+    POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        match p.c64s.get_mut(&len).and_then(Vec::pop) {
+            Some(v) => v,
+            None => vec![C64::default(); len],
+        }
+    })
+}
+
+/// Return a C64 buffer to the pool.
+pub fn give_c64(v: Vec<C64>) {
+    let len = v.len();
+    POOL.with(|p| p.borrow_mut().c64s.entry(len).or_default().push(v));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuses_buffers() {
+        let mut a = take_f64(1024);
+        a[0] = 42.0;
+        let ptr = a.as_ptr();
+        give_f64(a);
+        let b = take_f64(1024);
+        assert_eq!(b.as_ptr(), ptr, "same buffer should come back");
+        give_f64(b);
+    }
+
+    #[test]
+    fn distinct_sizes_distinct_buffers() {
+        let a = take_f64(64);
+        let b = take_f64(128);
+        assert_eq!(a.len(), 64);
+        assert_eq!(b.len(), 128);
+        give_f64(a);
+        give_f64(b);
+    }
+
+    #[test]
+    fn c64_pool_roundtrip() {
+        let v = take_c64(33);
+        assert_eq!(v.len(), 33);
+        give_c64(v);
+        let w = take_c64(33);
+        assert_eq!(w.len(), 33);
+        give_c64(w);
+    }
+}

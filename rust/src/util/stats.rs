@@ -1,0 +1,170 @@
+//! Summary statistics shared by the bench harness and the service metrics.
+
+/// Summary of a sample of f64 observations (times in seconds, sizes, ...).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    /// Compute a summary; panics on an empty sample.
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "empty sample");
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            median: percentile_sorted(&sorted, 50.0),
+            p95: percentile_sorted(&sorted, 95.0),
+        }
+    }
+
+    /// Relative standard deviation (the paper reports std < 1% of mean).
+    pub fn rel_std(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.std / self.mean
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted sample.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Streaming histogram with fixed log-spaced latency buckets (metrics).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// bucket upper bounds in seconds
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    pub total: u64,
+    pub sum: f64,
+    pub max: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        // 1us .. 10s, one bucket per decade third
+        let mut bounds = Vec::new();
+        let mut b = 1e-6;
+        while b <= 10.0 {
+            bounds.push(b);
+            bounds.push(b * 2.0);
+            bounds.push(b * 5.0);
+            b *= 10.0;
+        }
+        let n = bounds.len();
+        LatencyHistogram { bounds, counts: vec![0; n + 1], total: 0, sum: 0.0, max: 0.0 }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, seconds: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| seconds <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += seconds;
+        if seconds > self.max {
+            self.max = seconds;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i < self.bounds.len() { self.bounds[i] } else { self.max };
+            }
+        }
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.median - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.std - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_single() {
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.median, 7.0);
+        assert_eq!(s.p95, 7.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [0.0, 10.0];
+        assert!((percentile_sorted(&v, 50.0) - 5.0).abs() < 1e-12);
+        assert!((percentile_sorted(&v, 95.0) - 9.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let mut h = LatencyHistogram::default();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-5);
+        }
+        assert_eq!(h.total, 1000);
+        assert!(h.quantile(0.5) <= h.quantile(0.95));
+        assert!(h.quantile(0.95) <= h.quantile(1.0));
+        assert!((h.mean() - 0.005005).abs() < 1e-6);
+    }
+}

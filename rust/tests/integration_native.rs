@@ -1,0 +1,117 @@
+//! Cross-module integration over the native backend: transforms
+//! composed through the public API agree with each other and with the
+//! direct oracles at realistic sizes.
+
+use mddct::apps::{synthetic_image, Compressor, PoissonSolver, SolverBackend};
+use mddct::dct::direct::{dct2d_direct, idct_idxst_direct};
+use mddct::dct::{Algo1d, Combo, Dct1d, Dct2, Idct2, IdxstCombo, RowColumn};
+use mddct::util::rng::Rng;
+
+fn assert_close(got: &[f64], want: &[f64], tol: f64, what: &str) {
+    assert_eq!(got.len(), want.len());
+    let scale = want.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!((g - w).abs() <= tol * scale, "{what}@{i}: {g} vs {w}");
+    }
+}
+
+#[test]
+fn fused_row_column_and_oracle_agree_at_scale() {
+    let (n1, n2) = (192, 160);
+    let mut rng = Rng::new(500);
+    let x = rng.normal_vec(n1 * n2);
+    let mut fused = vec![0.0; n1 * n2];
+    Dct2::new(n1, n2).forward(&x, &mut fused);
+    let mut rc = vec![0.0; n1 * n2];
+    RowColumn::dct2(n1, n2).forward(&x, &mut rc);
+    assert_close(&fused, &rc, 1e-10, "fused vs rc");
+    assert_close(&fused, &dct2d_direct(&x, n1, n2), 1e-9, "fused vs direct");
+}
+
+#[test]
+fn separable_1d_passes_equal_fused_2d() {
+    // manually compose 1D N-point DCTs (rows then cols) == Dct2
+    let (n1, n2) = (48, 32);
+    let mut rng = Rng::new(501);
+    let x = rng.normal_vec(n1 * n2);
+    let row = Dct1d::new(n2, Algo1d::NPoint);
+    let col = Dct1d::new(n1, Algo1d::NPoint);
+    let mut a = vec![0.0; n1 * n2];
+    for r in 0..n1 {
+        row.forward(&x[r * n2..(r + 1) * n2], &mut a[r * n2..(r + 1) * n2]);
+    }
+    let mut out = vec![0.0; n1 * n2];
+    let mut colbuf = vec![0.0; n1];
+    let mut colout = vec![0.0; n1];
+    for c in 0..n2 {
+        for r in 0..n1 {
+            colbuf[r] = a[r * n2 + c];
+        }
+        col.forward(&colbuf, &mut colout);
+        for r in 0..n1 {
+            out[r * n2 + c] = colout[r];
+        }
+    }
+    let mut fused = vec![0.0; n1 * n2];
+    Dct2::new(n1, n2).forward(&x, &mut fused);
+    assert_close(&out, &fused, 1e-10, "manual separable vs fused");
+}
+
+#[test]
+fn compression_pipeline_end_to_end() {
+    let n = 128;
+    let img = synthetic_image(n, n, 7);
+    let c = Compressor::new(n, n);
+    let rep = c.report(&img, 30.0);
+    assert!(rep.sparsity > 0.0 && rep.sparsity < 1.0);
+    assert!(rep.psnr_db > 30.0, "psnr {}", rep.psnr_db);
+}
+
+#[test]
+fn poisson_solver_consistent_with_combo_plans() {
+    let n = 48;
+    let mut rng = Rng::new(502);
+    let rho = rng.normal_vec(n * n);
+    let (field, _) = PoissonSolver::new(n, n, SolverBackend::Fused).solve(&rho);
+    // reconstruct xi_x by hand: a = dct2(rho); scale; idct_idxst
+    let a = dct2d_direct(&rho, n, n);
+    let mut cx = vec![0.0; n * n];
+    for u in 0..n {
+        for v in 0..n {
+            let wu = std::f64::consts::PI * u as f64 / n as f64;
+            let wv = std::f64::consts::PI * v as f64 / n as f64;
+            let w2 = wu * wu + wv * wv;
+            cx[u * n + v] = if w2 > 0.0 { a[u * n + v] * wu / w2 } else { 0.0 };
+        }
+    }
+    assert_close(&field.xi_x, &idct_idxst_direct(&cx, n, n), 1e-8, "xi_x");
+}
+
+#[test]
+fn combos_equal_their_row_column_forms_at_scale() {
+    let (n1, n2) = (96, 128);
+    let mut rng = Rng::new(503);
+    let x = rng.normal_vec(n1 * n2);
+    for (combo, rc) in [
+        (Combo::IdctIdxst, RowColumn::idct_idxst(n1, n2)),
+        (Combo::IdxstIdct, RowColumn::idxst_idct(n1, n2)),
+    ] {
+        let mut a = vec![0.0; n1 * n2];
+        IdxstCombo::new(n1, n2, combo).forward(&x, &mut a);
+        let mut b = vec![0.0; n1 * n2];
+        rc.forward(&x, &mut b);
+        assert_close(&a, &b, 1e-9, "combo vs rc");
+    }
+}
+
+#[test]
+fn dct_idct_roundtrip_large_non_pow2() {
+    let (n1, n2) = (300, 500); // Bluestein path on both axes
+    let mut rng = Rng::new(504);
+    let x = rng.normal_vec(n1 * n2);
+    let mut y = vec![0.0; n1 * n2];
+    Dct2::new(n1, n2).forward(&x, &mut y);
+    let mut back = vec![0.0; n1 * n2];
+    Idct2::new(n1, n2).forward(&y, &mut back);
+    assert_close(&back, &x, 1e-8, "non-pow2 roundtrip");
+}

@@ -1,0 +1,160 @@
+//! End-to-end AOT integration: the JAX/Pallas-lowered HLO artifacts,
+//! executed from Rust via PJRT, must agree with (a) the native Rust
+//! backend and (b) the direct O(N^2) oracle.
+//!
+//! Requires `make artifacts` (skipped gracefully when absent so plain
+//! `cargo test` works before the first artifact build).
+
+use mddct::dct::direct::dct2d_direct;
+use mddct::dct::{Algo1d, Combo, Dct1d, Dct2, Idct2, IdxstCombo};
+use mddct::runtime::PjrtRuntime;
+use mddct::util::rng::Rng;
+
+fn runtime() -> Option<PjrtRuntime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        return None;
+    }
+    Some(PjrtRuntime::new("artifacts").expect("runtime"))
+}
+
+/// f32 artifacts vs f64 native: tolerance driven by f32 roundoff on
+/// O(N log N) accumulations.
+fn assert_close(got: &[f64], want: &[f64], tol: f64, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    let scale = want.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= tol * scale,
+            "{what} at {i}: got {g}, want {w} (scale {scale})"
+        );
+    }
+}
+
+#[test]
+fn dct2d_artifact_matches_native_and_oracle() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("dct2d_64x64").expect("load dct2d_64x64");
+    let mut rng = Rng::new(100);
+    let x = rng.normal_vec(64 * 64);
+    let got = exe.run_f64(&[x.clone()]).expect("run")[0].clone();
+    let mut native = vec![0.0; 64 * 64];
+    Dct2::new(64, 64).forward(&x, &mut native);
+    assert_close(&got, &native, 2e-4, "pjrt vs native");
+    assert_close(&got, &dct2d_direct(&x, 64, 64), 2e-4, "pjrt vs oracle");
+}
+
+#[test]
+fn pallas_artifact_matches_jnp_artifact() {
+    let Some(rt) = runtime() else { return };
+    let a = rt.load("dct2d_pallas_128x128").expect("pallas artifact");
+    let b = rt.load("dct2d_128x128").expect("jnp artifact");
+    let mut rng = Rng::new(101);
+    let x: Vec<f32> = (0..128 * 128).map(|_| rng.normal() as f32).collect();
+    let ya = a.run_f32(&[x.clone()]).unwrap()[0].clone();
+    let yb = b.run_f32(&[x]).unwrap()[0].clone();
+    let scale = yb.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+    for (i, (u, v)) in ya.iter().zip(&yb).enumerate() {
+        assert!((u - v).abs() <= 1e-3 * scale, "at {i}: {u} vs {v}");
+    }
+}
+
+#[test]
+fn idct_artifact_roundtrips_dct_artifact() {
+    let Some(rt) = runtime() else { return };
+    let fwd = rt.load("dct2d_128x128").unwrap();
+    let inv = rt.load("idct2d_128x128").unwrap();
+    let mut rng = Rng::new(102);
+    let x = rng.normal_vec(128 * 128);
+    let y = fwd.run_f64(&[x.clone()]).unwrap()[0].clone();
+    let back = inv.run_f64(&[y]).unwrap()[0].clone();
+    assert_close(&back, &x, 5e-3, "roundtrip");
+}
+
+#[test]
+fn idct2_native_matches_idct_artifact() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("idct2d_64x64").unwrap();
+    let mut rng = Rng::new(103);
+    let x = rng.normal_vec(64 * 64);
+    let got = exe.run_f64(&[x.clone()]).unwrap()[0].clone();
+    let mut native = vec![0.0; 64 * 64];
+    Idct2::new(64, 64).forward(&x, &mut native);
+    assert_close(&got, &native, 2e-4, "idct pjrt vs native");
+}
+
+#[test]
+fn dct1d_artifacts_match_native() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(104);
+    let x = rng.normal_vec(1024);
+    for (name, algo) in [
+        ("dct1d_4n_1024", Algo1d::FourN),
+        ("dct1d_2n_mirror_1024", Algo1d::Mirror2N),
+        ("dct1d_2n_pad_1024", Algo1d::Pad2N),
+        ("dct1d_n_1024", Algo1d::NPoint),
+    ] {
+        let exe = rt.load(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let got = exe.run_f64(&[x.clone()]).unwrap()[0].clone();
+        let mut native = vec![0.0; 1024];
+        Dct1d::new(1024, algo).forward(&x, &mut native);
+        assert_close(&got, &native, 5e-4, name);
+    }
+}
+
+#[test]
+fn idxst_combo_artifacts_match_native() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(105);
+    let n = 256;
+    let x = rng.normal_vec(n * n);
+    for (name, combo) in
+        [("idct_idxst_256x256", Combo::IdctIdxst), ("idxst_idct_256x256", Combo::IdxstIdct)]
+    {
+        let exe = rt.load(name).unwrap();
+        let got = exe.run_f64(&[x.clone()]).unwrap()[0].clone();
+        let mut native = vec![0.0; n * n];
+        IdxstCombo::new(n, n, combo).forward(&x, &mut native);
+        assert_close(&got, &native, 2e-3, name);
+    }
+}
+
+#[test]
+fn rfft2d_artifact_has_two_outputs() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("rfft2d_64x64").unwrap();
+    let x = vec![1.0f32; 64 * 64];
+    let out = exe.run_f32(&[x]).unwrap();
+    assert_eq!(out.len(), 2);
+    assert_eq!(out[0].len(), 64 * 33);
+    // DC bin of an all-ones input = N1*N2, imaginary part 0
+    assert!((out[0][0] - 4096.0).abs() < 1e-1);
+    assert!(out[1][0].abs() < 1e-3);
+}
+
+#[test]
+fn executable_cache_hits() {
+    let Some(rt) = runtime() else { return };
+    let a = rt.load("dct2d_64x64").unwrap();
+    let before = rt.cached_count();
+    let b = rt.load("dct2d_64x64").unwrap();
+    assert_eq!(rt.cached_count(), before);
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+    assert!(a.stats().compile_seconds > 0.0);
+}
+
+#[test]
+fn dst_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("dst2d_256x256").expect("dst artifact");
+    let mut rng = Rng::new(106);
+    let x = rng.normal_vec(256 * 256);
+    let got = exe.run_f64(&[x.clone()]).unwrap()[0].clone();
+    let mut native = vec![0.0; 256 * 256];
+    mddct::dct::Dst2::new(256, 256).forward(&x, &mut native);
+    assert_close(&got, &native, 2e-3, "dst2d pjrt vs native");
+    // inverse artifact roundtrips
+    let inv = rt.load("idst2d_256x256").unwrap();
+    let back = inv.run_f64(&[got]).unwrap()[0].clone();
+    assert_close(&back, &x, 5e-3, "dst roundtrip");
+}

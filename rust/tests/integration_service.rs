@@ -1,0 +1,97 @@
+//! Service-level integration: the coordinator under concurrency, mixed
+//! ops, and (when artifacts exist) the PJRT routing path.
+
+use std::sync::Arc;
+
+use mddct::coordinator::{
+    BatchPolicy, Router, Service, ServiceConfig, TransformOp,
+};
+use mddct::dct::direct::dct2d_direct;
+use mddct::runtime::{Manifest, PjrtHandle, DEFAULT_ARTIFACT_DIR};
+use mddct::util::rng::Rng;
+
+fn assert_close(got: &[f64], want: &[f64], tol: f64) {
+    let scale = want.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+    for (g, w) in got.iter().zip(want) {
+        assert!((g - w).abs() <= tol * scale, "{g} vs {w}");
+    }
+}
+
+#[test]
+fn concurrent_clients_all_served_correctly() {
+    let svc = Arc::new(Service::start_native(ServiceConfig {
+        workers: 4,
+        batch: BatchPolicy::default(),
+    }));
+    let mut joins = Vec::new();
+    for c in 0..8u64 {
+        let svc = svc.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(600 + c);
+            for _ in 0..16 {
+                let n = [8, 12, 16][rng.below(3)];
+                let x = rng.normal_vec(n * n);
+                let r = svc
+                    .transform(TransformOp::Dct2d, vec![n, n], x.clone())
+                    .expect("transform");
+                assert_close(&r.output, &dct2d_direct(&x, n, n), 1e-9);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    assert_eq!(svc.metrics.total_requests(), 8 * 16);
+}
+
+#[test]
+fn metrics_snapshot_has_op_rows() {
+    let svc = Service::start_native(ServiceConfig { workers: 2, batch: BatchPolicy::default() });
+    let mut rng = Rng::new(601);
+    for _ in 0..4 {
+        svc.transform(TransformOp::Idct2d, vec![8, 8], rng.normal_vec(64)).unwrap();
+    }
+    let snap = svc.metrics.snapshot();
+    let row = snap.get("idct2d").expect("idct2d metrics row");
+    assert_eq!(row.get("requests").unwrap().as_f64().unwrap(), 4.0);
+    assert!(row.get("mean_latency_s").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn pjrt_routing_matches_native_results() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts missing");
+        return;
+    }
+    let manifest = Manifest::load(DEFAULT_ARTIFACT_DIR).unwrap();
+    let handle = PjrtHandle::spawn(DEFAULT_ARTIFACT_DIR);
+    let svc = Service::start(
+        ServiceConfig { workers: 2, batch: BatchPolicy::default() },
+        Router::with_pjrt(handle, &manifest),
+    );
+    let mut rng = Rng::new(602);
+    // 128x128 has an artifact -> pjrt; 96x96 doesn't -> native
+    let x = rng.normal_vec(128 * 128);
+    let r = svc.transform(TransformOp::Dct2d, vec![128, 128], x.clone()).unwrap();
+    assert_eq!(r.backend, "pjrt");
+    assert_close(&r.output, &dct2d_direct(&x, 128, 128), 2e-4);
+    let y = rng.normal_vec(96 * 96);
+    let r2 = svc.transform(TransformOp::Dct2d, vec![96, 96], y.clone()).unwrap();
+    assert_eq!(r2.backend, "native");
+    assert_close(&r2.output, &dct2d_direct(&y, 96, 96), 1e-9);
+}
+
+#[test]
+fn batch_of_identical_shapes_is_cobatched() {
+    let svc = Service::start_native(ServiceConfig {
+        workers: 1,
+        batch: BatchPolicy { max_batch: 32, max_wait: std::time::Duration::from_millis(20) },
+    });
+    let mut rng = Rng::new(603);
+    let reqs: Vec<_> = (0..24)
+        .map(|_| (TransformOp::Dct2d, vec![16usize, 16], rng.normal_vec(256)))
+        .collect();
+    let out = svc.transform_many(reqs).unwrap();
+    let max_batch = out.iter().map(|r| r.batch_size).max().unwrap();
+    assert!(max_batch > 1, "expected co-batching, max batch {max_batch}");
+}

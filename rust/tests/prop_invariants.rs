@@ -1,0 +1,130 @@
+//! Property-based invariants over the whole stack (util::prop framework):
+//! the mathematical identities the paper's correctness rests on, checked
+//! on randomized shapes/payloads.
+
+use mddct::coordinator::{PlanKey, Router, TransformOp};
+use mddct::dct::{Algo1d, Dct1d, Dct2, Idct1d, Idct2};
+use mddct::fft::{onesided_len, C64, RfftPlan};
+use mddct::util::prop::{check_close, forall, shapes, sizes};
+
+#[test]
+fn prop_dct_roundtrip_1d() {
+    forall(60, sizes(1, 200), |rng, &n| {
+        let x = rng.normal_vec(n);
+        let mut y = vec![0.0; n];
+        Dct1d::new(n, Algo1d::NPoint).forward(&x, &mut y);
+        let mut back = vec![0.0; n];
+        Idct1d::new(n).forward(&y, &mut back);
+        check_close(&back, &x, 1e-9)
+    });
+}
+
+#[test]
+fn prop_dct2_linearity() {
+    forall(30, shapes(1, 32), |rng, &(n1, n2)| {
+        let x = rng.normal_vec(n1 * n2);
+        let y = rng.normal_vec(n1 * n2);
+        let plan = Dct2::new(n1, n2);
+        let combo: Vec<f64> = x.iter().zip(&y).map(|(a, b)| 1.5 * a + 2.0 * b).collect();
+        let mut fc = vec![0.0; n1 * n2];
+        plan.forward(&combo, &mut fc);
+        let mut fx = vec![0.0; n1 * n2];
+        plan.forward(&x, &mut fx);
+        let mut fy = vec![0.0; n1 * n2];
+        plan.forward(&y, &mut fy);
+        let want: Vec<f64> = fx.iter().zip(&fy).map(|(a, b)| 1.5 * a + 2.0 * b).collect();
+        check_close(&fc, &want, 1e-9)
+    });
+}
+
+#[test]
+fn prop_rfft_hermitian_symmetry() {
+    // Eq. (12): X(n) = X*(N-n) — the redundancy the paradigm exploits
+    forall(40, sizes(2, 128), |rng, &n| {
+        let x = rng.normal_vec(n);
+        let plan = RfftPlan::new(n);
+        let mut spec = vec![C64::default(); onesided_len(n)];
+        plan.forward(&x, &mut spec);
+        // DC & Nyquist bins must be real
+        if spec[0].im.abs() > 1e-9 {
+            return Err(format!("DC imag {}", spec[0].im));
+        }
+        if n % 2 == 0 && spec[n / 2].im.abs() > 1e-9 {
+            return Err(format!("Nyquist imag {}", spec[n / 2].im));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dct2_energy_bounded() {
+    // |DCT2D(x)|_2^2 <= 16 N1 N2 |x|_2^2: per axis the unnormalized
+    // DCT-II has singular values sqrt(2N) (sqrt(4N) for the DC row), so
+    // the 2D operator norm is 4 sqrt(N1 N2) — catches scaling drift
+    forall(30, shapes(1, 24), |rng, &(n1, n2)| {
+        let x = rng.normal_vec(n1 * n2);
+        let mut y = vec![0.0; n1 * n2];
+        Dct2::new(n1, n2).forward(&x, &mut y);
+        let ex: f64 = x.iter().map(|v| v * v).sum();
+        let ey: f64 = y.iter().map(|v| v * v).sum();
+        if ey <= 16.0 * (n1 * n2) as f64 * ex + 1e-6 {
+            Ok(())
+        } else {
+            Err(format!("energy blew up: {ey} vs {ex}"))
+        }
+    });
+}
+
+#[test]
+fn prop_idct2_of_delta_is_bounded_basis_function() {
+    // each IDCT basis function has |.|_inf <= 1 in our convention's
+    // inverse scaling (x[0]+2*sum(cos))/2N <= (2N-1)/(2N) < 1 per axis
+    forall(20, shapes(2, 16), |rng, &(n1, n2)| {
+        let mut x = vec![0.0; n1 * n2];
+        let idx = rng.below(n1 * n2);
+        x[idx] = 1.0;
+        let mut y = vec![0.0; n1 * n2];
+        Idct2::new(n1, n2).forward(&x, &mut y);
+        let m = y.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        if m <= 1.0 + 1e-9 {
+            Ok(())
+        } else {
+            Err(format!("basis function overshoot {m}"))
+        }
+    });
+}
+
+#[test]
+fn prop_router_deterministic_and_native_correct() {
+    let router = Router::native_only();
+    forall(25, shapes(1, 20), |rng, &(n1, n2)| {
+        let key = PlanKey { op: TransformOp::Dct2d, shape: vec![n1, n2] };
+        let x = rng.normal_vec(n1 * n2);
+        let (a, ra) = router.execute(&key, &x).map_err(|e| e)?;
+        let (b, rb) = router.execute(&key, &x).map_err(|e| e)?;
+        if ra != rb {
+            return Err("route flapped".into());
+        }
+        check_close(&a, &b, 0.0)
+    });
+}
+
+#[test]
+fn prop_request_validation_total() {
+    // validation never panics, accepts exactly the consistent requests
+    forall(50, shapes(1, 16), |rng, &(n1, n2)| {
+        let numel = n1 * n2;
+        let len = if rng.f64() < 0.5 { numel } else { rng.range(0, 2 * numel) };
+        let req = mddct::coordinator::Request {
+            id: 1,
+            op: TransformOp::Dct2d,
+            shape: vec![n1, n2],
+            data: vec![0.0; len],
+        };
+        match (req.validate(), len == numel) {
+            (Ok(()), true) | (Err(_), false) => Ok(()),
+            (Ok(()), false) => Err("accepted bad payload".into()),
+            (Err(e), true) => Err(format!("rejected good payload: {e}")),
+        }
+    });
+}

@@ -32,7 +32,7 @@ fn make_router(use_pjrt: bool) -> Router {
 
 fn run_load(workers: usize, use_pjrt: bool, requests: usize) -> (f64, f64, f64) {
     let svc = Arc::new(Service::start(
-        ServiceConfig { workers, batch: BatchPolicy::default() },
+        ServiceConfig { workers, batch: BatchPolicy::default(), ..Default::default() },
         make_router(use_pjrt),
     ));
     let clients = 4;

@@ -10,6 +10,7 @@
 use mddct::bench::{black_box, ms, time_fn, BenchConfig, Table};
 use mddct::dct::dst::{dst2d_direct, Dst2};
 use mddct::dct::Dct2;
+use mddct::parallel::ExecPolicy;
 use mddct::fft::radix2::Radix2Plan;
 use mddct::fft::{onesided_len, plan, C64, RfftPlan};
 use mddct::util::rng::Rng;
@@ -86,7 +87,8 @@ fn main() {
     let mut rng = Rng::new(77);
     let x = rng.normal_vec(n * n);
     let mut out = vec![0.0; n * n];
-    let dct = Dct2::new(n, n);
+    // serial: §Perf iteration 1 measured the single-thread allocation cost
+    let dct = Dct2::with_policy(n, n, ExecPolicy::Serial);
     let pooled = time_fn(&cfg, || {
         dct.forward(&x, &mut out);
         black_box(&out);

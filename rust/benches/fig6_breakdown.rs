@@ -9,6 +9,7 @@
 
 use mddct::bench::{ms, time_fn, BenchConfig, Table};
 use mddct::dct::{Dct2, StageTimes};
+use mddct::parallel::ExecPolicy;
 use mddct::util::rng::Rng;
 
 fn main() {
@@ -20,7 +21,8 @@ fn main() {
         let mut rng = Rng::new(n as u64);
         let x = rng.normal_vec(n * n);
         let mut out = vec![0.0; n * n];
-        let plan = Dct2::new(n, n);
+        // serial: Fig. 6 is the single-thread stage breakdown
+        let plan = Dct2::with_policy(n, n, ExecPolicy::Serial);
         let mut acc = StageTimes::default();
         let s = time_fn(&cfg, || {
             let st = plan.forward_timed(&x, &mut out);

@@ -8,6 +8,7 @@ use mddct::bench::intensity::{naive_row, ours_row};
 use mddct::bench::{black_box, time_fn, BenchConfig, Table};
 use mddct::dct::Dct2;
 use mddct::fft::{onesided_len, C64};
+use mddct::parallel::ExecPolicy;
 use mddct::util::rng::Rng;
 
 fn main() {
@@ -41,7 +42,8 @@ fn main() {
 
     // measured: the two postprocess kernels on a real spectrum
     let cfg = BenchConfig::from_env(BenchConfig::default());
-    let plan = Dct2::new(n1, n2);
+    // serial kernel: the table models single-thread arithmetic intensity
+    let plan = Dct2::with_policy(n1, n2, ExecPolicy::Serial);
     let mut rng = Rng::new(3);
     let h2 = onesided_len(n2);
     let spec: Vec<C64> =

@@ -17,6 +17,7 @@ use mddct::bench::{black_box, ms, ratio, time_fn, BenchConfig, Table};
 use mddct::dct::direct::dct2d_direct;
 use mddct::dct::{Dct2, Idct2, RowColumn};
 use mddct::fft::{C64, Rfft2Plan};
+use mddct::parallel::{default_threads, ExecPolicy};
 use mddct::util::rng::Rng;
 
 fn main() {
@@ -41,22 +42,23 @@ fn main() {
         let x = rng.normal_vec(n1 * n2);
         let mut out = vec![0.0; n1 * n2];
 
-        // fused DCT
-        let dct = Dct2::new(n1, n2);
+        // fused DCT (serial: Table V reproduces the paper's single-stream
+        // numbers; the parallel_scaling section below measures threading)
+        let dct = Dct2::with_policy(n1, n2, ExecPolicy::Serial);
         let t_fused = time_fn(&cfg, || {
             dct.forward(&x, &mut out);
             black_box(&out);
         })
         .mean;
         // row-column DCT
-        let rc = RowColumn::dct2(n1, n2);
+        let rc = RowColumn::dct2(n1, n2).with_policy(ExecPolicy::Serial);
         let t_rc = time_fn(&cfg, || {
             rc.forward(&x, &mut out);
             black_box(&out);
         })
         .mean;
         // raw RFFT2D
-        let rfft = Rfft2Plan::new(n1, n2);
+        let rfft = Rfft2Plan::with_policy(n1, n2, ExecPolicy::Serial);
         let mut spec = vec![C64::default(); n1 * rfft.h2];
         let t_fft = time_fn(&cfg, || {
             rfft.forward(&x, &mut spec);
@@ -71,13 +73,13 @@ fn main() {
             None
         };
         // IDCT trio
-        let idct = Idct2::new(n1, n2);
+        let idct = Idct2::with_policy(n1, n2, ExecPolicy::Serial);
         let t_ifused = time_fn(&cfg, || {
             idct.forward(&x, &mut out);
             black_box(&out);
         })
         .mean;
-        let irc = RowColumn::idct2(n1, n2);
+        let irc = RowColumn::idct2(n1, n2).with_policy(ExecPolicy::Serial);
         let t_irc = time_fn(&cfg, || {
             irc.forward(&x, &mut out);
             black_box(&out);
@@ -114,4 +116,81 @@ fn main() {
          {:.2}x (paper ~1.2-1.3x)",
         mean_rc, mean_gap
     );
+
+    parallel_scaling(&cfg);
+}
+
+/// Serial vs parallel fused 2D DCT (the `parallel` execution layer):
+/// one row per (shape, thread count), emitted both as a table and as
+/// machine-readable JSON in `BENCH_parallel.json` (override the path
+/// with `MDDCT_BENCH_JSON`).
+fn parallel_scaling(cfg: &BenchConfig) {
+    let maxt = default_threads();
+    let mut counts = vec![1usize];
+    let mut c = 2;
+    while c < maxt {
+        counts.push(c);
+        c *= 2;
+    }
+    if maxt > 1 {
+        counts.push(maxt);
+    }
+
+    let shapes: [(usize, usize); 3] = [(512, 512), (1024, 1024), (2048, 2048)];
+    println!(
+        "\nParallel scaling: fused 2D DCT, serial vs 1..{maxt} threads \
+         (shared pool, ExecPolicy::Threads)\n"
+    );
+    let mut t = Table::new(&["N1", "N2", "serial", "threads", "time", "speedup"]);
+    let mut json_rows: Vec<String> = Vec::new();
+    for &(n1, n2) in &shapes {
+        let mut rng = Rng::new((n1 * n2) as u64 + 7);
+        let x = rng.normal_vec(n1 * n2);
+        let mut out = vec![0.0; n1 * n2];
+
+        let serial_plan = Dct2::with_policy(n1, n2, ExecPolicy::Serial);
+        let t_serial = time_fn(cfg, || {
+            serial_plan.forward(&x, &mut out);
+            black_box(&out);
+        })
+        .mean;
+
+        for &threads in &counts {
+            let plan = Dct2::with_policy(n1, n2, ExecPolicy::Threads(threads));
+            let t_par = time_fn(cfg, || {
+                plan.forward(&x, &mut out);
+                black_box(&out);
+            })
+            .mean;
+            let speedup = t_serial / t_par;
+            t.row(&[
+                n1.to_string(),
+                n2.to_string(),
+                ms(t_serial),
+                threads.to_string(),
+                ms(t_par),
+                format!("{speedup:.2}x"),
+            ]);
+            json_rows.push(format!(
+                "{{\"n1\": {n1}, \"n2\": {n2}, \"threads\": {threads}, \
+                 \"serial_ms\": {:.6}, \"parallel_ms\": {:.6}, \
+                 \"speedup_vs_serial\": {speedup:.4}}}",
+                t_serial * 1e3,
+                t_par * 1e3
+            ));
+        }
+    }
+    t.print();
+
+    let path = std::env::var("MDDCT_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_parallel.json".to_string());
+    let doc = format!(
+        "{{\n  \"bench\": \"table5_parallel_fused_dct2d\",\n  \
+         \"default_threads\": {maxt},\n  \"rows\": [\n    {}\n  ]\n}}\n",
+        json_rows.join(",\n    ")
+    );
+    match std::fs::write(&path, &doc) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

@@ -16,6 +16,7 @@ use mddct::bench::{black_box, time_fn, BenchConfig, Table};
 use mddct::dct::reorder::reorder_2d_scatter;
 use mddct::dct::Dct2;
 use mddct::fft::{onesided_len, C64};
+use mddct::parallel::ExecPolicy;
 use mddct::util::rng::Rng;
 
 fn main() {
@@ -39,7 +40,8 @@ fn main() {
     })
     .mean;
 
-    let plan = Dct2::new(n, n);
+    // serial kernel: the roofline model is per-core bandwidth
+    let plan = Dct2::with_policy(n, n, ExecPolicy::Serial);
     let h2 = onesided_len(n);
     let spec: Vec<C64> = (0..n * h2).map(|_| C64::new(rng.normal(), rng.normal())).collect();
     let t_post = time_fn(&cfg, || {

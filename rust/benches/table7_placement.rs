@@ -37,6 +37,8 @@ fn main() {
             grid: b.grid,
         };
         let mut rows: Vec<(f64, f64)> = Vec::new(); // (transform, total) per backend
+        // both backends run under the default Auto exec policy, so the
+        // A/B stays apples-to-apples at whatever the machine parallelism is
         for backend in [SolverBackend::RowColumn, SolverBackend::Fused] {
             let mut circuit = spec.generate(1);
             let engine = PlacementEngine::new(spec.grid, backend);

@@ -19,4 +19,4 @@ pub use batcher::BatchPolicy;
 pub use plan_cache::{NativePlan, PlanCache};
 pub use request::{PlanKey, Request, Response, TransformOp};
 pub use router::{BackendPolicy, Route, Router};
-pub use service::{Handle, Service, ServiceConfig};
+pub use service::{default_workers, Handle, Service, ServiceConfig};

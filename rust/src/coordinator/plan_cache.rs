@@ -9,6 +9,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::dct::{Combo, Dct1d, Dct2, Dct3d, Dst2, Idct1d, Idct2, Idst2, Idxst1d, IdxstCombo, RowColumn};
+use crate::parallel::ExecPolicy;
 
 use super::request::{PlanKey, TransformOp};
 
@@ -28,27 +29,39 @@ pub enum NativePlan {
 }
 
 impl NativePlan {
-    /// Build the plan for a key. Panics on rank mismatch (validated
-    /// upstream by `Request::validate`).
+    /// Build the plan for a key with the default (`Auto`) policy.
     pub fn build(key: &PlanKey) -> NativePlan {
+        Self::build_with(key, ExecPolicy::Auto)
+    }
+
+    /// Build the plan for a key, threading `policy` into the plans that
+    /// have parallel stages. Panics on rank mismatch (validated upstream
+    /// by `Request::validate`).
+    pub fn build_with(key: &PlanKey, policy: ExecPolicy) -> NativePlan {
         let s = &key.shape;
         match key.op {
-            TransformOp::Dct2d => NativePlan::Dct2(Dct2::new(s[0], s[1])),
-            TransformOp::Idct2d => NativePlan::Idct2(Idct2::new(s[0], s[1])),
-            TransformOp::RcDct2d => NativePlan::RcDct2(RowColumn::dct2(s[0], s[1])),
-            TransformOp::RcIdct2d => NativePlan::RcIdct2(RowColumn::idct2(s[0], s[1])),
+            TransformOp::Dct2d => NativePlan::Dct2(Dct2::with_policy(s[0], s[1], policy)),
+            TransformOp::Idct2d => NativePlan::Idct2(Idct2::with_policy(s[0], s[1], policy)),
+            TransformOp::RcDct2d => {
+                NativePlan::RcDct2(RowColumn::dct2(s[0], s[1]).with_policy(policy))
+            }
+            TransformOp::RcIdct2d => {
+                NativePlan::RcIdct2(RowColumn::idct2(s[0], s[1]).with_policy(policy))
+            }
             TransformOp::Dct1d(algo) => NativePlan::Dct1(Dct1d::new(s[0], algo)),
             TransformOp::Idct1d => NativePlan::Idct1(Idct1d::new(s[0])),
             TransformOp::Idxst1d => NativePlan::Idxst1(Idxst1d::new(s[0])),
             TransformOp::IdctIdxst => {
-                NativePlan::Combo(IdxstCombo::new(s[0], s[1], Combo::IdctIdxst))
+                NativePlan::Combo(IdxstCombo::with_policy(s[0], s[1], Combo::IdctIdxst, policy))
             }
             TransformOp::IdxstIdct => {
-                NativePlan::Combo(IdxstCombo::new(s[0], s[1], Combo::IdxstIdct))
+                NativePlan::Combo(IdxstCombo::with_policy(s[0], s[1], Combo::IdxstIdct, policy))
             }
-            TransformOp::Dct3d => NativePlan::Dct3(Dct3d::new(s[0], s[1], s[2])),
-            TransformOp::Dst2d => NativePlan::Dst2(Dst2::new(s[0], s[1])),
-            TransformOp::Idst2d => NativePlan::Idst2(Idst2::new(s[0], s[1])),
+            TransformOp::Dct3d => {
+                NativePlan::Dct3(Dct3d::with_policy(s[0], s[1], s[2], policy))
+            }
+            TransformOp::Dst2d => NativePlan::Dst2(Dst2::with_policy(s[0], s[1], policy)),
+            TransformOp::Idst2d => NativePlan::Idst2(Idst2::with_policy(s[0], s[1], policy)),
         }
     }
 
@@ -82,11 +95,12 @@ pub struct CacheStats {
 pub struct PlanCache {
     plans: RwLock<HashMap<PlanKey, Arc<NativePlan>>>,
     stats: Mutex<CacheStats>,
+    policy: ExecPolicy,
 }
 
 impl Default for PlanCache {
     fn default() -> Self {
-        PlanCache { plans: RwLock::new(HashMap::new()), stats: Mutex::new(CacheStats::default()) }
+        Self::with_policy(ExecPolicy::Auto)
     }
 }
 
@@ -95,26 +109,53 @@ impl PlanCache {
         Self::default()
     }
 
+    /// Cache whose plans all carry `policy`.
+    pub fn with_policy(policy: ExecPolicy) -> PlanCache {
+        PlanCache {
+            plans: RwLock::new(HashMap::new()),
+            stats: Mutex::new(CacheStats::default()),
+            policy,
+        }
+    }
+
+    /// Execution policy baked into newly built plans.
+    pub fn policy(&self) -> ExecPolicy {
+        self.policy
+    }
+
     /// Fetch (or build) the plan for a key.
+    ///
+    /// Lock poisoning is recovered deliberately: a plan build that
+    /// panics (malformed key) unwinds before touching the map, so the
+    /// cache invariant is intact and later requests must keep working —
+    /// the service turns the panic itself into a request error.
     pub fn get(&self, key: &PlanKey) -> Arc<NativePlan> {
-        if let Some(p) = self.plans.read().unwrap().get(key) {
-            self.stats.lock().unwrap().hits += 1;
+        if let Some(p) = self.read_plans().get(key) {
+            self.bump(|s| s.hits += 1);
             return p.clone();
         }
-        let mut w = self.plans.write().unwrap();
+        let mut w = self.plans.write().unwrap_or_else(|e| e.into_inner());
         // double-checked: another thread may have built it meanwhile
         if let Some(p) = w.get(key) {
-            self.stats.lock().unwrap().hits += 1;
+            self.bump(|s| s.hits += 1);
             return p.clone();
         }
-        let plan = Arc::new(NativePlan::build(key));
+        let plan = Arc::new(NativePlan::build_with(key, self.policy));
         w.insert(key.clone(), plan.clone());
-        self.stats.lock().unwrap().misses += 1;
+        self.bump(|s| s.misses += 1);
         plan
     }
 
+    fn read_plans(&self) -> std::sync::RwLockReadGuard<'_, HashMap<PlanKey, Arc<NativePlan>>> {
+        self.plans.read().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn bump(&self, f: impl FnOnce(&mut CacheStats)) {
+        f(&mut self.stats.lock().unwrap_or_else(|e| e.into_inner()));
+    }
+
     pub fn len(&self) -> usize {
-        self.plans.read().unwrap().len()
+        self.read_plans().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -122,7 +163,7 @@ impl PlanCache {
     }
 
     pub fn stats(&self) -> CacheStats {
-        *self.stats.lock().unwrap()
+        *self.stats.lock().unwrap_or_else(|e| e.into_inner())
     }
 }
 

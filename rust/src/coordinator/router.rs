@@ -10,6 +10,7 @@ use std::collections::BTreeSet;
 
 use super::plan_cache::PlanCache;
 use super::request::PlanKey;
+use crate::parallel::ExecPolicy;
 use crate::runtime::{Manifest, PjrtHandle};
 
 /// Routing policy.
@@ -49,9 +50,17 @@ pub struct Router {
 
 impl Router {
     pub fn native_only() -> Router {
+        Self::native_only_with(ExecPolicy::Auto)
+    }
+
+    /// Native backend whose plans carry an explicit execution policy
+    /// (the service threads its `ServiceConfig::exec` through here, so
+    /// workers fan transform stages onto the shared pool rather than
+    /// spawning their own threads).
+    pub fn native_only_with(exec: ExecPolicy) -> Router {
         Router {
             policy: BackendPolicy::NativeOnly,
-            plans: PlanCache::new(),
+            plans: PlanCache::with_policy(exec),
             pjrt: None,
             artifact_names: BTreeSet::new(),
         }
@@ -64,6 +73,17 @@ impl Router {
             plans: PlanCache::new(),
             pjrt: Some(handle),
             artifact_names: manifest.entries.keys().cloned().collect(),
+        }
+    }
+
+    /// Make `exec` the policy of this router's native plans. Called by
+    /// `Service::start` so `ServiceConfig::exec` stays authoritative no
+    /// matter how the router was built; swaps the plan cache only when
+    /// the policy actually differs (plans are built lazily, so this is
+    /// cheap at startup).
+    pub(crate) fn set_exec_policy(&mut self, exec: ExecPolicy) {
+        if self.plans.policy() != exec {
+            self.plans = PlanCache::with_policy(exec);
         }
     }
 

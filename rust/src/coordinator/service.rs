@@ -15,6 +15,7 @@
 //! artifacts) and record metrics. Shape-specialized plans are cached, so
 //! steady-state request cost is transform + channel hops only.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -25,21 +26,36 @@ use super::batcher::{run_batcher, Batch, BatchPolicy, Pending};
 use super::metrics::Metrics;
 use super::request::{Request, Response, TransformOp};
 use super::router::Router;
+use crate::parallel::ExecPolicy;
 
 /// Service configuration.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
+    /// Dispatch worker threads (pull batches, hand stages to the shared
+    /// pool). Defaults to `MDDCT_WORKERS`, else available parallelism —
+    /// the configured value is always respected as-is by `start`.
     pub workers: usize,
     pub batch: BatchPolicy,
+    /// Execution policy baked into native plans built by this service's
+    /// router (the transform stages run on the shared process pool).
+    pub exec: ExecPolicy,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
         ServiceConfig {
-            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            workers: default_workers(),
             batch: BatchPolicy::default(),
+            exec: ExecPolicy::Auto,
         }
     }
+}
+
+/// Worker-count default: `MDDCT_WORKERS` env override, else the
+/// machine's available parallelism.
+pub fn default_workers() -> usize {
+    crate::parallel::policy::env_usize("MDDCT_WORKERS")
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4))
 }
 
 /// Handle to an in-flight request.
@@ -65,8 +81,11 @@ pub struct Service {
 }
 
 impl Service {
-    /// Start the service with `router` as the execution backend.
-    pub fn start(config: ServiceConfig, router: Router) -> Service {
+    /// Start the service with `router` as the execution backend. The
+    /// config's exec policy is authoritative: it is applied to the
+    /// router's native plan cache regardless of how the router was built.
+    pub fn start(config: ServiceConfig, mut router: Router) -> Service {
+        router.set_exec_policy(config.exec);
         let router = Arc::new(router);
         let metrics = Arc::new(Metrics::new());
         let (req_tx, req_rx) = channel::<Pending>();
@@ -99,7 +118,8 @@ impl Service {
         }
     }
 
-    /// Start with the native backend only (the common configuration).
+    /// Start with the native backend only (the common configuration);
+    /// the config's exec policy is threaded into the router's plans.
     pub fn start_native(config: ServiceConfig) -> Service {
         Self::start(config, Router::native_only())
     }
@@ -159,6 +179,16 @@ impl Drop for Service {
     }
 }
 
+/// Render a caught worker panic as a request error string.
+fn panic_message(op: &str, panic: Box<dyn std::any::Any + Send>) -> String {
+    let what = panic
+        .downcast_ref::<&'static str>()
+        .map(|s| (*s).to_string())
+        .or_else(|| panic.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".to_string());
+    format!("worker panicked executing {op}: {what}")
+}
+
 fn worker_loop(
     rx: Arc<Mutex<Receiver<Batch>>>,
     router: Arc<Router>,
@@ -174,7 +204,13 @@ fn worker_loop(
         let op_name = batch.key.op.name();
         for pending in batch.items {
             let t0 = pending.enqueued;
-            let result = router.execute(&batch.key, &pending.request.data);
+            // A panicking plan must not kill the worker (which would
+            // strand every queued batch): catch it and surface it as a
+            // request error, like any backend failure.
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                router.execute(&batch.key, &pending.request.data)
+            }))
+            .unwrap_or_else(|panic| Err(panic_message(&op_name, panic)));
             let latency = t0.elapsed().as_secs_f64();
             let response = match result {
                 Ok((output, route)) => {
@@ -208,6 +244,7 @@ mod tests {
         Service::start_native(ServiceConfig {
             workers,
             batch: BatchPolicy::default(),
+            exec: crate::parallel::ExecPolicy::Auto,
         })
     }
 
@@ -276,5 +313,82 @@ mod tests {
         let s = svc(2);
         let _ = s.transform(TransformOp::Dct2d, vec![4, 4], vec![1.0; 16]);
         drop(s); // must not hang or panic
+    }
+
+    #[test]
+    fn worker_panic_becomes_request_error_and_worker_survives() {
+        use super::super::batcher::{Batch, Pending};
+        use super::super::request::{PlanKey, Request};
+        use std::sync::mpsc::channel;
+
+        let router = Arc::new(Router::native_only());
+        let metrics = Arc::new(Metrics::new());
+        let (batch_tx, batch_rx) = channel::<Batch>();
+        let shared_rx = Arc::new(Mutex::new(batch_rx));
+        let worker = {
+            let rx = shared_rx.clone();
+            let router = router.clone();
+            let metrics = metrics.clone();
+            std::thread::spawn(move || worker_loop(rx, router, metrics))
+        };
+
+        // A rank-mismatched key slips past validate only if constructed
+        // by hand; plan building then panics inside the worker.
+        let (reply_bad, rx_bad) = channel();
+        batch_tx
+            .send(Batch {
+                key: PlanKey { op: TransformOp::Dct2d, shape: vec![4] },
+                items: vec![Pending {
+                    request: Request {
+                        id: 1,
+                        op: TransformOp::Dct2d,
+                        shape: vec![4],
+                        data: vec![0.0; 4],
+                    },
+                    reply: reply_bad,
+                    enqueued: Instant::now(),
+                }],
+            })
+            .unwrap();
+        let bad = rx_bad.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        let err = bad.expect_err("panicking plan must surface as an error");
+        assert!(err.contains("panicked"), "got: {err}");
+
+        // the same worker thread must still serve well-formed batches
+        let (reply_ok, rx_ok) = channel();
+        let mut rng = Rng::new(203);
+        let x = rng.normal_vec(16);
+        batch_tx
+            .send(Batch {
+                key: PlanKey { op: TransformOp::Dct2d, shape: vec![4, 4] },
+                items: vec![Pending {
+                    request: Request {
+                        id: 2,
+                        op: TransformOp::Dct2d,
+                        shape: vec![4, 4],
+                        data: x.clone(),
+                    },
+                    reply: reply_ok,
+                    enqueued: Instant::now(),
+                }],
+            })
+            .unwrap();
+        let ok = rx_ok.recv_timeout(std::time::Duration::from_secs(5)).unwrap().unwrap();
+        check_close(&ok.output, &dct2d_direct(&x, 4, 4), 1e-9).unwrap();
+        drop(batch_tx);
+        worker.join().expect("worker exits cleanly after channel close");
+    }
+
+    #[test]
+    fn config_worker_count_is_respected() {
+        // 1 worker must still drain many requests (no hidden
+        // available_parallelism override)
+        let s = svc(1);
+        let mut rng = Rng::new(204);
+        let reqs: Vec<_> = (0..16)
+            .map(|_| (TransformOp::Dct2d, vec![8usize, 8usize], rng.normal_vec(64)))
+            .collect();
+        let out = s.transform_many(reqs).unwrap();
+        assert_eq!(out.len(), 16);
     }
 }

@@ -14,8 +14,11 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::fft::{onesided_len, C64, Rfft2Plan};
+use crate::parallel::{global_pool, par_chunks_mut, split_groups, ExecPolicy};
 
-use super::reorder::{reorder_2d_scatter, unreorder_2d};
+use super::reorder::{
+    reorder_2d_gather_row, reorder_2d_scatter, unreorder_2d, unreorder_2d_row,
+};
 use super::twiddle::{twiddle, Twiddle};
 use crate::util::scratch;
 
@@ -33,6 +36,25 @@ impl StageTimes {
     }
 }
 
+/// Split `out` into the §III-B row pairs (k1, N1-k1): each item owns
+/// output row k1 and, when distinct, row m1 = N1-k1. Pairs touch
+/// disjoint rows, so they are the unit of postprocess parallelism.
+fn claim_row_pairs(
+    out: &mut [f64],
+    n1: usize,
+    n2: usize,
+) -> Vec<(usize, &mut [f64], Option<&mut [f64]>)> {
+    let mut rows: Vec<Option<&mut [f64]>> = out.chunks_mut(n2).map(Some).collect();
+    let mut pairs = Vec::with_capacity(n1 / 2 + 1);
+    for k1 in 0..=n1 / 2 {
+        let m1 = (n1 - k1) % n1;
+        let top = rows[k1].take().expect("each row claimed once");
+        let bot = if m1 != k1 { rows[m1].take() } else { None };
+        pairs.push((k1, top, bot));
+    }
+    pairs
+}
+
 /// Fused 2D DCT plan.
 #[derive(Debug, Clone)]
 pub struct Dct2 {
@@ -42,17 +64,25 @@ pub struct Dct2 {
     rfft2: Rfft2Plan,
     tw1: Arc<Twiddle>,
     tw2: Arc<Twiddle>,
+    policy: ExecPolicy,
 }
 
 impl Dct2 {
     pub fn new(n1: usize, n2: usize) -> Dct2 {
+        Self::with_policy(n1, n2, ExecPolicy::Auto)
+    }
+
+    /// Plan with an explicit execution policy (threaded through all
+    /// three stages and the inner 2D RFFT).
+    pub fn with_policy(n1: usize, n2: usize, policy: ExecPolicy) -> Dct2 {
         Dct2 {
             n1,
             n2,
             h2: onesided_len(n2),
-            rfft2: Rfft2Plan::new(n1, n2),
+            rfft2: Rfft2Plan::with_policy(n1, n2, policy),
             tw1: twiddle(n1),
             tw2: twiddle(n2),
+            policy,
         }
     }
 
@@ -69,7 +99,15 @@ impl Dct2 {
 
         let t0 = Instant::now();
         let mut pre = scratch::take_f64(n1 * n2);
-        reorder_2d_scatter(x, &mut pre, n1, n2);
+        let lanes = self.policy.lanes(n1 * n2);
+        if lanes > 1 {
+            // gather order is row-local on the output, so rows fan out
+            par_chunks_mut(&mut pre, n2, lanes, |r, row| {
+                reorder_2d_gather_row(x, row, r, n1, n2);
+            });
+        } else {
+            reorder_2d_scatter(x, &mut pre, n1, n2);
+        }
         let t1 = Instant::now();
         let mut spec = scratch::take_c64(n1 * h2);
         self.rfft2.forward(&pre, &mut spec);
@@ -97,33 +135,65 @@ impl Dct2 {
     ///   y(m1,  k2)    =  2 Im(R + S)
     ///   y(m1,  N2-k2) =  2 Re(R - S)
     pub fn postprocess(&self, spec: &[C64], out: &mut [f64]) {
+        let n1 = self.n1;
+        let lanes = self.policy.lanes(n1 * self.n2);
+        let mut pairs = claim_row_pairs(out, n1, self.n2);
+        if lanes > 1 && pairs.len() > 1 {
+            let groups = split_groups(pairs, lanes);
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = groups
+                .into_iter()
+                .map(|group| {
+                    Box::new(move || {
+                        for (k1, top, bot) in group {
+                            self.postprocess_pair(spec, k1, top, bot);
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            global_pool().scope(jobs);
+        } else {
+            for (k1, top, bot) in pairs.drain(..) {
+                self.postprocess_pair(spec, k1, top, bot);
+            }
+        }
+    }
+
+    /// Postprocess one row pair (k1, N1-k1): reads spectrum rows k1 and
+    /// m1, writes output rows `top` (= k1) and `bot` (= m1 when
+    /// distinct). Arithmetic per element is identical across serial and
+    /// parallel dispatch, so outputs are bit-equal either way.
+    fn postprocess_pair(
+        &self,
+        spec: &[C64],
+        k1: usize,
+        top: &mut [f64],
+        mut bot: Option<&mut [f64]>,
+    ) {
         let (n1, n2, h2) = (self.n1, self.n2, self.h2);
-        for k1 in 0..=n1 / 2 {
-            let m1 = (n1 - k1) % n1;
-            let a = self.tw1.at(k1);
-            let row1 = k1 * h2;
-            let row2 = m1 * h2;
-            for k2 in 0..h2 {
-                let b = self.tw2.at(k2);
-                let ab = a * b;
-                let abc = a * b.conj();
-                let v1 = spec[row1 + k2];
-                let v2 = spec[row2 + k2];
-                let p = ab * v1;
-                let q = abc * v2.conj();
-                out[k1 * n2 + k2] = 2.0 * (p.re + q.re);
-                let k2r = n2 - k2; // right-half partner column
-                let has_col = k2 > 0 && k2r != k2;
+        let m1 = (n1 - k1) % n1;
+        let a = self.tw1.at(k1);
+        let row1 = k1 * h2;
+        let row2 = m1 * h2;
+        for k2 in 0..h2 {
+            let b = self.tw2.at(k2);
+            let ab = a * b;
+            let abc = a * b.conj();
+            let v1 = spec[row1 + k2];
+            let v2 = spec[row2 + k2];
+            let p = ab * v1;
+            let q = abc * v2.conj();
+            top[k2] = 2.0 * (p.re + q.re);
+            let k2r = n2 - k2; // right-half partner column
+            let has_col = k2 > 0 && k2r != k2;
+            if has_col {
+                top[k2r] = -2.0 * (p.im - q.im);
+            }
+            if let Some(bottom) = bot.as_deref_mut() {
+                let r = abc.conj() * v2;
+                let s = ab.conj() * v1.conj();
+                bottom[k2] = 2.0 * (r.im + s.im);
                 if has_col {
-                    out[k1 * n2 + k2r] = -2.0 * (p.im - q.im);
-                }
-                if m1 != k1 {
-                    let r = abc.conj() * v2;
-                    let s = ab.conj() * v1.conj();
-                    out[m1 * n2 + k2] = 2.0 * (r.im + s.im);
-                    if has_col {
-                        out[m1 * n2 + k2r] = 2.0 * (r.re - s.re);
-                    }
+                    bottom[k2r] = 2.0 * (r.re - s.re);
                 }
             }
         }
@@ -164,17 +234,24 @@ pub struct Idct2 {
     rfft2: Rfft2Plan,
     tw1: Arc<Twiddle>,
     tw2: Arc<Twiddle>,
+    policy: ExecPolicy,
 }
 
 impl Idct2 {
     pub fn new(n1: usize, n2: usize) -> Idct2 {
+        Self::with_policy(n1, n2, ExecPolicy::Auto)
+    }
+
+    /// Plan with an explicit execution policy.
+    pub fn with_policy(n1: usize, n2: usize, policy: ExecPolicy) -> Idct2 {
         Idct2 {
             n1,
             n2,
             h2: onesided_len(n2),
-            rfft2: Rfft2Plan::new(n1, n2),
+            rfft2: Rfft2Plan::with_policy(n1, n2, policy),
             tw1: twiddle(n1),
             tw2: twiddle(n2),
+            policy,
         }
     }
 
@@ -195,7 +272,14 @@ impl Idct2 {
         let mut v = scratch::take_f64(n1 * n2);
         self.rfft2.inverse(&spec, &mut v);
         let t2 = Instant::now();
-        unreorder_2d(&v, out, n1, n2);
+        let lanes = self.policy.lanes(n1 * n2);
+        if lanes > 1 {
+            par_chunks_mut(out, n2, lanes, |r, row| {
+                unreorder_2d_row(&v, row, r, n1, n2);
+            });
+        } else {
+            unreorder_2d(&v, out, n1, n2);
+        }
         let t3 = Instant::now();
         scratch::give_c64(spec);
         scratch::give_f64(v);
@@ -211,22 +295,31 @@ impl Idct2 {
     /// zero boundaries, and writes one complex value:
     ///   V = conj(a) conj(b) / 4 * ( (x11 - x22) - j (x21 + x12) )
     pub fn preprocess(&self, x: &[f64], spec: &mut [C64]) {
+        let lanes = self.policy.lanes(self.n1 * self.n2);
+        // each spectrum row k1 only *reads* input rows k1 / n1-k1, so
+        // rows are independent and fan out directly
+        par_chunks_mut(spec, self.h2, lanes, |k1, srow| {
+            self.preprocess_row(x, k1, srow);
+        });
+    }
+
+    /// Build one onesided spectrum row (the per-lane preprocess kernel).
+    fn preprocess_row(&self, x: &[f64], k1: usize, srow: &mut [C64]) {
         let (n1, n2, h2) = (self.n1, self.n2, self.h2);
-        for k1 in 0..n1 {
-            let ac = self.tw1.conj_at(k1);
-            for k2 in 0..h2 {
-                let bc = self.tw2.conj_at(k2);
-                let x11 = x[k1 * n2 + k2];
-                let x21 = if k1 == 0 { 0.0 } else { x[(n1 - k1) * n2 + k2] };
-                let x12 = if k2 == 0 { 0.0 } else { x[k1 * n2 + (n2 - k2)] };
-                let x22 = if k1 == 0 || k2 == 0 {
-                    0.0
-                } else {
-                    x[(n1 - k1) * n2 + (n2 - k2)]
-                };
-                let z = C64::new(x11 - x22, -(x21 + x12));
-                spec[k1 * h2 + k2] = (ac * bc * z).scale(0.25);
-            }
+        debug_assert_eq!(srow.len(), h2);
+        let ac = self.tw1.conj_at(k1);
+        for k2 in 0..h2 {
+            let bc = self.tw2.conj_at(k2);
+            let x11 = x[k1 * n2 + k2];
+            let x21 = if k1 == 0 { 0.0 } else { x[(n1 - k1) * n2 + k2] };
+            let x12 = if k2 == 0 { 0.0 } else { x[k1 * n2 + (n2 - k2)] };
+            let x22 = if k1 == 0 || k2 == 0 {
+                0.0
+            } else {
+                x[(n1 - k1) * n2 + (n2 - k2)]
+            };
+            let z = C64::new(x11 - x22, -(x21 + x12));
+            srow[k2] = (ac * bc * z).scale(0.25);
         }
     }
 }
@@ -286,6 +379,26 @@ mod tests {
             plan.postprocess_naive(&spec, &mut b);
             check_close(&a, &b, 1e-10)
         });
+    }
+
+    #[test]
+    fn parallel_policy_is_bit_equal_to_serial() {
+        use crate::parallel::ExecPolicy;
+        let mut rng = crate::util::rng::Rng::new(40);
+        // odd, prime (Bluestein on both axes), and power-of-two shapes
+        for &(n1, n2) in &[(9usize, 15usize), (13, 7), (16, 16), (1, 8), (2, 2), (31, 10)] {
+            let x = rng.normal_vec(n1 * n2);
+            let mut ys = vec![0.0; n1 * n2];
+            let mut yp = vec![0.0; n1 * n2];
+            Dct2::with_policy(n1, n2, ExecPolicy::Serial).forward(&x, &mut ys);
+            Dct2::with_policy(n1, n2, ExecPolicy::Threads(4)).forward(&x, &mut yp);
+            assert_eq!(ys, yp, "dct2 ({n1},{n2})");
+            let mut bs = vec![0.0; n1 * n2];
+            let mut bp = vec![0.0; n1 * n2];
+            Idct2::with_policy(n1, n2, ExecPolicy::Serial).forward(&ys, &mut bs);
+            Idct2::with_policy(n1, n2, ExecPolicy::Threads(4)).forward(&yp, &mut bp);
+            assert_eq!(bs, bp, "idct2 ({n1},{n2})");
+        }
     }
 
     #[test]

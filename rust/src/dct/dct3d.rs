@@ -16,8 +16,9 @@
 
 use std::sync::Arc;
 
-use crate::fft::nd::rfft3;
+use crate::fft::nd::rfft3_threads;
 use crate::fft::{onesided_len, C64};
+use crate::parallel::{par_chunks_mut, ExecPolicy};
 
 use super::reorder::src_index_1d;
 use super::twiddle::{twiddle, Twiddle};
@@ -31,27 +32,44 @@ pub struct Dct3d {
     tw1: Arc<Twiddle>,
     tw2: Arc<Twiddle>,
     tw3: Arc<Twiddle>,
+    policy: ExecPolicy,
 }
 
 impl Dct3d {
     pub fn new(n1: usize, n2: usize, n3: usize) -> Dct3d {
-        Dct3d { n1, n2, n3, tw1: twiddle(n1), tw2: twiddle(n2), tw3: twiddle(n3) }
+        Self::with_policy(n1, n2, n3, ExecPolicy::Auto)
+    }
+
+    /// Plan with an explicit execution policy: all three stages
+    /// parallelize over (i)-slabs of the tensor.
+    pub fn with_policy(n1: usize, n2: usize, n3: usize, policy: ExecPolicy) -> Dct3d {
+        Dct3d {
+            n1,
+            n2,
+            n3,
+            tw1: twiddle(n1),
+            tw2: twiddle(n2),
+            tw3: twiddle(n3),
+            policy,
+        }
     }
 
     /// Eq. (13) generalized: butterfly reorder along all three axes.
+    /// Output slabs (fixed i) are independent, so they fan out.
     pub fn preprocess(&self, x: &[f64], out: &mut [f64]) {
         let (n1, n2, n3) = (self.n1, self.n2, self.n3);
-        for i in 0..n1 {
+        let lanes = self.policy.lanes(n1 * n2 * n3);
+        par_chunks_mut(out, n2 * n3, lanes, |i, slab| {
             let si = src_index_1d(i, n1);
             for j in 0..n2 {
                 let sj = src_index_1d(j, n2);
                 let src_base = (si * n2 + sj) * n3;
-                let dst_base = (i * n2 + j) * n3;
-                for k in 0..n3 {
-                    out[dst_base + k] = x[src_base + src_index_1d(k, n3)];
+                let dst = &mut slab[j * n3..(j + 1) * n3];
+                for (k, d) in dst.iter_mut().enumerate() {
+                    *d = x[src_base + src_index_1d(k, n3)];
                 }
             }
-        }
+        });
     }
 
     /// Full fused 3D DCT.
@@ -59,13 +77,25 @@ impl Dct3d {
         let (n1, n2, n3) = (self.n1, self.n2, self.n3);
         assert_eq!(x.len(), n1 * n2 * n3);
         assert_eq!(out.len(), n1 * n2 * n3);
+        let lanes = self.policy.lanes(n1 * n2 * n3);
         let mut pre = vec![0.0; n1 * n2 * n3];
         self.preprocess(x, &mut pre);
-        let spec = rfft3(&pre, n1, n2, n3);
+        let spec = rfft3_threads(&pre, n1, n2, n3, lanes);
         self.postprocess(&spec, out);
     }
 
     fn postprocess(&self, spec: &[C64], out: &mut [f64]) {
+        let (n1, n2, n3) = (self.n1, self.n2, self.n3);
+        let lanes = self.policy.lanes(n1 * n2 * n3);
+        // each output slab (fixed k1) only reads the spectrum, so slabs
+        // fan out directly
+        par_chunks_mut(out, n2 * n3, lanes, |k1, slab| {
+            self.postprocess_slab(spec, k1, slab);
+        });
+    }
+
+    /// Postprocess one (k1)-slab: out(k1, k2, k3) for all k2, k3.
+    fn postprocess_slab(&self, spec: &[C64], k1: usize, slab: &mut [f64]) {
         let (n1, n2, n3) = (self.n1, self.n2, self.n3);
         let h3 = onesided_len(n3);
         // onesided accessor with Hermitian reconstruction for k3 >= h3
@@ -76,20 +106,18 @@ impl Dct3d {
                 spec[(((n1 - i) % n1) * n2 + ((n2 - j) % n2)) * h3 + (n3 - k)].conj()
             }
         };
-        for k1 in 0..n1 {
-            let m1 = (n1 - k1) % n1;
-            let a = self.tw1.at(k1);
-            for k2 in 0..n2 {
-                let m2 = (n2 - k2) % n2;
-                let b = self.tw2.at(k2);
-                for k3 in 0..n3 {
-                    let c = self.tw3.at(k3);
-                    let t = b * c * read(k1, k2, k3)
-                        + b * c.conj() * read(m1, m2, k3).conj()
-                        + b.conj() * c.conj() * read(m1, k2, k3).conj()
-                        + b.conj() * c * read(k1, m2, k3);
-                    out[(k1 * n2 + k2) * n3 + k3] = 2.0 * (a * t).re;
-                }
+        let m1 = (n1 - k1) % n1;
+        let a = self.tw1.at(k1);
+        for k2 in 0..n2 {
+            let m2 = (n2 - k2) % n2;
+            let b = self.tw2.at(k2);
+            for k3 in 0..n3 {
+                let c = self.tw3.at(k3);
+                let t = b * c * read(k1, k2, k3)
+                    + b * c.conj() * read(m1, m2, k3).conj()
+                    + b.conj() * c.conj() * read(m1, k2, k3).conj()
+                    + b.conj() * c * read(k1, m2, k3);
+                slab[k2 * n3 + k3] = 2.0 * (a * t).re;
             }
         }
     }
@@ -119,6 +147,20 @@ mod tests {
             plan.forward(&x, &mut out);
             check_close(&out, &dct3d_direct(&x, n1, n2, n3), 1e-9)
                 .unwrap_or_else(|e| panic!("({n1},{n2},{n3}): {e}"));
+        }
+    }
+
+    #[test]
+    fn parallel_policy_is_bit_equal_to_serial() {
+        use crate::parallel::ExecPolicy;
+        let mut rng = Rng::new(72);
+        for &(n1, n2, n3) in &[(4usize, 6usize, 8usize), (3, 5, 7), (8, 8, 8)] {
+            let x = rng.normal_vec(n1 * n2 * n3);
+            let mut ys = vec![0.0; x.len()];
+            let mut yp = vec![0.0; x.len()];
+            Dct3d::with_policy(n1, n2, n3, ExecPolicy::Serial).forward(&x, &mut ys);
+            Dct3d::with_policy(n1, n2, n3, ExecPolicy::Threads(3)).forward(&x, &mut yp);
+            assert_eq!(ys, yp, "({n1},{n2},{n3})");
         }
     }
 

@@ -121,6 +121,11 @@ impl Dst2 {
         Dst2 { n1, n2, dct: Dct2::new(n1, n2) }
     }
 
+    /// Plan whose inner fused DCT carries an explicit execution policy.
+    pub fn with_policy(n1: usize, n2: usize, policy: crate::parallel::ExecPolicy) -> Dst2 {
+        Dst2 { n1, n2, dct: Dct2::with_policy(n1, n2, policy) }
+    }
+
     pub fn forward(&self, x: &[f64], out: &mut [f64]) {
         let (n1, n2) = (self.n1, self.n2);
         assert_eq!(x.len(), n1 * n2);
@@ -157,6 +162,11 @@ pub struct Idst2 {
 impl Idst2 {
     pub fn new(n1: usize, n2: usize) -> Idst2 {
         Idst2 { n1, n2, idct: Idct2::new(n1, n2) }
+    }
+
+    /// Plan whose inner fused IDCT carries an explicit execution policy.
+    pub fn with_policy(n1: usize, n2: usize, policy: crate::parallel::ExecPolicy) -> Idst2 {
+        Idst2 { n1, n2, idct: Idct2::with_policy(n1, n2, policy) }
     }
 
     pub fn forward(&self, x: &[f64], out: &mut [f64]) {

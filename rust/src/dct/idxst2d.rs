@@ -33,6 +33,16 @@ impl IdxstCombo {
         IdxstCombo { n1, n2, combo, idct: Idct2::new(n1, n2) }
     }
 
+    /// Plan whose inner fused IDCT carries an explicit execution policy.
+    pub fn with_policy(
+        n1: usize,
+        n2: usize,
+        combo: Combo,
+        policy: crate::parallel::ExecPolicy,
+    ) -> IdxstCombo {
+        IdxstCombo { n1, n2, combo, idct: Idct2::with_policy(n1, n2, policy) }
+    }
+
     pub fn forward(&self, x: &[f64], out: &mut [f64]) {
         self.forward_timed(x, out);
     }

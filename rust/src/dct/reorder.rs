@@ -56,18 +56,27 @@ pub fn unreorder_1d(v: &[f64], out: &mut [f64]) {
     }
 }
 
+/// One output row of the 2D gather reorder: fills `out_row` with
+/// reordered row `r`. Row-local writes make this the parallel kernel
+/// behind the fused preprocess (each pool lane owns a band of rows).
+#[inline]
+pub fn reorder_2d_gather_row(x: &[f64], out_row: &mut [f64], r: usize, n1: usize, n2: usize) {
+    debug_assert_eq!(x.len(), n1 * n2);
+    debug_assert_eq!(out_row.len(), n2);
+    let sr = src_index_1d(r, n1);
+    let src = &x[sr * n2..(sr + 1) * n2];
+    for (c, d) in out_row.iter_mut().enumerate() {
+        *d = src[src_index_1d(c, n2)];
+    }
+}
+
 /// 2D fused butterfly reorder (Eq. 13), gather order: one pass over the
 /// output matrix, reading x[src1][src2].
 pub fn reorder_2d_gather(x: &[f64], out: &mut [f64], n1: usize, n2: usize) {
     debug_assert_eq!(x.len(), n1 * n2);
     debug_assert_eq!(out.len(), n1 * n2);
-    for r in 0..n1 {
-        let sr = src_index_1d(r, n1);
-        let dst = &mut out[r * n2..(r + 1) * n2];
-        let src = &x[sr * n2..(sr + 1) * n2];
-        for (c, d) in dst.iter_mut().enumerate() {
-            *d = src[src_index_1d(c, n2)];
-        }
+    for (r, row) in out.chunks_mut(n2).enumerate() {
+        reorder_2d_gather_row(x, row, r, n1, n2);
     }
 }
 
@@ -87,17 +96,25 @@ pub fn reorder_2d_scatter(x: &[f64], out: &mut [f64], n1: usize, n2: usize) {
     }
 }
 
+/// One output row of the 2D un-reorder (parallel kernel of the fused
+/// IDCT postprocess): y[r][c] = v[dst1(r)][dst2(c)].
+#[inline]
+pub fn unreorder_2d_row(v: &[f64], out_row: &mut [f64], r: usize, n1: usize, n2: usize) {
+    debug_assert_eq!(v.len(), n1 * n2);
+    debug_assert_eq!(out_row.len(), n2);
+    let sr = dst_index_1d(r, n1);
+    let src = &v[sr * n2..(sr + 1) * n2];
+    for (c, d) in out_row.iter_mut().enumerate() {
+        *d = src[dst_index_1d(c, n2)];
+    }
+}
+
 /// Inverse of the 2D reorder (Eq. 16): y[r][c] = v[dst1(r)][dst2(c)].
 pub fn unreorder_2d(v: &[f64], out: &mut [f64], n1: usize, n2: usize) {
     debug_assert_eq!(v.len(), n1 * n2);
     debug_assert_eq!(out.len(), n1 * n2);
-    for r in 0..n1 {
-        let sr = dst_index_1d(r, n1);
-        let src = &v[sr * n2..(sr + 1) * n2];
-        let dst = &mut out[r * n2..(r + 1) * n2];
-        for (c, d) in dst.iter_mut().enumerate() {
-            *d = src[dst_index_1d(c, n2)];
-        }
+    for (r, row) in out.chunks_mut(n2).enumerate() {
+        unreorder_2d_row(v, row, r, n1, n2);
     }
 }
 

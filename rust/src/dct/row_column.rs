@@ -8,22 +8,13 @@
 //! fused path eliminates.
 
 use super::dct1d::{Algo1d, Dct1d, Idct1d, Idxst1d};
+use crate::parallel::{par_chunks_mut, transpose_into, ExecPolicy};
+use crate::util::scratch;
 
 /// Transpose a row-major (n1 x n2) matrix into `out` (n2 x n1).
+/// (Serial entry point; the plan's policy drives the parallel one.)
 pub fn transpose(x: &[f64], out: &mut [f64], n1: usize, n2: usize) {
-    debug_assert_eq!(x.len(), n1 * n2);
-    debug_assert_eq!(out.len(), n1 * n2);
-    // simple blocked transpose for cache friendliness
-    const B: usize = 32;
-    for rb in (0..n1).step_by(B) {
-        for cb in (0..n2).step_by(B) {
-            for r in rb..(rb + B).min(n1) {
-                for c in cb..(cb + B).min(n2) {
-                    out[c * n1 + r] = x[r * n2 + c];
-                }
-            }
-        }
-    }
+    transpose_into(x, out, n1, n2, 1);
 }
 
 /// One of the supported per-axis 1D transforms.
@@ -60,6 +51,7 @@ pub struct RowColumn {
     pub n2: usize,
     row: Axis1d,
     col: Axis1d,
+    policy: ExecPolicy,
 }
 
 impl RowColumn {
@@ -70,6 +62,7 @@ impl RowColumn {
             n2,
             row: Axis1d::Dct(Dct1d::new(n2, Algo1d::NPoint)),
             col: Axis1d::Dct(Dct1d::new(n1, Algo1d::NPoint)),
+            policy: ExecPolicy::Auto,
         }
     }
 
@@ -80,6 +73,7 @@ impl RowColumn {
             n2,
             row: Axis1d::Idct(Idct1d::new(n2)),
             col: Axis1d::Idct(Idct1d::new(n1)),
+            policy: ExecPolicy::Auto,
         }
     }
 
@@ -90,6 +84,7 @@ impl RowColumn {
             n2,
             row: Axis1d::Idct(Idct1d::new(n2)),
             col: Axis1d::Idxst(Idxst1d::new(n1)),
+            policy: ExecPolicy::Auto,
         }
     }
 
@@ -100,7 +95,16 @@ impl RowColumn {
             n2,
             row: Axis1d::Idxst(Idxst1d::new(n2)),
             col: Axis1d::Idct(Idct1d::new(n1)),
+            policy: ExecPolicy::Auto,
         }
+    }
+
+    /// Override the execution policy (builder style). The baseline gets
+    /// the same parallel substrate as the fused path so the paper's
+    /// comparison stays apples-to-apples at every thread count.
+    pub fn with_policy(mut self, policy: ExecPolicy) -> RowColumn {
+        self.policy = policy;
+        self
     }
 
     /// Execute the row-column pipeline (8 full-matrix memory stages).
@@ -110,21 +114,27 @@ impl RowColumn {
         assert_eq!(out.len(), n1 * n2);
         debug_assert_eq!(self.row.n(), n2);
         debug_assert_eq!(self.col.n(), n1);
-        // pass 1: 1D transform along each row
-        let mut a = vec![0.0; n1 * n2];
-        for r in 0..n1 {
-            self.row.forward(&x[r * n2..(r + 1) * n2], &mut a[r * n2..(r + 1) * n2]);
-        }
-        // transpose
-        let mut at = vec![0.0; n1 * n2];
-        transpose(&a, &mut at, n1, n2);
+        let lanes = self.policy.lanes(n1 * n2);
+        // pass 1: 1D transform along each row (rows fan out)
+        let mut a = scratch::take_f64(n1 * n2);
+        let row = &self.row;
+        par_chunks_mut(&mut a, n2, lanes, |r, arow| {
+            row.forward(&x[r * n2..(r + 1) * n2], arow);
+        });
+        // transpose (parallel tiled)
+        let mut at = scratch::take_f64(n1 * n2);
+        transpose_into(&a, &mut at, n1, n2, lanes);
         // pass 2: 1D transform along each (former) column
-        let mut b = vec![0.0; n1 * n2];
-        for r in 0..n2 {
-            self.col.forward(&at[r * n1..(r + 1) * n1], &mut b[r * n1..(r + 1) * n1]);
-        }
+        let mut b = scratch::take_f64(n1 * n2);
+        let col = &self.col;
+        par_chunks_mut(&mut b, n1, lanes, |r, brow| {
+            col.forward(&at[r * n1..(r + 1) * n1], brow);
+        });
         // transpose back
-        transpose(&b, out, n2, n1);
+        transpose_into(&b, out, n2, n1, lanes);
+        scratch::give_f64(a);
+        scratch::give_f64(at);
+        scratch::give_f64(b);
     }
 }
 
@@ -173,6 +183,20 @@ mod tests {
             Idct2::new(n1, n2).forward(&x, &mut fused);
             check_close(&rc, &fused, 1e-9)
         });
+    }
+
+    #[test]
+    fn parallel_policy_is_bit_equal_to_serial() {
+        use crate::parallel::ExecPolicy;
+        let mut rng = crate::util::rng::Rng::new(61);
+        for &(n1, n2) in &[(9usize, 15usize), (13, 7), (16, 16), (32, 8)] {
+            let x = rng.normal_vec(n1 * n2);
+            let mut ys = vec![0.0; n1 * n2];
+            let mut yp = vec![0.0; n1 * n2];
+            RowColumn::dct2(n1, n2).with_policy(ExecPolicy::Serial).forward(&x, &mut ys);
+            RowColumn::dct2(n1, n2).with_policy(ExecPolicy::Threads(4)).forward(&x, &mut yp);
+            assert_eq!(ys, yp, "({n1},{n2})");
+        }
     }
 
     #[test]

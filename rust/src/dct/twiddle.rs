@@ -5,9 +5,7 @@
 //! cached per size alongside the FFT plans.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
-
-use once_cell::sync::Lazy;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::fft::C64;
 
@@ -37,12 +35,11 @@ impl Twiddle {
     }
 }
 
-static TW_CACHE: Lazy<Mutex<HashMap<usize, Arc<Twiddle>>>> =
-    Lazy::new(|| Mutex::new(HashMap::new()));
+static TW_CACHE: OnceLock<Mutex<HashMap<usize, Arc<Twiddle>>>> = OnceLock::new();
 
 /// Fetch (or build and cache) the twiddle table for size n.
 pub fn twiddle(n: usize) -> Arc<Twiddle> {
-    let mut cache = TW_CACHE.lock().unwrap();
+    let mut cache = TW_CACHE.get_or_init(|| Mutex::new(HashMap::new())).lock().unwrap();
     cache.entry(n).or_insert_with(|| Arc::new(Twiddle::new(n))).clone()
 }
 

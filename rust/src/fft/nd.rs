@@ -1,10 +1,21 @@
 //! Multi-dimensional FFTs over row-major matrices (the paper's "MD FFT"
 //! stage): 2D RFFT/IRFFT (rows real-to-complex, columns complex) and a 3D
 //! RFFT for the 3D-DCT extension discussed in §III-D.
+//!
+//! Parallel execution: plans carry an [`ExecPolicy`]. Multi-lane runs
+//! fan the row batch out over the shared pool and run the column stage
+//! as transpose -> contiguous row FFTs -> transpose (each transpose is
+//! the parallel tiled one), which keeps every lane's memory access
+//! sequential — the same locality argument as the serial
+//! `transform_cols` vectorization, but scalable across cores. The
+//! per-element arithmetic is identical in serial and parallel paths, so
+//! outputs agree bit-for-bit.
 
 use super::complex::C64;
 use super::plan::plan;
 use super::rfft::{onesided_len, RfftPlan};
+use crate::parallel::{par_chunks_mut, transpose_into, ExecPolicy};
+use crate::util::scratch;
 
 /// 2D RFFT plan for an (n1 x n2) real matrix -> (n1 x h2) onesided spectrum.
 #[derive(Debug, Clone)]
@@ -14,16 +25,23 @@ pub struct Rfft2Plan {
     pub h2: usize,
     row: RfftPlan,
     col: std::sync::Arc<super::plan::FftPlan>,
+    policy: ExecPolicy,
 }
 
 impl Rfft2Plan {
     pub fn new(n1: usize, n2: usize) -> Rfft2Plan {
+        Self::with_policy(n1, n2, ExecPolicy::Auto)
+    }
+
+    /// Plan with an explicit execution policy.
+    pub fn with_policy(n1: usize, n2: usize, policy: ExecPolicy) -> Rfft2Plan {
         Rfft2Plan {
             n1,
             n2,
             h2: onesided_len(n2),
             row: RfftPlan::new(n2),
             col: plan(n1),
+            policy,
         }
     }
 
@@ -32,6 +50,12 @@ impl Rfft2Plan {
         let (n1, h2) = (self.n1, self.h2);
         assert_eq!(x.len(), n1 * self.n2);
         assert_eq!(out.len(), n1 * h2);
+        let lanes = self.policy.lanes(n1 * self.n2);
+        if lanes > 1 {
+            self.row.forward_batch(x, out, lanes);
+            self.col_fft_parallel(out, false, lanes);
+            return;
+        }
         // rows: real FFT
         for r in 0..n1 {
             self.row
@@ -62,8 +86,15 @@ impl Rfft2Plan {
         let (n1, h2) = (self.n1, self.h2);
         assert_eq!(spec.len(), n1 * h2);
         assert_eq!(out.len(), n1 * self.n2);
-        let mut work = crate::util::scratch::take_c64(spec.len());
+        let lanes = self.policy.lanes(n1 * self.n2);
+        let mut work = scratch::take_c64(spec.len());
         work.copy_from_slice(spec);
+        if lanes > 1 {
+            self.col_fft_parallel(&mut work, true, lanes);
+            self.row.inverse_batch(&work, out, lanes);
+            scratch::give_c64(work);
+            return;
+        }
         match &*self.col {
             super::plan::FftPlan::Radix2(p) => p.transform_cols(&mut work, h2, true),
             _ => {
@@ -83,7 +114,29 @@ impl Rfft2Plan {
             self.row
                 .inverse(&work[r * h2..(r + 1) * h2], &mut out[r * self.n2..(r + 1) * self.n2]);
         }
-        crate::util::scratch::give_c64(work);
+        scratch::give_c64(work);
+    }
+
+    /// Parallel column-axis FFT: transpose so columns become contiguous
+    /// rows, run the (radix-2 or Bluestein) n1-plan per row across the
+    /// pool, transpose back. Both transposes are parallel and tiled.
+    fn col_fft_parallel(&self, data: &mut [C64], invert: bool, lanes: usize) {
+        let (n1, h2) = (self.n1, self.h2);
+        if n1 <= 1 {
+            return; // length-1 column FFT is the identity
+        }
+        let mut t = scratch::take_c64(n1 * h2);
+        transpose_into(data, &mut t, n1, h2, lanes);
+        let col = &self.col;
+        par_chunks_mut(&mut t, n1, lanes, |_c, colbuf| {
+            if invert {
+                col.inverse(colbuf);
+            } else {
+                col.forward(colbuf);
+            }
+        });
+        transpose_into(&t, data, h2, n1, lanes);
+        scratch::give_c64(t);
     }
 }
 
@@ -119,37 +172,61 @@ pub fn fft2_inplace(data: &mut [C64], n1: usize, n2: usize, invert: bool) {
 /// 3D RFFT: (n1 x n2 x n3) real -> (n1 x n2 x h3) onesided complex.
 /// Used by the 3D-DCT extension (paper §III-D).
 pub fn rfft3(x: &[f64], n1: usize, n2: usize, n3: usize) -> Vec<C64> {
+    rfft3_threads(x, n1, n2, n3, 1)
+}
+
+/// [`rfft3`] fanned out over up to `lanes` pool workers: the n3-axis
+/// RFFT batch parallelizes per row, the n2-axis stage per (i)-slab, and
+/// the n1-axis stage via the parallel transpose trick. `lanes <= 1` is
+/// the serial reference path.
+pub fn rfft3_threads(x: &[f64], n1: usize, n2: usize, n3: usize, lanes: usize) -> Vec<C64> {
     assert_eq!(x.len(), n1 * n2 * n3);
     let h3 = onesided_len(n3);
     let rp = RfftPlan::new(n3);
     let mut out = vec![C64::default(); n1 * n2 * h3];
-    for s in 0..n1 * n2 {
-        rp.forward(&x[s * n3..(s + 1) * n3], &mut out[s * h3..(s + 1) * h3]);
+    if lanes > 1 {
+        rp.forward_batch(x, &mut out, lanes);
+    } else {
+        for s in 0..n1 * n2 {
+            rp.forward(&x[s * n3..(s + 1) * n3], &mut out[s * h3..(s + 1) * h3]);
+        }
     }
-    // FFT along dim 2 (n2) then dim 1 (n1)
+    // FFT along dim 2 (n2): each i-slab (n2 x h3) is contiguous, so
+    // slabs fan out directly
     let p2 = plan(n2);
-    let mut buf2 = vec![C64::default(); n2];
-    for i in 0..n1 {
+    par_chunks_mut(&mut out, n2 * h3, lanes, |_i, slab| {
+        let mut buf2 = vec![C64::default(); n2];
         for c in 0..h3 {
             for j in 0..n2 {
-                buf2[j] = out[(i * n2 + j) * h3 + c];
+                buf2[j] = slab[j * h3 + c];
             }
             p2.forward(&mut buf2);
             for j in 0..n2 {
-                out[(i * n2 + j) * h3 + c] = buf2[j];
+                slab[j * h3 + c] = buf2[j];
             }
         }
-    }
+    });
+    // FFT along dim 1 (n1): strided across slabs; view as an
+    // (n1 x n2*h3) matrix and use transpose -> row FFTs -> transpose
     let p1 = plan(n1);
-    let mut buf1 = vec![C64::default(); n1];
-    for j in 0..n2 {
-        for c in 0..h3 {
-            for i in 0..n1 {
-                buf1[i] = out[(i * n2 + j) * h3 + c];
-            }
-            p1.forward(&mut buf1);
-            for i in 0..n1 {
-                out[(i * n2 + j) * h3 + c] = buf1[i];
+    if n1 > 1 {
+        let m = n2 * h3;
+        if lanes > 1 {
+            let mut t = scratch::take_c64(n1 * m);
+            transpose_into(&out, &mut t, n1, m, lanes);
+            par_chunks_mut(&mut t, n1, lanes, |_s, row| p1.forward(row));
+            transpose_into(&t, &mut out, m, n1, lanes);
+            scratch::give_c64(t);
+        } else {
+            let mut buf1 = vec![C64::default(); n1];
+            for s in 0..m {
+                for i in 0..n1 {
+                    buf1[i] = out[i * m + s];
+                }
+                p1.forward(&mut buf1);
+                for i in 0..n1 {
+                    out[i * m + s] = buf1[i];
+                }
             }
         }
     }
@@ -226,6 +303,42 @@ mod tests {
         fft2_inplace(&mut y, n1, n2, true);
         for (a, b) in y.iter().zip(&x) {
             assert!((*a - *b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn parallel_policy_matches_serial_bitwise() {
+        let mut rng = Rng::new(34);
+        // odd, prime (Bluestein columns), and power-of-two shapes
+        for &(n1, n2) in &[(9usize, 15usize), (7, 13), (16, 16), (31, 8), (12, 10)] {
+            let x = rng.normal_vec(n1 * n2);
+            let serial = Rfft2Plan::with_policy(n1, n2, crate::parallel::ExecPolicy::Serial);
+            let par = Rfft2Plan::with_policy(n1, n2, crate::parallel::ExecPolicy::Threads(4));
+            let mut a = vec![C64::default(); n1 * serial.h2];
+            let mut b = vec![C64::default(); n1 * par.h2];
+            serial.forward(&x, &mut a);
+            par.forward(&x, &mut b);
+            for (u, v) in a.iter().zip(&b) {
+                assert!((*u - *v).abs() == 0.0, "({n1},{n2}) forward");
+            }
+            let mut ba = vec![0.0; n1 * n2];
+            let mut bb = vec![0.0; n1 * n2];
+            serial.inverse(&a, &mut ba);
+            par.inverse(&b, &mut bb);
+            assert_eq!(ba, bb, "({n1},{n2}) inverse");
+        }
+    }
+
+    #[test]
+    fn rfft3_threads_matches_serial() {
+        let mut rng = Rng::new(35);
+        for &(n1, n2, n3) in &[(4usize, 6usize, 8usize), (3, 5, 7), (8, 8, 8)] {
+            let x = rng.normal_vec(n1 * n2 * n3);
+            let a = rfft3(&x, n1, n2, n3);
+            let b = rfft3_threads(&x, n1, n2, n3, 4);
+            for (u, v) in a.iter().zip(&b) {
+                assert!((*u - *v).abs() == 0.0, "({n1},{n2},{n3})");
+            }
         }
     }
 

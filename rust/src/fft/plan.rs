@@ -6,9 +6,7 @@
 //! service hot path never rebuilds twiddles.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
-
-use once_cell::sync::Lazy;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use super::bluestein::BluesteinPlan;
 use super::complex::C64;
@@ -58,18 +56,21 @@ impl FftPlan {
     }
 }
 
-static PLAN_CACHE: Lazy<Mutex<HashMap<usize, Arc<FftPlan>>>> =
-    Lazy::new(|| Mutex::new(HashMap::new()));
+static PLAN_CACHE: OnceLock<Mutex<HashMap<usize, Arc<FftPlan>>>> = OnceLock::new();
+
+fn plan_cache() -> &'static Mutex<HashMap<usize, Arc<FftPlan>>> {
+    PLAN_CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
 
 /// Fetch (or build and cache) the plan for size `n`.
 pub fn plan(n: usize) -> Arc<FftPlan> {
-    let mut cache = PLAN_CACHE.lock().unwrap();
+    let mut cache = plan_cache().lock().unwrap();
     cache.entry(n).or_insert_with(|| Arc::new(FftPlan::new(n))).clone()
 }
 
 /// Number of cached FFT plans (metrics/introspection).
 pub fn cached_plan_count() -> usize {
-    PLAN_CACHE.lock().unwrap().len()
+    plan_cache().lock().unwrap().len()
 }
 
 #[cfg(test)]

@@ -77,6 +77,31 @@ impl RfftPlan {
         scratch::give_c64(z);
     }
 
+    /// Batched forward RFFT: `batch` packed rows of length `n` in `x`,
+    /// `batch` onesided rows of length `n/2+1` in `out`, fanned out over
+    /// up to `lanes` pool workers (`lanes <= 1` = inline serial loop).
+    /// Row scratch is per-thread, so workers never contend.
+    pub fn forward_batch(&self, x: &[f64], out: &mut [C64], lanes: usize) {
+        let (n, h) = (self.n, onesided_len(self.n));
+        assert_eq!(x.len() % n, 0, "input not a whole number of rows");
+        let batch = x.len() / n;
+        assert_eq!(out.len(), batch * h);
+        crate::parallel::par_chunks_mut(out, h, lanes, |r, orow| {
+            self.forward(&x[r * n..(r + 1) * n], orow);
+        });
+    }
+
+    /// Batched inverse RFFT: `batch` onesided rows -> `batch` real rows.
+    pub fn inverse_batch(&self, spec: &[C64], out: &mut [f64], lanes: usize) {
+        let (n, h) = (self.n, onesided_len(self.n));
+        assert_eq!(spec.len() % h, 0, "spectrum not a whole number of rows");
+        let batch = spec.len() / h;
+        assert_eq!(out.len(), batch * n);
+        crate::parallel::par_chunks_mut(out, n, lanes, |r, orow| {
+            self.inverse(&spec[r * h..(r + 1) * h], orow);
+        });
+    }
+
     fn twiddle_at(&self, k: usize) -> C64 {
         let half = self.n / 2;
         if k <= half / 2 {
@@ -165,6 +190,34 @@ mod tests {
             plan.inverse(&spec, &mut back);
             for (a, b) in back.iter().zip(&x) {
                 assert!((a - b).abs() < 1e-9, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_entry_points_match_row_loop() {
+        let mut rng = Rng::new(23);
+        for &(n, batch) in &[(16usize, 8usize), (15, 5), (9, 7), (64, 3)] {
+            let plan = RfftPlan::new(n);
+            let h = onesided_len(n);
+            let x = rng.normal_vec(n * batch);
+            // serial reference: one row at a time
+            let mut want = vec![C64::default(); batch * h];
+            for r in 0..batch {
+                plan.forward(&x[r * n..(r + 1) * n], &mut want[r * h..(r + 1) * h]);
+            }
+            for lanes in [1usize, 4] {
+                let mut got = vec![C64::default(); batch * h];
+                plan.forward_batch(&x, &mut got, lanes);
+                assert_eq!(got.len(), want.len());
+                for (a, b) in got.iter().zip(&want) {
+                    assert!((*a - *b).abs() == 0.0, "n={n} lanes={lanes}");
+                }
+                let mut back = vec![0.0; n * batch];
+                plan.inverse_batch(&got, &mut back, lanes);
+                for (a, b) in back.iter().zip(&x) {
+                    assert!((a - b).abs() < 1e-9, "n={n} lanes={lanes}");
+                }
             }
         }
     }

@@ -9,11 +9,22 @@
 //! Layers:
 //! * [`fft`]  — native FFT substrate (radix-2/Bluestein, RFFT, 2D/3D, plans)
 //! * [`dct`]  — the paper's transforms: fused three-stage + baselines
+//! * [`parallel`] — work-sharing execution layer: process-wide scoped
+//!   thread pool, chunked parallel loops, parallel tiled transpose, and
+//!   the [`parallel::ExecPolicy`] every plan carries (`Serial` /
+//!   `Threads(n)` / `Auto`)
 //! * [`runtime`] — PJRT executor for the JAX/Pallas AOT artifacts
 //! * [`coordinator`] — transform service: plans, batching, workers, metrics
 //! * [`apps`] — image compression & electrostatic placement built on top
 //! * [`bench`] — harness regenerating every paper table/figure
 //! * [`util`] — offline substrates (json, rng, property testing, stats)
+//!
+//! Execution model: plans are built per shape (twiddles + FFT plans
+//! precomputed), then executed many times. Each plan's `ExecPolicy`
+//! decides how its batched stages fan out over the shared thread pool —
+//! the service's workers reuse that same pool, so a single process has
+//! exactly one set of compute threads no matter how many plans, workers,
+//! or concurrent requests are live.
 
 pub mod dct;
 pub mod fft;
@@ -23,4 +34,5 @@ pub mod apps;
 pub mod bench;
 pub mod cli;
 pub mod coordinator;
+pub mod parallel;
 pub mod runtime;

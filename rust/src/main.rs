@@ -75,6 +75,7 @@ fn service(args: &Args) -> Service {
     let cfg = ServiceConfig {
         workers: args.flag_usize("workers", 4),
         batch: BatchPolicy::default(),
+        ..Default::default()
     };
     Service::start(cfg, make_router(args))
 }

@@ -1,0 +1,39 @@
+//! Work-sharing execution layer for the fused transform pipeline.
+//!
+//! The paper's three-stage `preprocess -> MD FFT -> postprocess` pipeline
+//! is embarrassingly parallel inside every stage (row batches of 1D
+//! FFTs, per-row reorders, paired-row postprocess, tiled transposes);
+//! this module supplies the CPU execution substrate that exploits it,
+//! in the spirit of EFFT's and Korotkevich's SMP-parallel 2D FFT
+//! subroutines:
+//!
+//! * [`pool`]      — process-wide scoped thread pool with work-sharing
+//!   waits (nested scopes cannot deadlock) and caller-side panic
+//!   propagation; spawned once, shared by plans and the service;
+//! * [`par_iter`]  — `parallel_for` / `parallel_for_chunks` /
+//!   `par_chunks_mut` chunked loops with inline serial fallback;
+//! * [`transpose`] — cache-blocked parallel tiled transpose (the
+//!   row-column baseline's stages 2/6, and the trick that turns column
+//!   FFTs into contiguous row FFTs);
+//! * [`policy`]    — [`ExecPolicy`] (`Serial` / `Threads(n)` / `Auto`)
+//!   carried by every plan; `Auto` stays serial below a work threshold.
+//!
+//! Determinism contract: `Serial` and `Threads(1)` run the identical
+//! instruction stream (bit-equal outputs), and the parallel paths are
+//! arithmetic-order-preserving per element, so `Threads(n)` matches
+//! `Serial` bit-for-bit on every transform in the crate.
+
+pub mod par_iter;
+pub mod policy;
+pub mod pool;
+pub mod transpose;
+
+/// Ceiling division, shared by the chunking and tiling math.
+pub(crate) fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+pub use par_iter::{par_chunks_mut, parallel_for, parallel_for_chunks, split_groups};
+pub use policy::{default_threads, ExecPolicy, AUTO_MIN_WORK};
+pub use pool::{global as global_pool, ThreadPool};
+pub use transpose::transpose_into;

@@ -1,0 +1,216 @@
+//! Chunked data-parallel loops over the shared pool.
+//!
+//! Three shapes cover every hot path in the crate:
+//! * [`parallel_for_chunks`] — index-range fan-out (read-only or
+//!   interior-disjoint work);
+//! * [`parallel_for`] — per-index convenience over the same machinery;
+//! * [`par_chunks_mut`] — split a mutable slice into fixed-size chunks
+//!   (rows, slabs) and fan the chunks out; this is the safe primitive
+//!   behind the row-batched FFT/DCT stages.
+//!
+//! Every entry point degrades to a plain inline loop when it gets one
+//! lane (or one chunk), so `ExecPolicy::Serial` / `Threads(1)` execute
+//! the exact same instruction stream as the pre-parallel code.
+
+use std::ops::Range;
+
+use super::{ceil_div, pool};
+
+/// Split `0..n` into at most `lanes` contiguous ranges of at least
+/// `min_chunk` items (the last range may be shorter only when `n` is).
+pub fn chunk_ranges(n: usize, lanes: usize, min_chunk: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let min_chunk = min_chunk.max(1);
+    let pieces = ceil_div(n, min_chunk).min(lanes.max(1));
+    let per = n / pieces;
+    let extra = n % pieces;
+    let mut out = Vec::with_capacity(pieces);
+    let mut start = 0;
+    for i in 0..pieces {
+        let len = per + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Run `f` over contiguous sub-ranges of `0..n` on up to `lanes` workers.
+/// Serial (inline, zero pool traffic) when one lane or one range suffices.
+pub fn parallel_for_chunks<F>(n: usize, lanes: usize, min_chunk: usize, f: F)
+where
+    F: Fn(Range<usize>) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    if lanes <= 1 {
+        f(0..n);
+        return;
+    }
+    let ranges = chunk_ranges(n, lanes, min_chunk);
+    if ranges.len() <= 1 {
+        f(0..n);
+        return;
+    }
+    let fref = &f;
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
+        .into_iter()
+        .map(|r| Box::new(move || fref(r)) as Box<dyn FnOnce() + Send + '_>)
+        .collect();
+    pool::global().scope(jobs);
+}
+
+/// Per-index parallel loop (`f(i)` for i in 0..n) over up to `lanes`
+/// workers; indices are handed out in contiguous blocks.
+pub fn parallel_for<F>(n: usize, lanes: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    parallel_for_chunks(n, lanes, 1, |r| {
+        for i in r {
+            f(i);
+        }
+    });
+}
+
+/// Apply `f(chunk_index, chunk)` to each consecutive `chunk_len`-slice of
+/// `data` (the trailing chunk may be shorter), distributing groups of
+/// consecutive chunks across up to `lanes` workers. Chunk indices and
+/// visit order within a lane match the serial `chunks_mut` loop.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, lanes: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    let nchunks = ceil_div(data.len(), chunk_len);
+    if lanes <= 1 || nchunks <= 1 {
+        for (i, ch) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, ch);
+        }
+        return;
+    }
+    let lanes = lanes.min(nchunks);
+    let per = nchunks / lanes;
+    let extra = nchunks % lanes;
+    let fref = &f;
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(lanes);
+    let mut rest = data;
+    let mut first_chunk = 0;
+    for lane in 0..lanes {
+        let take_chunks = per + usize::from(lane < extra);
+        let take_elems = (take_chunks * chunk_len).min(rest.len());
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(take_elems);
+        rest = tail;
+        let first = first_chunk;
+        first_chunk += take_chunks;
+        jobs.push(Box::new(move || {
+            for (j, ch) in head.chunks_mut(chunk_len).enumerate() {
+                fref(first + j, ch);
+            }
+        }));
+    }
+    pool::global().scope(jobs);
+}
+
+/// Split an owned vec into up to `lanes` contiguous groups (used to
+/// distribute non-uniform work items, e.g. postprocess row pairs).
+pub fn split_groups<T>(mut items: Vec<T>, lanes: usize) -> Vec<Vec<T>> {
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let lanes = lanes.max(1).min(n);
+    let per = n / lanes;
+    let extra = n % lanes;
+    let mut out = Vec::with_capacity(lanes);
+    // carve from the back so each drain is O(group)
+    for lane in (0..lanes).rev() {
+        let take = per + usize::from(lane < extra);
+        let group: Vec<T> = items.split_off(items.len() - take);
+        out.push(group);
+    }
+    out.reverse();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for &(n, lanes, min) in
+            &[(10usize, 3usize, 1usize), (7, 16, 1), (100, 4, 8), (5, 2, 10), (64, 8, 16)]
+        {
+            let rs = chunk_ranges(n, lanes, min);
+            assert!(rs.len() <= lanes.max(1));
+            let mut next = 0;
+            for r in &rs {
+                assert_eq!(r.start, next);
+                assert!(!r.is_empty());
+                next = r.end;
+            }
+            assert_eq!(next, n, "n={n} lanes={lanes} min={min}");
+        }
+        assert!(chunk_ranges(0, 4, 1).is_empty());
+    }
+
+    #[test]
+    fn parallel_for_visits_every_index_once() {
+        let n = 1000;
+        let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(n, 4, |i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_chunks_mut_matches_serial_chunks() {
+        for &(len, chunk, lanes) in
+            &[(64usize, 8usize, 4usize), (65, 8, 4), (7, 8, 4), (100, 9, 3), (12, 1, 16)]
+        {
+            let mut par = vec![0usize; len];
+            par_chunks_mut(&mut par, chunk, lanes, |i, ch| {
+                for (j, v) in ch.iter_mut().enumerate() {
+                    *v = i * 1000 + j;
+                }
+            });
+            let mut ser = vec![0usize; len];
+            for (i, ch) in ser.chunks_mut(chunk).enumerate() {
+                for (j, v) in ch.iter_mut().enumerate() {
+                    *v = i * 1000 + j;
+                }
+            }
+            assert_eq!(par, ser, "len={len} chunk={chunk} lanes={lanes}");
+        }
+    }
+
+    #[test]
+    fn single_lane_runs_inline() {
+        // runs on the calling thread: a non-Send-hostile check via thread id
+        let caller = std::thread::current().id();
+        let mut data = vec![0u8; 16];
+        par_chunks_mut(&mut data, 4, 1, |_, ch| {
+            assert_eq!(std::thread::current().id(), caller);
+            ch.fill(1);
+        });
+        assert!(data.iter().all(|&b| b == 1));
+    }
+
+    #[test]
+    fn split_groups_preserves_order_and_len() {
+        let items: Vec<usize> = (0..11).collect();
+        let groups = split_groups(items.clone(), 3);
+        assert_eq!(groups.len(), 3);
+        let flat: Vec<usize> = groups.into_iter().flatten().collect();
+        assert_eq!(flat, items);
+        assert_eq!(split_groups(Vec::<u8>::new(), 4).len(), 0);
+        let one = split_groups(vec![42], 8);
+        assert_eq!(one, vec![vec![42]]);
+    }
+}

@@ -1,0 +1,98 @@
+//! Execution policy: how many lanes a transform stage may fan out to.
+//!
+//! Every plan carries an [`ExecPolicy`]; hot paths ask it for a lane
+//! count sized to the work at hand. `Serial` and `Threads(1)` take the
+//! exact same single-threaded code path (bit-identical results), `Auto`
+//! falls back to serial below a work threshold where fork/join overhead
+//! would dominate the transform itself.
+
+use std::sync::OnceLock;
+
+/// Work size (elements) below which `Auto` stays serial. A 64x64 fused
+/// DCT runs in ~10us — about the cost of one fork/join round trip — so
+/// anything smaller is not worth distributing.
+pub const AUTO_MIN_WORK: usize = 64 * 64;
+
+/// How a plan distributes its batched stages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecPolicy {
+    /// Always single-threaded (the paper's measured baseline).
+    Serial,
+    /// Exactly this many lanes, regardless of work size (n is clamped to
+    /// at least 1). `Threads(1)` is bit-identical to `Serial`.
+    Threads(usize),
+    /// Serial below [`AUTO_MIN_WORK`], otherwise [`default_threads`].
+    #[default]
+    Auto,
+}
+
+impl ExecPolicy {
+    /// Lane count for a stage touching `work` elements; 1 means "take
+    /// the serial path".
+    pub fn lanes(self, work: usize) -> usize {
+        match self {
+            ExecPolicy::Serial => 1,
+            ExecPolicy::Threads(n) => n.max(1),
+            ExecPolicy::Auto => {
+                if work < AUTO_MIN_WORK {
+                    1
+                } else {
+                    default_threads()
+                }
+            }
+        }
+    }
+
+    /// Human-readable label (bench tables / metrics).
+    pub fn label(self) -> String {
+        match self {
+            ExecPolicy::Serial => "serial".to_string(),
+            ExecPolicy::Threads(n) => format!("threads({n})"),
+            ExecPolicy::Auto => format!("auto({})", default_threads()),
+        }
+    }
+}
+
+/// Parse a positive usize from an env var; `None` for unset, empty,
+/// zero, or garbage. Shared by the thread-count and service
+/// worker-count defaults so the parsing rules cannot drift.
+pub fn env_usize(name: &str) -> Option<usize> {
+    std::env::var(name).ok()?.trim().parse::<usize>().ok().filter(|&n| n >= 1)
+}
+
+/// Process-wide default lane count: `MDDCT_THREADS` env override, else
+/// the machine's available parallelism. Resolved once.
+pub fn default_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        env_usize("MDDCT_THREADS")
+            .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_is_one_lane() {
+        assert_eq!(ExecPolicy::Serial.lanes(1 << 30), 1);
+    }
+
+    #[test]
+    fn threads_clamps_to_one() {
+        assert_eq!(ExecPolicy::Threads(0).lanes(10), 1);
+        assert_eq!(ExecPolicy::Threads(5).lanes(10), 5);
+    }
+
+    #[test]
+    fn auto_respects_threshold() {
+        assert_eq!(ExecPolicy::Auto.lanes(AUTO_MIN_WORK - 1), 1);
+        assert!(ExecPolicy::Auto.lanes(AUTO_MIN_WORK) >= 1);
+    }
+
+    #[test]
+    fn default_policy_is_auto() {
+        assert_eq!(ExecPolicy::default(), ExecPolicy::Auto);
+    }
+}

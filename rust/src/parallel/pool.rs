@@ -1,0 +1,277 @@
+//! Process-wide scoped thread pool (dependency-free rayon-core
+//! substitute).
+//!
+//! One pool of `default_threads()` workers is spawned lazily and shared
+//! by every plan, the row-column baseline, and the coordinator's
+//! workers — transforms never spawn ad-hoc threads. [`ThreadPool::scope`]
+//! runs a batch of jobs that may borrow the caller's stack: the caller
+//! blocks until the whole scope drains, which is what makes the lifetime
+//! erasure sound.
+//!
+//! Two properties matter for the service layer:
+//! * **work sharing** — a caller waiting on its scope executes queued
+//!   jobs (its own or another scope's) instead of parking, so nested
+//!   scopes cannot deadlock even when every worker is itself blocked
+//!   inside a scope;
+//! * **panic isolation** — jobs run under `catch_unwind`; a panicking
+//!   job marks its scope and the panic is re-raised on the *caller's*
+//!   thread once the scope drains, so pool workers never die and
+//!   unrelated scopes are unaffected.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::policy::default_threads;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Completion latch for one scope: outstanding-job count plus a sticky
+/// "did any job panic" flag.
+struct Latch {
+    state: Mutex<(usize, bool)>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(jobs: usize) -> Latch {
+        Latch { state: Mutex::new((jobs, false)), cv: Condvar::new() }
+    }
+
+    fn complete(&self, panicked: bool) {
+        let mut s = self.state.lock().unwrap();
+        s.0 -= 1;
+        s.1 |= panicked;
+        if s.0 == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.state.lock().unwrap().0 == 0
+    }
+
+    /// Block until done or `timeout`, whichever first.
+    fn wait_timeout(&self, timeout: Duration) {
+        let s = self.state.lock().unwrap();
+        if s.0 > 0 {
+            let _ = self.cv.wait_timeout(s, timeout).unwrap();
+        }
+    }
+
+    fn panicked(&self) -> bool {
+        self.state.lock().unwrap().1
+    }
+}
+
+/// A fixed-size pool of worker threads executing scoped job batches.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    rx: Arc<Mutex<Receiver<Job>>>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `size` workers (clamped to at least 1).
+    pub fn new(size: usize) -> ThreadPool {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("mddct-par-{i}"))
+                    .spawn(move || worker_loop(rx))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), rx, workers, size }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Run `jobs` to completion. Jobs may borrow from the caller's stack
+    /// (`'scope`); the call does not return until every job has finished.
+    /// The calling thread work-shares while it waits. If any job
+    /// panicked, the panic is re-raised here after the scope drains.
+    pub fn scope<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let latch = Arc::new(Latch::new(jobs.len()));
+        let tx = self.tx.as_ref().expect("pool running");
+        for job in jobs {
+            // SAFETY: `scope` blocks below until the latch has counted
+            // every job complete, so borrows with lifetime 'scope outlive
+            // every possible execution of `job`. The transmute erases
+            // only the lifetime parameter of the trait object; the fat
+            // pointer layout is identical.
+            let job: Job = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'scope>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(job)
+            };
+            let latch = latch.clone();
+            let wrapped: Job = Box::new(move || {
+                let panicked = catch_unwind(AssertUnwindSafe(|| job())).is_err();
+                latch.complete(panicked);
+            });
+            tx.send(wrapped).expect("pool workers alive");
+        }
+        // Work-share while waiting: if the queue is empty our jobs are
+        // already running (or done) on workers, so a bounded wait on the
+        // latch is safe; the timeout re-polls the queue for late arrivals
+        // from other scopes to keep draining global progress.
+        loop {
+            if latch.is_done() {
+                break;
+            }
+            match self.try_pop() {
+                Some(job) => job(),
+                None => latch.wait_timeout(Duration::from_micros(200)),
+            }
+        }
+        if latch.panicked() {
+            panic!("mddct parallel worker panicked (original panic above)");
+        }
+    }
+
+    fn try_pop(&self) -> Option<Job> {
+        // try_lock, not lock: an idle worker parks inside `recv()` while
+        // holding the mutex, so a blocking lock here would hang the
+        // caller until the next unrelated send. Failing to grab the lock
+        // just means someone else is already draining the queue.
+        match self.rx.try_lock() {
+            Ok(rx) => rx.try_recv().ok(),
+            Err(_) => None,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // Closing the channel lets workers observe RecvError and exit.
+        self.tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>) {
+    loop {
+        // Hold the lock only while receiving, never while executing.
+        let job = match rx.lock().unwrap().recv() {
+            Ok(j) => j,
+            Err(_) => return,
+        };
+        job(); // wrapped: catches panics and counts down its latch
+    }
+}
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+
+/// The process-wide shared pool (size = [`default_threads`]), spawned on
+/// first use and alive for the life of the process.
+pub fn global() -> &'static ThreadPool {
+    GLOBAL.get_or_init(|| ThreadPool::new(default_threads()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn boxed<'a>(f: impl FnOnce() + Send + 'a) -> Box<dyn FnOnce() + Send + 'a> {
+        Box::new(f)
+    }
+
+    #[test]
+    fn scope_runs_all_jobs_with_borrows() {
+        let pool = ThreadPool::new(4);
+        let mut out = vec![0usize; 64];
+        {
+            let jobs = out
+                .chunks_mut(8)
+                .enumerate()
+                .map(|(i, ch)| {
+                    boxed(move || {
+                        for (j, v) in ch.iter_mut().enumerate() {
+                            *v = i * 8 + j;
+                        }
+                    })
+                })
+                .collect();
+            pool.scope(jobs);
+        }
+        let want: Vec<usize> = (0..64).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn empty_scope_is_a_noop() {
+        let pool = ThreadPool::new(2);
+        pool.scope(Vec::new());
+    }
+
+    #[test]
+    fn nested_scopes_do_not_deadlock() {
+        let pool = ThreadPool::new(2);
+        let hits = AtomicUsize::new(0);
+        let hits_ref = &hits;
+        let pool_ref = &pool;
+        // every outer job opens an inner scope on the same 2-worker pool
+        let jobs = (0..4)
+            .map(|_| {
+                boxed(move || {
+                    let inner = (0..4)
+                        .map(|_| {
+                            boxed(move || {
+                                hits_ref.fetch_add(1, Ordering::Relaxed);
+                            })
+                        })
+                        .collect();
+                    pool_ref.scope(inner);
+                })
+            })
+            .collect();
+        pool.scope(jobs);
+        assert_eq!(hits.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn panic_propagates_to_caller_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(vec![
+                boxed(|| {}),
+                boxed(|| panic!("job boom")),
+                boxed(|| {}),
+            ]);
+        }));
+        assert!(caught.is_err(), "scope must re-raise the job panic");
+        // pool still works after the panic
+        let ok = AtomicUsize::new(0);
+        let ok_ref = &ok;
+        pool.scope(vec![boxed(move || {
+            ok_ref.fetch_add(1, Ordering::Relaxed);
+        })]);
+        assert_eq!(ok.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_sized() {
+        let a = global();
+        let b = global();
+        assert!(std::ptr::eq(a, b));
+        assert!(a.size() >= 1);
+    }
+}

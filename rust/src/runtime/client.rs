@@ -7,14 +7,14 @@
 //!
 //! All pipelines are lowered with `return_tuple=True`, so outputs always
 //! arrive as a tuple literal that we decompose.
+//!
+//! The real client needs the `xla` crate, which the offline toolchain
+//! cannot resolve; it is gated behind the `pjrt` cargo feature. The
+//! default build compiles [`stub`] instead: the same API surface, every
+//! entry point reporting the backend as unavailable, so the coordinator,
+//! CLI, and examples build and route natively without artifacts.
 
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
-
-use anyhow::{bail, Context, Result};
-
-use super::artifact::{ArtifactEntry, Manifest};
+use std::sync::Mutex;
 
 /// Runtime statistics for one executable.
 #[derive(Debug, Clone, Copy, Default)]
@@ -24,143 +24,225 @@ pub struct ExecStats {
     pub exec_seconds_total: f64,
 }
 
-/// A compiled artifact ready to run.
-pub struct Executable {
-    pub entry: ArtifactEntry,
-    exe: xla::PjRtLoadedExecutable,
-    stats: Mutex<ExecStats>,
-}
+#[cfg(feature = "pjrt")]
+mod real {
+    use std::collections::HashMap;
+    use std::sync::{Arc, Mutex};
+    use std::time::Instant;
 
-impl Executable {
-    /// Execute with f32 inputs (row-major), returning one Vec per output.
-    pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        if inputs.len() != self.entry.inputs.len() {
-            bail!(
-                "artifact {} expects {} inputs, got {}",
-                self.entry.name,
-                self.entry.inputs.len(),
-                inputs.len()
-            );
-        }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (spec, data) in self.entry.inputs.iter().zip(inputs) {
-            if data.len() != spec.numel() {
+    use super::ExecStats;
+    use crate::util::error::{Context, Result};
+    use crate::bail;
+
+    use super::super::artifact::{ArtifactEntry, Manifest};
+
+    /// A compiled artifact ready to run.
+    pub struct Executable {
+        pub entry: ArtifactEntry,
+        exe: xla::PjRtLoadedExecutable,
+        stats: Mutex<ExecStats>,
+    }
+
+    impl Executable {
+        /// Execute with f32 inputs (row-major), returning one Vec per output.
+        pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            if inputs.len() != self.entry.inputs.len() {
                 bail!(
-                    "artifact {}: input size {} != spec {} ({:?})",
+                    "artifact {} expects {} inputs, got {}",
                     self.entry.name,
-                    data.len(),
-                    spec.numel(),
-                    spec.shape
+                    self.entry.inputs.len(),
+                    inputs.len()
                 );
             }
-            let lit = xla::Literal::vec1(data);
-            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-            literals.push(if dims.len() == 1 && data.len() == spec.numel() && dims[0] as usize == data.len() {
-                lit
-            } else {
-                lit.reshape(&dims)
-                    .with_context(|| format!("reshape input for {}", self.entry.name))?
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (spec, data) in self.entry.inputs.iter().zip(inputs) {
+                if data.len() != spec.numel() {
+                    bail!(
+                        "artifact {}: input size {} != spec {} ({:?})",
+                        self.entry.name,
+                        data.len(),
+                        spec.numel(),
+                        spec.shape
+                    );
+                }
+                let lit = xla::Literal::vec1(data);
+                let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                literals.push(
+                    if dims.len() == 1 && data.len() == spec.numel() && dims[0] as usize == data.len() {
+                        lit
+                    } else {
+                        lit.reshape(&dims)
+                            .with_context(|| format!("reshape input for {}", self.entry.name))?
+                    },
+                );
+            }
+            let t0 = Instant::now();
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("executing {}", self.entry.name))?;
+            let tuple = result[0][0]
+                .to_literal_sync()
+                .context("fetching result literal")?;
+            let parts = tuple.to_tuple().context("decomposing result tuple")?;
+            if parts.len() != self.entry.outputs.len() {
+                bail!(
+                    "artifact {}: got {} outputs, manifest says {}",
+                    self.entry.name,
+                    parts.len(),
+                    self.entry.outputs.len()
+                );
+            }
+            let mut out = Vec::with_capacity(parts.len());
+            for part in parts {
+                out.push(part.to_vec::<f32>().context("reading output")?);
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let mut s = self.stats.lock().unwrap();
+            s.executions += 1;
+            s.exec_seconds_total += dt;
+            Ok(out)
+        }
+
+        /// Convenience: f64 in/out (the native backend's element type).
+        pub fn run_f64(&self, inputs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+            let f32_in: Vec<Vec<f32>> = inputs
+                .iter()
+                .map(|v| v.iter().map(|&x| x as f32).collect())
+                .collect();
+            Ok(self
+                .run_f32(&f32_in)?
+                .into_iter()
+                .map(|v| v.into_iter().map(|x| x as f64).collect())
+                .collect())
+        }
+
+        pub fn stats(&self) -> ExecStats {
+            *self.stats.lock().unwrap()
+        }
+    }
+
+    /// PJRT client + compiled-executable cache over one artifact directory.
+    pub struct PjrtRuntime {
+        pub manifest: Manifest,
+        client: xla::PjRtClient,
+        cache: Mutex<HashMap<String, Arc<Executable>>>,
+    }
+
+    impl PjrtRuntime {
+        /// Create a CPU PJRT client over `dir` (usually `artifacts/`).
+        pub fn new(dir: impl AsRef<std::path::Path>) -> Result<PjrtRuntime> {
+            let manifest = Manifest::load(dir)?;
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(PjrtRuntime { manifest, client, cache: Mutex::new(HashMap::new()) })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile (or fetch cached) executable for a manifest entry.
+        pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+            if let Some(e) = self.cache.lock().unwrap().get(name) {
+                return Ok(e.clone());
+            }
+            let entry = self.manifest.get(name)?.clone();
+            let t0 = Instant::now();
+            let path = entry
+                .file
+                .to_str()
+                .context("non-utf8 artifact path")?
+                .to_string();
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("XLA compile of {name}"))?;
+            let compile_seconds = t0.elapsed().as_secs_f64();
+            let executable = Arc::new(Executable {
+                entry,
+                exe,
+                stats: Mutex::new(ExecStats { compile_seconds, ..Default::default() }),
             });
+            self.cache
+                .lock()
+                .unwrap()
+                .insert(name.to_string(), executable.clone());
+            Ok(executable)
         }
-        let t0 = Instant::now();
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {}", self.entry.name))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        let parts = tuple.to_tuple().context("decomposing result tuple")?;
-        if parts.len() != self.entry.outputs.len() {
-            bail!(
-                "artifact {}: got {} outputs, manifest says {}",
-                self.entry.name,
-                parts.len(),
-                self.entry.outputs.len()
-            );
-        }
-        let mut out = Vec::with_capacity(parts.len());
-        for part in parts {
-            out.push(part.to_vec::<f32>().context("reading output")?);
-        }
-        let dt = t0.elapsed().as_secs_f64();
-        let mut s = self.stats.lock().unwrap();
-        s.executions += 1;
-        s.exec_seconds_total += dt;
-        Ok(out)
-    }
 
-    /// Convenience: f64 in/out (the native backend's element type).
-    pub fn run_f64(&self, inputs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
-        let f32_in: Vec<Vec<f32>> = inputs
-            .iter()
-            .map(|v| v.iter().map(|&x| x as f32).collect())
-            .collect();
-        Ok(self
-            .run_f32(&f32_in)?
-            .into_iter()
-            .map(|v| v.into_iter().map(|x| x as f64).collect())
-            .collect())
-    }
-
-    pub fn stats(&self) -> ExecStats {
-        *self.stats.lock().unwrap()
+        /// Number of compiled executables currently cached.
+        pub fn cached_count(&self) -> usize {
+            self.cache.lock().unwrap().len()
+        }
     }
 }
 
-/// PJRT client + compiled-executable cache over one artifact directory.
-pub struct PjrtRuntime {
-    pub manifest: Manifest,
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<String, Arc<Executable>>>,
-}
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::sync::Arc;
 
-impl PjrtRuntime {
-    /// Create a CPU PJRT client over `dir` (usually `artifacts/`).
-    pub fn new(dir: impl AsRef<std::path::Path>) -> Result<PjrtRuntime> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(PjrtRuntime { manifest, client, cache: Mutex::new(HashMap::new()) })
+    use super::ExecStats;
+    use crate::anyhow;
+    use crate::util::error::Result;
+
+    use super::super::artifact::{ArtifactEntry, Manifest};
+
+    const UNAVAILABLE: &str =
+        "PJRT backend not compiled in (build with `--features pjrt` and an `xla` dependency)";
+
+    /// Stub executable: the type exists so the coordinator compiles, but
+    /// no value is ever constructed (the stub runtime never loads).
+    pub struct Executable {
+        pub entry: ArtifactEntry,
+        stats: super::Mutex<ExecStats>,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch cached) executable for a manifest entry.
-    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
-            return Ok(e.clone());
+    impl Executable {
+        pub fn run_f32(&self, _inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            Err(anyhow!("{UNAVAILABLE}"))
         }
-        let entry = self.manifest.get(name)?.clone();
-        let t0 = Instant::now();
-        let path = entry
-            .file
-            .to_str()
-            .context("non-utf8 artifact path")?
-            .to_string();
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing HLO text {path}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("XLA compile of {name}"))?;
-        let compile_seconds = t0.elapsed().as_secs_f64();
-        let executable = Arc::new(Executable {
-            entry,
-            exe,
-            stats: Mutex::new(ExecStats { compile_seconds, ..Default::default() }),
-        });
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), executable.clone());
-        Ok(executable)
+
+        pub fn run_f64(&self, _inputs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+            Err(anyhow!("{UNAVAILABLE}"))
+        }
+
+        pub fn stats(&self) -> ExecStats {
+            *self.stats.lock().unwrap()
+        }
     }
 
-    /// Number of compiled executables currently cached.
-    pub fn cached_count(&self) -> usize {
-        self.cache.lock().unwrap().len()
+    /// Stub runtime: manifest parsing still works (routing decisions need
+    /// it), but client construction always reports unavailable.
+    pub struct PjrtRuntime {
+        pub manifest: Manifest,
+    }
+
+    impl PjrtRuntime {
+        pub fn new(dir: impl AsRef<std::path::Path>) -> Result<PjrtRuntime> {
+            // Parse the manifest first so missing-artifact errors keep
+            // their usual shape, then report the missing backend.
+            let _manifest = Manifest::load(dir)?;
+            Err(anyhow!("{UNAVAILABLE}"))
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn load(&self, _name: &str) -> Result<Arc<Executable>> {
+            Err(anyhow!("{UNAVAILABLE}"))
+        }
+
+        pub fn cached_count(&self) -> usize {
+            0
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use real::{Executable, PjrtRuntime};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Executable, PjrtRuntime};

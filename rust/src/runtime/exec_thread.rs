@@ -10,7 +10,8 @@
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Sender};
 
-use anyhow::{anyhow, Result};
+use crate::anyhow;
+use crate::util::error::Result;
 
 use super::client::PjrtRuntime;
 

@@ -1,0 +1,138 @@
+//! Minimal error substrate (anyhow substitute for the offline crate set).
+//!
+//! Provides a string-backed [`Error`], a `Result` alias, the
+//! [`Context`]/`with_context` extension trait, and `anyhow!` / `bail!`
+//! macros with the same call syntax the `runtime` layer was written
+//! against. Context is prepended `"<context>: <cause>"`, matching the
+//! chain formatting `anyhow` renders with `{:#}`.
+
+use std::fmt;
+
+/// A string-backed error with prepended context.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error { msg: msg.to_string() }
+    }
+
+    fn wrap(self, context: impl fmt::Display) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` (anyhow's whole-chain form) and `{}` both print the full
+        // message; context is already folded into the string.
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Error {
+        Error { msg }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Error {
+        Error { msg: msg.to_string() }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result` defaulting to [`Error`], like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (or `None`s), like `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string or any `Display` value
+/// (anyhow! substitute).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(, $arg:expr)* $(,)?) => {
+        $crate::util::error::Error::msg(format!($msg $(, $arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`Error`] (bail! substitute).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(crate::anyhow!("inner {}", 42))
+    }
+
+    #[test]
+    fn context_prepends() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner 42");
+        assert_eq!(format!("{e:#}"), "outer: inner 42");
+    }
+
+    #[test]
+    fn with_context_is_lazy_and_option_works() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", "x")).unwrap_err();
+        assert_eq!(e.to_string(), "missing x");
+        assert_eq!(Some(3).context("never").unwrap(), 3);
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                crate::bail!("flagged");
+            }
+            Ok(7)
+        }
+        assert_eq!(f(false).unwrap(), 7);
+        assert_eq!(f(true).unwrap_err().to_string(), "flagged");
+    }
+}

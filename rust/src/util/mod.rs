@@ -1,6 +1,7 @@
 //! General-purpose substrates built in-repo because the offline crate set
 //! lacks serde_json / rand / proptest / criterion-statistics equivalents.
 
+pub mod error;
 pub mod json;
 pub mod scratch;
 pub mod prop;

@@ -22,6 +22,7 @@ fn concurrent_clients_all_served_correctly() {
     let svc = Arc::new(Service::start_native(ServiceConfig {
         workers: 4,
         batch: BatchPolicy::default(),
+        ..Default::default()
     }));
     let mut joins = Vec::new();
     for c in 0..8u64 {
@@ -46,7 +47,11 @@ fn concurrent_clients_all_served_correctly() {
 
 #[test]
 fn metrics_snapshot_has_op_rows() {
-    let svc = Service::start_native(ServiceConfig { workers: 2, batch: BatchPolicy::default() });
+    let svc = Service::start_native(ServiceConfig {
+        workers: 2,
+        batch: BatchPolicy::default(),
+        ..Default::default()
+    });
     let mut rng = Rng::new(601);
     for _ in 0..4 {
         svc.transform(TransformOp::Idct2d, vec![8, 8], rng.normal_vec(64)).unwrap();
@@ -66,7 +71,7 @@ fn pjrt_routing_matches_native_results() {
     let manifest = Manifest::load(DEFAULT_ARTIFACT_DIR).unwrap();
     let handle = PjrtHandle::spawn(DEFAULT_ARTIFACT_DIR);
     let svc = Service::start(
-        ServiceConfig { workers: 2, batch: BatchPolicy::default() },
+        ServiceConfig { workers: 2, batch: BatchPolicy::default(), ..Default::default() },
         Router::with_pjrt(handle, &manifest),
     );
     let mut rng = Rng::new(602);
@@ -86,6 +91,7 @@ fn batch_of_identical_shapes_is_cobatched() {
     let svc = Service::start_native(ServiceConfig {
         workers: 1,
         batch: BatchPolicy { max_batch: 32, max_wait: std::time::Duration::from_millis(20) },
+        ..Default::default()
     });
     let mut rng = Rng::new(603);
     let reqs: Vec<_> = (0..24)

@@ -1,0 +1,154 @@
+//! Parallel-vs-serial equivalence properties for the `parallel`
+//! execution layer: every transform must produce the same answer no
+//! matter how many lanes it fans out over, across the radix-2 and
+//! Bluestein FFT paths, and `Threads(1)` must be *bit-identical* to
+//! `Serial` (they take the same code path by construction).
+
+use mddct::dct::{Dct2, Dct3d, Idct2, RowColumn};
+use mddct::parallel::{default_threads, ExecPolicy};
+use mddct::util::rng::Rng;
+
+/// Shapes covering every interesting FFT dispatch: odd sizes, primes
+/// (Bluestein on one or both axes), powers of two (radix-2 fast paths),
+/// mixed, and degenerate single-row/column cases.
+const SHAPES: &[(usize, usize)] = &[
+    (9, 15),   // odd x odd
+    (7, 13),   // prime x prime (Bluestein both axes)
+    (17, 31),  // larger primes
+    (16, 16),  // power of two
+    (64, 32),  // power of two, rectangular
+    (12, 10),  // even composites (half-size RFFT packing)
+    (1, 24),   // single row
+    (24, 1),   // single column
+    (5, 64),   // Bluestein rows x radix-2 columns
+];
+
+fn close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol,
+            "{what} at {i}: {x} vs {y} (diff {})",
+            (x - y).abs()
+        );
+    }
+}
+
+#[test]
+fn dct2_parallel_matches_serial() {
+    let mut rng = Rng::new(700);
+    for &(n1, n2) in SHAPES {
+        let x = rng.normal_vec(n1 * n2);
+        let mut serial = vec![0.0; n1 * n2];
+        Dct2::with_policy(n1, n2, ExecPolicy::Serial).forward(&x, &mut serial);
+        for lanes in [2usize, 4, 7] {
+            let mut par = vec![0.0; n1 * n2];
+            Dct2::with_policy(n1, n2, ExecPolicy::Threads(lanes)).forward(&x, &mut par);
+            close(&par, &serial, 1e-10, &format!("dct2 ({n1},{n2}) lanes={lanes}"));
+        }
+    }
+}
+
+#[test]
+fn idct2_parallel_matches_serial() {
+    let mut rng = Rng::new(701);
+    for &(n1, n2) in SHAPES {
+        let x = rng.normal_vec(n1 * n2);
+        let mut serial = vec![0.0; n1 * n2];
+        Idct2::with_policy(n1, n2, ExecPolicy::Serial).forward(&x, &mut serial);
+        for lanes in [2usize, 4, 7] {
+            let mut par = vec![0.0; n1 * n2];
+            Idct2::with_policy(n1, n2, ExecPolicy::Threads(lanes)).forward(&x, &mut par);
+            close(&par, &serial, 1e-10, &format!("idct2 ({n1},{n2}) lanes={lanes}"));
+        }
+    }
+}
+
+#[test]
+fn row_column_parallel_matches_serial() {
+    let mut rng = Rng::new(702);
+    for &(n1, n2) in SHAPES {
+        let x = rng.normal_vec(n1 * n2);
+        let mut serial = vec![0.0; n1 * n2];
+        RowColumn::dct2(n1, n2)
+            .with_policy(ExecPolicy::Serial)
+            .forward(&x, &mut serial);
+        for lanes in [2usize, 4] {
+            let mut par = vec![0.0; n1 * n2];
+            RowColumn::dct2(n1, n2)
+                .with_policy(ExecPolicy::Threads(lanes))
+                .forward(&x, &mut par);
+            close(&par, &serial, 1e-10, &format!("rc ({n1},{n2}) lanes={lanes}"));
+        }
+        // inverse flavour too
+        let mut iserial = vec![0.0; n1 * n2];
+        RowColumn::idct2(n1, n2)
+            .with_policy(ExecPolicy::Serial)
+            .forward(&x, &mut iserial);
+        let mut ipar = vec![0.0; n1 * n2];
+        RowColumn::idct2(n1, n2)
+            .with_policy(ExecPolicy::Threads(4))
+            .forward(&x, &mut ipar);
+        close(&ipar, &iserial, 1e-10, &format!("rc idct ({n1},{n2})"));
+    }
+}
+
+#[test]
+fn dct3d_parallel_matches_serial() {
+    let mut rng = Rng::new(703);
+    for &(n1, n2, n3) in &[(4usize, 6usize, 8usize), (3, 5, 7), (8, 8, 8), (1, 9, 4)] {
+        let x = rng.normal_vec(n1 * n2 * n3);
+        let mut serial = vec![0.0; x.len()];
+        Dct3d::with_policy(n1, n2, n3, ExecPolicy::Serial).forward(&x, &mut serial);
+        let mut par = vec![0.0; x.len()];
+        Dct3d::with_policy(n1, n2, n3, ExecPolicy::Threads(4)).forward(&x, &mut par);
+        close(&par, &serial, 1e-10, &format!("dct3d ({n1},{n2},{n3})"));
+    }
+}
+
+#[test]
+fn threads_one_is_bit_identical_to_serial() {
+    let mut rng = Rng::new(704);
+    for &(n1, n2) in SHAPES {
+        let x = rng.normal_vec(n1 * n2);
+        let mut a = vec![0.0; n1 * n2];
+        let mut b = vec![0.0; n1 * n2];
+        Dct2::with_policy(n1, n2, ExecPolicy::Serial).forward(&x, &mut a);
+        Dct2::with_policy(n1, n2, ExecPolicy::Threads(1)).forward(&x, &mut b);
+        assert_eq!(a, b, "dct2 threads(1) != serial at ({n1},{n2})");
+        Idct2::with_policy(n1, n2, ExecPolicy::Serial).forward(&x, &mut a);
+        Idct2::with_policy(n1, n2, ExecPolicy::Threads(1)).forward(&x, &mut b);
+        assert_eq!(a, b, "idct2 threads(1) != serial at ({n1},{n2})");
+        RowColumn::dct2(n1, n2).with_policy(ExecPolicy::Serial).forward(&x, &mut a);
+        RowColumn::dct2(n1, n2).with_policy(ExecPolicy::Threads(1)).forward(&x, &mut b);
+        assert_eq!(a, b, "rc threads(1) != serial at ({n1},{n2})");
+    }
+}
+
+#[test]
+fn auto_policy_is_consistent_with_serial_above_threshold() {
+    // 128x128 is past AUTO_MIN_WORK, so Auto may fan out; results must
+    // still agree with the serial reference.
+    let (n1, n2) = (128usize, 128usize);
+    let mut rng = Rng::new(705);
+    let x = rng.normal_vec(n1 * n2);
+    let mut serial = vec![0.0; n1 * n2];
+    Dct2::with_policy(n1, n2, ExecPolicy::Serial).forward(&x, &mut serial);
+    let mut auto = vec![0.0; n1 * n2];
+    Dct2::with_policy(n1, n2, ExecPolicy::Auto).forward(&x, &mut auto);
+    close(&auto, &serial, 1e-10, "auto vs serial 128x128");
+    assert!(default_threads() >= 1);
+}
+
+#[test]
+fn roundtrip_under_parallel_policy() {
+    let mut rng = Rng::new(706);
+    for &(n1, n2) in &[(48usize, 36usize), (13, 29), (64, 64)] {
+        let x = rng.normal_vec(n1 * n2);
+        let mut y = vec![0.0; n1 * n2];
+        Dct2::with_policy(n1, n2, ExecPolicy::Threads(4)).forward(&x, &mut y);
+        let mut back = vec![0.0; n1 * n2];
+        Idct2::with_policy(n1, n2, ExecPolicy::Threads(4)).forward(&y, &mut back);
+        close(&back, &x, 1e-9, &format!("roundtrip ({n1},{n2})"));
+    }
+}

@@ -1,0 +1,106 @@
+//! FFT kernel-selector quick bench: old scalar radix-2 vs the
+//! split-radix/radix-4 SoA kernel, single thread, on the 1D complex FFT
+//! and the blocked column transform.
+//!
+//! Emits a human table plus machine-readable `BENCH_kernels.json`
+//! (override the path with `MDDCT_BENCH_KERNELS_JSON`) so CI can track
+//! the old-vs-new ratio per size. Runs quickly under
+//! `MDDCT_BENCH_QUICK=1`.
+//!
+//! Run: `cargo bench --bench kernels`
+
+use mddct::bench::{black_box, ms, time_fn, BenchConfig, Table};
+use mddct::fft::{C64, FftKernel, FftPlan};
+use mddct::util::rng::Rng;
+
+const SIZES: [usize; 5] = [256, 512, 1024, 2048, 4096];
+/// Column count for the transform_cols rows: wide enough that panel
+/// blocking matters, small enough to keep CI runtime sane.
+const NCOLS: usize = 256;
+
+fn main() {
+    let cfg = BenchConfig::from_env(BenchConfig::default());
+    println!(
+        "\nFFT kernels, single thread: scalar radix-2 (old) vs split-radix/radix-4 SoA (new)\n"
+    );
+
+    let mut t = Table::new(&["op", "n", "scalar ms", "soa ms", "speedup"]);
+    let mut json_rows: Vec<String> = Vec::new();
+
+    // Timed unit is a forward+inverse roundtrip: self-restoring, so no
+    // input memcpy sits inside the timed region diluting the kernel
+    // ratio (the reported ms is the roundtrip, i.e. ~2 transforms).
+
+    // ---- 1D complex FFT -----------------------------------------------
+    for &n in &SIZES {
+        let mut rng = Rng::new(n as u64);
+        let mut data: Vec<C64> =
+            (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+        let mut times = [0.0f64; 2];
+        for (slot, kernel) in [FftKernel::ScalarRadix2, FftKernel::SplitRadixSoa]
+            .into_iter()
+            .enumerate()
+        {
+            let plan = FftPlan::with_kernel(n, kernel);
+            times[slot] = time_fn(&cfg, || {
+                plan.forward(&mut data);
+                plan.inverse(&mut data);
+                black_box(&data);
+            })
+            .mean;
+        }
+        push_row(&mut t, &mut json_rows, "fft1d", n, times[0], times[1]);
+    }
+
+    // ---- blocked column transform -------------------------------------
+    for &n in &SIZES {
+        let mut rng = Rng::new(n as u64 + 13);
+        let mut data: Vec<C64> =
+            (0..n * NCOLS).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+        let mut times = [0.0f64; 2];
+        for (slot, kernel) in [FftKernel::ScalarRadix2, FftKernel::SplitRadixSoa]
+            .into_iter()
+            .enumerate()
+        {
+            let plan = FftPlan::with_kernel(n, kernel);
+            times[slot] = time_fn(&cfg, || {
+                assert!(plan.try_transform_cols(&mut data, NCOLS, false));
+                assert!(plan.try_transform_cols(&mut data, NCOLS, true));
+                black_box(&data);
+            })
+            .mean;
+        }
+        push_row(&mut t, &mut json_rows, "cols", n, times[0], times[1]);
+    }
+
+    t.print();
+
+    let path = std::env::var("MDDCT_BENCH_KERNELS_JSON")
+        .unwrap_or_else(|_| "BENCH_kernels.json".to_string());
+    let doc = format!(
+        "{{\n  \"bench\": \"fft_kernels\",\n  \"threads\": 1,\n  \"ncols\": {NCOLS},\n  \
+         \"unit\": \"roundtrip_ms\",\n  \"rows\": [\n    {}\n  ]\n}}\n",
+        json_rows.join(",\n    ")
+    );
+    match std::fs::write(&path, &doc) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+fn push_row(t: &mut Table, json: &mut Vec<String>, op: &str, n: usize, old: f64, new: f64) {
+    let speedup = old / new;
+    t.row(&[
+        op.to_string(),
+        n.to_string(),
+        ms(old),
+        ms(new),
+        format!("{speedup:.2}x"),
+    ]);
+    json.push(format!(
+        "{{\"op\": \"{op}\", \"n\": {n}, \"scalar_ms\": {:.6}, \"soa_ms\": {:.6}, \
+         \"speedup\": {speedup:.4}}}",
+        old * 1e3,
+        new * 1e3
+    ));
+}

@@ -155,6 +155,25 @@ fn parallel_scaling(cfg: &BenchConfig) {
         })
         .mean;
 
+        // correctness gate: whatever kernel the plans selected, parallel
+        // output must match serial to 1e-10
+        {
+            let mut serial_out = vec![0.0; n1 * n2];
+            serial_plan.forward(&x, &mut serial_out);
+            let par_plan = Dct2::with_policy(n1, n2, ExecPolicy::Threads(maxt));
+            let mut par_out = vec![0.0; n1 * n2];
+            par_plan.forward(&x, &mut par_out);
+            let worst = serial_out
+                .iter()
+                .zip(&par_out)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            assert!(
+                worst <= 1e-10,
+                "parallel fused DCT diverged from serial: max |diff| = {worst:e} at {n1}x{n2}"
+            );
+        }
+
         for &threads in &counts {
             let plan = Dct2::with_policy(n1, n2, ExecPolicy::Threads(threads));
             let t_par = time_fn(cfg, || {

@@ -6,14 +6,16 @@
 //! that we evaluate with a power-of-two radix-2 FFT of size M >= 2N-1.
 
 use super::complex::C64;
-use super::radix2::Radix2Plan;
+use super::kernel::{FftKernel, Pow2Plan};
 
 /// Precomputed Bluestein plan for one size.
 #[derive(Debug, Clone)]
 pub struct BluesteinPlan {
     pub n: usize,
     m: usize,
-    inner: Radix2Plan,
+    /// power-of-two convolution FFT — the hottest consumer of the
+    /// kernel selector for prime sizes
+    inner: Pow2Plan,
     /// chirp a_n = e^{-j pi n^2 / N}
     chirp: Vec<C64>,
     /// FFT of the zero-padded conjugate-chirp kernel
@@ -22,9 +24,14 @@ pub struct BluesteinPlan {
 
 impl BluesteinPlan {
     pub fn new(n: usize) -> BluesteinPlan {
+        BluesteinPlan::with_kernel(n, FftKernel::default_kernel())
+    }
+
+    /// Plan whose inner power-of-two convolution runs an explicit kernel.
+    pub fn with_kernel(n: usize, kernel: FftKernel) -> BluesteinPlan {
         assert!(n >= 1);
         let m = (2 * n - 1).next_power_of_two();
-        let inner = Radix2Plan::new(m);
+        let inner = Pow2Plan::with_kernel(m, kernel);
         // n^2 mod 2N avoids precision loss for large n
         let chirp: Vec<C64> = (0..n)
             .map(|i| {
@@ -32,16 +39,21 @@ impl BluesteinPlan {
                 C64::cis(-std::f64::consts::PI * sq as f64 / n as f64)
             })
             .collect();
-        let mut kernel = vec![C64::default(); m];
+        let mut kern = vec![C64::default(); m];
         for i in 0..n {
             let c = chirp[i].conj();
-            kernel[i] = c;
+            kern[i] = c;
             if i > 0 {
-                kernel[m - i] = c;
+                kern[m - i] = c;
             }
         }
-        inner.forward(&mut kernel);
-        BluesteinPlan { n, m, inner, chirp, kernel_fft: kernel }
+        inner.forward(&mut kern);
+        BluesteinPlan { n, m, inner, chirp, kernel_fft: kern }
+    }
+
+    /// Kernel of the inner convolution FFT.
+    pub fn kernel(&self) -> FftKernel {
+        self.inner.kernel()
     }
 
     /// Forward DFT (unnormalized, negative-exponent convention).

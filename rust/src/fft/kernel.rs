@@ -1,0 +1,177 @@
+//! Power-of-two kernel selector: which butterfly implementation a plan
+//! executes, plus the cache-blocking knob for the column path.
+//!
+//! Two kernels implement the same transform (same twiddle convention,
+//! same bit-reversed DIT ordering):
+//!
+//! * [`FftKernel::ScalarRadix2`] — the original scalar AoS radix-2 loop
+//!   ([`Radix2Plan`]), kept as the reference implementation and as the
+//!   "old" side of the kernel benches;
+//! * [`FftKernel::SplitRadixSoa`] — mixed radix-4/radix-2 butterflies
+//!   on planar re/im scratch ([`SoaPlan`]), the autovectorizer-friendly
+//!   throughput kernel and the default.
+//!
+//! The selector is a *plan-level* seam: every consumer (complex plans,
+//! RFFT, Bluestein's inner convolution, the 2D/3D paths) goes through
+//! [`Pow2Plan`], so benches and tests can instantiate both kernels side
+//! by side while production code gets the process default. The parallel
+//! layer's bit-equality contract (`Serial == Threads(n)`) is stated per
+//! kernel: each kernel's column path performs the identical f64
+//! operation sequence as its 1D path, so the equality holds whichever
+//! kernel a plan selects — but outputs of *different* kernels only agree
+//! to rounding (~1e-15 relative), not bit-for-bit.
+
+use std::sync::OnceLock;
+
+use super::complex::C64;
+use super::radix2::Radix2Plan;
+use super::soa::SoaPlan;
+use crate::util::env_usize;
+
+/// Which butterfly implementation a power-of-two plan executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FftKernel {
+    /// Scalar AoS radix-2 (the original reference kernel).
+    ScalarRadix2,
+    /// Split-radix-style radix-4/radix-2 on planar SoA scratch.
+    #[default]
+    SplitRadixSoa,
+}
+
+impl FftKernel {
+    /// Stable label for bench tables / JSON rows.
+    pub fn name(self) -> &'static str {
+        match self {
+            FftKernel::ScalarRadix2 => "scalar-radix2",
+            FftKernel::SplitRadixSoa => "splitradix-soa",
+        }
+    }
+
+    /// Process-wide default kernel: `MDDCT_FFT_KERNEL=scalar` (or
+    /// `radix2`) selects the reference kernel, `soa` (or `radix4`,
+    /// unset) the SoA split-radix kernel. Any other value panics rather
+    /// than silently running the wrong side of an A/B comparison.
+    /// Resolved once.
+    pub fn default_kernel() -> FftKernel {
+        static K: OnceLock<FftKernel> = OnceLock::new();
+        *K.get_or_init(|| match std::env::var("MDDCT_FFT_KERNEL").ok().as_deref() {
+            Some("scalar") | Some("radix2") | Some("scalar-radix2") => FftKernel::ScalarRadix2,
+            None | Some("") | Some("soa") | Some("radix4") | Some("splitradix-soa") => {
+                FftKernel::SplitRadixSoa
+            }
+            Some(other) => panic!(
+                "MDDCT_FFT_KERNEL={other:?} not recognized (use \"scalar\" or \"soa\")"
+            ),
+        })
+    }
+}
+
+/// Default column-panel width for the blocked column transform: 64
+/// columns x 1024 rows of split re/im is a 1 MiB working set — inside
+/// L2 on every target we care about, and the panel for smaller row
+/// counts fits L1. Tunable per process via `MDDCT_PANEL_COLS` (this and
+/// the kernel selector are the auto-tuning surface the bench harness
+/// measures).
+pub const DEFAULT_PANEL_COLS: usize = 64;
+
+/// Resolved column-panel width (`MDDCT_PANEL_COLS` override, >= 1).
+pub fn panel_cols() -> usize {
+    static P: OnceLock<usize> = OnceLock::new();
+    *P.get_or_init(|| env_usize("MDDCT_PANEL_COLS").unwrap_or(DEFAULT_PANEL_COLS))
+}
+
+/// A power-of-two complex FFT plan executing one selected kernel.
+#[derive(Debug, Clone)]
+pub enum Pow2Plan {
+    Scalar(Radix2Plan),
+    SplitRadix(SoaPlan),
+}
+
+impl Pow2Plan {
+    /// Plan with the process-default kernel; `n` must be a power of two.
+    pub fn new(n: usize) -> Pow2Plan {
+        Pow2Plan::with_kernel(n, FftKernel::default_kernel())
+    }
+
+    /// Plan with an explicit kernel (benches / cross-kernel tests).
+    pub fn with_kernel(n: usize, kernel: FftKernel) -> Pow2Plan {
+        match kernel {
+            FftKernel::ScalarRadix2 => Pow2Plan::Scalar(Radix2Plan::new(n)),
+            FftKernel::SplitRadixSoa => Pow2Plan::SplitRadix(SoaPlan::new(n)),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        match self {
+            Pow2Plan::Scalar(p) => p.n,
+            Pow2Plan::SplitRadix(p) => p.n,
+        }
+    }
+
+    pub fn kernel(&self) -> FftKernel {
+        match self {
+            Pow2Plan::Scalar(_) => FftKernel::ScalarRadix2,
+            Pow2Plan::SplitRadix(_) => FftKernel::SplitRadixSoa,
+        }
+    }
+
+    /// In-place forward FFT (unnormalized).
+    pub fn forward(&self, data: &mut [C64]) {
+        match self {
+            Pow2Plan::Scalar(p) => p.forward(data),
+            Pow2Plan::SplitRadix(p) => p.forward(data),
+        }
+    }
+
+    /// In-place inverse FFT including the 1/N normalization.
+    pub fn inverse(&self, data: &mut [C64]) {
+        match self {
+            Pow2Plan::Scalar(p) => p.inverse(data),
+            Pow2Plan::SplitRadix(p) => p.inverse(data),
+        }
+    }
+
+    /// FFT along axis 0 of a row-major (n x ncols) matrix.
+    pub fn transform_cols(&self, data: &mut [C64], ncols: usize, invert: bool) {
+        match self {
+            Pow2Plan::Scalar(p) => p.transform_cols(data, ncols, invert),
+            Pow2Plan::SplitRadix(p) => p.transform_cols(data, ncols, invert),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn explicit_kernels_dispatch() {
+        let s = Pow2Plan::with_kernel(16, FftKernel::ScalarRadix2);
+        let v = Pow2Plan::with_kernel(16, FftKernel::SplitRadixSoa);
+        assert_eq!(s.kernel(), FftKernel::ScalarRadix2);
+        assert_eq!(v.kernel(), FftKernel::SplitRadixSoa);
+        assert_eq!(s.n(), 16);
+        assert_eq!(v.n(), 16);
+        assert_eq!(FftKernel::ScalarRadix2.name(), "scalar-radix2");
+    }
+
+    #[test]
+    fn kernels_agree_on_forward() {
+        let mut rng = Rng::new(50);
+        let n = 64;
+        let x: Vec<C64> = (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+        let mut a = x.clone();
+        let mut b = x.clone();
+        Pow2Plan::with_kernel(n, FftKernel::ScalarRadix2).forward(&mut a);
+        Pow2Plan::with_kernel(n, FftKernel::SplitRadixSoa).forward(&mut b);
+        for (u, v) in a.iter().zip(&b) {
+            assert!((*u - *v).abs() < 1e-10 * n as f64);
+        }
+    }
+
+    #[test]
+    fn panel_width_is_positive() {
+        assert!(panel_cols() >= 1);
+    }
+}

@@ -2,18 +2,24 @@
 //!
 //! The paper's paradigm delegates the O(N log N) stage to a
 //! highly-optimized FFT library; in the native Rust backend that library
-//! is this module: radix-2 + Bluestein complex FFTs, a real-input RFFT
-//! with the even-N packing trick, 2D/3D transforms, and a process-wide
-//! plan cache.
+//! is this module: power-of-two complex FFTs behind a per-plan kernel
+//! selector ([`FftKernel`]: scalar radix-2 reference vs the
+//! split-radix/radix-4 SoA throughput kernel), Bluestein for arbitrary
+//! N, a real-input RFFT with the even-N packing trick, 2D/3D
+//! transforms, and a process-wide plan cache.
 
 pub mod bluestein;
 pub mod complex;
+pub mod kernel;
 pub mod nd;
 pub mod plan;
 pub mod radix2;
 pub mod rfft;
+pub mod soa;
 
 pub use complex::C64;
+pub use kernel::{panel_cols, FftKernel, Pow2Plan};
 pub use nd::Rfft2Plan;
 pub use plan::{cached_plan_count, plan, FftPlan};
 pub use rfft::{onesided_len, RfftPlan};
+pub use soa::SoaPlan;

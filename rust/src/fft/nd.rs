@@ -53,7 +53,7 @@ impl Rfft2Plan {
         let lanes = self.policy.lanes(n1 * self.n2);
         if lanes > 1 {
             self.row.forward_batch(x, out, lanes);
-            self.col_fft_parallel(out, false, lanes);
+            self.col_fft_via_transpose(out, false, lanes);
             return;
         }
         // rows: real FFT
@@ -61,23 +61,13 @@ impl Rfft2Plan {
             self.row
                 .forward(&x[r * self.n2..(r + 1) * self.n2], &mut out[r * h2..(r + 1) * h2]);
         }
-        // columns: complex FFT along axis 0, vectorized across columns
-        // when n1 is a power of two (sequential access); fallback to
-        // column-at-a-time for Bluestein sizes.
-        match &*self.col {
-            super::plan::FftPlan::Radix2(p) => p.transform_cols(out, h2, false),
-            _ => {
-                let mut colbuf = vec![C64::default(); n1];
-                for c in 0..h2 {
-                    for r in 0..n1 {
-                        colbuf[r] = out[r * h2 + c];
-                    }
-                    self.col.forward(&mut colbuf);
-                    for r in 0..n1 {
-                        out[r * h2 + c] = colbuf[r];
-                    }
-                }
-            }
+        // columns: blocked column kernel when n1 is a power of two;
+        // Bluestein sizes take the same transpose -> contiguous row FFTs
+        // -> transpose route as the parallel branch, just with one lane
+        // (the old per-column gather/scatter loop was the last strided
+        // stage left in the serial path).
+        if !self.col.try_transform_cols(out, h2, false) {
+            self.col_fft_via_transpose(out, false, 1);
         }
     }
 
@@ -90,25 +80,13 @@ impl Rfft2Plan {
         let mut work = scratch::take_c64(spec.len());
         work.copy_from_slice(spec);
         if lanes > 1 {
-            self.col_fft_parallel(&mut work, true, lanes);
+            self.col_fft_via_transpose(&mut work, true, lanes);
             self.row.inverse_batch(&work, out, lanes);
             scratch::give_c64(work);
             return;
         }
-        match &*self.col {
-            super::plan::FftPlan::Radix2(p) => p.transform_cols(&mut work, h2, true),
-            _ => {
-                let mut colbuf = vec![C64::default(); n1];
-                for c in 0..h2 {
-                    for r in 0..n1 {
-                        colbuf[r] = work[r * h2 + c];
-                    }
-                    self.col.inverse(&mut colbuf);
-                    for r in 0..n1 {
-                        work[r * h2 + c] = colbuf[r];
-                    }
-                }
-            }
+        if !self.col.try_transform_cols(&mut work, h2, true) {
+            self.col_fft_via_transpose(&mut work, true, 1);
         }
         for r in 0..n1 {
             self.row
@@ -117,10 +95,11 @@ impl Rfft2Plan {
         scratch::give_c64(work);
     }
 
-    /// Parallel column-axis FFT: transpose so columns become contiguous
-    /// rows, run the (radix-2 or Bluestein) n1-plan per row across the
-    /// pool, transpose back. Both transposes are parallel and tiled.
-    fn col_fft_parallel(&self, data: &mut [C64], invert: bool, lanes: usize) {
+    /// Column-axis FFT via locality transform: transpose so columns
+    /// become contiguous rows, run the n1-plan per row (fanned over the
+    /// pool when `lanes > 1`, inline when 1), transpose back. Both
+    /// transposes are the cache-blocked tiled ones.
+    fn col_fft_via_transpose(&self, data: &mut [C64], invert: bool, lanes: usize) {
         let (n1, h2) = (self.n1, self.h2);
         if n1 <= 1 {
             return; // length-1 column FFT is the identity
@@ -192,42 +171,36 @@ pub fn rfft3_threads(x: &[f64], n1: usize, n2: usize, n3: usize, lanes: usize) -
         }
     }
     // FFT along dim 2 (n2): each i-slab (n2 x h3) is contiguous, so
-    // slabs fan out directly
+    // slabs fan out directly; inside a slab the blocked column kernel
+    // runs when n2 is a power of two, else the per-column Bluestein loop
     let p2 = plan(n2);
     par_chunks_mut(&mut out, n2 * h3, lanes, |_i, slab| {
-        let mut buf2 = vec![C64::default(); n2];
-        for c in 0..h3 {
-            for j in 0..n2 {
-                buf2[j] = slab[j * h3 + c];
-            }
-            p2.forward(&mut buf2);
-            for j in 0..n2 {
-                slab[j * h3 + c] = buf2[j];
+        if !p2.try_transform_cols(slab, h3, false) {
+            let mut buf2 = vec![C64::default(); n2];
+            for c in 0..h3 {
+                for j in 0..n2 {
+                    buf2[j] = slab[j * h3 + c];
+                }
+                p2.forward(&mut buf2);
+                for j in 0..n2 {
+                    slab[j * h3 + c] = buf2[j];
+                }
             }
         }
     });
     // FFT along dim 1 (n1): strided across slabs; view as an
-    // (n1 x n2*h3) matrix and use transpose -> row FFTs -> transpose
+    // (n1 x n2*h3) matrix. One lane + power-of-two n1 runs the blocked
+    // column kernel in place; otherwise transpose -> row FFTs ->
+    // transpose (parallel fan-out, and the Bluestein locality route)
     let p1 = plan(n1);
     if n1 > 1 {
         let m = n2 * h3;
-        if lanes > 1 {
+        if lanes > 1 || !p1.try_transform_cols(&mut out, m, false) {
             let mut t = scratch::take_c64(n1 * m);
             transpose_into(&out, &mut t, n1, m, lanes);
             par_chunks_mut(&mut t, n1, lanes, |_s, row| p1.forward(row));
             transpose_into(&t, &mut out, m, n1, lanes);
             scratch::give_c64(t);
-        } else {
-            let mut buf1 = vec![C64::default(); n1];
-            for s in 0..m {
-                for i in 0..n1 {
-                    buf1[i] = out[i * m + s];
-                }
-                p1.forward(&mut buf1);
-                for i in 0..n1 {
-                    out[i * m + s] = buf1[i];
-                }
-            }
         }
     }
     out

@@ -3,34 +3,43 @@
 //! Mirrors the cuFFT/FFTW "plan" concept the paper relies on: building a
 //! plan does all trig/permutation precomputation; executing it is
 //! allocation-light. Plans are cached per size in a global table so the
-//! service hot path never rebuilds twiddles.
+//! service hot path never rebuilds twiddles. Cached plans carry the
+//! process-default [`FftKernel`]; benches and tests build explicit
+//! kernels with [`FftPlan::with_kernel`] (uncached).
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::bluestein::BluesteinPlan;
 use super::complex::C64;
-use super::radix2::Radix2Plan;
+use super::kernel::{FftKernel, Pow2Plan};
 
-/// A complex FFT plan for one size (radix-2 when possible, Bluestein else).
+/// A complex FFT plan for one size (power-of-two kernel when possible,
+/// Bluestein else).
 #[derive(Debug, Clone)]
 pub enum FftPlan {
-    Radix2(Radix2Plan),
+    Pow2(Pow2Plan),
     Bluestein(BluesteinPlan),
 }
 
 impl FftPlan {
     pub fn new(n: usize) -> FftPlan {
+        FftPlan::with_kernel(n, FftKernel::default_kernel())
+    }
+
+    /// Plan with an explicit power-of-two kernel; for non-power-of-two
+    /// sizes the kernel selects Bluestein's inner convolution FFT.
+    pub fn with_kernel(n: usize, kernel: FftKernel) -> FftPlan {
         if n.is_power_of_two() {
-            FftPlan::Radix2(Radix2Plan::new(n))
+            FftPlan::Pow2(Pow2Plan::with_kernel(n, kernel))
         } else {
-            FftPlan::Bluestein(BluesteinPlan::new(n))
+            FftPlan::Bluestein(BluesteinPlan::with_kernel(n, kernel))
         }
     }
 
     pub fn len(&self) -> usize {
         match self {
-            FftPlan::Radix2(p) => p.n,
+            FftPlan::Pow2(p) => p.n(),
             FftPlan::Bluestein(p) => p.n,
         }
     }
@@ -39,10 +48,19 @@ impl FftPlan {
         self.len() == 0
     }
 
+    /// The power-of-two kernel this plan executes (Bluestein reports the
+    /// kernel of its inner convolution FFT).
+    pub fn kernel(&self) -> FftKernel {
+        match self {
+            FftPlan::Pow2(p) => p.kernel(),
+            FftPlan::Bluestein(p) => p.kernel(),
+        }
+    }
+
     /// In-place forward DFT (unnormalized).
     pub fn forward(&self, data: &mut [C64]) {
         match self {
-            FftPlan::Radix2(p) => p.forward(data),
+            FftPlan::Pow2(p) => p.forward(data),
             FftPlan::Bluestein(p) => p.forward(data),
         }
     }
@@ -50,8 +68,21 @@ impl FftPlan {
     /// In-place inverse DFT (normalized by 1/N).
     pub fn inverse(&self, data: &mut [C64]) {
         match self {
-            FftPlan::Radix2(p) => p.inverse(data),
+            FftPlan::Pow2(p) => p.inverse(data),
             FftPlan::Bluestein(p) => p.inverse(data),
+        }
+    }
+
+    /// Axis-0 FFT of a row-major (n x ncols) matrix when this plan has a
+    /// power-of-two kernel; returns false (data untouched) for Bluestein
+    /// sizes, whose column stages go through the transpose path instead.
+    pub fn try_transform_cols(&self, data: &mut [C64], ncols: usize, invert: bool) -> bool {
+        match self {
+            FftPlan::Pow2(p) => {
+                p.transform_cols(data, ncols, invert);
+                true
+            }
+            FftPlan::Bluestein(_) => false,
         }
     }
 }
@@ -80,9 +111,17 @@ mod tests {
 
     #[test]
     fn dispatches_by_size() {
-        assert!(matches!(FftPlan::new(64), FftPlan::Radix2(_)));
+        assert!(matches!(FftPlan::new(64), FftPlan::Pow2(_)));
         assert!(matches!(FftPlan::new(100), FftPlan::Bluestein(_)));
         assert_eq!(FftPlan::new(100).len(), 100);
+    }
+
+    #[test]
+    fn explicit_kernel_reaches_bluestein_inner() {
+        let p = FftPlan::with_kernel(100, FftKernel::ScalarRadix2);
+        assert_eq!(p.kernel(), FftKernel::ScalarRadix2);
+        let q = FftPlan::with_kernel(100, FftKernel::SplitRadixSoa);
+        assert_eq!(q.kernel(), FftKernel::SplitRadixSoa);
     }
 
     #[test]
@@ -91,6 +130,18 @@ mod tests {
         let b = plan(48);
         assert!(Arc::ptr_eq(&a, &b));
         assert!(cached_plan_count() >= 1);
+    }
+
+    #[test]
+    fn try_transform_cols_only_for_pow2() {
+        let mut rng = Rng::new(8);
+        let (n, ncols) = (8usize, 3usize);
+        let mut data: Vec<C64> =
+            (0..n * ncols).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+        assert!(plan(n).try_transform_cols(&mut data, ncols, false));
+        let mut data3: Vec<C64> =
+            (0..3 * ncols).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+        assert!(!plan(3).try_transform_cols(&mut data3, ncols, false));
     }
 
     #[test]

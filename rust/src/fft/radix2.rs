@@ -1,9 +1,12 @@
 //! Iterative radix-2 decimation-in-time FFT with precomputed twiddles.
 //!
-//! This is the power-of-two workhorse behind the native backend's RFFT
-//! (cuFFT/FFTW substitute). Twiddle tables are owned by the plan so
-//! repeated transforms of the same size pay no trig (the paper's
-//! "pre-computed and fixed before the call" convention).
+//! This is the scalar AoS reference kernel behind
+//! [`FftKernel::ScalarRadix2`](super::kernel::FftKernel): the original
+//! power-of-two workhorse, kept selectable so benches can measure
+//! old-vs-new and tests can cross-check the split-radix/radix-4 SoA
+//! kernel ([`super::soa`]) against it. Twiddle tables are owned by the
+//! plan so repeated transforms of the same size pay no trig (the
+//! paper's "pre-computed and fixed before the call" convention).
 
 use super::complex::C64;
 

@@ -30,6 +30,16 @@ pub struct RfftPlan {
 
 impl RfftPlan {
     pub fn new(n: usize) -> RfftPlan {
+        RfftPlan::build(n, plan)
+    }
+
+    /// Plan whose complex FFT runs an explicit power-of-two kernel
+    /// (uncached; the shared [`plan`] cache keeps the process default).
+    pub fn with_kernel(n: usize, kernel: crate::fft::FftKernel) -> RfftPlan {
+        RfftPlan::build(n, |sz| Arc::new(FftPlan::with_kernel(sz, kernel)))
+    }
+
+    fn build(n: usize, inner_plan: impl Fn(usize) -> Arc<FftPlan>) -> RfftPlan {
         assert!(n >= 1);
         let even = n % 2 == 0 && n > 1;
         if even {
@@ -37,9 +47,9 @@ impl RfftPlan {
             let tw = (0..half / 2 + 1)
                 .map(|k| C64::cis(-2.0 * std::f64::consts::PI * k as f64 / n as f64))
                 .collect();
-            RfftPlan { n, inner: plan(half), twiddle: tw, even }
+            RfftPlan { n, inner: inner_plan(half), twiddle: tw, even }
         } else {
-            RfftPlan { n, inner: plan(n), twiddle: Vec::new(), even }
+            RfftPlan { n, inner: inner_plan(n), twiddle: Vec::new(), even }
         }
     }
 

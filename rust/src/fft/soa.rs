@@ -1,0 +1,647 @@
+//! Split-radix-style mixed radix-4/radix-2 FFT on planar (SoA) scratch.
+//!
+//! This is the throughput kernel behind [`FftKernel::SplitRadixSoa`]
+//! (see [`super::kernel`]): the same power-of-two DIT factorization as
+//! the scalar radix-2 reference, but
+//!
+//! * stages are radix-4 wherever possible (one radix-2 stage absorbs an
+//!   odd log2), so the data makes half as many passes through memory
+//!   and each butterfly spends 3 complex multiplies where two radix-2
+//!   stages spend 4;
+//! * butterflies operate on split re/im `f64` planes ("structure of
+//!   arrays"), so every inner loop is a flat `f64` loop over contiguous
+//!   slices — the shape LLVM's autovectorizer turns into SIMD lanes
+//!   without any explicit intrinsics (stable Rust only);
+//! * the bit-reversal permutation is fused into the first, twiddle-free
+//!   stage: the AoS input is gathered in permuted order while it is
+//!   deinterleaved into the planes, saving a separate permute pass;
+//! * [`SoaPlan::transform_cols`] is cache-blocked into column panels of
+//!   [`super::kernel::panel_cols`] columns, so a whole multi-stage
+//!   column FFT runs out of an L1/L2-resident panel instead of
+//!   streaming the full `n * ncols` matrix through every stage.
+//!
+//! Radix-4 on bit-reversed (base-2) input needs one reordering fact: at
+//! each combine, the four length-L sub-DFTs of a length-4L block sit at
+//! offsets {0, 2L, L, 3L} for decimation indices d = {0, 1, 2, 3} (the
+//! middle two blocks trade places, because reversing the two low bits
+//! of the block index swaps 01 and 10). The butterflies below read with
+//! that swap and write in natural order.
+//!
+//! Contract: for a given plan size, the 1D path and the column path
+//! perform the identical sequence of f64 operations per element, so
+//! `transform_cols` matches a per-column 1D transform bit-for-bit —
+//! that is what keeps the parallel layer's `Serial == Threads(n)`
+//! equality exact for this kernel (the parallel column stage runs the
+//! 1D kernel on transposed rows).
+
+use super::complex::C64;
+use super::kernel::panel_cols;
+use crate::util::scratch;
+
+/// Precomputed split-radix/radix-4 state for power-of-two FFTs of one
+/// size, executing on planar scratch.
+#[derive(Debug, Clone)]
+pub struct SoaPlan {
+    pub n: usize,
+    /// base-2 bit-reversal permutation (shared ordering with the scalar
+    /// radix-2 kernel)
+    rev: Vec<u32>,
+    /// log2(n) odd: the fused first stage is radix-2 pairs; even: a
+    /// twiddle-free radix-4 stage on gathered quads
+    first_radix2: bool,
+    /// radix-4 combine stages, in execution order
+    stages: Vec<Stage4>,
+}
+
+/// Twiddles for one radix-4 stage combining length-`len` sub-DFTs:
+/// planar (w^k, w^{2k}, w^{3k}) for w = e^{-2*pi*j/(4*len)}, k in 0..len.
+#[derive(Debug, Clone)]
+struct Stage4 {
+    len: usize,
+    w1re: Vec<f64>,
+    w1im: Vec<f64>,
+    w2re: Vec<f64>,
+    w2im: Vec<f64>,
+    w3re: Vec<f64>,
+    w3im: Vec<f64>,
+}
+
+impl Stage4 {
+    fn new(len: usize) -> Stage4 {
+        let step = -2.0 * std::f64::consts::PI / (4 * len) as f64;
+        let mut s = Stage4 {
+            len,
+            w1re: Vec::with_capacity(len),
+            w1im: Vec::with_capacity(len),
+            w2re: Vec::with_capacity(len),
+            w2im: Vec::with_capacity(len),
+            w3re: Vec::with_capacity(len),
+            w3im: Vec::with_capacity(len),
+        };
+        for k in 0..len {
+            let w1 = C64::cis(step * k as f64);
+            let w2 = C64::cis(step * (2 * k) as f64);
+            let w3 = C64::cis(step * (3 * k) as f64);
+            s.w1re.push(w1.re);
+            s.w1im.push(w1.im);
+            s.w2re.push(w2.re);
+            s.w2im.push(w2.im);
+            s.w3re.push(w3.re);
+            s.w3im.push(w3.im);
+        }
+        s
+    }
+}
+
+impl SoaPlan {
+    /// Build a plan; `n` must be a power of two (>= 1).
+    pub fn new(n: usize) -> SoaPlan {
+        assert!(n.is_power_of_two(), "radix-4 plan needs power-of-two n, got {n}");
+        let bits = n.trailing_zeros();
+        let rev = (0..n as u32)
+            .map(|i| if bits == 0 { 0 } else { i.reverse_bits() >> (32 - bits) })
+            .collect();
+        let first_radix2 = bits % 2 == 1;
+        let mut stages = Vec::new();
+        if n >= 2 {
+            let mut l = if first_radix2 { 2 } else { 4 };
+            while 4 * l <= n {
+                stages.push(Stage4::new(l));
+                l *= 4;
+            }
+        }
+        SoaPlan { n, rev, first_radix2, stages }
+    }
+
+    /// In-place forward FFT (negative-exponent convention, unnormalized).
+    pub fn forward(&self, data: &mut [C64]) {
+        self.transform(data, false);
+    }
+
+    /// In-place inverse FFT including the 1/N normalization.
+    pub fn inverse(&self, data: &mut [C64]) {
+        self.transform(data, true);
+    }
+
+    fn transform(&self, data: &mut [C64], invert: bool) {
+        let n = self.n;
+        assert_eq!(data.len(), n, "data length != plan size");
+        if n == 1 {
+            return;
+        }
+        let mut re = scratch::take_f64(n);
+        let mut im = scratch::take_f64(n);
+        self.first_stage_1d(data, &mut re, &mut im, invert);
+        for st in &self.stages {
+            if invert {
+                stage4_1d_inv(&mut re, &mut im, st);
+            } else {
+                stage4_1d_fwd(&mut re, &mut im, st);
+            }
+        }
+        if invert {
+            let inv = 1.0 / n as f64;
+            for (d, (r, i)) in data.iter_mut().zip(re.iter().zip(im.iter())) {
+                *d = C64::new(r * inv, i * inv);
+            }
+        } else {
+            for (d, (r, i)) in data.iter_mut().zip(re.iter().zip(im.iter())) {
+                *d = C64::new(*r, *i);
+            }
+        }
+        scratch::give_f64(re);
+        scratch::give_f64(im);
+    }
+
+    /// Fused bit-reversal + first (twiddle-free) stage: gather the AoS
+    /// input in permuted order straight into the planar scratch while
+    /// computing the first butterflies.
+    fn first_stage_1d(&self, x: &[C64], re: &mut [f64], im: &mut [f64], invert: bool) {
+        let rev = &self.rev;
+        if self.first_radix2 {
+            for b in 0..self.n / 2 {
+                let p = x[rev[2 * b] as usize];
+                let q = x[rev[2 * b + 1] as usize];
+                re[2 * b] = p.re + q.re;
+                im[2 * b] = p.im + q.im;
+                re[2 * b + 1] = p.re - q.re;
+                im[2 * b + 1] = p.im - q.im;
+            }
+        } else {
+            for b in 0..self.n / 4 {
+                // decimation order d = 0,1,2,3 lives at permuted
+                // positions 0,2,1,3 of the quad (low-bit reversal)
+                let x0 = x[rev[4 * b] as usize];
+                let x1 = x[rev[4 * b + 2] as usize];
+                let x2 = x[rev[4 * b + 1] as usize];
+                let x3 = x[rev[4 * b + 3] as usize];
+                let t0r = x0.re + x2.re;
+                let t0i = x0.im + x2.im;
+                let t1r = x0.re - x2.re;
+                let t1i = x0.im - x2.im;
+                let t2r = x1.re + x3.re;
+                let t2i = x1.im + x3.im;
+                let t3r = x1.re - x3.re;
+                let t3i = x1.im - x3.im;
+                re[4 * b] = t0r + t2r;
+                im[4 * b] = t0i + t2i;
+                re[4 * b + 2] = t0r - t2r;
+                im[4 * b + 2] = t0i - t2i;
+                if invert {
+                    re[4 * b + 1] = t1r - t3i;
+                    im[4 * b + 1] = t1i + t3r;
+                    re[4 * b + 3] = t1r + t3i;
+                    im[4 * b + 3] = t1i - t3r;
+                } else {
+                    re[4 * b + 1] = t1r + t3i;
+                    im[4 * b + 1] = t1i - t3r;
+                    re[4 * b + 3] = t1r - t3i;
+                    im[4 * b + 3] = t1i + t3r;
+                }
+            }
+        }
+    }
+
+    /// FFT along axis 0 of a row-major (n x ncols) matrix, cache-blocked
+    /// into column panels: each panel of up to [`panel_cols`] columns is
+    /// gathered (bit-reversed + deinterleaved) into planar scratch, run
+    /// through every stage while resident, and scattered back. Inner
+    /// loops are flat f64 loops across the panel width with one scalar
+    /// twiddle broadcast per butterfly row — the autovectorizer's
+    /// favourite shape.
+    pub fn transform_cols(&self, data: &mut [C64], ncols: usize, invert: bool) {
+        let n = self.n;
+        assert_eq!(data.len(), n * ncols);
+        if n == 1 || ncols == 0 {
+            return;
+        }
+        let pw = panel_cols().min(ncols);
+        let mut re = scratch::take_f64(n * pw);
+        let mut im = scratch::take_f64(n * pw);
+        let inv = 1.0 / n as f64;
+        let mut c0 = 0;
+        while c0 < ncols {
+            let w = pw.min(ncols - c0);
+            let rp = &mut re[..n * w];
+            let ip = &mut im[..n * w];
+            self.first_stage_cols(data, rp, ip, c0, w, ncols, invert);
+            for st in &self.stages {
+                if invert {
+                    stage4_cols_inv(rp, ip, w, st);
+                } else {
+                    stage4_cols_fwd(rp, ip, w, st);
+                }
+            }
+            for r in 0..n {
+                let row = &mut data[r * ncols + c0..r * ncols + c0 + w];
+                let rr = &rp[r * w..r * w + w];
+                let ri = &ip[r * w..r * w + w];
+                if invert {
+                    for c in 0..w {
+                        row[c] = C64::new(rr[c] * inv, ri[c] * inv);
+                    }
+                } else {
+                    for c in 0..w {
+                        row[c] = C64::new(rr[c], ri[c]);
+                    }
+                }
+            }
+            c0 += w;
+        }
+        scratch::give_f64(re);
+        scratch::give_f64(im);
+    }
+
+    /// Panel variant of the fused first stage: whole-row butterflies on
+    /// bit-reversed source rows, written into the (n x w) planar panel.
+    #[allow(clippy::too_many_arguments)]
+    fn first_stage_cols(
+        &self,
+        x: &[C64],
+        re: &mut [f64],
+        im: &mut [f64],
+        c0: usize,
+        w: usize,
+        ncols: usize,
+        invert: bool,
+    ) {
+        let rev = &self.rev;
+        if self.first_radix2 {
+            for b in 0..self.n / 2 {
+                let sp = rev[2 * b] as usize * ncols + c0;
+                let sq = rev[2 * b + 1] as usize * ncols + c0;
+                let p = &x[sp..sp + w];
+                let q = &x[sq..sq + w];
+                let d0 = 2 * b * w;
+                let d1 = (2 * b + 1) * w;
+                for c in 0..w {
+                    re[d0 + c] = p[c].re + q[c].re;
+                    im[d0 + c] = p[c].im + q[c].im;
+                    re[d1 + c] = p[c].re - q[c].re;
+                    im[d1 + c] = p[c].im - q[c].im;
+                }
+            }
+        } else {
+            for b in 0..self.n / 4 {
+                let s0 = rev[4 * b] as usize * ncols + c0;
+                let s1 = rev[4 * b + 2] as usize * ncols + c0;
+                let s2 = rev[4 * b + 1] as usize * ncols + c0;
+                let s3 = rev[4 * b + 3] as usize * ncols + c0;
+                let x0 = &x[s0..s0 + w];
+                let x1 = &x[s1..s1 + w];
+                let x2 = &x[s2..s2 + w];
+                let x3 = &x[s3..s3 + w];
+                let d0 = 4 * b * w;
+                let d1 = (4 * b + 1) * w;
+                let d2 = (4 * b + 2) * w;
+                let d3 = (4 * b + 3) * w;
+                for c in 0..w {
+                    let t0r = x0[c].re + x2[c].re;
+                    let t0i = x0[c].im + x2[c].im;
+                    let t1r = x0[c].re - x2[c].re;
+                    let t1i = x0[c].im - x2[c].im;
+                    let t2r = x1[c].re + x3[c].re;
+                    let t2i = x1[c].im + x3[c].im;
+                    let t3r = x1[c].re - x3[c].re;
+                    let t3i = x1[c].im - x3[c].im;
+                    re[d0 + c] = t0r + t2r;
+                    im[d0 + c] = t0i + t2i;
+                    re[d2 + c] = t0r - t2r;
+                    im[d2 + c] = t0i - t2i;
+                    if invert {
+                        re[d1 + c] = t1r - t3i;
+                        im[d1 + c] = t1i + t3r;
+                        re[d3 + c] = t1r + t3i;
+                        im[d3 + c] = t1i - t3r;
+                    } else {
+                        re[d1 + c] = t1r + t3i;
+                        im[d1 + c] = t1i - t3r;
+                        re[d3 + c] = t1r - t3i;
+                        im[d3 + c] = t1i + t3r;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Split a length-4L block of each plane into its four sub-DFT slices.
+/// Returned in natural block order (offsets 0, L, 2L, 3L); remember the
+/// decimation swap: d=1 input is the slice at +2L, d=2 at +L.
+#[inline(always)]
+#[allow(clippy::type_complexity)]
+fn split4<'a>(
+    plane: &'a mut [f64],
+    base: usize,
+    l: usize,
+) -> (&'a mut [f64], &'a mut [f64], &'a mut [f64], &'a mut [f64]) {
+    let block = &mut plane[base..base + 4 * l];
+    let (s0, rest) = block.split_at_mut(l);
+    let (s1, rest) = rest.split_at_mut(l);
+    let (s2, s3) = rest.split_at_mut(l);
+    (s0, s1, s2, s3)
+}
+
+// The 1D and cols stage bodies below are deliberately hand-mirrored
+// rather than shared: the 1D variants vectorize across k (twiddle
+// arrays are vector operands), the cols variants across the panel
+// width (twiddles are scalar broadcasts) — collapsing one into the
+// other forfeits that variant's SIMD shape. Their per-element f64
+// operation sequences MUST stay identical; that is the bitwise
+// cols == per-column-1D contract, asserted by
+// `transform_cols_bitwise_matches_per_column_1d` here and
+// `prop_blocked_transform_cols_matches_per_column_1d` in tier-1.
+
+/// Forward radix-4 combine over the whole 1D planes: per block, input
+/// sub-DFTs (a, b, c, d) = (s0, w1*s2, w2*s1, w3*s3); outputs
+/// Y(k+qL) -> sq[k] with the -j rotations of the negative-exponent DFT.
+fn stage4_1d_fwd(re: &mut [f64], im: &mut [f64], st: &Stage4) {
+    let l = st.len;
+    let m = 4 * l;
+    let n = re.len();
+    let w1r = &st.w1re[..l];
+    let w1i = &st.w1im[..l];
+    let w2r = &st.w2re[..l];
+    let w2i = &st.w2im[..l];
+    let w3r = &st.w3re[..l];
+    let w3i = &st.w3im[..l];
+    for base in (0..n).step_by(m) {
+        let (r0, r1, r2, r3) = split4(re, base, l);
+        let (i0, i1, i2, i3) = split4(im, base, l);
+        for k in 0..l {
+            let ar = r0[k];
+            let ai = i0[k];
+            let br = r2[k] * w1r[k] - i2[k] * w1i[k];
+            let bi = r2[k] * w1i[k] + i2[k] * w1r[k];
+            let cr = r1[k] * w2r[k] - i1[k] * w2i[k];
+            let ci = r1[k] * w2i[k] + i1[k] * w2r[k];
+            let dr = r3[k] * w3r[k] - i3[k] * w3i[k];
+            let di = r3[k] * w3i[k] + i3[k] * w3r[k];
+            let t0r = ar + cr;
+            let t0i = ai + ci;
+            let t1r = ar - cr;
+            let t1i = ai - ci;
+            let t2r = br + dr;
+            let t2i = bi + di;
+            let t3r = br - dr;
+            let t3i = bi - di;
+            r0[k] = t0r + t2r;
+            i0[k] = t0i + t2i;
+            r1[k] = t1r + t3i;
+            i1[k] = t1i - t3r;
+            r2[k] = t0r - t2r;
+            i2[k] = t0i - t2i;
+            r3[k] = t1r - t3i;
+            i3[k] = t1i + t3r;
+        }
+    }
+}
+
+/// Inverse radix-4 combine (conjugate twiddles, +j rotations); the 1/N
+/// normalization happens at interleave/scatter time.
+fn stage4_1d_inv(re: &mut [f64], im: &mut [f64], st: &Stage4) {
+    let l = st.len;
+    let m = 4 * l;
+    let n = re.len();
+    let w1r = &st.w1re[..l];
+    let w1i = &st.w1im[..l];
+    let w2r = &st.w2re[..l];
+    let w2i = &st.w2im[..l];
+    let w3r = &st.w3re[..l];
+    let w3i = &st.w3im[..l];
+    for base in (0..n).step_by(m) {
+        let (r0, r1, r2, r3) = split4(re, base, l);
+        let (i0, i1, i2, i3) = split4(im, base, l);
+        for k in 0..l {
+            let ar = r0[k];
+            let ai = i0[k];
+            let br = r2[k] * w1r[k] + i2[k] * w1i[k];
+            let bi = i2[k] * w1r[k] - r2[k] * w1i[k];
+            let cr = r1[k] * w2r[k] + i1[k] * w2i[k];
+            let ci = i1[k] * w2r[k] - r1[k] * w2i[k];
+            let dr = r3[k] * w3r[k] + i3[k] * w3i[k];
+            let di = i3[k] * w3r[k] - r3[k] * w3i[k];
+            let t0r = ar + cr;
+            let t0i = ai + ci;
+            let t1r = ar - cr;
+            let t1i = ai - ci;
+            let t2r = br + dr;
+            let t2i = bi + di;
+            let t3r = br - dr;
+            let t3i = bi - di;
+            r0[k] = t0r + t2r;
+            i0[k] = t0i + t2i;
+            r1[k] = t1r - t3i;
+            i1[k] = t1i + t3r;
+            r2[k] = t0r - t2r;
+            i2[k] = t0i - t2i;
+            r3[k] = t1r + t3i;
+            i3[k] = t1i - t3r;
+        }
+    }
+}
+
+/// Forward radix-4 combine over an (nrows x w) planar panel: identical
+/// arithmetic to [`stage4_1d_fwd`] per column element, with the scalar
+/// twiddle pair broadcast across the flat inner loop over the panel.
+fn stage4_cols_fwd(re: &mut [f64], im: &mut [f64], w: usize, st: &Stage4) {
+    let l = st.len;
+    let nrows = re.len() / w;
+    for base in (0..nrows).step_by(4 * l) {
+        let (r0, r1, r2, r3) = split4(re, base * w, l * w);
+        let (i0, i1, i2, i3) = split4(im, base * w, l * w);
+        for k in 0..l {
+            let w1r = st.w1re[k];
+            let w1i = st.w1im[k];
+            let w2r = st.w2re[k];
+            let w2i = st.w2im[k];
+            let w3r = st.w3re[k];
+            let w3i = st.w3im[k];
+            let o = k * w;
+            for c in o..o + w {
+                let ar = r0[c];
+                let ai = i0[c];
+                let br = r2[c] * w1r - i2[c] * w1i;
+                let bi = r2[c] * w1i + i2[c] * w1r;
+                let cr = r1[c] * w2r - i1[c] * w2i;
+                let ci = r1[c] * w2i + i1[c] * w2r;
+                let dr = r3[c] * w3r - i3[c] * w3i;
+                let di = r3[c] * w3i + i3[c] * w3r;
+                let t0r = ar + cr;
+                let t0i = ai + ci;
+                let t1r = ar - cr;
+                let t1i = ai - ci;
+                let t2r = br + dr;
+                let t2i = bi + di;
+                let t3r = br - dr;
+                let t3i = bi - di;
+                r0[c] = t0r + t2r;
+                i0[c] = t0i + t2i;
+                r1[c] = t1r + t3i;
+                i1[c] = t1i - t3r;
+                r2[c] = t0r - t2r;
+                i2[c] = t0i - t2i;
+                r3[c] = t1r - t3i;
+                i3[c] = t1i + t3r;
+            }
+        }
+    }
+}
+
+/// Inverse counterpart of [`stage4_cols_fwd`] (conjugate twiddles, +j
+/// rotations), arithmetic mirrored from [`stage4_1d_inv`].
+fn stage4_cols_inv(re: &mut [f64], im: &mut [f64], w: usize, st: &Stage4) {
+    let l = st.len;
+    let nrows = re.len() / w;
+    for base in (0..nrows).step_by(4 * l) {
+        let (r0, r1, r2, r3) = split4(re, base * w, l * w);
+        let (i0, i1, i2, i3) = split4(im, base * w, l * w);
+        for k in 0..l {
+            let w1r = st.w1re[k];
+            let w1i = st.w1im[k];
+            let w2r = st.w2re[k];
+            let w2i = st.w2im[k];
+            let w3r = st.w3re[k];
+            let w3i = st.w3im[k];
+            let o = k * w;
+            for c in o..o + w {
+                let ar = r0[c];
+                let ai = i0[c];
+                let br = r2[c] * w1r + i2[c] * w1i;
+                let bi = i2[c] * w1r - r2[c] * w1i;
+                let cr = r1[c] * w2r + i1[c] * w2i;
+                let ci = i1[c] * w2r - r1[c] * w2i;
+                let dr = r3[c] * w3r + i3[c] * w3i;
+                let di = i3[c] * w3r - r3[c] * w3i;
+                let t0r = ar + cr;
+                let t0i = ai + ci;
+                let t1r = ar - cr;
+                let t1i = ai - ci;
+                let t2r = br + dr;
+                let t2i = bi + di;
+                let t3r = br - dr;
+                let t3i = bi - di;
+                r0[c] = t0r + t2r;
+                i0[c] = t0i + t2i;
+                r1[c] = t1r - t3i;
+                i1[c] = t1i + t3r;
+                r2[c] = t0r - t2r;
+                i2[c] = t0i - t2i;
+                r3[c] = t1r + t3i;
+                i3[c] = t1i - t3r;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::radix2::{dft_naive, Radix2Plan};
+    use crate::util::rng::Rng;
+
+    fn rand_c(rng: &mut Rng, n: usize) -> Vec<C64> {
+        (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect()
+    }
+
+    fn close(a: &[C64], b: &[C64], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (*x - *y).abs() < tol,
+                "idx {i}: {x:?} vs {y:?} (diff {})",
+                (*x - *y).abs()
+            );
+        }
+    }
+
+    #[test]
+    fn matches_naive_dft_even_and_odd_log2() {
+        let mut rng = Rng::new(41);
+        // exercises both first-stage shapes: 2,8,32,128 are odd log2;
+        // 1,4,16,64,256 even
+        for &n in &[1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
+            let x = rand_c(&mut rng, n);
+            let mut y = x.clone();
+            SoaPlan::new(n).forward(&mut y);
+            close(&y, &dft_naive(&x, false), 1e-9 * (n as f64).max(1.0));
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let mut rng = Rng::new(42);
+        for &n in &[2usize, 4, 8, 64, 512, 1024] {
+            let plan = SoaPlan::new(n);
+            let x = rand_c(&mut rng, n);
+            let mut y = x.clone();
+            plan.forward(&mut y);
+            plan.inverse(&mut y);
+            close(&y, &x, 1e-10);
+        }
+    }
+
+    #[test]
+    fn agrees_with_scalar_radix2() {
+        let mut rng = Rng::new(43);
+        for &n in &[4usize, 8, 16, 128, 1024] {
+            let x = rand_c(&mut rng, n);
+            let mut a = x.clone();
+            let mut b = x.clone();
+            SoaPlan::new(n).forward(&mut a);
+            Radix2Plan::new(n).forward(&mut b);
+            close(&a, &b, 1e-10 * (n as f64));
+        }
+    }
+
+    #[test]
+    fn transform_cols_bitwise_matches_per_column_1d() {
+        let mut rng = Rng::new(44);
+        // ncols > panel width forces multiple panels at default 64
+        for &(n, ncols) in &[(2usize, 3usize), (8, 70), (16, 64), (64, 5), (128, 130)] {
+            let plan = SoaPlan::new(n);
+            let base = rand_c(&mut rng, n * ncols);
+            for invert in [false, true] {
+                let mut blocked = base.clone();
+                plan.transform_cols(&mut blocked, ncols, invert);
+                let mut want = base.clone();
+                let mut col = vec![C64::default(); n];
+                for c in 0..ncols {
+                    for r in 0..n {
+                        col[r] = want[r * ncols + c];
+                    }
+                    if invert {
+                        plan.inverse(&mut col);
+                    } else {
+                        plan.forward(&mut col);
+                    }
+                    for r in 0..n {
+                        want[r * ncols + c] = col[r];
+                    }
+                }
+                for (i, (a, b)) in blocked.iter().zip(&want).enumerate() {
+                    assert!(
+                        a == b,
+                        "n={n} ncols={ncols} invert={invert} idx={i}: {a:?} vs {b:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn size_one_is_identity() {
+        let plan = SoaPlan::new(1);
+        let mut d = [C64::new(3.0, -4.0)];
+        plan.forward(&mut d);
+        assert_eq!(d[0], C64::new(3.0, -4.0));
+        plan.inverse(&mut d);
+        assert_eq!(d[0], C64::new(3.0, -4.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn rejects_non_pow2() {
+        SoaPlan::new(24);
+    }
+}

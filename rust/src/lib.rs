@@ -7,7 +7,11 @@
 //! row-column method.
 //!
 //! Layers:
-//! * [`fft`]  — native FFT substrate (radix-2/Bluestein, RFFT, 2D/3D, plans)
+//! * [`fft`]  — native FFT substrate: power-of-two kernels behind a
+//!   per-plan selector ([`fft::FftKernel`] — scalar radix-2 reference
+//!   vs split-radix/radix-4 SoA butterflies on planar scratch, panel-
+//!   blocked column transforms), Bluestein for arbitrary N, RFFT,
+//!   2D/3D, plan cache
 //! * [`dct`]  — the paper's transforms: fused three-stage + baselines
 //! * [`parallel`] — work-sharing execution layer: process-wide scoped
 //!   thread pool, chunked parallel loops, parallel tiled transpose, and

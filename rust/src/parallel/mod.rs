@@ -18,10 +18,15 @@
 //! * [`policy`]    — [`ExecPolicy`] (`Serial` / `Threads(n)` / `Auto`)
 //!   carried by every plan; `Auto` stays serial below a work threshold.
 //!
-//! Determinism contract: `Serial` and `Threads(1)` run the identical
-//! instruction stream (bit-equal outputs), and the parallel paths are
-//! arithmetic-order-preserving per element, so `Threads(n)` matches
-//! `Serial` bit-for-bit on every transform in the crate.
+//! Determinism contract, stated *per FFT kernel* (see
+//! [`crate::fft::FftKernel`]): `Serial` and `Threads(1)` run the
+//! identical instruction stream (bit-equal outputs), and for a fixed
+//! kernel the parallel paths are arithmetic-order-preserving per
+//! element — each kernel's blocked column path performs the same f64
+//! operation sequence as its 1D path — so `Threads(n)` matches `Serial`
+//! bit-for-bit on every transform in the crate *given the same kernel
+//! selection*. Outputs of different kernels (scalar radix-2 vs
+//! split-radix/radix-4 SoA) agree only to rounding, not bit-for-bit.
 
 pub mod par_iter;
 pub mod policy;

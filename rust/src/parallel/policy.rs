@@ -53,12 +53,10 @@ impl ExecPolicy {
     }
 }
 
-/// Parse a positive usize from an env var; `None` for unset, empty,
-/// zero, or garbage. Shared by the thread-count and service
-/// worker-count defaults so the parsing rules cannot drift.
-pub fn env_usize(name: &str) -> Option<usize> {
-    std::env::var(name).ok()?.trim().parse::<usize>().ok().filter(|&n| n >= 1)
-}
+/// Parse a positive usize from an env var (see [`crate::util::env_usize`];
+/// re-exported here because the thread/worker-count defaults historically
+/// lived in this module).
+pub use crate::util::env_usize;
 
 /// Process-wide default lane count: `MDDCT_THREADS` env override, else
 /// the machine's available parallelism. Resolved once.

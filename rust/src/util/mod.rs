@@ -7,3 +7,10 @@ pub mod scratch;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+
+/// Parse a positive usize from an env var; `None` for unset, empty,
+/// zero, or garbage. Shared by the thread-count, worker-count, and
+/// panel-width knobs so the parsing rules cannot drift.
+pub fn env_usize(name: &str) -> Option<usize> {
+    std::env::var(name).ok()?.trim().parse::<usize>().ok().filter(|&n| n >= 1)
+}

@@ -3,14 +3,26 @@
 //! §Perf iteration 1: the transform hot paths allocated (and page-faulted)
 //! multi-megabyte buffers per call; recycling them per thread removed
 //! ~25-40% of fused-transform wall time (see EXPERIMENTS.md §Perf).
-//! take_* pops a buffer of at least the requested length (resized to it),
-//! give_* returns it for reuse. No cross-thread sharing: each worker
-//! keeps its own pool, so there is no locking on the hot path.
+//! take_* pops a buffer of exactly the requested length (the pool is
+//! keyed per length; buffers are never resized), give_* returns it for
+//! reuse. No cross-thread sharing: each worker keeps its own pool, so
+//! there is no locking on the hot path.
+//!
+//! Retention is bounded: each (thread, length) size class keeps at most
+//! [`MAX_RETAINED_PER_CLASS`] buffers and drops the rest on `give_*`,
+//! so a long-running coordinator that sees many transform sizes cannot
+//! leak-by-retention (the hot paths hold at most a couple of buffers of
+//! any one class at a time, so the cap never costs a reallocation
+//! there).
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 
 use crate::fft::C64;
+
+/// Max buffers retained per (thread, length) size class; extras given
+/// back beyond this are dropped immediately.
+pub const MAX_RETAINED_PER_CLASS: usize = 4;
 
 #[derive(Default)]
 struct Pool {
@@ -33,10 +45,16 @@ pub fn take_f64(len: usize) -> Vec<f64> {
     })
 }
 
-/// Return an f64 buffer to the pool.
+/// Return an f64 buffer to the pool (dropped if the class is full).
 pub fn give_f64(v: Vec<f64>) {
     let len = v.len();
-    POOL.with(|p| p.borrow_mut().f64s.entry(len).or_default().push(v));
+    POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        let bucket = p.f64s.entry(len).or_default();
+        if bucket.len() < MAX_RETAINED_PER_CLASS {
+            bucket.push(v);
+        }
+    });
 }
 
 /// Take a C64 buffer of exactly `len` (contents unspecified).
@@ -50,10 +68,28 @@ pub fn take_c64(len: usize) -> Vec<C64> {
     })
 }
 
-/// Return a C64 buffer to the pool.
+/// Return a C64 buffer to the pool (dropped if the class is full).
 pub fn give_c64(v: Vec<C64>) {
     let len = v.len();
-    POOL.with(|p| p.borrow_mut().c64s.entry(len).or_default().push(v));
+    POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        let bucket = p.c64s.entry(len).or_default();
+        if bucket.len() < MAX_RETAINED_PER_CLASS {
+            bucket.push(v);
+        }
+    });
+}
+
+/// Buffers currently retained for this thread's f64 class of `len`
+/// (tests / metrics).
+pub fn retained_f64(len: usize) -> usize {
+    POOL.with(|p| p.borrow().f64s.get(&len).map_or(0, Vec::len))
+}
+
+/// Buffers currently retained for this thread's C64 class of `len`
+/// (tests / metrics).
+pub fn retained_c64(len: usize) -> usize {
+    POOL.with(|p| p.borrow().c64s.get(&len).map_or(0, Vec::len))
 }
 
 #[cfg(test)]
@@ -89,5 +125,25 @@ mod tests {
         let w = take_c64(33);
         assert_eq!(w.len(), 33);
         give_c64(w);
+    }
+
+    #[test]
+    fn retention_is_capped_per_class() {
+        // distinctive length so parallel tests on other threads (own
+        // pools) and earlier takes in this thread cannot interfere
+        let len = 12347;
+        let held: Vec<Vec<f64>> = (0..MAX_RETAINED_PER_CLASS + 3).map(|_| take_f64(len)).collect();
+        assert_eq!(retained_f64(len), 0);
+        for v in held {
+            give_f64(v);
+        }
+        assert_eq!(retained_f64(len), MAX_RETAINED_PER_CLASS);
+
+        let heldc: Vec<Vec<C64>> = (0..MAX_RETAINED_PER_CLASS + 2).map(|_| take_c64(len)).collect();
+        assert_eq!(retained_c64(len), 0);
+        for v in heldc {
+            give_c64(v);
+        }
+        assert_eq!(retained_c64(len), MAX_RETAINED_PER_CLASS);
     }
 }

@@ -4,8 +4,174 @@
 
 use mddct::coordinator::{PlanKey, Router, TransformOp};
 use mddct::dct::{Algo1d, Dct1d, Dct2, Idct1d, Idct2};
-use mddct::fft::{onesided_len, C64, RfftPlan};
+use mddct::fft::radix2::dft_naive;
+use mddct::fft::{onesided_len, C64, FftKernel, FftPlan, RfftPlan};
 use mddct::util::prop::{check_close, forall, shapes, sizes};
+use mddct::util::rng::Rng;
+
+/// Every power-of-two size the kernel layer must handle: 1..=4096.
+fn pow2_all() -> Vec<usize> {
+    (0..=12).map(|e| 1usize << e).collect()
+}
+
+const KERNELS: [FftKernel; 2] = [FftKernel::ScalarRadix2, FftKernel::SplitRadixSoa];
+
+fn rand_c(rng: &mut Rng, n: usize) -> Vec<C64> {
+    (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect()
+}
+
+#[test]
+fn prop_fft_kernels_match_naive_dft_all_pow2() {
+    // every kernel variant against the O(N^2) oracle on all pow2 sizes
+    let mut rng = Rng::new(0x4A11);
+    for n in pow2_all() {
+        let x = rand_c(&mut rng, n);
+        let want = dft_naive(&x, false);
+        for kernel in KERNELS {
+            let plan = FftPlan::with_kernel(n, kernel);
+            let mut got = x.clone();
+            plan.forward(&mut got);
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (*a - *b).abs() < 1e-9 * (n as f64).max(1.0),
+                    "kernel={} n={n} idx={i}: {a:?} vs {b:?}",
+                    kernel.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_fft_kernels_roundtrip_and_parseval_all_pow2() {
+    let mut rng = Rng::new(0x4A12);
+    for n in pow2_all() {
+        let x = rand_c(&mut rng, n);
+        let ex: f64 = x.iter().map(|c| c.norm_sqr()).sum();
+        for kernel in KERNELS {
+            let plan = FftPlan::with_kernel(n, kernel);
+            let mut y = x.clone();
+            plan.forward(&mut y);
+            // Parseval: sum |X|^2 = N sum |x|^2
+            let ey: f64 = y.iter().map(|c| c.norm_sqr()).sum();
+            assert!(
+                (ey - n as f64 * ex).abs() <= 1e-9 * ey.max(1.0) * (n as f64).sqrt(),
+                "kernel={} n={n}: parseval {ey} vs {}",
+                kernel.name(),
+                n as f64 * ex
+            );
+            plan.inverse(&mut y);
+            for (i, (a, b)) in y.iter().zip(&x).enumerate() {
+                assert!(
+                    (*a - *b).abs() < 1e-10 * b.abs().max(1.0) * (n as f64).max(1.0).log2().max(1.0),
+                    "kernel={} n={n} idx={i} roundtrip",
+                    kernel.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_fft_cross_kernel_equivalence_all_pow2() {
+    // new split-radix/SoA kernel vs old scalar radix-2, forward and
+    // inverse, within 1e-10 (relative to magnitude)
+    let mut rng = Rng::new(0x4A13);
+    for n in pow2_all() {
+        let x = rand_c(&mut rng, n);
+        for invert in [false, true] {
+            let mut old = x.clone();
+            let mut new = x.clone();
+            let po = FftPlan::with_kernel(n, FftKernel::ScalarRadix2);
+            let pn = FftPlan::with_kernel(n, FftKernel::SplitRadixSoa);
+            if invert {
+                po.inverse(&mut old);
+                pn.inverse(&mut new);
+            } else {
+                po.forward(&mut old);
+                pn.forward(&mut new);
+            }
+            for (i, (a, b)) in new.iter().zip(&old).enumerate() {
+                assert!(
+                    (*a - *b).abs() < 1e-10 * b.abs().max(1.0),
+                    "n={n} invert={invert} idx={i}: {a:?} vs {b:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_blocked_transform_cols_matches_per_column_1d() {
+    // the blocked column path of every kernel vs a per-column 1D loop of
+    // the same kernel — exact (bitwise) agreement is the contract the
+    // parallel layer's Serial == Threads(n) equality rests on
+    let mut rng = Rng::new(0x4A14);
+    for e in 0..=10 {
+        let n = 1usize << e;
+        // 67 and 130 straddle the 64-column panel boundary
+        for ncols in [1usize, 3, 67, 130] {
+            let base = rand_c(&mut rng, n * ncols);
+            for kernel in KERNELS {
+                let plan = FftPlan::with_kernel(n, kernel);
+                for invert in [false, true] {
+                    let mut blocked = base.clone();
+                    assert!(plan.try_transform_cols(&mut blocked, ncols, invert));
+                    let mut want = base.clone();
+                    let mut col = vec![C64::default(); n];
+                    for c in 0..ncols {
+                        for r in 0..n {
+                            col[r] = want[r * ncols + c];
+                        }
+                        if invert {
+                            plan.inverse(&mut col);
+                        } else {
+                            plan.forward(&mut col);
+                        }
+                        for r in 0..n {
+                            want[r * ncols + c] = col[r];
+                        }
+                    }
+                    for (i, (a, b)) in blocked.iter().zip(&want).enumerate() {
+                        assert!(
+                            a == b,
+                            "kernel={} n={n} ncols={ncols} invert={invert} idx={i}: {a:?} vs {b:?}",
+                            kernel.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_rfft_kernel_variants_agree() {
+    // the RFFT recombination on top of each kernel: same spectrum to
+    // 1e-10, and each roundtrips
+    let mut rng = Rng::new(0x4A15);
+    for &n in &[2usize, 8, 64, 256, 1024, 4096] {
+        let x = rng.normal_vec(n);
+        let mut specs: Vec<Vec<C64>> = Vec::new();
+        for kernel in KERNELS {
+            let plan = RfftPlan::with_kernel(n, kernel);
+            let mut spec = vec![C64::default(); onesided_len(n)];
+            plan.forward(&x, &mut spec);
+            let mut back = vec![0.0; n];
+            plan.inverse(&spec, &mut back);
+            for (a, b) in back.iter().zip(&x) {
+                assert!((a - b).abs() < 1e-9, "kernel={} n={n}", kernel.name());
+            }
+            specs.push(spec);
+        }
+        for (k, (a, b)) in specs[0].iter().zip(&specs[1]).enumerate() {
+            assert!(
+                (*a - *b).abs() < 1e-10 * a.abs().max(1.0),
+                "rfft kernels disagree n={n} k={k}"
+            );
+        }
+    }
+}
 
 #[test]
 fn prop_dct_roundtrip_1d() {

@@ -1,13 +1,15 @@
-//! Quickstart: the three ways to run a fused 2D DCT with mddct.
+//! Quickstart: the four ways to run a fused 2D DCT with mddct.
 //!
 //!   1. direct plan API       (lowest overhead, single transform)
 //!   2. transform service     (batching + plan cache, production path)
-//!   3. PJRT artifact         (the JAX/Pallas AOT kernel, if built)
+//!   3. band-sharded plan     (one large transform split across the pool)
+//!   4. PJRT artifact         (the JAX/Pallas AOT kernel, if built)
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use mddct::coordinator::{Service, ServiceConfig, TransformOp};
 use mddct::dct::{Dct2, Idct2};
+use mddct::parallel::{default_threads, ExecPolicy, ShardPolicy};
 use mddct::runtime::{Manifest, PjrtHandle, DEFAULT_ARTIFACT_DIR};
 use mddct::util::rng::Rng;
 
@@ -58,7 +60,39 @@ fn main() {
         diff < 1e-9
     );
 
-    // --- 3. PJRT artifact (optional) -----------------------------------
+    // --- 3. band-sharded large transform -------------------------------
+    let big = 1024;
+    let xb = rng.normal_vec(big * big);
+    let mut yb = vec![0.0; big * big];
+    let single = Dct2::with_policy(big, big, ExecPolicy::Serial)
+        .with_shards(ShardPolicy::MaxShards(1));
+    let t0 = std::time::Instant::now();
+    single.forward(&xb, &mut yb);
+    let t_one = t0.elapsed().as_secs_f64();
+    let shards = default_threads().max(2);
+    let banded = Dct2::with_policy(big, big, ExecPolicy::Serial)
+        .with_shards(ShardPolicy::MaxShards(shards));
+    let mut yb2 = vec![0.0; big * big];
+    let t0 = std::time::Instant::now();
+    banded.forward(&xb, &mut yb2);
+    let t_many = t0.elapsed().as_secs_f64();
+    let sd = yb
+        .iter()
+        .zip(&yb2)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!(
+        "[shard]   dct2d {big}x{big}: 1 shard {:.1} ms vs {shards} shards {:.1} ms \
+         ({:.2}x), max diff {sd:.1e}",
+        t_one * 1e3,
+        t_many * 1e3,
+        t_one / t_many
+    );
+    // the sharding contract: <= 1e-10 relative to the output scale
+    let scale = yb.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+    assert!(sd <= 1e-10 * scale);
+
+    // --- 4. PJRT artifact (optional) -----------------------------------
     match Manifest::load(DEFAULT_ARTIFACT_DIR) {
         Ok(m) if m.entries.contains_key("dct2d_256x256") => {
             let handle = PjrtHandle::spawn(DEFAULT_ARTIFACT_DIR);

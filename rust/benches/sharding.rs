@@ -1,0 +1,96 @@
+//! Band-sharding bench: the fused 2D DCT with 1 shard vs N shards on
+//! otherwise-identical plans (`ExecPolicy::Serial`, so the shard policy
+//! alone drives the fan-out).
+//!
+//! Emits a human table plus machine-readable `BENCH_sharding.json`
+//! (override the path with `MDDCT_BENCH_SHARDING_JSON`) so CI can track
+//! the shard-scaling ratio per size. `MDDCT_BENCH_QUICK=1` runs the
+//! small sizes only.
+//!
+//! Run: `cargo bench --bench sharding`
+
+use mddct::bench::{black_box, ms, time_fn, BenchConfig, Table};
+use mddct::dct::Dct2;
+use mddct::parallel::{default_threads, ExecPolicy, ShardPolicy};
+use mddct::util::rng::Rng;
+
+fn main() {
+    let cfg = BenchConfig::from_env(BenchConfig::default());
+    let quick = std::env::var("MDDCT_BENCH_QUICK").is_ok();
+    let sizes: &[usize] =
+        if quick { &[1024, 2048] } else { &[1024, 2048, 4096, 8192] };
+    let nshards = default_threads().max(2);
+    println!(
+        "\nBand-sharded fused 2D DCT: 1 shard vs {nshards} shards \
+         (serial exec, shard policy drives the fan-out)\n"
+    );
+
+    let shards_hdr = format!("{nshards} shards ms");
+    let mut t = Table::new(&["n", "1 shard ms", shards_hdr.as_str(), "speedup"]);
+    let mut json_rows: Vec<String> = Vec::new();
+
+    for &n in sizes {
+        let mut rng = Rng::new(n as u64 + 77);
+        let x = rng.normal_vec(n * n);
+        let mut out = vec![0.0; n * n];
+
+        let single = Dct2::with_policy(n, n, ExecPolicy::Serial)
+            .with_shards(ShardPolicy::MaxShards(1));
+        let one = time_fn(&cfg, || {
+            single.forward(&x, &mut out);
+            black_box(&out);
+        })
+        .mean;
+        // keep the 1-shard output around as the correctness reference
+        let want = out.clone();
+
+        let banded = Dct2::with_policy(n, n, ExecPolicy::Serial)
+            .with_shards(ShardPolicy::MaxShards(nshards));
+        let many = time_fn(&cfg, || {
+            banded.forward(&x, &mut out);
+            black_box(&out);
+        })
+        .mean;
+
+        // sharded output must match the single-band plan to <= 1e-10
+        // (relative to the output scale)
+        let scale = want.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+        let maxdiff = out
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(
+            maxdiff <= 1e-10 * scale,
+            "sharded dct2d diverged at n={n}: max diff {maxdiff:e}"
+        );
+
+        let speedup = one / many;
+        t.row(&[
+            n.to_string(),
+            ms(one),
+            ms(many),
+            format!("{speedup:.2}x"),
+        ]);
+        json_rows.push(format!(
+            "{{\"n\": {n}, \"shards_1_ms\": {:.6}, \"shards_{nshards}_ms\": {:.6}, \
+             \"speedup\": {speedup:.4}}}",
+            one * 1e3,
+            many * 1e3
+        ));
+    }
+
+    t.print();
+
+    let path = std::env::var("MDDCT_BENCH_SHARDING_JSON")
+        .unwrap_or_else(|_| "BENCH_sharding.json".to_string());
+    let doc = format!(
+        "{{\n  \"bench\": \"sharding\",\n  \"shards\": {nshards},\n  \
+         \"exec\": \"serial\",\n  \"unit\": \"forward_ms\",\n  \"rows\": [\n    {}\n  ]\n}}\n",
+        json_rows.join(",\n    ")
+    );
+    match std::fs::write(&path, &doc) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -6,23 +6,35 @@
 //! running same-shape requests back to back on one worker (and, for the
 //! multi-GPU discussion in §III-D, the unit of embarrassing
 //! parallelism across devices — here across worker threads).
+//!
+//! Large requests take a solo fast path ([`BatchPolicy::solo_numel`]):
+//! a transform big enough to band-shard gains nothing from co-batching
+//! (its runtime dwarfs the plan lookup it would amortize), so holding
+//! it back `max_wait` only adds latency — it is flushed to a worker
+//! immediately and fans out across the shared pool from there.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
 
 use super::request::{PlanKey, Request, Response};
+use super::shard::SHARD_MIN_NUMEL;
 
 /// A queued request plus its reply channel and enqueue timestamp.
 pub struct Pending {
+    /// The validated request.
     pub request: Request,
+    /// Where the worker sends the response.
     pub reply: Sender<Result<Response, String>>,
+    /// When the request entered the service (latency accounting).
     pub enqueued: Instant,
 }
 
 /// A batch of same-key requests ready for one worker.
 pub struct Batch {
+    /// The shared (op, shape) plan key.
     pub key: PlanKey,
+    /// The co-batched requests, submission order preserved.
     pub items: Vec<Pending>,
 }
 
@@ -33,11 +45,19 @@ pub struct BatchPolicy {
     pub max_batch: usize,
     /// max time a request may wait for co-batching
     pub max_wait: Duration,
+    /// payload size (elements) at which a request skips the co-batching
+    /// wait and its key flushes immediately (the band-sharding fast
+    /// path; defaults to [`SHARD_MIN_NUMEL`])
+    pub solo_numel: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(200) }
+        BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_micros(200),
+            solo_numel: SHARD_MIN_NUMEL,
+        }
     }
 }
 
@@ -59,12 +79,13 @@ pub fn run_batcher(rx: Receiver<Pending>, tx: Sender<Batch>, policy: BatchPolicy
         match rx.recv_timeout(timeout) {
             Ok(p) => {
                 let key = p.request.key();
+                let solo = p.request.data.len() >= policy.solo_numel;
                 if oldest.is_none() {
                     oldest = Some(p.enqueued);
                 }
                 let q = open.entry(key.clone()).or_default();
                 q.push(p);
-                if q.len() >= policy.max_batch {
+                if q.len() >= policy.max_batch || solo {
                     let items = open.remove(&key).unwrap();
                     if tx.send(Batch { key, items }).is_err() {
                         return;
@@ -122,7 +143,7 @@ mod tests {
         let (req_tx, req_rx) = channel();
         let (batch_tx, batch_rx) = channel();
         let policy =
-            BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(5) };
+            BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(5), ..Default::default() };
         let h = std::thread::spawn(move || run_batcher(req_rx, batch_tx, policy));
 
         let (p1, _r1) = pending(1, vec![4, 4]);
@@ -145,7 +166,8 @@ mod tests {
     fn emits_full_batch_immediately() {
         let (req_tx, req_rx) = channel();
         let (batch_tx, batch_rx) = channel();
-        let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(10) };
+        let policy =
+            BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(10), ..Default::default() };
         let h = std::thread::spawn(move || run_batcher(req_rx, batch_tx, policy));
         let (p1, _r1) = pending(1, vec![4, 4]);
         let (p2, _r2) = pending(2, vec![4, 4]);
@@ -154,6 +176,26 @@ mod tests {
         // despite the huge max_wait, a full batch must flush at once
         let b = batch_rx.recv_timeout(Duration::from_secs(1)).unwrap();
         assert_eq!(b.items.len(), 2);
+        drop(req_tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn large_request_skips_the_cobatching_wait() {
+        let (req_tx, req_rx) = channel();
+        let (batch_tx, batch_rx) = channel();
+        // huge max_wait: only the solo fast path can flush early
+        let policy = BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_secs(10),
+            solo_numel: 256 * 256,
+        };
+        let h = std::thread::spawn(move || run_batcher(req_rx, batch_tx, policy));
+        let (big, _rb) = pending(1, vec![256, 256]);
+        req_tx.send(big).unwrap();
+        let b = batch_rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(b.items.len(), 1);
+        assert_eq!(b.key.shape, vec![256, 256]);
         drop(req_tx);
         h.join().unwrap();
     }

@@ -1,4 +1,5 @@
-//! Service metrics: per-op counters, latency histograms, batch sizes.
+//! Service metrics: per-op counters, latency histograms, batch sizes,
+//! and band-shard fan-out.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -13,6 +14,9 @@ struct OpMetrics {
     latency: LatencyHistogram,
     batch_sum: u64,
     batch_max: usize,
+    /// requests that executed under an explicit shard policy (>1 bands)
+    sharded: u64,
+    bands_max: usize,
 }
 
 /// Thread-safe metrics registry.
@@ -22,24 +26,35 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Fresh, empty registry.
     pub fn new() -> Metrics {
         Metrics::default()
     }
 
-    pub fn record(&self, op: &str, latency: f64, batch: usize) {
+    /// Record one completed request: its queue+execute latency, the size
+    /// of the batch it shared, and the band work items an explicit shard
+    /// policy split it into (1 = unsharded; `Auto` lane fan-out is not
+    /// reported as sharding).
+    pub fn record(&self, op: &str, latency: f64, batch: usize, bands: usize) {
         let mut m = self.inner.lock().unwrap();
         let e = m.entry(op.to_string()).or_default();
         e.requests += 1;
         e.latency.record(latency);
         e.batch_sum += batch as u64;
         e.batch_max = e.batch_max.max(batch);
+        if bands > 1 {
+            e.sharded += 1;
+        }
+        e.bands_max = e.bands_max.max(bands);
     }
 
+    /// Record one failed request.
     pub fn record_error(&self, op: &str) {
         let mut m = self.inner.lock().unwrap();
         m.entry(op.to_string()).or_default().errors += 1;
     }
 
+    /// Total successful requests across all ops.
     pub fn total_requests(&self) -> u64 {
         self.inner.lock().unwrap().values().map(|e| e.requests).sum()
     }
@@ -63,6 +78,8 @@ impl Metrics {
             };
             o.insert("mean_batch".into(), Json::Num(mean_batch));
             o.insert("max_batch".into(), Json::Num(e.batch_max as f64));
+            o.insert("sharded_requests".into(), Json::Num(e.sharded as f64));
+            o.insert("max_bands".into(), Json::Num(e.bands_max as f64));
             root.insert(op.clone(), Json::Obj(o));
         }
         Json::Obj(root)
@@ -76,14 +93,17 @@ mod tests {
     #[test]
     fn records_and_snapshots() {
         let m = Metrics::new();
-        m.record("dct2d", 0.001, 4);
-        m.record("dct2d", 0.003, 2);
+        m.record("dct2d", 0.001, 4, 1);
+        m.record("dct2d", 0.003, 2, 6);
         m.record_error("idct2d");
         assert_eq!(m.total_requests(), 2);
         let snap = m.snapshot();
         let d = snap.get("dct2d").unwrap();
         assert_eq!(d.get("requests").unwrap().as_f64().unwrap(), 2.0);
         assert_eq!(d.get("mean_batch").unwrap().as_f64().unwrap(), 3.0);
+        // one of the two requests ran band-sharded, with 6 bands
+        assert_eq!(d.get("sharded_requests").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(d.get("max_bands").unwrap().as_f64().unwrap(), 6.0);
         assert_eq!(
             snap.get("idct2d").unwrap().get("errors").unwrap().as_f64().unwrap(),
             1.0

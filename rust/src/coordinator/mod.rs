@@ -2,11 +2,25 @@
 //! or runs as a daemon.
 //!
 //! * [`request`]    — ops, requests, responses, plan keys
-//! * [`plan_cache`] — shape-specialized native plan cache
+//! * [`plan_cache`] — shape-specialized native plan cache (carries the
+//!   exec + shard policies)
 //! * [`router`]     — native vs PJRT-artifact backend routing
-//! * [`batcher`]    — dynamic batching by (op, shape)
+//! * [`batcher`]    — dynamic batching by (op, shape), with a solo fast
+//!   path for large (shardable) requests
+//! * [`shard`]      — band-sharded execution of large transforms
 //! * [`service`]    — thread-pool service facade (submit/wait)
-//! * [`metrics`]    — counters + latency/batch histograms
+//! * [`metrics`]    — counters + latency/batch/band histograms
+//!
+//! ```
+//! use mddct::coordinator::{Service, ServiceConfig, TransformOp};
+//!
+//! let svc = Service::start_native(ServiceConfig::default());
+//! let r = svc.transform(TransformOp::Dct2d, vec![4, 4], vec![1.0; 16]).unwrap();
+//! assert_eq!(r.output.len(), 16);
+//! assert_eq!(r.backend, "native");
+//! ```
+
+#![warn(missing_docs)]
 
 pub mod batcher;
 pub mod metrics;
@@ -14,9 +28,11 @@ pub mod plan_cache;
 pub mod request;
 pub mod router;
 pub mod service;
+pub mod shard;
 
 pub use batcher::BatchPolicy;
 pub use plan_cache::{NativePlan, PlanCache};
 pub use request::{PlanKey, Request, Response, TransformOp};
 pub use router::{BackendPolicy, Route, Router};
 pub use service::{default_workers, Handle, Service, ServiceConfig};
+pub use shard::{ShardPlan, ShardPolicy, SHARD_MIN_NUMEL};

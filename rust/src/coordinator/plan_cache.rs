@@ -9,39 +9,57 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::dct::{Combo, Dct1d, Dct2, Dct3d, Dst2, Idct1d, Idct2, Idst2, Idxst1d, IdxstCombo, RowColumn};
-use crate::parallel::ExecPolicy;
+use crate::parallel::{ExecPolicy, ShardPolicy};
 
 use super::request::{PlanKey, TransformOp};
+use super::shard;
 
 /// A prepared native transform plan.
 pub enum NativePlan {
+    /// Fused 2D DCT ([`Dct2`]).
     Dct2(Dct2),
+    /// Fused 2D IDCT ([`Idct2`]).
     Idct2(Idct2),
+    /// Row-column baseline 2D DCT.
     RcDct2(RowColumn),
+    /// Row-column baseline 2D IDCT.
     RcIdct2(RowColumn),
+    /// 1D DCT (one of the four Algorithm-1 variants).
     Dct1(Dct1d),
+    /// 1D inverse DCT.
     Idct1(Idct1d),
+    /// 1D IDXST.
     Idxst1(Idxst1d),
+    /// Fused IDCT_IDXST / IDXST_IDCT combination.
     Combo(IdxstCombo),
+    /// Fused 3D DCT.
     Dct3(Dct3d),
+    /// Fused 2D DST-II.
     Dst2(Dst2),
+    /// Fused 2D inverse DST.
     Idst2(Idst2),
 }
 
 impl NativePlan {
-    /// Build the plan for a key with the default (`Auto`) policy.
+    /// Build the plan for a key with the default (`Auto`) policies.
     pub fn build(key: &PlanKey) -> NativePlan {
-        Self::build_with(key, ExecPolicy::Auto)
+        Self::build_with(key, ExecPolicy::Auto, ShardPolicy::Auto)
     }
 
     /// Build the plan for a key, threading `policy` into the plans that
-    /// have parallel stages. Panics on rank mismatch (validated upstream
-    /// by `Request::validate`).
-    pub fn build_with(key: &PlanKey, policy: ExecPolicy) -> NativePlan {
+    /// have parallel stages and `shards` into the fused 2D plans whose
+    /// banded stages support explicit shard counts (the row-column
+    /// baseline, 1D, and 3D plans fan out by exec lanes only). Panics on
+    /// rank mismatch (validated upstream by `Request::validate`).
+    pub fn build_with(key: &PlanKey, policy: ExecPolicy, shards: ShardPolicy) -> NativePlan {
         let s = &key.shape;
         match key.op {
-            TransformOp::Dct2d => NativePlan::Dct2(Dct2::with_policy(s[0], s[1], policy)),
-            TransformOp::Idct2d => NativePlan::Idct2(Idct2::with_policy(s[0], s[1], policy)),
+            TransformOp::Dct2d => {
+                NativePlan::Dct2(Dct2::with_policy(s[0], s[1], policy).with_shards(shards))
+            }
+            TransformOp::Idct2d => {
+                NativePlan::Idct2(Idct2::with_policy(s[0], s[1], policy).with_shards(shards))
+            }
             TransformOp::RcDct2d => {
                 NativePlan::RcDct2(RowColumn::dct2(s[0], s[1]).with_policy(policy))
             }
@@ -51,17 +69,23 @@ impl NativePlan {
             TransformOp::Dct1d(algo) => NativePlan::Dct1(Dct1d::new(s[0], algo)),
             TransformOp::Idct1d => NativePlan::Idct1(Idct1d::new(s[0])),
             TransformOp::Idxst1d => NativePlan::Idxst1(Idxst1d::new(s[0])),
-            TransformOp::IdctIdxst => {
-                NativePlan::Combo(IdxstCombo::with_policy(s[0], s[1], Combo::IdctIdxst, policy))
-            }
-            TransformOp::IdxstIdct => {
-                NativePlan::Combo(IdxstCombo::with_policy(s[0], s[1], Combo::IdxstIdct, policy))
-            }
+            TransformOp::IdctIdxst => NativePlan::Combo(
+                IdxstCombo::with_policy(s[0], s[1], Combo::IdctIdxst, policy)
+                    .with_shards(shards),
+            ),
+            TransformOp::IdxstIdct => NativePlan::Combo(
+                IdxstCombo::with_policy(s[0], s[1], Combo::IdxstIdct, policy)
+                    .with_shards(shards),
+            ),
             TransformOp::Dct3d => {
                 NativePlan::Dct3(Dct3d::with_policy(s[0], s[1], s[2], policy))
             }
-            TransformOp::Dst2d => NativePlan::Dst2(Dst2::with_policy(s[0], s[1], policy)),
-            TransformOp::Idst2d => NativePlan::Idst2(Idst2::with_policy(s[0], s[1], policy)),
+            TransformOp::Dst2d => {
+                NativePlan::Dst2(Dst2::with_policy(s[0], s[1], policy).with_shards(shards))
+            }
+            TransformOp::Idst2d => {
+                NativePlan::Idst2(Idst2::with_policy(s[0], s[1], policy).with_shards(shards))
+            }
         }
     }
 
@@ -87,7 +111,9 @@ impl NativePlan {
 /// Cache statistics.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
+    /// Requests served from an already-built plan.
     pub hits: u64,
+    /// Requests that had to build (and insert) a new plan.
     pub misses: u64,
 }
 
@@ -96,6 +122,7 @@ pub struct PlanCache {
     plans: RwLock<HashMap<PlanKey, Arc<NativePlan>>>,
     stats: Mutex<CacheStats>,
     policy: ExecPolicy,
+    shard: ShardPolicy,
 }
 
 impl Default for PlanCache {
@@ -105,22 +132,36 @@ impl Default for PlanCache {
 }
 
 impl PlanCache {
+    /// Cache with the default (`Auto`) exec and shard policies.
     pub fn new() -> PlanCache {
         Self::default()
     }
 
-    /// Cache whose plans all carry `policy`.
+    /// Cache whose plans all carry `policy` (shard policy stays `Auto`).
     pub fn with_policy(policy: ExecPolicy) -> PlanCache {
+        Self::with_policies(policy, ShardPolicy::Auto)
+    }
+
+    /// Cache whose plans carry both an exec and a shard policy; the
+    /// shard policy is applied per request through
+    /// [`shard::decide`], so small requests never force-shard.
+    pub fn with_policies(policy: ExecPolicy, shard: ShardPolicy) -> PlanCache {
         PlanCache {
             plans: RwLock::new(HashMap::new()),
             stats: Mutex::new(CacheStats::default()),
             policy,
+            shard,
         }
     }
 
     /// Execution policy baked into newly built plans.
     pub fn policy(&self) -> ExecPolicy {
         self.policy
+    }
+
+    /// Shard policy applied (via [`shard::decide`]) to newly built plans.
+    pub fn shard_policy(&self) -> ShardPolicy {
+        self.shard
     }
 
     /// Fetch (or build) the plan for a key.
@@ -140,7 +181,8 @@ impl PlanCache {
             self.bump(|s| s.hits += 1);
             return p.clone();
         }
-        let plan = Arc::new(NativePlan::build_with(key, self.policy));
+        let plan =
+            Arc::new(NativePlan::build_with(key, self.policy, shard::decide(self.shard, key)));
         w.insert(key.clone(), plan.clone());
         self.bump(|s| s.misses += 1);
         plan
@@ -154,14 +196,17 @@ impl PlanCache {
         f(&mut self.stats.lock().unwrap_or_else(|e| e.into_inner()));
     }
 
+    /// Number of cached plans.
     pub fn len(&self) -> usize {
         self.read_plans().len()
     }
 
+    /// Whether no plan has been built yet.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Hit/miss counters since construction.
     pub fn stats(&self) -> CacheStats {
         *self.stats.lock().unwrap_or_else(|e| e.into_inner())
     }

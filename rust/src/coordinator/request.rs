@@ -41,6 +41,22 @@ impl TransformOp {
         }
     }
 
+    /// Whether this op's native plan honors an explicit band-shard
+    /// policy: the fused 2D family threads `ShardPolicy` through its
+    /// banded stages; the row-column baseline, 1D, and 3D plans fan out
+    /// by exec lanes only (see `coordinator::shard`).
+    pub fn supports_sharding(self) -> bool {
+        matches!(
+            self,
+            TransformOp::Dct2d
+                | TransformOp::Idct2d
+                | TransformOp::IdctIdxst
+                | TransformOp::IdxstIdct
+                | TransformOp::Dst2d
+                | TransformOp::Idst2d
+        )
+    }
+
     /// Artifact-name prefix for the PJRT backend (None = native only).
     pub fn artifact_prefix(self) -> Option<&'static str> {
         match self {
@@ -68,6 +84,7 @@ impl TransformOp {
         Some(format!("{prefix}{}", dims.join("x")))
     }
 
+    /// Stable lower-case op name (metrics keys, CLI `--op` values).
     pub fn name(self) -> String {
         match self {
             TransformOp::Dct2d => "dct2d".into(),
@@ -90,20 +107,27 @@ impl TransformOp {
 /// be batched together.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct PlanKey {
+    /// The transform to run.
     pub op: TransformOp,
+    /// Input tensor shape, row-major.
     pub shape: Vec<usize>,
 }
 
 /// A transform request.
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// Service-assigned request id (monotonic per service).
     pub id: u64,
+    /// The transform to run.
     pub op: TransformOp,
+    /// Input tensor shape, row-major.
     pub shape: Vec<usize>,
+    /// Row-major input payload (`shape.iter().product()` elements).
     pub data: Vec<f64>,
 }
 
 impl Request {
+    /// The (op, shape) key this request batches and plans under.
     pub fn key(&self) -> PlanKey {
         PlanKey { op: self.op, shape: self.shape.clone() }
     }
@@ -136,6 +160,7 @@ impl Request {
 /// A completed transform.
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// Id of the request this answers.
     pub id: u64,
     /// transform outputs (single tensor for all current ops)
     pub output: Vec<f64>,
@@ -156,6 +181,17 @@ mod tests {
         assert_eq!(TransformOp::Dct2d.rank(), 2);
         assert_eq!(TransformOp::Idct1d.rank(), 1);
         assert_eq!(TransformOp::Dct3d.rank(), 3);
+    }
+
+    #[test]
+    fn sharding_support_is_the_fused_2d_family() {
+        assert!(TransformOp::Dct2d.supports_sharding());
+        assert!(TransformOp::Idct2d.supports_sharding());
+        assert!(TransformOp::IdxstIdct.supports_sharding());
+        assert!(TransformOp::Dst2d.supports_sharding());
+        assert!(!TransformOp::RcDct2d.supports_sharding());
+        assert!(!TransformOp::Dct3d.supports_sharding());
+        assert!(!TransformOp::Idct1d.supports_sharding());
     }
 
     #[test]

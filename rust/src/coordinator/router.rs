@@ -10,7 +10,8 @@ use std::collections::BTreeSet;
 
 use super::plan_cache::PlanCache;
 use super::request::PlanKey;
-use crate::parallel::ExecPolicy;
+use super::shard::ShardPlan;
+use crate::parallel::{ExecPolicy, ShardPolicy};
 use crate::runtime::{Manifest, PjrtHandle};
 
 /// Routing policy.
@@ -27,11 +28,14 @@ pub enum BackendPolicy {
 /// Where a batch was routed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Route {
+    /// The native Rust transform library.
     Native,
+    /// An AOT-compiled PJRT artifact.
     Pjrt,
 }
 
 impl Route {
+    /// Stable label for metrics / responses.
     pub fn label(self) -> &'static str {
         match self {
             Route::Native => "native",
@@ -42,13 +46,16 @@ impl Route {
 
 /// The router owns the native plan cache and (optionally) the PJRT handle.
 pub struct Router {
+    /// Backend selection policy.
     pub policy: BackendPolicy,
+    /// Native plan cache (carries the exec + shard policies).
     pub plans: PlanCache,
     pjrt: Option<PjrtHandle>,
     artifact_names: BTreeSet<String>,
 }
 
 impl Router {
+    /// Native backend with the default (`Auto`) exec + shard policies.
     pub fn native_only() -> Router {
         Self::native_only_with(ExecPolicy::Auto)
     }
@@ -83,8 +90,33 @@ impl Router {
     /// cheap at startup).
     pub(crate) fn set_exec_policy(&mut self, exec: ExecPolicy) {
         if self.plans.policy() != exec {
-            self.plans = PlanCache::with_policy(exec);
+            self.plans = PlanCache::with_policies(exec, self.plans.shard_policy());
         }
+    }
+
+    /// Make `shard` the band-shard policy of this router's native plans
+    /// (applied per request through [`super::shard::decide`]). Called by
+    /// `Service::start` so `ServiceConfig::shard` stays authoritative;
+    /// like [`Router::set_exec_policy`] it swaps the lazily-built plan
+    /// cache only when the policy actually differs.
+    pub(crate) fn set_shard_policy(&mut self, shard: ShardPolicy) {
+        if self.plans.shard_policy() != shard {
+            self.plans = PlanCache::with_policies(self.plans.policy(), shard);
+        }
+    }
+
+    /// The explicit band decomposition a native request for `key` will
+    /// execute with (a single band = not explicitly sharded; the plan
+    /// may still fan out over exec lanes).
+    pub fn shard_plan(&self, key: &PlanKey) -> ShardPlan {
+        ShardPlan::for_request(key, self.plans.shard_policy())
+    }
+
+    /// Band work items an *explicit* shard policy pins for `key`
+    /// (1 = unsharded or plain `Auto` lane fan-out), allocation-free —
+    /// the service's worker loop records this in metrics per batch.
+    pub fn shard_bands(&self, key: &PlanKey) -> usize {
+        super::shard::band_count_for(key, self.plans.shard_policy())
     }
 
     /// Decide the route for a key (PJRT only when an artifact exists).
@@ -136,6 +168,25 @@ mod tests {
         let (y, route) = r.execute(&key, &x).unwrap();
         assert_eq!(route, Route::Native);
         check_close(&y, &dct2d_direct(&x, 8, 8), 1e-9).unwrap();
+    }
+
+    #[test]
+    fn shard_policy_threads_into_band_plans() {
+        use crate::parallel::{ExecPolicy, ShardPolicy};
+        let mut r = Router::native_only_with(ExecPolicy::Serial);
+        r.set_shard_policy(ShardPolicy::MaxShards(4));
+        // large request: sharded into 4 bands
+        let big = PlanKey { op: TransformOp::Dct2d, shape: vec![512, 512] };
+        assert_eq!(r.shard_plan(&big).band_count(), 4);
+        assert_eq!(r.shard_bands(&big), 4);
+        // small request: decide() keeps it unsharded
+        let small = PlanKey { op: TransformOp::Dct2d, shape: vec![16, 16] };
+        assert_eq!(r.shard_plan(&small).band_count(), 1);
+        // sharded execution still produces correct output
+        let mut rng = Rng::new(91);
+        let x = rng.normal_vec(16 * 16);
+        let (y, _) = r.execute(&small, &x).unwrap();
+        check_close(&y, &dct2d_direct(&x, 16, 16), 1e-9).unwrap();
     }
 
     #[test]

@@ -25,8 +25,8 @@ use std::time::Instant;
 use super::batcher::{run_batcher, Batch, BatchPolicy, Pending};
 use super::metrics::Metrics;
 use super::request::{Request, Response, TransformOp};
-use super::router::Router;
-use crate::parallel::ExecPolicy;
+use super::router::{Route, Router};
+use crate::parallel::{ExecPolicy, ShardPolicy};
 
 /// Service configuration.
 #[derive(Debug, Clone)]
@@ -35,10 +35,16 @@ pub struct ServiceConfig {
     /// pool). Defaults to `MDDCT_WORKERS`, else available parallelism —
     /// the configured value is always respected as-is by `start`.
     pub workers: usize,
+    /// Dynamic-batching knobs (co-batching window, solo fast path).
     pub batch: BatchPolicy,
     /// Execution policy baked into native plans built by this service's
     /// router (the transform stages run on the shared process pool).
     pub exec: ExecPolicy,
+    /// Band-shard policy for large native requests (applied per request
+    /// through [`super::shard::decide`]; small requests never
+    /// force-shard). Defaults to the `MDDCT_SHARD_MIN_ROWS` /
+    /// `MDDCT_MAX_SHARDS` env knobs, else `Auto`.
+    pub shard: ShardPolicy,
 }
 
 impl Default for ServiceConfig {
@@ -47,6 +53,7 @@ impl Default for ServiceConfig {
             workers: default_workers(),
             batch: BatchPolicy::default(),
             exec: ExecPolicy::Auto,
+            shard: ShardPolicy::from_env(),
         }
     }
 }
@@ -76,16 +83,20 @@ pub struct Service {
     batcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
+    /// Live per-op counters/latency/batch/band metrics.
     pub metrics: Arc<Metrics>,
+    /// The routing + plan-cache backend this service executes on.
     pub router: Arc<Router>,
 }
 
 impl Service {
     /// Start the service with `router` as the execution backend. The
-    /// config's exec policy is authoritative: it is applied to the
-    /// router's native plan cache regardless of how the router was built.
+    /// config's exec and shard policies are authoritative: they are
+    /// applied to the router's native plan cache regardless of how the
+    /// router was built.
     pub fn start(config: ServiceConfig, mut router: Router) -> Service {
         router.set_exec_policy(config.exec);
+        router.set_shard_policy(config.shard);
         let router = Arc::new(router);
         let metrics = Arc::new(Metrics::new());
         let (req_tx, req_rx) = channel::<Pending>();
@@ -202,6 +213,14 @@ fn worker_loop(
         };
         let n = batch.items.len();
         let op_name = batch.key.op.name();
+        // explicit shard fan-out of this batch (1 = unsharded; plain
+        // Auto lane parallelism is not counted as sharding); recorded
+        // so operators can see the shard feature actually engage.
+        // PJRT batches run on the artifact, not the banded native plan.
+        let bands = match router.route(&batch.key) {
+            Route::Native => router.shard_bands(&batch.key),
+            Route::Pjrt => 1,
+        };
         for pending in batch.items {
             let t0 = pending.enqueued;
             // A panicking plan must not kill the worker (which would
@@ -214,7 +233,7 @@ fn worker_loop(
             let latency = t0.elapsed().as_secs_f64();
             let response = match result {
                 Ok((output, route)) => {
-                    metrics.record(&op_name, latency, n);
+                    metrics.record(&op_name, latency, n, bands);
                     Ok(Response {
                         id: pending.request.id,
                         output,
@@ -245,6 +264,7 @@ mod tests {
             workers,
             batch: BatchPolicy::default(),
             exec: crate::parallel::ExecPolicy::Auto,
+            shard: ShardPolicy::Auto,
         })
     }
 
@@ -377,6 +397,53 @@ mod tests {
         check_close(&ok.output, &dct2d_direct(&x, 4, 4), 1e-9).unwrap();
         drop(batch_tx);
         worker.join().expect("worker exits cleanly after channel close");
+    }
+
+    #[test]
+    fn sharded_large_request_coschedules_with_small_ones() {
+        // one above-threshold request sharded into bands + a stream of
+        // small requests: everything completes, answers are exact, and
+        // the metrics show the large op actually ran sharded
+        let s = Service::start_native(ServiceConfig {
+            workers: 2,
+            batch: BatchPolicy::default(),
+            exec: crate::parallel::ExecPolicy::Serial,
+            shard: ShardPolicy::MaxShards(3),
+        });
+        let mut rng = Rng::new(205);
+        let (n1, n2) = (256usize, 260usize); // >= SHARD_MIN_NUMEL, non-divisible by 3
+        let big = rng.normal_vec(n1 * n2);
+        let big_handle = s.submit(TransformOp::Idct2d, vec![n1, n2], big.clone()).unwrap();
+        let mut small_reqs = Vec::new();
+        let mut wants = Vec::new();
+        for _ in 0..12 {
+            let x = rng.normal_vec(8 * 8);
+            wants.push(dct2d_direct(&x, 8, 8));
+            small_reqs.push((TransformOp::Dct2d, vec![8usize, 8usize], x));
+        }
+        let small_out = s.transform_many(small_reqs).unwrap();
+        for (r, w) in small_out.iter().zip(&wants) {
+            check_close(&r.output, w, 1e-9).unwrap();
+        }
+        let big_out = big_handle.wait().unwrap();
+        // sharded output must match a single-band serial plan to <= 1e-10
+        let mut want_big = vec![0.0; n1 * n2];
+        crate::dct::Idct2::with_policy(n1, n2, crate::parallel::ExecPolicy::Serial)
+            .forward(&big, &mut want_big);
+        check_close(&big_out.output, &want_big, 1e-10).unwrap();
+        let snap = s.metrics.snapshot();
+        let bands = snap
+            .get("idct2d")
+            .and_then(|d| d.get("max_bands"))
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        assert_eq!(bands, 3.0, "large idct2d should have run as 3 band shards");
+        let small_bands = snap
+            .get("dct2d")
+            .and_then(|d| d.get("max_bands"))
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        assert_eq!(small_bands, 1.0, "small requests must stay unsharded");
     }
 
     #[test]

@@ -1,0 +1,261 @@
+//! Band-sharded transform execution: split one large transform into
+//! row-band work items that the shared process pool interleaves with
+//! every other request's work.
+//!
+//! # Why
+//!
+//! The coordinator's workers execute whole transforms: without
+//! sharding, one huge request occupies a single worker for its full
+//! duration while the remaining pool capacity idles (or, worse, the
+//! request serializes behind small ones). Popovici et al.'s flexible
+//! parallel MD-DFT framework and Korotkevich's SMP-parallel 2D FFT
+//! subroutines both arrive at the same standard answer: slab/band
+//! decomposition across workers. Here the band unit already exists —
+//! the tiled transpose (`parallel::transpose`) splits its output into
+//! contiguous row bands — so sharding reuses that boundary instead of
+//! inventing a new one.
+//!
+//! # Shard lifecycle
+//!
+//! ```text
+//!   request (op, shape, data)
+//!        │  decide(): fused-2D op and numel >= SHARD_MIN_NUMEL
+//!        │            ? service policy : Auto
+//!        ▼
+//!   plan built with ShardPolicy      (PlanCache::get, per (op, shape))
+//!        │
+//!        ▼
+//!   stage 1  row-band shards      [band 0][band 1] ... [band B-1]
+//!        │      each band = one pool work item (row FFTs + reorders)
+//!        ▼
+//!   barrier  tiled transpose      (parallel::transpose_into — the
+//!        │                         natural shard boundary: bands meet,
+//!        │                         panels are re-dealt tile-aligned)
+//!        ▼
+//!   stage 2  column-panel shards  [panel 0][panel 1] ... (contiguous
+//!        │                         rows of the transposed matrix)
+//!        ▼
+//!   stage 3  pre/post permutation shards (DCT reorder rows / §III-B
+//!        │                         postprocess row pairs)
+//!        ▼
+//!   response (output, backend, latency, bands recorded in metrics)
+//! ```
+//!
+//! Because every shard is just a scoped job on the one process-wide
+//! pool, a sharded large request and a batch of small requests
+//! co-schedule automatically: the pool drains work items from both, and
+//! the batcher additionally fast-tracks huge requests
+//! ([`crate::coordinator::batcher::BatchPolicy::solo_numel`]) so they
+//! never wait on co-batching they cannot benefit from.
+//!
+//! # Correctness contract
+//!
+//! Sharded execution must match [`crate::parallel::ExecPolicy::Serial`] output to
+//! <= 1e-10 for every shard count; in practice the banded stage kernels
+//! are arithmetic-order-preserving per element, so outputs are
+//! bit-equal for a fixed FFT kernel (see `tests/prop_parallel.rs`).
+
+use std::ops::Range;
+
+use crate::parallel::band_spans;
+pub use crate::parallel::ShardPolicy;
+
+use super::request::PlanKey;
+
+/// Element count below which the service never force-shards a request:
+/// a 256x256 fused DCT runs in well under a millisecond, so splitting
+/// it into bands buys nothing and costs fork/join traffic. Requests at
+/// or above the threshold inherit the service's configured policy.
+pub const SHARD_MIN_NUMEL: usize = 256 * 256;
+
+/// Effective shard policy for one request: small requests and ops
+/// whose plans do not honor explicit band counts (see
+/// [`super::request::TransformOp::supports_sharding`]) stay on
+/// [`ShardPolicy::Auto`] — their plans fan out only as far as their
+/// [`crate::parallel::ExecPolicy`] allows; large fused-2D requests get
+/// the service's configured policy.
+pub fn decide(service: ShardPolicy, key: &PlanKey) -> ShardPolicy {
+    let numel: usize = key.shape.iter().product();
+    if !key.op.supports_sharding() || numel < SHARD_MIN_NUMEL {
+        ShardPolicy::Auto
+    } else {
+        service
+    }
+}
+
+/// Band count a request is *explicitly sharded* into, without
+/// materializing the spans: the work items a non-`Auto` effective
+/// policy pins, or 1 otherwise. `Auto` deliberately reports 1 — its
+/// exec-lane fan-out is lane parallelism, not sharding, and ops outside
+/// the fused-2D family never shard at all — so a default-config service
+/// does not report every large request as sharded. Equals
+/// `ShardPlan::for_request(..).band_count()`; recorded in the service
+/// metrics per batch.
+pub fn band_count_for(key: &PlanKey, service: ShardPolicy) -> usize {
+    match decide(service, key) {
+        ShardPolicy::Auto => 1,
+        policy => {
+            let rows = key.shape.first().copied().unwrap_or(1);
+            // explicit variants ignore the exec lane count by design
+            policy.bands(rows, 1)
+        }
+    }
+}
+
+/// The explicit stage-1 band decomposition of one request: which
+/// contiguous runs of leading-dimension rows become independent pool
+/// work items. A single band covering all rows means the request is not
+/// explicitly sharded (it may still fan out over exec lanes inside its
+/// plan). Used by the service for metrics (band counts per op) and
+/// exposed for introspection; the identical split is what an
+/// explicitly-sharded plan's banded stages execute (see
+/// [`crate::parallel::band_spans`]).
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    /// Effective policy after [`decide`].
+    pub policy: ShardPolicy,
+    /// Leading-dimension row count being banded.
+    pub rows: usize,
+    /// Contiguous row spans, one per shard work item.
+    pub bands: Vec<Range<usize>>,
+}
+
+impl ShardPlan {
+    /// Band decomposition for `key` under the service's shard policy.
+    pub fn for_request(key: &PlanKey, service: ShardPolicy) -> ShardPlan {
+        let rows = key.shape.first().copied().unwrap_or(1);
+        let n = band_count_for(key, service);
+        ShardPlan { policy: decide(service, key), rows, bands: band_spans(rows, n) }
+    }
+
+    /// Number of shard work items (1 = unsharded).
+    pub fn band_count(&self) -> usize {
+        self.bands.len().max(1)
+    }
+
+    /// Whether this request actually splits into multiple work items.
+    pub fn is_sharded(&self) -> bool {
+        self.bands.len() > 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::plan_cache::PlanCache;
+    use crate::coordinator::request::TransformOp;
+    use crate::dct::direct::dct2d_direct;
+    use crate::parallel::ExecPolicy;
+    use crate::util::prop::check_close;
+    use crate::util::rng::Rng;
+
+    fn key(op: TransformOp, shape: &[usize]) -> PlanKey {
+        PlanKey { op, shape: shape.to_vec() }
+    }
+
+    #[test]
+    fn decide_leaves_small_and_unsupported_requests_unsharded() {
+        let policy = ShardPolicy::MaxShards(8);
+        // rank 1: never force-sharded
+        assert_eq!(decide(policy, &key(TransformOp::Idct1d, &[1 << 20])), ShardPolicy::Auto);
+        // ops whose plans ignore explicit band counts: no sharding claim
+        assert_eq!(
+            decide(policy, &key(TransformOp::RcDct2d, &[1024, 1024])),
+            ShardPolicy::Auto
+        );
+        assert_eq!(
+            decide(policy, &key(TransformOp::Dct3d, &[128, 128, 128])),
+            ShardPolicy::Auto
+        );
+        // small 2D: below SHARD_MIN_NUMEL
+        assert_eq!(decide(policy, &key(TransformOp::Dct2d, &[64, 64])), ShardPolicy::Auto);
+        // large fused 2D: service policy applies
+        assert_eq!(decide(policy, &key(TransformOp::Dct2d, &[1024, 1024])), policy);
+        assert_eq!(decide(policy, &key(TransformOp::Idst2d, &[1024, 1024])), policy);
+        // exactly at the threshold counts as large
+        assert_eq!(decide(policy, &key(TransformOp::Dct2d, &[256, 256])), policy);
+    }
+
+    #[test]
+    fn shard_plan_bands_cover_all_rows() {
+        let k = key(TransformOp::Dct2d, &[1000, 1024]);
+        let plan = ShardPlan::for_request(&k, ShardPolicy::MaxShards(7));
+        assert_eq!(plan.band_count(), 7);
+        assert!(plan.is_sharded());
+        let mut next = 0;
+        for b in &plan.bands {
+            assert_eq!(b.start, next);
+            next = b.end;
+        }
+        assert_eq!(next, 1000);
+        // non-divisible split stays near-equal
+        let lens: Vec<usize> = plan.bands.iter().map(|b| b.len()).collect();
+        let (lo, hi) = (*lens.iter().min().unwrap(), *lens.iter().max().unwrap());
+        assert!(hi - lo <= 1, "{lens:?}");
+    }
+
+    #[test]
+    fn band_count_for_agrees_with_shard_plan() {
+        for (op, shape, policy) in [
+            (TransformOp::Dct2d, vec![1000usize, 1024], ShardPolicy::MaxShards(7)),
+            (TransformOp::Dct2d, vec![32, 32], ShardPolicy::MaxShards(8)),
+            (TransformOp::Idst2d, vec![512, 512], ShardPolicy::MinRowsPerShard(100)),
+            (TransformOp::RcDct2d, vec![1024, 1024], ShardPolicy::MaxShards(4)),
+        ] {
+            let k = key(op, &shape);
+            assert_eq!(
+                band_count_for(&k, policy),
+                ShardPlan::for_request(&k, policy).band_count(),
+                "{op:?} {shape:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn auto_lane_fanout_is_not_reported_as_sharding() {
+        // default-config service (shard = Auto): a large request may fan
+        // out over exec lanes inside its plan, but the shard-facing count
+        // must stay 1 — lane parallelism is not the shard feature engaging
+        let big = key(TransformOp::Dct2d, &[1024, 1024]);
+        assert_eq!(band_count_for(&big, ShardPolicy::Auto), 1);
+        assert!(!ShardPlan::for_request(&big, ShardPolicy::Auto).is_sharded());
+        // ops that never shard report 1 even under an explicit policy
+        let oned = key(TransformOp::Idct1d, &[1 << 20]);
+        assert_eq!(band_count_for(&oned, ShardPolicy::MaxShards(6)), 1);
+        assert!(!ShardPlan::for_request(&oned, ShardPolicy::MaxShards(6)).is_sharded());
+        // an explicit policy on a large fused-2D request does report bands
+        assert_eq!(band_count_for(&big, ShardPolicy::MaxShards(6)), 6);
+        // ...but not when decide() filters it out (small request)
+        let small = key(TransformOp::Dct2d, &[32, 32]);
+        assert_eq!(band_count_for(&small, ShardPolicy::MaxShards(6)), 1);
+    }
+
+    #[test]
+    fn shard_plan_is_single_band_for_small_requests() {
+        let k = key(TransformOp::Dct2d, &[32, 32]);
+        let plan = ShardPlan::for_request(&k, ShardPolicy::MaxShards(8));
+        assert_eq!(plan.band_count(), 1);
+        assert!(!plan.is_sharded());
+    }
+
+    #[test]
+    fn sharded_plan_cache_output_matches_serial() {
+        // end to end through the plan cache: a sharded cache and a serial
+        // cache must agree to <= 1e-10 (the ISSUE's correctness contract)
+        let mut rng = Rng::new(95);
+        let (n1, n2) = (256usize, 257usize); // above threshold, odd n2
+        let x = rng.normal_vec(n1 * n2);
+        let serial = PlanCache::with_policy(ExecPolicy::Serial);
+        let sharded =
+            PlanCache::with_policies(ExecPolicy::Serial, ShardPolicy::MaxShards(5));
+        let k = key(TransformOp::Dct2d, &[n1, n2]);
+        let a = serial.get(&k).execute(&x);
+        let b = sharded.get(&k).execute(&x);
+        check_close(&b, &a, 1e-10).unwrap();
+        // sanity against the direct oracle on a band boundary subcase
+        let small = rng.normal_vec(8 * 8);
+        let ks = key(TransformOp::Dct2d, &[8, 8]);
+        check_close(&sharded.get(&ks).execute(&small), &dct2d_direct(&small, 8, 8), 1e-9)
+            .unwrap();
+    }
+}

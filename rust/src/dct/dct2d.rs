@@ -14,7 +14,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::fft::{onesided_len, C64, Rfft2Plan};
-use crate::parallel::{global_pool, par_chunks_mut, split_groups, ExecPolicy};
+use crate::parallel::{global_pool, par_chunks_mut, split_groups, ExecPolicy, ShardPolicy};
 
 use super::reorder::{
     reorder_2d_gather_row, reorder_2d_scatter, unreorder_2d, unreorder_2d_row,
@@ -65,6 +65,7 @@ pub struct Dct2 {
     tw1: Arc<Twiddle>,
     tw2: Arc<Twiddle>,
     policy: ExecPolicy,
+    shards: ShardPolicy,
 }
 
 impl Dct2 {
@@ -83,7 +84,25 @@ impl Dct2 {
             tw1: twiddle(n1),
             tw2: twiddle(n2),
             policy,
+            shards: ShardPolicy::Auto,
         }
+    }
+
+    /// Same plan with an explicit band-shard policy, threaded through
+    /// all three stages (pre-reorder rows, the inner 2D RFFT's row and
+    /// column stages, postprocess row pairs). Each stage becomes the
+    /// work-item count [`ShardPolicy::bands`] dictates for its row
+    /// count; `ShardPolicy::MaxShards(1)` forces single-band execution.
+    pub fn with_shards(mut self, shards: ShardPolicy) -> Dct2 {
+        self.shards = shards;
+        self.rfft2 = self.rfft2.with_shards(shards);
+        self
+    }
+
+    /// Band work items for a stage of `rows` rows under this plan's
+    /// exec + shard policies.
+    fn bands(&self, rows: usize) -> usize {
+        self.shards.bands(rows, self.policy.lanes(self.n1 * self.n2))
     }
 
     /// Compute the 2D DCT of row-major `x` into `out`.
@@ -99,7 +118,7 @@ impl Dct2 {
 
         let t0 = Instant::now();
         let mut pre = scratch::take_f64(n1 * n2);
-        let lanes = self.policy.lanes(n1 * n2);
+        let lanes = self.bands(n1);
         if lanes > 1 {
             // gather order is row-local on the output, so rows fan out
             par_chunks_mut(&mut pre, n2, lanes, |r, row| {
@@ -136,7 +155,8 @@ impl Dct2 {
     ///   y(m1,  N2-k2) =  2 Re(R - S)
     pub fn postprocess(&self, spec: &[C64], out: &mut [f64]) {
         let n1 = self.n1;
-        let lanes = self.policy.lanes(n1 * self.n2);
+        // the §III-B row pair is the postprocess shard unit
+        let lanes = self.bands(n1 / 2 + 1);
         let mut pairs = claim_row_pairs(out, n1, self.n2);
         if lanes > 1 && pairs.len() > 1 {
             let groups = split_groups(pairs, lanes);
@@ -235,6 +255,7 @@ pub struct Idct2 {
     tw1: Arc<Twiddle>,
     tw2: Arc<Twiddle>,
     policy: ExecPolicy,
+    shards: ShardPolicy,
 }
 
 impl Idct2 {
@@ -252,7 +273,23 @@ impl Idct2 {
             tw1: twiddle(n1),
             tw2: twiddle(n2),
             policy,
+            shards: ShardPolicy::Auto,
         }
+    }
+
+    /// Same plan with an explicit band-shard policy (see
+    /// [`Dct2::with_shards`]); threaded through the spectrum-build rows,
+    /// the inner 2D IRFFT, and the unreorder rows.
+    pub fn with_shards(mut self, shards: ShardPolicy) -> Idct2 {
+        self.shards = shards;
+        self.rfft2 = self.rfft2.with_shards(shards);
+        self
+    }
+
+    /// Band work items for a stage of `rows` rows under this plan's
+    /// exec + shard policies.
+    fn bands(&self, rows: usize) -> usize {
+        self.shards.bands(rows, self.policy.lanes(self.n1 * self.n2))
     }
 
     pub fn forward(&self, x: &[f64], out: &mut [f64]) {
@@ -272,7 +309,7 @@ impl Idct2 {
         let mut v = scratch::take_f64(n1 * n2);
         self.rfft2.inverse(&spec, &mut v);
         let t2 = Instant::now();
-        let lanes = self.policy.lanes(n1 * n2);
+        let lanes = self.bands(n1);
         if lanes > 1 {
             par_chunks_mut(out, n2, lanes, |r, row| {
                 unreorder_2d_row(&v, row, r, n1, n2);
@@ -295,7 +332,7 @@ impl Idct2 {
     /// zero boundaries, and writes one complex value:
     ///   V = conj(a) conj(b) / 4 * ( (x11 - x22) - j (x21 + x12) )
     pub fn preprocess(&self, x: &[f64], spec: &mut [C64]) {
-        let lanes = self.policy.lanes(self.n1 * self.n2);
+        let lanes = self.bands(self.n1);
         // each spectrum row k1 only *reads* input rows k1 / n1-k1, so
         // rows are independent and fan out directly
         par_chunks_mut(spec, self.h2, lanes, |k1, srow| {
@@ -398,6 +435,31 @@ mod tests {
             Idct2::with_policy(n1, n2, ExecPolicy::Serial).forward(&ys, &mut bs);
             Idct2::with_policy(n1, n2, ExecPolicy::Threads(4)).forward(&yp, &mut bp);
             assert_eq!(bs, bp, "idct2 ({n1},{n2})");
+        }
+    }
+
+    #[test]
+    fn sharded_plan_is_bit_equal_to_serial() {
+        use crate::parallel::{ExecPolicy, ShardPolicy};
+        let mut rng = crate::util::rng::Rng::new(41);
+        for &(n1, n2) in &[(9usize, 15usize), (16, 16), (13, 7), (33, 17)] {
+            let x = rng.normal_vec(n1 * n2);
+            let mut ys = vec![0.0; n1 * n2];
+            Dct2::with_policy(n1, n2, ExecPolicy::Serial).forward(&x, &mut ys);
+            for shards in [1usize, 2, 3, 7] {
+                let mut yp = vec![0.0; n1 * n2];
+                Dct2::with_policy(n1, n2, ExecPolicy::Serial)
+                    .with_shards(ShardPolicy::MaxShards(shards))
+                    .forward(&x, &mut yp);
+                assert_eq!(ys, yp, "dct2 ({n1},{n2}) shards={shards}");
+                let mut bs = vec![0.0; n1 * n2];
+                let mut bp = vec![0.0; n1 * n2];
+                Idct2::with_policy(n1, n2, ExecPolicy::Serial).forward(&ys, &mut bs);
+                Idct2::with_policy(n1, n2, ExecPolicy::Serial)
+                    .with_shards(ShardPolicy::MaxShards(shards))
+                    .forward(&yp, &mut bp);
+                assert_eq!(bs, bp, "idct2 ({n1},{n2}) shards={shards}");
+            }
         }
     }
 

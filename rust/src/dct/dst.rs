@@ -126,6 +126,13 @@ impl Dst2 {
         Dst2 { n1, n2, dct: Dct2::with_policy(n1, n2, policy) }
     }
 
+    /// Same plan with an explicit band-shard policy on the inner fused
+    /// DCT (see [`Dct2::with_shards`]).
+    pub fn with_shards(mut self, shards: crate::parallel::ShardPolicy) -> Dst2 {
+        self.dct = self.dct.with_shards(shards);
+        self
+    }
+
     pub fn forward(&self, x: &[f64], out: &mut [f64]) {
         let (n1, n2) = (self.n1, self.n2);
         assert_eq!(x.len(), n1 * n2);
@@ -167,6 +174,13 @@ impl Idst2 {
     /// Plan whose inner fused IDCT carries an explicit execution policy.
     pub fn with_policy(n1: usize, n2: usize, policy: crate::parallel::ExecPolicy) -> Idst2 {
         Idst2 { n1, n2, idct: Idct2::with_policy(n1, n2, policy) }
+    }
+
+    /// Same plan with an explicit band-shard policy on the inner fused
+    /// IDCT (see [`Idct2::with_shards`]).
+    pub fn with_shards(mut self, shards: crate::parallel::ShardPolicy) -> Idst2 {
+        self.idct = self.idct.with_shards(shards);
+        self
     }
 
     pub fn forward(&self, x: &[f64], out: &mut [f64]) {

@@ -43,6 +43,14 @@ impl IdxstCombo {
         IdxstCombo { n1, n2, combo, idct: Idct2::with_policy(n1, n2, policy) }
     }
 
+    /// Same plan with an explicit band-shard policy on the inner fused
+    /// IDCT (see [`Idct2::with_shards`]); the shift/sign folds are cheap
+    /// per-row loops and stay inline.
+    pub fn with_shards(mut self, shards: crate::parallel::ShardPolicy) -> IdxstCombo {
+        self.idct = self.idct.with_shards(shards);
+        self
+    }
+
     pub fn forward(&self, x: &[f64], out: &mut [f64]) {
         self.forward_timed(x, out);
     }

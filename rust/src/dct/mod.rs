@@ -14,6 +14,33 @@
 //! | DST family via folds (§III-D extensibility) | [`dst`] |
 //! | Direct O(N^2) oracle / MATLAB stand-in | [`direct`] |
 //! | Precomputed twiddles (texture-cache analogue) | [`twiddle`] |
+//!
+//! Every fused 2D plan carries a [`crate::parallel::ExecPolicy`]
+//! (lane fan-out) and, via `with_shards`, a
+//! [`crate::parallel::ShardPolicy`] (band-shard decomposition) — see
+//! [`Dct2::with_shards`].
+//!
+//! ```
+//! use mddct::dct::{Dct2, Idct2};
+//! use mddct::parallel::{ExecPolicy, ShardPolicy};
+//!
+//! // a sharded plan splits its stages into 3 band work items but
+//! // computes the exact same transform
+//! let (n1, n2) = (16, 16);
+//! let x: Vec<f64> = (0..n1 * n2).map(|i| (i as f64).sin()).collect();
+//! let mut serial = vec![0.0; n1 * n2];
+//! Dct2::with_policy(n1, n2, ExecPolicy::Serial).forward(&x, &mut serial);
+//! let mut sharded = vec![0.0; n1 * n2];
+//! Dct2::with_policy(n1, n2, ExecPolicy::Serial)
+//!     .with_shards(ShardPolicy::MaxShards(3))
+//!     .forward(&x, &mut sharded);
+//! assert_eq!(serial, sharded);
+//!
+//! // and the inverse plan undoes it
+//! let mut back = vec![0.0; n1 * n2];
+//! Idct2::new(n1, n2).forward(&sharded, &mut back);
+//! assert!(x.iter().zip(&back).all(|(a, b)| (a - b).abs() < 1e-9));
+//! ```
 
 pub mod dct1d;
 pub mod dct2d;

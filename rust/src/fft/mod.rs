@@ -6,7 +6,22 @@
 //! selector ([`FftKernel`]: scalar radix-2 reference vs the
 //! split-radix/radix-4 SoA throughput kernel), Bluestein for arbitrary
 //! N, a real-input RFFT with the even-N packing trick, 2D/3D
-//! transforms, and a process-wide plan cache.
+//! transforms (whose banded stages honor the
+//! [`crate::parallel::ShardPolicy`] band decomposition — see
+//! [`Rfft2Plan::with_shards`]), and a process-wide plan cache.
+//!
+//! ```
+//! use mddct::fft::{onesided_len, RfftPlan, C64};
+//!
+//! let plan = RfftPlan::new(8);
+//! let x = [1.0f64; 8];
+//! let mut spec = vec![C64::default(); onesided_len(8)];
+//! plan.forward(&x, &mut spec);
+//! // DC bin of a real signal is its sum; all other bins of a constant
+//! // signal vanish
+//! assert!((spec[0].re - 8.0).abs() < 1e-12);
+//! assert!(spec[1..].iter().all(|c| c.abs() < 1e-12));
+//! ```
 
 pub mod bluestein;
 pub mod complex;

@@ -10,11 +10,18 @@
 //! `transform_cols` vectorization, but scalable across cores. The
 //! per-element arithmetic is identical in serial and parallel paths, so
 //! outputs agree bit-for-bit.
+//!
+//! Band sharding: a [`ShardPolicy`] (see [`Rfft2Plan::with_shards`])
+//! additionally pins how many row-band work items each stage becomes —
+//! the row-FFT batch bands over the `n1` input rows, and after the
+//! tiled-transpose barrier the column stage bands over the `h2`
+//! spectrum rows. Under the default `ShardPolicy::Auto` the band count
+//! equals the exec lane count, i.e. exactly the pre-sharding behaviour.
 
 use super::complex::C64;
 use super::plan::plan;
 use super::rfft::{onesided_len, RfftPlan};
-use crate::parallel::{par_chunks_mut, transpose_into, ExecPolicy};
+use crate::parallel::{par_chunks_mut, transpose_into, ExecPolicy, ShardPolicy};
 use crate::util::scratch;
 
 /// 2D RFFT plan for an (n1 x n2) real matrix -> (n1 x h2) onesided spectrum.
@@ -26,6 +33,7 @@ pub struct Rfft2Plan {
     row: RfftPlan,
     col: std::sync::Arc<super::plan::FftPlan>,
     policy: ExecPolicy,
+    shards: ShardPolicy,
 }
 
 impl Rfft2Plan {
@@ -42,7 +50,24 @@ impl Rfft2Plan {
             row: RfftPlan::new(n2),
             col: plan(n1),
             policy,
+            shards: ShardPolicy::Auto,
         }
+    }
+
+    /// Same plan with an explicit band-shard policy: every banded stage
+    /// is split into the work-item count `shards` dictates (see
+    /// [`ShardPolicy::bands`]) instead of one band per exec lane.
+    /// `ShardPolicy::MaxShards(1)` forces single-band (serial-order)
+    /// execution regardless of the exec policy.
+    pub fn with_shards(mut self, shards: ShardPolicy) -> Rfft2Plan {
+        self.shards = shards;
+        self
+    }
+
+    /// Band work items for the row stage (`rows` rows) under this
+    /// plan's exec + shard policies.
+    fn bands(&self, rows: usize) -> usize {
+        self.shards.bands(rows, self.policy.lanes(self.n1 * self.n2))
     }
 
     /// Forward: real row-major (n1*n2) -> complex row-major (n1*h2).
@@ -50,10 +75,10 @@ impl Rfft2Plan {
         let (n1, h2) = (self.n1, self.h2);
         assert_eq!(x.len(), n1 * self.n2);
         assert_eq!(out.len(), n1 * h2);
-        let lanes = self.policy.lanes(n1 * self.n2);
-        if lanes > 1 {
-            self.row.forward_batch(x, out, lanes);
-            self.col_fft_via_transpose(out, false, lanes);
+        let (row_bands, col_bands) = (self.bands(n1), self.bands(h2));
+        if row_bands > 1 || col_bands > 1 {
+            self.row.forward_batch(x, out, row_bands);
+            self.col_fft_via_transpose(out, false, col_bands);
             return;
         }
         // rows: real FFT
@@ -76,12 +101,12 @@ impl Rfft2Plan {
         let (n1, h2) = (self.n1, self.h2);
         assert_eq!(spec.len(), n1 * h2);
         assert_eq!(out.len(), n1 * self.n2);
-        let lanes = self.policy.lanes(n1 * self.n2);
+        let (row_bands, col_bands) = (self.bands(n1), self.bands(h2));
         let mut work = scratch::take_c64(spec.len());
         work.copy_from_slice(spec);
-        if lanes > 1 {
-            self.col_fft_via_transpose(&mut work, true, lanes);
-            self.row.inverse_batch(&work, out, lanes);
+        if row_bands > 1 || col_bands > 1 {
+            self.col_fft_via_transpose(&mut work, true, col_bands);
+            self.row.inverse_batch(&work, out, row_bands);
             scratch::give_c64(work);
             return;
         }
@@ -299,6 +324,29 @@ mod tests {
             serial.inverse(&a, &mut ba);
             par.inverse(&b, &mut bb);
             assert_eq!(ba, bb, "({n1},{n2}) inverse");
+        }
+    }
+
+    #[test]
+    fn sharded_plan_matches_serial_bitwise() {
+        use crate::parallel::ShardPolicy;
+        let mut rng = Rng::new(36);
+        for &(n1, n2) in &[(9usize, 15usize), (16, 16), (7, 13), (33, 17)] {
+            let x = rng.normal_vec(n1 * n2);
+            let serial = Rfft2Plan::with_policy(n1, n2, crate::parallel::ExecPolicy::Serial);
+            let mut a = vec![C64::default(); n1 * serial.h2];
+            serial.forward(&x, &mut a);
+            for shards in [1usize, 2, 3, 7] {
+                // Serial exec + explicit shard count: the shard policy alone
+                // drives the fan-out
+                let plan = Rfft2Plan::with_policy(n1, n2, crate::parallel::ExecPolicy::Serial)
+                    .with_shards(ShardPolicy::MaxShards(shards));
+                let mut b = vec![C64::default(); n1 * plan.h2];
+                plan.forward(&x, &mut b);
+                for (u, v) in a.iter().zip(&b) {
+                    assert!((*u - *v).abs() == 0.0, "({n1},{n2}) shards={shards}");
+                }
+            }
         }
     }
 

@@ -14,11 +14,14 @@
 //!   2D/3D, plan cache
 //! * [`dct`]  — the paper's transforms: fused three-stage + baselines
 //! * [`parallel`] — work-sharing execution layer: process-wide scoped
-//!   thread pool, chunked parallel loops, parallel tiled transpose, and
-//!   the [`parallel::ExecPolicy`] every plan carries (`Serial` /
-//!   `Threads(n)` / `Auto`)
+//!   thread pool, chunked parallel loops, parallel tiled transpose, the
+//!   [`parallel::ExecPolicy`] every plan carries (`Serial` /
+//!   `Threads(n)` / `Auto`), and the [`parallel::ShardPolicy`] band
+//!   decomposition knob
 //! * [`runtime`] — PJRT executor for the JAX/Pallas AOT artifacts
-//! * [`coordinator`] — transform service: plans, batching, workers, metrics
+//! * [`coordinator`] — transform service: plans, batching, band-sharded
+//!   execution of large requests ([`coordinator::shard`]), workers,
+//!   metrics
 //! * [`apps`] — image compression & electrostatic placement built on top
 //! * [`bench`] — harness regenerating every paper table/figure
 //! * [`util`] — offline substrates (json, rng, property testing, stats)
@@ -28,7 +31,26 @@
 //! decides how its batched stages fan out over the shared thread pool —
 //! the service's workers reuse that same pool, so a single process has
 //! exactly one set of compute threads no matter how many plans, workers,
-//! or concurrent requests are live.
+//! or concurrent requests are live. A plan's `ShardPolicy` additionally
+//! pins how many row-band work items each banded stage becomes, which is
+//! how the coordinator splits one huge request across the pool while
+//! small requests keep flowing (see `ARCHITECTURE.md` at the repo root
+//! for the full layer map and shard lifecycle).
+//!
+//! ```
+//! use mddct::dct::{Dct2, Idct2};
+//!
+//! let (n1, n2) = (8, 8);
+//! let x = vec![1.0; n1 * n2];
+//! let mut y = vec![0.0; n1 * n2];
+//! Dct2::new(n1, n2).forward(&x, &mut y);
+//! // a constant image concentrates all energy in the DC bin
+//! assert!((y[0] - 4.0 * (n1 * n2) as f64).abs() < 1e-9);
+//!
+//! let mut back = vec![0.0; n1 * n2];
+//! Idct2::new(n1, n2).forward(&y, &mut back);
+//! assert!(back.iter().all(|v| (v - 1.0).abs() < 1e-9));
+//! ```
 
 pub mod dct;
 pub mod fft;

@@ -16,7 +16,23 @@
 //!   row-column baseline's stages 2/6, and the trick that turns column
 //!   FFTs into contiguous row FFTs);
 //! * [`policy`]    — [`ExecPolicy`] (`Serial` / `Threads(n)` / `Auto`)
-//!   carried by every plan; `Auto` stays serial below a work threshold.
+//!   carried by every plan (`Auto` stays serial below a work threshold),
+//!   and [`ShardPolicy`] (`Auto` / `MinRowsPerShard` / `MaxShards`)
+//!   pinning how many row-band work items a banded stage becomes — the
+//!   substrate of the coordinator's band-sharded execution
+//!   ([`crate::coordinator::shard`]).
+//!
+//! ```
+//! use mddct::parallel::{band_spans, ExecPolicy, ShardPolicy};
+//!
+//! // ExecPolicy answers "how many lanes may run at once" ...
+//! assert_eq!(ExecPolicy::Threads(4).lanes(1 << 20), 4);
+//! // ... ShardPolicy answers "how many band work items one stage becomes"
+//! assert_eq!(ShardPolicy::MaxShards(8).bands(1024, 1), 8);
+//! // and band_spans is the row decomposition those work items own
+//! let spans = band_spans(10, 3);
+//! assert_eq!(spans, vec![0..4, 4..7, 7..10]);
+//! ```
 //!
 //! Determinism contract, stated *per FFT kernel* (see
 //! [`crate::fft::FftKernel`]): `Serial` and `Threads(1)` run the
@@ -28,6 +44,8 @@
 //! selection*. Outputs of different kernels (scalar radix-2 vs
 //! split-radix/radix-4 SoA) agree only to rounding, not bit-for-bit.
 
+#![warn(missing_docs)]
+
 pub mod par_iter;
 pub mod policy;
 pub mod pool;
@@ -38,7 +56,7 @@ pub(crate) fn ceil_div(a: usize, b: usize) -> usize {
     (a + b - 1) / b
 }
 
-pub use par_iter::{par_chunks_mut, parallel_for, parallel_for_chunks, split_groups};
-pub use policy::{default_threads, ExecPolicy, AUTO_MIN_WORK};
+pub use par_iter::{band_spans, par_chunks_mut, parallel_for, parallel_for_chunks, split_groups};
+pub use policy::{default_threads, ExecPolicy, ShardPolicy, AUTO_MIN_WORK};
 pub use pool::{global as global_pool, ThreadPool};
 pub use transpose::transpose_into;

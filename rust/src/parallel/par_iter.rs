@@ -115,6 +115,17 @@ where
     pool::global().scope(jobs);
 }
 
+/// Split `0..rows` into exactly `min(bands, rows)` contiguous row spans
+/// of near-equal height (earlier spans take the one extra row when the
+/// split is not divisible). This is the shard-band math: a span is the
+/// set of rows one shard work item owns, and it delegates to the same
+/// [`chunk_ranges`] distribution [`par_chunks_mut`] hands each lane, so
+/// a band plan computed here describes the slices the pool will
+/// actually execute.
+pub fn band_spans(rows: usize, bands: usize) -> Vec<Range<usize>> {
+    chunk_ranges(rows, bands.max(1), 1)
+}
+
 /// Split an owned vec into up to `lanes` contiguous groups (used to
 /// distribute non-uniform work items, e.g. postprocess row pairs).
 pub fn split_groups<T>(mut items: Vec<T>, lanes: usize) -> Vec<Vec<T>> {
@@ -200,6 +211,28 @@ mod tests {
             ch.fill(1);
         });
         assert!(data.iter().all(|&b| b == 1));
+    }
+
+    #[test]
+    fn band_spans_cover_rows_near_equally() {
+        for &(rows, bands) in
+            &[(10usize, 3usize), (7, 7), (7, 16), (8192, 6), (1, 1), (33, 2), (100, 1)]
+        {
+            let spans = band_spans(rows, bands);
+            assert_eq!(spans.len(), bands.min(rows));
+            let mut next = 0;
+            let (mut lo, mut hi) = (usize::MAX, 0usize);
+            for s in &spans {
+                assert_eq!(s.start, next);
+                assert!(!s.is_empty());
+                lo = lo.min(s.len());
+                hi = hi.max(s.len());
+                next = s.end;
+            }
+            assert_eq!(next, rows, "rows={rows} bands={bands}");
+            assert!(hi - lo <= 1, "near-equal split: rows={rows} bands={bands}");
+        }
+        assert!(band_spans(0, 4).is_empty());
     }
 
     #[test]

@@ -1,10 +1,19 @@
-//! Execution policy: how many lanes a transform stage may fan out to.
+//! Execution policies: how many lanes a transform stage may fan out to
+//! ([`ExecPolicy`]), and how a single large transform is decomposed into
+//! row-band shards ([`ShardPolicy`]).
 //!
 //! Every plan carries an [`ExecPolicy`]; hot paths ask it for a lane
 //! count sized to the work at hand. `Serial` and `Threads(1)` take the
 //! exact same single-threaded code path (bit-identical results), `Auto`
 //! falls back to serial below a work threshold where fork/join overhead
 //! would dominate the transform itself.
+//!
+//! [`ShardPolicy`] is the second, orthogonal axis: instead of asking
+//! "how many threads may run", it pins "how many band work items one
+//! transform becomes". The coordinator threads it through the plan
+//! cache so one huge request can be split into bands that interleave on
+//! the shared pool with other requests' work (see
+//! [`crate::coordinator::shard`]).
 
 use std::sync::OnceLock;
 
@@ -53,6 +62,73 @@ impl ExecPolicy {
     }
 }
 
+/// How a single transform's banded stages are decomposed into shard
+/// work items.
+///
+/// An [`ExecPolicy`] answers "how many lanes may run at once"; a
+/// `ShardPolicy` answers "how many independent band work items does one
+/// transform become". The two compose: under the default `Auto` the
+/// band count simply equals the exec lane count (the pre-sharding
+/// behaviour, bit-for-bit), while the explicit variants pin the
+/// decomposition regardless of the exec policy — `MaxShards(1)` forces
+/// single-band (serial-equivalent) execution even on a `Threads(n)`
+/// plan, and `MaxShards(n)` fans a `Serial` plan out over `n` bands.
+///
+/// Every banded stage applies the policy with its own row count: the
+/// stage-1 row FFTs band over the `n1` input rows, the column stage
+/// (after the tiled-transpose barrier) over the `h2` spectrum rows, and
+/// the DCT pre/post permutations over their row/pair counts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShardPolicy {
+    /// Band count = the plan's exec lane count (the pre-sharding
+    /// default; `Serial` plans stay serial).
+    #[default]
+    Auto,
+    /// Every shard keeps at least this many rows: a stage of `rows`
+    /// rows becomes `max(1, rows / m)` bands. Guards small requests
+    /// against over-splitting while still fanning large ones wide.
+    MinRowsPerShard(usize),
+    /// At most this many bands (clamped to the row count); the explicit
+    /// shard count for large transforms, independent of exec lanes.
+    MaxShards(usize),
+}
+
+impl ShardPolicy {
+    /// Number of band work items for a stage of `rows` rows, given the
+    /// lane count `exec_lanes` the plan's [`ExecPolicy`] granted.
+    /// Always at least 1 and at most `rows` (a band owns whole rows).
+    pub fn bands(self, rows: usize, exec_lanes: usize) -> usize {
+        let rows = rows.max(1);
+        match self {
+            ShardPolicy::Auto => exec_lanes.max(1).min(rows),
+            ShardPolicy::MinRowsPerShard(m) => (rows / m.max(1)).clamp(1, rows),
+            ShardPolicy::MaxShards(k) => k.clamp(1, rows),
+        }
+    }
+
+    /// Process-default shard policy: `MDDCT_SHARD_MIN_ROWS` maps to
+    /// [`ShardPolicy::MinRowsPerShard`], else `MDDCT_MAX_SHARDS` to
+    /// [`ShardPolicy::MaxShards`], else [`ShardPolicy::Auto`].
+    pub fn from_env() -> ShardPolicy {
+        if let Some(m) = env_usize("MDDCT_SHARD_MIN_ROWS") {
+            return ShardPolicy::MinRowsPerShard(m);
+        }
+        if let Some(k) = env_usize("MDDCT_MAX_SHARDS") {
+            return ShardPolicy::MaxShards(k);
+        }
+        ShardPolicy::Auto
+    }
+
+    /// Human-readable label (bench tables / metrics).
+    pub fn label(self) -> String {
+        match self {
+            ShardPolicy::Auto => "shard-auto".to_string(),
+            ShardPolicy::MinRowsPerShard(m) => format!("min-rows({m})"),
+            ShardPolicy::MaxShards(k) => format!("max-shards({k})"),
+        }
+    }
+}
+
 /// Parse a positive usize from an env var (see [`crate::util::env_usize`];
 /// re-exported here because the thread/worker-count defaults historically
 /// lived in this module).
@@ -92,5 +168,43 @@ mod tests {
     #[test]
     fn default_policy_is_auto() {
         assert_eq!(ExecPolicy::default(), ExecPolicy::Auto);
+    }
+
+    #[test]
+    fn shard_auto_defers_to_exec_lanes() {
+        assert_eq!(ShardPolicy::Auto.bands(1024, 1), 1);
+        assert_eq!(ShardPolicy::Auto.bands(1024, 8), 8);
+        // clamped to whole rows
+        assert_eq!(ShardPolicy::Auto.bands(3, 8), 3);
+        assert_eq!(ShardPolicy::default(), ShardPolicy::Auto);
+    }
+
+    #[test]
+    fn max_shards_pins_band_count() {
+        // independent of exec lanes in both directions
+        assert_eq!(ShardPolicy::MaxShards(4).bands(1024, 1), 4);
+        assert_eq!(ShardPolicy::MaxShards(1).bands(1024, 16), 1);
+        assert_eq!(ShardPolicy::MaxShards(7).bands(3, 16), 3);
+        assert_eq!(ShardPolicy::MaxShards(0).bands(10, 2), 1);
+    }
+
+    #[test]
+    fn min_rows_per_shard_guarantees_band_height() {
+        for (rows, m) in [(1024usize, 128usize), (1000, 7), (5, 2), (8192, 1)] {
+            let bands = ShardPolicy::MinRowsPerShard(m).bands(rows, 1);
+            assert!(bands >= 1 && bands <= rows);
+            // near-equal split keeps every band at >= m rows
+            assert!(rows / bands >= m, "rows={rows} m={m} bands={bands}");
+        }
+        // small requests collapse to one band instead of over-splitting
+        assert_eq!(ShardPolicy::MinRowsPerShard(64).bands(16, 8), 1);
+        assert_eq!(ShardPolicy::MinRowsPerShard(0).bands(16, 8), 16);
+    }
+
+    #[test]
+    fn shard_labels_are_stable() {
+        assert_eq!(ShardPolicy::Auto.label(), "shard-auto");
+        assert_eq!(ShardPolicy::MaxShards(4).label(), "max-shards(4)");
+        assert_eq!(ShardPolicy::MinRowsPerShard(64).label(), "min-rows(64)");
     }
 }

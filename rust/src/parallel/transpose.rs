@@ -7,6 +7,12 @@
 //! the fan-out needs no aliasing tricks — and each band is walked in
 //! `TILE` x `TILE` blocks so both the strided reads and the sequential
 //! writes stay cache-resident.
+//!
+//! These output-row bands are also the natural shard boundary for
+//! band-sharded transform execution (see [`crate::coordinator::shard`]):
+//! the transpose is the barrier where row-stage shards meet and
+//! column-stage shards are re-dealt, so anything that owns whole bands
+//! on both sides composes with it without extra synchronization.
 
 use super::ceil_div;
 use super::par_iter::par_chunks_mut;
@@ -14,6 +20,18 @@ use super::par_iter::par_chunks_mut;
 /// Tile edge (doubles as the band-rounding unit). 32x32 f64 tiles are
 /// 8 KiB read + 8 KiB written: comfortably L1-resident.
 pub const TILE: usize = 32;
+
+/// Rows per output band when transposing into `out_rows` rows over up
+/// to `lanes` workers: the per-lane share rounded up to whole tiles, so
+/// no two lanes ever split a tile row between them. This is the band
+/// height shard work items inherit at the transpose barrier.
+pub fn band_rows(out_rows: usize, lanes: usize) -> usize {
+    if lanes <= 1 {
+        out_rows
+    } else {
+        (ceil_div(ceil_div(out_rows, lanes), TILE) * TILE).min(out_rows)
+    }
+}
 
 /// Transpose row-major `x` (n1 x n2) into `out` (n2 x n1), fanning out
 /// over up to `lanes` workers. `lanes <= 1` is the serial blocked loop.
@@ -28,11 +46,7 @@ where
     }
     // band = a run of output rows, rounded to whole tiles so lanes do not
     // split a tile row between them
-    let band_rows = if lanes <= 1 {
-        n2
-    } else {
-        (ceil_div(ceil_div(n2, lanes), TILE) * TILE).min(n2)
-    };
+    let band_rows = band_rows(n2, lanes);
     par_chunks_mut(out, band_rows * n1, lanes, |band_idx, band| {
         let r0 = band_idx * band_rows; // first output row of this band
         let rows = band.len() / n1;
@@ -89,6 +103,19 @@ mod tests {
         transpose_into(&x, &mut t, n1, n2, 4);
         transpose_into(&t, &mut back, n2, n1, 4);
         assert_eq!(back, x);
+    }
+
+    #[test]
+    fn band_rows_is_tile_aligned_and_covering() {
+        assert_eq!(band_rows(100, 1), 100);
+        for (rows, lanes) in [(100usize, 4usize), (64, 2), (33, 8), (8192, 6), (7, 3)] {
+            let b = band_rows(rows, lanes);
+            assert!(b >= 1 && b <= rows);
+            // tile-aligned unless a single band covers everything
+            assert!(b == rows || b % TILE == 0, "rows={rows} lanes={lanes} b={b}");
+            // the rounded bands still cover all rows with <= lanes bands
+            assert!(crate::parallel::ceil_div(rows, b) <= lanes.max(1));
+        }
     }
 
     #[test]

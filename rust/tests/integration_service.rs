@@ -90,7 +90,11 @@ fn pjrt_routing_matches_native_results() {
 fn batch_of_identical_shapes_is_cobatched() {
     let svc = Service::start_native(ServiceConfig {
         workers: 1,
-        batch: BatchPolicy { max_batch: 32, max_wait: std::time::Duration::from_millis(20) },
+        batch: BatchPolicy {
+            max_batch: 32,
+            max_wait: std::time::Duration::from_millis(20),
+            ..Default::default()
+        },
         ..Default::default()
     });
     let mut rng = Rng::new(603);
@@ -100,4 +104,31 @@ fn batch_of_identical_shapes_is_cobatched() {
     let out = svc.transform_many(reqs).unwrap();
     let max_batch = out.iter().map(|r| r.batch_size).max().unwrap();
     assert!(max_batch > 1, "expected co-batching, max batch {max_batch}");
+}
+
+#[test]
+fn sharded_service_matches_unsharded_service() {
+    use mddct::parallel::{ExecPolicy, ShardPolicy};
+    // same traffic through a single-band service and a band-sharded one:
+    // responses must agree to <= 1e-10 (the sharding correctness contract)
+    let serial = Service::start_native(ServiceConfig {
+        workers: 1,
+        batch: BatchPolicy::default(),
+        exec: ExecPolicy::Serial,
+        shard: ShardPolicy::MaxShards(1),
+    });
+    let sharded = Service::start_native(ServiceConfig {
+        workers: 2,
+        batch: BatchPolicy::default(),
+        exec: ExecPolicy::Serial,
+        shard: ShardPolicy::MaxShards(5),
+    });
+    let mut rng = Rng::new(604);
+    for op in [TransformOp::Dct2d, TransformOp::Idct2d, TransformOp::IdctIdxst] {
+        let (n1, n2) = (257usize, 256usize); // above threshold, prime leading dim
+        let x = rng.normal_vec(n1 * n2);
+        let a = serial.transform(op, vec![n1, n2], x.clone()).unwrap();
+        let b = sharded.transform(op, vec![n1, n2], x).unwrap();
+        assert_close(&b.output, &a.output, 1e-10);
+    }
 }

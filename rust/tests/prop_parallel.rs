@@ -3,9 +3,14 @@
 //! matter how many lanes it fans out over, across the radix-2 and
 //! Bluestein FFT paths, and `Threads(1)` must be *bit-identical* to
 //! `Serial` (they take the same code path by construction).
+//!
+//! The same contract extends to band-sharded execution: any shard
+//! count must match `ExecPolicy::Serial` to <= 1e-10, across
+//! non-divisible band splits and prime (Bluestein) dimensions.
 
-use mddct::dct::{Dct2, Dct3d, Idct2, RowColumn};
-use mddct::parallel::{default_threads, ExecPolicy};
+use mddct::dct::{Combo, Dct2, Dct3d, Idct2, IdxstCombo, RowColumn};
+use mddct::fft::{C64, Rfft2Plan};
+use mddct::parallel::{default_threads, ExecPolicy, ShardPolicy};
 use mddct::util::rng::Rng;
 
 /// Shapes covering every interesting FFT dispatch: odd sizes, primes
@@ -138,6 +143,159 @@ fn auto_policy_is_consistent_with_serial_above_threshold() {
     Dct2::with_policy(n1, n2, ExecPolicy::Auto).forward(&x, &mut auto);
     close(&auto, &serial, 1e-10, "auto vs serial 128x128");
     assert!(default_threads() >= 1);
+}
+
+/// Shard counts the ISSUE contract calls out: 1 (degenerate), small
+/// even/odd, and 7 (never divides the power-of-two shapes evenly).
+const SHARD_COUNTS: [usize; 4] = [1, 2, 3, 7];
+
+/// Shapes stressing the band math: rows not divisible by any shard
+/// count, prime (Bluestein) dimensions on either axis, and a
+/// power-of-two reference.
+const SHARD_SHAPES: &[(usize, usize)] = &[
+    (9, 15),   // odd x odd, rows < some shard counts
+    (13, 7),   // prime x prime (Bluestein both axes)
+    (33, 17),  // non-divisible by 2, 3, and 7
+    (16, 16),  // power of two
+    (31, 8),   // prime rows x radix-2 columns
+    (64, 12),  // divisible rows, even composite columns
+];
+
+#[test]
+fn dct2_sharded_matches_serial_for_all_shard_counts() {
+    let mut rng = Rng::new(710);
+    for &(n1, n2) in SHARD_SHAPES {
+        let x = rng.normal_vec(n1 * n2);
+        let mut serial = vec![0.0; n1 * n2];
+        Dct2::with_policy(n1, n2, ExecPolicy::Serial).forward(&x, &mut serial);
+        for shards in SHARD_COUNTS {
+            let mut sharded = vec![0.0; n1 * n2];
+            Dct2::with_policy(n1, n2, ExecPolicy::Serial)
+                .with_shards(ShardPolicy::MaxShards(shards))
+                .forward(&x, &mut sharded);
+            close(
+                &sharded,
+                &serial,
+                1e-10,
+                &format!("dct2 ({n1},{n2}) shards={shards}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn idct2_sharded_matches_serial_for_all_shard_counts() {
+    let mut rng = Rng::new(711);
+    for &(n1, n2) in SHARD_SHAPES {
+        let x = rng.normal_vec(n1 * n2);
+        let mut serial = vec![0.0; n1 * n2];
+        Idct2::with_policy(n1, n2, ExecPolicy::Serial).forward(&x, &mut serial);
+        for shards in SHARD_COUNTS {
+            let mut sharded = vec![0.0; n1 * n2];
+            Idct2::with_policy(n1, n2, ExecPolicy::Serial)
+                .with_shards(ShardPolicy::MaxShards(shards))
+                .forward(&x, &mut sharded);
+            close(
+                &sharded,
+                &serial,
+                1e-10,
+                &format!("idct2 ({n1},{n2}) shards={shards}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn rfft2_sharded_matches_serial_for_all_shard_counts() {
+    let mut rng = Rng::new(712);
+    for &(n1, n2) in SHARD_SHAPES {
+        let x = rng.normal_vec(n1 * n2);
+        let serial_plan = Rfft2Plan::with_policy(n1, n2, ExecPolicy::Serial);
+        let h2 = serial_plan.h2;
+        let mut serial = vec![C64::default(); n1 * h2];
+        serial_plan.forward(&x, &mut serial);
+        for shards in SHARD_COUNTS {
+            let plan = Rfft2Plan::with_policy(n1, n2, ExecPolicy::Serial)
+                .with_shards(ShardPolicy::MaxShards(shards));
+            let mut sharded = vec![C64::default(); n1 * h2];
+            plan.forward(&x, &mut sharded);
+            for (i, (a, b)) in serial.iter().zip(&sharded).enumerate() {
+                assert!(
+                    (*a - *b).abs() <= 1e-10,
+                    "rfft2 ({n1},{n2}) shards={shards} at {i}"
+                );
+            }
+            // inverse too: spectrum back to the original samples
+            let mut back = vec![0.0; n1 * n2];
+            plan.inverse(&sharded, &mut back);
+            close(&back, &x, 1e-9, &format!("irfft2 ({n1},{n2}) shards={shards}"));
+        }
+    }
+}
+
+#[test]
+fn idxst_combo_sharded_matches_serial() {
+    let mut rng = Rng::new(713);
+    for &(n1, n2) in &[(9usize, 15usize), (33, 17), (16, 16)] {
+        let x = rng.normal_vec(n1 * n2);
+        for combo in [Combo::IdctIdxst, Combo::IdxstIdct] {
+            let mut serial = vec![0.0; n1 * n2];
+            IdxstCombo::with_policy(n1, n2, combo, ExecPolicy::Serial)
+                .forward(&x, &mut serial);
+            for shards in SHARD_COUNTS {
+                let mut sharded = vec![0.0; n1 * n2];
+                IdxstCombo::with_policy(n1, n2, combo, ExecPolicy::Serial)
+                    .with_shards(ShardPolicy::MaxShards(shards))
+                    .forward(&x, &mut sharded);
+                close(
+                    &sharded,
+                    &serial,
+                    1e-10,
+                    &format!("{combo:?} ({n1},{n2}) shards={shards}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn min_rows_per_shard_matches_serial() {
+    let mut rng = Rng::new(714);
+    for &(n1, n2) in &[(33usize, 17usize), (64, 12), (13, 7)] {
+        let x = rng.normal_vec(n1 * n2);
+        let mut serial = vec![0.0; n1 * n2];
+        Dct2::with_policy(n1, n2, ExecPolicy::Serial).forward(&x, &mut serial);
+        for min_rows in [1usize, 2, 5, 1000] {
+            let mut sharded = vec![0.0; n1 * n2];
+            Dct2::with_policy(n1, n2, ExecPolicy::Serial)
+                .with_shards(ShardPolicy::MinRowsPerShard(min_rows))
+                .forward(&x, &mut sharded);
+            close(
+                &sharded,
+                &serial,
+                1e-10,
+                &format!("dct2 ({n1},{n2}) min_rows={min_rows}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn shard_policy_composes_with_parallel_exec() {
+    // sharding on top of a multi-lane exec policy must still agree with
+    // the serial reference
+    let mut rng = Rng::new(715);
+    let (n1, n2) = (48usize, 36usize);
+    let x = rng.normal_vec(n1 * n2);
+    let mut serial = vec![0.0; n1 * n2];
+    Dct2::with_policy(n1, n2, ExecPolicy::Serial).forward(&x, &mut serial);
+    for shards in [ShardPolicy::MaxShards(3), ShardPolicy::MinRowsPerShard(8)] {
+        let mut out = vec![0.0; n1 * n2];
+        Dct2::with_policy(n1, n2, ExecPolicy::Threads(4))
+            .with_shards(shards)
+            .forward(&x, &mut out);
+        close(&out, &serial, 1e-10, &format!("threads(4) + {}", shards.label()));
+    }
 }
 
 #[test]

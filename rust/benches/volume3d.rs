@@ -1,0 +1,96 @@
+//! 3D slab-sharding bench: the fused 3D DCT with 1 slab band vs N slab
+//! bands on otherwise-identical plans (`ExecPolicy::Serial`, so the
+//! shard policy alone drives the fan-out) — the volumetric analogue of
+//! `benches/sharding.rs`.
+//!
+//! Emits a human table plus machine-readable `BENCH_volume3d.json`
+//! (override the path with `MDDCT_BENCH_VOLUME3D_JSON`) so CI can track
+//! the slab-scaling ratio per volume. `MDDCT_BENCH_QUICK=1` runs the
+//! small volumes only.
+//!
+//! Run: `cargo bench --bench volume3d`
+
+use mddct::bench::{black_box, ms, time_fn, BenchConfig, Table};
+use mddct::dct::Dct3d;
+use mddct::parallel::{default_threads, ExecPolicy, ShardPolicy};
+use mddct::util::rng::Rng;
+
+fn main() {
+    let cfg = BenchConfig::from_env(BenchConfig::default());
+    let quick = std::env::var("MDDCT_BENCH_QUICK").is_ok();
+    let sizes: &[usize] = if quick { &[48, 64] } else { &[48, 64, 96, 128] };
+    let nslabs = default_threads().max(2);
+    println!(
+        "\nSlab-sharded fused 3D DCT: 1 slab band vs {nslabs} slab bands \
+         (serial exec, shard policy drives the fan-out)\n"
+    );
+
+    let slabs_hdr = format!("{nslabs} slabs ms");
+    let mut t = Table::new(&["n (n^3 volume)", "1 slab ms", slabs_hdr.as_str(), "speedup"]);
+    let mut json_rows: Vec<String> = Vec::new();
+
+    for &n in sizes {
+        let mut rng = Rng::new(n as u64 + 177);
+        let x = rng.normal_vec(n * n * n);
+        let mut out = vec![0.0; n * n * n];
+
+        let single = Dct3d::with_policy(n, n, n, ExecPolicy::Serial)
+            .with_shards(ShardPolicy::MaxShards(1));
+        let one = time_fn(&cfg, || {
+            single.forward(&x, &mut out);
+            black_box(&out);
+        })
+        .mean;
+        // keep the 1-band output around as the correctness reference
+        let want = out.clone();
+
+        let banded = Dct3d::with_policy(n, n, n, ExecPolicy::Serial)
+            .with_shards(ShardPolicy::MaxShards(nslabs));
+        let many = time_fn(&cfg, || {
+            banded.forward(&x, &mut out);
+            black_box(&out);
+        })
+        .mean;
+
+        // sharded output must match the single-band plan to <= 1e-10
+        // (relative to the output scale)
+        let scale = want.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+        let maxdiff = out
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(
+            maxdiff <= 1e-10 * scale,
+            "sharded dct3d diverged at n={n}: max diff {maxdiff:e}"
+        );
+
+        let speedup = one / many;
+        t.row(&[
+            format!("{n}^3"),
+            ms(one),
+            ms(many),
+            format!("{speedup:.2}x"),
+        ]);
+        json_rows.push(format!(
+            "{{\"n\": {n}, \"slabs_1_ms\": {:.6}, \"slabs_{nslabs}_ms\": {:.6}, \
+             \"speedup\": {speedup:.4}}}",
+            one * 1e3,
+            many * 1e3
+        ));
+    }
+
+    t.print();
+
+    let path = std::env::var("MDDCT_BENCH_VOLUME3D_JSON")
+        .unwrap_or_else(|_| "BENCH_volume3d.json".to_string());
+    let doc = format!(
+        "{{\n  \"bench\": \"volume3d\",\n  \"slabs\": {nslabs},\n  \
+         \"exec\": \"serial\",\n  \"unit\": \"forward_ms\",\n  \"rows\": [\n    {}\n  ]\n}}\n",
+        json_rows.join(",\n    ")
+    );
+    match std::fs::write(&path, &doc) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -18,7 +18,7 @@ use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
 
 use super::request::{PlanKey, Request, Response};
-use super::shard::SHARD_MIN_NUMEL;
+use super::shard::{shard_min_numel, shard_min_numel_3d};
 
 /// A queued request plus its reply channel and enqueue timestamp.
 pub struct Pending {
@@ -47,7 +47,11 @@ pub struct BatchPolicy {
     pub max_wait: Duration,
     /// payload size (elements) at which a request skips the co-batching
     /// wait and its key flushes immediately (the band-sharding fast
-    /// path; defaults to [`SHARD_MIN_NUMEL`])
+    /// path; defaults to the effective 2D force-shard gate,
+    /// [`shard_min_numel`], env override included). Rank-3 requests
+    /// additionally flush solo at their own gate
+    /// ([`shard_min_numel_3d`]), so lowering the 3D gate never disables
+    /// co-batching for unrelated 2D/1D traffic.
     pub solo_numel: usize,
 }
 
@@ -56,7 +60,7 @@ impl Default for BatchPolicy {
         BatchPolicy {
             max_batch: 16,
             max_wait: Duration::from_micros(200),
-            solo_numel: SHARD_MIN_NUMEL,
+            solo_numel: shard_min_numel(),
         }
     }
 }
@@ -79,7 +83,12 @@ pub fn run_batcher(rx: Receiver<Pending>, tx: Sender<Batch>, policy: BatchPolicy
         match rx.recv_timeout(timeout) {
             Ok(p) => {
                 let key = p.request.key();
-                let solo = p.request.data.len() >= policy.solo_numel;
+                let numel = p.request.data.len();
+                // a request big enough to band-shard gains nothing from
+                // co-batching: flush at the configured threshold, or at
+                // the 3D force-shard gate for rank-3 ops
+                let solo = numel >= policy.solo_numel
+                    || (p.request.op.rank() == 3 && numel >= shard_min_numel_3d());
                 if oldest.is_none() {
                     oldest = Some(p.enqueued);
                 }
@@ -196,6 +205,39 @@ mod tests {
         let b = batch_rx.recv_timeout(Duration::from_secs(1)).unwrap();
         assert_eq!(b.items.len(), 1);
         assert_eq!(b.key.shape, vec![256, 256]);
+        drop(req_tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn large_3d_request_skips_the_cobatching_wait() {
+        let (req_tx, req_rx) = channel();
+        let (batch_tx, batch_rx) = channel();
+        let policy = BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_secs(10),
+            solo_numel: 256 * 256,
+        };
+        let h = std::thread::spawn(move || run_batcher(req_rx, batch_tx, policy));
+        // a shard-gate-sized 3D volume must flush immediately as well
+        let (reply, _rx) = channel();
+        let shape = vec![64usize, 64, 64];
+        let numel: usize = shape.iter().product();
+        req_tx
+            .send(Pending {
+                request: Request {
+                    id: 1,
+                    op: TransformOp::Dct3d,
+                    shape: shape.clone(),
+                    data: vec![0.0; numel],
+                },
+                reply,
+                enqueued: Instant::now(),
+            })
+            .unwrap();
+        let b = batch_rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(b.items.len(), 1);
+        assert_eq!(b.key.shape, shape);
         drop(req_tx);
         h.join().unwrap();
     }

@@ -1,5 +1,7 @@
 //! Service metrics: per-op counters, latency histograms, batch sizes,
-//! and band-shard fan-out.
+//! and band-shard fan-out — the latter broken down by transform
+//! dimensionality too, so dashboards can tell the 2D row-band path and
+//! the 3D slab path apart.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -19,10 +21,26 @@ struct OpMetrics {
     bands_max: usize,
 }
 
+/// Shard fan-out aggregated per transform rank (1D/2D/3D), across ops.
+#[derive(Debug, Default, Clone, Copy)]
+struct RankMetrics {
+    requests: u64,
+    sharded: u64,
+    bands_max: usize,
+}
+
+/// Both metric tables behind one lock, so a snapshot always sees the
+/// per-op and per-rank aggregates in agreement.
+#[derive(Default)]
+struct Tables {
+    ops: BTreeMap<String, OpMetrics>,
+    by_rank: BTreeMap<usize, RankMetrics>,
+}
+
 /// Thread-safe metrics registry.
 #[derive(Default)]
 pub struct Metrics {
-    inner: Mutex<BTreeMap<String, OpMetrics>>,
+    inner: Mutex<Tables>,
 }
 
 impl Metrics {
@@ -31,13 +49,14 @@ impl Metrics {
         Metrics::default()
     }
 
-    /// Record one completed request: its queue+execute latency, the size
-    /// of the batch it shared, and the band work items an explicit shard
-    /// policy split it into (1 = unsharded; `Auto` lane fan-out is not
-    /// reported as sharding).
-    pub fn record(&self, op: &str, latency: f64, batch: usize, bands: usize) {
-        let mut m = self.inner.lock().unwrap();
-        let e = m.entry(op.to_string()).or_default();
+    /// Record one completed request: its transform rank (1/2/3 — the
+    /// dimensionality bucket for the shard breakdown), queue+execute
+    /// latency, the size of the batch it shared, and the band work items
+    /// an explicit shard policy split it into (1 = unsharded; `Auto`
+    /// lane fan-out is not reported as sharding).
+    pub fn record(&self, op: &str, rank: usize, latency: f64, batch: usize, bands: usize) {
+        let mut t = self.inner.lock().unwrap();
+        let e = t.ops.entry(op.to_string()).or_default();
         e.requests += 1;
         e.latency.record(latency);
         e.batch_sum += batch as u64;
@@ -46,24 +65,34 @@ impl Metrics {
             e.sharded += 1;
         }
         e.bands_max = e.bands_max.max(bands);
+        let r = t.by_rank.entry(rank).or_default();
+        r.requests += 1;
+        if bands > 1 {
+            r.sharded += 1;
+        }
+        r.bands_max = r.bands_max.max(bands);
     }
 
     /// Record one failed request.
     pub fn record_error(&self, op: &str) {
-        let mut m = self.inner.lock().unwrap();
-        m.entry(op.to_string()).or_default().errors += 1;
+        let mut t = self.inner.lock().unwrap();
+        t.ops.entry(op.to_string()).or_default().errors += 1;
     }
 
     /// Total successful requests across all ops.
     pub fn total_requests(&self) -> u64 {
-        self.inner.lock().unwrap().values().map(|e| e.requests).sum()
+        self.inner.lock().unwrap().ops.values().map(|e| e.requests).sum()
     }
 
-    /// JSON snapshot (dumped by the CLI's `metrics` output).
+    /// JSON snapshot (dumped by the CLI's `metrics` output): one object
+    /// per op, plus a reserved `_sharding_by_rank` object keyed `"1d"` /
+    /// `"2d"` / `"3d"` aggregating shard fan-out per dimensionality (op
+    /// names are lower-case identifiers, so the `_` prefix cannot
+    /// collide).
     pub fn snapshot(&self) -> Json {
-        let m = self.inner.lock().unwrap();
+        let t = self.inner.lock().unwrap();
         let mut root = BTreeMap::new();
-        for (op, e) in m.iter() {
+        for (op, e) in t.ops.iter() {
             let mut o = BTreeMap::new();
             o.insert("requests".into(), Json::Num(e.requests as f64));
             o.insert("errors".into(), Json::Num(e.errors as f64));
@@ -82,6 +111,17 @@ impl Metrics {
             o.insert("max_bands".into(), Json::Num(e.bands_max as f64));
             root.insert(op.clone(), Json::Obj(o));
         }
+        if !t.by_rank.is_empty() {
+            let mut ranks = BTreeMap::new();
+            for (rank, e) in t.by_rank.iter() {
+                let mut o = BTreeMap::new();
+                o.insert("requests".into(), Json::Num(e.requests as f64));
+                o.insert("sharded_requests".into(), Json::Num(e.sharded as f64));
+                o.insert("max_bands".into(), Json::Num(e.bands_max as f64));
+                ranks.insert(format!("{rank}d"), Json::Obj(o));
+            }
+            root.insert("_sharding_by_rank".into(), Json::Obj(ranks));
+        }
         Json::Obj(root)
     }
 }
@@ -93,8 +133,8 @@ mod tests {
     #[test]
     fn records_and_snapshots() {
         let m = Metrics::new();
-        m.record("dct2d", 0.001, 4, 1);
-        m.record("dct2d", 0.003, 2, 6);
+        m.record("dct2d", 2, 0.001, 4, 1);
+        m.record("dct2d", 2, 0.003, 2, 6);
         m.record_error("idct2d");
         assert_eq!(m.total_requests(), 2);
         let snap = m.snapshot();
@@ -108,5 +148,28 @@ mod tests {
             snap.get("idct2d").unwrap().get("errors").unwrap().as_f64().unwrap(),
             1.0
         );
+    }
+
+    #[test]
+    fn shard_fanout_breaks_down_by_rank() {
+        let m = Metrics::new();
+        // 2D traffic: one sharded (4 bands), one not
+        m.record("dct2d", 2, 0.001, 1, 4);
+        m.record("idct2d", 2, 0.001, 1, 1);
+        // 3D traffic: both ops sharded (8 slabs is the max)
+        m.record("dct3d", 3, 0.010, 1, 8);
+        m.record("idct3d", 3, 0.010, 1, 5);
+        let snap = m.snapshot();
+        let by_rank = snap.get("_sharding_by_rank").unwrap();
+        let d2 = by_rank.get("2d").unwrap();
+        assert_eq!(d2.get("requests").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(d2.get("sharded_requests").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(d2.get("max_bands").unwrap().as_f64().unwrap(), 4.0);
+        let d3 = by_rank.get("3d").unwrap();
+        assert_eq!(d3.get("requests").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(d3.get("sharded_requests").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(d3.get("max_bands").unwrap().as_f64().unwrap(), 8.0);
+        // no 1D traffic recorded -> no 1d bucket
+        assert!(by_rank.get("1d").is_none());
     }
 }

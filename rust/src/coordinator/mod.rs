@@ -35,4 +35,7 @@ pub use plan_cache::{NativePlan, PlanCache};
 pub use request::{PlanKey, Request, Response, TransformOp};
 pub use router::{BackendPolicy, Route, Router};
 pub use service::{default_workers, Handle, Service, ServiceConfig};
-pub use shard::{ShardPlan, ShardPolicy, SHARD_MIN_NUMEL};
+pub use shard::{
+    shard_min_numel, shard_min_numel_3d, ShardPlan, ShardPolicy, SHARD_MIN_NUMEL,
+    SHARD_MIN_NUMEL_3D,
+};

@@ -8,7 +8,10 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, RwLock};
 
-use crate::dct::{Combo, Dct1d, Dct2, Dct3d, Dst2, Idct1d, Idct2, Idst2, Idxst1d, IdxstCombo, RowColumn};
+use crate::dct::{
+    Combo, Dct1d, Dct2, Dct3d, Dst2, Idct1d, Idct2, Idct3d, Idst2, Idxst1d, IdxstCombo,
+    RowColumn,
+};
 use crate::parallel::{ExecPolicy, ShardPolicy};
 
 use super::request::{PlanKey, TransformOp};
@@ -34,6 +37,8 @@ pub enum NativePlan {
     Combo(IdxstCombo),
     /// Fused 3D DCT.
     Dct3(Dct3d),
+    /// Fused 3D IDCT.
+    Idct3(Idct3d),
     /// Fused 2D DST-II.
     Dst2(Dst2),
     /// Fused 2D inverse DST.
@@ -47,9 +52,9 @@ impl NativePlan {
     }
 
     /// Build the plan for a key, threading `policy` into the plans that
-    /// have parallel stages and `shards` into the fused 2D plans whose
-    /// banded stages support explicit shard counts (the row-column
-    /// baseline, 1D, and 3D plans fan out by exec lanes only). Panics on
+    /// have parallel stages and `shards` into the fused 2D and 3D plans
+    /// whose banded stages support explicit shard counts (the row-column
+    /// baseline and 1D plans fan out by exec lanes only). Panics on
     /// rank mismatch (validated upstream by `Request::validate`).
     pub fn build_with(key: &PlanKey, policy: ExecPolicy, shards: ShardPolicy) -> NativePlan {
         let s = &key.shape;
@@ -77,9 +82,12 @@ impl NativePlan {
                 IdxstCombo::with_policy(s[0], s[1], Combo::IdxstIdct, policy)
                     .with_shards(shards),
             ),
-            TransformOp::Dct3d => {
-                NativePlan::Dct3(Dct3d::with_policy(s[0], s[1], s[2], policy))
-            }
+            TransformOp::Dct3d => NativePlan::Dct3(
+                Dct3d::with_policy(s[0], s[1], s[2], policy).with_shards(shards),
+            ),
+            TransformOp::Idct3d => NativePlan::Idct3(
+                Idct3d::with_policy(s[0], s[1], s[2], policy).with_shards(shards),
+            ),
             TransformOp::Dst2d => {
                 NativePlan::Dst2(Dst2::with_policy(s[0], s[1], policy).with_shards(shards))
             }
@@ -101,6 +109,7 @@ impl NativePlan {
             NativePlan::Idxst1(p) => p.forward(data, &mut out),
             NativePlan::Combo(p) => p.forward(data, &mut out),
             NativePlan::Dct3(p) => p.forward(data, &mut out),
+            NativePlan::Idct3(p) => p.forward(data, &mut out),
             NativePlan::Dst2(p) => p.forward(data, &mut out),
             NativePlan::Idst2(p) => p.forward(data, &mut out),
         }
@@ -279,5 +288,10 @@ mod tests {
         let x3 = rng.normal_vec(4 * 4 * 4);
         let y = cache.get(&key(TransformOp::Dct3d, &[4, 4, 4])).execute(&x3);
         assert!(y.iter().all(|v| v.is_finite()));
+        // the 3D inverse undoes the 3D forward through the cache
+        let back = cache.get(&key(TransformOp::Idct3d, &[4, 4, 4])).execute(&y);
+        for (a, b) in back.iter().zip(&x3) {
+            assert!((a - b).abs() < 1e-9, "idct3d(dct3d(x)) != x");
+        }
     }
 }

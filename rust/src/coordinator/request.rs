@@ -25,6 +25,8 @@ pub enum TransformOp {
     IdxstIdct,
     /// Fused 3D DCT
     Dct3d,
+    /// Fused 3D IDCT
+    Idct3d,
     /// Fused 2D DST-II (DST family via folds, §III-D extensibility)
     Dst2d,
     /// Fused 2D inverse DST
@@ -36,14 +38,15 @@ impl TransformOp {
     pub fn rank(self) -> usize {
         match self {
             TransformOp::Dct1d(_) | TransformOp::Idct1d | TransformOp::Idxst1d => 1,
-            TransformOp::Dct3d => 3,
+            TransformOp::Dct3d | TransformOp::Idct3d => 3,
             _ => 2,
         }
     }
 
     /// Whether this op's native plan honors an explicit band-shard
     /// policy: the fused 2D family threads `ShardPolicy` through its
-    /// banded stages; the row-column baseline, 1D, and 3D plans fan out
+    /// row-banded stages, and the fused 3D pair through its dim-0
+    /// slab-banded stages; the row-column baseline and 1D plans fan out
     /// by exec lanes only (see `coordinator::shard`).
     pub fn supports_sharding(self) -> bool {
         matches!(
@@ -54,6 +57,8 @@ impl TransformOp {
                 | TransformOp::IdxstIdct
                 | TransformOp::Dst2d
                 | TransformOp::Idst2d
+                | TransformOp::Dct3d
+                | TransformOp::Idct3d
         )
     }
 
@@ -73,7 +78,7 @@ impl TransformOp {
             TransformOp::IdxstIdct => Some("idxst_idct_"),
             TransformOp::Dst2d => Some("dst2d_"),
             TransformOp::Idst2d => Some("idst2d_"),
-            TransformOp::Idxst1d | TransformOp::Dct3d => None,
+            TransformOp::Idxst1d | TransformOp::Dct3d | TransformOp::Idct3d => None,
         }
     }
 
@@ -97,6 +102,7 @@ impl TransformOp {
             TransformOp::IdctIdxst => "idct_idxst".into(),
             TransformOp::IdxstIdct => "idxst_idct".into(),
             TransformOp::Dct3d => "dct3d".into(),
+            TransformOp::Idct3d => "idct3d".into(),
             TransformOp::Dst2d => "dst2d".into(),
             TransformOp::Idst2d => "idst2d".into(),
         }
@@ -181,16 +187,18 @@ mod tests {
         assert_eq!(TransformOp::Dct2d.rank(), 2);
         assert_eq!(TransformOp::Idct1d.rank(), 1);
         assert_eq!(TransformOp::Dct3d.rank(), 3);
+        assert_eq!(TransformOp::Idct3d.rank(), 3);
     }
 
     #[test]
-    fn sharding_support_is_the_fused_2d_family() {
+    fn sharding_support_covers_the_fused_2d_and_3d_families() {
         assert!(TransformOp::Dct2d.supports_sharding());
         assert!(TransformOp::Idct2d.supports_sharding());
         assert!(TransformOp::IdxstIdct.supports_sharding());
         assert!(TransformOp::Dst2d.supports_sharding());
+        assert!(TransformOp::Dct3d.supports_sharding());
+        assert!(TransformOp::Idct3d.supports_sharding());
         assert!(!TransformOp::RcDct2d.supports_sharding());
-        assert!(!TransformOp::Dct3d.supports_sharding());
         assert!(!TransformOp::Idct1d.supports_sharding());
     }
 

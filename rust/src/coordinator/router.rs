@@ -182,6 +182,13 @@ mod tests {
         // small request: decide() keeps it unsharded
         let small = PlanKey { op: TransformOp::Dct2d, shape: vec![16, 16] };
         assert_eq!(r.shard_plan(&small).band_count(), 1);
+        // large 3D request: sharded into 4 dim-0 slab bands
+        let big3 = PlanKey { op: TransformOp::Dct3d, shape: vec![64, 64, 64] };
+        assert_eq!(r.shard_plan(&big3).band_count(), 4);
+        assert_eq!(r.shard_bands(&big3), 4);
+        // small 3D request: below the 3D gate, unsharded
+        let small3 = PlanKey { op: TransformOp::Idct3d, shape: vec![16, 16, 16] };
+        assert_eq!(r.shard_plan(&small3).band_count(), 1);
         // sharded execution still produces correct output
         let mut rng = Rng::new(91);
         let x = rng.normal_vec(16 * 16);

@@ -41,9 +41,10 @@ pub struct ServiceConfig {
     /// router (the transform stages run on the shared process pool).
     pub exec: ExecPolicy,
     /// Band-shard policy for large native requests (applied per request
-    /// through [`super::shard::decide`]; small requests never
-    /// force-shard). Defaults to the `MDDCT_SHARD_MIN_ROWS` /
-    /// `MDDCT_MAX_SHARDS` env knobs, else `Auto`.
+    /// through [`super::shard::decide`], which gates 2D and 3D requests
+    /// on their own numel thresholds; small requests never force-shard).
+    /// Defaults to the `MDDCT_SHARD_MIN_ROWS` / `MDDCT_MAX_SHARDS` env
+    /// knobs, else `Auto`.
     pub shard: ShardPolicy,
 }
 
@@ -213,6 +214,7 @@ fn worker_loop(
         };
         let n = batch.items.len();
         let op_name = batch.key.op.name();
+        let rank = batch.key.op.rank();
         // explicit shard fan-out of this batch (1 = unsharded; plain
         // Auto lane parallelism is not counted as sharding); recorded
         // so operators can see the shard feature actually engage.
@@ -233,7 +235,7 @@ fn worker_loop(
             let latency = t0.elapsed().as_secs_f64();
             let response = match result {
                 Ok((output, route)) => {
-                    metrics.record(&op_name, latency, n, bands);
+                    metrics.record(&op_name, rank, latency, n, bands);
                     Ok(Response {
                         id: pending.request.id,
                         output,

@@ -19,7 +19,8 @@
 //!
 //! ```text
 //!   request (op, shape, data)
-//!        │  decide(): fused-2D op and numel >= SHARD_MIN_NUMEL
+//!        │  decide(): fused-2D/3D op and numel >= its rank's gate
+//!        │            (SHARD_MIN_NUMEL / SHARD_MIN_NUMEL_3D)
 //!        │            ? service policy : Auto
 //!        ▼
 //!   plan built with ShardPolicy      (PlanCache::get, per (op, shape))
@@ -41,6 +42,13 @@
 //!   response (output, backend, latency, bands recorded in metrics)
 //! ```
 //!
+//! 3D requests run the same lifecycle with the dim-0 **i-slab** as the
+//! band unit: the n3-axis row-FFT batch bands over all `n1*n2` rows,
+//! the n2-axis column FFTs are slab-local work items, and the n1-axis
+//! stage re-bands over the `n2*h3` transposed rows across the
+//! dim-1/dim-2 barrier (see [`crate::fft::Rfft3Plan`] and
+//! [`crate::dct::Dct3d::with_shards`]).
+//!
 //! Because every shard is just a scoped job on the one process-wide
 //! pool, a sharded large request and a batch of small requests
 //! co-schedule automatically: the pool drains work items from both, and
@@ -56,27 +64,58 @@
 //! bit-equal for a fixed FFT kernel (see `tests/prop_parallel.rs`).
 
 use std::ops::Range;
+use std::sync::OnceLock;
 
-use crate::parallel::band_spans;
+use crate::parallel::{band_spans, policy::env_usize, slab_spans};
 pub use crate::parallel::ShardPolicy;
 
 use super::request::PlanKey;
 
-/// Element count below which the service never force-shards a request:
-/// a 256x256 fused DCT runs in well under a millisecond, so splitting
-/// it into bands buys nothing and costs fork/join traffic. Requests at
-/// or above the threshold inherit the service's configured policy.
+/// Element count below which the service never force-shards a 2D (or
+/// 1D) request: a 256x256 fused DCT runs in well under a millisecond,
+/// so splitting it into bands buys nothing and costs fork/join traffic.
+/// Requests at or above the threshold inherit the service's configured
+/// policy. Override per process with `MDDCT_SHARD_MIN_NUMEL`.
 pub const SHARD_MIN_NUMEL: usize = 256 * 256;
+
+/// Element count below which the service never force-shards a 3D
+/// request. 3D requests carry more work per leading-dimension row (a
+/// whole n2 x n3 slab), so the gate sits higher than the 2D one: a
+/// 64^3 fused DCT is the smallest volume where slab fan-out beats its
+/// fork/join cost. Override per process with
+/// `MDDCT_SHARD_MIN_NUMEL_3D`.
+pub const SHARD_MIN_NUMEL_3D: usize = 64 * 64 * 64;
+
+/// Effective 2D force-shard gate: `MDDCT_SHARD_MIN_NUMEL` env override,
+/// else [`SHARD_MIN_NUMEL`]. Resolved once per process.
+pub fn shard_min_numel() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| env_usize("MDDCT_SHARD_MIN_NUMEL").unwrap_or(SHARD_MIN_NUMEL))
+}
+
+/// Effective 3D force-shard gate: `MDDCT_SHARD_MIN_NUMEL_3D` env
+/// override, else [`SHARD_MIN_NUMEL_3D`]. Resolved once per process.
+pub fn shard_min_numel_3d() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| env_usize("MDDCT_SHARD_MIN_NUMEL_3D").unwrap_or(SHARD_MIN_NUMEL_3D))
+}
 
 /// Effective shard policy for one request: small requests and ops
 /// whose plans do not honor explicit band counts (see
 /// [`super::request::TransformOp::supports_sharding`]) stay on
 /// [`ShardPolicy::Auto`] — their plans fan out only as far as their
-/// [`crate::parallel::ExecPolicy`] allows; large fused-2D requests get
-/// the service's configured policy.
+/// [`crate::parallel::ExecPolicy`] allows; large fused-2D/3D requests
+/// get the service's configured policy. The numel gate is
+/// per-dimensionality: rank-3 ops gate on [`shard_min_numel_3d`],
+/// everything else on [`shard_min_numel`].
 pub fn decide(service: ShardPolicy, key: &PlanKey) -> ShardPolicy {
     let numel: usize = key.shape.iter().product();
-    if !key.op.supports_sharding() || numel < SHARD_MIN_NUMEL {
+    let gate = if key.op.rank() == 3 {
+        shard_min_numel_3d()
+    } else {
+        shard_min_numel()
+    };
+    if !key.op.supports_sharding() || numel < gate {
         ShardPolicy::Auto
     } else {
         service
@@ -87,7 +126,7 @@ pub fn decide(service: ShardPolicy, key: &PlanKey) -> ShardPolicy {
 /// materializing the spans: the work items a non-`Auto` effective
 /// policy pins, or 1 otherwise. `Auto` deliberately reports 1 — its
 /// exec-lane fan-out is lane parallelism, not sharding, and ops outside
-/// the fused-2D family never shard at all — so a default-config service
+/// the fused-2D/3D families never shard at all — so a default-config service
 /// does not report every large request as sharded. Equals
 /// `ShardPlan::for_request(..).band_count()`; recorded in the service
 /// metrics per batch.
@@ -103,7 +142,8 @@ pub fn band_count_for(key: &PlanKey, service: ShardPolicy) -> usize {
 }
 
 /// The explicit stage-1 band decomposition of one request: which
-/// contiguous runs of leading-dimension rows become independent pool
+/// contiguous runs of leading-dimension rows (dim-0 slabs for rank-3
+/// requests) become independent pool
 /// work items. A single band covering all rows means the request is not
 /// explicitly sharded (it may still fan out over exec lanes inside its
 /// plan). Used by the service for metrics (band counts per op) and
@@ -121,11 +161,18 @@ pub struct ShardPlan {
 }
 
 impl ShardPlan {
-    /// Band decomposition for `key` under the service's shard policy.
+    /// Band decomposition for `key` under the service's shard policy
+    /// (rank-3 keys decompose into dim-0 slab spans — the same math,
+    /// via [`crate::parallel::slab_spans`]).
     pub fn for_request(key: &PlanKey, service: ShardPolicy) -> ShardPlan {
         let rows = key.shape.first().copied().unwrap_or(1);
         let n = band_count_for(key, service);
-        ShardPlan { policy: decide(service, key), rows, bands: band_spans(rows, n) }
+        let bands = if key.op.rank() == 3 {
+            slab_spans(rows, n)
+        } else {
+            band_spans(rows, n)
+        };
+        ShardPlan { policy: decide(service, key), rows, bands }
     }
 
     /// Number of shard work items (1 = unsharded).
@@ -163,17 +210,36 @@ mod tests {
             decide(policy, &key(TransformOp::RcDct2d, &[1024, 1024])),
             ShardPolicy::Auto
         );
-        assert_eq!(
-            decide(policy, &key(TransformOp::Dct3d, &[128, 128, 128])),
-            ShardPolicy::Auto
-        );
         // small 2D: below SHARD_MIN_NUMEL
         assert_eq!(decide(policy, &key(TransformOp::Dct2d, &[64, 64])), ShardPolicy::Auto);
+        // small 3D: below the (higher) SHARD_MIN_NUMEL_3D gate, even
+        // though its numel would pass the 2D gate
+        assert_eq!(
+            decide(policy, &key(TransformOp::Dct3d, &[32, 64, 64])),
+            ShardPolicy::Auto
+        );
         // large fused 2D: service policy applies
         assert_eq!(decide(policy, &key(TransformOp::Dct2d, &[1024, 1024])), policy);
         assert_eq!(decide(policy, &key(TransformOp::Idst2d, &[1024, 1024])), policy);
-        // exactly at the threshold counts as large
+        // large fused 3D: the slab-sharded plans take the policy too
+        assert_eq!(decide(policy, &key(TransformOp::Dct3d, &[128, 128, 128])), policy);
+        assert_eq!(decide(policy, &key(TransformOp::Idct3d, &[128, 128, 128])), policy);
+        // exactly at the per-rank thresholds counts as large
         assert_eq!(decide(policy, &key(TransformOp::Dct2d, &[256, 256])), policy);
+        assert_eq!(decide(policy, &key(TransformOp::Dct3d, &[64, 64, 64])), policy);
+    }
+
+    #[test]
+    fn per_rank_gates_default_to_their_consts() {
+        // skip the assertions when the env knobs are set (the OnceLock
+        // pins whatever the process saw first); the default path is
+        // what this test pins down
+        if std::env::var("MDDCT_SHARD_MIN_NUMEL").is_err() {
+            assert_eq!(shard_min_numel(), SHARD_MIN_NUMEL);
+        }
+        if std::env::var("MDDCT_SHARD_MIN_NUMEL_3D").is_err() {
+            assert_eq!(shard_min_numel_3d(), SHARD_MIN_NUMEL_3D);
+        }
     }
 
     #[test]
@@ -201,6 +267,8 @@ mod tests {
             (TransformOp::Dct2d, vec![32, 32], ShardPolicy::MaxShards(8)),
             (TransformOp::Idst2d, vec![512, 512], ShardPolicy::MinRowsPerShard(100)),
             (TransformOp::RcDct2d, vec![1024, 1024], ShardPolicy::MaxShards(4)),
+            (TransformOp::Dct3d, vec![128, 64, 64], ShardPolicy::MaxShards(6)),
+            (TransformOp::Idct3d, vec![32, 32, 32], ShardPolicy::MaxShards(6)),
         ] {
             let k = key(op, &shape);
             assert_eq!(
@@ -257,5 +325,22 @@ mod tests {
         let ks = key(TransformOp::Dct2d, &[8, 8]);
         check_close(&sharded.get(&ks).execute(&small), &dct2d_direct(&small, 8, 8), 1e-9)
             .unwrap();
+    }
+
+    #[test]
+    fn sharded_3d_plan_cache_output_matches_serial() {
+        // the 3D analogue of the 2D cache test: a >= gate volume through
+        // a slab-sharded cache must match the serial cache to <= 1e-10
+        let mut rng = Rng::new(96);
+        let (n1, n2, n3) = (65usize, 64usize, 64usize); // above the 3D gate, odd slabs
+        let x = rng.normal_vec(n1 * n2 * n3);
+        let serial = PlanCache::with_policy(ExecPolicy::Serial);
+        let sharded = PlanCache::with_policies(ExecPolicy::Serial, ShardPolicy::MaxShards(5));
+        for op in [TransformOp::Dct3d, TransformOp::Idct3d] {
+            let k = key(op, &[n1, n2, n3]);
+            let a = serial.get(&k).execute(&x);
+            let b = sharded.get(&k).execute(&x);
+            check_close(&b, &a, 1e-10).unwrap_or_else(|e| panic!("{op:?}: {e}"));
+        }
     }
 }

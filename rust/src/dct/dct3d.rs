@@ -1,8 +1,8 @@
-//! Fused 3D DCT via 3D RFFT — the paper's §III-D extension ("our method
-//! in 2D transforms can be naturally extended to 3D transforms").
+//! Fused 3D DCT / IDCT via 3D RFFT — the paper's §III-D extension ("our
+//! method in 2D transforms can be naturally extended to 3D transforms").
 //!
-//! Postprocess derivation (validated against the separable direct
-//! oracle): with V the 3D FFT of the per-axis butterfly reorder,
+//! Forward postprocess derivation (validated against the separable
+//! direct oracle): with V the 3D FFT of the per-axis butterfly reorder,
 //! m_i = (N_i - k_i) % N_i and twiddles a/b/c for axes 1/2/3,
 //!
 //!   X(k1,k2,k3) = 2 Re( a [  b c  V(k1,k2,k3)
@@ -13,29 +13,47 @@
 //! i.e. each output reads 4 spectrum entries — matching the paper's "each
 //! thread reads 4 elements from the input tensor" description of the 3D
 //! postprocess (8 outputs per read-group in the paired form).
+//!
+//! The inverse ([`Idct3d`]) is the corrected Eq. 15 lifted one dimension
+//! up (the tensor product of the 1D spectrum-build operator along all
+//! three axes): each onesided spectrum entry reads the 8 mirrored
+//! coefficients (zero boundaries) and combines them with one triple
+//! twiddle, then a normalized inverse 3D RFFT and the Eq. 16 unreorder
+//! finish the pipeline.
+//!
+//! Both plans carry an [`ExecPolicy`] *and*, via `with_shards`, a
+//! [`ShardPolicy`]: the dim-0 **i-slab** is the band-shard unit of every
+//! stage (the inner [`Rfft3Plan`] re-bands across its dim-1/dim-2
+//! transpose barrier), mirroring what the fused 2D plans do with row
+//! bands. See `coordinator::shard` for how the service drives this.
 
 use std::sync::Arc;
 
-use crate::fft::nd::rfft3_threads;
-use crate::fft::{onesided_len, C64};
-use crate::parallel::{par_chunks_mut, ExecPolicy};
+use crate::fft::{onesided_len, C64, Rfft3Plan};
+use crate::parallel::{par_chunks_mut, ExecPolicy, ShardPolicy};
 
-use super::reorder::src_index_1d;
+use super::reorder::{dst_index_1d, src_index_1d};
 use super::twiddle::{twiddle, Twiddle};
 
 /// Fused 3D DCT plan.
 #[derive(Debug, Clone)]
 pub struct Dct3d {
+    /// Leading (slab) dimension.
     pub n1: usize,
+    /// Middle dimension.
     pub n2: usize,
+    /// Innermost dimension.
     pub n3: usize,
+    rfft3: Rfft3Plan,
     tw1: Arc<Twiddle>,
     tw2: Arc<Twiddle>,
     tw3: Arc<Twiddle>,
     policy: ExecPolicy,
+    shards: ShardPolicy,
 }
 
 impl Dct3d {
+    /// Plan with the default (`Auto`) execution policy.
     pub fn new(n1: usize, n2: usize, n3: usize) -> Dct3d {
         Self::with_policy(n1, n2, n3, ExecPolicy::Auto)
     }
@@ -47,19 +65,40 @@ impl Dct3d {
             n1,
             n2,
             n3,
+            rfft3: Rfft3Plan::with_policy(n1, n2, n3, policy),
             tw1: twiddle(n1),
             tw2: twiddle(n2),
             tw3: twiddle(n3),
             policy,
+            shards: ShardPolicy::Auto,
         }
+    }
+
+    /// Same plan with an explicit band-shard policy (see
+    /// [`crate::dct::Dct2::with_shards`] for the 2D analogue): the
+    /// preprocess, the inner 3D RFFT's n2-axis stage, and the
+    /// postprocess all split into the dim-0 slab count
+    /// [`ShardPolicy::bands`] dictates, while the RFFT's row batch
+    /// bands over all `n1*n2` rows and its n1-axis stage re-bands
+    /// across the transpose barrier.
+    pub fn with_shards(mut self, shards: ShardPolicy) -> Dct3d {
+        self.shards = shards;
+        self.rfft3 = self.rfft3.with_shards(shards);
+        self
+    }
+
+    /// Slab work items for a stage of `rows` dim-0 slabs under this
+    /// plan's exec + shard policies.
+    fn bands(&self, rows: usize) -> usize {
+        self.shards.bands(rows, self.policy.lanes(self.n1 * self.n2 * self.n3))
     }
 
     /// Eq. (13) generalized: butterfly reorder along all three axes.
     /// Output slabs (fixed i) are independent, so they fan out.
     pub fn preprocess(&self, x: &[f64], out: &mut [f64]) {
         let (n1, n2, n3) = (self.n1, self.n2, self.n3);
-        let lanes = self.policy.lanes(n1 * n2 * n3);
-        par_chunks_mut(out, n2 * n3, lanes, |i, slab| {
+        let slabs = self.bands(n1);
+        par_chunks_mut(out, n2 * n3, slabs, |i, slab| {
             let si = src_index_1d(i, n1);
             for j in 0..n2 {
                 let sj = src_index_1d(j, n2);
@@ -77,19 +116,21 @@ impl Dct3d {
         let (n1, n2, n3) = (self.n1, self.n2, self.n3);
         assert_eq!(x.len(), n1 * n2 * n3);
         assert_eq!(out.len(), n1 * n2 * n3);
-        let lanes = self.policy.lanes(n1 * n2 * n3);
-        let mut pre = vec![0.0; n1 * n2 * n3];
+        let mut pre = crate::util::scratch::take_f64(n1 * n2 * n3);
         self.preprocess(x, &mut pre);
-        let spec = rfft3_threads(&pre, n1, n2, n3, lanes);
+        let mut spec = crate::util::scratch::take_c64(n1 * n2 * onesided_len(n3));
+        self.rfft3.forward(&pre, &mut spec);
         self.postprocess(&spec, out);
+        crate::util::scratch::give_f64(pre);
+        crate::util::scratch::give_c64(spec);
     }
 
     fn postprocess(&self, spec: &[C64], out: &mut [f64]) {
         let (n1, n2, n3) = (self.n1, self.n2, self.n3);
-        let lanes = self.policy.lanes(n1 * n2 * n3);
+        let slabs = self.bands(n1);
         // each output slab (fixed k1) only reads the spectrum, so slabs
         // fan out directly
-        par_chunks_mut(out, n2 * n3, lanes, |k1, slab| {
+        par_chunks_mut(out, n2 * n3, slabs, |k1, slab| {
             self.postprocess_slab(spec, k1, slab);
         });
     }
@@ -123,10 +164,153 @@ impl Dct3d {
     }
 }
 
+/// Fused 3D IDCT plan — exact inverse of [`Dct3d`] (the separable
+/// `idct3d_direct` oracle), computed as onesided spectrum build ->
+/// normalized inverse 3D RFFT -> per-axis unreorder.
+#[derive(Debug, Clone)]
+pub struct Idct3d {
+    /// Leading (slab) dimension.
+    pub n1: usize,
+    /// Middle dimension.
+    pub n2: usize,
+    /// Innermost dimension.
+    pub n3: usize,
+    h3: usize,
+    rfft3: Rfft3Plan,
+    tw1: Arc<Twiddle>,
+    tw2: Arc<Twiddle>,
+    tw3: Arc<Twiddle>,
+    policy: ExecPolicy,
+    shards: ShardPolicy,
+}
+
+impl Idct3d {
+    /// Plan with the default (`Auto`) execution policy.
+    pub fn new(n1: usize, n2: usize, n3: usize) -> Idct3d {
+        Self::with_policy(n1, n2, n3, ExecPolicy::Auto)
+    }
+
+    /// Plan with an explicit execution policy.
+    pub fn with_policy(n1: usize, n2: usize, n3: usize, policy: ExecPolicy) -> Idct3d {
+        Idct3d {
+            n1,
+            n2,
+            n3,
+            h3: onesided_len(n3),
+            rfft3: Rfft3Plan::with_policy(n1, n2, n3, policy),
+            tw1: twiddle(n1),
+            tw2: twiddle(n2),
+            tw3: twiddle(n3),
+            policy,
+            shards: ShardPolicy::Auto,
+        }
+    }
+
+    /// Same plan with an explicit band-shard policy (see
+    /// [`Dct3d::with_shards`]): spectrum-build slabs, the inner inverse
+    /// 3D RFFT's banded stages, and the unreorder slabs all follow it.
+    pub fn with_shards(mut self, shards: ShardPolicy) -> Idct3d {
+        self.shards = shards;
+        self.rfft3 = self.rfft3.with_shards(shards);
+        self
+    }
+
+    /// Slab work items for a stage of `rows` dim-0 slabs under this
+    /// plan's exec + shard policies.
+    fn bands(&self, rows: usize) -> usize {
+        self.shards.bands(rows, self.policy.lanes(self.n1 * self.n2 * self.n3))
+    }
+
+    /// Full fused 3D IDCT.
+    pub fn forward(&self, x: &[f64], out: &mut [f64]) {
+        let (n1, n2, n3) = (self.n1, self.n2, self.n3);
+        assert_eq!(x.len(), n1 * n2 * n3);
+        assert_eq!(out.len(), n1 * n2 * n3);
+        let mut spec = crate::util::scratch::take_c64(n1 * n2 * self.h3);
+        self.preprocess(x, &mut spec);
+        let mut v = crate::util::scratch::take_f64(n1 * n2 * n3);
+        self.rfft3.inverse(&spec, &mut v);
+        // Eq. 16 unreorder along all three axes, banded over dim-0 slabs
+        let slabs = self.bands(n1);
+        par_chunks_mut(out, n2 * n3, slabs, |i, slab| {
+            let si = dst_index_1d(i, n1);
+            for j in 0..n2 {
+                let sj = dst_index_1d(j, n2);
+                let src = &v[(si * n2 + sj) * n3..(si * n2 + sj + 1) * n3];
+                let dst = &mut slab[j * n3..(j + 1) * n3];
+                for (k, d) in dst.iter_mut().enumerate() {
+                    *d = src[dst_index_1d(k, n3)];
+                }
+            }
+        });
+        crate::util::scratch::give_c64(spec);
+        crate::util::scratch::give_f64(v);
+    }
+
+    /// Onesided spectrum build (corrected Eq. 15 along all three axes):
+    /// each entry reads the 8 mirrored coefficients with zero boundaries
+    /// and writes one complex value
+    ///
+    ///   V = conj(a) conj(b) conj(c) / 8 *
+    ///       ( (x000 - x110 - x101 - x011) + j (x111 - x100 - x010 - x001) )
+    ///
+    /// where the subscript marks which axes are mirrored (k_i -> N_i-k_i)
+    /// and any term whose mirrored axis sits at k_i = 0 is zero.
+    /// Spectrum slabs (fixed k1) only read input slabs k1 and N1-k1, so
+    /// they are independent and fan out.
+    pub fn preprocess(&self, x: &[f64], spec: &mut [C64]) {
+        let slabs = self.bands(self.n1);
+        par_chunks_mut(spec, self.n2 * self.h3, slabs, |k1, slab| {
+            self.preprocess_slab(x, k1, slab);
+        });
+    }
+
+    /// Build one onesided spectrum slab (the per-work-item kernel).
+    fn preprocess_slab(&self, x: &[f64], k1: usize, slab: &mut [C64]) {
+        let (n1, n2, n3, h3) = (self.n1, self.n2, self.n3, self.h3);
+        debug_assert_eq!(slab.len(), n2 * h3);
+        let xat = |i: usize, j: usize, k: usize| x[(i * n2 + j) * n3 + k];
+        let ac = self.tw1.conj_at(k1);
+        for k2 in 0..n2 {
+            let bc = self.tw2.conj_at(k2);
+            for k3 in 0..h3 {
+                let cc = self.tw3.conj_at(k3);
+                let x000 = xat(k1, k2, k3);
+                let x100 = if k1 > 0 { xat(n1 - k1, k2, k3) } else { 0.0 };
+                let x010 = if k2 > 0 { xat(k1, n2 - k2, k3) } else { 0.0 };
+                let x001 = if k3 > 0 { xat(k1, k2, n3 - k3) } else { 0.0 };
+                let x110 = if k1 > 0 && k2 > 0 {
+                    xat(n1 - k1, n2 - k2, k3)
+                } else {
+                    0.0
+                };
+                let x101 = if k1 > 0 && k3 > 0 {
+                    xat(n1 - k1, k2, n3 - k3)
+                } else {
+                    0.0
+                };
+                let x011 = if k2 > 0 && k3 > 0 {
+                    xat(k1, n2 - k2, n3 - k3)
+                } else {
+                    0.0
+                };
+                let x111 = if k1 > 0 && k2 > 0 && k3 > 0 {
+                    xat(n1 - k1, n2 - k2, n3 - k3)
+                } else {
+                    0.0
+                };
+                let t =
+                    C64::new(x000 - x110 - x101 - x011, x111 - (x100 + x010 + x001));
+                slab[k2 * h3 + k3] = (ac * bc * cc * t).scale(0.125);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dct::direct::dct3d_direct;
+    use crate::dct::direct::{dct3d_direct, idct3d_direct};
     use crate::util::prop::check_close;
     use crate::util::rng::Rng;
 
@@ -151,6 +335,39 @@ mod tests {
     }
 
     #[test]
+    fn idct3d_matches_direct_oracle() {
+        let mut rng = Rng::new(73);
+        for &(n1, n2, n3) in &[
+            (1usize, 1usize, 1usize),
+            (2, 2, 2),
+            (3, 4, 5),
+            (5, 2, 7),
+            (8, 8, 8),
+            (2, 3, 1),
+        ] {
+            let x = rng.normal_vec(n1 * n2 * n3);
+            let plan = Idct3d::new(n1, n2, n3);
+            let mut out = vec![0.0; x.len()];
+            plan.forward(&x, &mut out);
+            check_close(&out, &idct3d_direct(&x, n1, n2, n3), 1e-9)
+                .unwrap_or_else(|e| panic!("({n1},{n2},{n3}): {e}"));
+        }
+    }
+
+    #[test]
+    fn idct3d_inverts_dct3d() {
+        let mut rng = Rng::new(74);
+        for &(n1, n2, n3) in &[(4usize, 6usize, 8usize), (3, 5, 7), (8, 8, 8), (1, 9, 4)] {
+            let x = rng.normal_vec(n1 * n2 * n3);
+            let mut y = vec![0.0; x.len()];
+            Dct3d::new(n1, n2, n3).forward(&x, &mut y);
+            let mut back = vec![0.0; x.len()];
+            Idct3d::new(n1, n2, n3).forward(&y, &mut back);
+            check_close(&back, &x, 1e-9).unwrap_or_else(|e| panic!("({n1},{n2},{n3}): {e}"));
+        }
+    }
+
+    #[test]
     fn parallel_policy_is_bit_equal_to_serial() {
         use crate::parallel::ExecPolicy;
         let mut rng = Rng::new(72);
@@ -160,7 +377,29 @@ mod tests {
             let mut yp = vec![0.0; x.len()];
             Dct3d::with_policy(n1, n2, n3, ExecPolicy::Serial).forward(&x, &mut ys);
             Dct3d::with_policy(n1, n2, n3, ExecPolicy::Threads(3)).forward(&x, &mut yp);
-            assert_eq!(ys, yp, "({n1},{n2},{n3})");
+            assert_eq!(ys, yp, "dct3d ({n1},{n2},{n3})");
+            let mut bs = vec![0.0; x.len()];
+            let mut bp = vec![0.0; x.len()];
+            Idct3d::with_policy(n1, n2, n3, ExecPolicy::Serial).forward(&ys, &mut bs);
+            Idct3d::with_policy(n1, n2, n3, ExecPolicy::Threads(3)).forward(&yp, &mut bp);
+            assert_eq!(bs, bp, "idct3d ({n1},{n2},{n3})");
+        }
+    }
+
+    #[test]
+    fn sharded_plan_is_bit_equal_to_serial() {
+        let mut rng = Rng::new(75);
+        for &(n1, n2, n3) in &[(9usize, 6usize, 10usize), (5, 3, 7), (8, 8, 8)] {
+            let x = rng.normal_vec(n1 * n2 * n3);
+            let mut ys = vec![0.0; x.len()];
+            Dct3d::with_policy(n1, n2, n3, ExecPolicy::Serial).forward(&x, &mut ys);
+            for shards in [1usize, 2, 3, 7] {
+                let mut yp = vec![0.0; x.len()];
+                Dct3d::with_policy(n1, n2, n3, ExecPolicy::Serial)
+                    .with_shards(ShardPolicy::MaxShards(shards))
+                    .forward(&x, &mut yp);
+                assert_eq!(ys, yp, "dct3d ({n1},{n2},{n3}) shards={shards}");
+            }
         }
     }
 

@@ -9,7 +9,7 @@
 //! | Eq. 13/16 butterfly reorders, gather/scatter (§III-A) | [`reorder`] |
 //! | IDXST / IDCT_IDXST / IDXST_IDCT (§V-B) | [`idxst2d`] |
 //! | Row-column baseline (Fig. 5 left) | [`row_column`] |
-//! | 3D extension (§III-D) | [`dct3d`] |
+//! | 3D extension, forward + inverse (§III-D) | [`dct3d`] |
 //! | 4D via two rounds of 2D (§III-D) | [`dct4d`] |
 //! | DST family via folds (§III-D extensibility) | [`dst`] |
 //! | Direct O(N^2) oracle / MATLAB stand-in | [`direct`] |
@@ -18,7 +18,9 @@
 //! Every fused 2D plan carries a [`crate::parallel::ExecPolicy`]
 //! (lane fan-out) and, via `with_shards`, a
 //! [`crate::parallel::ShardPolicy`] (band-shard decomposition) — see
-//! [`Dct2::with_shards`].
+//! [`Dct2::with_shards`]. The fused 3D plans ([`Dct3d`], [`Idct3d`])
+//! carry the same two policies with the dim-0 i-slab as their shard
+//! unit ([`Dct3d::with_shards`]).
 //!
 //! ```
 //! use mddct::dct::{Dct2, Idct2};
@@ -55,7 +57,7 @@ pub mod twiddle;
 
 pub use dct1d::{Algo1d, Dct1d, Idct1d, Idxst1d};
 pub use dct2d::{Dct2, Idct2, StageTimes};
-pub use dct3d::Dct3d;
+pub use dct3d::{Dct3d, Idct3d};
 pub use dct4d::Dct4d;
 pub use dst::{Dst1d, Dst2, Idst1d, Idst2};
 pub use idxst2d::{Combo, IdxstCombo};

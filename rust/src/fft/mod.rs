@@ -8,7 +8,8 @@
 //! N, a real-input RFFT with the even-N packing trick, 2D/3D
 //! transforms (whose banded stages honor the
 //! [`crate::parallel::ShardPolicy`] band decomposition — see
-//! [`Rfft2Plan::with_shards`]), and a process-wide plan cache.
+//! [`Rfft2Plan::with_shards`] and the slab-sharded
+//! [`Rfft3Plan::with_shards`]), and a process-wide plan cache.
 //!
 //! ```
 //! use mddct::fft::{onesided_len, RfftPlan, C64};
@@ -34,7 +35,7 @@ pub mod soa;
 
 pub use complex::C64;
 pub use kernel::{panel_cols, FftKernel, Pow2Plan};
-pub use nd::Rfft2Plan;
+pub use nd::{Rfft2Plan, Rfft3Plan};
 pub use plan::{cached_plan_count, plan, FftPlan};
 pub use rfft::{onesided_len, RfftPlan};
 pub use soa::SoaPlan;

@@ -15,8 +15,13 @@
 //! additionally pins how many row-band work items each stage becomes —
 //! the row-FFT batch bands over the `n1` input rows, and after the
 //! tiled-transpose barrier the column stage bands over the `h2`
-//! spectrum rows. Under the default `ShardPolicy::Auto` the band count
-//! equals the exec lane count, i.e. exactly the pre-sharding behaviour.
+//! spectrum rows. In 3D ([`Rfft3Plan::with_shards`]) the n3-axis row
+//! RFFT batch bands over all `n1*n2` rows, the n2-axis stage over the
+//! `n1` dim-0 **i-slabs** (each slab's column FFTs are local to its
+//! contiguous (n2 x h3) plane), and the n1-axis stage re-bands over the
+//! transposed `n2*h3` rows. Under the default `ShardPolicy::Auto` the
+//! band count equals the exec lane count, i.e. exactly the pre-sharding
+//! behaviour.
 
 use super::complex::C64;
 use super::plan::plan;
@@ -173,61 +178,180 @@ pub fn fft2_inplace(data: &mut [C64], n1: usize, n2: usize, invert: bool) {
     }
 }
 
+/// 3D RFFT plan for an (n1 x n2 x n3) real tensor -> (n1 x n2 x h3)
+/// onesided spectrum, with the dim-0 **i-slab** as the band-shard unit
+/// of the middle stage.
+///
+/// Stage structure mirrors [`Rfft2Plan`] one dimension up: the n3-axis
+/// row RFFT batch bands over all `n1*n2` rows (so a flat volume with
+/// few slabs still fans wide); the n2-axis column FFTs are local to a
+/// contiguous (n2 x h3) i-slab, so slabs fan out as independent work
+/// items; the n1-axis stage crosses every slab and runs through the
+/// tiled-transpose barrier, **re-banding** over the `n2*h3` rows of the
+/// transposed matrix (or in place via the blocked column kernel when a
+/// single band suffices and n1 is a power of two). Under
+/// `ShardPolicy::Auto` the band counts equal the exec lane count — the
+/// pre-plan behaviour of the old `rfft3_threads` free function,
+/// bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct Rfft3Plan {
+    /// Leading (slab) dimension.
+    pub n1: usize,
+    /// Middle dimension.
+    pub n2: usize,
+    /// Innermost (real-FFT) dimension.
+    pub n3: usize,
+    /// Onesided spectrum length along dim 2 (`n3/2 + 1`).
+    pub h3: usize,
+    row: RfftPlan,
+    p1: std::sync::Arc<super::plan::FftPlan>,
+    p2: std::sync::Arc<super::plan::FftPlan>,
+    policy: ExecPolicy,
+    shards: ShardPolicy,
+}
+
+impl Rfft3Plan {
+    /// Plan with the default (`Auto`) execution policy.
+    pub fn new(n1: usize, n2: usize, n3: usize) -> Rfft3Plan {
+        Self::with_policy(n1, n2, n3, ExecPolicy::Auto)
+    }
+
+    /// Plan with an explicit execution policy.
+    pub fn with_policy(n1: usize, n2: usize, n3: usize, policy: ExecPolicy) -> Rfft3Plan {
+        Rfft3Plan {
+            n1,
+            n2,
+            n3,
+            h3: onesided_len(n3),
+            row: RfftPlan::new(n3),
+            p1: plan(n1),
+            p2: plan(n2),
+            policy,
+            shards: ShardPolicy::Auto,
+        }
+    }
+
+    /// Same plan with an explicit band-shard policy: every banded stage
+    /// becomes the work-item count [`ShardPolicy::bands`] dictates for
+    /// its own row count — the n3-axis row batch over `n1*n2` rows, the
+    /// n2-axis stage over the `n1` dim-0 slabs, and the n1-axis stage
+    /// over the `n2*h3` transposed rows. `ShardPolicy::MaxShards(1)`
+    /// forces single-band (serial-order) execution regardless of the
+    /// exec policy.
+    pub fn with_shards(mut self, shards: ShardPolicy) -> Rfft3Plan {
+        self.shards = shards;
+        self
+    }
+
+    /// Band work items for a stage of `rows` rows (dim-0 slabs, or
+    /// transposed spectrum rows) under this plan's exec + shard policies.
+    fn bands(&self, rows: usize) -> usize {
+        self.shards.bands(rows, self.policy.lanes(self.n1 * self.n2 * self.n3))
+    }
+
+    /// Forward: real row-major (n1*n2*n3) -> onesided complex (n1*n2*h3).
+    pub fn forward(&self, x: &[f64], out: &mut [C64]) {
+        let (n2, n3, h3) = (self.n2, self.n3, self.h3);
+        assert_eq!(x.len(), self.n1 * n2 * n3);
+        assert_eq!(out.len(), self.n1 * n2 * h3);
+        // stage 1: the n3-axis row RFFT batch bands over all n1*n2 rows
+        // (mirroring the 2D plan's row stage — a flat volume with few
+        // slabs still fans its row FFTs wide)
+        self.row.forward_batch(x, out, self.bands(self.n1 * n2));
+        self.n2_axis_fft(out, false);
+        self.axis0_fft(out, false);
+    }
+
+    /// Inverse: onesided complex (n1*n2*h3) -> real (n1*n2*n3),
+    /// normalized (exact inverse of [`Rfft3Plan::forward`]).
+    pub fn inverse(&self, spec: &[C64], out: &mut [f64]) {
+        let (n2, n3, h3) = (self.n2, self.n3, self.h3);
+        assert_eq!(spec.len(), self.n1 * n2 * h3);
+        assert_eq!(out.len(), self.n1 * n2 * n3);
+        let mut work = scratch::take_c64(spec.len());
+        work.copy_from_slice(spec);
+        // reverse stage order: n1-axis first, then per-slab n2-axis, then
+        // the n3-axis inverse RFFT rows into the real output
+        self.axis0_fft(&mut work, true);
+        self.n2_axis_fft(&mut work, true);
+        // the n3-axis inverse RFFT batch bands over all n1*n2 rows,
+        // like the forward row stage
+        self.row.inverse_batch(&work, out, self.bands(self.n1 * n2));
+        scratch::give_c64(work);
+    }
+
+    /// n2-axis FFT, slab-local: each dim-0 slab is a contiguous
+    /// (n2 x h3) plane, so slabs are the shard work items; inside a
+    /// slab the blocked column kernel runs when n2 is a power of two,
+    /// else the per-column Bluestein loop.
+    fn n2_axis_fft(&self, data: &mut [C64], invert: bool) {
+        let (n2, h3) = (self.n2, self.h3);
+        let slabs = self.bands(self.n1);
+        let p2 = &self.p2;
+        par_chunks_mut(data, n2 * h3, slabs, |_i, slab| {
+            if !p2.try_transform_cols(slab, h3, invert) {
+                let mut buf2 = vec![C64::default(); n2];
+                for c in 0..h3 {
+                    for j in 0..n2 {
+                        buf2[j] = slab[j * h3 + c];
+                    }
+                    if invert {
+                        p2.inverse(&mut buf2);
+                    } else {
+                        p2.forward(&mut buf2);
+                    }
+                    for j in 0..n2 {
+                        slab[j * h3 + c] = buf2[j];
+                    }
+                }
+            }
+        });
+    }
+
+    /// n1-axis FFT across slabs: view the tensor as an (n1 x n2*h3)
+    /// matrix. A single band with power-of-two n1 runs the blocked
+    /// column kernel in place; otherwise transpose -> contiguous row
+    /// FFTs -> transpose, re-banded over the `n2*h3` transposed rows
+    /// (the dim-1/dim-2 barrier the slab decomposition crosses).
+    fn axis0_fft(&self, data: &mut [C64], invert: bool) {
+        let (n1, m) = (self.n1, self.n2 * self.h3);
+        if n1 <= 1 {
+            return; // length-1 axis FFT is the identity
+        }
+        let bands = self.bands(m);
+        if bands <= 1 && self.p1.try_transform_cols(data, m, invert) {
+            return;
+        }
+        let mut t = scratch::take_c64(n1 * m);
+        transpose_into(data, &mut t, n1, m, bands);
+        let p1 = &self.p1;
+        par_chunks_mut(&mut t, n1, bands, |_r, colbuf| {
+            if invert {
+                p1.inverse(colbuf);
+            } else {
+                p1.forward(colbuf);
+            }
+        });
+        transpose_into(&t, data, m, n1, bands);
+        scratch::give_c64(t);
+    }
+}
+
 /// 3D RFFT: (n1 x n2 x n3) real -> (n1 x n2 x h3) onesided complex.
-/// Used by the 3D-DCT extension (paper §III-D).
+/// Convenience wrapper over a one-shot serial [`Rfft3Plan`]; used by the
+/// 3D-DCT extension (paper §III-D).
 pub fn rfft3(x: &[f64], n1: usize, n2: usize, n3: usize) -> Vec<C64> {
     rfft3_threads(x, n1, n2, n3, 1)
 }
 
-/// [`rfft3`] fanned out over up to `lanes` pool workers: the n3-axis
-/// RFFT batch parallelizes per row, the n2-axis stage per (i)-slab, and
-/// the n1-axis stage via the parallel transpose trick. `lanes <= 1` is
-/// the serial reference path.
+/// [`rfft3`] fanned out over up to `lanes` pool workers via a one-shot
+/// [`Rfft3Plan`] carrying `ExecPolicy::Threads(lanes)`; `lanes <= 1` is
+/// the serial reference path. Repeated callers should hold an
+/// [`Rfft3Plan`] instead and amortize its sub-plan construction.
 pub fn rfft3_threads(x: &[f64], n1: usize, n2: usize, n3: usize, lanes: usize) -> Vec<C64> {
-    assert_eq!(x.len(), n1 * n2 * n3);
-    let h3 = onesided_len(n3);
-    let rp = RfftPlan::new(n3);
-    let mut out = vec![C64::default(); n1 * n2 * h3];
-    if lanes > 1 {
-        rp.forward_batch(x, &mut out, lanes);
-    } else {
-        for s in 0..n1 * n2 {
-            rp.forward(&x[s * n3..(s + 1) * n3], &mut out[s * h3..(s + 1) * h3]);
-        }
-    }
-    // FFT along dim 2 (n2): each i-slab (n2 x h3) is contiguous, so
-    // slabs fan out directly; inside a slab the blocked column kernel
-    // runs when n2 is a power of two, else the per-column Bluestein loop
-    let p2 = plan(n2);
-    par_chunks_mut(&mut out, n2 * h3, lanes, |_i, slab| {
-        if !p2.try_transform_cols(slab, h3, false) {
-            let mut buf2 = vec![C64::default(); n2];
-            for c in 0..h3 {
-                for j in 0..n2 {
-                    buf2[j] = slab[j * h3 + c];
-                }
-                p2.forward(&mut buf2);
-                for j in 0..n2 {
-                    slab[j * h3 + c] = buf2[j];
-                }
-            }
-        }
-    });
-    // FFT along dim 1 (n1): strided across slabs; view as an
-    // (n1 x n2*h3) matrix. One lane + power-of-two n1 runs the blocked
-    // column kernel in place; otherwise transpose -> row FFTs ->
-    // transpose (parallel fan-out, and the Bluestein locality route)
-    let p1 = plan(n1);
-    if n1 > 1 {
-        let m = n2 * h3;
-        if lanes > 1 || !p1.try_transform_cols(&mut out, m, false) {
-            let mut t = scratch::take_c64(n1 * m);
-            transpose_into(&out, &mut t, n1, m, lanes);
-            par_chunks_mut(&mut t, n1, lanes, |_s, row| p1.forward(row));
-            transpose_into(&t, &mut out, m, n1, lanes);
-            scratch::give_c64(t);
-        }
-    }
+    let p = Rfft3Plan::with_policy(n1, n2, n3, ExecPolicy::Threads(lanes.max(1)));
+    let mut out = vec![C64::default(); n1 * n2 * p.h3];
+    p.forward(x, &mut out);
     out
 }
 
@@ -359,6 +483,48 @@ mod tests {
             let b = rfft3_threads(&x, n1, n2, n3, 4);
             for (u, v) in a.iter().zip(&b) {
                 assert!((*u - *v).abs() == 0.0, "({n1},{n2},{n3})");
+            }
+        }
+    }
+
+    #[test]
+    fn rfft3_plan_sharded_matches_serial_bitwise() {
+        use crate::parallel::ShardPolicy;
+        let mut rng = Rng::new(37);
+        for &(n1, n2, n3) in &[(4usize, 6usize, 8usize), (3, 5, 7), (8, 8, 8), (9, 4, 6)] {
+            let x = rng.normal_vec(n1 * n2 * n3);
+            let serial = Rfft3Plan::with_policy(n1, n2, n3, crate::parallel::ExecPolicy::Serial);
+            let mut a = vec![C64::default(); n1 * n2 * serial.h3];
+            serial.forward(&x, &mut a);
+            for shards in [1usize, 2, 3, 7] {
+                // serial exec + explicit slab count: the shard policy
+                // alone drives the fan-out
+                let p = Rfft3Plan::with_policy(n1, n2, n3, crate::parallel::ExecPolicy::Serial)
+                    .with_shards(ShardPolicy::MaxShards(shards));
+                let mut b = vec![C64::default(); n1 * n2 * p.h3];
+                p.forward(&x, &mut b);
+                for (u, v) in a.iter().zip(&b) {
+                    assert!((*u - *v).abs() == 0.0, "({n1},{n2},{n3}) shards={shards}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rfft3_plan_roundtrip() {
+        use crate::parallel::ShardPolicy;
+        let mut rng = Rng::new(38);
+        for &(n1, n2, n3) in &[(4usize, 6usize, 8usize), (3, 5, 7), (8, 8, 8), (1, 9, 4)] {
+            let x = rng.normal_vec(n1 * n2 * n3);
+            for shards in [1usize, 3] {
+                let p = Rfft3Plan::new(n1, n2, n3).with_shards(ShardPolicy::MaxShards(shards));
+                let mut spec = vec![C64::default(); n1 * n2 * p.h3];
+                p.forward(&x, &mut spec);
+                let mut back = vec![0.0; n1 * n2 * n3];
+                p.inverse(&spec, &mut back);
+                for (a, b) in back.iter().zip(&x) {
+                    assert!((a - b).abs() < 1e-9, "({n1},{n2},{n3}) shards={shards}");
+                }
             }
         }
     }

@@ -32,10 +32,11 @@
 //! the service's workers reuse that same pool, so a single process has
 //! exactly one set of compute threads no matter how many plans, workers,
 //! or concurrent requests are live. A plan's `ShardPolicy` additionally
-//! pins how many row-band work items each banded stage becomes, which is
-//! how the coordinator splits one huge request across the pool while
-//! small requests keep flowing (see `ARCHITECTURE.md` at the repo root
-//! for the full layer map and shard lifecycle).
+//! pins how many band work items each banded stage becomes — row bands
+//! in 2D, dim-0 i-slabs in 3D — which is how the coordinator splits one
+//! huge request across the pool while small requests keep flowing (see
+//! `ARCHITECTURE.md` at the repo root for the full layer map and shard
+//! lifecycle).
 //!
 //! ```
 //! use mddct::dct::{Dct2, Idct2};

@@ -51,6 +51,7 @@ fn parse_op(name: &str) -> Option<TransformOp> {
         "idct_idxst" => TransformOp::IdctIdxst,
         "idxst_idct" => TransformOp::IdxstIdct,
         "dct3d" => TransformOp::Dct3d,
+        "idct3d" => TransformOp::Idct3d,
         "dst2d" => TransformOp::Dst2d,
         "idst2d" => TransformOp::Idst2d,
         _ => return None,

@@ -126,6 +126,15 @@ pub fn band_spans(rows: usize, bands: usize) -> Vec<Range<usize>> {
     chunk_ranges(rows, bands.max(1), 1)
 }
 
+/// Split `0..slabs` dim-0 slabs of a 3D tensor into `min(bands, slabs)`
+/// contiguous slab spans — identical math to [`band_spans`] (a slab is
+/// a band of the tensor's leading dimension), named separately so 3D
+/// call sites read as slabs and kept delegating so the 2D band and 3D
+/// slab decompositions can never drift apart.
+pub fn slab_spans(slabs: usize, bands: usize) -> Vec<Range<usize>> {
+    band_spans(slabs, bands)
+}
+
 /// Split an owned vec into up to `lanes` contiguous groups (used to
 /// distribute non-uniform work items, e.g. postprocess row pairs).
 pub fn split_groups<T>(mut items: Vec<T>, lanes: usize) -> Vec<Vec<T>> {
@@ -233,6 +242,13 @@ mod tests {
             assert!(hi - lo <= 1, "near-equal split: rows={rows} bands={bands}");
         }
         assert!(band_spans(0, 4).is_empty());
+    }
+
+    #[test]
+    fn slab_spans_is_band_spans() {
+        for &(slabs, bands) in &[(64usize, 4usize), (7, 3), (1, 8), (9, 7)] {
+            assert_eq!(slab_spans(slabs, bands), band_spans(slabs, bands));
+        }
     }
 
     #[test]

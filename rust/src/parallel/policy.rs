@@ -77,7 +77,11 @@ impl ExecPolicy {
 /// Every banded stage applies the policy with its own row count: the
 /// stage-1 row FFTs band over the `n1` input rows, the column stage
 /// (after the tiled-transpose barrier) over the `h2` spectrum rows, and
-/// the DCT pre/post permutations over their row/pair counts.
+/// the DCT pre/post permutations over their row/pair counts. The 3D
+/// plans apply the identical math with the dim-0 **i-slab** as the row
+/// unit (`rows` = the tensor's leading dimension), re-banding over the
+/// `n2*h3` transposed rows across their dim-1/dim-2 barrier — see
+/// [`crate::parallel::slab_spans`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ShardPolicy {
     /// Band count = the plan's exec lane count (the pre-sharding

@@ -6,10 +6,11 @@
 //!
 //! The same contract extends to band-sharded execution: any shard
 //! count must match `ExecPolicy::Serial` to <= 1e-10, across
-//! non-divisible band splits and prime (Bluestein) dimensions.
+//! non-divisible band splits and prime (Bluestein) dimensions — in 2D
+//! (row bands) and in 3D (dim-0 slab bands).
 
-use mddct::dct::{Combo, Dct2, Dct3d, Idct2, IdxstCombo, RowColumn};
-use mddct::fft::{C64, Rfft2Plan};
+use mddct::dct::{Combo, Dct2, Dct3d, Idct2, Idct3d, IdxstCombo, RowColumn};
+use mddct::fft::{C64, Rfft2Plan, Rfft3Plan};
 use mddct::parallel::{default_threads, ExecPolicy, ShardPolicy};
 use mddct::util::rng::Rng;
 
@@ -277,6 +278,111 @@ fn min_rows_per_shard_matches_serial() {
                 &format!("dct2 ({n1},{n2}) min_rows={min_rows}"),
             );
         }
+    }
+}
+
+/// 3D shapes stressing the slab-band math: slab counts not divisible by
+/// any shard count, prime (Bluestein) dimensions on every axis, a
+/// power-of-two reference, and a single-slab degenerate.
+const SHARD_SHAPES_3D: &[(usize, usize, usize)] = &[
+    (9, 6, 10),  // slabs not divisible by 2 or 7
+    (5, 3, 7),   // prime on all three axes (Bluestein everywhere)
+    (13, 4, 6),  // prime slab count x even composites
+    (8, 8, 8),   // power of two
+    (1, 9, 4),   // single slab
+];
+
+#[test]
+fn dct3d_sharded_matches_serial_for_all_slab_counts() {
+    let mut rng = Rng::new(720);
+    for &(n1, n2, n3) in SHARD_SHAPES_3D {
+        let x = rng.normal_vec(n1 * n2 * n3);
+        let mut serial = vec![0.0; x.len()];
+        Dct3d::with_policy(n1, n2, n3, ExecPolicy::Serial).forward(&x, &mut serial);
+        for shards in SHARD_COUNTS {
+            let mut sharded = vec![0.0; x.len()];
+            Dct3d::with_policy(n1, n2, n3, ExecPolicy::Serial)
+                .with_shards(ShardPolicy::MaxShards(shards))
+                .forward(&x, &mut sharded);
+            close(
+                &sharded,
+                &serial,
+                1e-10,
+                &format!("dct3d ({n1},{n2},{n3}) shards={shards}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn idct3d_sharded_matches_serial_for_all_slab_counts() {
+    let mut rng = Rng::new(721);
+    for &(n1, n2, n3) in SHARD_SHAPES_3D {
+        let x = rng.normal_vec(n1 * n2 * n3);
+        let mut serial = vec![0.0; x.len()];
+        Idct3d::with_policy(n1, n2, n3, ExecPolicy::Serial).forward(&x, &mut serial);
+        for shards in SHARD_COUNTS {
+            let mut sharded = vec![0.0; x.len()];
+            Idct3d::with_policy(n1, n2, n3, ExecPolicy::Serial)
+                .with_shards(ShardPolicy::MaxShards(shards))
+                .forward(&x, &mut sharded);
+            close(
+                &sharded,
+                &serial,
+                1e-10,
+                &format!("idct3d ({n1},{n2},{n3}) shards={shards}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn rfft3_sharded_matches_serial_for_all_slab_counts() {
+    let mut rng = Rng::new(722);
+    for &(n1, n2, n3) in SHARD_SHAPES_3D {
+        let x = rng.normal_vec(n1 * n2 * n3);
+        let serial_plan = Rfft3Plan::with_policy(n1, n2, n3, ExecPolicy::Serial);
+        let h3 = serial_plan.h3;
+        let mut serial = vec![C64::default(); n1 * n2 * h3];
+        serial_plan.forward(&x, &mut serial);
+        for shards in SHARD_COUNTS {
+            let plan = Rfft3Plan::with_policy(n1, n2, n3, ExecPolicy::Serial)
+                .with_shards(ShardPolicy::MaxShards(shards));
+            let mut sharded = vec![C64::default(); n1 * n2 * h3];
+            plan.forward(&x, &mut sharded);
+            for (i, (a, b)) in serial.iter().zip(&sharded).enumerate() {
+                assert!(
+                    (*a - *b).abs() <= 1e-10,
+                    "rfft3 ({n1},{n2},{n3}) shards={shards} at {i}"
+                );
+            }
+            // inverse too: spectrum back to the original samples
+            let mut back = vec![0.0; n1 * n2 * n3];
+            plan.inverse(&sharded, &mut back);
+            close(
+                &back,
+                &x,
+                1e-9,
+                &format!("irfft3 ({n1},{n2},{n3}) shards={shards}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn idct3d_inverts_dct3d_under_shards_and_lanes() {
+    // the roundtrip holds when forward and inverse run different
+    // decompositions (sharded forward, lane-parallel inverse)
+    let mut rng = Rng::new(723);
+    for &(n1, n2, n3) in &[(9usize, 6usize, 10usize), (5, 3, 7), (8, 8, 8)] {
+        let x = rng.normal_vec(n1 * n2 * n3);
+        let mut y = vec![0.0; x.len()];
+        Dct3d::with_policy(n1, n2, n3, ExecPolicy::Serial)
+            .with_shards(ShardPolicy::MaxShards(3))
+            .forward(&x, &mut y);
+        let mut back = vec![0.0; x.len()];
+        Idct3d::with_policy(n1, n2, n3, ExecPolicy::Threads(4)).forward(&y, &mut back);
+        close(&back, &x, 1e-9, &format!("3d roundtrip ({n1},{n2},{n3})"));
     }
 }
 

@@ -1,0 +1,137 @@
+//! Batched many-small-transform bench: the batch execution engine vs a
+//! solo-forward loop on the millions-of-tiny-blocks workload (JPEG-style
+//! 8x8/16x16/32x32 tiles, STFT-frame shapes).
+//!
+//! Two sections:
+//! * `batch` rows — `Dct2::forward_batch` over B packed blocks vs B solo
+//!   `forward` calls on the same plan, per block size x batch size x
+//!   exec policy (serial isolates the per-call dispatch overhead the
+//!   batch engine amortizes; auto additionally lets the batch fan out
+//!   across the pool, which a sub-threshold solo transform never can);
+//! * `alloc` rows — the pooled/prewarmed single-transform hot path vs
+//!   the same call forced cold (`scratch::clear_thread_pool` before
+//!   every iteration), i.e. the seed's allocate-per-call behaviour.
+//!
+//! Emits a human table plus machine-readable `BENCH_batch.json`
+//! (override the path with `MDDCT_BENCH_BATCH_JSON`); the bench-diff CI
+//! gate tracks every row. `MDDCT_BENCH_QUICK=1` runs a CI-sized subset.
+//!
+//! Run: `cargo bench --bench batch`
+
+use mddct::bench::{black_box, ms, time_fn, BenchConfig, Table};
+use mddct::dct::Dct2;
+use mddct::parallel::{default_threads, ExecPolicy};
+use mddct::util::rng::Rng;
+use mddct::util::scratch;
+
+fn main() {
+    let cfg = BenchConfig::from_env(BenchConfig::default());
+    let quick = std::env::var("MDDCT_BENCH_QUICK").is_ok();
+    let blocks: &[usize] = if quick { &[8, 16] } else { &[8, 16, 32] };
+    let batches: &[usize] = if quick { &[64, 1024] } else { &[1, 16, 64, 256, 1024, 4096] };
+    println!(
+        "\nBatched many-small-transform engine: forward_batch vs looped solo forward \
+         ({} pool threads under auto)\n",
+        default_threads()
+    );
+
+    let mut t = Table::new(&["n", "batch", "exec", "solo ms", "batched ms", "speedup"]);
+    let mut json_rows: Vec<String> = Vec::new();
+
+    for &n in blocks {
+        for &batch in batches {
+            let mut rng = Rng::new((n * 1000 + batch) as u64);
+            let xs = rng.normal_vec(n * n * batch);
+            let numel = n * n;
+            for (label, exec) in
+                [("serial", ExecPolicy::Serial), ("auto", ExecPolicy::Auto)]
+            {
+                let plan = Dct2::with_policy(n, n, exec);
+                let mut out = vec![0.0; numel * batch];
+                // correctness gate before timing: batched == solo loop
+                let mut want = vec![0.0; numel * batch];
+                for (b, w) in want.chunks_mut(numel).enumerate() {
+                    plan.forward(&xs[b * numel..(b + 1) * numel], w);
+                }
+                plan.forward_batch(&xs, &mut out, batch);
+                assert_eq!(out, want, "batched diverged at n={n} batch={batch}");
+
+                let solo = time_fn(&cfg, || {
+                    for (b, o) in out.chunks_mut(numel).enumerate() {
+                        plan.forward(&xs[b * numel..(b + 1) * numel], o);
+                    }
+                    black_box(&out);
+                })
+                .mean;
+                let batched = time_fn(&cfg, || {
+                    plan.forward_batch(&xs, &mut out, batch);
+                    black_box(&out);
+                })
+                .mean;
+                let speedup = solo / batched;
+                t.row(&[
+                    n.to_string(),
+                    batch.to_string(),
+                    label.to_string(),
+                    ms(solo),
+                    ms(batched),
+                    format!("{speedup:.2}x"),
+                ]);
+                json_rows.push(format!(
+                    "{{\"section\": \"batch\", \"n\": {n}, \"batch\": {batch}, \
+                     \"exec\": \"{label}\", \"solo_ms\": {:.6}, \"batched_ms\": {:.6}, \
+                     \"speedup\": {speedup:.4}}}",
+                    solo * 1e3,
+                    batched * 1e3
+                ));
+            }
+        }
+    }
+
+    // ---- alloc-free vs seed-style allocate-per-call -------------------
+    let mut ta = Table::new(&["n", "pooled ms", "cold-alloc ms", "speedup"]);
+    for &n in blocks {
+        let mut rng = Rng::new(n as u64 + 5000);
+        let x = rng.normal_vec(n * n);
+        let mut out = vec![0.0; n * n];
+        let plan = Dct2::with_policy(n, n, ExecPolicy::Serial);
+        let pooled = time_fn(&cfg, || {
+            plan.forward(&x, &mut out);
+            black_box(&out);
+        })
+        .mean;
+        let cold = time_fn(&cfg, || {
+            // drop every retained buffer first: each stage allocates
+            // afresh, which is what every call paid in the seed tree
+            scratch::clear_thread_pool();
+            plan.forward(&x, &mut out);
+            black_box(&out);
+        })
+        .mean;
+        let speedup = cold / pooled;
+        ta.row(&[n.to_string(), ms(pooled), ms(cold), format!("{speedup:.2}x")]);
+        json_rows.push(format!(
+            "{{\"section\": \"alloc\", \"n\": {n}, \"pooled_ms\": {:.6}, \
+             \"cold_alloc_ms\": {:.6}, \"speedup\": {speedup:.4}}}",
+            pooled * 1e3,
+            cold * 1e3
+        ));
+    }
+
+    t.print();
+    println!("\nSingle transform: pooled/prewarmed vs cold-pool (allocate per call)\n");
+    ta.print();
+
+    let path = std::env::var("MDDCT_BENCH_BATCH_JSON")
+        .unwrap_or_else(|_| "BENCH_batch.json".to_string());
+    let doc = format!(
+        "{{\n  \"bench\": \"batch\",\n  \"threads\": {},\n  \"unit\": \"forward_ms\",\n  \
+         \"rows\": [\n    {}\n  ]\n}}\n",
+        default_threads(),
+        json_rows.join(",\n    ")
+    );
+    match std::fs::write(&path, &doc) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -1,0 +1,145 @@
+#!/usr/bin/env python3
+"""Bench-trend gate: diff the current BENCH_*.json artifacts against the
+previous commit's set and fail on time regressions.
+
+Every bench binary in this repo emits the same shape of JSON:
+
+    { "bench": "...", ..., "rows": [ {<identity fields>, <*_ms fields>,
+      "speedup": ...}, ... ] }
+
+A row's *identity* is every field whose key is not a measurement; a
+measurement is any key ending in ``_ms`` or starting with ``speedup``
+(table5 calls its ratio ``speedup_vs_serial`` — a measured float must
+never leak into identity or the row misses its baseline every run).
+For each row present in both the baseline and the current artifact,
+each ``*_ms`` measurement must not exceed
+``baseline * (1 + threshold/100)``; rows or files missing on either
+side are reported but never fail the gate (first run, renamed benches,
+and resized quick modes all stay green).
+
+Usage:
+    bench_diff.py --baseline DIR --current DIR [--threshold 15]
+                  [--min-abs-ms 0.05]
+
+Exit status 1 iff at least one regression was found.
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def is_measurement(key):
+    """Whether a row field is a measured value, not part of its identity."""
+    return key.endswith("_ms") or key.startswith("speedup")
+
+
+def row_identity(row):
+    """Hashable identity of a row: all non-measurement fields."""
+    return tuple(sorted((k, v) for k, v in row.items() if not is_measurement(k)))
+
+
+def load_rows(path):
+    """rows list of a bench JSON, indexed by identity (None if unusable)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"  ! {os.path.basename(path)}: unreadable ({e}); skipping")
+        return None
+    rows = doc.get("rows")
+    if not isinstance(rows, list):
+        print(f"  ! {os.path.basename(path)}: no rows[]; skipping")
+        return None
+    indexed = {}
+    for row in rows:
+        if isinstance(row, dict):
+            indexed[row_identity(row)] = row
+    return indexed
+
+
+def fmt_identity(identity):
+    return " ".join(f"{k}={v}" for k, v in identity)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, help="dir with the previous BENCH_*.json set")
+    ap.add_argument("--current", required=True, help="dir with the fresh BENCH_*.json set")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=15.0,
+        help="fail when a *_ms value grows more than this percent (default 15)",
+    )
+    ap.add_argument(
+        "--min-abs-ms",
+        type=float,
+        default=0.05,
+        help="ignore regressions smaller than this many ms (timer-noise floor "
+        "for quick-mode runs on shared CI runners)",
+    )
+    args = ap.parse_args()
+
+    current_files = sorted(glob.glob(os.path.join(args.current, "BENCH_*.json")))
+    if not current_files:
+        print(f"bench_diff: no BENCH_*.json under {args.current}", file=sys.stderr)
+        return 1
+
+    regressions = []
+    compared = 0
+    for cur_path in current_files:
+        name = os.path.basename(cur_path)
+        base_path = os.path.join(args.baseline, name)
+        print(f"{name}:")
+        if not os.path.exists(base_path):
+            print("  - no baseline (first run for this bench); skipping")
+            continue
+        cur_rows = load_rows(cur_path)
+        base_rows = load_rows(base_path)
+        if cur_rows is None or base_rows is None:
+            continue
+        file_regressions = 0
+        for identity, cur in cur_rows.items():
+            base = base_rows.get(identity)
+            if base is None:
+                print(f"  - new row [{fmt_identity(identity)}]; skipping")
+                continue
+            for key, cur_val in cur.items():
+                if not key.endswith("_ms") or key not in base:
+                    continue
+                base_val = base[key]
+                if not isinstance(cur_val, (int, float)) or not isinstance(
+                    base_val, (int, float)
+                ):
+                    continue
+                compared += 1
+                grew = cur_val - base_val
+                limit = base_val * (1.0 + args.threshold / 100.0)
+                if cur_val > limit and grew > args.min_abs_ms:
+                    pct = 100.0 * grew / base_val if base_val > 0 else float("inf")
+                    file_regressions += 1
+                    regressions.append(
+                        f"{name} [{fmt_identity(identity)}] {key}: "
+                        f"{base_val:.4f} -> {cur_val:.4f} ms (+{pct:.1f}%)"
+                    )
+        if file_regressions:
+            print(f"  - {file_regressions} REGRESSION(S) in {len(cur_rows)} rows")
+        else:
+            print(f"  - ok ({len(cur_rows)} rows)")
+
+    print(f"\nbench_diff: compared {compared} measurements "
+          f"(threshold +{args.threshold:.0f}%, noise floor {args.min_abs_ms} ms)")
+    if regressions:
+        print(f"\n{len(regressions)} regression(s):", file=sys.stderr)
+        for r in regressions:
+            print(f"  FAIL {r}", file=sys.stderr)
+        return 1
+    print("no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,10 +15,12 @@
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::OnceLock;
 use std::time::{Duration, Instant};
 
 use super::request::{PlanKey, Request, Response};
 use super::shard::{shard_min_numel, shard_min_numel_3d};
+use crate::util::env_usize;
 
 /// A queued request plus its reply channel and enqueue timestamp.
 pub struct Pending {
@@ -53,6 +55,13 @@ pub struct BatchPolicy {
     /// ([`shard_min_numel_3d`]), so lowering the 3D gate never disables
     /// co-batching for unrelated 2D/1D traffic.
     pub solo_numel: usize,
+    /// max total payload elements one batch may accumulate: a key
+    /// flushes as soon as its queued requests reach this many elements,
+    /// bounding the contiguous pack buffer the packed execution path
+    /// builds (and the latency a full-but-small batch window can add).
+    /// Defaults to [`max_batch_elems`] (`MDDCT_MAX_BATCH_ELEMS` env
+    /// override included).
+    pub max_batch_elems: usize,
 }
 
 impl Default for BatchPolicy {
@@ -61,8 +70,22 @@ impl Default for BatchPolicy {
             max_batch: 16,
             max_wait: Duration::from_micros(200),
             solo_numel: shard_min_numel(),
+            max_batch_elems: max_batch_elems(),
         }
     }
+}
+
+/// Default cap on the total elements one batch accumulates before it
+/// flushes: 4 Mi elements (32 MiB of f64 payload — enough for 65536
+/// co-batched 8x8 blocks, small enough that the packed buffer and its
+/// output stay comfortably in memory).
+pub const DEFAULT_MAX_BATCH_ELEMS: usize = 4 << 20;
+
+/// Effective batch-elements cap: `MDDCT_MAX_BATCH_ELEMS` env override,
+/// else [`DEFAULT_MAX_BATCH_ELEMS`]. Resolved once per process.
+pub fn max_batch_elems() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| env_usize("MDDCT_MAX_BATCH_ELEMS").unwrap_or(DEFAULT_MAX_BATCH_ELEMS))
 }
 
 /// Run the batching loop: drain `rx`, form batches, push to `tx`.
@@ -94,7 +117,10 @@ pub fn run_batcher(rx: Receiver<Pending>, tx: Sender<Batch>, policy: BatchPolicy
                 }
                 let q = open.entry(key.clone()).or_default();
                 q.push(p);
-                if q.len() >= policy.max_batch || solo {
+                // same-key requests share a shape, so the queue's total
+                // payload is len * numel
+                let full_elems = q.len().saturating_mul(numel) >= policy.max_batch_elems;
+                if q.len() >= policy.max_batch || full_elems || solo {
                     let items = open.remove(&key).unwrap();
                     if tx.send(Batch { key, items }).is_err() {
                         return;
@@ -198,6 +224,7 @@ mod tests {
             max_batch: 64,
             max_wait: Duration::from_secs(10),
             solo_numel: 256 * 256,
+            ..Default::default()
         };
         let h = std::thread::spawn(move || run_batcher(req_rx, batch_tx, policy));
         let (big, _rb) = pending(1, vec![256, 256]);
@@ -217,6 +244,7 @@ mod tests {
             max_batch: 64,
             max_wait: Duration::from_secs(10),
             solo_numel: 256 * 256,
+            ..Default::default()
         };
         let h = std::thread::spawn(move || run_batcher(req_rx, batch_tx, policy));
         // a shard-gate-sized 3D volume must flush immediately as well
@@ -238,6 +266,32 @@ mod tests {
         let b = batch_rx.recv_timeout(Duration::from_secs(1)).unwrap();
         assert_eq!(b.items.len(), 1);
         assert_eq!(b.key.shape, shape);
+        drop(req_tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn elems_cap_flushes_a_growing_batch() {
+        let (req_tx, req_rx) = channel();
+        let (batch_tx, batch_rx) = channel();
+        // 4x4 = 16 elements per request; cap at 48 elements -> every
+        // third same-key request must force a flush despite the huge
+        // count cap and wait window
+        let policy = BatchPolicy {
+            max_batch: 1000,
+            max_wait: Duration::from_secs(10),
+            solo_numel: usize::MAX,
+            max_batch_elems: 48,
+        };
+        let h = std::thread::spawn(move || run_batcher(req_rx, batch_tx, policy));
+        for id in 0..6 {
+            let (p, _r) = pending(id, vec![4, 4]);
+            req_tx.send(p).unwrap();
+        }
+        let a = batch_rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        let b = batch_rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(a.items.len(), 3);
+        assert_eq!(b.items.len(), 3);
         drop(req_tx);
         h.join().unwrap();
     }

@@ -1,13 +1,19 @@
-//! Service metrics: per-op counters, latency histograms, batch sizes,
-//! and band-shard fan-out — the latter broken down by transform
-//! dimensionality too, so dashboards can tell the 2D row-band path and
-//! the 3D slab path apart.
+//! Service metrics: per-op counters, latency histograms, batch sizes
+//! (co-batched *and* packed-executed, the latter with a log2 size
+//! histogram), and band-shard fan-out — the latter broken down by
+//! transform dimensionality too, so dashboards can tell the 2D row-band
+//! path and the 3D slab path apart.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 use crate::util::json::Json;
 use crate::util::stats::LatencyHistogram;
+
+/// Log2 buckets for packed-batch sizes: bucket i counts batches of
+/// `2^i ..= 2^(i+1)-1` requests, the last bucket absorbing everything
+/// larger (4096+).
+const PACKED_BUCKETS: usize = 13;
 
 #[derive(Debug, Default)]
 struct OpMetrics {
@@ -19,6 +25,13 @@ struct OpMetrics {
     /// requests that executed under an explicit shard policy (>1 bands)
     sharded: u64,
     bands_max: usize,
+    /// requests that executed through the packed stage-fused batch path
+    packed_requests: u64,
+    /// packed batches executed
+    packed_batches: u64,
+    packed_max: usize,
+    /// log2 histogram of packed batch sizes
+    packed_hist: [u64; PACKED_BUCKETS],
 }
 
 /// Shard fan-out aggregated per transform rank (1D/2D/3D), across ops.
@@ -73,6 +86,18 @@ impl Metrics {
         r.bands_max = r.bands_max.max(bands);
     }
 
+    /// Record one packed batch execution: `size` same-shape requests
+    /// ran through the stage-fused `forward_batch` path as one unit.
+    pub fn record_packed(&self, op: &str, size: usize) {
+        let mut t = self.inner.lock().unwrap();
+        let e = t.ops.entry(op.to_string()).or_default();
+        e.packed_batches += 1;
+        e.packed_requests += size as u64;
+        e.packed_max = e.packed_max.max(size);
+        let bucket = (usize::BITS - 1 - size.max(1).leading_zeros()) as usize;
+        e.packed_hist[bucket.min(PACKED_BUCKETS - 1)] += 1;
+    }
+
     /// Record one failed request.
     pub fn record_error(&self, op: &str) {
         let mut t = self.inner.lock().unwrap();
@@ -109,6 +134,20 @@ impl Metrics {
             o.insert("max_batch".into(), Json::Num(e.batch_max as f64));
             o.insert("sharded_requests".into(), Json::Num(e.sharded as f64));
             o.insert("max_bands".into(), Json::Num(e.bands_max as f64));
+            o.insert("packed_requests".into(), Json::Num(e.packed_requests as f64));
+            o.insert("packed_batches".into(), Json::Num(e.packed_batches as f64));
+            o.insert("max_packed_batch".into(), Json::Num(e.packed_max as f64));
+            if e.packed_batches > 0 {
+                // log2 size histogram, non-empty buckets only, keyed by
+                // the bucket's lower bound ("4096" = 4096 and up)
+                let mut hist = BTreeMap::new();
+                for (i, &c) in e.packed_hist.iter().enumerate() {
+                    if c > 0 {
+                        hist.insert((1usize << i).to_string(), Json::Num(c as f64));
+                    }
+                }
+                o.insert("packed_batch_hist".into(), Json::Obj(hist));
+            }
             root.insert(op.clone(), Json::Obj(o));
         }
         if !t.by_rank.is_empty() {
@@ -148,6 +187,36 @@ mod tests {
             snap.get("idct2d").unwrap().get("errors").unwrap().as_f64().unwrap(),
             1.0
         );
+    }
+
+    #[test]
+    fn packed_batches_are_counted_and_histogrammed() {
+        let m = Metrics::new();
+        m.record_packed("dct2d", 2);
+        m.record_packed("dct2d", 3);
+        m.record_packed("dct2d", 16);
+        m.record_packed("dct2d", 1 << 14); // clamps into the 4096+ bucket
+        let snap = m.snapshot();
+        let d = snap.get("dct2d").unwrap();
+        assert_eq!(d.get("packed_batches").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(
+            d.get("packed_requests").unwrap().as_f64().unwrap(),
+            (2 + 3 + 16 + (1 << 14)) as f64
+        );
+        assert_eq!(
+            d.get("max_packed_batch").unwrap().as_f64().unwrap(),
+            (1 << 14) as f64
+        );
+        let hist = d.get("packed_batch_hist").unwrap();
+        assert_eq!(hist.get("2").unwrap().as_f64().unwrap(), 2.0); // sizes 2 and 3
+        assert_eq!(hist.get("16").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(hist.get("4096").unwrap().as_f64().unwrap(), 1.0);
+        // an op that never packed reports zero and omits the histogram
+        m.record("idct2d", 2, 0.001, 1, 1);
+        let snap = m.snapshot();
+        let i = snap.get("idct2d").unwrap();
+        assert_eq!(i.get("packed_batches").unwrap().as_f64().unwrap(), 0.0);
+        assert!(i.get("packed_batch_hist").is_none());
     }
 
     #[test]

@@ -30,7 +30,7 @@ pub mod router;
 pub mod service;
 pub mod shard;
 
-pub use batcher::BatchPolicy;
+pub use batcher::{max_batch_elems, BatchPolicy, DEFAULT_MAX_BATCH_ELEMS};
 pub use plan_cache::{NativePlan, PlanCache};
 pub use request::{PlanKey, Request, Response, TransformOp};
 pub use router::{BackendPolicy, Route, Router};

@@ -97,21 +97,63 @@ impl NativePlan {
         }
     }
 
+    /// Execute on one payload into a caller-provided output buffer.
+    pub fn execute_into(&self, data: &[f64], out: &mut [f64]) {
+        match self {
+            NativePlan::Dct2(p) => p.forward(data, out),
+            NativePlan::Idct2(p) => p.forward(data, out),
+            NativePlan::RcDct2(p) | NativePlan::RcIdct2(p) => p.forward(data, out),
+            NativePlan::Dct1(p) => p.forward(data, out),
+            NativePlan::Idct1(p) => p.forward(data, out),
+            NativePlan::Idxst1(p) => p.forward(data, out),
+            NativePlan::Combo(p) => p.forward(data, out),
+            NativePlan::Dct3(p) => p.forward(data, out),
+            NativePlan::Idct3(p) => p.forward(data, out),
+            NativePlan::Dst2(p) => p.forward(data, out),
+            NativePlan::Idst2(p) => p.forward(data, out),
+        }
+    }
+
     /// Execute on one payload.
     pub fn execute(&self, data: &[f64]) -> Vec<f64> {
         let mut out = vec![0.0; data.len()];
+        self.execute_into(data, &mut out);
+        out
+    }
+
+    /// Whether [`NativePlan::execute_batch`] runs the true stage-fused
+    /// batch path for this plan (see
+    /// [`super::request::TransformOp::supports_batch`]).
+    pub fn supports_batch(&self) -> bool {
+        matches!(
+            self,
+            NativePlan::Dct2(_) | NativePlan::Idct2(_) | NativePlan::Dct1(_) | NativePlan::Idct1(_)
+        )
+    }
+
+    /// Execute a packed batch of `batch` same-shape payloads: the
+    /// stage-fused `forward_batch` for the plans that implement it
+    /// (pre/FFT/post each swept once across the whole batch), a
+    /// per-item loop otherwise. Output is packed in input order and is
+    /// bit-identical to `batch` solo [`NativePlan::execute`] calls.
+    pub fn execute_batch(&self, data: &[f64], batch: usize) -> Vec<f64> {
+        let mut out = vec![0.0; data.len()];
+        if batch == 0 {
+            return out;
+        }
         match self {
-            NativePlan::Dct2(p) => p.forward(data, &mut out),
-            NativePlan::Idct2(p) => p.forward(data, &mut out),
-            NativePlan::RcDct2(p) | NativePlan::RcIdct2(p) => p.forward(data, &mut out),
-            NativePlan::Dct1(p) => p.forward(data, &mut out),
-            NativePlan::Idct1(p) => p.forward(data, &mut out),
-            NativePlan::Idxst1(p) => p.forward(data, &mut out),
-            NativePlan::Combo(p) => p.forward(data, &mut out),
-            NativePlan::Dct3(p) => p.forward(data, &mut out),
-            NativePlan::Idct3(p) => p.forward(data, &mut out),
-            NativePlan::Dst2(p) => p.forward(data, &mut out),
-            NativePlan::Idst2(p) => p.forward(data, &mut out),
+            NativePlan::Dct2(p) => p.forward_batch(data, &mut out, batch),
+            NativePlan::Idct2(p) => p.forward_batch(data, &mut out, batch),
+            NativePlan::Dct1(p) => p.forward_batch(data, &mut out, batch),
+            NativePlan::Idct1(p) => p.forward_batch(data, &mut out, batch),
+            _ => {
+                let numel = data.len() / batch;
+                if numel > 0 {
+                    for (xb, ob) in data.chunks(numel).zip(out.chunks_mut(numel)) {
+                        self.execute_into(xb, ob);
+                    }
+                }
+            }
         }
         out
     }
@@ -243,6 +285,32 @@ mod tests {
         // fused == row-column through the cache too
         let rc = cache.get(&key(TransformOp::RcDct2d, &[8, 12]));
         check_close(&rc.execute(&x), &dct2d_direct(&x, 8, 12), 1e-9).unwrap();
+    }
+
+    #[test]
+    fn execute_batch_matches_per_item_execution() {
+        let mut rng = Rng::new(82);
+        let cache = PlanCache::new();
+        // stage-fused path (dct2d) and fallback loop (rc_dct2d / dct3d)
+        for (op, shape) in [
+            (TransformOp::Dct2d, vec![8usize, 12]),
+            (TransformOp::Idct2d, vec![9, 7]),
+            (TransformOp::Dct1d(Algo1d::NPoint), vec![16]),
+            (TransformOp::Idct1d, vec![15]),
+            (TransformOp::RcDct2d, vec![6, 8]),
+            (TransformOp::Dct3d, vec![3, 4, 5]),
+        ] {
+            let numel: usize = shape.iter().product();
+            let batch = 5;
+            let packed = rng.normal_vec(numel * batch);
+            let plan = cache.get(&key(op, &shape));
+            assert_eq!(plan.supports_batch(), op.supports_batch(), "{op:?}");
+            let got = plan.execute_batch(&packed, batch);
+            for b in 0..batch {
+                let want = plan.execute(&packed[b * numel..(b + 1) * numel]);
+                assert_eq!(got[b * numel..(b + 1) * numel], want[..], "{op:?} item {b}");
+            }
+        }
     }
 
     #[test]

@@ -62,6 +62,21 @@ impl TransformOp {
         )
     }
 
+    /// Whether this op's native plan has a true batched execution path
+    /// (stage-fused across a packed same-shape batch via
+    /// `forward_batch`): the fused 2D DCT/IDCT pair and the 1D
+    /// DCT/IDCT family. Other ops still co-batch for plan-lookup
+    /// amortization but execute item by item.
+    pub fn supports_batch(self) -> bool {
+        matches!(
+            self,
+            TransformOp::Dct2d
+                | TransformOp::Idct2d
+                | TransformOp::Dct1d(_)
+                | TransformOp::Idct1d
+        )
+    }
+
     /// Artifact-name prefix for the PJRT backend (None = native only).
     pub fn artifact_prefix(self) -> Option<&'static str> {
         match self {
@@ -200,6 +215,17 @@ mod tests {
         assert!(TransformOp::Idct3d.supports_sharding());
         assert!(!TransformOp::RcDct2d.supports_sharding());
         assert!(!TransformOp::Idct1d.supports_sharding());
+    }
+
+    #[test]
+    fn batch_support_covers_the_stage_fused_plans() {
+        assert!(TransformOp::Dct2d.supports_batch());
+        assert!(TransformOp::Idct2d.supports_batch());
+        assert!(TransformOp::Dct1d(Algo1d::NPoint).supports_batch());
+        assert!(TransformOp::Idct1d.supports_batch());
+        assert!(!TransformOp::RcDct2d.supports_batch());
+        assert!(!TransformOp::Dct3d.supports_batch());
+        assert!(!TransformOp::IdctIdxst.supports_batch());
     }
 
     #[test]

@@ -131,6 +131,20 @@ impl Router {
         Route::Native
     }
 
+    /// Execute a packed batch of `batch` same-key payloads on the
+    /// native backend (the only backend with a batched path — the
+    /// worker loop falls back to per-item [`Router::execute`] for PJRT
+    /// routes). Output is packed in input order.
+    pub fn execute_batch(
+        &self,
+        key: &PlanKey,
+        packed: &[f64],
+        batch: usize,
+    ) -> Result<(Vec<f64>, Route), String> {
+        let plan = self.plans.get(key);
+        Ok((plan.execute_batch(packed, batch), Route::Native))
+    }
+
     /// Execute one payload for a key on the routed backend.
     pub fn execute(&self, key: &PlanKey, data: &[f64]) -> Result<(Vec<f64>, Route), String> {
         match self.route(key) {

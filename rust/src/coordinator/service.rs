@@ -201,6 +201,53 @@ fn panic_message(op: &str, panic: Box<dyn std::any::Any + Send>) -> String {
     format!("worker panicked executing {op}: {what}")
 }
 
+/// Execute a multi-request batch through the packed stage-fused path:
+/// pack the payloads contiguously, run one `execute_batch` (each
+/// transform stage sweeps the whole batch), scatter the outputs back to
+/// the per-request reply channels. A panic or error fails every request
+/// in the batch, like any backend failure would.
+fn execute_packed(
+    batch: Batch,
+    router: &Router,
+    metrics: &Metrics,
+    op_name: &str,
+    rank: usize,
+    bands: usize,
+) {
+    let numel: usize = batch.key.shape.iter().product();
+    let n = batch.items.len();
+    let mut packed = Vec::with_capacity(n * numel);
+    for p in &batch.items {
+        packed.extend_from_slice(&p.request.data);
+    }
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        router.execute_batch(&batch.key, &packed, n)
+    }))
+    .unwrap_or_else(|panic| Err(panic_message(op_name, panic)));
+    match result {
+        Ok((output, route)) => {
+            metrics.record_packed(op_name, n);
+            for (i, pending) in batch.items.into_iter().enumerate() {
+                let latency = pending.enqueued.elapsed().as_secs_f64();
+                metrics.record(op_name, rank, latency, n, bands);
+                let _ = pending.reply.send(Ok(Response {
+                    id: pending.request.id,
+                    output: output[i * numel..(i + 1) * numel].to_vec(),
+                    backend: route.label(),
+                    latency,
+                    batch_size: n,
+                }));
+            }
+        }
+        Err(e) => {
+            for pending in batch.items {
+                metrics.record_error(op_name);
+                let _ = pending.reply.send(Err(e.clone()));
+            }
+        }
+    }
+}
+
 fn worker_loop(
     rx: Arc<Mutex<Receiver<Batch>>>,
     router: Arc<Router>,
@@ -219,10 +266,22 @@ fn worker_loop(
         // Auto lane parallelism is not counted as sharding); recorded
         // so operators can see the shard feature actually engage.
         // PJRT batches run on the artifact, not the banded native plan.
-        let bands = match router.route(&batch.key) {
+        let route = router.route(&batch.key);
+        let bands = match route {
             Route::Native => router.shard_bands(&batch.key),
             Route::Pjrt => 1,
         };
+        // a multi-request native batch of a stage-fused op executes
+        // packed: one buffer, one batched plan call, outputs scattered.
+        // Requests an explicit shard policy would band (bands > 1) stay
+        // on the per-item path — forward_batch does not apply the shard
+        // decomposition, and the metrics' band count must stay truthful
+        // (in practice the batcher's solo fast path already flushes
+        // shard-gate-sized requests alone, so this gate rarely bites).
+        if n > 1 && route == Route::Native && bands <= 1 && batch.key.op.supports_batch() {
+            execute_packed(batch, &router, &metrics, &op_name, rank, bands);
+            continue;
+        }
         for pending in batch.items {
             let t0 = pending.enqueued;
             // A panicking plan must not kill the worker (which would

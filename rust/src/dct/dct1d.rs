@@ -9,6 +9,8 @@
 use std::sync::Arc;
 
 use crate::fft::{onesided_len, C64, RfftPlan};
+use crate::parallel::{par_chunks_mut, ExecPolicy};
+use crate::util::scratch::{self, Workspace};
 
 use super::twiddle::{twiddle, Twiddle};
 
@@ -54,11 +56,39 @@ pub struct Dct1d {
     pub algo: Algo1d,
     rfft: RfftPlan,
     tw: Arc<Twiddle>,
+    exec: ExecPolicy,
+    ws: Workspace,
 }
 
 impl Dct1d {
     pub fn new(n: usize, algo: Algo1d) -> Dct1d {
-        Dct1d { n, algo, rfft: RfftPlan::new(algo.fft_len(n)), tw: twiddle(n) }
+        Self::with_exec(n, algo, ExecPolicy::Auto)
+    }
+
+    /// Plan with an explicit execution policy: a solo `forward` is
+    /// always serial (a single 1D transform is below any useful
+    /// fan-out), but [`Dct1d::forward_batch`] chunks the batch over the
+    /// policy's lanes.
+    pub fn with_exec(n: usize, algo: Algo1d, exec: ExecPolicy) -> Dct1d {
+        let m = algo.fft_len(n);
+        let rfft = RfftPlan::new(m);
+        let mut ws = Workspace::new();
+        ws.add_f64(m);
+        ws.add_c64(onesided_len(m));
+        rfft.register_scratch(&mut ws);
+        ws.prewarm();
+        Dct1d { n, algo, rfft, tw: twiddle(n), exec, ws }
+    }
+
+    /// Scratch manifest of one `forward` call; [`Dct1d::prewarm`] makes
+    /// the calling thread allocation-free before its first transform.
+    pub fn workspace(&self) -> &Workspace {
+        &self.ws
+    }
+
+    /// Prewarm the calling thread's scratch pool for this plan.
+    pub fn prewarm(&self) {
+        self.ws.prewarm();
     }
 
     /// Compute the DCT of `x` into `out` (both length n).
@@ -67,13 +97,44 @@ impl Dct1d {
         assert_eq!(x.len(), n);
         assert_eq!(out.len(), n);
         let m = self.algo.fft_len(n);
-        let mut pre = crate::util::scratch::take_f64(m);
+        let mut pre = scratch::take_f64(m);
         self.preprocess(x, &mut pre);
-        let mut spec = crate::util::scratch::take_c64(onesided_len(m));
+        let mut spec = scratch::take_c64(onesided_len(m));
         self.rfft.forward(&pre, &mut spec);
         self.postprocess(&spec, out);
-        crate::util::scratch::give_f64(pre);
-        crate::util::scratch::give_c64(spec);
+        scratch::give_f64(pre);
+        scratch::give_c64(spec);
+    }
+
+    /// Batched forward DCT: `batch` packed length-n signals in `xs` ->
+    /// `batch` packed outputs in `out`. Each of the three stages runs
+    /// across the whole batch — one preprocess sweep, one batched RFFT
+    /// (twiddle tables, bit-reversal schedules, and the pool dispatch
+    /// paid once per batch), one postprocess sweep — chunked over the
+    /// plan's [`ExecPolicy`] lanes. Per-element arithmetic is identical
+    /// to `batch` solo [`Dct1d::forward`] calls, so outputs match
+    /// bit-for-bit (for a fixed FFT kernel).
+    pub fn forward_batch(&self, xs: &[f64], out: &mut [f64], batch: usize) {
+        let n = self.n;
+        assert_eq!(xs.len(), batch * n);
+        assert_eq!(out.len(), batch * n);
+        if batch == 0 {
+            return;
+        }
+        let m = self.algo.fft_len(n);
+        let h = onesided_len(m);
+        let lanes = self.exec.lanes(batch * m);
+        let mut pre = scratch::take_f64(batch * m);
+        par_chunks_mut(&mut pre, m, lanes, |b, row| {
+            self.preprocess(&xs[b * n..(b + 1) * n], row);
+        });
+        let mut spec = scratch::take_c64(batch * h);
+        self.rfft.forward_batch(&pre, &mut spec, lanes);
+        par_chunks_mut(out, n, lanes, |b, orow| {
+            self.postprocess(&spec[b * h..(b + 1) * h], orow);
+        });
+        scratch::give_f64(pre);
+        scratch::give_c64(spec);
     }
 
     /// Preprocessing stage only (exposed for stage-level benches).
@@ -142,11 +203,36 @@ pub struct Idct1d {
     pub n: usize,
     rfft: RfftPlan,
     tw: Arc<Twiddle>,
+    exec: ExecPolicy,
+    ws: Workspace,
 }
 
 impl Idct1d {
     pub fn new(n: usize) -> Idct1d {
-        Idct1d { n, rfft: RfftPlan::new(n), tw: twiddle(n) }
+        Self::with_exec(n, ExecPolicy::Auto)
+    }
+
+    /// Plan with an explicit execution policy (drives
+    /// [`Idct1d::forward_batch`]'s lane fan-out, like
+    /// [`Dct1d::with_exec`]).
+    pub fn with_exec(n: usize, exec: ExecPolicy) -> Idct1d {
+        let rfft = RfftPlan::new(n);
+        let mut ws = Workspace::new();
+        ws.add_c64(onesided_len(n));
+        ws.add_f64(n);
+        rfft.register_scratch(&mut ws);
+        ws.prewarm();
+        Idct1d { n, rfft, tw: twiddle(n), exec, ws }
+    }
+
+    /// Scratch manifest of one `forward` call.
+    pub fn workspace(&self) -> &Workspace {
+        &self.ws
+    }
+
+    /// Prewarm the calling thread's scratch pool for this plan.
+    pub fn prewarm(&self) {
+        self.ws.prewarm();
     }
 
     pub fn forward(&self, x: &[f64], out: &mut [f64]) {
@@ -154,13 +240,39 @@ impl Idct1d {
         assert_eq!(x.len(), n);
         assert_eq!(out.len(), n);
         let h = onesided_len(n);
-        let mut spec = crate::util::scratch::take_c64(h);
+        let mut spec = scratch::take_c64(h);
         self.preprocess(x, &mut spec);
-        let mut v = crate::util::scratch::take_f64(n);
+        let mut v = scratch::take_f64(n);
         self.rfft.inverse(&spec, &mut v);
         super::reorder::unreorder_1d(&v, out);
-        crate::util::scratch::give_c64(spec);
-        crate::util::scratch::give_f64(v);
+        scratch::give_c64(spec);
+        scratch::give_f64(v);
+    }
+
+    /// Batched inverse DCT: the stage-fused mirror of
+    /// [`Dct1d::forward_batch`] (spectrum build sweep, one batched
+    /// inverse RFFT, unreorder sweep). Bit-identical to `batch` solo
+    /// [`Idct1d::forward`] calls for a fixed FFT kernel.
+    pub fn forward_batch(&self, xs: &[f64], out: &mut [f64], batch: usize) {
+        let n = self.n;
+        assert_eq!(xs.len(), batch * n);
+        assert_eq!(out.len(), batch * n);
+        if batch == 0 {
+            return;
+        }
+        let h = onesided_len(n);
+        let lanes = self.exec.lanes(batch * n);
+        let mut spec = scratch::take_c64(batch * h);
+        par_chunks_mut(&mut spec, h, lanes, |b, srow| {
+            self.preprocess(&xs[b * n..(b + 1) * n], srow);
+        });
+        let mut v = scratch::take_f64(batch * n);
+        self.rfft.inverse_batch(&spec, &mut v, lanes);
+        par_chunks_mut(out, n, lanes, |b, orow| {
+            super::reorder::unreorder_1d(&v[b * n..(b + 1) * n], orow);
+        });
+        scratch::give_c64(spec);
+        scratch::give_f64(v);
     }
 
     /// Build the onesided spectrum: V(k) = conj(w_k)/2 (x_k - j x~_k).
@@ -179,11 +291,31 @@ impl Idct1d {
 #[derive(Debug, Clone)]
 pub struct Idxst1d {
     idct: Idct1d,
+    ws: Workspace,
 }
 
 impl Idxst1d {
     pub fn new(n: usize) -> Idxst1d {
-        Idxst1d { idct: Idct1d::new(n) }
+        let idct = Idct1d::new(n);
+        // the shift buffer is held across the whole inner IDCT, so it
+        // must be registered *alongside* the inner plan's classes (a
+        // second simultaneous f64(n) on top of the IDCT's own)
+        let mut ws = Workspace::new();
+        ws.add_f64(n);
+        ws.merge(idct.workspace());
+        ws.prewarm();
+        Idxst1d { idct, ws }
+    }
+
+    /// Scratch manifest of one `forward` call (shift buffer + the inner
+    /// IDCT's own classes).
+    pub fn workspace(&self) -> &Workspace {
+        &self.ws
+    }
+
+    /// Prewarm the calling thread's scratch pool for this plan.
+    pub fn prewarm(&self) {
+        self.ws.prewarm();
     }
 
     /// Transform length.
@@ -197,11 +329,15 @@ impl Idxst1d {
 
     pub fn forward(&self, x: &[f64], out: &mut [f64]) {
         let n = self.idct.n;
-        let mut shifted = vec![0.0; n];
+        // pooled scratch, not a fresh vec: this buffer was the last
+        // per-call allocation left on the 1D hot path
+        let mut shifted = scratch::take_f64(n);
+        shifted[0] = 0.0;
         for i in 1..n {
             shifted[i] = x[n - i];
         }
         self.idct.forward(&shifted, out);
+        scratch::give_f64(shifted);
         for (k, o) in out.iter_mut().enumerate() {
             if k % 2 == 1 {
                 *o = -*o;
@@ -259,6 +395,36 @@ mod tests {
             plan.forward(&x, &mut out);
             check_close(&out, &idxst1d_direct(&x), 1e-9)
         });
+    }
+
+    #[test]
+    fn forward_batch_matches_solo_bitwise() {
+        use crate::parallel::ExecPolicy;
+        let mut rng = crate::util::rng::Rng::new(46);
+        for &(n, batch) in &[(16usize, 5usize), (15, 4), (7, 3), (8, 1)] {
+            let xs = rng.normal_vec(n * batch);
+            for algo in [Algo1d::NPoint, Algo1d::Pad2N] {
+                for exec in [ExecPolicy::Serial, ExecPolicy::Threads(4)] {
+                    let plan = Dct1d::with_exec(n, algo, exec);
+                    let mut want = vec![0.0; n * batch];
+                    for b in 0..batch {
+                        plan.forward(&xs[b * n..(b + 1) * n], &mut want[b * n..(b + 1) * n]);
+                    }
+                    let mut got = vec![0.0; n * batch];
+                    plan.forward_batch(&xs, &mut got, batch);
+                    assert_eq!(got, want, "dct1d {} n={n} batch={batch}", algo.name());
+                }
+            }
+            // inverse side
+            let plan = Idct1d::with_exec(n, ExecPolicy::Threads(3));
+            let mut want = vec![0.0; n * batch];
+            for b in 0..batch {
+                plan.forward(&xs[b * n..(b + 1) * n], &mut want[b * n..(b + 1) * n]);
+            }
+            let mut got = vec![0.0; n * batch];
+            plan.forward_batch(&xs, &mut got, batch);
+            assert_eq!(got, want, "idct1d n={n} batch={batch}");
+        }
     }
 
     #[test]

@@ -66,6 +66,7 @@ pub struct Dct2 {
     tw2: Arc<Twiddle>,
     policy: ExecPolicy,
     shards: ShardPolicy,
+    ws: scratch::Workspace,
 }
 
 impl Dct2 {
@@ -76,16 +77,36 @@ impl Dct2 {
     /// Plan with an explicit execution policy (threaded through all
     /// three stages and the inner 2D RFFT).
     pub fn with_policy(n1: usize, n2: usize, policy: ExecPolicy) -> Dct2 {
+        let h2 = onesided_len(n2);
+        let rfft2 = Rfft2Plan::with_policy(n1, n2, policy);
+        let mut ws = scratch::Workspace::new();
+        ws.add_f64(n1 * n2); // reordered input
+        ws.add_c64(n1 * h2); // onesided spectrum
+        ws.merge(&rfft2.workspace());
+        ws.prewarm();
         Dct2 {
             n1,
             n2,
-            h2: onesided_len(n2),
-            rfft2: Rfft2Plan::with_policy(n1, n2, policy),
+            h2,
+            rfft2,
             tw1: twiddle(n1),
             tw2: twiddle(n2),
             policy,
             shards: ShardPolicy::Auto,
+            ws,
         }
+    }
+
+    /// Scratch manifest of one `forward` call, pre-sized at plan build
+    /// (see [`crate::util::scratch::Workspace`] for the lifetime rules).
+    pub fn workspace(&self) -> &scratch::Workspace {
+        &self.ws
+    }
+
+    /// Prewarm the calling thread's scratch pool so its next `forward`
+    /// performs zero heap allocations.
+    pub fn prewarm(&self) {
+        self.ws.prewarm();
     }
 
     /// Same plan with an explicit band-shard policy, threaded through
@@ -157,8 +178,8 @@ impl Dct2 {
         let n1 = self.n1;
         // the §III-B row pair is the postprocess shard unit
         let lanes = self.bands(n1 / 2 + 1);
-        let mut pairs = claim_row_pairs(out, n1, self.n2);
-        if lanes > 1 && pairs.len() > 1 {
+        if lanes > 1 && n1 / 2 + 1 > 1 {
+            let pairs = claim_row_pairs(out, n1, self.n2);
             let groups = split_groups(pairs, lanes);
             let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = groups
                 .into_iter()
@@ -172,10 +193,59 @@ impl Dct2 {
                 .collect();
             global_pool().scope(jobs);
         } else {
-            for (k1, top, bot) in pairs.drain(..) {
-                self.postprocess_pair(spec, k1, top, bot);
+            self.postprocess_serial(spec, out);
+        }
+    }
+
+    /// Single-band postprocess: the same row-pair walk as the parallel
+    /// path (identical arithmetic, ascending k1) but carving the two
+    /// rows out of `out` with `split_at_mut` instead of materializing a
+    /// pair list — this keeps the serial hot path allocation-free.
+    fn postprocess_serial(&self, spec: &[C64], out: &mut [f64]) {
+        let (n1, n2) = (self.n1, self.n2);
+        for k1 in 0..=n1 / 2 {
+            let m1 = (n1 - k1) % n1;
+            if m1 == k1 {
+                let top = &mut out[k1 * n2..(k1 + 1) * n2];
+                self.postprocess_pair(spec, k1, top, None);
+            } else {
+                // k1 <= n1/2 <= m1 and they differ, so k1's row ends
+                // before m1's begins
+                let (head, tail) = out.split_at_mut(m1 * n2);
+                let top = &mut head[k1 * n2..(k1 + 1) * n2];
+                let bot = &mut tail[..n2];
+                self.postprocess_pair(spec, k1, top, Some(bot));
             }
         }
+    }
+
+    /// Batched forward DCT: `batch` packed (n1 x n2) blocks in `xs` ->
+    /// `batch` packed blocks in `out`. Each stage runs across the whole
+    /// batch — a reorder sweep, the inner [`Rfft2Plan::forward_batch`]
+    /// (whose row stage is one batched RFFT over all `batch*n1` rows),
+    /// and a postprocess sweep — so one [`ExecPolicy`] dispatch covers
+    /// the batch instead of one per transform. Per-block arithmetic is
+    /// the serial kernel's, so the output is bit-identical to `batch`
+    /// solo [`Dct2::forward`] calls (for a fixed FFT kernel).
+    pub fn forward_batch(&self, xs: &[f64], out: &mut [f64], batch: usize) {
+        let (n1, n2, h2) = (self.n1, self.n2, self.h2);
+        assert_eq!(xs.len(), batch * n1 * n2);
+        assert_eq!(out.len(), batch * n1 * n2);
+        if batch == 0 {
+            return;
+        }
+        let lanes = self.policy.lanes(batch * n1 * n2);
+        let mut pre = scratch::take_f64(batch * n1 * n2);
+        par_chunks_mut(&mut pre, n1 * n2, lanes, |b, block| {
+            reorder_2d_scatter(&xs[b * n1 * n2..(b + 1) * n1 * n2], block, n1, n2);
+        });
+        let mut spec = scratch::take_c64(batch * n1 * h2);
+        self.rfft2.forward_batch(&pre, &mut spec, batch);
+        par_chunks_mut(out, n1 * n2, lanes, |b, block| {
+            self.postprocess_serial(&spec[b * n1 * h2..(b + 1) * n1 * h2], block);
+        });
+        scratch::give_f64(pre);
+        scratch::give_c64(spec);
     }
 
     /// Postprocess one row pair (k1, N1-k1): reads spectrum rows k1 and
@@ -256,6 +326,7 @@ pub struct Idct2 {
     tw2: Arc<Twiddle>,
     policy: ExecPolicy,
     shards: ShardPolicy,
+    ws: scratch::Workspace,
 }
 
 impl Idct2 {
@@ -265,16 +336,35 @@ impl Idct2 {
 
     /// Plan with an explicit execution policy.
     pub fn with_policy(n1: usize, n2: usize, policy: ExecPolicy) -> Idct2 {
+        let h2 = onesided_len(n2);
+        let rfft2 = Rfft2Plan::with_policy(n1, n2, policy);
+        let mut ws = scratch::Workspace::new();
+        ws.add_c64(n1 * h2); // onesided spectrum build
+        ws.add_f64(n1 * n2); // inverse-RFFT output before the unreorder
+        ws.merge(&rfft2.workspace());
+        ws.prewarm();
         Idct2 {
             n1,
             n2,
-            h2: onesided_len(n2),
-            rfft2: Rfft2Plan::with_policy(n1, n2, policy),
+            h2,
+            rfft2,
             tw1: twiddle(n1),
             tw2: twiddle(n2),
             policy,
             shards: ShardPolicy::Auto,
+            ws,
         }
+    }
+
+    /// Scratch manifest of one `forward` call, pre-sized at plan build.
+    pub fn workspace(&self) -> &scratch::Workspace {
+        &self.ws
+    }
+
+    /// Prewarm the calling thread's scratch pool so its next `forward`
+    /// performs zero heap allocations.
+    pub fn prewarm(&self) {
+        self.ws.prewarm();
     }
 
     /// Same plan with an explicit band-shard policy (see
@@ -325,6 +415,35 @@ impl Idct2 {
             fft: (t2 - t1).as_secs_f64(),
             post: (t3 - t2).as_secs_f64(),
         }
+    }
+
+    /// Batched inverse DCT: the stage-fused mirror of
+    /// [`Dct2::forward_batch`] — a spectrum-build sweep over the batch,
+    /// one [`Rfft2Plan::inverse_batch`], and an unreorder sweep.
+    /// Bit-identical to `batch` solo [`Idct2::forward`] calls for a
+    /// fixed FFT kernel.
+    pub fn forward_batch(&self, xs: &[f64], out: &mut [f64], batch: usize) {
+        let (n1, n2, h2) = (self.n1, self.n2, self.h2);
+        assert_eq!(xs.len(), batch * n1 * n2);
+        assert_eq!(out.len(), batch * n1 * n2);
+        if batch == 0 {
+            return;
+        }
+        let lanes = self.policy.lanes(batch * n1 * n2);
+        let mut spec = scratch::take_c64(batch * n1 * h2);
+        par_chunks_mut(&mut spec, n1 * h2, lanes, |b, sblock| {
+            let xb = &xs[b * n1 * n2..(b + 1) * n1 * n2];
+            for (k1, srow) in sblock.chunks_mut(h2).enumerate() {
+                self.preprocess_row(xb, k1, srow);
+            }
+        });
+        let mut v = scratch::take_f64(batch * n1 * n2);
+        self.rfft2.inverse_batch(&spec, &mut v, batch);
+        par_chunks_mut(out, n1 * n2, lanes, |b, block| {
+            unreorder_2d(&v[b * n1 * n2..(b + 1) * n1 * n2], block, n1, n2);
+        });
+        scratch::give_c64(spec);
+        scratch::give_f64(v);
     }
 
     /// Onesided spectrum build (corrected Eq. 15): each entry reads the
@@ -459,6 +578,34 @@ mod tests {
                     .with_shards(ShardPolicy::MaxShards(shards))
                     .forward(&yp, &mut bp);
                 assert_eq!(bs, bp, "idct2 ({n1},{n2}) shards={shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_batch_matches_solo_bitwise() {
+        use crate::parallel::ExecPolicy;
+        let mut rng = crate::util::rng::Rng::new(42);
+        for &(n1, n2, batch) in &[(8usize, 8usize, 7usize), (9, 15, 4), (13, 7, 3), (16, 16, 1)] {
+            let xs = rng.normal_vec(n1 * n2 * batch);
+            for exec in [ExecPolicy::Serial, ExecPolicy::Threads(4)] {
+                let fwd = Dct2::with_policy(n1, n2, exec);
+                let inv = Idct2::with_policy(n1, n2, exec);
+                let numel = n1 * n2;
+                let mut want = vec![0.0; numel * batch];
+                for (b, w) in want.chunks_mut(numel).enumerate() {
+                    fwd.forward(&xs[b * numel..(b + 1) * numel], w);
+                }
+                let mut got = vec![0.0; numel * batch];
+                fwd.forward_batch(&xs, &mut got, batch);
+                assert_eq!(got, want, "dct2 ({n1},{n2}) batch={batch} {exec:?}");
+                let mut bwant = vec![0.0; numel * batch];
+                for (b, w) in bwant.chunks_mut(numel).enumerate() {
+                    inv.forward(&want[b * numel..(b + 1) * numel], w);
+                }
+                let mut bgot = vec![0.0; numel * batch];
+                inv.forward_batch(&got, &mut bgot, batch);
+                assert_eq!(bgot, bwant, "idct2 ({n1},{n2}) batch={batch} {exec:?}");
             }
         }
     }

@@ -50,6 +50,7 @@ pub struct Dct3d {
     tw3: Arc<Twiddle>,
     policy: ExecPolicy,
     shards: ShardPolicy,
+    ws: crate::util::scratch::Workspace,
 }
 
 impl Dct3d {
@@ -61,17 +62,34 @@ impl Dct3d {
     /// Plan with an explicit execution policy: all three stages
     /// parallelize over (i)-slabs of the tensor.
     pub fn with_policy(n1: usize, n2: usize, n3: usize, policy: ExecPolicy) -> Dct3d {
+        let rfft3 = Rfft3Plan::with_policy(n1, n2, n3, policy);
+        let mut ws = crate::util::scratch::Workspace::new();
+        ws.add_f64(n1 * n2 * n3); // reordered input
+        ws.add_c64(n1 * n2 * onesided_len(n3)); // onesided spectrum
+        ws.merge(&rfft3.workspace());
+        ws.prewarm();
         Dct3d {
             n1,
             n2,
             n3,
-            rfft3: Rfft3Plan::with_policy(n1, n2, n3, policy),
+            rfft3,
             tw1: twiddle(n1),
             tw2: twiddle(n2),
             tw3: twiddle(n3),
             policy,
             shards: ShardPolicy::Auto,
+            ws,
         }
+    }
+
+    /// Scratch manifest of one `forward` call, pre-sized at plan build.
+    pub fn workspace(&self) -> &crate::util::scratch::Workspace {
+        &self.ws
+    }
+
+    /// Prewarm the calling thread's scratch pool for this plan.
+    pub fn prewarm(&self) {
+        self.ws.prewarm();
     }
 
     /// Same plan with an explicit band-shard policy (see
@@ -182,6 +200,7 @@ pub struct Idct3d {
     tw3: Arc<Twiddle>,
     policy: ExecPolicy,
     shards: ShardPolicy,
+    ws: crate::util::scratch::Workspace,
 }
 
 impl Idct3d {
@@ -192,18 +211,36 @@ impl Idct3d {
 
     /// Plan with an explicit execution policy.
     pub fn with_policy(n1: usize, n2: usize, n3: usize, policy: ExecPolicy) -> Idct3d {
+        let h3 = onesided_len(n3);
+        let rfft3 = Rfft3Plan::with_policy(n1, n2, n3, policy);
+        let mut ws = crate::util::scratch::Workspace::new();
+        ws.add_c64(n1 * n2 * h3); // onesided spectrum build
+        ws.add_f64(n1 * n2 * n3); // inverse-RFFT output before unreorder
+        ws.merge(&rfft3.workspace());
+        ws.prewarm();
         Idct3d {
             n1,
             n2,
             n3,
-            h3: onesided_len(n3),
-            rfft3: Rfft3Plan::with_policy(n1, n2, n3, policy),
+            h3,
+            rfft3,
             tw1: twiddle(n1),
             tw2: twiddle(n2),
             tw3: twiddle(n3),
             policy,
             shards: ShardPolicy::Auto,
+            ws,
         }
+    }
+
+    /// Scratch manifest of one `forward` call, pre-sized at plan build.
+    pub fn workspace(&self) -> &crate::util::scratch::Workspace {
+        &self.ws
+    }
+
+    /// Prewarm the calling thread's scratch pool for this plan.
+    pub fn prewarm(&self) {
+        self.ws.prewarm();
     }
 
     /// Same plan with an explicit band-shard policy (see

@@ -2,8 +2,19 @@
 //! for higher dimensions: "a 4D DCT can be factorized into two rounds of
 //! 2D DCTs. We can compute the DCT along any two dimensions at first and
 //! then perform DCT along the other two dimensions."
+//!
+//! Execution: the plan carries an [`ExecPolicy`] and fans each round out
+//! over its *slice* dimension (every (n3, n4) slice in round 1, every
+//! (n1, n2) fibre in round 2 — mirroring [`super::dct3d::Dct3d`]'s slab
+//! fan-out), with the block transposes between rounds running the
+//! parallel tiled transpose. The inner 2D plans are deliberately serial:
+//! a 4D tensor has `n1*n2` round-1 slices, so the outer loop is the wide
+//! axis and keeping the inner kernels serial makes the output identical
+//! across lane counts.
 
 use super::dct2d::Dct2;
+use crate::parallel::{par_chunks_mut, transpose_into, ExecPolicy};
+use crate::util::scratch;
 
 /// 4D DCT plan over a row-major (n1, n2, n3, n4) tensor.
 #[derive(Debug, Clone)]
@@ -16,41 +27,77 @@ pub struct Dct4d {
     tail: Dct2,
     /// fused 2D plan for the leading axis pair (n1, n2)
     head: Dct2,
+    policy: ExecPolicy,
+    ws: scratch::Workspace,
 }
 
 impl Dct4d {
     pub fn new(n1: usize, n2: usize, n3: usize, n4: usize) -> Dct4d {
-        Dct4d { n1, n2, n3, n4, tail: Dct2::new(n3, n4), head: Dct2::new(n1, n2) }
+        Self::with_policy(n1, n2, n3, n4, ExecPolicy::Auto)
+    }
+
+    /// Plan with an explicit execution policy: both 2D rounds run
+    /// through `parallel_for`-style chunking over their slice dimension,
+    /// and the inter-round transposes band over the same lane count.
+    pub fn with_policy(n1: usize, n2: usize, n3: usize, n4: usize, policy: ExecPolicy) -> Dct4d {
+        let tail = Dct2::with_policy(n3, n4, ExecPolicy::Serial);
+        let head = Dct2::with_policy(n1, n2, ExecPolicy::Serial);
+        let mut ws = scratch::Workspace::new();
+        for _ in 0..3 {
+            // the three full-tensor round buffers (a, at, b) coexist
+            ws.add_f64(n1 * n2 * n3 * n4);
+        }
+        ws.merge(tail.workspace());
+        ws.merge(head.workspace());
+        ws.prewarm();
+        Dct4d { n1, n2, n3, n4, tail, head, policy, ws }
+    }
+
+    /// Scratch manifest of one `forward` call (three full-tensor round
+    /// buffers plus the inner 2D plans' classes).
+    pub fn workspace(&self) -> &scratch::Workspace {
+        &self.ws
+    }
+
+    /// Prewarm the calling thread's scratch pool for this plan.
+    pub fn prewarm(&self) {
+        self.ws.prewarm();
+    }
+
+    /// Lane count for a stage touching the whole tensor.
+    fn lanes(&self) -> usize {
+        self.policy.lanes(self.n1 * self.n2 * self.n3 * self.n4)
     }
 
     /// Full 4D DCT: round 1 transforms every (n3, n4) slice; round 2
     /// transforms every (n1, n2) fibre (via a block transpose so each
-    /// round runs the fused 2D kernel on contiguous data).
+    /// round runs the fused 2D kernel on contiguous data). Both rounds
+    /// fan their independent slices over the shared pool.
     pub fn forward(&self, x: &[f64], out: &mut [f64]) {
-        let (n1, n2, n3, n4) = (self.n1, self.n2, self.n3, self.n4);
-        let lead = n1 * n2;
-        let tail = n3 * n4;
+        let lead = self.n1 * self.n2;
+        let tail = self.n3 * self.n4;
         assert_eq!(x.len(), lead * tail);
         assert_eq!(out.len(), lead * tail);
+        let lanes = self.lanes();
 
         // round 1: 2D DCT over (n3, n4) for each leading index
-        let mut a = crate::util::scratch::take_f64(lead * tail);
-        for s in 0..lead {
-            self.tail.forward(&x[s * tail..(s + 1) * tail], &mut a[s * tail..(s + 1) * tail]);
-        }
+        let mut a = scratch::take_f64(lead * tail);
+        par_chunks_mut(&mut a, tail, lanes, |s, slice| {
+            self.tail.forward(&x[s * tail..(s + 1) * tail], slice);
+        });
         // transpose to (n3*n4, n1*n2) so the leading pair is contiguous
-        let mut at = crate::util::scratch::take_f64(lead * tail);
-        super::row_column::transpose(&a, &mut at, lead, tail);
+        let mut at = scratch::take_f64(lead * tail);
+        transpose_into(&a, &mut at, lead, tail, lanes);
         // round 2: 2D DCT over (n1, n2) for each trailing index
-        let mut b = crate::util::scratch::take_f64(lead * tail);
-        for s in 0..tail {
-            self.head.forward(&at[s * lead..(s + 1) * lead], &mut b[s * lead..(s + 1) * lead]);
-        }
+        let mut b = scratch::take_f64(lead * tail);
+        par_chunks_mut(&mut b, lead, lanes, |s, slice| {
+            self.head.forward(&at[s * lead..(s + 1) * lead], slice);
+        });
         // transpose back to (n1, n2, n3, n4)
-        super::row_column::transpose(&b, out, tail, lead);
-        crate::util::scratch::give_f64(a);
-        crate::util::scratch::give_f64(at);
-        crate::util::scratch::give_f64(b);
+        transpose_into(&b, out, tail, lead, lanes);
+        scratch::give_f64(a);
+        scratch::give_f64(at);
+        scratch::give_f64(b);
     }
 }
 
@@ -98,6 +145,22 @@ mod tests {
             plan.forward(&x, &mut out);
             check_close(&out, &dct4d_direct(&x, dims), 1e-9)
                 .unwrap_or_else(|e| panic!("{dims:?}: {e}"));
+        }
+    }
+
+    #[test]
+    fn parallel_policy_is_bit_equal_to_serial() {
+        let mut rng = Rng::new(902);
+        for dims in [[2usize, 3, 4, 5], [4, 4, 4, 4], [3, 1, 5, 2], [2, 7, 3, 3]] {
+            let total: usize = dims.iter().product();
+            let x = rng.normal_vec(total);
+            let mut ys = vec![0.0; total];
+            Dct4d::with_policy(dims[0], dims[1], dims[2], dims[3], ExecPolicy::Serial)
+                .forward(&x, &mut ys);
+            let mut yp = vec![0.0; total];
+            Dct4d::with_policy(dims[0], dims[1], dims[2], dims[3], ExecPolicy::Threads(4))
+                .forward(&x, &mut yp);
+            assert_eq!(ys, yp, "dct4d {dims:?}");
         }
     }
 

@@ -56,6 +56,14 @@ impl BluesteinPlan {
         self.inner.kernel()
     }
 
+    /// Register one transform's scratch: the length-M convolution
+    /// buffer plus whatever the inner power-of-two kernel takes while
+    /// that buffer is held.
+    pub(crate) fn register_scratch(&self, ws: &mut crate::util::scratch::Workspace) {
+        ws.add_c64(self.m);
+        self.inner.register_scratch(ws, 1);
+    }
+
     /// Forward DFT (unnormalized, negative-exponent convention).
     pub fn forward(&self, data: &mut [C64]) {
         self.transform(data, false)

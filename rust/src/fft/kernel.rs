@@ -115,6 +115,16 @@ impl Pow2Plan {
         }
     }
 
+    /// Register the scratch classes one transform of this kernel takes
+    /// (`ncols <= 1` = the 1D path, else the blocked column path). The
+    /// scalar radix-2 kernel runs fully in place and registers nothing.
+    pub(crate) fn register_scratch(&self, ws: &mut crate::util::scratch::Workspace, ncols: usize) {
+        match self {
+            Pow2Plan::Scalar(_) => {}
+            Pow2Plan::SplitRadix(p) => p.register_scratch(ws, ncols),
+        }
+    }
+
     /// In-place forward FFT (unnormalized).
     pub fn forward(&self, data: &mut [C64]) {
         match self {

@@ -48,7 +48,7 @@ impl Rfft2Plan {
 
     /// Plan with an explicit execution policy.
     pub fn with_policy(n1: usize, n2: usize, policy: ExecPolicy) -> Rfft2Plan {
-        Rfft2Plan {
+        let p = Rfft2Plan {
             n1,
             n2,
             h2: onesided_len(n2),
@@ -56,7 +56,28 @@ impl Rfft2Plan {
             col: plan(n1),
             policy,
             shards: ShardPolicy::Auto,
-        }
+        };
+        p.workspace().prewarm();
+        p
+    }
+
+    /// Scratch manifest of one `forward`/`inverse` call (see
+    /// [`crate::util::scratch::Workspace`]): the per-row RFFT scratch,
+    /// the column stage's in-place panel or transpose route, and the
+    /// inverse's working copy of the spectrum.
+    pub fn workspace(&self) -> scratch::Workspace {
+        let mut ws = scratch::Workspace::new();
+        self.row.register_scratch(&mut ws);
+        // column stage, in-place blocked path
+        self.col.register_scratch_cols(&mut ws, self.h2);
+        // column stage, transpose route: the transposed copy is held
+        // while the per-row 1D transforms run
+        ws.add_c64(self.n1 * self.h2);
+        self.col.register_scratch(&mut ws);
+        // inverse holds its working spectrum copy across the column
+        // stage (same class as the transpose buffer, so multiplicity 2)
+        ws.add_c64(self.n1 * self.h2);
+        ws
     }
 
     /// Same plan with an explicit band-shard policy: every banded stage
@@ -122,6 +143,53 @@ impl Rfft2Plan {
             self.row
                 .inverse(&work[r * h2..(r + 1) * h2], &mut out[r * self.n2..(r + 1) * self.n2]);
         }
+        scratch::give_c64(work);
+    }
+
+    /// Batched forward: `batch` independent (n1 x n2) blocks packed in
+    /// `x` -> `batch` (n1 x h2) onesided blocks in `out`. The row stage
+    /// runs as **one** batched RFFT over all `batch*n1` rows (one pool
+    /// dispatch, twiddle tables and bit-reversal schedules shared),
+    /// then the column stage fans out per block, each block running the
+    /// same serial column kernel as a solo [`Rfft2Plan::forward`] — so
+    /// the output is bit-identical to looping `forward` block by block
+    /// with a serial plan.
+    pub fn forward_batch(&self, x: &[f64], out: &mut [C64], batch: usize) {
+        let (n1, n2, h2) = (self.n1, self.n2, self.h2);
+        assert_eq!(x.len(), batch * n1 * n2);
+        assert_eq!(out.len(), batch * n1 * h2);
+        if batch == 0 {
+            return;
+        }
+        let lanes = self.policy.lanes(batch * n1 * n2);
+        self.row.forward_batch(x, out, lanes);
+        par_chunks_mut(out, n1 * h2, lanes, |_b, block| {
+            if !self.col.try_transform_cols(block, h2, false) {
+                self.col_fft_via_transpose(block, false, 1);
+            }
+        });
+    }
+
+    /// Batched inverse: `batch` onesided (n1 x h2) blocks -> `batch`
+    /// real (n1 x n2) blocks, normalized; the exact batched mirror of
+    /// [`Rfft2Plan::forward_batch`] (per-block column stage first, then
+    /// one batched inverse RFFT over all rows).
+    pub fn inverse_batch(&self, spec: &[C64], out: &mut [f64], batch: usize) {
+        let (n1, n2, h2) = (self.n1, self.n2, self.h2);
+        assert_eq!(spec.len(), batch * n1 * h2);
+        assert_eq!(out.len(), batch * n1 * n2);
+        if batch == 0 {
+            return;
+        }
+        let lanes = self.policy.lanes(batch * n1 * n2);
+        let mut work = scratch::take_c64(spec.len());
+        work.copy_from_slice(spec);
+        par_chunks_mut(&mut work, n1 * h2, lanes, |_b, block| {
+            if !self.col.try_transform_cols(block, h2, true) {
+                self.col_fft_via_transpose(block, true, 1);
+            }
+        });
+        self.row.inverse_batch(&work, out, lanes);
         scratch::give_c64(work);
     }
 
@@ -218,7 +286,7 @@ impl Rfft3Plan {
 
     /// Plan with an explicit execution policy.
     pub fn with_policy(n1: usize, n2: usize, n3: usize, policy: ExecPolicy) -> Rfft3Plan {
-        Rfft3Plan {
+        let p = Rfft3Plan {
             n1,
             n2,
             n3,
@@ -228,7 +296,31 @@ impl Rfft3Plan {
             p2: plan(n2),
             policy,
             shards: ShardPolicy::Auto,
-        }
+        };
+        p.workspace().prewarm();
+        p
+    }
+
+    /// Scratch manifest of one `forward`/`inverse` call (see
+    /// [`crate::util::scratch::Workspace`]): per-row RFFT scratch, the
+    /// n2-axis stage's panel or per-column buffer, the n1-axis stage's
+    /// transpose route, and the inverse's working spectrum copy.
+    pub fn workspace(&self) -> scratch::Workspace {
+        let (n1, n2, h3) = (self.n1, self.n2, self.h3);
+        let mut ws = scratch::Workspace::new();
+        self.row.register_scratch(&mut ws);
+        // n2-axis stage: blocked in-place panel, or the per-column
+        // gather buffer + inner 1D scratch on Bluestein sizes
+        self.p2.register_scratch_cols(&mut ws, h3);
+        ws.add_c64(n2);
+        self.p2.register_scratch(&mut ws);
+        // n1-axis stage: in-place panel or transpose route
+        self.p1.register_scratch_cols(&mut ws, n2 * h3);
+        ws.add_c64(n1 * n2 * h3);
+        self.p1.register_scratch(&mut ws);
+        // inverse holds its working spectrum copy across both stages
+        ws.add_c64(n1 * n2 * h3);
+        ws
     }
 
     /// Same plan with an explicit band-shard policy: every banded stage
@@ -290,7 +382,7 @@ impl Rfft3Plan {
         let p2 = &self.p2;
         par_chunks_mut(data, n2 * h3, slabs, |_i, slab| {
             if !p2.try_transform_cols(slab, h3, invert) {
-                let mut buf2 = vec![C64::default(); n2];
+                let mut buf2 = scratch::take_c64(n2);
                 for c in 0..h3 {
                     for j in 0..n2 {
                         buf2[j] = slab[j * h3 + c];
@@ -304,6 +396,7 @@ impl Rfft3Plan {
                         slab[j * h3 + c] = buf2[j];
                     }
                 }
+                scratch::give_c64(buf2);
             }
         });
     }

@@ -73,6 +73,32 @@ impl FftPlan {
         }
     }
 
+    /// Register the scratch classes one 1D transform takes (Bluestein's
+    /// convolution buffer + inner kernel scratch; the SoA kernel's
+    /// planar pair; nothing for the scalar kernel).
+    pub(crate) fn register_scratch(&self, ws: &mut crate::util::scratch::Workspace) {
+        match self {
+            FftPlan::Pow2(p) => p.register_scratch(ws, 1),
+            FftPlan::Bluestein(p) => p.register_scratch(ws),
+        }
+    }
+
+    /// Register the scratch one *column-stage* call takes for `ncols`
+    /// columns: the blocked in-place panel path for power-of-two sizes;
+    /// Bluestein sizes run per-row 1D transforms behind a transpose (the
+    /// transpose buffer itself belongs to the caller and is registered
+    /// there).
+    pub(crate) fn register_scratch_cols(
+        &self,
+        ws: &mut crate::util::scratch::Workspace,
+        ncols: usize,
+    ) {
+        match self {
+            FftPlan::Pow2(p) => p.register_scratch(ws, ncols),
+            FftPlan::Bluestein(p) => p.register_scratch(ws),
+        }
+    }
+
     /// Axis-0 FFT of a row-major (n x ncols) matrix when this plan has a
     /// power-of-two kernel; returns false (data untouched) for Bluestein
     /// sizes, whose column stages go through the transpose path instead.

@@ -53,6 +53,14 @@ impl RfftPlan {
         }
     }
 
+    /// Register one transform's scratch classes: the packed complex
+    /// buffer (half size for even n, full for odd) plus the inner
+    /// complex plan's own scratch while that buffer is held.
+    pub(crate) fn register_scratch(&self, ws: &mut crate::util::scratch::Workspace) {
+        ws.add_c64(if self.even { self.n / 2 } else { self.n });
+        self.inner.register_scratch(ws);
+    }
+
     /// Forward RFFT: real input (len n) -> onesided spectrum (len n/2+1).
     pub fn forward(&self, x: &[f64], out: &mut [C64]) {
         assert_eq!(x.len(), self.n);

@@ -113,6 +113,19 @@ impl SoaPlan {
         SoaPlan { n, rev, first_radix2, stages }
     }
 
+    /// Register the planar scratch classes one transform takes — the
+    /// 1D path's pair of full planes for `ncols <= 1`, the column
+    /// path's pair of panel planes otherwise (see
+    /// [`crate::util::scratch::Workspace`]).
+    pub(crate) fn register_scratch(&self, ws: &mut scratch::Workspace, ncols: usize) {
+        if self.n <= 1 {
+            return;
+        }
+        let len = if ncols <= 1 { self.n } else { self.n * panel_cols().min(ncols) };
+        ws.add_f64(len);
+        ws.add_f64(len);
+    }
+
     /// In-place forward FFT (negative-exponent convention, unnormalized).
     pub fn forward(&self, data: &mut [C64]) {
         self.transform(data, false);

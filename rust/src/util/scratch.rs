@@ -1,4 +1,5 @@
-//! Thread-local scratch-buffer pool.
+//! Thread-local scratch-buffer pool and the plan-owned [`Workspace`]
+//! manifest built on top of it.
 //!
 //! §Perf iteration 1: the transform hot paths allocated (and page-faulted)
 //! multi-megabyte buffers per call; recycling them per thread removed
@@ -14,8 +15,21 @@
 //! leak-by-retention (the hot paths hold at most a couple of buffers of
 //! any one class at a time, so the cap never costs a reallocation
 //! there).
+//!
+//! §Perf iteration 5 (the batched-engine PR): every fused plan now owns
+//! a [`Workspace`] — the manifest of scratch size classes its hot path
+//! takes — assembled at plan-build time by each layer registering its
+//! own classes (`register_scratch` on the FFT plans). The constructor
+//! prewarms the building thread's pool from that manifest, so
+//! `forward`/`inverse` perform **zero heap allocations** from the very
+//! first call on that thread; any other thread is warm after its first
+//! call (the pool is thread-local by design). [`pool_misses`] is the
+//! debug allocation guard: it counts, per thread, every `take_*` that
+//! had to heap-allocate, so a test can assert a warmed hot path never
+//! advances it (see `tests/alloc_free.rs` for the stronger
+//! counting-global-allocator assertion).
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 
 use crate::fft::C64;
@@ -32,6 +46,31 @@ struct Pool {
 
 thread_local! {
     static POOL: RefCell<Pool> = RefCell::new(Pool::default());
+    static MISSES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// How many times this thread's pool missed (a `take_*` that had to
+/// heap-allocate) since the thread started. The counter is monotonic;
+/// callers snapshot it around a hot section and assert it did not move.
+/// This is the debug allocation guard the zero-allocation contract is
+/// asserted with.
+pub fn pool_misses() -> u64 {
+    MISSES.with(Cell::get)
+}
+
+fn note_miss() {
+    MISSES.with(|m| m.set(m.get() + 1));
+}
+
+/// Drop every buffer retained by this thread's pool. Benches use this to
+/// measure the allocate-per-call behaviour the pool (and the plan-owned
+/// [`Workspace`] prewarm) replaced.
+pub fn clear_thread_pool() {
+    POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        p.f64s.clear();
+        p.c64s.clear();
+    });
 }
 
 /// Take an f64 buffer of exactly `len` (contents unspecified).
@@ -40,7 +79,10 @@ pub fn take_f64(len: usize) -> Vec<f64> {
         let mut p = p.borrow_mut();
         match p.f64s.get_mut(&len).and_then(Vec::pop) {
             Some(v) => v,
-            None => vec![0.0; len],
+            None => {
+                note_miss();
+                vec![0.0; len]
+            }
         }
     })
 }
@@ -63,7 +105,10 @@ pub fn take_c64(len: usize) -> Vec<C64> {
         let mut p = p.borrow_mut();
         match p.c64s.get_mut(&len).and_then(Vec::pop) {
             Some(v) => v,
-            None => vec![C64::default(); len],
+            None => {
+                note_miss();
+                vec![C64::default(); len]
+            }
         }
     })
 }
@@ -90,6 +135,88 @@ pub fn retained_f64(len: usize) -> usize {
 /// (tests / metrics).
 pub fn retained_c64(len: usize) -> usize {
     POOL.with(|p| p.borrow().c64s.get(&len).map_or(0, Vec::len))
+}
+
+/// Plan-owned scratch manifest: the size classes (with multiplicity) a
+/// plan's hot path takes from the thread-local pool.
+///
+/// Built once at plan-build time — each layer registers its own classes
+/// (the fused DCT plans register their pre/spectrum buffers, the FFT
+/// plans beneath them register packed-complex, convolution, and planar
+/// kernel scratch) — then [`Workspace::prewarm`] populates the current
+/// thread's pool so every registered `take_*` is a hit.
+///
+/// Lifetime rules: buffers live in the *thread-local* pool, not in the
+/// plan, so a plan stays `Sync` and concurrent `forward` calls never
+/// contend. The constructor prewarms the building thread; any other
+/// thread that executes the plan is warm after its first call, and a
+/// caller that needs first-call-allocation-free execution on a worker
+/// thread calls `prewarm` there itself. Multiplicity above
+/// [`MAX_RETAINED_PER_CLASS`] cannot be retained and is clamped by the
+/// pool's cap.
+#[derive(Debug, Clone, Default)]
+pub struct Workspace {
+    f64_lens: Vec<usize>,
+    c64_lens: Vec<usize>,
+}
+
+impl Workspace {
+    /// Empty manifest.
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Register one f64 scratch buffer of `len` elements (call twice for
+    /// two simultaneously-held buffers of the same class).
+    pub fn add_f64(&mut self, len: usize) {
+        if len > 0 {
+            self.f64_lens.push(len);
+        }
+    }
+
+    /// Register one C64 scratch buffer of `len` elements.
+    pub fn add_c64(&mut self, len: usize) {
+        if len > 0 {
+            self.c64_lens.push(len);
+        }
+    }
+
+    /// Absorb every class another manifest registered (plans compose
+    /// their own classes with their sub-plans' this way).
+    pub fn merge(&mut self, other: &Workspace) {
+        self.f64_lens.extend_from_slice(&other.f64_lens);
+        self.c64_lens.extend_from_slice(&other.c64_lens);
+    }
+
+    /// Total registered f64 elements (introspection / capacity planning).
+    pub fn f64_elems(&self) -> usize {
+        self.f64_lens.iter().sum()
+    }
+
+    /// Total registered C64 elements.
+    pub fn c64_elems(&self) -> usize {
+        self.c64_lens.iter().sum()
+    }
+
+    /// Whether nothing has been registered.
+    pub fn is_empty(&self) -> bool {
+        self.f64_lens.is_empty() && self.c64_lens.is_empty()
+    }
+
+    /// Populate the **current thread's** pool so that every registered
+    /// class holds at least its registered multiplicity: all buffers are
+    /// taken first (forcing the pool to materialize the full working
+    /// set) and then returned. Idempotent and cheap when already warm.
+    pub fn prewarm(&self) {
+        let held_f: Vec<Vec<f64>> = self.f64_lens.iter().map(|&l| take_f64(l)).collect();
+        let held_c: Vec<Vec<C64>> = self.c64_lens.iter().map(|&l| take_c64(l)).collect();
+        for v in held_f {
+            give_f64(v);
+        }
+        for v in held_c {
+            give_c64(v);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -145,5 +272,49 @@ mod tests {
             give_c64(v);
         }
         assert_eq!(retained_c64(len), MAX_RETAINED_PER_CLASS);
+    }
+
+    #[test]
+    fn workspace_prewarm_makes_takes_hit() {
+        // distinctive lengths so other tests in this thread cannot
+        // have warmed the classes already
+        let (a, b) = (54321, 54323);
+        let mut ws = Workspace::new();
+        ws.add_f64(a);
+        ws.add_f64(a); // multiplicity 2: both held at once in the hot path
+        ws.add_c64(b);
+        assert_eq!(ws.f64_elems(), 2 * a);
+        assert_eq!(ws.c64_elems(), b);
+        assert!(!ws.is_empty());
+        ws.prewarm();
+        assert_eq!(retained_f64(a), 2);
+        assert_eq!(retained_c64(b), 1);
+        // a warmed take/give cycle is a pool hit: the miss guard stays put
+        let before = pool_misses();
+        let x = take_f64(a);
+        let y = take_f64(a);
+        let z = take_c64(b);
+        give_f64(x);
+        give_f64(y);
+        give_c64(z);
+        assert_eq!(pool_misses(), before, "warmed takes must not miss");
+    }
+
+    #[test]
+    fn miss_guard_counts_cold_takes_and_clear_resets_retention() {
+        let len = 54329; // unique to this test
+        let before = pool_misses();
+        give_f64(take_f64(len)); // cold: one miss
+        assert_eq!(pool_misses(), before + 1);
+        give_f64(take_f64(len)); // warm: no further miss
+        assert_eq!(pool_misses(), before + 1);
+        assert_eq!(retained_f64(len), 1);
+        clear_thread_pool();
+        assert_eq!(retained_f64(len), 0);
+        // zero-length registrations are ignored
+        let mut ws = Workspace::new();
+        ws.add_f64(0);
+        ws.add_c64(0);
+        assert!(ws.is_empty());
     }
 }

@@ -1,0 +1,94 @@
+//! Zero-allocation contract for the fused hot paths (the batched-engine
+//! PR's acceptance criterion): after plan construction (which prewarms
+//! the building thread's scratch pool via the plan-owned `Workspace`)
+//! and one warm-up call (which covers any class a different kernel
+//! selection might add), `forward`/`inverse` on the fused 1D/2D plans
+//! must perform **zero heap allocations**.
+//!
+//! Asserted with a counting global allocator. This file deliberately
+//! contains a single `#[test]` so the whole binary runs on one thread —
+//! the counter is process-global, and a concurrently-running test would
+//! pollute it. Plans run `ExecPolicy::Serial` so every stage executes
+//! inline on the counted thread. The thread-local pool-miss guard in
+//! `util::scratch` is asserted alongside as the finer-grained signal.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use mddct::dct::{Algo1d, Dct1d, Dct2, Idct1d, Idct2, Idxst1d};
+use mddct::parallel::ExecPolicy;
+use mddct::util::rng::Rng;
+use mddct::util::scratch;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+/// Run `f` several times after one warm-up call and assert the global
+/// allocation counter and the thread-local pool-miss guard both stand
+/// still across the timed calls.
+fn assert_alloc_free(what: &str, mut f: impl FnMut()) {
+    f(); // warm-up: populates any scratch class prewarm didn't cover
+    let misses0 = scratch::pool_misses();
+    let allocs0 = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..3 {
+        f();
+    }
+    let allocs = ALLOCS.load(Ordering::Relaxed) - allocs0;
+    let misses = scratch::pool_misses() - misses0;
+    assert_eq!(misses, 0, "{what}: scratch pool missed {misses} times after warm-up");
+    assert_eq!(allocs, 0, "{what}: {allocs} heap allocations after warm-up");
+}
+
+#[test]
+fn warmed_fused_hot_paths_do_not_allocate() {
+    let mut rng = Rng::new(800);
+
+    // fused 2D forward + inverse, power-of-two (radix kernels, blocked
+    // column path) and non-power-of-two (Bluestein columns + rows)
+    for (n1, n2) in [(16usize, 16usize), (32, 8), (12, 12)] {
+        let x = rng.normal_vec(n1 * n2);
+        let mut y = vec![0.0; n1 * n2];
+        let fwd = Dct2::with_policy(n1, n2, ExecPolicy::Serial);
+        assert_alloc_free(&format!("dct2 {n1}x{n2}"), || fwd.forward(&x, &mut y));
+        let inv = Idct2::with_policy(n1, n2, ExecPolicy::Serial);
+        assert_alloc_free(&format!("idct2 {n1}x{n2}"), || inv.forward(&x, &mut y));
+    }
+
+    // 1D family: all four Algorithm-1 variants, the inverse, and IDXST
+    let n = 32;
+    let x = rng.normal_vec(n);
+    let mut y = vec![0.0; n];
+    for algo in Algo1d::ALL {
+        let plan = Dct1d::with_exec(n, algo, ExecPolicy::Serial);
+        assert_alloc_free(&format!("dct1d {}", algo.name()), || plan.forward(&x, &mut y));
+    }
+    let idct = Idct1d::with_exec(n, ExecPolicy::Serial);
+    assert_alloc_free("idct1d", || idct.forward(&x, &mut y));
+    let idxst = Idxst1d::new(n);
+    assert_alloc_free("idxst1d", || idxst.forward(&x, &mut y));
+}

@@ -107,6 +107,57 @@ fn batch_of_identical_shapes_is_cobatched() {
 }
 
 #[test]
+fn same_shape_requests_pack_into_one_batched_execution() {
+    // one worker + a generous co-batching window: the batcher coalesces
+    // the same-(op, shape) burst into one batch, and the worker must
+    // execute it through the packed stage-fused path (metrics prove it)
+    // with every answer still exact
+    let svc = Service::start_native(ServiceConfig {
+        workers: 1,
+        batch: BatchPolicy {
+            max_batch: 32,
+            max_wait: std::time::Duration::from_millis(20),
+            ..Default::default()
+        },
+        ..Default::default()
+    });
+    let mut rng = Rng::new(610);
+    let mut reqs = Vec::new();
+    let mut wants = Vec::new();
+    for _ in 0..16 {
+        let x = rng.normal_vec(8 * 8);
+        wants.push(dct2d_direct(&x, 8, 8));
+        reqs.push((TransformOp::Dct2d, vec![8usize, 8], x));
+    }
+    let out = svc.transform_many(reqs).unwrap();
+    for (r, w) in out.iter().zip(&wants) {
+        assert_close(&r.output, w, 1e-9);
+    }
+    let snap = svc.metrics.snapshot();
+    let d = snap.get("dct2d").expect("dct2d metrics row");
+    let packed_batches = d.get("packed_batches").unwrap().as_f64().unwrap();
+    let packed_requests = d.get("packed_requests").unwrap().as_f64().unwrap();
+    let max_packed = d.get("max_packed_batch").unwrap().as_f64().unwrap();
+    assert!(packed_batches >= 1.0, "no packed batch executed");
+    assert!(max_packed >= 2.0, "packed batches never exceeded one request");
+    assert!(packed_requests >= 2.0, "fewer than two requests went through the packed path");
+    assert_eq!(d.get("requests").unwrap().as_f64().unwrap(), 16.0);
+    assert!(d.get("packed_batch_hist").is_some(), "histogram missing");
+
+    // a lone request of a new shape cannot pack: it runs solo and the
+    // packed counters stay put
+    let x = rng.normal_vec(4 * 4);
+    svc.transform(TransformOp::Dct2d, vec![4, 4], x).unwrap();
+    let snap2 = svc.metrics.snapshot();
+    let d2 = snap2.get("dct2d").unwrap();
+    assert_eq!(
+        d2.get("packed_batches").unwrap().as_f64().unwrap(),
+        packed_batches,
+        "a solo request must not count as packed"
+    );
+}
+
+#[test]
 fn sharded_3d_request_executes_as_slabs_through_the_service() {
     use mddct::dct::Dct3d;
     use mddct::parallel::{ExecPolicy, ShardPolicy};

@@ -1,0 +1,140 @@
+//! Batched-vs-solo equivalence properties for the batch execution
+//! engine: `forward_batch` over B packed blocks must be *bit-identical*
+//! (for a fixed FFT kernel) to B independent `forward` calls, for every
+//! batch size and shape class — the batch path reuses the serial
+//! per-block kernels and only restructures *where* the lanes fan out,
+//! so no arithmetic may change. Cross-kernel agreement stays at the
+//! usual <= 1e-10 rounding envelope.
+
+use mddct::dct::{Algo1d, Dct1d, Dct2, Idct1d, Idct2};
+use mddct::fft::{onesided_len, C64, FftKernel, Rfft2Plan, RfftPlan};
+use mddct::parallel::ExecPolicy;
+use mddct::util::rng::Rng;
+
+/// The ISSUE's batch sizes: trivial, tiny, non-divisible, wide.
+const BATCHES: &[usize] = &[1, 2, 7, 64];
+
+/// Non-power-of-two shapes (Bluestein on one or both axes) plus one
+/// power-of-two control.
+const SHAPES: &[(usize, usize)] = &[(9, 15), (13, 7), (12, 10), (16, 16), (1, 9), (6, 1)];
+
+#[test]
+fn dct2_forward_batch_is_bit_identical_to_solo_loop() {
+    let mut rng = Rng::new(700);
+    for &(n1, n2) in SHAPES {
+        let numel = n1 * n2;
+        for &batch in BATCHES {
+            let xs = rng.normal_vec(numel * batch);
+            for exec in [ExecPolicy::Serial, ExecPolicy::Threads(4), ExecPolicy::Auto] {
+                let plan = Dct2::with_policy(n1, n2, exec);
+                let mut want = vec![0.0; numel * batch];
+                for (b, w) in want.chunks_mut(numel).enumerate() {
+                    plan.forward(&xs[b * numel..(b + 1) * numel], w);
+                }
+                let mut got = vec![0.0; numel * batch];
+                plan.forward_batch(&xs, &mut got, batch);
+                assert_eq!(got, want, "dct2 ({n1},{n2}) B={batch} {exec:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn idct2_forward_batch_is_bit_identical_to_solo_loop() {
+    let mut rng = Rng::new(701);
+    for &(n1, n2) in SHAPES {
+        let numel = n1 * n2;
+        for &batch in BATCHES {
+            let xs = rng.normal_vec(numel * batch);
+            let plan = Idct2::with_policy(n1, n2, ExecPolicy::Threads(3));
+            let mut want = vec![0.0; numel * batch];
+            for (b, w) in want.chunks_mut(numel).enumerate() {
+                plan.forward(&xs[b * numel..(b + 1) * numel], w);
+            }
+            let mut got = vec![0.0; numel * batch];
+            plan.forward_batch(&xs, &mut got, batch);
+            assert_eq!(got, want, "idct2 ({n1},{n2}) B={batch}");
+        }
+    }
+}
+
+#[test]
+fn dct1d_batch_is_bit_identical_across_all_algorithms() {
+    let mut rng = Rng::new(702);
+    for &n in &[1usize, 5, 9, 15, 16, 33] {
+        for &batch in BATCHES {
+            let xs = rng.normal_vec(n * batch);
+            for algo in Algo1d::ALL {
+                let plan = Dct1d::with_exec(n, algo, ExecPolicy::Threads(4));
+                let mut want = vec![0.0; n * batch];
+                for (b, w) in want.chunks_mut(n).enumerate() {
+                    plan.forward(&xs[b * n..(b + 1) * n], w);
+                }
+                let mut got = vec![0.0; n * batch];
+                plan.forward_batch(&xs, &mut got, batch);
+                assert_eq!(got, want, "dct1d {} n={n} B={batch}", algo.name());
+            }
+            let inv = Idct1d::with_exec(n, ExecPolicy::Threads(4));
+            let mut want = vec![0.0; n * batch];
+            for (b, w) in want.chunks_mut(n).enumerate() {
+                inv.forward(&xs[b * n..(b + 1) * n], w);
+            }
+            let mut got = vec![0.0; n * batch];
+            inv.forward_batch(&xs, &mut got, batch);
+            assert_eq!(got, want, "idct1d n={n} B={batch}");
+        }
+    }
+}
+
+#[test]
+fn rfft2_batch_roundtrips_and_matches_solo() {
+    let mut rng = Rng::new(703);
+    for &(n1, n2) in &[(9usize, 15usize), (16, 16), (5, 8)] {
+        let plan = Rfft2Plan::with_policy(n1, n2, ExecPolicy::Threads(4));
+        let h2 = onesided_len(n2);
+        for &batch in &[2usize, 7] {
+            let xs = rng.normal_vec(n1 * n2 * batch);
+            let mut want = vec![C64::default(); n1 * h2 * batch];
+            for (b, w) in want.chunks_mut(n1 * h2).enumerate() {
+                plan.forward(&xs[b * n1 * n2..(b + 1) * n1 * n2], w);
+            }
+            let mut got = vec![C64::default(); n1 * h2 * batch];
+            plan.forward_batch(&xs, &mut got, batch);
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!((*a - *b).abs() == 0.0, "rfft2 ({n1},{n2}) B={batch} idx={i}");
+            }
+            let mut back = vec![0.0; n1 * n2 * batch];
+            plan.inverse_batch(&got, &mut back, batch);
+            for (a, b) in back.iter().zip(&xs) {
+                assert!((a - b).abs() < 1e-9, "rfft2 roundtrip ({n1},{n2}) B={batch}");
+            }
+        }
+    }
+}
+
+#[test]
+fn cross_kernel_batch_outputs_agree_to_rounding() {
+    // the bit-identity above is per kernel; across kernels the batch
+    // path must stay inside the usual 1e-10 relative envelope
+    let mut rng = Rng::new(704);
+    let (n, batch) = (24usize, 7usize);
+    let xs = rng.normal_vec(n * batch);
+    let mut outs: Vec<Vec<f64>> = Vec::new();
+    for kernel in [FftKernel::ScalarRadix2, FftKernel::SplitRadixSoa] {
+        // drive the 1D pipeline through an explicit-kernel RFFT the way
+        // the DCT postprocess consumes it
+        let rfft = RfftPlan::with_kernel(n, kernel);
+        let h = onesided_len(n);
+        let mut spec = vec![C64::default(); h * batch];
+        rfft.forward_batch(&xs, &mut spec, 4);
+        let mut mags = vec![0.0; h * batch];
+        for (m, s) in mags.iter_mut().zip(&spec) {
+            *m = s.abs();
+        }
+        outs.push(mags);
+    }
+    let scale = outs[0].iter().fold(1.0f64, |m, v| m.max(v.abs()));
+    for (a, b) in outs[0].iter().zip(&outs[1]) {
+        assert!((a - b).abs() <= 1e-10 * scale, "{a} vs {b}");
+    }
+}

@@ -5,6 +5,17 @@
 //! pre (extra arithmetic), i.e. the fused stages add little over the
 //! attainable FFT floor.
 //!
+//! The stage numbers come from the obs span aggregation — the same
+//! `dct2.pre` / `dct2.fft` / `dct2.post` spans the live service
+//! breakdown is built from — so the bench and the `_stage_breakdown`
+//! metrics section share one instrumentation path and cannot drift.
+//! Under `--features trace-off` (spans compiled out) the bench falls
+//! back to the `StageTimes` the plan returns directly; both views are
+//! fed by the same `Instant` reads inside `forward_timed`.
+//!
+//! Emits `BENCH_fig6.json` (override with `MDDCT_BENCH_FIG6_JSON`);
+//! `MDDCT_BENCH_QUICK=1` runs a CI-sized subset.
+//!
 //! Run: `cargo bench --bench fig6_breakdown`
 
 use mddct::bench::{ms, time_fn, BenchConfig, Table};
@@ -12,26 +23,52 @@ use mddct::dct::{Dct2, StageTimes};
 use mddct::parallel::ExecPolicy;
 use mddct::util::rng::Rng;
 
+/// Mean per-call stage seconds (pre, fft, post) for one problem size.
+fn stage_means(n: usize, cfg: &BenchConfig) -> (f64, f64, f64, usize) {
+    let mut rng = Rng::new(n as u64);
+    let x = rng.normal_vec(n * n);
+    let mut out = vec![0.0; n * n];
+    // serial: Fig. 6 is the single-thread stage breakdown
+    let plan = Dct2::with_policy(n, n, ExecPolicy::Serial);
+    // label this size's spans so the aggregation table keys them apart
+    let _ctx = mddct::obs::with_ctx(mddct::obs::op_ctx("fig6", &[n, n]));
+    let mut acc = StageTimes::default();
+    let s = time_fn(cfg, || {
+        let st = plan.forward_timed(&x, &mut out);
+        acc.pre += st.pre;
+        acc.fft += st.fft;
+        acc.post += st.post;
+    });
+    let ctx = format!("fig6/{n}x{n}");
+    let from_agg = |stage: &str| -> Option<f64> {
+        let (count, total_s) = mddct::obs::stage_stats(&ctx, stage)?;
+        (count > 0).then(|| total_s / count as f64)
+    };
+    // agg path when tracing ran; StageTimes fallback under trace-off
+    let k = s.n as f64;
+    let pre = from_agg("dct2.pre").unwrap_or(acc.pre / k);
+    let fft = from_agg("dct2.fft").unwrap_or(acc.fft / k);
+    let post = from_agg("dct2.post").unwrap_or(acc.post / k);
+    (pre, fft, post, s.n)
+}
+
 fn main() {
     let cfg = BenchConfig::from_env(BenchConfig::paper());
+    // the breakdown is span-sourced: turn tracing on for this process
+    // (a no-op under trace-off, where the StageTimes fallback kicks in)
+    mddct::obs::set_enabled(true);
     println!("\nFigure 6: runtime breakdown of the fused 2D DCT\n");
 
+    let quick = std::env::var("MDDCT_BENCH_QUICK").is_ok();
+    let sizes: &[usize] = if quick { &[512] } else { &[512, 1024, 2048] };
     let mut t = Table::new(&["N", "pre ms", "rfft ms", "post ms", "pre %", "rfft %", "post %"]);
-    for n in [512usize, 1024, 2048] {
-        let mut rng = Rng::new(n as u64);
-        let x = rng.normal_vec(n * n);
-        let mut out = vec![0.0; n * n];
-        // serial: Fig. 6 is the single-thread stage breakdown
-        let plan = Dct2::with_policy(n, n, ExecPolicy::Serial);
-        let mut acc = StageTimes::default();
-        let s = time_fn(&cfg, || {
-            let st = plan.forward_timed(&x, &mut out);
-            acc.pre += st.pre;
-            acc.fft += st.fft;
-            acc.post += st.post;
-        });
-        let k = s.n as f64;
-        let (pre, fft, post) = (acc.pre / k, acc.fft / k, acc.post / k);
+    let mut json_rows: Vec<String> = Vec::new();
+    for &n in sizes {
+        mddct::obs::reset_breakdown();
+        let (pre, fft, post, iters) = stage_means(n, &cfg);
+        // the raw event ring is not needed here, only the aggregation;
+        // drop it so long runs cannot hold tens of MB of span events
+        let _ = mddct::obs::take_events();
         let total = pre + fft + post;
         t.row(&[
             n.to_string(),
@@ -42,6 +79,16 @@ fn main() {
             format!("{:.1}%", fft / total * 100.0),
             format!("{:.1}%", post / total * 100.0),
         ]);
+        json_rows.push(format!(
+            "{{\"n\": {n}, \"iters\": {iters}, \"pre_ms\": {:.6}, \"rfft_ms\": {:.6}, \
+             \"post_ms\": {:.6}, \"pre_pct\": {:.2}, \"rfft_pct\": {:.2}, \"post_pct\": {:.2}}}",
+            pre * 1e3,
+            fft * 1e3,
+            post * 1e3,
+            pre / total * 100.0,
+            fft / total * 100.0,
+            post / total * 100.0
+        ));
         // the paper's Fig-6 ascii bar
         if n == 1024 {
             let bar = |f: f64| "#".repeat((f / total * 50.0).round() as usize);
@@ -54,4 +101,17 @@ fn main() {
     }
     t.print();
     println!("shape check: RFFT dominates; pre+post are the minority share (paper ~20%)");
+
+    let path = std::env::var("MDDCT_BENCH_FIG6_JSON")
+        .unwrap_or_else(|_| "BENCH_fig6.json".to_string());
+    let source = if cfg!(feature = "trace-off") { "stage_times" } else { "span_agg" };
+    let doc = format!(
+        "{{\n  \"bench\": \"fig6_breakdown\",\n  \"source\": \"{source}\",\n  \
+         \"unit\": \"stage_ms\",\n  \"rows\": [\n    {}\n  ]\n}}\n",
+        json_rows.join(",\n    ")
+    );
+    match std::fs::write(&path, &doc) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

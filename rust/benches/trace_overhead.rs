@@ -1,0 +1,67 @@
+//! Disabled-path tracing overhead: the default build (span sites
+//! present, tracing off — each site costs one relaxed atomic load)
+//! versus a `--features trace-off` build (sites compiled out).
+//!
+//! CI runs this bench twice — once per build — and
+//! `scripts/trace_overhead_check.py` gates the per-size *min* timing
+//! ratio at < 2%. Min, not mean: the minimum over many iterations is
+//! the least noise-sensitive estimator of the true per-call floor,
+//! which is where a constant per-site cost would show.
+//!
+//! Tracing is explicitly forced off here regardless of `MDDCT_TRACE`:
+//! this bench measures the cost of the *disabled* instrumentation, not
+//! of recording.
+//!
+//! Emits `BENCH_trace_overhead.json` (override with
+//! `MDDCT_BENCH_TRACE_JSON`); `MDDCT_BENCH_QUICK=1` runs a CI-sized
+//! subset.
+//!
+//! Run: `cargo bench --bench trace_overhead`
+
+use mddct::bench::{black_box, ms, time_fn, BenchConfig, Table};
+use mddct::dct::Dct2;
+use mddct::parallel::ExecPolicy;
+use mddct::util::rng::Rng;
+
+fn main() {
+    let cfg = BenchConfig::from_env(BenchConfig::default());
+    mddct::obs::set_enabled(false);
+    let variant = if cfg!(feature = "trace-off") { "trace_off" } else { "default" };
+    println!("\nTracing disabled-path overhead (build variant: {variant})\n");
+
+    let quick = std::env::var("MDDCT_BENCH_QUICK").is_ok();
+    let sizes: &[usize] = if quick { &[64, 256] } else { &[64, 256, 1024] };
+    let mut t = Table::new(&["n", "min ms", "mean ms"]);
+    let mut json_rows: Vec<String> = Vec::new();
+    for &n in sizes {
+        let mut rng = Rng::new(n as u64 + 9000);
+        let x = rng.normal_vec(n * n);
+        let mut out = vec![0.0; n * n];
+        // serial: one thread, so every instrumented site on the solo
+        // path (plan stages + FFT internals) is crossed each call
+        let plan = Dct2::with_policy(n, n, ExecPolicy::Serial);
+        let s = time_fn(&cfg, || {
+            plan.forward(&x, &mut out);
+            black_box(&out);
+        });
+        t.row(&[n.to_string(), ms(s.min), ms(s.mean)]);
+        json_rows.push(format!(
+            "{{\"n\": {n}, \"min_ms\": {:.6}, \"mean_ms\": {:.6}}}",
+            s.min * 1e3,
+            s.mean * 1e3
+        ));
+    }
+    t.print();
+
+    let path = std::env::var("MDDCT_BENCH_TRACE_JSON")
+        .unwrap_or_else(|_| "BENCH_trace_overhead.json".to_string());
+    let doc = format!(
+        "{{\n  \"bench\": \"trace_overhead\",\n  \"variant\": \"{variant}\",\n  \
+         \"unit\": \"forward_ms\",\n  \"rows\": [\n    {}\n  ]\n}}\n",
+        json_rows.join(",\n    ")
+    );
+    match std::fs::write(&path, &doc) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -1,0 +1,95 @@
+#!/usr/bin/env python3
+"""Disabled-tracing overhead gate: compare the default build's
+trace-overhead bench against a ``--features trace-off`` build.
+
+Both files come from ``benches/trace_overhead.rs``:
+
+    { "bench": "trace_overhead", "variant": "default" | "trace_off",
+      "rows": [ {"n": ..., "min_ms": ..., "mean_ms": ...}, ... ] }
+
+The default build keeps every span site but tracing disabled (one
+relaxed atomic load per site); the trace-off build deletes the sites at
+compile time. For each size present in both files the gate compares the
+*min* timing — the least noise-sensitive estimator of the per-call
+floor, where a constant per-site cost would show — and fails when the
+**median ratio** across sizes exceeds ``1 + threshold/100``. The median
+keeps one noisy size on a shared runner from failing the gate alone.
+
+Usage:
+    trace_overhead_check.py --default BENCH_trace_overhead.json \\
+        --trace-off BENCH_trace_overhead_off.json [--threshold 2]
+
+Exit status 1 iff the overhead exceeds the threshold.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_mins(path):
+    """{n: min_ms} from a trace_overhead bench JSON."""
+    with open(path) as f:
+        doc = json.load(f)
+    out = {}
+    for row in doc.get("rows", []):
+        if isinstance(row, dict) and isinstance(row.get("min_ms"), (int, float)):
+            out[row["n"]] = row["min_ms"]
+    return out
+
+
+def median(xs):
+    xs = sorted(xs)
+    mid = len(xs) // 2
+    if len(xs) % 2:
+        return xs[mid]
+    return (xs[mid - 1] + xs[mid]) / 2.0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--default", dest="default_path", required=True,
+                    help="bench JSON from the default build (sites present, tracing off)")
+    ap.add_argument("--trace-off", dest="off_path", required=True,
+                    help="bench JSON from the --features trace-off build")
+    ap.add_argument("--threshold", type=float, default=2.0,
+                    help="fail when the median min-time ratio exceeds this percent "
+                    "(default 2)")
+    args = ap.parse_args()
+
+    default_mins = load_mins(args.default_path)
+    off_mins = load_mins(args.off_path)
+    shared = sorted(set(default_mins) & set(off_mins))
+    if not shared:
+        print("trace_overhead_check: no shared sizes between the two files",
+              file=sys.stderr)
+        return 1
+
+    ratios = []
+    for n in shared:
+        d, o = default_mins[n], off_mins[n]
+        if o <= 0:
+            print(f"  n={n}: trace-off min is {o} ms; skipping")
+            continue
+        ratio = d / o
+        ratios.append(ratio)
+        print(f"  n={n}: default {d:.4f} ms vs trace-off {o:.4f} ms "
+              f"({(ratio - 1) * 100:+.2f}%)")
+    if not ratios:
+        print("trace_overhead_check: no comparable sizes", file=sys.stderr)
+        return 1
+
+    med = median(ratios)
+    limit = 1.0 + args.threshold / 100.0
+    print(f"\ntrace_overhead_check: median overhead {(med - 1) * 100:+.2f}% "
+          f"over {len(ratios)} sizes (limit +{args.threshold:.1f}%)")
+    if med > limit:
+        print("FAIL: disabled tracing costs more than the gate allows",
+              file=sys.stderr)
+        return 1
+    print("ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

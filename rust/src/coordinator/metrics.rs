@@ -110,10 +110,16 @@ impl Metrics {
     }
 
     /// JSON snapshot (dumped by the CLI's `metrics` output): one object
-    /// per op, plus a reserved `_sharding_by_rank` object keyed `"1d"` /
-    /// `"2d"` / `"3d"` aggregating shard fan-out per dimensionality (op
-    /// names are lower-case identifiers, so the `_` prefix cannot
-    /// collide).
+    /// per op, plus reserved `_`-prefixed sections (op names are
+    /// lower-case identifiers, so the prefix cannot collide):
+    ///
+    /// * `_sharding_by_rank` — shard fan-out keyed `"1d"` / `"2d"` /
+    ///   `"3d"`, aggregating per transform dimensionality;
+    /// * `_scratch` — process-wide scratch-pool statistics
+    ///   ([`crate::util::scratch::stats_json`]), always present;
+    /// * `_stage_breakdown` — the live Fig.-6-style per-(op,shape) stage
+    ///   timing table ([`crate::obs::breakdown_json`]), present only when
+    ///   tracing has aggregated at least one stage span.
     pub fn snapshot(&self) -> Json {
         let t = self.inner.lock().unwrap();
         let mut root = BTreeMap::new();
@@ -161,6 +167,11 @@ impl Metrics {
             }
             root.insert("_sharding_by_rank".into(), Json::Obj(ranks));
         }
+        root.insert("_scratch".into(), crate::util::scratch::stats_json());
+        let breakdown = crate::obs::breakdown_json();
+        if !matches!(&breakdown, Json::Obj(o) if o.is_empty()) {
+            root.insert("_stage_breakdown".into(), breakdown);
+        }
         Json::Obj(root)
     }
 }
@@ -187,6 +198,10 @@ mod tests {
             snap.get("idct2d").unwrap().get("errors").unwrap().as_f64().unwrap(),
             1.0
         );
+        // the scratch-pool section rides along on every snapshot
+        let scratch = snap.get("_scratch").unwrap();
+        assert!(scratch.get("pool_misses").unwrap().as_f64().is_some());
+        assert!(scratch.get("retained_buffers").unwrap().as_f64().is_some());
     }
 
     #[test]

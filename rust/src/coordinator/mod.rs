@@ -31,6 +31,7 @@ pub mod service;
 pub mod shard;
 
 pub use batcher::{max_batch_elems, BatchPolicy, DEFAULT_MAX_BATCH_ELEMS};
+pub use metrics::Metrics;
 pub use plan_cache::{NativePlan, PlanCache};
 pub use request::{PlanKey, Request, Response, TransformOp};
 pub use router::{BackendPolicy, Route, Router};

@@ -224,18 +224,21 @@ impl PlanCache {
     pub fn get(&self, key: &PlanKey) -> Arc<NativePlan> {
         if let Some(p) = self.read_plans().get(key) {
             self.bump(|s| s.hits += 1);
+            crate::obs::instant_event("plan_cache.hit");
             return p.clone();
         }
         let mut w = self.plans.write().unwrap_or_else(|e| e.into_inner());
         // double-checked: another thread may have built it meanwhile
         if let Some(p) = w.get(key) {
             self.bump(|s| s.hits += 1);
+            crate::obs::instant_event("plan_cache.hit");
             return p.clone();
         }
         let plan =
             Arc::new(NativePlan::build_with(key, self.policy, shard::decide(self.shard, key)));
         w.insert(key.clone(), plan.clone());
         self.bump(|s| s.misses += 1);
+        crate::obs::instant_event("plan_cache.miss");
         plan
     }
 

@@ -46,6 +46,10 @@ pub struct ServiceConfig {
     /// Defaults to the `MDDCT_SHARD_MIN_ROWS` / `MDDCT_MAX_SHARDS` env
     /// knobs, else `Auto`.
     pub shard: ShardPolicy,
+    /// Enable cross-layer span tracing ([`crate::obs`]) when the service
+    /// starts. `false` leaves the process-wide trace flag as-is (so the
+    /// `MDDCT_TRACE` env knob still applies); `true` force-enables it.
+    pub trace: bool,
 }
 
 impl Default for ServiceConfig {
@@ -55,6 +59,7 @@ impl Default for ServiceConfig {
             batch: BatchPolicy::default(),
             exec: ExecPolicy::Auto,
             shard: ShardPolicy::from_env(),
+            trace: false,
         }
     }
 }
@@ -96,6 +101,9 @@ impl Service {
     /// applied to the router's native plan cache regardless of how the
     /// router was built.
     pub fn start(config: ServiceConfig, mut router: Router) -> Service {
+        if config.trace {
+            crate::obs::set_enabled(true);
+        }
         router.set_exec_policy(config.exec);
         router.set_shard_policy(config.shard);
         let router = Arc::new(router);
@@ -176,6 +184,27 @@ impl Service {
             .collect();
         handles?.into_iter().map(Handle::wait).collect()
     }
+
+    /// Full observability snapshot: the metrics JSON (per-op counters,
+    /// `_sharding_by_rank`, `_scratch`, and — when tracing has recorded
+    /// stage spans — the live `_stage_breakdown` table) merged with a
+    /// `_plan_cache` section carrying this service's native plan-cache
+    /// hit/miss counters and resident plan count.
+    pub fn snapshot(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        let mut root = match self.metrics.snapshot() {
+            Json::Obj(o) => o,
+            other => BTreeMap::from([("_metrics".to_string(), other)]),
+        };
+        let stats = self.router.plans.stats();
+        let mut pc = BTreeMap::new();
+        pc.insert("hits".to_string(), Json::Num(stats.hits as f64));
+        pc.insert("misses".to_string(), Json::Num(stats.misses as f64));
+        pc.insert("plans".to_string(), Json::Num(self.router.plans.len() as f64));
+        root.insert("_plan_cache".to_string(), Json::Obj(pc));
+        Json::Obj(root)
+    }
 }
 
 impl Drop for Service {
@@ -216,16 +245,24 @@ fn execute_packed(
 ) {
     let numel: usize = batch.key.shape.iter().product();
     let n = batch.items.len();
-    let mut packed = Vec::with_capacity(n * numel);
     for p in &batch.items {
-        packed.extend_from_slice(&p.request.data);
+        crate::obs::span_since("svc.queue_wait", p.enqueued);
     }
-    let result = catch_unwind(AssertUnwindSafe(|| {
-        router.execute_batch(&batch.key, &packed, n)
-    }))
-    .unwrap_or_else(|panic| Err(panic_message(op_name, panic)));
+    let mut packed = Vec::with_capacity(n * numel);
+    {
+        let _s = crate::obs::SpanGuard::begin("svc.pack");
+        for p in &batch.items {
+            packed.extend_from_slice(&p.request.data);
+        }
+    }
+    let result = {
+        let _s = crate::obs::SpanGuard::begin("svc.execute_batch");
+        catch_unwind(AssertUnwindSafe(|| router.execute_batch(&batch.key, &packed, n)))
+            .unwrap_or_else(|panic| Err(panic_message(op_name, panic)))
+    };
     match result {
         Ok((output, route)) => {
+            let _s = crate::obs::SpanGuard::begin("svc.scatter");
             metrics.record_packed(op_name, n);
             for (i, pending) in batch.items.into_iter().enumerate() {
                 let latency = pending.enqueued.elapsed().as_secs_f64();
@@ -262,6 +299,11 @@ fn worker_loop(
         let n = batch.items.len();
         let op_name = batch.key.op.name();
         let rank = batch.key.op.rank();
+        // (op, shape) context for the duration of this batch: stage
+        // spans recorded on this thread (plan pre/fft/post, the svc.*
+        // pipeline spans) aggregate into the live per-(op,shape)
+        // breakdown under this label
+        let _ctx = crate::obs::with_ctx(crate::obs::op_ctx(&op_name, &batch.key.shape));
         // explicit shard fan-out of this batch (1 = unsharded; plain
         // Auto lane parallelism is not counted as sharding); recorded
         // so operators can see the shard feature actually engage.
@@ -284,13 +326,17 @@ fn worker_loop(
         }
         for pending in batch.items {
             let t0 = pending.enqueued;
+            crate::obs::span_since("svc.queue_wait", t0);
             // A panicking plan must not kill the worker (which would
             // strand every queued batch): catch it and surface it as a
             // request error, like any backend failure.
-            let result = catch_unwind(AssertUnwindSafe(|| {
-                router.execute(&batch.key, &pending.request.data)
-            }))
-            .unwrap_or_else(|panic| Err(panic_message(&op_name, panic)));
+            let result = {
+                let _s = crate::obs::SpanGuard::begin("svc.execute");
+                catch_unwind(AssertUnwindSafe(|| {
+                    router.execute(&batch.key, &pending.request.data)
+                }))
+                .unwrap_or_else(|panic| Err(panic_message(&op_name, panic)))
+            };
             let latency = t0.elapsed().as_secs_f64();
             let response = match result {
                 Ok((output, route)) => {
@@ -326,6 +372,7 @@ mod tests {
             batch: BatchPolicy::default(),
             exec: crate::parallel::ExecPolicy::Auto,
             shard: ShardPolicy::Auto,
+            trace: false,
         })
     }
 
@@ -470,6 +517,7 @@ mod tests {
             batch: BatchPolicy::default(),
             exec: crate::parallel::ExecPolicy::Serial,
             shard: ShardPolicy::MaxShards(3),
+            trace: false,
         });
         let mut rng = Rng::new(205);
         let (n1, n2) = (256usize, 260usize); // >= SHARD_MIN_NUMEL, non-divisible by 3

@@ -156,6 +156,11 @@ impl Dct2 {
         let t3 = Instant::now();
         scratch::give_f64(pre);
         scratch::give_c64(spec);
+        // the trace spans reuse the same instants as the returned
+        // StageTimes, so both views of the breakdown cannot drift
+        crate::obs::stage_span("dct2.pre", t0, t1);
+        crate::obs::stage_span("dct2.fft", t1, t2);
+        crate::obs::stage_span("dct2.post", t2, t3);
         StageTimes {
             pre: (t1 - t0).as_secs_f64(),
             fft: (t2 - t1).as_secs_f64(),
@@ -185,6 +190,7 @@ impl Dct2 {
                 .into_iter()
                 .map(|group| {
                     Box::new(move || {
+                        let _band = crate::obs::SpanGuard::begin("dct2.post.band");
                         for (k1, top, bot) in group {
                             self.postprocess_pair(spec, k1, top, bot);
                         }
@@ -236,14 +242,23 @@ impl Dct2 {
         }
         let lanes = self.policy.lanes(batch * n1 * n2);
         let mut pre = scratch::take_f64(batch * n1 * n2);
-        par_chunks_mut(&mut pre, n1 * n2, lanes, |b, block| {
-            reorder_2d_scatter(&xs[b * n1 * n2..(b + 1) * n1 * n2], block, n1, n2);
-        });
+        {
+            let _s = crate::obs::SpanGuard::begin("dct2.batch.pre");
+            par_chunks_mut(&mut pre, n1 * n2, lanes, |b, block| {
+                reorder_2d_scatter(&xs[b * n1 * n2..(b + 1) * n1 * n2], block, n1, n2);
+            });
+        }
         let mut spec = scratch::take_c64(batch * n1 * h2);
-        self.rfft2.forward_batch(&pre, &mut spec, batch);
-        par_chunks_mut(out, n1 * n2, lanes, |b, block| {
-            self.postprocess_serial(&spec[b * n1 * h2..(b + 1) * n1 * h2], block);
-        });
+        {
+            let _s = crate::obs::SpanGuard::begin("dct2.batch.fft");
+            self.rfft2.forward_batch(&pre, &mut spec, batch);
+        }
+        {
+            let _s = crate::obs::SpanGuard::begin("dct2.batch.post");
+            par_chunks_mut(out, n1 * n2, lanes, |b, block| {
+                self.postprocess_serial(&spec[b * n1 * h2..(b + 1) * n1 * h2], block);
+            });
+        }
         scratch::give_f64(pre);
         scratch::give_c64(spec);
     }
@@ -410,6 +425,10 @@ impl Idct2 {
         let t3 = Instant::now();
         scratch::give_c64(spec);
         scratch::give_f64(v);
+        // same instants feed the trace and the returned StageTimes
+        crate::obs::stage_span("idct2.pre", t0, t1);
+        crate::obs::stage_span("idct2.fft", t1, t2);
+        crate::obs::stage_span("idct2.post", t2, t3);
         StageTimes {
             pre: (t1 - t0).as_secs_f64(),
             fft: (t2 - t1).as_secs_f64(),
@@ -431,17 +450,26 @@ impl Idct2 {
         }
         let lanes = self.policy.lanes(batch * n1 * n2);
         let mut spec = scratch::take_c64(batch * n1 * h2);
-        par_chunks_mut(&mut spec, n1 * h2, lanes, |b, sblock| {
-            let xb = &xs[b * n1 * n2..(b + 1) * n1 * n2];
-            for (k1, srow) in sblock.chunks_mut(h2).enumerate() {
-                self.preprocess_row(xb, k1, srow);
-            }
-        });
+        {
+            let _s = crate::obs::SpanGuard::begin("idct2.batch.pre");
+            par_chunks_mut(&mut spec, n1 * h2, lanes, |b, sblock| {
+                let xb = &xs[b * n1 * n2..(b + 1) * n1 * n2];
+                for (k1, srow) in sblock.chunks_mut(h2).enumerate() {
+                    self.preprocess_row(xb, k1, srow);
+                }
+            });
+        }
         let mut v = scratch::take_f64(batch * n1 * n2);
-        self.rfft2.inverse_batch(&spec, &mut v, batch);
-        par_chunks_mut(out, n1 * n2, lanes, |b, block| {
-            unreorder_2d(&v[b * n1 * n2..(b + 1) * n1 * n2], block, n1, n2);
-        });
+        {
+            let _s = crate::obs::SpanGuard::begin("idct2.batch.fft");
+            self.rfft2.inverse_batch(&spec, &mut v, batch);
+        }
+        {
+            let _s = crate::obs::SpanGuard::begin("idct2.batch.post");
+            par_chunks_mut(out, n1 * n2, lanes, |b, block| {
+                unreorder_2d(&v[b * n1 * n2..(b + 1) * n1 * n2], block, n1, n2);
+            });
+        }
         scratch::give_c64(spec);
         scratch::give_f64(v);
     }

@@ -103,20 +103,28 @@ impl Rfft2Plan {
         assert_eq!(out.len(), n1 * h2);
         let (row_bands, col_bands) = (self.bands(n1), self.bands(h2));
         if row_bands > 1 || col_bands > 1 {
-            self.row.forward_batch(x, out, row_bands);
+            {
+                let _s = crate::obs::SpanGuard::begin("rfft2.rows");
+                self.row.forward_batch(x, out, row_bands);
+            }
+            let _s = crate::obs::SpanGuard::begin("rfft2.cols");
             self.col_fft_via_transpose(out, false, col_bands);
             return;
         }
         // rows: real FFT
-        for r in 0..n1 {
-            self.row
-                .forward(&x[r * self.n2..(r + 1) * self.n2], &mut out[r * h2..(r + 1) * h2]);
+        {
+            let _s = crate::obs::SpanGuard::begin("rfft2.rows");
+            for r in 0..n1 {
+                self.row
+                    .forward(&x[r * self.n2..(r + 1) * self.n2], &mut out[r * h2..(r + 1) * h2]);
+            }
         }
         // columns: blocked column kernel when n1 is a power of two;
         // Bluestein sizes take the same transpose -> contiguous row FFTs
         // -> transpose route as the parallel branch, just with one lane
         // (the old per-column gather/scatter loop was the last strided
         // stage left in the serial path).
+        let _s = crate::obs::SpanGuard::begin("rfft2.cols");
         if !self.col.try_transform_cols(out, h2, false) {
             self.col_fft_via_transpose(out, false, 1);
         }
@@ -131,17 +139,28 @@ impl Rfft2Plan {
         let mut work = scratch::take_c64(spec.len());
         work.copy_from_slice(spec);
         if row_bands > 1 || col_bands > 1 {
-            self.col_fft_via_transpose(&mut work, true, col_bands);
+            {
+                let _s = crate::obs::SpanGuard::begin("rfft2.inv_cols");
+                self.col_fft_via_transpose(&mut work, true, col_bands);
+            }
+            let _s = crate::obs::SpanGuard::begin("rfft2.inv_rows");
             self.row.inverse_batch(&work, out, row_bands);
+            drop(_s);
             scratch::give_c64(work);
             return;
         }
-        if !self.col.try_transform_cols(&mut work, h2, true) {
-            self.col_fft_via_transpose(&mut work, true, 1);
+        {
+            let _s = crate::obs::SpanGuard::begin("rfft2.inv_cols");
+            if !self.col.try_transform_cols(&mut work, h2, true) {
+                self.col_fft_via_transpose(&mut work, true, 1);
+            }
         }
-        for r in 0..n1 {
-            self.row
-                .inverse(&work[r * h2..(r + 1) * h2], &mut out[r * self.n2..(r + 1) * self.n2]);
+        {
+            let _s = crate::obs::SpanGuard::begin("rfft2.inv_rows");
+            for r in 0..n1 {
+                self.row
+                    .inverse(&work[r * h2..(r + 1) * h2], &mut out[r * self.n2..(r + 1) * self.n2]);
+            }
         }
         scratch::give_c64(work);
     }
@@ -349,7 +368,10 @@ impl Rfft3Plan {
         // stage 1: the n3-axis row RFFT batch bands over all n1*n2 rows
         // (mirroring the 2D plan's row stage — a flat volume with few
         // slabs still fans its row FFTs wide)
-        self.row.forward_batch(x, out, self.bands(self.n1 * n2));
+        {
+            let _s = crate::obs::SpanGuard::begin("rfft3.rows");
+            self.row.forward_batch(x, out, self.bands(self.n1 * n2));
+        }
         self.n2_axis_fft(out, false);
         self.axis0_fft(out, false);
     }
@@ -368,7 +390,10 @@ impl Rfft3Plan {
         self.n2_axis_fft(&mut work, true);
         // the n3-axis inverse RFFT batch bands over all n1*n2 rows,
         // like the forward row stage
-        self.row.inverse_batch(&work, out, self.bands(self.n1 * n2));
+        {
+            let _s = crate::obs::SpanGuard::begin("rfft3.inv_rows");
+            self.row.inverse_batch(&work, out, self.bands(self.n1 * n2));
+        }
         scratch::give_c64(work);
     }
 
@@ -378,6 +403,11 @@ impl Rfft3Plan {
     /// else the per-column Bluestein loop.
     fn n2_axis_fft(&self, data: &mut [C64], invert: bool) {
         let (n2, h3) = (self.n2, self.h3);
+        let _s = crate::obs::SpanGuard::begin(if invert {
+            "rfft3.inv_n2axis"
+        } else {
+            "rfft3.n2axis"
+        });
         let slabs = self.bands(self.n1);
         let p2 = &self.p2;
         par_chunks_mut(data, n2 * h3, slabs, |_i, slab| {
@@ -411,6 +441,11 @@ impl Rfft3Plan {
         if n1 <= 1 {
             return; // length-1 axis FFT is the identity
         }
+        let _s = crate::obs::SpanGuard::begin(if invert {
+            "rfft3.inv_axis0"
+        } else {
+            "rfft3.axis0"
+        });
         let bands = self.bands(m);
         if bands <= 1 && self.p1.try_transform_cols(data, m, invert) {
             return;

@@ -24,6 +24,9 @@
 //!   metrics
 //! * [`apps`] — image compression & electrostatic placement built on top
 //! * [`bench`] — harness regenerating every paper table/figure
+//! * [`obs`]  — cross-layer tracing: zero-overhead-when-disabled spans
+//!   through every hot layer, a live per-(op, shape) stage breakdown,
+//!   and Chrome trace-event export (Perfetto-loadable)
 //! * [`util`] — offline substrates (json, rng, property testing, stats)
 //!
 //! Execution model: plans are built per shape (twiddles + FFT plans
@@ -61,5 +64,6 @@ pub mod apps;
 pub mod bench;
 pub mod cli;
 pub mod coordinator;
+pub mod obs;
 pub mod parallel;
 pub mod runtime;

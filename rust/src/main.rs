@@ -9,6 +9,9 @@
 //!   compress --n 512 --eps 10     whole-image compression case study
 //!   place --bench adaptec1 --iters 8
 //!                                 electrostatic placement case study
+//!   trace --op dct2d --n1 256 [--n2 N] [--requests R] [--workers W]
+//!         [--out trace.json]      run traffic with tracing on, dump a
+//!                                 Chrome/Perfetto trace + breakdown
 //!   warmup                        pre-compile all PJRT artifacts
 
 use mddct::apps::{Compressor, PlacementEngine, SolverBackend, ISPD2005};
@@ -26,10 +29,11 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("compress") => cmd_compress(&args),
         Some("place") => cmd_place(&args),
+        Some("trace") => cmd_trace(&args),
         Some("warmup") => cmd_warmup(&args),
         Some(other) => {
             eprintln!("unknown command '{other}'");
-            eprintln!("commands: info transform serve compress place warmup");
+            eprintln!("commands: info transform serve compress place trace warmup");
             2
         }
     };
@@ -196,6 +200,53 @@ fn cmd_place(args: &Args) -> i32 {
         );
     }
     0
+}
+
+fn cmd_trace(args: &Args) -> i32 {
+    let op_name = args.flag_str("op", "dct2d");
+    let Some(op) = parse_op(op_name) else {
+        eprintln!("unknown op '{op_name}'");
+        return 2;
+    };
+    let n1 = args.flag_usize("n1", 256);
+    let shape = match op.rank() {
+        1 => vec![n1],
+        2 => vec![n1, args.flag_usize("n2", n1)],
+        _ => vec![n1, args.flag_usize("n2", n1), args.flag_usize("n3", n1)],
+    };
+    let numel: usize = shape.iter().product();
+    let requests = args.flag_usize("requests", 32);
+    let out_path = args.flag_str("out", "trace.json");
+    let cfg = ServiceConfig {
+        workers: args.flag_usize("workers", 4),
+        batch: BatchPolicy::default(),
+        trace: true,
+        ..Default::default()
+    };
+    let svc = Service::start(cfg, make_router(args));
+    let mut rng = Rng::new(args.flag_usize("seed", 42) as u64);
+    let reqs: Vec<_> = (0..requests).map(|_| (op, shape.clone(), rng.normal_vec(numel))).collect();
+    let t0 = std::time::Instant::now();
+    let out = match svc.transform_many(reqs) {
+        Ok(out) => out,
+        Err(e) => {
+            eprintln!("trace traffic failed: {e}");
+            return 1;
+        }
+    };
+    let dt = t0.elapsed().as_secs_f64();
+    println!("traced {} {op_name} {shape:?} requests in {dt:.3}s", out.len());
+    println!("snapshot: {}", svc.snapshot());
+    match mddct::obs::write_chrome_trace(out_path) {
+        Ok(()) => {
+            println!("chrome trace written to {out_path} (load in ui.perfetto.dev)");
+            0
+        }
+        Err(e) => {
+            eprintln!("failed to write {out_path}: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_warmup(args: &Args) -> i32 {

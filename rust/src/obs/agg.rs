@@ -1,0 +1,114 @@
+//! Live stage-breakdown aggregation: ctx → stage → (count, total time).
+//!
+//! Fed at record time by ctx-carrying spans (see `span::record`), so a
+//! running service always has the current Fig.-6-style per-(op, shape)
+//! breakdown available without replaying a trace. [`breakdown_json`] is
+//! embedded into the coordinator's metrics snapshot under the
+//! `_stage_breakdown` key; `benches/fig6_breakdown.rs` reads the same
+//! table through [`stage_stats`], so bench and production numbers come
+//! from one instrumentation path.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Default, Clone, Copy)]
+struct StageAgg {
+    count: u64,
+    total_ns: u64,
+}
+
+/// ctx label → stage name → accumulated count/time. BTreeMaps keep the
+/// JSON deterministic.
+fn table() -> &'static Mutex<BTreeMap<String, BTreeMap<&'static str, StageAgg>>> {
+    static TABLE: OnceLock<Mutex<BTreeMap<String, BTreeMap<&'static str, StageAgg>>>> =
+        OnceLock::new();
+    TABLE.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Add one closed span to the aggregation (called from the record path
+/// for ctx-carrying spans only; never on the disabled path).
+pub(crate) fn bump(ctx: &str, stage: &'static str, dur_ns: u64) {
+    let mut t = table().lock().unwrap_or_else(|e| e.into_inner());
+    // entry_ref has no stable equivalent without hashbrown; the ctx
+    // string is a few dozen bytes and tracing is explicitly enabled, so
+    // the clone is acceptable
+    let e = t.entry(ctx.to_string()).or_default().entry(stage).or_default();
+    e.count += 1;
+    e.total_ns += dur_ns;
+}
+
+/// `(count, total_seconds)` accumulated for one `(ctx, stage)` cell, or
+/// `None` if that cell never recorded.
+pub fn stage_stats(ctx: &str, stage: &str) -> Option<(u64, f64)> {
+    let t = table().lock().unwrap_or_else(|e| e.into_inner());
+    let agg = t.get(ctx)?.get(stage)?;
+    Some((agg.count, agg.total_ns as f64 * 1e-9))
+}
+
+/// The full breakdown as JSON: one object per ctx label, one object per
+/// stage with `count` / `total_s` / `mean_s` fields. Empty (`{}`) when
+/// tracing never recorded a ctx span.
+pub fn breakdown_json() -> Json {
+    let t = table().lock().unwrap_or_else(|e| e.into_inner());
+    let mut root = BTreeMap::new();
+    for (ctx, stages) in t.iter() {
+        let mut by_stage = BTreeMap::new();
+        for (stage, agg) in stages.iter() {
+            let total_s = agg.total_ns as f64 * 1e-9;
+            let mut o = BTreeMap::new();
+            o.insert("count".to_string(), Json::Num(agg.count as f64));
+            o.insert("total_s".to_string(), Json::Num(total_s));
+            o.insert(
+                "mean_s".to_string(),
+                Json::Num(if agg.count > 0 { total_s / agg.count as f64 } else { 0.0 }),
+            );
+            by_stage.insert(stage.to_string(), Json::Obj(o));
+        }
+        root.insert(ctx.clone(), Json::Obj(by_stage));
+    }
+    Json::Obj(root)
+}
+
+/// Clear the aggregation (benches reset between shapes; tests isolate).
+pub fn reset_breakdown() {
+    table().lock().unwrap_or_else(|e| e.into_inner()).clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctx_spans_feed_the_breakdown() {
+        let _g = super::super::test_guard();
+        super::super::set_enabled(true);
+        #[cfg(not(feature = "trace-off"))]
+        {
+            reset_breakdown();
+            let ctx = super::super::op_ctx("aggtest", &[16, 16]).unwrap();
+            let _c = super::super::with_ctx(Some(ctx));
+            let t0 = std::time::Instant::now();
+            super::super::stage_span("agg.stage_a", t0, t0 + std::time::Duration::from_micros(5));
+            super::super::stage_span("agg.stage_a", t0, t0 + std::time::Duration::from_micros(7));
+            super::super::stage_span("agg.stage_b", t0, t0 + std::time::Duration::from_micros(2));
+            let (count, total) = stage_stats("aggtest/16x16", "agg.stage_a").unwrap();
+            assert_eq!(count, 2);
+            assert!((total - 12e-6).abs() < 1e-9, "total {total}");
+            let bd = breakdown_json();
+            let cell = bd.get("aggtest/16x16").unwrap().get("agg.stage_a").unwrap();
+            assert_eq!(cell.get("count").unwrap().as_f64().unwrap(), 2.0);
+            let mean = cell.get("mean_s").unwrap().as_f64().unwrap();
+            assert!((mean - 6e-6).abs() < 1e-9, "mean {mean}");
+            // spans closing after the ctx guard dropped never aggregate
+            drop(_c);
+            super::super::stage_span("agg.dropped", t0, t0 + std::time::Duration::from_micros(1));
+            assert!(stage_stats("aggtest/16x16", "agg.dropped").is_none());
+            reset_breakdown();
+            assert!(stage_stats("aggtest/16x16", "agg.stage_a").is_none());
+            super::super::reset_events();
+        }
+        super::super::set_enabled(false);
+    }
+}

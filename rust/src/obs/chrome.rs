@@ -1,0 +1,147 @@
+//! Chrome trace-event export: drains the span buffers into the JSON
+//! object format `chrome://tracing` and Perfetto load directly.
+//!
+//! Mapping: spans become `ph:"X"` complete events (`ts`/`dur` in
+//! microseconds), counters become `ph:"C"`, instants `ph:"i"` (thread
+//! scope), and each thread contributes a `thread_name` metadata record
+//! so tracks are labeled (`mddct-worker-0`, `mddct-par-3`, ...). The
+//! ctx label, when present, is attached under `args.ctx` so the trace
+//! UI can filter by request shape.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::span::{take_events, EventKind};
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+/// Drain all buffered events into one Chrome trace-event JSON document
+/// (`{"traceEvents": [...], "displayTimeUnit": "ms"}`). Draining means
+/// consecutive exports partition the event stream; call once at the end
+/// of the window being profiled.
+pub fn chrome_trace() -> Json {
+    let pid = std::process::id() as f64;
+    let mut events = Vec::new();
+    for t in take_events() {
+        let tid = t.tid as f64;
+        events.push(obj(vec![
+            ("name", Json::Str("thread_name".to_string())),
+            ("ph", Json::Str("M".to_string())),
+            ("pid", Json::Num(pid)),
+            ("tid", Json::Num(tid)),
+            ("args", obj(vec![("name", Json::Str(t.thread_name.clone()))])),
+        ]));
+        for ev in t.events {
+            let ts_us = ev.t0_ns as f64 / 1e3;
+            let mut fields = vec![
+                ("name", Json::Str(ev.name.to_string())),
+                ("pid", Json::Num(pid)),
+                ("tid", Json::Num(tid)),
+                ("ts", Json::Num(ts_us)),
+            ];
+            let mut args = Vec::new();
+            if let Some(ctx) = &ev.ctx {
+                args.push(("ctx", Json::Str(ctx.to_string())));
+            }
+            match ev.kind {
+                EventKind::Span { dur_ns } => {
+                    fields.push(("ph", Json::Str("X".to_string())));
+                    fields.push(("dur", Json::Num(dur_ns as f64 / 1e3)));
+                    fields.push(("cat", Json::Str("mddct".to_string())));
+                }
+                EventKind::Counter { value } => {
+                    fields.push(("ph", Json::Str("C".to_string())));
+                    args.push(("value", Json::Num(value)));
+                }
+                EventKind::Instant => {
+                    fields.push(("ph", Json::Str("i".to_string())));
+                    fields.push(("s", Json::Str("t".to_string())));
+                    fields.push(("cat", Json::Str("mddct".to_string())));
+                }
+            }
+            if !args.is_empty() {
+                fields.push(("args", obj(args)));
+            }
+            events.push(obj(fields));
+        }
+    }
+    obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
+/// [`chrome_trace`] serialized to `path`.
+pub fn write_chrome_trace(path: &str) -> std::io::Result<()> {
+    std::fs::write(path, format!("{}\n", chrome_trace()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs;
+
+    #[test]
+    fn export_is_parseable_and_typed() {
+        let _g = obs::test_guard();
+        obs::set_enabled(true);
+        #[cfg(not(feature = "trace-off"))]
+        {
+            obs::reset_events();
+            {
+                let ctx = obs::op_ctx("chrometest", &[8, 8]);
+                let _c = obs::with_ctx(ctx);
+                let _s = obs::SpanGuard::begin("chrome.span");
+                obs::counter("chrome.counter", 4.0);
+                obs::instant_event("chrome.instant");
+            }
+            let doc = chrome_trace();
+            // round-trips through the writer grammar
+            let parsed = Json::parse(&doc.to_string()).unwrap();
+            assert_eq!(
+                parsed.get("displayTimeUnit").unwrap().as_str().unwrap(),
+                "ms"
+            );
+            let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+            let find = |name: &str| {
+                evs.iter()
+                    .find(|e| e.get("name").and_then(Json::as_str) == Some(name))
+                    .unwrap_or_else(|| panic!("missing event {name}"))
+            };
+            let meta = find("thread_name");
+            assert_eq!(meta.get("ph").unwrap().as_str().unwrap(), "M");
+            let span = find("chrome.span");
+            assert_eq!(span.get("ph").unwrap().as_str().unwrap(), "X");
+            assert!(span.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+            assert_eq!(
+                span.get("args").unwrap().get("ctx").unwrap().as_str().unwrap(),
+                "chrometest/8x8"
+            );
+            let ctr = find("chrome.counter");
+            assert_eq!(ctr.get("ph").unwrap().as_str().unwrap(), "C");
+            assert_eq!(
+                ctr.get("args").unwrap().get("value").unwrap().as_f64().unwrap(),
+                4.0
+            );
+            let inst = find("chrome.instant");
+            assert_eq!(inst.get("ph").unwrap().as_str().unwrap(), "i");
+            // drained: a second export no longer carries these events
+            // (other concurrently-running tests may record unrelated
+            // events, so only our names are asserted gone)
+            let again = chrome_trace();
+            let gone = again
+                .get("traceEvents")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .all(|e| e.get("name").and_then(Json::as_str) != Some("chrome.span"));
+            assert!(gone, "chrome.span must have been drained");
+            obs::reset_breakdown();
+        }
+        obs::set_enabled(false);
+    }
+}

@@ -1,0 +1,325 @@
+//! Event model, thread-local span buffers, and the process-wide buffer
+//! registry.
+//!
+//! Recording path (tracing enabled): a closing span reads the monotonic
+//! clock twice per span lifetime (open + close), bumps the live
+//! breakdown when it carries a ctx, and pushes one [`Event`] into its
+//! thread's buffer. The buffer `Mutex` is uncontended in steady state —
+//! only [`take_events`] (trace export) ever locks it from another
+//! thread — so the lock is a compare-and-swap, not a syscall. Buffers
+//! are registered in a global list and owned by `Arc`, so events
+//! survive thread exit until drained.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use super::{current_ctx, enabled};
+
+/// What a recorded [`Event`] represents.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// A closed interval lasting `dur_ns` nanoseconds.
+    Span {
+        /// Interval length in nanoseconds.
+        dur_ns: u64,
+    },
+    /// A sampled counter value (e.g. pool queue depth).
+    Counter {
+        /// The sampled value.
+        value: f64,
+    },
+    /// A zero-duration marker (e.g. a plan-cache miss).
+    Instant,
+}
+
+/// One recorded trace event.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// Static stage name, e.g. `"dct2.fft"` or `"svc.queue_wait"`.
+    pub name: &'static str,
+    /// The `(op, shape)` context active on the recording thread, when
+    /// any (see [`super::op_ctx`]).
+    pub ctx: Option<Arc<str>>,
+    /// Event start, nanoseconds since the process trace epoch.
+    pub t0_ns: u64,
+    /// Span / counter / instant payload.
+    pub kind: EventKind,
+}
+
+/// The process trace epoch: all timestamps are relative to the first
+/// event recorded anywhere in the process.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds from the trace epoch to `t` (saturating at zero for
+/// instants captured before the epoch was pinned).
+fn since_epoch(t: Instant) -> u64 {
+    t.duration_since(epoch()).as_nanos() as u64
+}
+
+/// Per-thread event buffer cap (`MDDCT_TRACE_BUF`, default 65536).
+/// Overflow increments a drop counter instead of growing the buffer.
+fn buf_cap() -> usize {
+    static CAP: OnceLock<usize> = OnceLock::new();
+    *CAP.get_or_init(|| crate::util::env_usize("MDDCT_TRACE_BUF").unwrap_or(65536))
+}
+
+/// One thread's buffer, shared between the owning thread (push) and the
+/// registry (drain).
+struct ThreadBuf {
+    tid: u32,
+    name: String,
+    events: Mutex<Vec<Event>>,
+    dropped: AtomicU64,
+}
+
+/// Process-wide registry of every thread buffer ever created. Buffers
+/// are tiny when unused; threads are bounded by the pool + service
+/// worker counts, so the registry never needs eviction.
+fn registry() -> &'static Mutex<Vec<Arc<ThreadBuf>>> {
+    static REG: OnceLock<Mutex<Vec<Arc<ThreadBuf>>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static LOCAL: Arc<ThreadBuf> = {
+        static NEXT_TID: AtomicU32 = AtomicU32::new(1);
+        let buf = Arc::new(ThreadBuf {
+            tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+            name: std::thread::current().name().unwrap_or("thread").to_string(),
+            events: Mutex::new(Vec::new()),
+            dropped: AtomicU64::new(0),
+        });
+        registry().lock().unwrap_or_else(|e| e.into_inner()).push(buf.clone());
+        buf
+    };
+}
+
+/// Push one event into the current thread's buffer, feeding the live
+/// breakdown first when the event is a ctx-carrying span.
+fn record(ev: Event) {
+    if let (Some(ctx), EventKind::Span { dur_ns }) = (&ev.ctx, ev.kind) {
+        super::agg::bump(ctx, ev.name, dur_ns);
+    }
+    LOCAL.with(|b| {
+        let mut q = b.events.lock().unwrap_or_else(|e| e.into_inner());
+        if q.len() < buf_cap() {
+            q.push(ev);
+        } else {
+            b.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    });
+}
+
+/// RAII span: opens at [`SpanGuard::begin`], records on drop. When
+/// tracing is disabled the guard is inert — no clock read, no ctx
+/// lookup, nothing recorded.
+pub struct SpanGuard {
+    open: Option<(&'static str, Instant)>,
+}
+
+impl SpanGuard {
+    /// Open a span named `name` (a no-op guard when tracing is off).
+    #[inline]
+    pub fn begin(name: &'static str) -> SpanGuard {
+        if !enabled() {
+            return SpanGuard { open: None };
+        }
+        SpanGuard { open: Some((name, Instant::now())) }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some((name, t0)) = self.open.take() {
+            let dur_ns = t0.elapsed().as_nanos() as u64;
+            record(Event {
+                name,
+                ctx: current_ctx(),
+                t0_ns: since_epoch(t0),
+                kind: EventKind::Span { dur_ns },
+            });
+        }
+    }
+}
+
+/// Record a span over an interval the caller already timed (the fused
+/// plans reuse their `forward_timed` instants, so the trace and the
+/// returned [`crate::dct::StageTimes`] come from one clock capture).
+#[inline]
+pub fn stage_span(name: &'static str, t0: Instant, t1: Instant) {
+    if !enabled() {
+        return;
+    }
+    record(Event {
+        name,
+        ctx: current_ctx(),
+        t0_ns: since_epoch(t0),
+        kind: EventKind::Span { dur_ns: t1.duration_since(t0).as_nanos() as u64 },
+    });
+}
+
+/// Record a span from `t0` to now (queue-wait style measurements where
+/// the opening instant was captured on another thread).
+#[inline]
+pub fn span_since(name: &'static str, t0: Instant) {
+    if !enabled() {
+        return;
+    }
+    stage_span(name, t0, Instant::now());
+}
+
+/// Record a counter sample.
+#[inline]
+pub fn counter(name: &'static str, value: f64) {
+    if !enabled() {
+        return;
+    }
+    record(Event {
+        name,
+        ctx: current_ctx(),
+        t0_ns: since_epoch(Instant::now()),
+        kind: EventKind::Counter { value },
+    });
+}
+
+/// Record a zero-duration marker.
+#[inline]
+pub fn instant_event(name: &'static str) {
+    if !enabled() {
+        return;
+    }
+    record(Event {
+        name,
+        ctx: current_ctx(),
+        t0_ns: since_epoch(Instant::now()),
+        kind: EventKind::Instant,
+    });
+}
+
+/// One thread's drained events (see [`take_events`]).
+pub struct ThreadEvents {
+    /// Stable small integer id (trace `tid`).
+    pub tid: u32,
+    /// OS thread name at buffer creation.
+    pub thread_name: String,
+    /// The drained events, in record order.
+    pub events: Vec<Event>,
+}
+
+/// Drain every thread's buffer (events recorded after the drain go into
+/// the next export). Threads with empty buffers are skipped.
+pub fn take_events() -> Vec<ThreadEvents> {
+    let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    let mut out = Vec::new();
+    for buf in reg.iter() {
+        let events =
+            std::mem::take(&mut *buf.events.lock().unwrap_or_else(|e| e.into_inner()));
+        if !events.is_empty() {
+            out.push(ThreadEvents {
+                tid: buf.tid,
+                thread_name: buf.name.clone(),
+                events,
+            });
+        }
+    }
+    out
+}
+
+/// Total events dropped to the per-thread cap since process start.
+pub fn dropped_events() -> u64 {
+    let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    reg.iter().map(|b| b.dropped.load(Ordering::Relaxed)).sum()
+}
+
+/// Discard all buffered events (tests / long-running services that
+/// exported elsewhere).
+pub fn reset_events() {
+    let _ = take_events();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_counters_and_instants_are_buffered_in_order() {
+        let _g = super::super::test_guard();
+        super::super::set_enabled(true);
+        #[cfg(not(feature = "trace-off"))]
+        {
+            reset_events();
+            {
+                let _s = SpanGuard::begin("test.span.outer");
+                counter("test.counter", 3.0);
+                instant_event("test.instant");
+            }
+            let t0 = Instant::now();
+            stage_span("test.span.stage", t0, Instant::now());
+            let mine: Vec<Event> = take_events()
+                .into_iter()
+                .flat_map(|t| t.events)
+                .filter(|e| e.name.starts_with("test."))
+                .collect();
+            assert_eq!(mine.len(), 4);
+            // drop order: counter and instant record before the guard
+            assert_eq!(mine[0].name, "test.counter");
+            assert!(matches!(mine[0].kind, EventKind::Counter { value } if value == 3.0));
+            assert_eq!(mine[1].name, "test.instant");
+            assert!(matches!(mine[1].kind, EventKind::Instant));
+            assert_eq!(mine[2].name, "test.span.outer");
+            assert!(matches!(mine[2].kind, EventKind::Span { .. }));
+            assert_eq!(mine[3].name, "test.span.stage");
+            // the guard opened before the counter events inside it
+            assert!(mine[2].t0_ns <= mine[0].t0_ns);
+        }
+        super::super::set_enabled(false);
+    }
+
+    #[test]
+    fn disabled_tracing_buffers_nothing() {
+        let _g = super::super::test_guard();
+        super::super::set_enabled(false);
+        reset_events();
+        {
+            let _s = SpanGuard::begin("test.off.span");
+            counter("test.off.counter", 1.0);
+            instant_event("test.off.instant");
+        }
+        let leaked: usize = take_events()
+            .into_iter()
+            .flat_map(|t| t.events)
+            .filter(|e| e.name.starts_with("test.off."))
+            .count();
+        assert_eq!(leaked, 0);
+    }
+
+    #[test]
+    fn events_from_other_threads_are_drained_with_their_tid() {
+        let _g = super::super::test_guard();
+        super::super::set_enabled(true);
+        #[cfg(not(feature = "trace-off"))]
+        {
+            reset_events();
+            std::thread::Builder::new()
+                .name("obs-test-worker".into())
+                .spawn(|| {
+                    let _s = SpanGuard::begin("test.cross.span");
+                })
+                .unwrap()
+                .join()
+                .unwrap();
+            let drained = take_events();
+            let t = drained
+                .iter()
+                .find(|t| t.events.iter().any(|e| e.name == "test.cross.span"))
+                .expect("worker events drained after thread exit");
+            assert_eq!(t.thread_name, "obs-test-worker");
+            assert!(t.tid > 0);
+        }
+        super::super::set_enabled(false);
+    }
+}

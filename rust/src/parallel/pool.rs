@@ -19,6 +19,7 @@
 //!   unrelated scopes are unaffected.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
@@ -72,6 +73,9 @@ pub struct ThreadPool {
     rx: Arc<Mutex<Receiver<Job>>>,
     workers: Vec<JoinHandle<()>>,
     size: usize,
+    /// Jobs enqueued but not yet started (sampled into the trace as the
+    /// `pool.queue_depth` counter when tracing is enabled).
+    depth: Arc<AtomicUsize>,
 }
 
 impl ThreadPool {
@@ -89,12 +93,17 @@ impl ThreadPool {
                     .expect("spawn pool worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), rx, workers, size }
+        ThreadPool { tx: Some(tx), rx, workers, size, depth: Arc::new(AtomicUsize::new(0)) }
     }
 
     /// Number of worker threads.
     pub fn size(&self) -> usize {
         self.size
+    }
+
+    /// Jobs enqueued but not yet started.
+    pub fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
     }
 
     /// Run `jobs` to completion. Jobs may borrow from the caller's stack
@@ -105,6 +114,7 @@ impl ThreadPool {
         if jobs.is_empty() {
             return;
         }
+        let _scope_span = crate::obs::SpanGuard::begin("pool.scope");
         let latch = Arc::new(Latch::new(jobs.len()));
         let tx = self.tx.as_ref().expect("pool running");
         for job in jobs {
@@ -120,10 +130,20 @@ impl ThreadPool {
                 >(job)
             };
             let latch = latch.clone();
+            let depth = self.depth.clone();
             let wrapped: Job = Box::new(move || {
-                let panicked = catch_unwind(AssertUnwindSafe(|| job())).is_err();
+                depth.fetch_sub(1, Ordering::Relaxed);
+                let panicked = {
+                    // per-job span: on a pool worker this is the
+                    // worker's busy interval; gaps between job spans on
+                    // one track are its idle time
+                    let _job_span = crate::obs::SpanGuard::begin("pool.job");
+                    catch_unwind(AssertUnwindSafe(|| job())).is_err()
+                };
                 latch.complete(panicked);
             });
+            let queued = self.depth.fetch_add(1, Ordering::Relaxed) + 1;
+            crate::obs::counter("pool.queue_depth", queued as f64);
             tx.send(wrapped).expect("pool workers alive");
         }
         // Work-share while waiting: if the queue is empty our jobs are
@@ -265,6 +285,14 @@ mod tests {
             ok_ref.fetch_add(1, Ordering::Relaxed);
         })]);
         assert_eq!(ok.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn queue_depth_drains_to_zero_after_scope() {
+        let pool = ThreadPool::new(2);
+        let jobs = (0..8).map(|_| boxed(|| {})).collect();
+        pool.scope(jobs);
+        assert_eq!(pool.queue_depth(), 0);
     }
 
     #[test]

@@ -31,8 +31,24 @@
 
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::fft::C64;
+use crate::util::json::Json;
+
+/// Process-wide mirrors of the per-thread pool activity, folded into
+/// `Metrics::snapshot()` (the `_scratch` section) so allocation
+/// regressions are visible on any running service, not just in the
+/// dedicated alloc test. Relaxed ordering: these are statistics, and
+/// every update is a single counter bump.
+static TOTAL_MISSES: AtomicU64 = AtomicU64::new(0);
+static RETAINED_BUFS: AtomicU64 = AtomicU64::new(0);
+static RETAINED_BYTES: AtomicU64 = AtomicU64::new(0);
+static PREWARM_CALLS: AtomicU64 = AtomicU64::new(0);
+static PREWARM_BYTES: AtomicU64 = AtomicU64::new(0);
+
+const F64_BYTES: u64 = std::mem::size_of::<f64>() as u64;
+const C64_BYTES: u64 = std::mem::size_of::<C64>() as u64;
 
 /// Max buffers retained per (thread, length) size class; extras given
 /// back beyond this are dropped immediately.
@@ -60,6 +76,42 @@ pub fn pool_misses() -> u64 {
 
 fn note_miss() {
     MISSES.with(|m| m.set(m.get() + 1));
+    TOTAL_MISSES.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Process-wide pool misses across every thread since process start
+/// (the cross-thread companion of the per-thread [`pool_misses`]).
+pub fn total_pool_misses() -> u64 {
+    TOTAL_MISSES.load(Ordering::Relaxed)
+}
+
+/// Pool statistics as a JSON object (the metrics snapshot's `_scratch`
+/// section): process-wide miss count, currently retained buffer
+/// count/bytes across all thread pools, and prewarm activity.
+pub fn stats_json() -> Json {
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("pool_misses".to_string(), Json::Num(TOTAL_MISSES.load(Ordering::Relaxed) as f64));
+    o.insert(
+        "retained_buffers".to_string(),
+        Json::Num(RETAINED_BUFS.load(Ordering::Relaxed) as f64),
+    );
+    o.insert(
+        "retained_bytes".to_string(),
+        Json::Num(RETAINED_BYTES.load(Ordering::Relaxed) as f64),
+    );
+    o.insert(
+        "prewarm_calls".to_string(),
+        Json::Num(PREWARM_CALLS.load(Ordering::Relaxed) as f64),
+    );
+    o.insert(
+        "prewarm_bytes".to_string(),
+        Json::Num(PREWARM_BYTES.load(Ordering::Relaxed) as f64),
+    );
+    o.insert(
+        "max_retained_per_class".to_string(),
+        Json::Num(MAX_RETAINED_PER_CLASS as f64),
+    );
+    Json::Obj(o)
 }
 
 /// Drop every buffer retained by this thread's pool. Benches use this to
@@ -68,6 +120,17 @@ fn note_miss() {
 pub fn clear_thread_pool() {
     POOL.with(|p| {
         let mut p = p.borrow_mut();
+        let (mut bufs, mut bytes) = (0u64, 0u64);
+        for (len, b) in p.f64s.iter() {
+            bufs += b.len() as u64;
+            bytes += b.len() as u64 * *len as u64 * F64_BYTES;
+        }
+        for (len, b) in p.c64s.iter() {
+            bufs += b.len() as u64;
+            bytes += b.len() as u64 * *len as u64 * C64_BYTES;
+        }
+        RETAINED_BUFS.fetch_sub(bufs, Ordering::Relaxed);
+        RETAINED_BYTES.fetch_sub(bytes, Ordering::Relaxed);
         p.f64s.clear();
         p.c64s.clear();
     });
@@ -78,7 +141,11 @@ pub fn take_f64(len: usize) -> Vec<f64> {
     POOL.with(|p| {
         let mut p = p.borrow_mut();
         match p.f64s.get_mut(&len).and_then(Vec::pop) {
-            Some(v) => v,
+            Some(v) => {
+                RETAINED_BUFS.fetch_sub(1, Ordering::Relaxed);
+                RETAINED_BYTES.fetch_sub(len as u64 * F64_BYTES, Ordering::Relaxed);
+                v
+            }
             None => {
                 note_miss();
                 vec![0.0; len]
@@ -95,6 +162,8 @@ pub fn give_f64(v: Vec<f64>) {
         let bucket = p.f64s.entry(len).or_default();
         if bucket.len() < MAX_RETAINED_PER_CLASS {
             bucket.push(v);
+            RETAINED_BUFS.fetch_add(1, Ordering::Relaxed);
+            RETAINED_BYTES.fetch_add(len as u64 * F64_BYTES, Ordering::Relaxed);
         }
     });
 }
@@ -104,7 +173,11 @@ pub fn take_c64(len: usize) -> Vec<C64> {
     POOL.with(|p| {
         let mut p = p.borrow_mut();
         match p.c64s.get_mut(&len).and_then(Vec::pop) {
-            Some(v) => v,
+            Some(v) => {
+                RETAINED_BUFS.fetch_sub(1, Ordering::Relaxed);
+                RETAINED_BYTES.fetch_sub(len as u64 * C64_BYTES, Ordering::Relaxed);
+                v
+            }
             None => {
                 note_miss();
                 vec![C64::default(); len]
@@ -121,6 +194,8 @@ pub fn give_c64(v: Vec<C64>) {
         let bucket = p.c64s.entry(len).or_default();
         if bucket.len() < MAX_RETAINED_PER_CLASS {
             bucket.push(v);
+            RETAINED_BUFS.fetch_add(1, Ordering::Relaxed);
+            RETAINED_BYTES.fetch_add(len as u64 * C64_BYTES, Ordering::Relaxed);
         }
     });
 }
@@ -208,6 +283,11 @@ impl Workspace {
     /// taken first (forcing the pool to materialize the full working
     /// set) and then returned. Idempotent and cheap when already warm.
     pub fn prewarm(&self) {
+        PREWARM_CALLS.fetch_add(1, Ordering::Relaxed);
+        PREWARM_BYTES.fetch_add(
+            self.f64_elems() as u64 * F64_BYTES + self.c64_elems() as u64 * C64_BYTES,
+            Ordering::Relaxed,
+        );
         let held_f: Vec<Vec<f64>> = self.f64_lens.iter().map(|&l| take_f64(l)).collect();
         let held_c: Vec<Vec<C64>> = self.c64_lens.iter().map(|&l| take_c64(l)).collect();
         for v in held_f {
@@ -298,6 +378,36 @@ mod tests {
         give_f64(y);
         give_c64(z);
         assert_eq!(pool_misses(), before, "warmed takes must not miss");
+    }
+
+    #[test]
+    fn stats_json_reports_activity() {
+        // counters are process-wide and other tests run concurrently, so
+        // assert monotonicity and schema, not exact values
+        let before = total_pool_misses();
+        give_f64(take_f64(98765)); // unique length: guaranteed cold
+        assert!(total_pool_misses() > before);
+        let mut ws = Workspace::new();
+        ws.add_f64(16);
+        ws.prewarm();
+        match stats_json() {
+            Json::Obj(o) => {
+                for key in [
+                    "pool_misses",
+                    "retained_buffers",
+                    "retained_bytes",
+                    "prewarm_calls",
+                    "prewarm_bytes",
+                    "max_retained_per_class",
+                ] {
+                    match o.get(key) {
+                        Some(Json::Num(n)) => assert!(*n >= 0.0, "{key} must be non-negative"),
+                        other => panic!("missing numeric key {key}: {other:?}"),
+                    }
+                }
+            }
+            other => panic!("stats_json must be an object, got {other:?}"),
+        }
     }
 
     #[test]

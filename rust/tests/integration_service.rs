@@ -169,6 +169,7 @@ fn sharded_3d_request_executes_as_slabs_through_the_service() {
         batch: BatchPolicy::default(),
         exec: ExecPolicy::Serial,
         shard: ShardPolicy::MaxShards(4),
+        ..Default::default()
     });
     let (n1, n2, n3) = (64usize, 64usize, 64usize); // numel == SHARD_MIN_NUMEL_3D
     let mut rng = Rng::new(605);
@@ -204,12 +205,14 @@ fn sharded_service_matches_unsharded_service() {
         batch: BatchPolicy::default(),
         exec: ExecPolicy::Serial,
         shard: ShardPolicy::MaxShards(1),
+        ..Default::default()
     });
     let sharded = Service::start_native(ServiceConfig {
         workers: 2,
         batch: BatchPolicy::default(),
         exec: ExecPolicy::Serial,
         shard: ShardPolicy::MaxShards(5),
+        ..Default::default()
     });
     let mut rng = Rng::new(604);
     for op in [TransformOp::Dct2d, TransformOp::Idct2d, TransformOp::IdctIdxst] {

@@ -1,0 +1,92 @@
+//! Golden schema test for the metrics JSON snapshot: the exact key sets
+//! of the per-op rows and the reserved `_`-sections are load-bearing —
+//! dashboards and the CI bench tooling key on them — so any drift must
+//! be a deliberate, test-updating change.
+
+use mddct::coordinator::Metrics;
+use mddct::util::json::Json;
+
+/// Sorted keys of a JSON object (panics on non-objects).
+fn keys(v: &Json) -> Vec<&str> {
+    match v {
+        Json::Obj(o) => o.keys().map(String::as_str).collect(),
+        other => panic!("expected object, got {other:?}"),
+    }
+}
+
+#[test]
+fn snapshot_schema_is_golden() {
+    let m = Metrics::new();
+    m.record("dct2d", 2, 0.002, 3, 4); // sharded 2D traffic
+    m.record("dct3d", 3, 0.010, 1, 1);
+    m.record_packed("dct2d", 8);
+    m.record_error("dct2d");
+    let snap = m.snapshot();
+
+    // per-op row: the full golden key set (packed_batch_hist appears
+    // only once a packed batch ran, so dct2d has it and dct3d doesn't)
+    let golden_op = [
+        "errors",
+        "max_batch",
+        "max_bands",
+        "max_latency_s",
+        "max_packed_batch",
+        "mean_batch",
+        "mean_latency_s",
+        "p50_latency_s",
+        "p95_latency_s",
+        "packed_batch_hist",
+        "packed_batches",
+        "packed_requests",
+        "requests",
+        "sharded_requests",
+    ];
+    assert_eq!(keys(snap.get("dct2d").unwrap()), golden_op);
+    let without_hist: Vec<&str> =
+        golden_op.iter().copied().filter(|k| *k != "packed_batch_hist").collect();
+    assert_eq!(keys(snap.get("dct3d").unwrap()), without_hist);
+
+    // rank breakdown: one bucket per dimensionality seen, fixed fields
+    let by_rank = snap.get("_sharding_by_rank").unwrap();
+    assert_eq!(keys(by_rank), ["2d", "3d"]);
+    for rank in ["2d", "3d"] {
+        assert_eq!(
+            keys(by_rank.get(rank).unwrap()),
+            ["max_bands", "requests", "sharded_requests"]
+        );
+    }
+
+    // scratch-pool section: always present, fixed fields
+    assert_eq!(
+        keys(snap.get("_scratch").unwrap()),
+        [
+            "max_retained_per_class",
+            "pool_misses",
+            "prewarm_bytes",
+            "prewarm_calls",
+            "retained_buffers",
+            "retained_bytes",
+        ]
+    );
+
+    // the snapshot round-trips through the crate's own JSON grammar
+    let reparsed = Json::parse(&snap.to_string()).unwrap();
+    assert_eq!(keys(&reparsed), keys(&snap));
+    assert_eq!(
+        reparsed.get("dct2d").unwrap().get("requests").unwrap().as_f64().unwrap(),
+        1.0
+    );
+    assert_eq!(
+        reparsed.get("dct2d").unwrap().get("errors").unwrap().as_f64().unwrap(),
+        1.0
+    );
+}
+
+#[test]
+fn empty_registry_snapshot_still_carries_scratch() {
+    let snap = Metrics::new().snapshot();
+    // no traffic: no op rows, no rank section — but the scratch section
+    // (process-wide pool state) is unconditional
+    assert!(snap.get("_scratch").is_some());
+    assert!(snap.get("_sharding_by_rank").is_none());
+}

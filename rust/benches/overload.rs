@@ -1,0 +1,140 @@
+//! Open-loop overload bench: offered load vs goodput, shed rate, and
+//! tail latency through the full service lifecycle (admission budget,
+//! batcher, workers).
+//!
+//! Closed-loop benches (submit, wait, repeat) can never overload the
+//! service — arrival pauses whenever the pool stalls. This bench is
+//! open-loop: requests arrive on a fixed schedule derived from the
+//! service's measured closed-loop capacity, at 1x / 2x / 4x that rate,
+//! whether or not earlier requests have finished. Above capacity the
+//! bounded inflight budget must shed (`Overloaded`) rather than grow
+//! the queue, and the tail latency of the admitted requests stays
+//! bounded by queue depth — both show up as trend-gated numbers here.
+//!
+//! Emits a human table plus machine-readable `BENCH_overload.json`
+//! (override the path with `MDDCT_BENCH_OVERLOAD_JSON`); the bench-diff
+//! CI gate tracks the `*_ms` columns per row (`speedup_`-prefixed
+//! fields are reported but not gated, per the bench_diff convention —
+//! the admit ratio is one, since it is load-derived, not a time).
+//! `MDDCT_BENCH_QUICK=1` runs a CI-sized subset.
+//!
+//! Run: `cargo bench --bench overload`
+
+use std::time::{Duration, Instant};
+
+use mddct::bench::{ms, Table};
+use mddct::coordinator::{BatchPolicy, Service, ServiceConfig, TransformOp};
+use mddct::parallel::{ExecPolicy, ShardPolicy};
+use mddct::util::rng::Rng;
+
+/// Block edge: large enough that service time dwarfs channel hops,
+/// small enough that requests co-batch rather than shard.
+const N: usize = 64;
+/// Fixed worker count: part of each row's identity, so it must not
+/// float with the runner's core count.
+const WORKERS: usize = 2;
+/// Admission cap: 16 in-flight payloads — deep enough to absorb
+/// bursts at capacity, shallow enough that 4x offered load sheds.
+const MAX_INFLIGHT: usize = 16 * N * N;
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() - 1) as f64 * p).round() as usize]
+}
+
+fn main() {
+    let quick = std::env::var("MDDCT_BENCH_QUICK").is_ok();
+    let (mode, requests) = if quick { ("quick", 400usize) } else { ("full", 4000usize) };
+
+    let svc = Service::start_native(ServiceConfig {
+        workers: WORKERS,
+        batch: BatchPolicy::default(),
+        exec: ExecPolicy::Serial,
+        shard: ShardPolicy::Auto,
+        trace: false,
+        default_deadline: None,
+        max_inflight_elems: MAX_INFLIGHT,
+    });
+    let mut rng = Rng::new(42);
+    let payload = rng.normal_vec(N * N);
+
+    // measure closed-loop service time (plan warm, one request at a
+    // time); offered rates are multiples of the implied pool capacity
+    for _ in 0..8 {
+        svc.transform(TransformOp::Dct2d, vec![N, N], payload.clone()).unwrap();
+    }
+    let cal = 64;
+    let t0 = Instant::now();
+    for _ in 0..cal {
+        svc.transform(TransformOp::Dct2d, vec![N, N], payload.clone()).unwrap();
+    }
+    let svc_s = t0.elapsed().as_secs_f64() / cal as f64;
+    let capacity = WORKERS as f64 / svc_s;
+    println!(
+        "\nOpen-loop overload: dct2d {N}x{N}, {WORKERS} workers, budget {MAX_INFLIGHT} elems, \
+         closed-loop service time {} => capacity ~{capacity:.0} req/s\n",
+        ms(svc_s)
+    );
+
+    let mut t = Table::new(&["load", "offered req/s", "goodput req/s", "shed", "p50", "p99"]);
+    let mut json_rows: Vec<String> = Vec::new();
+    for (label, mult) in [("1x", 1.0f64), ("2x", 2.0), ("4x", 4.0)] {
+        let interarrival = Duration::from_secs_f64(1.0 / (capacity * mult));
+        let start = Instant::now();
+        let mut handles = Vec::with_capacity(requests);
+        let mut shed = 0usize;
+        for i in 0..requests {
+            // open loop: hold the schedule even when the pool is behind
+            let due = start + interarrival * (i as u32);
+            while Instant::now() < due {
+                std::hint::spin_loop();
+            }
+            match svc.submit(TransformOp::Dct2d, vec![N, N], payload.clone()) {
+                Ok(h) => handles.push(h),
+                Err(e) if e.is_retryable() => shed += 1,
+                Err(e) => panic!("submit failed: {e}"),
+            }
+        }
+        let mut lats: Vec<f64> =
+            handles.into_iter().filter_map(|h| h.wait().ok()).map(|r| r.latency).collect();
+        let elapsed = start.elapsed().as_secs_f64();
+        let ok = lats.len();
+        lats.sort_by(|a, b| a.total_cmp(b));
+        let p50 = percentile(&lats, 0.50);
+        let p99 = percentile(&lats, 0.99);
+        let goodput = ok as f64 / elapsed;
+        let per_req_ms = 1e3 * elapsed / ok.max(1) as f64;
+        let admit_ratio = ok as f64 / requests as f64;
+        t.row(&[
+            label.to_string(),
+            format!("{:.0}", capacity * mult),
+            format!("{goodput:.0}"),
+            format!("{shed} ({:.1}%)", 100.0 * shed as f64 / requests as f64),
+            ms(p50),
+            ms(p99),
+        ]);
+        json_rows.push(format!(
+            "{{\"section\": \"overload\", \"mode\": \"{mode}\", \"n\": {N}, \
+             \"workers\": {WORKERS}, \"load\": \"{label}\", \
+             \"per_req_ms\": {per_req_ms:.6}, \"p50_ms\": {:.6}, \"p99_ms\": {:.6}, \
+             \"speedup_admit_ratio\": {admit_ratio:.4}}}",
+            p50 * 1e3,
+            p99 * 1e3
+        ));
+    }
+    t.print();
+    println!("\nfinal snapshot: {}", svc.snapshot());
+
+    let path = std::env::var("MDDCT_BENCH_OVERLOAD_JSON")
+        .unwrap_or_else(|_| "BENCH_overload.json".to_string());
+    let doc = format!(
+        "{{\n  \"bench\": \"overload\",\n  \"unit\": \"latency_ms\",\n  \"rows\": [\n    {}\n  ]\n}}\n",
+        json_rows.join(",\n    ")
+    );
+    match std::fs::write(&path, &doc) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

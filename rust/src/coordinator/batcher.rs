@@ -12,24 +12,125 @@
 //! (its runtime dwarfs the plan lookup it would amortize), so holding
 //! it back `max_wait` only adds latency — it is flushed to a worker
 //! immediately and fans out across the shared pool from there.
+//!
+//! The batcher is also the first line of the failure model: at dequeue
+//! and at flush time it drops requests whose deadline already passed
+//! (answering [`TransformError::DeadlineExceeded`]) and requests whose
+//! client dropped the reply handle ([`Pending::cancelled`]) — neither
+//! deserves pool work. The [`InflightBudget`] it shares with
+//! `Service::submit` bounds the total queued payload, turning pool
+//! saturation into explicit `Overloaded` shedding at the front door
+//! instead of unbounded queue growth here.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
 
+use super::metrics::Metrics;
 use super::request::{PlanKey, Request, Response};
 use super::shard::{shard_min_numel, shard_min_numel_3d};
 use crate::util::env_usize;
+use crate::util::error::TransformError;
 
 /// A queued request plus its reply channel and enqueue timestamp.
 pub struct Pending {
     /// The validated request.
     pub request: Request,
     /// Where the worker sends the response.
-    pub reply: Sender<Result<Response, String>>,
+    pub reply: Sender<Result<Response, TransformError>>,
     /// When the request entered the service (latency accounting).
     pub enqueued: Instant,
+    /// Set by the client `Handle`'s drop: nobody is waiting anymore, so
+    /// the batcher/worker skips computing for this request entirely.
+    pub cancelled: Arc<AtomicBool>,
+}
+
+impl Pending {
+    /// Wrap a validated request with a fresh (un-cancelled) flag.
+    pub fn new(request: Request, reply: Sender<Result<Response, TransformError>>) -> Pending {
+        Pending {
+            request,
+            reply,
+            enqueued: Instant::now(),
+            cancelled: Arc::new(AtomicBool::new(false)),
+        }
+    }
+}
+
+/// Elems-weighted admission budget shared by `Service::submit` (acquire)
+/// and the batcher/workers (release at every reply or drop): the total
+/// payload in flight — queued, batching, or executing — never exceeds
+/// `max_elems`, so a saturated pool sheds new arrivals with
+/// [`TransformError::Overloaded`] instead of growing queues without
+/// bound. Weighting by elements (like [`BatchPolicy::max_batch_elems`])
+/// makes one huge volume and ten thousand 8x8 blocks count the same way
+/// memory actually bills them.
+#[derive(Debug)]
+pub struct InflightBudget {
+    max_elems: usize,
+    current: AtomicUsize,
+}
+
+impl InflightBudget {
+    /// Budget capped at `max_elems` total in-flight payload elements.
+    pub fn new(max_elems: usize) -> InflightBudget {
+        InflightBudget { max_elems, current: AtomicUsize::new(0) }
+    }
+
+    /// Effectively unbounded budget (admission control off).
+    pub fn unlimited() -> InflightBudget {
+        Self::new(usize::MAX)
+    }
+
+    /// Try to admit `elems` more payload; `false` = over budget (the
+    /// optimistic add is rolled back, nothing is held).
+    pub fn try_acquire(&self, elems: usize) -> bool {
+        let prev = self.current.fetch_add(elems, Ordering::AcqRel);
+        if prev.saturating_add(elems) > self.max_elems {
+            self.current.fetch_sub(elems, Ordering::AcqRel);
+            return false;
+        }
+        true
+    }
+
+    /// Return `elems` of budget (request answered or dropped).
+    pub fn release(&self, elems: usize) {
+        self.current.fetch_sub(elems, Ordering::AcqRel);
+    }
+
+    /// Payload elements currently admitted.
+    pub fn in_use(&self) -> usize {
+        self.current.load(Ordering::Acquire)
+    }
+
+    /// The configured cap.
+    pub fn max_elems(&self) -> usize {
+        self.max_elems
+    }
+}
+
+/// Lifecycle gate applied wherever a request leaves a queue: pass live
+/// requests through, and conclude dead ones — cancelled (client handle
+/// dropped: skip computing, count `dropped_replies`) or expired
+/// (deadline passed while queued: answer `DeadlineExceeded`, count
+/// `expired_requests`). Dead requests release their budget here.
+pub(crate) fn admit(p: Pending, metrics: &Metrics, budget: &InflightBudget) -> Option<Pending> {
+    if p.cancelled.load(Ordering::Relaxed) {
+        metrics.record_dropped_reply(&p.request.op.name());
+        crate::obs::instant_event("svc.dropped_reply");
+        budget.release(p.request.data.len());
+        return None;
+    }
+    if p.request.expired() {
+        metrics.record_expired(&p.request.op.name());
+        crate::obs::instant_event("svc.expired");
+        budget.release(p.request.data.len());
+        let _ = p.reply.send(Err(TransformError::DeadlineExceeded));
+        return None;
+    }
+    Some(p)
 }
 
 /// A batch of same-key requests ready for one worker.
@@ -89,10 +190,28 @@ pub fn max_batch_elems() -> usize {
 }
 
 /// Run the batching loop: drain `rx`, form batches, push to `tx`.
+/// Cancelled/expired requests are concluded at dequeue and again at
+/// flush time (see [`admit`]) so stale work never reaches a worker.
 /// Returns when the request channel closes.
-pub fn run_batcher(rx: Receiver<Pending>, tx: Sender<Batch>, policy: BatchPolicy) {
+pub fn run_batcher(
+    rx: Receiver<Pending>,
+    tx: Sender<Batch>,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+    budget: Arc<InflightBudget>,
+) {
     let mut open: HashMap<PlanKey, Vec<Pending>> = HashMap::new();
     let mut oldest: Option<Instant> = None;
+    // flush one key's accumulated requests, re-gating each (a deadline
+    // may have passed during the co-batching wait)
+    let flush = |key: PlanKey, items: Vec<Pending>| -> Result<(), ()> {
+        let items: Vec<Pending> =
+            items.into_iter().filter_map(|p| admit(p, &metrics, &budget)).collect();
+        if items.is_empty() {
+            return Ok(());
+        }
+        tx.send(Batch { key, items }).map_err(|_| ())
+    };
     loop {
         // Wait for work, bounded by the flush deadline of the oldest
         // request currently held back for co-batching.
@@ -105,6 +224,9 @@ pub fn run_batcher(rx: Receiver<Pending>, tx: Sender<Batch>, policy: BatchPolicy
         };
         match rx.recv_timeout(timeout) {
             Ok(p) => {
+                let Some(p) = admit(p, &metrics, &budget) else {
+                    continue;
+                };
                 let key = p.request.key();
                 let numel = p.request.data.len();
                 // a request big enough to band-shard gains nothing from
@@ -122,7 +244,7 @@ pub fn run_batcher(rx: Receiver<Pending>, tx: Sender<Batch>, policy: BatchPolicy
                 let full_elems = q.len().saturating_mul(numel) >= policy.max_batch_elems;
                 if q.len() >= policy.max_batch || full_elems || solo {
                     let items = open.remove(&key).unwrap();
-                    if tx.send(Batch { key, items }).is_err() {
+                    if flush(key, items).is_err() {
                         return;
                     }
                     if open.is_empty() {
@@ -133,7 +255,7 @@ pub fn run_batcher(rx: Receiver<Pending>, tx: Sender<Batch>, policy: BatchPolicy
             Err(RecvTimeoutError::Timeout) => {
                 // flush everything currently held
                 for (key, items) in open.drain() {
-                    if tx.send(Batch { key, items }).is_err() {
+                    if flush(key, items).is_err() {
                         return;
                     }
                 }
@@ -141,7 +263,7 @@ pub fn run_batcher(rx: Receiver<Pending>, tx: Sender<Batch>, policy: BatchPolicy
             }
             Err(RecvTimeoutError::Disconnected) => {
                 for (key, items) in open.drain() {
-                    let _ = tx.send(Batch { key, items });
+                    let _ = flush(key, items);
                 }
                 return;
             }
@@ -155,22 +277,35 @@ mod tests {
     use crate::coordinator::request::TransformOp;
     use std::sync::mpsc::channel;
 
-    fn pending(id: u64, shape: Vec<usize>) -> (Pending, Receiver<Result<Response, String>>) {
+    fn pending(
+        id: u64,
+        shape: Vec<usize>,
+    ) -> (Pending, Receiver<Result<Response, TransformError>>) {
         let (tx, rx) = channel();
         let numel = shape.iter().product();
         (
-            Pending {
-                request: Request {
+            Pending::new(
+                Request {
                     id,
                     op: TransformOp::Dct2d,
                     shape,
                     data: vec![0.0; numel],
+                    deadline: None,
                 },
-                reply: tx,
-                enqueued: Instant::now(),
-            },
+                tx,
+            ),
             rx,
         )
+    }
+
+    fn spawn_batcher(
+        rx: Receiver<Pending>,
+        tx: Sender<Batch>,
+        policy: BatchPolicy,
+    ) -> std::thread::JoinHandle<()> {
+        let metrics = Arc::new(Metrics::new());
+        let budget = Arc::new(InflightBudget::unlimited());
+        std::thread::spawn(move || run_batcher(rx, tx, policy, metrics, budget))
     }
 
     #[test]
@@ -179,7 +314,7 @@ mod tests {
         let (batch_tx, batch_rx) = channel();
         let policy =
             BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(5), ..Default::default() };
-        let h = std::thread::spawn(move || run_batcher(req_rx, batch_tx, policy));
+        let h = spawn_batcher(req_rx, batch_tx, policy);
 
         let (p1, _r1) = pending(1, vec![4, 4]);
         let (p2, _r2) = pending(2, vec![4, 4]);
@@ -203,7 +338,7 @@ mod tests {
         let (batch_tx, batch_rx) = channel();
         let policy =
             BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(10), ..Default::default() };
-        let h = std::thread::spawn(move || run_batcher(req_rx, batch_tx, policy));
+        let h = spawn_batcher(req_rx, batch_tx, policy);
         let (p1, _r1) = pending(1, vec![4, 4]);
         let (p2, _r2) = pending(2, vec![4, 4]);
         req_tx.send(p1).unwrap();
@@ -226,7 +361,7 @@ mod tests {
             solo_numel: 256 * 256,
             ..Default::default()
         };
-        let h = std::thread::spawn(move || run_batcher(req_rx, batch_tx, policy));
+        let h = spawn_batcher(req_rx, batch_tx, policy);
         let (big, _rb) = pending(1, vec![256, 256]);
         req_tx.send(big).unwrap();
         let b = batch_rx.recv_timeout(Duration::from_secs(1)).unwrap();
@@ -246,22 +381,22 @@ mod tests {
             solo_numel: 256 * 256,
             ..Default::default()
         };
-        let h = std::thread::spawn(move || run_batcher(req_rx, batch_tx, policy));
+        let h = spawn_batcher(req_rx, batch_tx, policy);
         // a shard-gate-sized 3D volume must flush immediately as well
         let (reply, _rx) = channel();
         let shape = vec![64usize, 64, 64];
         let numel: usize = shape.iter().product();
         req_tx
-            .send(Pending {
-                request: Request {
+            .send(Pending::new(
+                Request {
                     id: 1,
                     op: TransformOp::Dct3d,
                     shape: shape.clone(),
                     data: vec![0.0; numel],
+                    deadline: None,
                 },
                 reply,
-                enqueued: Instant::now(),
-            })
+            ))
             .unwrap();
         let b = batch_rx.recv_timeout(Duration::from_secs(1)).unwrap();
         assert_eq!(b.items.len(), 1);
@@ -283,7 +418,7 @@ mod tests {
             solo_numel: usize::MAX,
             max_batch_elems: 48,
         };
-        let h = std::thread::spawn(move || run_batcher(req_rx, batch_tx, policy));
+        let h = spawn_batcher(req_rx, batch_tx, policy);
         for id in 0..6 {
             let (p, _r) = pending(id, vec![4, 4]);
             req_tx.send(p).unwrap();
@@ -297,12 +432,81 @@ mod tests {
     }
 
     #[test]
+    fn expired_requests_are_answered_not_forwarded() {
+        let (req_tx, req_rx) = channel();
+        let (batch_tx, batch_rx) = channel::<Batch>();
+        let metrics = Arc::new(Metrics::new());
+        let budget = Arc::new(InflightBudget::new(1000));
+        let h = {
+            let (m, b) = (metrics.clone(), budget.clone());
+            std::thread::spawn(move || run_batcher(req_rx, batch_tx, BatchPolicy::default(), m, b))
+        };
+        let (mut p, r) = pending(1, vec![4, 4]);
+        assert!(budget.try_acquire(p.request.data.len()));
+        p.request.deadline = Some(Instant::now() - Duration::from_millis(1));
+        req_tx.send(p).unwrap();
+        // the batcher answers DeadlineExceeded itself and releases budget
+        assert!(matches!(
+            r.recv_timeout(Duration::from_secs(1)).unwrap(),
+            Err(TransformError::DeadlineExceeded)
+        ));
+        assert!(batch_rx.recv_timeout(Duration::from_millis(100)).is_err());
+        assert_eq!(budget.in_use(), 0);
+        drop(req_tx);
+        h.join().unwrap();
+        let snap = metrics.snapshot();
+        let expired =
+            snap.get("dct2d").and_then(|d| d.get("expired_requests")).and_then(|v| v.as_f64());
+        assert_eq!(expired, Some(1.0));
+    }
+
+    #[test]
+    fn cancelled_requests_are_dropped_silently() {
+        let (req_tx, req_rx) = channel();
+        let (batch_tx, batch_rx) = channel::<Batch>();
+        let metrics = Arc::new(Metrics::new());
+        let budget = Arc::new(InflightBudget::unlimited());
+        let h = {
+            let (m, b) = (metrics.clone(), budget.clone());
+            std::thread::spawn(move || run_batcher(req_rx, batch_tx, BatchPolicy::default(), m, b))
+        };
+        let (p, _r) = pending(1, vec![4, 4]);
+        p.cancelled.store(true, Ordering::Relaxed);
+        req_tx.send(p).unwrap();
+        assert!(batch_rx.recv_timeout(Duration::from_millis(100)).is_err());
+        drop(req_tx);
+        h.join().unwrap();
+        let snap = metrics.snapshot();
+        let dropped =
+            snap.get("dct2d").and_then(|d| d.get("dropped_replies")).and_then(|v| v.as_f64());
+        assert_eq!(dropped, Some(1.0));
+    }
+
+    #[test]
+    fn inflight_budget_admits_releases_and_sheds() {
+        let b = InflightBudget::new(100);
+        assert_eq!(b.max_elems(), 100);
+        assert!(b.try_acquire(60));
+        assert!(b.try_acquire(40));
+        assert_eq!(b.in_use(), 100);
+        // over budget: rejected AND rolled back (no phantom reservation)
+        assert!(!b.try_acquire(1));
+        assert_eq!(b.in_use(), 100);
+        b.release(40);
+        assert!(b.try_acquire(30));
+        b.release(90);
+        assert_eq!(b.in_use(), 0);
+        // an oversized single request never fits a tiny budget...
+        assert!(!InflightBudget::new(16).try_acquire(64));
+        // ...but always fits the unlimited one
+        assert!(InflightBudget::unlimited().try_acquire(usize::MAX / 2));
+    }
+
+    #[test]
     fn drains_on_disconnect() {
         let (req_tx, req_rx) = channel();
         let (batch_tx, batch_rx) = channel();
-        let h = std::thread::spawn(move || {
-            run_batcher(req_rx, batch_tx, BatchPolicy::default())
-        });
+        let h = spawn_batcher(req_rx, batch_tx, BatchPolicy::default());
         let (p1, _r1) = pending(1, vec![2, 2]);
         req_tx.send(p1).unwrap();
         drop(req_tx);

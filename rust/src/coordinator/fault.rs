@@ -1,0 +1,355 @@
+//! Deterministic fault injection for the coordinator (the chaos layer).
+//!
+//! Every robustness behavior in the request lifecycle — panic isolation,
+//! degrade-and-retry, plan quarantine, deadline expiry under slow
+//! execution — needs a way to *cause* the failure on demand. This module
+//! injects panics, errors, and delays at the coordinator's execution
+//! seams, controlled by a spec string:
+//!
+//! ```text
+//! MDDCT_FAULT=panic:dct2d:0.5,delay:execute:20ms,error:pack
+//! ```
+//!
+//! Each comma-separated entry is `kind:site[:arg][:prob]`:
+//!
+//! * `kind` — `panic` | `error` | `delay`;
+//! * `site` — either a seam name (`execute`, `execute_batch`, `pack`)
+//!   or a transform-op name (`dct2d`, …), matching every seam that op
+//!   crosses;
+//! * `arg` — for `delay` only: a duration (`20ms`, `500us`, `1s`, or a
+//!   bare number meaning milliseconds);
+//! * `prob` — firing probability in `[0, 1]`, default 1.0 (rolled per
+//!   seam crossing with a per-thread deterministic RNG).
+//!
+//! Like the `obs` enable flag, the disabled hot path is a single relaxed
+//! atomic load, resolved lazily from `MDDCT_FAULT` on first query;
+//! [`set_faults`] / [`clear`] override it programmatically (the test
+//! harness and the CLI `--fault` flag use this). The `fault-off` cargo
+//! feature compiles [`enabled`] to a constant `false` so every injection
+//! site folds away in production builds, mirroring `trace-off`.
+//!
+//! Injection sites live *inside* the worker's `catch_unwind` and *only*
+//! on the primary execution path — the degraded-serial retry path does
+//! not cross them, so a probability-1.0 panic spec still lets every
+//! request complete via degradation (which is exactly what the fault
+//! matrix in `tests/fault_injection.rs` asserts).
+
+use std::time::Duration;
+
+use crate::util::error::TransformError;
+
+/// What an injected fault does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// `panic!` at the seam (exercises `catch_unwind` isolation and the
+    /// degrade-and-retry path).
+    Panic,
+    /// Return a [`TransformError::ExecutionFailed`] from the seam
+    /// (exercises the non-panic error path).
+    Error,
+    /// Sleep at the seam (exercises deadlines and overload shedding).
+    Delay(Duration),
+}
+
+/// One parsed `kind:site[:arg][:prob]` entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// What to inject.
+    pub kind: FaultKind,
+    /// Seam name (`execute`, `execute_batch`, `pack`) or op name.
+    pub site: String,
+    /// Firing probability in `[0, 1]`.
+    pub prob: f64,
+}
+
+/// Parse a `MDDCT_FAULT`-style spec string into fault entries.
+/// Whitespace around entries is tolerated; an empty string yields no
+/// faults. Errors name the offending entry.
+pub fn parse_spec(spec: &str) -> Result<Vec<FaultSpec>, String> {
+    let mut out = Vec::new();
+    for entry in spec.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = entry.split(':').collect();
+        if parts.len() < 2 {
+            return Err(format!("fault entry '{entry}': expected kind:site[:arg][:prob]"));
+        }
+        let site = parts[1].trim().to_string();
+        if site.is_empty() {
+            return Err(format!("fault entry '{entry}': empty site"));
+        }
+        let (kind, rest) = match parts[0].trim() {
+            "panic" => (FaultKind::Panic, &parts[2..]),
+            "error" => (FaultKind::Error, &parts[2..]),
+            "delay" => {
+                let Some(arg) = parts.get(2) else {
+                    return Err(format!("fault entry '{entry}': delay needs a duration"));
+                };
+                (FaultKind::Delay(parse_duration(arg.trim())?), &parts[3..])
+            }
+            other => return Err(format!("fault entry '{entry}': unknown kind '{other}'")),
+        };
+        let prob = match rest.first() {
+            None => 1.0,
+            Some(p) => {
+                let p: f64 = p
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("fault entry '{entry}': bad probability '{p}'"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("fault entry '{entry}': probability {p} not in [0, 1]"));
+                }
+                p
+            }
+        };
+        out.push(FaultSpec { kind, site, prob });
+    }
+    Ok(out)
+}
+
+/// Parse `20ms` / `500us` / `1s` / bare-number-means-ms durations.
+fn parse_duration(s: &str) -> Result<Duration, String> {
+    let (num, mult_us) = if let Some(n) = s.strip_suffix("ms") {
+        (n, 1_000.0)
+    } else if let Some(n) = s.strip_suffix("us") {
+        (n, 1.0)
+    } else if let Some(n) = s.strip_suffix('s') {
+        (n, 1_000_000.0)
+    } else {
+        (s, 1_000.0)
+    };
+    let v: f64 = num.trim().parse().map_err(|_| format!("bad duration '{s}'"))?;
+    if v < 0.0 || !v.is_finite() {
+        return Err(format!("bad duration '{s}'"));
+    }
+    Ok(Duration::from_micros((v * mult_us) as u64))
+}
+
+#[cfg(not(feature = "fault-off"))]
+mod state {
+    use super::FaultSpec;
+    use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+    use std::sync::Mutex;
+
+    /// Tri-state like `obs::STATE`: 0 = uninitialized (resolve
+    /// `MDDCT_FAULT` on first query), 1 = off, 2 = on.
+    static STATE: AtomicU8 = AtomicU8::new(0);
+    static SPECS: Mutex<Vec<FaultSpec>> = Mutex::new(Vec::new());
+    /// Per-thread RNG seeds (deterministic but distinct across threads).
+    static SEED: AtomicU64 = AtomicU64::new(0x9e37_79b9_7f4a_7c15);
+
+    pub(super) fn enabled() -> bool {
+        match STATE.load(Ordering::Relaxed) {
+            2 => true,
+            1 => false,
+            _ => resolve_from_env(),
+        }
+    }
+
+    #[cold]
+    fn resolve_from_env() -> bool {
+        let specs = std::env::var("MDDCT_FAULT")
+            .ok()
+            .and_then(|v| match super::parse_spec(&v) {
+                Ok(s) => Some(s),
+                Err(e) => {
+                    eprintln!("MDDCT_FAULT ignored: {e}");
+                    None
+                }
+            })
+            .unwrap_or_default();
+        let on = !specs.is_empty();
+        *SPECS.lock().unwrap_or_else(|e| e.into_inner()) = specs;
+        STATE.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+        on
+    }
+
+    pub(super) fn install(specs: Vec<FaultSpec>) {
+        let on = !specs.is_empty();
+        *SPECS.lock().unwrap_or_else(|e| e.into_inner()) = specs;
+        STATE.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+    }
+
+    pub(super) fn with_specs<T>(f: impl FnOnce(&[FaultSpec]) -> T) -> T {
+        f(&SPECS.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+
+    thread_local! {
+        static RNG: std::cell::RefCell<crate::util::rng::Rng> =
+            std::cell::RefCell::new(crate::util::rng::Rng::new(
+                SEED.fetch_add(0x517c_c1b7_2722_0a95, Ordering::Relaxed),
+            ));
+    }
+
+    pub(super) fn roll(prob: f64) -> bool {
+        if prob >= 1.0 {
+            return true;
+        }
+        if prob <= 0.0 {
+            return false;
+        }
+        RNG.with(|r| r.borrow_mut().f64()) < prob
+    }
+}
+
+/// Whether fault injection is active. One relaxed atomic load when the
+/// env var has been resolved; a constant `false` under `fault-off`.
+#[cfg(not(feature = "fault-off"))]
+#[inline]
+pub fn enabled() -> bool {
+    state::enabled()
+}
+
+/// Compiled-out variant: faults can never fire.
+#[cfg(feature = "fault-off")]
+#[inline(always)]
+pub fn enabled() -> bool {
+    false
+}
+
+/// Install `specs` as the active fault set (empty = off), overriding
+/// `MDDCT_FAULT`. A no-op under the `fault-off` feature.
+pub fn set_faults(specs: Vec<FaultSpec>) {
+    #[cfg(not(feature = "fault-off"))]
+    state::install(specs);
+    #[cfg(feature = "fault-off")]
+    drop(specs);
+}
+
+/// Disable fault injection (overriding `MDDCT_FAULT`).
+pub fn clear() {
+    set_faults(Vec::new());
+}
+
+/// Cross a fault seam: fire the first matching spec whose probability
+/// roll succeeds. `seam` is the pipeline location (`execute`,
+/// `execute_batch`, `pack`); `op` is the transform-op name — a spec
+/// site matching either fires here. `Panic` panics (caught by the
+/// worker's `catch_unwind`), `Delay` sleeps then passes, `Error`
+/// returns an [`TransformError::ExecutionFailed`]. Costs one atomic
+/// load when disabled; compiles to `Ok(())` under `fault-off`.
+#[cfg(not(feature = "fault-off"))]
+pub fn fire(seam: &str, op: &str) -> Result<(), TransformError> {
+    if !enabled() {
+        return Ok(());
+    }
+    fire_slow(seam, op)
+}
+
+/// Compiled-out variant: never fires.
+#[cfg(feature = "fault-off")]
+#[inline(always)]
+pub fn fire(_seam: &str, _op: &str) -> Result<(), TransformError> {
+    Ok(())
+}
+
+#[cfg(not(feature = "fault-off"))]
+#[cold]
+fn fire_slow(seam: &str, op: &str) -> Result<(), TransformError> {
+    let hit = state::with_specs(|specs| {
+        specs
+            .iter()
+            .find(|s| (s.site == seam || s.site == op) && state::roll(s.prob))
+            .map(|s| s.kind)
+    });
+    match hit {
+        None => Ok(()),
+        Some(FaultKind::Delay(d)) => {
+            crate::obs::instant_event("fault.delay");
+            std::thread::sleep(d);
+            Ok(())
+        }
+        Some(FaultKind::Error) => {
+            crate::obs::instant_event("fault.error");
+            Err(TransformError::ExecutionFailed(format!(
+                "injected fault: error at {seam} ({op})"
+            )))
+        }
+        Some(FaultKind::Panic) => {
+            crate::obs::instant_event("fault.panic");
+            panic!("injected fault: panic at {seam} ({op})");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parsing_roundtrips_the_issue_grammar() {
+        let specs = parse_spec("panic:dct2d:0.5,delay:execute:20ms,error:pack").unwrap();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(
+            specs[0],
+            FaultSpec { kind: FaultKind::Panic, site: "dct2d".into(), prob: 0.5 }
+        );
+        assert_eq!(
+            specs[1],
+            FaultSpec {
+                kind: FaultKind::Delay(Duration::from_millis(20)),
+                site: "execute".into(),
+                prob: 1.0
+            }
+        );
+        assert_eq!(
+            specs[2],
+            FaultSpec { kind: FaultKind::Error, site: "pack".into(), prob: 1.0 }
+        );
+        // delays accept us / s / bare-ms, and take an optional prob
+        let d = parse_spec("delay:execute:500us:0.25").unwrap();
+        assert_eq!(
+            d[0],
+            FaultSpec {
+                kind: FaultKind::Delay(Duration::from_micros(500)),
+                site: "execute".into(),
+                prob: 0.25
+            }
+        );
+        assert_eq!(
+            parse_spec("delay:x:2").unwrap()[0].kind,
+            FaultKind::Delay(Duration::from_millis(2))
+        );
+        assert!(parse_spec("").unwrap().is_empty());
+        assert!(parse_spec(" , ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn spec_parsing_rejects_malformed_entries() {
+        assert!(parse_spec("panic").is_err()); // no site
+        assert!(parse_spec("explode:dct2d").is_err()); // unknown kind
+        assert!(parse_spec("delay:execute").is_err()); // delay w/o duration
+        assert!(parse_spec("panic:dct2d:1.5").is_err()); // prob out of range
+        assert!(parse_spec("delay:execute:fast").is_err()); // bad duration
+    }
+
+    #[cfg(not(feature = "fault-off"))]
+    #[test]
+    fn programmatic_faults_fire_and_clear() {
+        let _g = crate::obs::test_guard();
+        set_faults(parse_spec("error:myseam").unwrap());
+        assert!(enabled());
+        assert!(fire("myseam", "dct2d").is_err());
+        assert!(fire("otherseam", "dct2d").is_ok()); // site mismatch
+        // op-name sites match at any seam
+        set_faults(parse_spec("error:dct2d").unwrap());
+        assert!(fire("execute", "dct2d").is_err());
+        assert!(fire("execute", "idct2d").is_ok());
+        // prob 0 never fires; clearing disables everything
+        set_faults(parse_spec("error:execute:0.0").unwrap());
+        assert!(fire("execute", "dct2d").is_ok());
+        clear();
+        assert!(!enabled());
+        assert!(fire("execute", "dct2d").is_ok());
+    }
+
+    #[cfg(feature = "fault-off")]
+    #[test]
+    fn fault_off_feature_compiles_everything_out() {
+        set_faults(parse_spec("panic:execute").unwrap());
+        assert!(!enabled());
+        assert!(fire("execute", "dct2d").is_ok());
+    }
+}

@@ -32,6 +32,15 @@ struct OpMetrics {
     packed_max: usize,
     /// log2 histogram of packed batch sizes
     packed_hist: [u64; PACKED_BUCKETS],
+    /// requests shed at admission (inflight budget exhausted)
+    shed: u64,
+    /// requests dropped because their deadline passed while queued
+    expired: u64,
+    /// replies that found the client's receiver already dropped
+    dropped_replies: u64,
+    /// requests that failed on the primary plan and succeeded on the
+    /// one-shot degraded serial retry
+    retried_degraded: u64,
 }
 
 /// Shard fan-out aggregated per transform rank (1D/2D/3D), across ops.
@@ -104,6 +113,33 @@ impl Metrics {
         t.ops.entry(op.to_string()).or_default().errors += 1;
     }
 
+    /// Record one request shed at admission (`Overloaded`).
+    pub fn record_shed(&self, op: &str) {
+        let mut t = self.inner.lock().unwrap();
+        t.ops.entry(op.to_string()).or_default().shed += 1;
+    }
+
+    /// Record one request dropped at dequeue/flush with its deadline
+    /// already passed (`DeadlineExceeded`).
+    pub fn record_expired(&self, op: &str) {
+        let mut t = self.inner.lock().unwrap();
+        t.ops.entry(op.to_string()).or_default().expired += 1;
+    }
+
+    /// Record one reply whose receiver was already dropped (either the
+    /// client hung up before dequeue, or the send itself failed).
+    pub fn record_dropped_reply(&self, op: &str) {
+        let mut t = self.inner.lock().unwrap();
+        t.ops.entry(op.to_string()).or_default().dropped_replies += 1;
+    }
+
+    /// Record one request that failed on its primary plan and succeeded
+    /// on the one-shot degraded serial retry.
+    pub fn record_retried_degraded(&self, op: &str) {
+        let mut t = self.inner.lock().unwrap();
+        t.ops.entry(op.to_string()).or_default().retried_degraded += 1;
+    }
+
     /// Total successful requests across all ops.
     pub fn total_requests(&self) -> u64 {
         self.inner.lock().unwrap().ops.values().map(|e| e.requests).sum()
@@ -127,6 +163,10 @@ impl Metrics {
             let mut o = BTreeMap::new();
             o.insert("requests".into(), Json::Num(e.requests as f64));
             o.insert("errors".into(), Json::Num(e.errors as f64));
+            o.insert("shed_requests".into(), Json::Num(e.shed as f64));
+            o.insert("expired_requests".into(), Json::Num(e.expired as f64));
+            o.insert("dropped_replies".into(), Json::Num(e.dropped_replies as f64));
+            o.insert("retried_degraded".into(), Json::Num(e.retried_degraded as f64));
             o.insert("mean_latency_s".into(), Json::Num(e.latency.mean()));
             o.insert("p50_latency_s".into(), Json::Num(e.latency.quantile(0.5)));
             o.insert("p95_latency_s".into(), Json::Num(e.latency.quantile(0.95)));
@@ -232,6 +272,29 @@ mod tests {
         let i = snap.get("idct2d").unwrap();
         assert_eq!(i.get("packed_batches").unwrap().as_f64().unwrap(), 0.0);
         assert!(i.get("packed_batch_hist").is_none());
+    }
+
+    #[test]
+    fn lifecycle_counters_ride_every_row() {
+        let m = Metrics::new();
+        m.record_shed("dct2d");
+        m.record_shed("dct2d");
+        m.record_expired("dct2d");
+        m.record_dropped_reply("dct2d");
+        m.record_retried_degraded("dct2d");
+        // a plain-traffic op still reports the counters (as zeros)
+        m.record("idct2d", 2, 0.001, 1, 1);
+        let snap = m.snapshot();
+        let d = snap.get("dct2d").unwrap();
+        assert_eq!(d.get("shed_requests").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(d.get("expired_requests").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(d.get("dropped_replies").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(d.get("retried_degraded").unwrap().as_f64().unwrap(), 1.0);
+        let i = snap.get("idct2d").unwrap();
+        assert_eq!(i.get("shed_requests").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(i.get("expired_requests").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(i.get("dropped_replies").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(i.get("retried_degraded").unwrap().as_f64().unwrap(), 0.0);
     }
 
     #[test]

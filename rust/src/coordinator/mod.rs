@@ -6,10 +6,13 @@
 //!   exec + shard policies)
 //! * [`router`]     — native vs PJRT-artifact backend routing
 //! * [`batcher`]    — dynamic batching by (op, shape), with a solo fast
-//!   path for large (shardable) requests
+//!   path for large (shardable) requests, lifecycle gating
+//!   (deadlines/cancellation), and the inflight admission budget
 //! * [`shard`]      — band-sharded execution of large transforms
 //! * [`service`]    — thread-pool service facade (submit/wait)
 //! * [`metrics`]    — counters + latency/batch/band histograms
+//! * [`fault`]      — deterministic fault injection at the execution
+//!   seams (`MDDCT_FAULT`; compiled out under `fault-off`)
 //!
 //! ```
 //! use mddct::coordinator::{Service, ServiceConfig, TransformOp};
@@ -23,6 +26,7 @@
 #![warn(missing_docs)]
 
 pub mod batcher;
+pub mod fault;
 pub mod metrics;
 pub mod plan_cache;
 pub mod request;
@@ -30,12 +34,16 @@ pub mod router;
 pub mod service;
 pub mod shard;
 
-pub use batcher::{max_batch_elems, BatchPolicy, DEFAULT_MAX_BATCH_ELEMS};
+pub use crate::util::error::TransformError;
+pub use batcher::{max_batch_elems, BatchPolicy, InflightBudget, DEFAULT_MAX_BATCH_ELEMS};
+pub use fault::{parse_spec, set_faults, FaultKind, FaultSpec};
 pub use metrics::Metrics;
 pub use plan_cache::{NativePlan, PlanCache};
 pub use request::{PlanKey, Request, Response, TransformOp};
 pub use router::{BackendPolicy, Route, Router};
-pub use service::{default_workers, Handle, Service, ServiceConfig};
+pub use service::{
+    default_workers, Handle, Service, ServiceConfig, DEFAULT_MAX_INFLIGHT_ELEMS,
+};
 pub use shard::{
     shard_min_numel, shard_min_numel_3d, ShardPlan, ShardPolicy, SHARD_MIN_NUMEL,
     SHARD_MIN_NUMEL_3D,

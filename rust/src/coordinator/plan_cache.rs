@@ -5,7 +5,7 @@
 //! amortizes twiddle precomputation across repeated calls; we amortize
 //! whole plan objects (twiddles + FFT plans + permutations).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::dct::{
@@ -127,7 +127,12 @@ impl NativePlan {
     pub fn supports_batch(&self) -> bool {
         matches!(
             self,
-            NativePlan::Dct2(_) | NativePlan::Idct2(_) | NativePlan::Dct1(_) | NativePlan::Idct1(_)
+            NativePlan::Dct2(_)
+                | NativePlan::Idct2(_)
+                | NativePlan::Dst2(_)
+                | NativePlan::Idst2(_)
+                | NativePlan::Dct1(_)
+                | NativePlan::Idct1(_)
         )
     }
 
@@ -144,6 +149,8 @@ impl NativePlan {
         match self {
             NativePlan::Dct2(p) => p.forward_batch(data, &mut out, batch),
             NativePlan::Idct2(p) => p.forward_batch(data, &mut out, batch),
+            NativePlan::Dst2(p) => p.forward_batch(data, &mut out, batch),
+            NativePlan::Idst2(p) => p.forward_batch(data, &mut out, batch),
             NativePlan::Dct1(p) => p.forward_batch(data, &mut out, batch),
             NativePlan::Idct1(p) => p.forward_batch(data, &mut out, batch),
             _ => {
@@ -166,11 +173,24 @@ pub struct CacheStats {
     pub hits: u64,
     /// Requests that had to build (and insert) a new plan.
     pub misses: u64,
+    /// Keys quarantined after their primary plan panicked or errored;
+    /// later lookups skip straight to the degraded serial plan.
+    pub quarantined: u64,
 }
 
 /// Thread-safe (op, shape) -> plan cache.
+///
+/// Besides the primary plans (built with the cache's exec/shard
+/// policies), the cache holds a *degraded* table: serial, unsharded
+/// plans (`ExecPolicy::Serial` + `ShardPolicy::MaxShards(1)`) used for
+/// the one-shot retry after a primary execution fails, and served
+/// directly for keys that have been [`PlanCache::quarantine`]d. The
+/// three-stage factorization makes the two plans compute the identical
+/// transform, so degrading is invisible to the client beyond latency.
 pub struct PlanCache {
     plans: RwLock<HashMap<PlanKey, Arc<NativePlan>>>,
+    degraded: RwLock<HashMap<PlanKey, Arc<NativePlan>>>,
+    quarantined: RwLock<HashSet<PlanKey>>,
     stats: Mutex<CacheStats>,
     policy: ExecPolicy,
     shard: ShardPolicy,
@@ -199,6 +219,8 @@ impl PlanCache {
     pub fn with_policies(policy: ExecPolicy, shard: ShardPolicy) -> PlanCache {
         PlanCache {
             plans: RwLock::new(HashMap::new()),
+            degraded: RwLock::new(HashMap::new()),
+            quarantined: RwLock::new(HashSet::new()),
             stats: Mutex::new(CacheStats::default()),
             policy,
             shard,
@@ -222,6 +244,11 @@ impl PlanCache {
     /// cache invariant is intact and later requests must keep working —
     /// the service turns the panic itself into a request error.
     pub fn get(&self, key: &PlanKey) -> Arc<NativePlan> {
+        if self.is_quarantined(key) {
+            // the primary plan for this key is poisoned: skip straight
+            // to the degraded serial plan instead of re-tripping it
+            return self.degraded(key);
+        }
         if let Some(p) = self.read_plans().get(key) {
             self.bump(|s| s.hits += 1);
             crate::obs::instant_event("plan_cache.hit");
@@ -264,6 +291,42 @@ impl PlanCache {
     pub fn stats(&self) -> CacheStats {
         *self.stats.lock().unwrap_or_else(|e| e.into_inner())
     }
+
+    /// Fetch (or build) the degraded plan for a key: serial, unsharded,
+    /// unbatched — the bottom of the degradation lattice, used for the
+    /// one-shot retry after a primary execution fails and for all
+    /// traffic on quarantined keys.
+    pub fn degraded(&self, key: &PlanKey) -> Arc<NativePlan> {
+        if let Some(p) = self.degraded.read().unwrap_or_else(|e| e.into_inner()).get(key) {
+            return p.clone();
+        }
+        let mut w = self.degraded.write().unwrap_or_else(|e| e.into_inner());
+        if let Some(p) = w.get(key) {
+            return p.clone();
+        }
+        let plan =
+            Arc::new(NativePlan::build_with(key, ExecPolicy::Serial, ShardPolicy::MaxShards(1)));
+        w.insert(key.clone(), plan.clone());
+        plan
+    }
+
+    /// Quarantine a key whose primary plan panicked or errored: every
+    /// later [`PlanCache::get`] for it returns the degraded serial plan
+    /// without touching the poisoned primary. Idempotent; only the
+    /// first call bumps the counter.
+    pub fn quarantine(&self, key: &PlanKey) {
+        let fresh =
+            self.quarantined.write().unwrap_or_else(|e| e.into_inner()).insert(key.clone());
+        if fresh {
+            self.bump(|s| s.quarantined += 1);
+            crate::obs::instant_event("plan_cache.quarantine");
+        }
+    }
+
+    /// Whether a key is currently quarantined.
+    pub fn is_quarantined(&self, key: &PlanKey) -> bool {
+        self.quarantined.read().unwrap_or_else(|e| e.into_inner()).contains(key)
+    }
 }
 
 #[cfg(test)]
@@ -298,6 +361,8 @@ mod tests {
         for (op, shape) in [
             (TransformOp::Dct2d, vec![8usize, 12]),
             (TransformOp::Idct2d, vec![9, 7]),
+            (TransformOp::Dst2d, vec![8, 12]),
+            (TransformOp::Idst2d, vec![9, 7]),
             (TransformOp::Dct1d(Algo1d::NPoint), vec![16]),
             (TransformOp::Idct1d, vec![15]),
             (TransformOp::RcDct2d, vec![6, 8]),
@@ -323,10 +388,33 @@ mod tests {
         let a = cache.get(&k);
         let b = cache.get(&k);
         assert!(Arc::ptr_eq(&a, &b));
-        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1, ..Default::default() });
         assert_eq!(cache.len(), 1);
         cache.get(&key(TransformOp::Idct2d, &[16, 16]));
         assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn quarantine_reroutes_to_the_degraded_plan() {
+        let mut rng = Rng::new(83);
+        let cache = PlanCache::with_policies(ExecPolicy::Threads(4), ShardPolicy::MaxShards(4));
+        let k = key(TransformOp::Dct2d, &[8, 12]);
+        let primary = cache.get(&k);
+        let x = rng.normal_vec(8 * 12);
+        assert!(!cache.is_quarantined(&k));
+        cache.quarantine(&k);
+        cache.quarantine(&k); // idempotent
+        assert!(cache.is_quarantined(&k));
+        assert_eq!(cache.stats().quarantined, 1);
+        // get() now serves the degraded plan, not the primary...
+        let served = cache.get(&k);
+        assert!(!Arc::ptr_eq(&served, &primary));
+        assert!(Arc::ptr_eq(&served, &cache.degraded(&k)));
+        // ...and the lattice bottom computes the identical transform
+        check_close(&served.execute(&x), &dct2d_direct(&x, 8, 12), 1e-9).unwrap();
+        // other keys are untouched
+        let other = key(TransformOp::Dct2d, &[16, 16]);
+        assert!(!cache.is_quarantined(&other));
     }
 
     #[test]

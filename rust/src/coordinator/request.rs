@@ -1,6 +1,9 @@
 //! Request/response types for the transform service.
 
+use std::time::Instant;
+
 use crate::dct::Algo1d;
+use crate::util::error::TransformError;
 
 /// A transform the service can execute.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -64,14 +67,17 @@ impl TransformOp {
 
     /// Whether this op's native plan has a true batched execution path
     /// (stage-fused across a packed same-shape batch via
-    /// `forward_batch`): the fused 2D DCT/IDCT pair and the 1D
-    /// DCT/IDCT family. Other ops still co-batch for plan-lookup
-    /// amortization but execute item by item.
+    /// `forward_batch`): the fused 2D DCT/IDCT and DST/IDST pairs (the
+    /// DST plans batch their sign/reverse folds around the inner DCT
+    /// batch path) and the 1D DCT/IDCT family. Other ops still co-batch
+    /// for plan-lookup amortization but execute item by item.
     pub fn supports_batch(self) -> bool {
         matches!(
             self,
             TransformOp::Dct2d
                 | TransformOp::Idct2d
+                | TransformOp::Dst2d
+                | TransformOp::Idst2d
                 | TransformOp::Dct1d(_)
                 | TransformOp::Idct1d
         )
@@ -145,6 +151,11 @@ pub struct Request {
     pub shape: Vec<usize>,
     /// Row-major input payload (`shape.iter().product()` elements).
     pub data: Vec<f64>,
+    /// Absolute completion deadline. A request whose deadline passes
+    /// while it is still queued is dropped (answered
+    /// [`TransformError::DeadlineExceeded`]) instead of consuming pool
+    /// work; `None` = no deadline.
+    pub deadline: Option<Instant>,
 }
 
 impl Request {
@@ -153,26 +164,34 @@ impl Request {
         PlanKey { op: self.op, shape: self.shape.clone() }
     }
 
+    /// Whether this request's deadline has already passed.
+    pub fn expired(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() > d)
+    }
+
     /// Validate shape/rank/payload consistency.
-    pub fn validate(&self) -> Result<(), String> {
+    pub fn validate(&self) -> Result<(), TransformError> {
         if self.shape.len() != self.op.rank() {
-            return Err(format!(
+            return Err(TransformError::InvalidRequest(format!(
                 "{} expects rank {}, got shape {:?}",
                 self.op.name(),
                 self.op.rank(),
                 self.shape
-            ));
+            )));
         }
         if self.shape.iter().any(|&d| d == 0) {
-            return Err(format!("zero dimension in shape {:?}", self.shape));
+            return Err(TransformError::InvalidRequest(format!(
+                "zero dimension in shape {:?}",
+                self.shape
+            )));
         }
         let numel: usize = self.shape.iter().product();
         if self.data.len() != numel {
-            return Err(format!(
+            return Err(TransformError::InvalidRequest(format!(
                 "payload {} elements, shape {:?} needs {numel}",
                 self.data.len(),
                 self.shape
-            ));
+            )));
         }
         Ok(())
     }
@@ -221,6 +240,8 @@ mod tests {
     fn batch_support_covers_the_stage_fused_plans() {
         assert!(TransformOp::Dct2d.supports_batch());
         assert!(TransformOp::Idct2d.supports_batch());
+        assert!(TransformOp::Dst2d.supports_batch());
+        assert!(TransformOp::Idst2d.supports_batch());
         assert!(TransformOp::Dct1d(Algo1d::NPoint).supports_batch());
         assert!(TransformOp::Idct1d.supports_batch());
         assert!(!TransformOp::RcDct2d.supports_batch());
@@ -241,26 +262,37 @@ mod tests {
         assert!(TransformOp::Dct3d.artifact_name(&[4, 4, 4]).is_none());
     }
 
+    fn req(id: u64, op: TransformOp, shape: Vec<usize>, data: Vec<f64>) -> Request {
+        Request { id, op, shape, data, deadline: None }
+    }
+
     #[test]
     fn validation() {
-        let ok = Request { id: 1, op: TransformOp::Dct2d, shape: vec![4, 4], data: vec![0.0; 16] };
+        let ok = req(1, TransformOp::Dct2d, vec![4, 4], vec![0.0; 16]);
         assert!(ok.validate().is_ok());
-        let bad_rank =
-            Request { id: 2, op: TransformOp::Dct2d, shape: vec![4], data: vec![0.0; 4] };
-        assert!(bad_rank.validate().is_err());
-        let bad_len =
-            Request { id: 3, op: TransformOp::Dct2d, shape: vec![4, 4], data: vec![0.0; 15] };
+        let bad_rank = req(2, TransformOp::Dct2d, vec![4], vec![0.0; 4]);
+        assert!(matches!(bad_rank.validate(), Err(TransformError::InvalidRequest(_))));
+        let bad_len = req(3, TransformOp::Dct2d, vec![4, 4], vec![0.0; 15]);
         assert!(bad_len.validate().is_err());
-        let zero_dim =
-            Request { id: 4, op: TransformOp::Dct2d, shape: vec![0, 4], data: vec![] };
+        let zero_dim = req(4, TransformOp::Dct2d, vec![0, 4], vec![]);
         assert!(zero_dim.validate().is_err());
     }
 
     #[test]
+    fn deadlines_expire() {
+        let mut r = req(1, TransformOp::Dct2d, vec![4, 4], vec![0.0; 16]);
+        assert!(!r.expired(), "no deadline never expires");
+        r.deadline = Some(Instant::now() + std::time::Duration::from_secs(3600));
+        assert!(!r.expired());
+        r.deadline = Some(Instant::now() - std::time::Duration::from_millis(1));
+        assert!(r.expired());
+    }
+
+    #[test]
     fn plan_keys_group_by_op_and_shape() {
-        let a = Request { id: 1, op: TransformOp::Dct2d, shape: vec![8, 8], data: vec![0.0; 64] };
-        let b = Request { id: 2, op: TransformOp::Dct2d, shape: vec![8, 8], data: vec![1.0; 64] };
-        let c = Request { id: 3, op: TransformOp::Idct2d, shape: vec![8, 8], data: vec![1.0; 64] };
+        let a = req(1, TransformOp::Dct2d, vec![8, 8], vec![0.0; 64]);
+        let b = req(2, TransformOp::Dct2d, vec![8, 8], vec![1.0; 64]);
+        let c = req(3, TransformOp::Idct2d, vec![8, 8], vec![1.0; 64]);
         assert_eq!(a.key(), b.key());
         assert_ne!(a.key(), c.key());
     }

@@ -13,6 +13,7 @@ use super::request::PlanKey;
 use super::shard::ShardPlan;
 use crate::parallel::{ExecPolicy, ShardPolicy};
 use crate::runtime::{Manifest, PjrtHandle};
+use crate::util::error::TransformError;
 
 /// Routing policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -140,13 +141,17 @@ impl Router {
         key: &PlanKey,
         packed: &[f64],
         batch: usize,
-    ) -> Result<(Vec<f64>, Route), String> {
+    ) -> Result<(Vec<f64>, Route), TransformError> {
         let plan = self.plans.get(key);
         Ok((plan.execute_batch(packed, batch), Route::Native))
     }
 
     /// Execute one payload for a key on the routed backend.
-    pub fn execute(&self, key: &PlanKey, data: &[f64]) -> Result<(Vec<f64>, Route), String> {
+    pub fn execute(
+        &self,
+        key: &PlanKey,
+        data: &[f64],
+    ) -> Result<(Vec<f64>, Route), TransformError> {
         match self.route(key) {
             Route::Native => {
                 let plan = self.plans.get(key);
@@ -157,10 +162,29 @@ impl Router {
                 let name = key.op.artifact_name(&key.shape).expect("route checked");
                 let outs = handle
                     .run(&name, vec![data.to_vec()])
-                    .map_err(|e| format!("{e:#}"))?;
+                    .map_err(|e| TransformError::ExecutionFailed(format!("{e:#}")))?;
                 Ok((outs.into_iter().next().unwrap_or_default(), Route::Pjrt))
             }
         }
+    }
+
+    /// Execute one payload on the degraded serial plan — the one-shot
+    /// retry target after a primary native execution fails, and the
+    /// serving path for quarantined keys. Never routes to PJRT; panics
+    /// propagate to the caller's `catch_unwind`.
+    pub fn execute_degraded(&self, key: &PlanKey, data: &[f64]) -> Vec<f64> {
+        self.plans.degraded(key).execute(data)
+    }
+
+    /// Quarantine a key's primary native plan (see
+    /// [`PlanCache::quarantine`]).
+    pub fn quarantine(&self, key: &PlanKey) {
+        self.plans.quarantine(key);
+    }
+
+    /// Whether a key's primary native plan is quarantined.
+    pub fn is_quarantined(&self, key: &PlanKey) -> bool {
+        self.plans.is_quarantined(key)
     }
 }
 
@@ -208,6 +232,25 @@ mod tests {
         let x = rng.normal_vec(16 * 16);
         let (y, _) = r.execute(&small, &x).unwrap();
         check_close(&y, &dct2d_direct(&x, 16, 16), 1e-9).unwrap();
+    }
+
+    #[test]
+    fn degraded_execution_matches_primary() {
+        use crate::parallel::{ExecPolicy, ShardPolicy};
+        let mut r = Router::native_only_with(ExecPolicy::Threads(4));
+        r.set_shard_policy(ShardPolicy::MaxShards(4));
+        let key = PlanKey { op: TransformOp::Dct2d, shape: vec![32, 32] };
+        let mut rng = Rng::new(92);
+        let x = rng.normal_vec(32 * 32);
+        let degraded = r.execute_degraded(&key, &x);
+        check_close(&degraded, &dct2d_direct(&x, 32, 32), 1e-9).unwrap();
+        // quarantining makes the plain execute() path serve the same
+        // degraded plan (bit-identical output)
+        r.quarantine(&key);
+        assert!(r.is_quarantined(&key));
+        let (y, route) = r.execute(&key, &x).unwrap();
+        assert_eq!(route, Route::Native);
+        assert_eq!(y, degraded);
     }
 
     #[test]

@@ -14,19 +14,39 @@
 //! Workers execute batches through the [`Router`] (native plans or PJRT
 //! artifacts) and record metrics. Shape-specialized plans are cached, so
 //! steady-state request cost is transform + channel hops only.
+//!
+//! Failure model (see ARCHITECTURE.md "Failure model"):
+//!
+//! * **Admission control** — `submit` acquires from an elems-weighted
+//!   [`InflightBudget`] and sheds with [`TransformError::Overloaded`]
+//!   when the pool is saturated, so queues never grow without bound.
+//! * **Deadlines** — requests carry an optional absolute deadline
+//!   ([`ServiceConfig::default_deadline`], `MDDCT_DEADLINE_MS`); the
+//!   batcher and workers drop expired requests at every dequeue instead
+//!   of spending pool work on answers nobody can use.
+//! * **Degrade-and-retry** — a panicking or erroring primary execution
+//!   is retried once per request on the degraded serial plan (the
+//!   bottom of the degradation lattice the three-stage factorization
+//!   provides: fused-sharded-batched → fused-serial compute the same
+//!   transform), and the poisoned plan key is quarantined so later
+//!   requests skip straight to the degraded path.
+//! * **Fault injection** — the [`super::fault`] chaos layer makes all of
+//!   the above deterministically testable via `MDDCT_FAULT`.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use super::batcher::{run_batcher, Batch, BatchPolicy, Pending};
+use super::batcher::{admit, run_batcher, Batch, BatchPolicy, InflightBudget, Pending};
+use super::fault;
 use super::metrics::Metrics;
-use super::request::{Request, Response, TransformOp};
+use super::request::{PlanKey, Request, Response, TransformOp};
 use super::router::{Route, Router};
 use crate::parallel::{ExecPolicy, ShardPolicy};
+use crate::util::error::TransformError;
 
 /// Service configuration.
 #[derive(Debug, Clone)]
@@ -50,6 +70,17 @@ pub struct ServiceConfig {
     /// starts. `false` leaves the process-wide trace flag as-is (so the
     /// `MDDCT_TRACE` env knob still applies); `true` force-enables it.
     pub trace: bool,
+    /// Deadline stamped on every request submitted without an explicit
+    /// one (`submit` = now + this). Defaults to the `MDDCT_DEADLINE_MS`
+    /// env knob, else `None` (no deadline).
+    pub default_deadline: Option<Duration>,
+    /// Admission-control cap on total in-flight payload elements
+    /// (queued + executing), weighted like
+    /// [`BatchPolicy::max_batch_elems`]. When an arrival would push past
+    /// it, `submit` sheds with [`TransformError::Overloaded`]. Defaults
+    /// to the `MDDCT_MAX_INFLIGHT` env knob, else
+    /// [`DEFAULT_MAX_INFLIGHT_ELEMS`]; `usize::MAX` = unbounded.
+    pub max_inflight_elems: usize,
 }
 
 impl Default for ServiceConfig {
@@ -60,6 +91,8 @@ impl Default for ServiceConfig {
             exec: ExecPolicy::Auto,
             shard: ShardPolicy::from_env(),
             trace: false,
+            default_deadline: default_deadline_from_env(),
+            max_inflight_elems: default_max_inflight_elems(),
         }
     }
 }
@@ -71,15 +104,47 @@ pub fn default_workers() -> usize {
         .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4))
 }
 
-/// Handle to an in-flight request.
+/// Default admission cap: 64 Mi in-flight payload elements (512 MiB of
+/// f64 — a full co-batching window for every worker with headroom, far
+/// below the point where queue memory endangers the process).
+pub const DEFAULT_MAX_INFLIGHT_ELEMS: usize = 64 << 20;
+
+/// Default request deadline: `MDDCT_DEADLINE_MS` env knob, else none.
+pub fn default_deadline_from_env() -> Option<Duration> {
+    crate::util::env_usize("MDDCT_DEADLINE_MS").map(|ms| Duration::from_millis(ms as u64))
+}
+
+/// Default admission cap: `MDDCT_MAX_INFLIGHT` env knob (elements), else
+/// [`DEFAULT_MAX_INFLIGHT_ELEMS`].
+pub fn default_max_inflight_elems() -> usize {
+    crate::util::env_usize("MDDCT_MAX_INFLIGHT").unwrap_or(DEFAULT_MAX_INFLIGHT_ELEMS)
+}
+
+/// Backoff hint carried by [`TransformError::Overloaded`]: long enough
+/// for a batching window + execution to drain budget, short enough that
+/// a client retry loop stays responsive.
+const RETRY_AFTER_HINT: Duration = Duration::from_millis(5);
+
+/// Handle to an in-flight request. Dropping it without waiting marks
+/// the request cancelled: the batcher/workers skip computing for it at
+/// their next dequeue (counted as `dropped_replies`).
 pub struct Handle {
-    rx: Receiver<Result<Response, String>>,
+    rx: Receiver<Result<Response, TransformError>>,
+    cancelled: Arc<AtomicBool>,
 }
 
 impl Handle {
     /// Block until the transform completes.
-    pub fn wait(self) -> Result<Response, String> {
-        self.rx.recv().map_err(|_| "service shut down".to_string())?
+    pub fn wait(self) -> Result<Response, TransformError> {
+        // After recv returns, the request is already concluded, so the
+        // cancellation flag Drop sets below is never read.
+        self.rx.recv().map_err(|_| TransformError::ShuttingDown)?
+    }
+}
+
+impl Drop for Handle {
+    fn drop(&mut self) {
+        self.cancelled.store(true, Ordering::Relaxed);
     }
 }
 
@@ -89,10 +154,14 @@ pub struct Service {
     batcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
+    default_deadline: Option<Duration>,
     /// Live per-op counters/latency/batch/band metrics.
     pub metrics: Arc<Metrics>,
     /// The routing + plan-cache backend this service executes on.
     pub router: Arc<Router>,
+    /// Elems-weighted admission budget (acquired by `submit`, released
+    /// at every reply or drop).
+    pub inflight: Arc<InflightBudget>,
 }
 
 impl Service {
@@ -104,15 +173,22 @@ impl Service {
         if config.trace {
             crate::obs::set_enabled(true);
         }
+        // resolve MDDCT_FAULT eagerly so a malformed spec is reported at
+        // startup, not at the first execution seam
+        let _ = fault::enabled();
         router.set_exec_policy(config.exec);
         router.set_shard_policy(config.shard);
         let router = Arc::new(router);
         let metrics = Arc::new(Metrics::new());
+        let inflight = Arc::new(InflightBudget::new(config.max_inflight_elems));
         let (req_tx, req_rx) = channel::<Pending>();
         let (batch_tx, batch_rx) = channel::<Batch>();
         let policy = config.batch;
-        let batcher =
-            std::thread::spawn(move || run_batcher(req_rx, batch_tx, policy));
+        let batcher = {
+            let metrics = metrics.clone();
+            let budget = inflight.clone();
+            std::thread::spawn(move || run_batcher(req_rx, batch_tx, policy, metrics, budget))
+        };
 
         // Work distribution: workers pull batches from the shared queue.
         let shared_rx = Arc::new(Mutex::new(batch_rx));
@@ -121,10 +197,11 @@ impl Service {
             let rx = shared_rx.clone();
             let router = router.clone();
             let metrics = metrics.clone();
+            let budget = inflight.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("mddct-worker-{w}"))
-                    .spawn(move || worker_loop(rx, router, metrics))
+                    .spawn(move || worker_loop(rx, router, metrics, budget))
                     .expect("spawn worker"),
             );
         }
@@ -133,8 +210,10 @@ impl Service {
             batcher: Some(batcher),
             workers,
             next_id: AtomicU64::new(1),
+            default_deadline: config.default_deadline,
             metrics,
             router,
+            inflight,
         }
     }
 
@@ -144,23 +223,49 @@ impl Service {
         Self::start(config, Router::native_only())
     }
 
-    /// Submit a transform; returns immediately with a wait handle.
+    /// Submit a transform; returns immediately with a wait handle. The
+    /// request carries the service's default deadline (if configured).
     pub fn submit(
         &self,
         op: TransformOp,
         shape: Vec<usize>,
         data: Vec<f64>,
-    ) -> Result<Handle, String> {
+    ) -> Result<Handle, TransformError> {
+        let deadline = self.default_deadline.map(|d| Instant::now() + d);
+        self.submit_with_deadline(op, shape, data, deadline)
+    }
+
+    /// Submit a transform with an explicit absolute deadline (`None` =
+    /// no deadline, overriding the service default). Validation and
+    /// admission control happen here, synchronously: a malformed request
+    /// fails [`TransformError::InvalidRequest`], and one the inflight
+    /// budget cannot admit is shed [`TransformError::Overloaded`]
+    /// without ever entering the queue.
+    pub fn submit_with_deadline(
+        &self,
+        op: TransformOp,
+        shape: Vec<usize>,
+        data: Vec<f64>,
+        deadline: Option<Instant>,
+    ) -> Result<Handle, TransformError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let request = Request { id, op, shape, data };
+        let request = Request { id, op, shape, data, deadline };
         request.validate()?;
+        if !self.inflight.try_acquire(request.data.len()) {
+            self.metrics.record_shed(&op.name());
+            crate::obs::instant_event("svc.shed");
+            return Err(TransformError::Overloaded { retry_after: RETRY_AFTER_HINT });
+        }
         let (reply, rx) = channel();
-        self.req_tx
-            .as_ref()
-            .expect("service running")
-            .send(Pending { request, reply, enqueued: Instant::now() })
-            .map_err(|_| "service shut down".to_string())?;
-        Ok(Handle { rx })
+        let pending = Pending::new(request, reply);
+        let cancelled = pending.cancelled.clone();
+        match self.req_tx.as_ref().expect("service running").send(pending) {
+            Ok(()) => Ok(Handle { rx, cancelled }),
+            Err(dead) => {
+                self.inflight.release(dead.0.request.data.len());
+                Err(TransformError::ShuttingDown)
+            }
+        }
     }
 
     /// Submit and block for the result.
@@ -169,7 +274,7 @@ impl Service {
         op: TransformOp,
         shape: Vec<usize>,
         data: Vec<f64>,
-    ) -> Result<Response, String> {
+    ) -> Result<Response, TransformError> {
         self.submit(op, shape, data)?.wait()
     }
 
@@ -177,8 +282,8 @@ impl Service {
     pub fn transform_many(
         &self,
         reqs: Vec<(TransformOp, Vec<usize>, Vec<f64>)>,
-    ) -> Result<Vec<Response>, String> {
-        let handles: Result<Vec<Handle>, String> = reqs
+    ) -> Result<Vec<Response>, TransformError> {
+        let handles: Result<Vec<Handle>, TransformError> = reqs
             .into_iter()
             .map(|(op, shape, data)| self.submit(op, shape, data))
             .collect();
@@ -189,7 +294,9 @@ impl Service {
     /// `_sharding_by_rank`, `_scratch`, and — when tracing has recorded
     /// stage spans — the live `_stage_breakdown` table) merged with a
     /// `_plan_cache` section carrying this service's native plan-cache
-    /// hit/miss counters and resident plan count.
+    /// hit/miss/quarantine counters and resident plan count, and an
+    /// `_admission` section with the inflight budget's cap and current
+    /// occupancy.
     pub fn snapshot(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
         use std::collections::BTreeMap;
@@ -201,8 +308,16 @@ impl Service {
         let mut pc = BTreeMap::new();
         pc.insert("hits".to_string(), Json::Num(stats.hits as f64));
         pc.insert("misses".to_string(), Json::Num(stats.misses as f64));
+        pc.insert("quarantined".to_string(), Json::Num(stats.quarantined as f64));
         pc.insert("plans".to_string(), Json::Num(self.router.plans.len() as f64));
         root.insert("_plan_cache".to_string(), Json::Obj(pc));
+        let mut adm = BTreeMap::new();
+        adm.insert(
+            "max_inflight_elems".to_string(),
+            Json::Num(self.inflight.max_elems() as f64),
+        );
+        adm.insert("inflight_elems".to_string(), Json::Num(self.inflight.in_use() as f64));
+        root.insert("_admission".to_string(), Json::Obj(adm));
         Json::Obj(root)
     }
 }
@@ -220,66 +335,147 @@ impl Drop for Service {
     }
 }
 
-/// Render a caught worker panic as a request error string.
-fn panic_message(op: &str, panic: Box<dyn std::any::Any + Send>) -> String {
+/// Render a caught worker panic as a typed request error.
+fn panic_message(op: &str, panic: Box<dyn std::any::Any + Send>) -> TransformError {
     let what = panic
         .downcast_ref::<&'static str>()
         .map(|s| (*s).to_string())
         .or_else(|| panic.downcast_ref::<String>().cloned())
         .unwrap_or_else(|| "non-string panic payload".to_string());
-    format!("worker panicked executing {op}: {what}")
+    TransformError::ExecutionPanicked(format!("worker panicked executing {op}: {what}"))
+}
+
+/// Answer one request on the degraded serial plan — the one-shot retry
+/// after a primary failure (`primary = Some(..)`, counted
+/// `retried_degraded`) or the direct serving path for a quarantined key
+/// (`primary = None`). Never injects faults: the degradation lattice
+/// bottoms out here, deterministically. If even this path fails, the
+/// request is failed with the *primary* error (it names the plan that
+/// actually poisoned the key). Releases the request's inflight budget.
+#[allow(clippy::too_many_arguments)]
+fn serve_degraded(
+    key: &PlanKey,
+    pending: Pending,
+    router: &Router,
+    metrics: &Metrics,
+    op_name: &str,
+    rank: usize,
+    budget: &InflightBudget,
+    primary: Option<TransformError>,
+) {
+    let retry = primary.is_some();
+    if retry {
+        crate::obs::instant_event("svc.retry_degraded");
+    }
+    let elems = pending.request.data.len();
+    let result = {
+        let _s = crate::obs::SpanGuard::begin("svc.execute_degraded");
+        catch_unwind(AssertUnwindSafe(|| router.execute_degraded(key, &pending.request.data)))
+            .map_err(|panic| panic_message(op_name, panic))
+    };
+    // release before replying so a client that resubmits the moment
+    // `wait` returns is never spuriously shed by budget still held here
+    budget.release(elems);
+    match result {
+        Ok(output) => {
+            if retry {
+                metrics.record_retried_degraded(op_name);
+            }
+            let latency = pending.enqueued.elapsed().as_secs_f64();
+            metrics.record(op_name, rank, latency, 1, 1);
+            let sent = pending.reply.send(Ok(Response {
+                id: pending.request.id,
+                output,
+                backend: "native-degraded",
+                latency,
+                batch_size: 1,
+            }));
+            if sent.is_err() {
+                metrics.record_dropped_reply(op_name);
+            }
+        }
+        Err(degraded) => {
+            metrics.record_error(op_name);
+            if pending.reply.send(Err(primary.unwrap_or(degraded))).is_err() {
+                metrics.record_dropped_reply(op_name);
+            }
+        }
+    }
 }
 
 /// Execute a multi-request batch through the packed stage-fused path:
 /// pack the payloads contiguously, run one `execute_batch` (each
 /// transform stage sweeps the whole batch), scatter the outputs back to
-/// the per-request reply channels. A panic or error fails every request
-/// in the batch, like any backend failure would.
+/// the per-request reply channels. A panic or error quarantines the key
+/// and retries every affected request once, individually, on the
+/// degraded serial plan (`pack` and `execute_batch` fault seams).
+#[allow(clippy::too_many_arguments)]
 fn execute_packed(
-    batch: Batch,
+    key: PlanKey,
+    items: Vec<Pending>,
     router: &Router,
     metrics: &Metrics,
     op_name: &str,
     rank: usize,
     bands: usize,
+    budget: &InflightBudget,
 ) {
-    let numel: usize = batch.key.shape.iter().product();
-    let n = batch.items.len();
-    for p in &batch.items {
+    let numel: usize = key.shape.iter().product();
+    let n = items.len();
+    for p in &items {
         crate::obs::span_since("svc.queue_wait", p.enqueued);
-    }
-    let mut packed = Vec::with_capacity(n * numel);
-    {
-        let _s = crate::obs::SpanGuard::begin("svc.pack");
-        for p in &batch.items {
-            packed.extend_from_slice(&p.request.data);
-        }
     }
     let result = {
         let _s = crate::obs::SpanGuard::begin("svc.execute_batch");
-        catch_unwind(AssertUnwindSafe(|| router.execute_batch(&batch.key, &packed, n)))
-            .unwrap_or_else(|panic| Err(panic_message(op_name, panic)))
+        catch_unwind(AssertUnwindSafe(|| {
+            fault::fire("pack", op_name)?;
+            let mut packed = Vec::with_capacity(n * numel);
+            {
+                let _s = crate::obs::SpanGuard::begin("svc.pack");
+                for p in &items {
+                    packed.extend_from_slice(&p.request.data);
+                }
+            }
+            fault::fire("execute_batch", op_name)?;
+            router.execute_batch(&key, &packed, n)
+        }))
+        .unwrap_or_else(|panic| Err(panic_message(op_name, panic)))
     };
     match result {
         Ok((output, route)) => {
             let _s = crate::obs::SpanGuard::begin("svc.scatter");
             metrics.record_packed(op_name, n);
-            for (i, pending) in batch.items.into_iter().enumerate() {
+            for (i, pending) in items.into_iter().enumerate() {
                 let latency = pending.enqueued.elapsed().as_secs_f64();
                 metrics.record(op_name, rank, latency, n, bands);
-                let _ = pending.reply.send(Ok(Response {
+                budget.release(pending.request.data.len());
+                let sent = pending.reply.send(Ok(Response {
                     id: pending.request.id,
                     output: output[i * numel..(i + 1) * numel].to_vec(),
                     backend: route.label(),
                     latency,
                     batch_size: n,
                 }));
+                if sent.is_err() {
+                    metrics.record_dropped_reply(op_name);
+                }
             }
         }
-        Err(e) => {
-            for pending in batch.items {
-                metrics.record_error(op_name);
-                let _ = pending.reply.send(Err(e.clone()));
+        Err(primary) => {
+            // the packed path only runs on the native route, so the
+            // poisoned key is always a native plan key
+            router.quarantine(&key);
+            for pending in items {
+                serve_degraded(
+                    &key,
+                    pending,
+                    router,
+                    metrics,
+                    op_name,
+                    rank,
+                    budget,
+                    Some(primary.clone()),
+                );
             }
         }
     }
@@ -289,6 +485,7 @@ fn worker_loop(
     rx: Arc<Mutex<Receiver<Batch>>>,
     router: Arc<Router>,
     metrics: Arc<Metrics>,
+    budget: Arc<InflightBudget>,
 ) {
     loop {
         // hold the lock only while receiving, not while executing
@@ -296,7 +493,6 @@ fn worker_loop(
             Ok(b) => b,
             Err(_) => return,
         };
-        let n = batch.items.len();
         let op_name = batch.key.op.name();
         let rank = batch.key.op.rank();
         // (op, shape) context for the duration of this batch: stage
@@ -304,15 +500,32 @@ fn worker_loop(
         // pipeline spans) aggregate into the live per-(op,shape)
         // breakdown under this label
         let _ctx = crate::obs::with_ctx(crate::obs::op_ctx(&op_name, &batch.key.shape));
+        // lifecycle re-gate at execution time: a deadline may have
+        // passed (or a client hung up) while the batch sat queued
+        let key = batch.key;
+        let items: Vec<Pending> =
+            batch.items.into_iter().filter_map(|p| admit(p, &metrics, &budget)).collect();
+        if items.is_empty() {
+            continue;
+        }
+        let n = items.len();
         // explicit shard fan-out of this batch (1 = unsharded; plain
         // Auto lane parallelism is not counted as sharding); recorded
         // so operators can see the shard feature actually engage.
         // PJRT batches run on the artifact, not the banded native plan.
-        let route = router.route(&batch.key);
+        let route = router.route(&key);
         let bands = match route {
-            Route::Native => router.shard_bands(&batch.key),
+            Route::Native => router.shard_bands(&key),
             Route::Pjrt => 1,
         };
+        // a quarantined native key skips its poisoned primary plan and
+        // serves every request straight from the degraded serial one
+        if route == Route::Native && router.is_quarantined(&key) {
+            for pending in items {
+                serve_degraded(&key, pending, &router, &metrics, &op_name, rank, &budget, None);
+            }
+            continue;
+        }
         // a multi-request native batch of a stage-fused op executes
         // packed: one buffer, one batched plan call, outputs scattered.
         // Requests an explicit shard policy would band (bands > 1) stay
@@ -320,41 +533,57 @@ fn worker_loop(
         // decomposition, and the metrics' band count must stay truthful
         // (in practice the batcher's solo fast path already flushes
         // shard-gate-sized requests alone, so this gate rarely bites).
-        if n > 1 && route == Route::Native && bands <= 1 && batch.key.op.supports_batch() {
-            execute_packed(batch, &router, &metrics, &op_name, rank, bands);
+        if n > 1 && route == Route::Native && bands <= 1 && key.op.supports_batch() {
+            execute_packed(key, items, &router, &metrics, &op_name, rank, bands, &budget);
             continue;
         }
-        for pending in batch.items {
+        for pending in items {
             let t0 = pending.enqueued;
             crate::obs::span_since("svc.queue_wait", t0);
             // A panicking plan must not kill the worker (which would
-            // strand every queued batch): catch it and surface it as a
-            // request error, like any backend failure.
+            // strand every queued batch): catch it, quarantine the
+            // poisoned key, and retry once on the degraded serial plan
+            // (the `execute` fault seam fires before the primary call).
             let result = {
                 let _s = crate::obs::SpanGuard::begin("svc.execute");
                 catch_unwind(AssertUnwindSafe(|| {
-                    router.execute(&batch.key, &pending.request.data)
+                    fault::fire("execute", &op_name)?;
+                    router.execute(&key, &pending.request.data)
                 }))
                 .unwrap_or_else(|panic| Err(panic_message(&op_name, panic)))
             };
-            let latency = t0.elapsed().as_secs_f64();
-            let response = match result {
+            match result {
                 Ok((output, route)) => {
+                    let latency = t0.elapsed().as_secs_f64();
                     metrics.record(&op_name, rank, latency, n, bands);
-                    Ok(Response {
+                    budget.release(pending.request.data.len());
+                    let sent = pending.reply.send(Ok(Response {
                         id: pending.request.id,
                         output,
                         backend: route.label(),
                         latency,
                         batch_size: n,
-                    })
+                    }));
+                    if sent.is_err() {
+                        metrics.record_dropped_reply(&op_name);
+                    }
                 }
-                Err(e) => {
-                    metrics.record_error(&op_name);
-                    Err(e)
+                Err(primary) => {
+                    if route == Route::Native {
+                        router.quarantine(&key);
+                    }
+                    serve_degraded(
+                        &key,
+                        pending,
+                        &router,
+                        &metrics,
+                        &op_name,
+                        rank,
+                        &budget,
+                        Some(primary),
+                    );
                 }
-            };
-            let _ = pending.reply.send(response);
+            }
         }
     }
 }
@@ -373,6 +602,8 @@ mod tests {
             exec: crate::parallel::ExecPolicy::Auto,
             shard: ShardPolicy::Auto,
             trace: false,
+            default_deadline: None,
+            max_inflight_elems: usize::MAX,
         })
     }
 
@@ -389,13 +620,23 @@ mod tests {
             .unwrap();
         check_close(&back.output, &x, 1e-9).unwrap();
         assert!(s.metrics.total_requests() >= 2);
+        // every answered request returned its admission budget
+        assert_eq!(s.inflight.in_use(), 0);
     }
 
     #[test]
     fn rejects_invalid_requests() {
         let s = svc(1);
-        assert!(s.transform(TransformOp::Dct2d, vec![4], vec![0.0; 4]).is_err());
-        assert!(s.transform(TransformOp::Dct2d, vec![4, 4], vec![0.0; 3]).is_err());
+        assert!(matches!(
+            s.transform(TransformOp::Dct2d, vec![4], vec![0.0; 4]),
+            Err(TransformError::InvalidRequest(_))
+        ));
+        assert!(matches!(
+            s.transform(TransformOp::Dct2d, vec![4, 4], vec![0.0; 3]),
+            Err(TransformError::InvalidRequest(_))
+        ));
+        // invalid requests never hold budget
+        assert_eq!(s.inflight.in_use(), 0);
     }
 
     #[test]
@@ -444,6 +685,61 @@ mod tests {
     }
 
     #[test]
+    fn expired_deadline_is_answered_without_executing() {
+        let s = svc(1);
+        // a deadline already in the past: the batcher concludes it at
+        // dequeue — deterministic, no timing race
+        let h = s
+            .submit_with_deadline(
+                TransformOp::Dct2d,
+                vec![4, 4],
+                vec![1.0; 16],
+                Some(Instant::now() - Duration::from_millis(1)),
+            )
+            .unwrap();
+        assert!(matches!(h.wait(), Err(TransformError::DeadlineExceeded)));
+        let snap = s.snapshot();
+        let expired = snap
+            .get("dct2d")
+            .and_then(|d| d.get("expired_requests"))
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        assert_eq!(expired, 1.0);
+        assert_eq!(s.inflight.in_use(), 0);
+    }
+
+    #[test]
+    fn saturated_budget_sheds_with_overloaded() {
+        // budget smaller than a single request: every submit sheds,
+        // deterministically
+        let s = Service::start_native(ServiceConfig {
+            workers: 1,
+            batch: BatchPolicy::default(),
+            exec: crate::parallel::ExecPolicy::Serial,
+            shard: ShardPolicy::Auto,
+            trace: false,
+            default_deadline: None,
+            max_inflight_elems: 8,
+        });
+        let err = s.transform(TransformOp::Dct2d, vec![4, 4], vec![1.0; 16]).unwrap_err();
+        assert!(matches!(err, TransformError::Overloaded { .. }));
+        assert!(err.is_retryable());
+        let snap = s.snapshot();
+        let shed = snap
+            .get("dct2d")
+            .and_then(|d| d.get("shed_requests"))
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        assert_eq!(shed, 1.0);
+        let adm = snap.get("_admission").unwrap();
+        assert_eq!(adm.get("max_inflight_elems").unwrap().as_f64().unwrap(), 8.0);
+        assert_eq!(adm.get("inflight_elems").unwrap().as_f64().unwrap(), 0.0);
+        // a request that fits still goes through
+        let ok = s.transform(TransformOp::Dct2d, vec![2, 2], vec![1.0; 4]).unwrap();
+        assert_eq!(ok.output.len(), 4);
+    }
+
+    #[test]
     fn worker_panic_becomes_request_error_and_worker_survives() {
         use super::super::batcher::{Batch, Pending};
         use super::super::request::{PlanKey, Request};
@@ -451,36 +747,42 @@ mod tests {
 
         let router = Arc::new(Router::native_only());
         let metrics = Arc::new(Metrics::new());
+        let budget = Arc::new(InflightBudget::unlimited());
         let (batch_tx, batch_rx) = channel::<Batch>();
         let shared_rx = Arc::new(Mutex::new(batch_rx));
         let worker = {
             let rx = shared_rx.clone();
             let router = router.clone();
             let metrics = metrics.clone();
-            std::thread::spawn(move || worker_loop(rx, router, metrics))
+            let budget = budget.clone();
+            std::thread::spawn(move || worker_loop(rx, router, metrics, budget))
         };
 
         // A rank-mismatched key slips past validate only if constructed
-        // by hand; plan building then panics inside the worker.
+        // by hand; plan building then panics inside the worker — on the
+        // primary plan AND on the degraded retry, so the request fails
+        // with the primary panic error.
         let (reply_bad, rx_bad) = channel();
         batch_tx
             .send(Batch {
                 key: PlanKey { op: TransformOp::Dct2d, shape: vec![4] },
-                items: vec![Pending {
-                    request: Request {
+                items: vec![Pending::new(
+                    Request {
                         id: 1,
                         op: TransformOp::Dct2d,
                         shape: vec![4],
                         data: vec![0.0; 4],
+                        deadline: None,
                     },
-                    reply: reply_bad,
-                    enqueued: Instant::now(),
-                }],
+                    reply_bad,
+                )],
             })
             .unwrap();
         let bad = rx_bad.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
         let err = bad.expect_err("panicking plan must surface as an error");
-        assert!(err.contains("panicked"), "got: {err}");
+        assert!(err.to_string().contains("panicked"), "got: {err}");
+        // the poisoned key is quarantined for later requests
+        assert!(router.is_quarantined(&PlanKey { op: TransformOp::Dct2d, shape: vec![4] }));
 
         // the same worker thread must still serve well-formed batches
         let (reply_ok, rx_ok) = channel();
@@ -489,16 +791,16 @@ mod tests {
         batch_tx
             .send(Batch {
                 key: PlanKey { op: TransformOp::Dct2d, shape: vec![4, 4] },
-                items: vec![Pending {
-                    request: Request {
+                items: vec![Pending::new(
+                    Request {
                         id: 2,
                         op: TransformOp::Dct2d,
                         shape: vec![4, 4],
                         data: x.clone(),
+                        deadline: None,
                     },
-                    reply: reply_ok,
-                    enqueued: Instant::now(),
-                }],
+                    reply_ok,
+                )],
             })
             .unwrap();
         let ok = rx_ok.recv_timeout(std::time::Duration::from_secs(5)).unwrap().unwrap();
@@ -518,6 +820,8 @@ mod tests {
             exec: crate::parallel::ExecPolicy::Serial,
             shard: ShardPolicy::MaxShards(3),
             trace: false,
+            default_deadline: None,
+            max_inflight_elems: usize::MAX,
         });
         let mut rng = Rng::new(205);
         let (n1, n2) = (256usize, 260usize); // >= SHARD_MIN_NUMEL, non-divisible by 3

@@ -156,6 +156,41 @@ impl Dst2 {
         crate::util::scratch::give_f64(folded);
         crate::util::scratch::give_f64(y);
     }
+
+    /// Batched forward: `batch` row-major `n1 x n2` inputs packed
+    /// contiguously in `xs`, outputs packed the same way. The sign and
+    /// reverse folds sweep each block around one inner
+    /// [`Dct2::forward_batch`] call, so the whole batch shares the
+    /// stage-fused path; bit-identical to per-item [`Dst2::forward`].
+    pub fn forward_batch(&self, xs: &[f64], out: &mut [f64], batch: usize) {
+        let (n1, n2) = (self.n1, self.n2);
+        let numel = n1 * n2;
+        assert_eq!(xs.len(), numel * batch);
+        assert_eq!(out.len(), numel * batch);
+        if batch == 0 {
+            return;
+        }
+        let mut folded = crate::util::scratch::take_f64(numel * batch);
+        for (xb, fb) in xs.chunks_exact(numel).zip(folded.chunks_exact_mut(numel)) {
+            for r in 0..n1 {
+                for c in 0..n2 {
+                    let v = xb[r * n2 + c];
+                    fb[r * n2 + c] = if (r + c) % 2 == 0 { v } else { -v };
+                }
+            }
+        }
+        let mut y = crate::util::scratch::take_f64(numel * batch);
+        self.dct.forward_batch(&folded, &mut y, batch);
+        for (yb, ob) in y.chunks_exact(numel).zip(out.chunks_exact_mut(numel)) {
+            for r in 0..n1 {
+                for c in 0..n2 {
+                    ob[r * n2 + c] = yb[(n1 - 1 - r) * n2 + (n2 - 1 - c)];
+                }
+            }
+        }
+        crate::util::scratch::give_f64(folded);
+        crate::util::scratch::give_f64(y);
+    }
 }
 
 /// Fused 2D inverse DST plan.
@@ -198,6 +233,38 @@ impl Idst2 {
             for c in 0..n2 {
                 if (r + c) % 2 == 1 {
                     out[r * n2 + c] = -out[r * n2 + c];
+                }
+            }
+        }
+        crate::util::scratch::give_f64(rev);
+    }
+
+    /// Batched forward: the reverse fold and checkerboard negation sweep
+    /// each packed block around one inner [`Idct2::forward_batch`] call;
+    /// bit-identical to per-item [`Idst2::forward`].
+    pub fn forward_batch(&self, xs: &[f64], out: &mut [f64], batch: usize) {
+        let (n1, n2) = (self.n1, self.n2);
+        let numel = n1 * n2;
+        assert_eq!(xs.len(), numel * batch);
+        assert_eq!(out.len(), numel * batch);
+        if batch == 0 {
+            return;
+        }
+        let mut rev = crate::util::scratch::take_f64(numel * batch);
+        for (xb, rb) in xs.chunks_exact(numel).zip(rev.chunks_exact_mut(numel)) {
+            for r in 0..n1 {
+                for c in 0..n2 {
+                    rb[r * n2 + c] = xb[(n1 - 1 - r) * n2 + (n2 - 1 - c)];
+                }
+            }
+        }
+        self.idct.forward_batch(&rev, out, batch);
+        for ob in out.chunks_exact_mut(numel) {
+            for r in 0..n1 {
+                for c in 0..n2 {
+                    if (r + c) % 2 == 1 {
+                        ob[r * n2 + c] = -ob[r * n2 + c];
+                    }
                 }
             }
         }
@@ -251,6 +318,44 @@ mod tests {
             let mut back = vec![0.0; n1 * n2];
             Idst2::new(n1, n2).forward(&y, &mut back);
             check_close(&back, &x, 1e-9)
+        });
+    }
+
+    #[test]
+    fn dst2_forward_batch_is_bit_identical_to_solo() {
+        forall(10, shapes(1, 16), |rng, &(n1, n2)| {
+            let numel = n1 * n2;
+            for batch in [1usize, 2, 5] {
+                let xs = rng.normal_vec(numel * batch);
+                let plan = Dst2::new(n1, n2);
+                let mut got = vec![0.0; numel * batch];
+                plan.forward_batch(&xs, &mut got, batch);
+                for b in 0..batch {
+                    let mut want = vec![0.0; numel];
+                    plan.forward(&xs[b * numel..(b + 1) * numel], &mut want);
+                    assert_eq!(got[b * numel..(b + 1) * numel], want[..], "{n1}x{n2} item {b}");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn idst2_forward_batch_is_bit_identical_to_solo() {
+        forall(10, shapes(1, 16), |rng, &(n1, n2)| {
+            let numel = n1 * n2;
+            for batch in [1usize, 3, 4] {
+                let xs = rng.normal_vec(numel * batch);
+                let plan = Idst2::new(n1, n2);
+                let mut got = vec![0.0; numel * batch];
+                plan.forward_batch(&xs, &mut got, batch);
+                for b in 0..batch {
+                    let mut want = vec![0.0; numel];
+                    plan.forward(&xs[b * numel..(b + 1) * numel], &mut want);
+                    assert_eq!(got[b * numel..(b + 1) * numel], want[..], "{n1}x{n2} item {b}");
+                }
+            }
+            Ok(())
         });
     }
 

@@ -4,8 +4,11 @@
 //!   info                          library + backend report
 //!   transform --op <op> --n1 A [--n2 B] [--seed S] [--pjrt]
 //!                                 run one transform on random data
-//!   serve --requests N [--workers W] [--pjrt]
+//!   serve --requests N [--workers W] [--pjrt] [--deadline-ms D]
+//!         [--max-inflight E] [--fault SPEC]
 //!                                 throughput demo of the service loop
+//!                                 (lifecycle knobs mirror MDDCT_DEADLINE_MS /
+//!                                 MDDCT_MAX_INFLIGHT / MDDCT_FAULT)
 //!   compress --n 512 --eps 10     whole-image compression case study
 //!   place --bench adaptec1 --iters 8
 //!                                 electrostatic placement case study
@@ -76,12 +79,31 @@ fn make_router(args: &Args) -> Router {
     Router::native_only()
 }
 
+/// Apply the request-lifecycle CLI knobs (`--deadline-ms`,
+/// `--max-inflight`, `--fault`) on top of a config; the flags override
+/// the env-derived defaults (`MDDCT_DEADLINE_MS` etc).
+fn apply_lifecycle_flags(args: &Args, cfg: &mut ServiceConfig) {
+    if let Some(ms) = args.flag("deadline-ms").and_then(|v| v.parse::<u64>().ok()) {
+        cfg.default_deadline = Some(std::time::Duration::from_millis(ms));
+    }
+    if let Some(elems) = args.flag("max-inflight").and_then(|v| v.parse::<usize>().ok()) {
+        cfg.max_inflight_elems = elems;
+    }
+    if let Some(spec) = args.flag("fault") {
+        match mddct::coordinator::parse_spec(spec) {
+            Ok(s) => mddct::coordinator::set_faults(s),
+            Err(e) => eprintln!("--fault ignored: {e}"),
+        }
+    }
+}
+
 fn service(args: &Args) -> Service {
-    let cfg = ServiceConfig {
+    let mut cfg = ServiceConfig {
         workers: args.flag_usize("workers", 4),
         batch: BatchPolicy::default(),
         ..Default::default()
     };
+    apply_lifecycle_flags(args, &mut cfg);
     Service::start(cfg, make_router(args))
 }
 
@@ -143,10 +165,18 @@ fn cmd_serve(args: &Args) -> i32 {
     let payloads: Vec<Vec<f64>> =
         (0..requests).map(|_| rng.normal_vec(n * n)).collect();
     let t0 = std::time::Instant::now();
-    let handles: Vec<_> = payloads
-        .into_iter()
-        .map(|p| svc.submit(TransformOp::Dct2d, vec![n, n], p).unwrap())
-        .collect();
+    let mut handles = Vec::new();
+    let mut shed = 0usize;
+    for p in payloads {
+        match svc.submit(TransformOp::Dct2d, vec![n, n], p) {
+            Ok(h) => handles.push(h),
+            Err(e) if e.is_retryable() => shed += 1,
+            Err(e) => {
+                eprintln!("submit failed: {e}");
+                return 1;
+            }
+        }
+    }
     let mut ok = 0;
     for h in handles {
         if h.wait().is_ok() {
@@ -155,7 +185,7 @@ fn cmd_serve(args: &Args) -> i32 {
     }
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "served {ok}/{requests} dct2d {n}x{n} in {dt:.3}s  ({:.1} req/s)",
+        "served {ok}/{requests} dct2d {n}x{n} in {dt:.3}s  ({:.1} req/s, {shed} shed)",
         ok as f64 / dt
     );
     println!("metrics: {}", svc.metrics.snapshot());
@@ -217,12 +247,13 @@ fn cmd_trace(args: &Args) -> i32 {
     let numel: usize = shape.iter().product();
     let requests = args.flag_usize("requests", 32);
     let out_path = args.flag_str("out", "trace.json");
-    let cfg = ServiceConfig {
+    let mut cfg = ServiceConfig {
         workers: args.flag_usize("workers", 4),
         batch: BatchPolicy::default(),
         trace: true,
         ..Default::default()
     };
+    apply_lifecycle_flags(args, &mut cfg);
     let svc = Service::start(cfg, make_router(args));
     let mut rng = Rng::new(args.flag_usize("seed", 42) as u64);
     let reqs: Vec<_> = (0..requests).map(|_| (op, shape.clone(), rng.normal_vec(numel))).collect();

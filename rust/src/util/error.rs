@@ -8,6 +8,71 @@
 
 use std::fmt;
 
+/// Typed failure modes of the transform-service request lifecycle
+/// (`coordinator`): validation, deadline, admission control, execution,
+/// and shutdown failures, carried through the reply channels end to end
+/// and rendered at the API edge via `Display`.
+///
+/// Unlike the string-backed [`Error`] below (an `anyhow` substitute for
+/// the offline `runtime` layer), this enum is *matchable*: clients
+/// distinguish a shed request (retry later, honoring
+/// [`TransformError::Overloaded`]'s `retry_after` hint) from a
+/// malformed one (never retry) from an execution failure (already
+/// retried once on the degraded serial plan by the service itself).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TransformError {
+    /// The request failed validation (rank/shape/payload mismatch);
+    /// retrying the identical request can never succeed.
+    InvalidRequest(String),
+    /// The request's deadline passed before a worker started executing
+    /// it; it was dropped without consuming pool work.
+    DeadlineExceeded,
+    /// Admission control shed the request: accepting it would push the
+    /// service's in-flight payload past its budget. `retry_after` is the
+    /// suggested client backoff.
+    Overloaded {
+        /// Suggested backoff before resubmitting.
+        retry_after: std::time::Duration,
+    },
+    /// The executing plan panicked (and, where applicable, the one-shot
+    /// degraded-serial retry also failed).
+    ExecutionPanicked(String),
+    /// The backend reported an execution error (PJRT failure or an
+    /// injected fault) and the degraded retry also failed.
+    ExecutionFailed(String),
+    /// The service is shutting down and no longer accepts or answers
+    /// requests.
+    ShuttingDown,
+}
+
+impl fmt::Display for TransformError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransformError::InvalidRequest(m) => write!(f, "invalid request: {m}"),
+            TransformError::DeadlineExceeded => f.write_str("deadline exceeded"),
+            TransformError::Overloaded { retry_after } => {
+                write!(f, "overloaded, retry after {retry_after:?}")
+            }
+            TransformError::ExecutionPanicked(m) => write!(f, "execution panicked: {m}"),
+            TransformError::ExecutionFailed(m) => write!(f, "execution failed: {m}"),
+            TransformError::ShuttingDown => f.write_str("service shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for TransformError {}
+
+impl TransformError {
+    /// Whether resubmitting the same request later can succeed
+    /// (load/timing failures, not validation failures).
+    pub fn is_retryable(&self) -> bool {
+        matches!(
+            self,
+            TransformError::DeadlineExceeded | TransformError::Overloaded { .. }
+        )
+    }
+}
+
 /// A string-backed error with prepended context.
 #[derive(Debug, Clone)]
 pub struct Error {
@@ -122,6 +187,22 @@ mod tests {
         let e = v.with_context(|| format!("missing {}", "x")).unwrap_err();
         assert_eq!(e.to_string(), "missing x");
         assert_eq!(Some(3).context("never").unwrap(), 3);
+    }
+
+    #[test]
+    fn transform_error_renders_and_classifies() {
+        use std::time::Duration;
+        let shed = TransformError::Overloaded { retry_after: Duration::from_millis(5) };
+        assert!(shed.is_retryable());
+        assert!(shed.to_string().starts_with("overloaded"));
+        assert!(TransformError::DeadlineExceeded.is_retryable());
+        let bad = TransformError::InvalidRequest("rank".into());
+        assert!(!bad.is_retryable());
+        assert_eq!(bad.to_string(), "invalid request: rank");
+        // the worker-panic path greps for this word in tests
+        assert!(TransformError::ExecutionPanicked("boom".into())
+            .to_string()
+            .contains("panicked"));
     }
 
     #[test]

@@ -1,0 +1,245 @@
+//! Fault-injection matrix for the request lifecycle: panic / error /
+//! delay faults at the coordinator's execution seams, crossed with the
+//! solo, packed-batch, and band-sharded routes. The contract under test
+//! (ISSUE "degrade-and-retry"):
+//!
+//! * a failing primary execution never fails the request — it is
+//!   retried once on the degraded serial plan and the answer is
+//!   *bit-equal* to what the serial path would have produced;
+//! * the poisoned plan key is quarantined, so later same-shape requests
+//!   skip straight to the degraded plan (no second crash);
+//! * delays compose with deadlines (queued requests expire instead of
+//!   wasting pool work) and with admission control (a saturated budget
+//!   sheds with `Overloaded` instead of queueing without bound);
+//! * every conclusion shows up in `Service::snapshot()` counters.
+//!
+//! Fault state is process-global (like the obs trace flag), so every
+//! test serializes on one mutex and clears the fault set on exit.
+
+#![cfg(not(feature = "fault-off"))]
+
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use mddct::coordinator::fault;
+use mddct::coordinator::{
+    parse_spec, set_faults, BatchPolicy, Service, ServiceConfig, TransformError, TransformOp,
+};
+use mddct::dct::{Dct2, Idct2};
+use mddct::parallel::{ExecPolicy, ShardPolicy};
+use mddct::util::json::Json;
+use mddct::util::rng::Rng;
+
+/// Serializes tests that install process-wide fault specs.
+fn guard() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A service whose primary plans are serial and unsharded unless a test
+/// overrides them — that makes primary and degraded outputs bit-equal,
+/// so assert_eq! can distinguish "degraded correctly" from "close".
+fn cfg(workers: usize) -> ServiceConfig {
+    ServiceConfig {
+        workers,
+        batch: BatchPolicy::default(),
+        exec: ExecPolicy::Serial,
+        shard: ShardPolicy::Auto,
+        trace: false,
+        default_deadline: None,
+        max_inflight_elems: usize::MAX,
+    }
+}
+
+fn counter(snap: &Json, op: &str, field: &str) -> f64 {
+    snap.get(op)
+        .and_then(|d| d.get(field))
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("snapshot missing {op}.{field}"))
+}
+
+#[test]
+fn panic_on_solo_execute_degrades_retries_and_quarantines() {
+    let _g = guard();
+    set_faults(parse_spec("panic:execute").unwrap());
+    let s = Service::start_native(cfg(1));
+    let (n1, n2) = (8usize, 12usize);
+    let mut rng = Rng::new(900);
+    let x = rng.normal_vec(n1 * n2);
+    let mut want = vec![0.0; n1 * n2];
+    Dct2::with_policy(n1, n2, ExecPolicy::Serial).forward(&x, &mut want);
+
+    // the injected panic hits the primary path; the degraded serial
+    // retry must answer bit-equal to the serial oracle
+    let r = s.transform(TransformOp::Dct2d, vec![n1, n2], x.clone()).unwrap();
+    assert_eq!(r.backend, "native-degraded");
+    assert_eq!(r.output, want, "degraded answer must be bit-equal to the serial plan");
+
+    let snap = s.snapshot();
+    assert_eq!(counter(&snap, "dct2d", "retried_degraded"), 1.0);
+    assert_eq!(counter(&snap, "dct2d", "errors"), 0.0, "the retry succeeded");
+    let pc = snap.get("_plan_cache").unwrap();
+    assert_eq!(pc.get("quarantined").unwrap().as_f64().unwrap(), 1.0);
+
+    // faults off, key still quarantined: served degraded *without* a
+    // second retry (no new crash, no retried_degraded bump)
+    fault::clear();
+    let r2 = s.transform(TransformOp::Dct2d, vec![n1, n2], x).unwrap();
+    assert_eq!(r2.backend, "native-degraded");
+    assert_eq!(r2.output, want);
+    assert_eq!(counter(&s.snapshot(), "dct2d", "retried_degraded"), 1.0);
+    // a different shape is a different key — not quarantined, runs primary
+    let other = s.transform(TransformOp::Dct2d, vec![4, 4], vec![1.0; 16]).unwrap();
+    assert_eq!(other.backend, "native");
+    assert_eq!(s.inflight.in_use(), 0, "all budget returned");
+}
+
+#[test]
+fn error_fault_on_op_degrades_packed_and_solo_requests_alike() {
+    let _g = guard();
+    // op-name site: fires at every seam dct2d crosses (pack,
+    // execute_batch, execute) but leaves other ops alone
+    set_faults(parse_spec("error:dct2d").unwrap());
+    let s = Service::start_native(ServiceConfig {
+        batch: BatchPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_millis(20),
+            ..Default::default()
+        },
+        ..cfg(1)
+    });
+    let (n1, n2) = (8usize, 8usize);
+    let mut rng = Rng::new(901);
+    let serial = Dct2::with_policy(n1, n2, ExecPolicy::Serial);
+    let reqs: Vec<_> = (0..16)
+        .map(|_| (TransformOp::Dct2d, vec![n1, n2], rng.normal_vec(n1 * n2)))
+        .collect();
+    let wants: Vec<Vec<f64>> = reqs
+        .iter()
+        .map(|(_, _, x)| {
+            let mut w = vec![0.0; n1 * n2];
+            serial.forward(x, &mut w);
+            w
+        })
+        .collect();
+
+    // every request must conclude successfully on the degraded plan —
+    // whether its batch was packed (pack/execute_batch seams), flushed
+    // solo (execute seam), or arrived after the quarantine kicked in
+    let out = s.transform_many(reqs).unwrap();
+    for (r, w) in out.iter().zip(&wants) {
+        assert_eq!(r.backend, "native-degraded");
+        assert_eq!(&r.output, w, "degraded answers are bit-equal to the serial plan");
+    }
+    let snap = s.snapshot();
+    assert!(counter(&snap, "dct2d", "retried_degraded") >= 1.0);
+    assert_eq!(counter(&snap, "dct2d", "requests"), 16.0);
+    assert_eq!(snap.get("_plan_cache").unwrap().get("quarantined").unwrap().as_f64(), Some(1.0));
+
+    // the fault is scoped to dct2d: idct2d executes its primary plan
+    let x = rng.normal_vec(n1 * n2);
+    let r = s.transform(TransformOp::Idct2d, vec![n1, n2], x).unwrap();
+    assert_eq!(r.backend, "native");
+    fault::clear();
+}
+
+#[test]
+fn panic_on_sharded_route_degrades_to_single_band_serial() {
+    let _g = guard();
+    set_faults(parse_spec("panic:idct2d").unwrap());
+    // a shard-gate-sized request on a force-sharding policy: the primary
+    // plan is banded; the degraded plan is the single-band serial one
+    let s = Service::start_native(ServiceConfig {
+        shard: ShardPolicy::MaxShards(3),
+        ..cfg(2)
+    });
+    let (n1, n2) = (256usize, 260usize);
+    let mut rng = Rng::new(902);
+    let x = rng.normal_vec(n1 * n2);
+    let mut want = vec![0.0; n1 * n2];
+    Idct2::with_policy(n1, n2, ExecPolicy::Serial).forward(&x, &mut want);
+
+    let r = s.transform(TransformOp::Idct2d, vec![n1, n2], x).unwrap();
+    assert_eq!(r.backend, "native-degraded");
+    assert_eq!(r.output, want, "sharded failure must fall back to the serial plan, bit-equal");
+    let snap = s.snapshot();
+    assert_eq!(counter(&snap, "idct2d", "retried_degraded"), 1.0);
+    fault::clear();
+}
+
+#[test]
+fn delay_fault_expires_queued_deadlines_instead_of_executing_them() {
+    let _g = guard();
+    set_faults(parse_spec("delay:execute:150ms").unwrap());
+    let s = Service::start_native(ServiceConfig {
+        batch: BatchPolicy { max_wait: Duration::from_millis(1), ..Default::default() },
+        ..cfg(1)
+    });
+    // request 1 (no deadline) occupies the single worker for >= 150ms
+    let slow = s.submit(TransformOp::Dct2d, vec![8, 8], vec![1.0; 64]).unwrap();
+    std::thread::sleep(Duration::from_millis(30)); // let the worker start sleeping
+    // request 2's deadline passes while it waits behind the delay; the
+    // worker must expire it at dequeue, not execute it
+    let doomed = s
+        .submit_with_deadline(
+            TransformOp::Dct2d,
+            vec![6, 6],
+            vec![1.0; 36],
+            Some(Instant::now() + Duration::from_millis(50)),
+        )
+        .unwrap();
+    assert!(matches!(doomed.wait(), Err(TransformError::DeadlineExceeded)));
+    assert!(slow.wait().is_ok(), "the delayed request itself still completes");
+    let snap = s.snapshot();
+    assert_eq!(counter(&snap, "dct2d", "expired_requests"), 1.0);
+    assert_eq!(s.inflight.in_use(), 0, "expired requests release their budget");
+    fault::clear();
+}
+
+#[test]
+fn saturated_budget_sheds_overloaded_while_a_delayed_request_holds_it() {
+    let _g = guard();
+    set_faults(parse_spec("delay:execute:50ms").unwrap());
+    let s = Service::start_native(ServiceConfig {
+        max_inflight_elems: 64, // exactly one 8x8 payload
+        ..cfg(1)
+    });
+    // request 1 takes the whole budget and holds it for >= 50ms
+    let h = s.submit(TransformOp::Dct2d, vec![8, 8], vec![1.0; 64]).unwrap();
+    // request 2 arrives while the budget is held: shed, immediately
+    let err = s.submit(TransformOp::Dct2d, vec![8, 8], vec![2.0; 64]).unwrap_err();
+    match err {
+        TransformError::Overloaded { retry_after } => {
+            assert!(retry_after > Duration::ZERO, "Overloaded must carry a backoff hint")
+        }
+        other => panic!("expected Overloaded, got {other}"),
+    }
+    assert!(err.is_retryable());
+    assert!(h.wait().is_ok());
+    // the reply released the budget: the next arrival is admitted
+    assert!(s.transform(TransformOp::Dct2d, vec![8, 8], vec![3.0; 64]).is_ok());
+    let snap = s.snapshot();
+    assert_eq!(counter(&snap, "dct2d", "shed_requests"), 1.0);
+    assert_eq!(
+        snap.get("_admission").unwrap().get("max_inflight_elems").unwrap().as_f64(),
+        Some(64.0)
+    );
+    fault::clear();
+}
+
+#[test]
+fn env_spec_grammar_drives_real_traffic() {
+    // CI runs this binary once with MDDCT_FAULT=delay:execute:2ms set;
+    // without the env knob there is nothing env-specific to check
+    let Ok(spec) = std::env::var("MDDCT_FAULT") else { return };
+    let _g = guard();
+    let parsed = parse_spec(&spec).expect("CI must set a well-formed MDDCT_FAULT");
+    set_faults(parsed);
+    let s = Service::start_native(cfg(2));
+    let mut rng = Rng::new(903);
+    let x = rng.normal_vec(10 * 10);
+    // a delay-only spec perturbs timing, never correctness
+    let r = s.transform(TransformOp::Dct2d, vec![10, 10], x).unwrap();
+    assert!(r.output.iter().all(|v| v.is_finite()));
+    fault::clear();
+}

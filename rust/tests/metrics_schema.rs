@@ -26,7 +26,9 @@ fn snapshot_schema_is_golden() {
     // per-op row: the full golden key set (packed_batch_hist appears
     // only once a packed batch ran, so dct2d has it and dct3d doesn't)
     let golden_op = [
+        "dropped_replies",
         "errors",
+        "expired_requests",
         "max_batch",
         "max_bands",
         "max_latency_s",
@@ -39,7 +41,9 @@ fn snapshot_schema_is_golden() {
         "packed_batches",
         "packed_requests",
         "requests",
+        "retried_degraded",
         "sharded_requests",
+        "shed_requests",
     ];
     assert_eq!(keys(snap.get("dct2d").unwrap()), golden_op);
     let without_hist: Vec<&str> =

@@ -6,7 +6,7 @@
 //! so no arithmetic may change. Cross-kernel agreement stays at the
 //! usual <= 1e-10 rounding envelope.
 
-use mddct::dct::{Algo1d, Dct1d, Dct2, Idct1d, Idct2};
+use mddct::dct::{Algo1d, Dct1d, Dct2, Dst2, Idct1d, Idct2, Idst2};
 use mddct::fft::{onesided_len, C64, FftKernel, Rfft2Plan, RfftPlan};
 use mddct::parallel::ExecPolicy;
 use mddct::util::rng::Rng;
@@ -54,6 +54,37 @@ fn idct2_forward_batch_is_bit_identical_to_solo_loop() {
             let mut got = vec![0.0; numel * batch];
             plan.forward_batch(&xs, &mut got, batch);
             assert_eq!(got, want, "idct2 ({n1},{n2}) B={batch}");
+        }
+    }
+}
+
+#[test]
+fn dst2_and_idst2_forward_batch_are_bit_identical_to_solo_loop() {
+    // DST-II/III ride the DCT substrate through sign folds; their batch
+    // path (new with the packed-batch gate extension) must keep the same
+    // bit-identity contract as the DCT plans above
+    let mut rng = Rng::new(705);
+    for &(n1, n2) in SHAPES {
+        let numel = n1 * n2;
+        for &batch in BATCHES {
+            let xs = rng.normal_vec(numel * batch);
+            let dst = Dst2::new(n1, n2);
+            let mut want = vec![0.0; numel * batch];
+            for (b, w) in want.chunks_mut(numel).enumerate() {
+                dst.forward(&xs[b * numel..(b + 1) * numel], w);
+            }
+            let mut got = vec![0.0; numel * batch];
+            dst.forward_batch(&xs, &mut got, batch);
+            assert_eq!(got, want, "dst2 ({n1},{n2}) B={batch}");
+
+            let idst = Idst2::new(n1, n2);
+            let mut want = vec![0.0; numel * batch];
+            for (b, w) in want.chunks_mut(numel).enumerate() {
+                idst.forward(&xs[b * numel..(b + 1) * numel], w);
+            }
+            let mut got = vec![0.0; numel * batch];
+            idst.forward_batch(&xs, &mut got, batch);
+            assert_eq!(got, want, "idst2 ({n1},{n2}) B={batch}");
         }
     }
 }

@@ -266,8 +266,8 @@ fn prop_router_deterministic_and_native_correct() {
     forall(25, shapes(1, 20), |rng, &(n1, n2)| {
         let key = PlanKey { op: TransformOp::Dct2d, shape: vec![n1, n2] };
         let x = rng.normal_vec(n1 * n2);
-        let (a, ra) = router.execute(&key, &x).map_err(|e| e)?;
-        let (b, rb) = router.execute(&key, &x).map_err(|e| e)?;
+        let (a, ra) = router.execute(&key, &x).map_err(|e| e.to_string())?;
+        let (b, rb) = router.execute(&key, &x).map_err(|e| e.to_string())?;
         if ra != rb {
             return Err("route flapped".into());
         }
@@ -286,6 +286,7 @@ fn prop_request_validation_total() {
             op: TransformOp::Dct2d,
             shape: vec![n1, n2],
             data: vec![0.0; len],
+            deadline: None,
         };
         match (req.validate(), len == numel) {
             (Ok(()), true) | (Err(_), false) => Ok(()),

@@ -33,6 +33,8 @@ fn service_traffic_produces_trace_and_consistent_breakdown() {
         exec: ExecPolicy::Serial,
         shard: ShardPolicy::MaxShards(3),
         trace: true, // the ServiceConfig hook must flip the global flag
+        default_deadline: None,
+        max_inflight_elems: usize::MAX,
     });
     let (n1, n2) = (256usize, 260usize); // >= the 2D shard gate
     let mut rng = Rng::new(700);

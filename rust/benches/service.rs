@@ -1,0 +1,225 @@
+//! Open-loop wire-level load generator for the TCP front-end.
+//!
+//! Drives `mddct serve` end to end — frame encode, socket, per-conn
+//! reader thread, service submit, reply encode — with a mixed-shape
+//! request stream (pow2 and Bluestein 2D blocks plus a fused combo)
+//! over several pipelined connections. Arrival is open-loop at 0.5x /
+//! 1x / 2x the measured closed-loop capacity, so above capacity the
+//! admission budget must shed and the shed requests come back as typed
+//! `overloaded` error frames, not stalls.
+//!
+//! Reports wall latency (send to reply receipt) p50 / p99 / p999 per
+//! load, plus the admit ratio. Emits a human table and
+//! machine-readable `BENCH_service.json` (override the path with
+//! `MDDCT_BENCH_SERVICE_JSON`); the bench-diff CI gate tracks the
+//! `*_ms` columns per row (`speedup_`-prefixed fields are reported but
+//! not gated). `MDDCT_BENCH_QUICK=1` runs a CI-sized subset.
+//!
+//! Run: `cargo bench --bench service`
+
+use std::collections::VecDeque;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use mddct::bench::{ms, Table};
+use mddct::coordinator::{BatchPolicy, Service, ServiceConfig, TransformOp};
+use mddct::parallel::{ExecPolicy, ShardPolicy};
+use mddct::server::proto::{self, WireReply, WireRequest};
+use mddct::server::{Server, ServerConfig};
+use mddct::util::rng::Rng;
+
+/// Fixed worker count: part of each row's identity, so it must not
+/// float with the runner's core count.
+const WORKERS: usize = 2;
+/// Pipelined client connections.
+const CONNS: usize = 4;
+/// Admission cap: deep enough to absorb bursts at capacity, shallow
+/// enough that 2x offered load sheds rather than queues.
+const MAX_INFLIGHT: usize = 64 * 32 * 32;
+
+/// The request mix: pow2 and Bluestein 2D blocks plus a fused combo.
+fn request_mix() -> Vec<(TransformOp, Vec<usize>)> {
+    vec![
+        (TransformOp::Dct2d, vec![32, 32]),
+        (TransformOp::Idct2d, vec![24, 24]),
+        (TransformOp::IdctIdxst, vec![16, 16]),
+        (TransformOp::Dct2d, vec![27, 15]),
+    ]
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() - 1) as f64 * p).round() as usize]
+}
+
+/// One pipelined connection: a writer thread holds the open-loop
+/// schedule while this thread reads replies in order (the server
+/// answers each connection's frames FIFO), pairing each reply with its
+/// send instant. Returns (wall latencies, shed count).
+fn run_conn(
+    addr: SocketAddr,
+    templates: Arc<Vec<String>>,
+    n: usize,
+    interarrival: Duration,
+    start: Instant,
+) -> (Vec<f64>, usize) {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_nodelay(true).expect("nodelay");
+    let mut rd = stream.try_clone().expect("clone stream");
+    let sends: Arc<Mutex<VecDeque<Instant>>> = Arc::new(Mutex::new(VecDeque::new()));
+    let sends_w = sends.clone();
+    let writer = std::thread::spawn(move || {
+        let mut wr = stream;
+        for i in 0..n {
+            let due = start + interarrival * (i as u32);
+            while Instant::now() < due {
+                std::hint::spin_loop();
+            }
+            let body = &templates[i % templates.len()];
+            sends_w.lock().unwrap().push_back(Instant::now());
+            proto::write_frame(&mut wr, body.as_bytes()).expect("write frame");
+        }
+    });
+    let mut lats = Vec::with_capacity(n);
+    let mut shed = 0usize;
+    for _ in 0..n {
+        let body = proto::read_frame(&mut rd, proto::DEFAULT_MAX_FRAME_BYTES)
+            .expect("read frame")
+            .expect("reply before EOF");
+        let received = Instant::now();
+        let sent = sends.lock().unwrap().pop_front().expect("send instant");
+        match proto::decode_reply(&body).expect("decode reply") {
+            WireReply::Ok { .. } => lats.push((received - sent).as_secs_f64()),
+            WireReply::Err { .. } => shed += 1,
+            WireReply::Metrics(_) => {}
+        }
+    }
+    writer.join().expect("writer thread");
+    (lats, shed)
+}
+
+fn main() {
+    let quick = std::env::var("MDDCT_BENCH_QUICK").is_ok();
+    let (mode, per_conn) = if quick { ("quick", 250usize) } else { ("full", 2000usize) };
+
+    let svc = Arc::new(Service::start_native(ServiceConfig {
+        workers: WORKERS,
+        batch: BatchPolicy::default(),
+        exec: ExecPolicy::Serial,
+        shard: ShardPolicy::Auto,
+        trace: false,
+        default_deadline: None,
+        max_inflight_elems: MAX_INFLIGHT,
+    }));
+    let server = Server::start(ServerConfig::ephemeral(), svc.clone()).expect("start server");
+    let addr = server.addr();
+
+    // pre-encode one request body per mix entry; clients cycle through
+    let mut rng = Rng::new(42);
+    let mix = request_mix();
+    let templates: Vec<String> = mix
+        .iter()
+        .map(|(op, shape)| {
+            let numel: usize = shape.iter().product();
+            proto::encode_request(&WireRequest {
+                id: 0,
+                op: *op,
+                shape: shape.clone(),
+                batch: 1,
+                deadline_ms: None,
+                data: rng.normal_vec(numel),
+            })
+        })
+        .collect();
+    let templates = Arc::new(templates);
+
+    // closed-loop calibration over the same mix (plans warm); offered
+    // rates are multiples of the implied pool capacity
+    for (op, shape) in &mix {
+        let numel: usize = shape.iter().product();
+        for _ in 0..4 {
+            svc.transform(*op, shape.clone(), rng.normal_vec(numel)).expect("warmup");
+        }
+    }
+    let cal = 32;
+    let t0 = Instant::now();
+    for i in 0..cal {
+        let (op, shape) = &mix[i % mix.len()];
+        let numel: usize = shape.iter().product();
+        svc.transform(*op, shape.clone(), rng.normal_vec(numel)).expect("calibrate");
+    }
+    let svc_s = t0.elapsed().as_secs_f64() / cal as f64;
+    let capacity = WORKERS as f64 / svc_s;
+    println!(
+        "\nWire-level open loop: {CONNS} conns, {WORKERS} workers, {} shapes mixed, \
+         closed-loop service time {} => capacity ~{capacity:.0} req/s\n",
+        mix.len(),
+        ms(svc_s)
+    );
+
+    let mut t = Table::new(&["load", "offered req/s", "ok", "shed", "p50", "p99", "p999"]);
+    let mut json_rows: Vec<String> = Vec::new();
+    for (label, mult) in [("0.5x", 0.5f64), ("1x", 1.0), ("2x", 2.0)] {
+        let interarrival = Duration::from_secs_f64(CONNS as f64 / (capacity * mult));
+        let start = Instant::now();
+        let conns: Vec<_> = (0..CONNS)
+            .map(|_| {
+                let templates = templates.clone();
+                std::thread::spawn(move || run_conn(addr, templates, per_conn, interarrival, start))
+            })
+            .collect();
+        let mut lats: Vec<f64> = Vec::new();
+        let mut shed = 0usize;
+        for c in conns {
+            let (mut l, s) = c.join().expect("conn thread");
+            lats.append(&mut l);
+            shed += s;
+        }
+        let elapsed = start.elapsed().as_secs_f64();
+        let total = CONNS * per_conn;
+        let ok = lats.len();
+        lats.sort_by(|a, b| a.total_cmp(b));
+        let p50 = percentile(&lats, 0.50);
+        let p99 = percentile(&lats, 0.99);
+        let p999 = percentile(&lats, 0.999);
+        let per_req_ms = 1e3 * elapsed / ok.max(1) as f64;
+        let admit_ratio = ok as f64 / total as f64;
+        t.row(&[
+            label.to_string(),
+            format!("{:.0}", capacity * mult),
+            format!("{ok}/{total}"),
+            format!("{shed} ({:.1}%)", 100.0 * shed as f64 / total as f64),
+            ms(p50),
+            ms(p99),
+            ms(p999),
+        ]);
+        json_rows.push(format!(
+            "{{\"section\": \"service\", \"mode\": \"{mode}\", \"conns\": {CONNS}, \
+             \"workers\": {WORKERS}, \"load\": \"{label}\", \
+             \"per_req_ms\": {per_req_ms:.6}, \"p50_ms\": {:.6}, \"p99_ms\": {:.6}, \
+             \"p999_ms\": {:.6}, \"speedup_admit_ratio\": {admit_ratio:.4}}}",
+            p50 * 1e3,
+            p99 * 1e3,
+            p999 * 1e3
+        ));
+    }
+    t.print();
+    println!(
+        "\nfinal snapshot: {}",
+        svc.snapshot_with(&[("_server", server.stats().snapshot())])
+    );
+
+    let path = std::env::var("MDDCT_BENCH_SERVICE_JSON")
+        .unwrap_or_else(|_| "BENCH_service.json".to_string());
+    let doc = format!(
+        "{{\n  \"bench\": \"service\",\n  \"unit\": \"latency_ms\",\n  \"rows\": [\n    {}\n  ]\n}}\n",
+        json_rows.join(",\n    ")
+    );
+    match std::fs::write(&path, &doc) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

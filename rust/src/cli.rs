@@ -57,6 +57,12 @@ impl Args {
         self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Optional numeric flag with no default: `None` when absent or
+    /// unparseable (e.g. `mddct serve --port 0` vs no `--port` at all).
+    pub fn flag_opt_usize(&self, name: &str) -> Option<usize> {
+        self.flag(name).and_then(|v| v.parse().ok())
+    }
+
     pub fn flag_f64(&self, name: &str, default: f64) -> f64 {
         self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
@@ -103,5 +109,14 @@ mod tests {
     fn trailing_bool_flag() {
         let a = parse("bench --quick");
         assert!(a.flag_bool("quick"));
+    }
+
+    #[test]
+    fn optional_numeric_flag_distinguishes_absent_from_zero() {
+        let a = parse("serve --port 0");
+        assert_eq!(a.flag_opt_usize("port"), Some(0));
+        assert_eq!(a.flag_opt_usize("missing"), None);
+        let b = parse("serve --port nope");
+        assert_eq!(b.flag_opt_usize("port"), None);
     }
 }

@@ -131,6 +131,7 @@ impl NativePlan {
                 | NativePlan::Idct2(_)
                 | NativePlan::Dst2(_)
                 | NativePlan::Idst2(_)
+                | NativePlan::Combo(_)
                 | NativePlan::Dct1(_)
                 | NativePlan::Idct1(_)
         )
@@ -151,6 +152,7 @@ impl NativePlan {
             NativePlan::Idct2(p) => p.forward_batch(data, &mut out, batch),
             NativePlan::Dst2(p) => p.forward_batch(data, &mut out, batch),
             NativePlan::Idst2(p) => p.forward_batch(data, &mut out, batch),
+            NativePlan::Combo(p) => p.forward_batch(data, &mut out, batch),
             NativePlan::Dct1(p) => p.forward_batch(data, &mut out, batch),
             NativePlan::Idct1(p) => p.forward_batch(data, &mut out, batch),
             _ => {
@@ -363,6 +365,8 @@ mod tests {
             (TransformOp::Idct2d, vec![9, 7]),
             (TransformOp::Dst2d, vec![8, 12]),
             (TransformOp::Idst2d, vec![9, 7]),
+            (TransformOp::IdctIdxst, vec![8, 12]),
+            (TransformOp::IdxstIdct, vec![9, 7]),
             (TransformOp::Dct1d(Algo1d::NPoint), vec![16]),
             (TransformOp::Idct1d, vec![15]),
             (TransformOp::RcDct2d, vec![6, 8]),

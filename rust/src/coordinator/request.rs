@@ -67,10 +67,11 @@ impl TransformOp {
 
     /// Whether this op's native plan has a true batched execution path
     /// (stage-fused across a packed same-shape batch via
-    /// `forward_batch`): the fused 2D DCT/IDCT and DST/IDST pairs (the
-    /// DST plans batch their sign/reverse folds around the inner DCT
-    /// batch path) and the 1D DCT/IDCT family. Other ops still co-batch
-    /// for plan-lookup amortization but execute item by item.
+    /// `forward_batch`): the fused 2D DCT/IDCT and DST/IDST pairs, the
+    /// DREAMPlace combos (DST and combo plans batch their shift/sign
+    /// folds around the inner DCT/IDCT batch path), and the 1D DCT/IDCT
+    /// family. Other ops still co-batch for plan-lookup amortization
+    /// but execute item by item.
     pub fn supports_batch(self) -> bool {
         matches!(
             self,
@@ -78,6 +79,8 @@ impl TransformOp {
                 | TransformOp::Idct2d
                 | TransformOp::Dst2d
                 | TransformOp::Idst2d
+                | TransformOp::IdctIdxst
+                | TransformOp::IdxstIdct
                 | TransformOp::Dct1d(_)
                 | TransformOp::Idct1d
         )
@@ -109,6 +112,52 @@ impl TransformOp {
         let dims: Vec<String> = shape.iter().map(|d| d.to_string()).collect();
         Some(format!("{prefix}{}", dims.join("x")))
     }
+
+    /// Parse a stable op name back to the op — the inverse of
+    /// [`TransformOp::name`], shared by the CLI's `--op` flag and the
+    /// wire protocol's `"op"` field. Also accepts the bare `dct1d`
+    /// alias for the N-point variant.
+    pub fn parse(name: &str) -> Option<TransformOp> {
+        Some(match name {
+            "dct2d" => TransformOp::Dct2d,
+            "idct2d" => TransformOp::Idct2d,
+            "rc_dct2d" => TransformOp::RcDct2d,
+            "rc_idct2d" => TransformOp::RcIdct2d,
+            "dct1d" | "dct1d_n" => TransformOp::Dct1d(Algo1d::NPoint),
+            "dct1d_4n" => TransformOp::Dct1d(Algo1d::FourN),
+            "dct1d_2n_mirror" => TransformOp::Dct1d(Algo1d::Mirror2N),
+            "dct1d_2n_pad" => TransformOp::Dct1d(Algo1d::Pad2N),
+            "idct1d" => TransformOp::Idct1d,
+            "idxst1d" => TransformOp::Idxst1d,
+            "idct_idxst" => TransformOp::IdctIdxst,
+            "idxst_idct" => TransformOp::IdxstIdct,
+            "dct3d" => TransformOp::Dct3d,
+            "idct3d" => TransformOp::Idct3d,
+            "dst2d" => TransformOp::Dst2d,
+            "idst2d" => TransformOp::Idst2d,
+            _ => return None,
+        })
+    }
+
+    /// Every op, each Algorithm-1 variant included (test/bench sweeps).
+    pub const ALL: [TransformOp; 16] = [
+        TransformOp::Dct2d,
+        TransformOp::Idct2d,
+        TransformOp::RcDct2d,
+        TransformOp::RcIdct2d,
+        TransformOp::Dct1d(Algo1d::NPoint),
+        TransformOp::Dct1d(Algo1d::FourN),
+        TransformOp::Dct1d(Algo1d::Mirror2N),
+        TransformOp::Dct1d(Algo1d::Pad2N),
+        TransformOp::Idct1d,
+        TransformOp::Idxst1d,
+        TransformOp::IdctIdxst,
+        TransformOp::IdxstIdct,
+        TransformOp::Dct3d,
+        TransformOp::Idct3d,
+        TransformOp::Dst2d,
+        TransformOp::Idst2d,
+    ];
 
     /// Stable lower-case op name (metrics keys, CLI `--op` values).
     pub fn name(self) -> String {
@@ -185,7 +234,19 @@ impl Request {
                 self.shape
             )));
         }
-        let numel: usize = self.shape.iter().product();
+        // checked: a hostile shape like [u32::MAX, u32::MAX] (reachable
+        // through the wire decoder's pre-checks only by construction)
+        // must error, not overflow-panic in debug builds
+        let numel = self
+            .shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .ok_or_else(|| {
+                TransformError::InvalidRequest(format!(
+                    "shape {:?} element count overflows",
+                    self.shape
+                ))
+            })?;
         if self.data.len() != numel {
             return Err(TransformError::InvalidRequest(format!(
                 "payload {} elements, shape {:?} needs {numel}",
@@ -244,9 +305,20 @@ mod tests {
         assert!(TransformOp::Idst2d.supports_batch());
         assert!(TransformOp::Dct1d(Algo1d::NPoint).supports_batch());
         assert!(TransformOp::Idct1d.supports_batch());
+        assert!(TransformOp::IdctIdxst.supports_batch());
+        assert!(TransformOp::IdxstIdct.supports_batch());
         assert!(!TransformOp::RcDct2d.supports_batch());
         assert!(!TransformOp::Dct3d.supports_batch());
-        assert!(!TransformOp::IdctIdxst.supports_batch());
+    }
+
+    #[test]
+    fn op_names_round_trip_through_parse() {
+        for op in TransformOp::ALL {
+            assert_eq!(TransformOp::parse(&op.name()), Some(op), "{op:?}");
+        }
+        // the CLI's bare-1D alias
+        assert_eq!(TransformOp::parse("dct1d"), Some(TransformOp::Dct1d(Algo1d::NPoint)));
+        assert_eq!(TransformOp::parse("nope"), None);
     }
 
     #[test]
@@ -276,6 +348,9 @@ mod tests {
         assert!(bad_len.validate().is_err());
         let zero_dim = req(4, TransformOp::Dct2d, vec![0, 4], vec![]);
         assert!(zero_dim.validate().is_err());
+        // element-count overflow is a typed error, not a panic
+        let huge = req(5, TransformOp::Dct2d, vec![usize::MAX, usize::MAX], vec![]);
+        assert!(matches!(huge.validate(), Err(TransformError::InvalidRequest(_))));
     }
 
     #[test]

@@ -320,6 +320,25 @@ impl Service {
         root.insert("_admission".to_string(), Json::Obj(adm));
         Json::Obj(root)
     }
+
+    /// [`Service::snapshot`] with extra `_`-prefixed sections merged in
+    /// — the seam a front-end uses to publish its own counters (the TCP
+    /// server adds `_server`) in the same document as the coordinator
+    /// metrics, so one `/metrics`-style route covers every layer.
+    pub fn snapshot_with(
+        &self,
+        sections: &[(&str, crate::util::json::Json)],
+    ) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut root = match self.snapshot() {
+            Json::Obj(o) => o,
+            other => std::collections::BTreeMap::from([("_metrics".to_string(), other)]),
+        };
+        for (name, section) in sections {
+            root.insert((*name).to_string(), section.clone());
+        }
+        Json::Obj(root)
+    }
 }
 
 impl Drop for Service {
@@ -857,6 +876,30 @@ mod tests {
             .and_then(|v| v.as_f64())
             .unwrap();
         assert_eq!(small_bands, 1.0, "small requests must stay unsharded");
+    }
+
+    #[test]
+    fn service_is_shareable_across_connection_threads() {
+        // the TCP front-end holds the service in an Arc and submits
+        // from per-connection threads; that requires Send + Sync
+        // (mpsc::Sender is Sync since Rust 1.72)
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Service>();
+        assert_send_sync::<Arc<Service>>();
+    }
+
+    #[test]
+    fn snapshot_with_merges_extra_sections() {
+        use crate::util::json::Json;
+        let s = svc(1);
+        let mut section = std::collections::BTreeMap::new();
+        section.insert("frames_in".to_string(), Json::Num(3.0));
+        let snap = s.snapshot_with(&[("_server", Json::Obj(section))]);
+        // the extra section and the stock ones coexist
+        let srv = snap.get("_server").unwrap();
+        assert_eq!(srv.get("frames_in").unwrap().as_f64().unwrap(), 3.0);
+        assert!(snap.get("_admission").is_some());
+        assert!(snap.get("_plan_cache").is_some());
     }
 
     #[test]

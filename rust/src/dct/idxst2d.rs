@@ -99,6 +99,66 @@ impl IdxstCombo {
         }
         times
     }
+
+    /// Batched forward: `batch` row-major `n1 x n2` inputs packed
+    /// contiguously in `xs`, outputs packed the same way. The
+    /// zero-boundary shift and sign folds sweep each block around one
+    /// inner [`Idct2::forward_batch`] call, so the whole batch shares
+    /// the stage-fused path; bit-identical to per-item
+    /// [`IdxstCombo::forward`]. The zero row/column each shifted block
+    /// carries is written explicitly — pooled scratch buffers are not
+    /// re-zeroed.
+    pub fn forward_batch(&self, xs: &[f64], out: &mut [f64], batch: usize) {
+        let (n1, n2) = (self.n1, self.n2);
+        let numel = n1 * n2;
+        assert_eq!(xs.len(), numel * batch);
+        assert_eq!(out.len(), numel * batch);
+        if batch == 0 {
+            return;
+        }
+        let mut shifted = crate::util::scratch::take_f64(numel * batch);
+        for (xb, sb) in xs.chunks_exact(numel).zip(shifted.chunks_exact_mut(numel)) {
+            match self.combo {
+                Combo::IdctIdxst => {
+                    // S_rows: row 0 -> zeros, row k -> x[n1-k]
+                    sb[..n2].fill(0.0);
+                    for k in 1..n1 {
+                        sb[k * n2..(k + 1) * n2]
+                            .copy_from_slice(&xb[(n1 - k) * n2..(n1 - k + 1) * n2]);
+                    }
+                }
+                Combo::IdxstIdct => {
+                    // S_cols: col 0 -> zeros, col k -> x[:, n2-k]
+                    for r in 0..n1 {
+                        sb[r * n2] = 0.0;
+                        for k in 1..n2 {
+                            sb[r * n2 + k] = xb[r * n2 + (n2 - k)];
+                        }
+                    }
+                }
+            }
+        }
+        self.idct.forward_batch(&shifted, out, batch);
+        for ob in out.chunks_exact_mut(numel) {
+            match self.combo {
+                Combo::IdctIdxst => {
+                    for k1 in (1..n1).step_by(2) {
+                        for v in &mut ob[k1 * n2..(k1 + 1) * n2] {
+                            *v = -*v;
+                        }
+                    }
+                }
+                Combo::IdxstIdct => {
+                    for r in 0..n1 {
+                        for k2 in (1..n2).step_by(2) {
+                            ob[r * n2 + k2] = -ob[r * n2 + k2];
+                        }
+                    }
+                }
+            }
+        }
+        crate::util::scratch::give_f64(shifted);
+    }
 }
 
 #[cfg(test)]
@@ -127,6 +187,26 @@ mod tests {
             plan.forward(&x, &mut out);
             check_close(&out, &idxst_idct_direct(&x, n1, n2), 1e-9)
         });
+    }
+
+    #[test]
+    fn forward_batch_matches_solo_bitwise() {
+        let mut rng = crate::util::rng::Rng::new(56);
+        for combo in [Combo::IdctIdxst, Combo::IdxstIdct] {
+            for &(n1, n2) in &[(5usize, 7usize), (8, 8), (1, 6)] {
+                let numel = n1 * n2;
+                let batch = 3;
+                let xs = rng.normal_vec(numel * batch);
+                let plan = IdxstCombo::new(n1, n2, combo);
+                let mut want = vec![0.0; numel * batch];
+                for (b, w) in want.chunks_mut(numel).enumerate() {
+                    plan.forward(&xs[b * numel..(b + 1) * numel], w);
+                }
+                let mut got = vec![0.0; numel * batch];
+                plan.forward_batch(&xs, &mut got, batch);
+                assert_eq!(got, want, "{combo:?} ({n1},{n2})");
+            }
+        }
     }
 
     #[test]

@@ -22,6 +22,9 @@
 //! * [`coordinator`] — transform service: plans, batching, band-sharded
 //!   execution of large requests ([`coordinator::shard`]), workers,
 //!   metrics
+//! * [`server`] — blocking-TCP wire front-end: length-framed
+//!   incremental JSON ([`server::proto`]) mapped 1:1 onto the service
+//!   lifecycle (typed error frames for deadline / shed / panic)
 //! * [`apps`] — image compression & electrostatic placement built on top
 //! * [`bench`] — harness regenerating every paper table/figure
 //! * [`obs`]  — cross-layer tracing: zero-overhead-when-disabled spans
@@ -67,3 +70,4 @@ pub mod coordinator;
 pub mod obs;
 pub mod parallel;
 pub mod runtime;
+pub mod server;

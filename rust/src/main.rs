@@ -4,11 +4,16 @@
 //!   info                          library + backend report
 //!   transform --op <op> --n1 A [--n2 B] [--seed S] [--pjrt]
 //!                                 run one transform on random data
-//!   serve --requests N [--workers W] [--pjrt] [--deadline-ms D]
-//!         [--max-inflight E] [--fault SPEC]
-//!                                 throughput demo of the service loop
-//!                                 (lifecycle knobs mirror MDDCT_DEADLINE_MS /
-//!                                 MDDCT_MAX_INFLIGHT / MDDCT_FAULT)
+//!   serve --port P [--workers W] [--max-conns C] [--pjrt]
+//!         [--deadline-ms D] [--max-inflight E] [--fault SPEC]
+//!                                 TCP front-end (length-framed JSON wire
+//!                                 protocol, see README); also honours
+//!                                 MDDCT_PORT / MDDCT_BIND / MDDCT_MAX_CONNS /
+//!                                 MDDCT_MAX_FRAME_BYTES. Without --port or
+//!                                 MDDCT_PORT, falls back to the in-process
+//!                                 throughput demo (--requests N); lifecycle
+//!                                 knobs mirror MDDCT_DEADLINE_MS /
+//!                                 MDDCT_MAX_INFLIGHT / MDDCT_FAULT
 //!   compress --n 512 --eps 10     whole-image compression case study
 //!   place --bench adaptec1 --iters 8
 //!                                 electrostatic placement case study
@@ -20,8 +25,8 @@
 use mddct::apps::{Compressor, PlacementEngine, SolverBackend, ISPD2005};
 use mddct::cli::Args;
 use mddct::coordinator::{BatchPolicy, Router, Service, ServiceConfig, TransformOp};
-use mddct::dct::Algo1d;
 use mddct::runtime::{Manifest, PjrtHandle, DEFAULT_ARTIFACT_DIR};
+use mddct::server::{Server, ServerConfig};
 use mddct::util::rng::Rng;
 
 fn main() {
@@ -41,28 +46,6 @@ fn main() {
         }
     };
     std::process::exit(code);
-}
-
-fn parse_op(name: &str) -> Option<TransformOp> {
-    Some(match name {
-        "dct2d" => TransformOp::Dct2d,
-        "idct2d" => TransformOp::Idct2d,
-        "rc_dct2d" => TransformOp::RcDct2d,
-        "rc_idct2d" => TransformOp::RcIdct2d,
-        "dct1d" | "dct1d_n" => TransformOp::Dct1d(Algo1d::NPoint),
-        "dct1d_4n" => TransformOp::Dct1d(Algo1d::FourN),
-        "dct1d_2n_mirror" => TransformOp::Dct1d(Algo1d::Mirror2N),
-        "dct1d_2n_pad" => TransformOp::Dct1d(Algo1d::Pad2N),
-        "idct1d" => TransformOp::Idct1d,
-        "idxst1d" => TransformOp::Idxst1d,
-        "idct_idxst" => TransformOp::IdctIdxst,
-        "idxst_idct" => TransformOp::IdxstIdct,
-        "dct3d" => TransformOp::Dct3d,
-        "idct3d" => TransformOp::Idct3d,
-        "dst2d" => TransformOp::Dst2d,
-        "idst2d" => TransformOp::Idst2d,
-        _ => return None,
-    })
 }
 
 fn make_router(args: &Args) -> Router {
@@ -126,7 +109,7 @@ fn cmd_info(args: &Args) -> i32 {
 
 fn cmd_transform(args: &Args) -> i32 {
     let op_name = args.flag_str("op", "dct2d");
-    let Some(op) = parse_op(op_name) else {
+    let Some(op) = TransformOp::parse(op_name) else {
         eprintln!("unknown op '{op_name}'");
         return 2;
     };
@@ -158,6 +141,30 @@ fn cmd_transform(args: &Args) -> i32 {
 }
 
 fn cmd_serve(args: &Args) -> i32 {
+    // TCP mode: `--port P` (0 = ephemeral) or the MDDCT_PORT env knob
+    let port_flag = args.flag_opt_usize("port");
+    if port_flag.is_some() || std::env::var_os("MDDCT_PORT").is_some() {
+        let mut cfg = ServerConfig::default();
+        if let Some(p) = port_flag.and_then(|p| u16::try_from(p).ok()) {
+            cfg.port = p;
+        }
+        if let Some(c) = args.flag_opt_usize("max-conns") {
+            cfg.max_conns = c;
+        }
+        let svc = std::sync::Arc::new(service(args));
+        let server = match Server::start(cfg, svc) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("serve failed to bind: {e}");
+                return 1;
+            }
+        };
+        println!("mddct serving on {} (frame = 4-byte BE length + JSON)", server.addr());
+        loop {
+            std::thread::park();
+        }
+    }
+    // fallback: in-process throughput demo
     let requests = args.flag_usize("requests", 256);
     let n = args.flag_usize("n", 256);
     let svc = service(args);
@@ -234,7 +241,7 @@ fn cmd_place(args: &Args) -> i32 {
 
 fn cmd_trace(args: &Args) -> i32 {
     let op_name = args.flag_str("op", "dct2d");
-    let Some(op) = parse_op(op_name) else {
+    let Some(op) = TransformOp::parse(op_name) else {
         eprintln!("unknown op '{op_name}'");
         return 2;
     };

@@ -1,0 +1,114 @@
+//! Per-connection frame loop: read a frame, answer a frame.
+//!
+//! Each accepted socket gets one blocking reader thread running
+//! [`handle_conn`]. Every request frame produces exactly one reply
+//! frame, in order, so clients may pipeline. Decode failures answer a
+//! typed `invalid_request` error frame; framing violations (truncated
+//! or oversized frames) answer one best-effort error frame and close
+//! the connection, since the stream offset can no longer be trusted.
+
+use std::io;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::proto;
+use super::ServerStats;
+use crate::coordinator::{Handle, Service, TransformError};
+
+/// Everything a connection thread needs, cloned per connection.
+pub(crate) struct ConnCtx {
+    pub(crate) service: Arc<Service>,
+    pub(crate) stats: Arc<ServerStats>,
+    pub(crate) max_frame_bytes: usize,
+}
+
+/// Serve one connection until EOF, a framing violation, or a socket
+/// error.
+pub(crate) fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
+    let _ = stream.set_nodelay(true);
+    loop {
+        match proto::read_frame(&mut stream, ctx.max_frame_bytes) {
+            Ok(None) => break,
+            Ok(Some(body)) => {
+                ctx.stats.add_frame_in(body.len());
+                let reply = respond(&body, ctx);
+                ctx.stats.add_frame_out(reply.len());
+                if proto::write_frame(&mut stream, reply.as_bytes()).is_err() {
+                    break;
+                }
+            }
+            Err(e)
+                if e.kind() == io::ErrorKind::InvalidData
+                    || e.kind() == io::ErrorKind::UnexpectedEof =>
+            {
+                // framing violation: answer once, then close
+                ctx.stats.record_decode_error();
+                let reply =
+                    proto::encode_error(0, &TransformError::InvalidRequest(e.to_string()));
+                let reply_len = reply.len();
+                if proto::write_frame(&mut stream, reply.as_bytes()).is_ok() {
+                    ctx.stats.add_frame_out(reply_len);
+                }
+                break;
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// Map one request body to one reply body.
+fn respond(body: &[u8], ctx: &ConnCtx) -> String {
+    match proto::decode_request(body) {
+        Err(e) => {
+            ctx.stats.record_decode_error();
+            proto::encode_error(0, &e)
+        }
+        Ok(proto::WireMsg::Metrics) => {
+            let snap = ctx.service.snapshot_with(&[("_server", ctx.stats.snapshot())]);
+            proto::encode_metrics_reply(&snap)
+        }
+        Ok(proto::WireMsg::Transform(req)) => serve_transform(req, ctx),
+    }
+}
+
+/// Submit a wire request's blocks and assemble the reply. A wire batch
+/// of B blocks becomes B individual submits — the service batcher
+/// co-batches same-plan work on its own — so the concatenated output is
+/// bit-identical to B direct [`Service::transform`] calls.
+fn serve_transform(req: proto::WireRequest, ctx: &ConnCtx) -> String {
+    let numel = req.data.len() / req.batch; // decoder guarantees batch >= 1 and exact division
+    let deadline =
+        req.deadline_ms.map(|ms| Instant::now().checked_add(Duration::from_millis(ms)));
+    let mut handles: Vec<Handle> = Vec::with_capacity(req.batch);
+    for b in 0..req.batch {
+        let block = req.data[b * numel..(b + 1) * numel].to_vec();
+        let submitted = match deadline {
+            // explicit wire deadline (a checked_add overflow means
+            // "effectively unbounded", i.e. no deadline)
+            Some(d) => ctx.service.submit_with_deadline(req.op, req.shape.clone(), block, d),
+            None => ctx.service.submit(req.op, req.shape.clone(), block),
+        };
+        match submitted {
+            Ok(h) => handles.push(h),
+            // dropping already-submitted handles cancels them
+            Err(e) => return proto::encode_error(req.id, &e),
+        }
+    }
+    let mut out: Vec<f64> = Vec::with_capacity(req.data.len());
+    let mut backend = "native";
+    let mut latency_ms = 0.0f64;
+    let mut co_batch = 1usize;
+    for h in handles {
+        match h.wait() {
+            Ok(resp) => {
+                out.extend_from_slice(&resp.output);
+                backend = resp.backend;
+                latency_ms = latency_ms.max(resp.latency * 1e3);
+                co_batch = co_batch.max(resp.batch_size);
+            }
+            Err(e) => return proto::encode_error(req.id, &e),
+        }
+    }
+    proto::encode_response(req.id, backend, co_batch, latency_ms, &out)
+}

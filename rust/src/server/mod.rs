@@ -1,0 +1,422 @@
+//! L4 server: dependency-free blocking-TCP front-end over the
+//! coordinator service.
+//!
+//! * [`proto`] — length-framed incremental JSON wire protocol (frame
+//!   I/O, request/reply encode/decode, the
+//!   [`TransformError`](crate::util::error::TransformError) <-> wire
+//!   error-code mapping)
+//! * `conn` — per-connection frame loop (one blocking reader thread per
+//!   accepted socket; one reply frame per request frame, in order)
+//!
+//! [`Server::start`] binds a listener and spawns an accept thread; each
+//! accepted connection gets its own thread sharing one
+//! [`Arc<Service>`]. Connections over
+//! [`ServerConfig::max_conns`] are answered with a single `overloaded`
+//! error frame and closed. Dropping the [`Server`] shuts everything
+//! down: the accept loop is poked awake, live sockets are shut down,
+//! and every thread is joined.
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use mddct::coordinator::{Service, ServiceConfig};
+//! use mddct::server::{Server, ServerConfig};
+//!
+//! let svc = Arc::new(Service::start_native(ServiceConfig::default()));
+//! let server = Server::start(ServerConfig::default(), svc).unwrap();
+//! println!("listening on {}", server.addr());
+//! # drop(server);
+//! ```
+//!
+//! Environment knobs (all optional): `MDDCT_BIND` (default
+//! `127.0.0.1`), `MDDCT_PORT` (default [`DEFAULT_PORT`]),
+//! `MDDCT_MAX_CONNS` (default [`DEFAULT_MAX_CONNS`]),
+//! `MDDCT_MAX_FRAME_BYTES` (default
+//! [`proto::DEFAULT_MAX_FRAME_BYTES`]).
+
+#![warn(missing_docs)]
+
+mod conn;
+pub mod proto;
+
+use std::collections::HashMap;
+use std::io;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::{Service, TransformError};
+use crate::util::json::Json;
+
+/// Default TCP port when `MDDCT_PORT` is unset and no `--port` is given.
+pub const DEFAULT_PORT: u16 = 7243;
+
+/// Default cap on concurrently served connections
+/// (`MDDCT_MAX_CONNS`).
+pub const DEFAULT_MAX_CONNS: usize = 256;
+
+/// Retry hint attached to the `overloaded` frame a connection over the
+/// cap receives before being closed.
+const CONN_RETRY_AFTER: Duration = Duration::from_millis(50);
+
+fn env_u16(name: &str) -> Option<u16> {
+    crate::util::env_usize(name).and_then(|v| u16::try_from(v).ok())
+}
+
+/// TCP front-end configuration. [`ServerConfig::default`] reads the
+/// `MDDCT_BIND` / `MDDCT_PORT` / `MDDCT_MAX_CONNS` /
+/// `MDDCT_MAX_FRAME_BYTES` environment knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Address to bind (`MDDCT_BIND`, default `127.0.0.1`).
+    pub bind: String,
+    /// TCP port; 0 asks the OS for an ephemeral port (`MDDCT_PORT`).
+    pub port: u16,
+    /// Cap on concurrently served connections (`MDDCT_MAX_CONNS`).
+    pub max_conns: usize,
+    /// Cap on a single frame body in bytes (`MDDCT_MAX_FRAME_BYTES`).
+    pub max_frame_bytes: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            bind: std::env::var("MDDCT_BIND").unwrap_or_else(|_| "127.0.0.1".to_string()),
+            port: env_u16("MDDCT_PORT").unwrap_or(DEFAULT_PORT),
+            max_conns: crate::util::env_usize("MDDCT_MAX_CONNS").unwrap_or(DEFAULT_MAX_CONNS),
+            max_frame_bytes: crate::util::env_usize("MDDCT_MAX_FRAME_BYTES")
+                .unwrap_or(proto::DEFAULT_MAX_FRAME_BYTES),
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Same config on an OS-assigned ephemeral port (tests, loopback
+    /// benches).
+    pub fn ephemeral() -> ServerConfig {
+        ServerConfig { port: 0, ..ServerConfig::default() }
+    }
+}
+
+/// Wire-level counters, exported as the `_server` section of the
+/// metrics snapshot. All counters are monotonic except `active_conns`,
+/// which is a gauge.
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    /// Connections accepted and served.
+    pub accepted_conns: AtomicU64,
+    /// Connections currently being served (gauge).
+    pub active_conns: AtomicU64,
+    /// Connections shed at the [`ServerConfig::max_conns`] cap.
+    pub rejected_conns: AtomicU64,
+    /// Request frames received.
+    pub frames_in: AtomicU64,
+    /// Reply frames sent.
+    pub frames_out: AtomicU64,
+    /// Bytes received (frame bodies + length prefixes).
+    pub bytes_in: AtomicU64,
+    /// Bytes sent (frame bodies + length prefixes).
+    pub bytes_out: AtomicU64,
+    /// Frames rejected as malformed (framing or JSON decode failures).
+    pub decode_errors: AtomicU64,
+}
+
+impl ServerStats {
+    /// Fresh zeroed counters.
+    pub fn new() -> ServerStats {
+        ServerStats::default()
+    }
+
+    pub(crate) fn add_frame_in(&self, body_len: usize) {
+        self.frames_in.fetch_add(1, Ordering::Relaxed);
+        self.bytes_in.fetch_add(body_len as u64 + 4, Ordering::Relaxed);
+    }
+
+    pub(crate) fn add_frame_out(&self, body_len: usize) {
+        self.frames_out.fetch_add(1, Ordering::Relaxed);
+        self.bytes_out.fetch_add(body_len as u64 + 4, Ordering::Relaxed);
+    }
+
+    pub(crate) fn record_decode_error(&self) {
+        self.decode_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Counters as a JSON object (the `_server` snapshot section).
+    pub fn snapshot(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        let mut put = |k: &str, v: &AtomicU64| {
+            m.insert(k.to_string(), Json::Num(v.load(Ordering::Relaxed) as f64));
+        };
+        put("accepted_conns", &self.accepted_conns);
+        put("active_conns", &self.active_conns);
+        put("bytes_in", &self.bytes_in);
+        put("bytes_out", &self.bytes_out);
+        put("decode_errors", &self.decode_errors);
+        put("frames_in", &self.frames_in);
+        put("frames_out", &self.frames_out);
+        put("rejected_conns", &self.rejected_conns);
+        Json::Obj(m)
+    }
+}
+
+/// State shared between the accept loop, connection threads, and
+/// shutdown.
+struct Shared {
+    /// Stream clones by connection id, so shutdown can unblock readers.
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    /// Join handles for spawned connection threads.
+    joins: Mutex<Vec<JoinHandle<()>>>,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A running TCP front-end. Dropping it shuts the listener and every
+/// live connection down and joins all threads.
+pub struct Server {
+    addr: SocketAddr,
+    stats: Arc<ServerStats>,
+    stop: Arc<AtomicBool>,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `config.bind:config.port` and start serving `service`.
+    pub fn start(config: ServerConfig, service: Arc<Service>) -> io::Result<Server> {
+        let listener = TcpListener::bind((config.bind.as_str(), config.port))?;
+        let addr = listener.local_addr()?;
+        let stats = Arc::new(ServerStats::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let shared = Arc::new(Shared {
+            conns: Mutex::new(HashMap::new()),
+            joins: Mutex::new(Vec::new()),
+        });
+        let accept = {
+            let (stats, stop, shared) = (stats.clone(), stop.clone(), shared.clone());
+            let (max_conns, max_frame_bytes) = (config.max_conns, config.max_frame_bytes);
+            std::thread::Builder::new().name("mddct-accept".into()).spawn(move || {
+                let mut next_conn: u64 = 0;
+                for incoming in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let stream = match incoming {
+                        Ok(s) => s,
+                        Err(_) => continue,
+                    };
+                    if stats.active_conns.load(Ordering::SeqCst) >= max_conns as u64 {
+                        stats.rejected_conns.fetch_add(1, Ordering::Relaxed);
+                        let mut s = stream;
+                        let reply = proto::encode_error(
+                            0,
+                            &TransformError::Overloaded { retry_after: CONN_RETRY_AFTER },
+                        );
+                        let _ = proto::write_frame(&mut s, reply.as_bytes());
+                        continue; // drop closes the socket
+                    }
+                    stats.accepted_conns.fetch_add(1, Ordering::Relaxed);
+                    stats.active_conns.fetch_add(1, Ordering::SeqCst);
+                    let conn_id = next_conn;
+                    next_conn += 1;
+                    if let Ok(clone) = stream.try_clone() {
+                        lock(&shared.conns).insert(conn_id, clone);
+                    }
+                    let ctx = conn::ConnCtx {
+                        service: service.clone(),
+                        stats: stats.clone(),
+                        max_frame_bytes,
+                    };
+                    let (shared2, stats2) = (shared.clone(), stats.clone());
+                    let join = std::thread::Builder::new()
+                        .name(format!("mddct-conn-{conn_id}"))
+                        .spawn(move || {
+                            conn::handle_conn(stream, &ctx);
+                            stats2.active_conns.fetch_sub(1, Ordering::SeqCst);
+                            lock(&shared2.conns).remove(&conn_id);
+                        })
+                        .expect("spawn connection thread");
+                    lock(&shared.joins).push(join);
+                }
+            })?
+        };
+        Ok(Server { addr, stats, stop, shared, accept: Some(accept) })
+    }
+
+    /// The bound address (carries the OS-assigned port when the config
+    /// asked for port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Wire-level counters for this server.
+    pub fn stats(&self) -> &Arc<ServerStats> {
+        &self.stats
+    }
+
+    /// Stop accepting, shut every live connection down, and join all
+    /// threads. Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // poke the accept loop out of its blocking `incoming()`
+        let poke = if self.addr.ip().is_unspecified() {
+            SocketAddr::from(([127, 0, 0, 1], self.addr.port()))
+        } else {
+            self.addr
+        };
+        let _ = TcpStream::connect(poke);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        // unblock reader threads parked in read_frame
+        for (_, s) in lock(&self.shared.conns).drain() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        let joins: Vec<_> = lock(&self.shared.joins).drain(..).collect();
+        for j in joins {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{ServiceConfig, TransformOp};
+    use std::io::Write;
+
+    fn serve(max_conns: usize) -> (Server, Arc<Service>) {
+        let svc = Arc::new(Service::start_native(ServiceConfig {
+            workers: 2,
+            ..ServiceConfig::default()
+        }));
+        let cfg = ServerConfig { max_conns, ..ServerConfig::ephemeral() };
+        let server = Server::start(cfg, svc.clone()).unwrap();
+        (server, svc)
+    }
+
+    fn roundtrip(stream: &mut TcpStream, body: &str) -> proto::WireReply {
+        proto::write_frame(stream, body.as_bytes()).unwrap();
+        let reply = proto::read_frame(stream, proto::DEFAULT_MAX_FRAME_BYTES).unwrap().unwrap();
+        proto::decode_reply(&reply).unwrap()
+    }
+
+    #[test]
+    fn serves_a_transform_and_counts_frames() {
+        let (server, svc) = serve(4);
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        let req = proto::WireRequest {
+            id: 3,
+            op: TransformOp::Dct2d,
+            shape: vec![4, 4],
+            batch: 1,
+            deadline_ms: None,
+            data: (0..16).map(|i| i as f64).collect(),
+        };
+        let want = svc
+            .transform(TransformOp::Dct2d, vec![4, 4], (0..16).map(|i| i as f64).collect())
+            .unwrap();
+        match roundtrip(&mut stream, &proto::encode_request(&req)) {
+            proto::WireReply::Ok { id, data, .. } => {
+                assert_eq!(id, 3);
+                assert_eq!(data, want.output);
+            }
+            other => panic!("wanted ok reply, got {other:?}"),
+        }
+        assert_eq!(server.stats().frames_in.load(Ordering::Relaxed), 1);
+        assert_eq!(server.stats().frames_out.load(Ordering::Relaxed), 1);
+        assert!(server.stats().bytes_in.load(Ordering::Relaxed) > 4);
+    }
+
+    #[test]
+    fn malformed_json_gets_a_typed_error_frame() {
+        let (server, _svc) = serve(4);
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        match roundtrip(&mut stream, "{not json") {
+            proto::WireReply::Err { error: TransformError::InvalidRequest(_), .. } => {}
+            other => panic!("wanted invalid_request frame, got {other:?}"),
+        }
+        assert_eq!(server.stats().decode_errors.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn oversized_frame_answers_once_and_closes() {
+        let (server, _svc) = serve(4);
+        let cfg_max = proto::DEFAULT_MAX_FRAME_BYTES;
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream.write_all(&u32::MAX.to_be_bytes()).unwrap();
+        stream.flush().unwrap();
+        let reply = proto::read_frame(&mut stream, cfg_max).unwrap().unwrap();
+        match proto::decode_reply(&reply).unwrap() {
+            proto::WireReply::Err { error: TransformError::InvalidRequest(m), .. } => {
+                assert!(m.contains("exceeds cap"), "{m}");
+            }
+            other => panic!("wanted invalid_request frame, got {other:?}"),
+        }
+        // server closed its side after the violation
+        assert!(proto::read_frame(&mut stream, cfg_max).unwrap().is_none());
+        drop(server);
+    }
+
+    #[test]
+    fn metrics_route_merges_the_server_section() {
+        let (server, _svc) = serve(4);
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        match roundtrip(&mut stream, &proto::encode_metrics_request()) {
+            proto::WireReply::Metrics(snap) => {
+                let frames = snap
+                    .get("_server")
+                    .and_then(|s| s.get("frames_in"))
+                    .and_then(Json::as_f64);
+                assert_eq!(frames, Some(1.0));
+                assert!(snap.get("_admission").is_some(), "service sections survive the merge");
+            }
+            other => panic!("wanted metrics reply, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn connections_over_the_cap_are_shed_with_overloaded() {
+        let (server, _svc) = serve(1);
+        let mut keep = TcpStream::connect(server.addr()).unwrap();
+        // ensure the first connection is fully registered before probing
+        match roundtrip(&mut keep, &proto::encode_metrics_request()) {
+            proto::WireReply::Metrics(_) => {}
+            other => panic!("wanted metrics reply, got {other:?}"),
+        }
+        let mut extra = TcpStream::connect(server.addr()).unwrap();
+        let reply =
+            proto::read_frame(&mut extra, proto::DEFAULT_MAX_FRAME_BYTES).unwrap().unwrap();
+        match proto::decode_reply(&reply).unwrap() {
+            proto::WireReply::Err { error: TransformError::Overloaded { .. }, .. } => {}
+            other => panic!("wanted overloaded frame, got {other:?}"),
+        }
+        assert_eq!(server.stats().rejected_conns.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_unblocks_idle_connections() {
+        let (mut server, _svc) = serve(4);
+        let mut idle = TcpStream::connect(server.addr()).unwrap();
+        match roundtrip(&mut idle, &proto::encode_metrics_request()) {
+            proto::WireReply::Metrics(_) => {}
+            other => panic!("wanted metrics reply, got {other:?}"),
+        }
+        server.shutdown();
+        server.shutdown();
+        assert!(
+            proto::read_frame(&mut idle, proto::DEFAULT_MAX_FRAME_BYTES)
+                .map(|f| f.is_none())
+                .unwrap_or(true),
+            "idle connection is released by shutdown"
+        );
+    }
+}

@@ -1,0 +1,549 @@
+//! Wire protocol for the TCP front-end: length-framed incremental JSON.
+//!
+//! A frame is a 4-byte big-endian `u32` length prefix followed by that
+//! many bytes of UTF-8 JSON. Requests decode through the pull-based
+//! [`JsonReader`](crate::util::json::JsonReader) straight into the
+//! transform buffer — no intermediate DOM — and replies serialize
+//! zero-copy from the output slice via
+//! [`JsonWriter`](crate::util::json::JsonWriter).
+//!
+//! Request body:
+//!
+//! ```json
+//! {"op":"dct2d","shape":[8,8],"batch":1,"id":7,"deadline_ms":250,"data":[...]}
+//! ```
+//!
+//! `id`, `batch`, and `deadline_ms` are optional (`0`, `1`, and "no
+//! explicit deadline"). `{"op":"metrics"}` routes to the observability
+//! snapshot instead of a transform. Replies are either
+//!
+//! ```json
+//! {"ok":true,"id":7,"backend":"native","batch":4,"latency_ms":0.4,"data":[...]}
+//! ```
+//!
+//! or a typed error frame mirroring
+//! [`TransformError`](crate::util::error::TransformError):
+//!
+//! ```json
+//! {"ok":false,"id":7,"error":"overloaded","message":"...","retryable":true,"retry_after_ms":5}
+//! ```
+//!
+//! Every decode failure — truncated frame, oversized prefix, malformed
+//! JSON, non-finite number, wrong payload length — is a typed
+//! [`TransformError::InvalidRequest`], never a panic; the fuzz harness
+//! (`tests/fuzz_wire.rs`) holds the protocol to that contract.
+
+use std::io::{self, Read, Write};
+use std::time::Duration;
+
+use crate::coordinator::TransformOp;
+use crate::util::error::TransformError;
+use crate::util::json::{Json, JsonReader, JsonWriter};
+
+/// Default cap on a single frame body (64 MiB); override with
+/// `MDDCT_MAX_FRAME_BYTES`.
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Write one length-prefixed frame (4-byte big-endian length, then the
+/// body) to `w`.
+pub fn write_frame(w: &mut impl Write, body: &[u8]) -> io::Result<()> {
+    let len = u32::try_from(body.len()).map_err(|_| {
+        io::Error::new(io::ErrorKind::InvalidInput, "frame body exceeds u32 length prefix")
+    })?;
+    w.write_all(&len.to_be_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Pull one frame out of an in-memory buffer. Returns `Ok(None)` on an
+/// empty buffer (clean end of stream), `Ok(Some((body, consumed)))` on
+/// a complete frame, and a typed [`TransformError::InvalidRequest`] for
+/// a truncated prefix, a truncated body, or a length prefix above
+/// `max_bytes`. This is the allocation-free entry point the fuzz and
+/// property harnesses drive.
+pub fn read_frame_slice(
+    buf: &[u8],
+    max_bytes: usize,
+) -> Result<Option<(&[u8], usize)>, TransformError> {
+    if buf.is_empty() {
+        return Ok(None);
+    }
+    if buf.len() < 4 {
+        return Err(invalid(&format!("truncated length prefix: {} of 4 bytes", buf.len())));
+    }
+    let len = u32::from_be_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    if len > max_bytes {
+        return Err(invalid(&format!("frame length {len} exceeds cap {max_bytes}")));
+    }
+    match buf.len() - 4 {
+        have if have < len => {
+            Err(invalid(&format!("truncated frame: need {len} body bytes, have {have}")))
+        }
+        _ => Ok(Some((&buf[4..4 + len], 4 + len))),
+    }
+}
+
+/// Read one frame from a stream. Returns `Ok(None)` on clean EOF before
+/// any prefix byte. A prefix above `max_bytes` maps to
+/// [`io::ErrorKind::InvalidData`]; EOF mid-frame surfaces as
+/// [`io::ErrorKind::UnexpectedEof`] from `read_exact`.
+pub fn read_frame(r: &mut impl Read, max_bytes: usize) -> io::Result<Option<Vec<u8>>> {
+    let mut first = [0u8; 1];
+    loop {
+        match r.read(&mut first) {
+            Ok(0) => return Ok(None),
+            Ok(_) => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    let mut rest = [0u8; 3];
+    r.read_exact(&mut rest)?;
+    let len = u32::from_be_bytes([first[0], rest[0], rest[1], rest[2]]) as usize;
+    if len > max_bytes {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds cap {max_bytes}"),
+        ));
+    }
+    // Growth is driven by what actually arrives, so a hostile prefix
+    // under the cap still cannot force a large up-front allocation.
+    let mut body = Vec::new();
+    let mut taken = r.take(len as u64);
+    taken.read_to_end(&mut body)?;
+    if body.len() < len {
+        return Err(io::Error::new(
+            io::ErrorKind::UnexpectedEof,
+            format!("truncated frame: need {len} body bytes, have {}", body.len()),
+        ));
+    }
+    Ok(Some(body))
+}
+
+/// One decoded transform request as it appears on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireRequest {
+    /// Client-chosen correlation id, echoed verbatim in the reply.
+    pub id: u64,
+    /// Which transform to run.
+    pub op: TransformOp,
+    /// Logical shape of ONE payload block.
+    pub shape: Vec<usize>,
+    /// Number of contiguous blocks packed in `data` (>= 1).
+    pub batch: usize,
+    /// Relative deadline in milliseconds; `None` inherits the service
+    /// default.
+    pub deadline_ms: Option<u64>,
+    /// Row-major payload, `numel(shape) * batch` elements.
+    pub data: Vec<f64>,
+}
+
+/// A decoded request frame: either a transform or the metrics route.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireMsg {
+    /// Run a transform.
+    Transform(WireRequest),
+    /// Return the service observability snapshot (`{"op":"metrics"}`).
+    Metrics,
+}
+
+/// A decoded reply frame (client side of the protocol).
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireReply {
+    /// Successful transform.
+    Ok {
+        /// Echoed correlation id.
+        id: u64,
+        /// Backend that executed the request (`native` / `pjrt`).
+        backend: String,
+        /// Largest server-side co-batch the request's blocks rode in.
+        batch: usize,
+        /// Worker-observed execution latency, milliseconds.
+        latency_ms: f64,
+        /// Transform output, blocks concatenated in request order.
+        data: Vec<f64>,
+    },
+    /// Typed error frame reconstructed into the originating
+    /// [`TransformError`].
+    Err {
+        /// Echoed correlation id (0 when decode failed before the id).
+        id: u64,
+        /// The reconstructed error.
+        error: TransformError,
+    },
+    /// Metrics snapshot (DOM — cold path).
+    Metrics(Json),
+}
+
+fn invalid(msg: &str) -> TransformError {
+    TransformError::InvalidRequest(format!("wire: {msg}"))
+}
+
+/// Decode one request body. All failures are typed
+/// [`TransformError::InvalidRequest`]; unknown keys are skipped for
+/// forward compatibility.
+pub fn decode_request(body: &[u8]) -> Result<WireMsg, TransformError> {
+    let mut r = JsonReader::new(body);
+    r.obj_begin()?;
+    let mut op: Option<String> = None;
+    let mut shape: Option<Vec<usize>> = None;
+    let mut batch: usize = 1;
+    let mut id: u64 = 0;
+    let mut deadline_ms: Option<u64> = None;
+    let mut data: Option<Vec<f64>> = None;
+    let mut first = true;
+    while let Some(key) = r.obj_key(first)? {
+        first = false;
+        match key.as_str() {
+            "op" => op = Some(r.string_value()?),
+            "shape" => {
+                let mut dims = Vec::new();
+                r.arr_begin()?;
+                let mut first_dim = true;
+                while r.arr_next(first_dim)? {
+                    first_dim = false;
+                    dims.push(r.u64_value()? as usize);
+                }
+                shape = Some(dims);
+            }
+            "batch" => batch = r.u64_value()? as usize,
+            "id" => id = r.u64_value()?,
+            "deadline_ms" => deadline_ms = Some(r.u64_value()?),
+            "data" => {
+                let mut v = Vec::new();
+                r.read_f64_array(&mut v)?;
+                data = Some(v);
+            }
+            _ => r.skip_value()?,
+        }
+    }
+    r.end()?;
+    let op_name = op.ok_or_else(|| invalid("missing 'op'"))?;
+    if op_name == "metrics" {
+        return Ok(WireMsg::Metrics);
+    }
+    let op = TransformOp::parse(&op_name)
+        .ok_or_else(|| invalid(&format!("unknown op '{op_name}'")))?;
+    let shape = shape.ok_or_else(|| invalid("missing 'shape'"))?;
+    let data = data.ok_or_else(|| invalid("missing 'data'"))?;
+    if batch == 0 {
+        return Err(invalid("batch must be >= 1"));
+    }
+    let numel = shape
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or_else(|| invalid(&format!("shape {shape:?} element count overflows")))?;
+    let expected = numel
+        .checked_mul(batch)
+        .ok_or_else(|| invalid(&format!("shape {shape:?} x batch {batch} overflows")))?;
+    if data.len() != expected {
+        return Err(invalid(&format!(
+            "payload has {} elements, shape {:?} x batch {} needs {}",
+            data.len(),
+            shape,
+            batch,
+            expected
+        )));
+    }
+    Ok(WireMsg::Transform(WireRequest { id, op, shape, batch, deadline_ms, data }))
+}
+
+/// Encode a transform request body (client side; also the generator the
+/// `encode(decode(x)) == x` property pins down).
+pub fn encode_request(req: &WireRequest) -> String {
+    let mut w = JsonWriter::with_capacity(64 + 20 * req.data.len());
+    w.obj_begin();
+    w.key("op").str_value(&req.op.name());
+    w.key("shape").arr_begin();
+    for &d in &req.shape {
+        w.u64_value(d as u64);
+    }
+    w.arr_end();
+    w.key("batch").u64_value(req.batch as u64);
+    w.key("id").u64_value(req.id);
+    if let Some(ms) = req.deadline_ms {
+        w.key("deadline_ms").u64_value(ms);
+    }
+    w.key("data").f64_slice(&req.data);
+    w.obj_end();
+    w.finish()
+}
+
+/// Encode the metrics-route request body.
+pub fn encode_metrics_request() -> String {
+    let mut w = JsonWriter::with_capacity(16);
+    w.obj_begin().key("op").str_value("metrics").obj_end();
+    w.finish()
+}
+
+/// Encode a successful reply; `data` serializes zero-copy from the
+/// output slice.
+pub fn encode_response(
+    id: u64,
+    backend: &str,
+    batch: usize,
+    latency_ms: f64,
+    data: &[f64],
+) -> String {
+    let mut w = JsonWriter::with_capacity(96 + 20 * data.len());
+    w.obj_begin();
+    w.key("ok").bool_value(true);
+    w.key("id").u64_value(id);
+    w.key("backend").str_value(backend);
+    w.key("batch").u64_value(batch as u64);
+    w.key("latency_ms").f64_value(latency_ms);
+    w.key("data").f64_slice(data);
+    w.obj_end();
+    w.finish()
+}
+
+/// Encode a typed error frame. `retry_after_ms` appears only on
+/// [`TransformError::Overloaded`].
+pub fn encode_error(id: u64, err: &TransformError) -> String {
+    let mut w = JsonWriter::with_capacity(128);
+    w.obj_begin();
+    w.key("ok").bool_value(false);
+    w.key("id").u64_value(id);
+    w.key("error").str_value(error_code(err));
+    let message = match err {
+        TransformError::InvalidRequest(m)
+        | TransformError::ExecutionPanicked(m)
+        | TransformError::ExecutionFailed(m) => m.clone(),
+        other => other.to_string(),
+    };
+    w.key("message").str_value(&message);
+    w.key("retryable").bool_value(err.is_retryable());
+    if let TransformError::Overloaded { retry_after } = err {
+        w.key("retry_after_ms").u64_value(retry_after.as_millis() as u64);
+    }
+    w.obj_end();
+    w.finish()
+}
+
+/// Encode the metrics-route reply around a pre-rendered snapshot.
+pub fn encode_metrics_reply(snapshot: &Json) -> String {
+    let mut w = JsonWriter::with_capacity(512);
+    w.obj_begin();
+    w.key("ok").bool_value(true);
+    w.key("metrics").raw(&snapshot.to_string());
+    w.obj_end();
+    w.finish()
+}
+
+/// Stable wire code for each [`TransformError`] variant.
+pub fn error_code(err: &TransformError) -> &'static str {
+    match err {
+        TransformError::InvalidRequest(_) => "invalid_request",
+        TransformError::DeadlineExceeded => "deadline_exceeded",
+        TransformError::Overloaded { .. } => "overloaded",
+        TransformError::ExecutionPanicked(_) => "execution_panicked",
+        TransformError::ExecutionFailed(_) => "execution_failed",
+        TransformError::ShuttingDown => "shutting_down",
+    }
+}
+
+fn error_from_code(code: &str, message: String, retry_after_ms: u64) -> TransformError {
+    match code {
+        "invalid_request" => TransformError::InvalidRequest(message),
+        "deadline_exceeded" => TransformError::DeadlineExceeded,
+        "overloaded" => {
+            TransformError::Overloaded { retry_after: Duration::from_millis(retry_after_ms) }
+        }
+        "execution_panicked" => TransformError::ExecutionPanicked(message),
+        "execution_failed" => TransformError::ExecutionFailed(message),
+        "shutting_down" => TransformError::ShuttingDown,
+        other => TransformError::InvalidRequest(format!("unknown error code '{other}'")),
+    }
+}
+
+/// Decode one reply body (client side). Error frames reconstruct the
+/// originating [`TransformError`] from the `error` code.
+pub fn decode_reply(body: &[u8]) -> Result<WireReply, TransformError> {
+    let mut r = JsonReader::new(body);
+    r.obj_begin()?;
+    let mut ok: Option<bool> = None;
+    let mut id: u64 = 0;
+    let mut backend = String::new();
+    let mut batch: usize = 1;
+    let mut latency_ms: f64 = 0.0;
+    let mut data: Vec<f64> = Vec::new();
+    let mut code: Option<String> = None;
+    let mut message = String::new();
+    let mut retry_after_ms: u64 = 0;
+    let mut metrics: Option<Json> = None;
+    let mut first = true;
+    while let Some(key) = r.obj_key(first)? {
+        first = false;
+        match key.as_str() {
+            "ok" => ok = Some(r.bool_value()?),
+            "id" => id = r.u64_value()?,
+            "backend" => backend = r.string_value()?,
+            "batch" => batch = r.u64_value()? as usize,
+            "latency_ms" => latency_ms = r.f64_value()?,
+            "data" => {
+                r.read_f64_array(&mut data)?;
+            }
+            "error" => code = Some(r.string_value()?),
+            "message" => message = r.string_value()?,
+            "retry_after_ms" => retry_after_ms = r.u64_value()?,
+            "metrics" => metrics = Some(r.value()?),
+            _ => r.skip_value()?,
+        }
+    }
+    r.end()?;
+    match ok {
+        Some(true) => match metrics {
+            Some(m) => Ok(WireReply::Metrics(m)),
+            None => Ok(WireReply::Ok { id, backend, batch, latency_ms, data }),
+        },
+        Some(false) => {
+            let code = code.ok_or_else(|| invalid("error frame missing 'error' code"))?;
+            Ok(WireReply::Err { id, error: error_from_code(&code, message, retry_after_ms) })
+        }
+        None => Err(invalid("reply missing 'ok'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_round_trip_through_a_stream() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        write_frame(&mut buf, b"world").unwrap();
+        let mut cursor = io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cursor, 1024).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut cursor, 1024).unwrap().unwrap(), b"");
+        assert_eq!(read_frame(&mut cursor, 1024).unwrap().unwrap(), b"world");
+        assert!(read_frame(&mut cursor, 1024).unwrap().is_none());
+    }
+
+    #[test]
+    fn frame_slice_reports_typed_errors() {
+        assert!(read_frame_slice(b"", 1024).unwrap().is_none());
+        for bad in [&b"\x00"[..], &b"\x00\x00\x00"[..], &b"\x00\x00\x00\x05hi"[..]] {
+            match read_frame_slice(bad, 1024) {
+                Err(TransformError::InvalidRequest(_)) => {}
+                other => panic!("wanted InvalidRequest for {bad:?}, got {other:?}"),
+            }
+        }
+        // oversized prefix is rejected before any body is touched
+        match read_frame_slice(b"\xff\xff\xff\xff", 1024) {
+            Err(TransformError::InvalidRequest(m)) => assert!(m.contains("exceeds cap")),
+            other => panic!("wanted oversized-frame error, got {other:?}"),
+        }
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"abc").unwrap();
+        write_frame(&mut buf, b"de").unwrap();
+        let (body, used) = read_frame_slice(&buf, 1024).unwrap().unwrap();
+        assert_eq!((body, used), (&b"abc"[..], 7));
+        let (body, used) = read_frame_slice(&buf[used..], 1024).unwrap().unwrap();
+        assert_eq!((body, used), (&b"de"[..], 6));
+    }
+
+    #[test]
+    fn oversized_stream_frame_is_invalid_data() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&u32::MAX.to_be_bytes());
+        let err = read_frame(&mut io::Cursor::new(buf), 1024).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn requests_round_trip() {
+        let req = WireRequest {
+            id: 42,
+            op: TransformOp::Dct2d,
+            shape: vec![3, 5],
+            batch: 2,
+            deadline_ms: Some(250),
+            data: (0..30).map(|i| i as f64 * 0.5 - 7.0).collect(),
+        };
+        let body = encode_request(&req);
+        match decode_request(body.as_bytes()).unwrap() {
+            WireMsg::Transform(back) => assert_eq!(back, req),
+            other => panic!("wanted transform, got {other:?}"),
+        }
+        match decode_request(encode_metrics_request().as_bytes()).unwrap() {
+            WireMsg::Metrics => {}
+            other => panic!("wanted metrics route, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn decode_rejects_semantic_violations_with_typed_errors() {
+        let cases: &[&str] = &[
+            r#"{"shape":[2],"data":[1.0,2.0]}"#,                       // missing op
+            r#"{"op":"nope","shape":[2],"data":[1.0,2.0]}"#,           // unknown op
+            r#"{"op":"dct2d","data":[1.0]}"#,                          // missing shape
+            r#"{"op":"dct2d","shape":[1,1]}"#,                         // missing data
+            r#"{"op":"dct2d","shape":[1,2],"batch":0,"data":[1,2]}"#,  // batch 0
+            r#"{"op":"dct2d","shape":[2,2],"data":[1.0]}"#,            // length mismatch
+            r#"{"op":"dct2d","shape":[2,2],"data":[1,2,3,"x"]}"#,      // non-number payload
+            "{",                                                       // malformed
+        ];
+        for body in cases {
+            match decode_request(body.as_bytes()) {
+                Err(TransformError::InvalidRequest(_)) => {}
+                other => panic!("wanted InvalidRequest for {body}, got {other:?}"),
+            }
+        }
+        // shape element-count overflow must be caught before multiplying
+        let huge = format!(
+            r#"{{"op":"dct2d","shape":[{m},{m}],"data":[]}}"#,
+            m = 1u64 << 40
+        );
+        match decode_request(huge.as_bytes()) {
+            Err(TransformError::InvalidRequest(m)) => assert!(m.contains("overflow")),
+            other => panic!("wanted overflow rejection, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn replies_round_trip_including_typed_errors() {
+        let body = encode_response(9, "native", 4, 0.375, &[1.5, -0.0, 2e-308]);
+        match decode_reply(body.as_bytes()).unwrap() {
+            WireReply::Ok { id, backend, batch, latency_ms, data } => {
+                assert_eq!((id, backend.as_str(), batch, latency_ms), (9, "native", 4, 0.375));
+                let bits: Vec<u64> = data.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(bits, vec![1.5f64.to_bits(), (-0.0f64).to_bits(), 2e-308f64.to_bits()]);
+            }
+            other => panic!("wanted ok reply, got {other:?}"),
+        }
+        let errors = [
+            TransformError::InvalidRequest("bad shape".into()),
+            TransformError::DeadlineExceeded,
+            TransformError::Overloaded { retry_after: Duration::from_millis(5) },
+            TransformError::ExecutionPanicked("boom".into()),
+            TransformError::ExecutionFailed("plan".into()),
+            TransformError::ShuttingDown,
+        ];
+        for err in errors {
+            let body = encode_error(7, &err);
+            match decode_reply(body.as_bytes()).unwrap() {
+                WireReply::Err { id, error } => {
+                    assert_eq!(id, 7);
+                    assert_eq!(error_code(&error), error_code(&err));
+                    assert_eq!(error.to_string(), err.to_string());
+                }
+                other => panic!("wanted error frame, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn metrics_reply_round_trips_as_dom() {
+        let snap = Json::parse(r#"{"_server":{"frames_in":3}}"#).unwrap();
+        let body = encode_metrics_reply(&snap);
+        match decode_reply(body.as_bytes()).unwrap() {
+            WireReply::Metrics(m) => {
+                let v = m.get("_server").and_then(|s| s.get("frames_in")).and_then(Json::as_f64);
+                assert_eq!(v, Some(3.0));
+            }
+            other => panic!("wanted metrics reply, got {other:?}"),
+        }
+    }
+}

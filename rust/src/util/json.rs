@@ -1,9 +1,15 @@
-//! Minimal JSON parser/writer (serde_json substitute).
+//! Minimal JSON substrate (serde_json substitute): a DOM parser/writer
+//! for small machine-generated documents (the artifact manifest, metrics
+//! dumps) plus a pull-based streaming reader/writer for the wire
+//! protocol (`crate::server`), where request payloads parse directly
+//! into the transform buffer and replies serialize straight from the
+//! output slice — no DOM is ever materialized on the hot path.
 //!
-//! Supports the full JSON grammar minus exotic number forms; used for the
-//! artifact manifest (`artifacts/manifest.json`) and metrics dumps. The
-//! parser is a straightforward recursive-descent over bytes with proper
-//! string-escape handling; plenty for machine-generated JSON.
+//! Both parsers share the same byte-level scanner ([`JsonReader`]), so
+//! they accept the same grammar and enforce the same hardening rules:
+//! containers nest at most [`MAX_DEPTH`] levels (a hostile frame cannot
+//! overflow the stack) and numbers must be finite (`1e999` is a typed
+//! error, never `inf`).
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -56,13 +62,9 @@ impl Json {
 
     /// Parse a JSON document from text.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: text.as_bytes(), i: 0 };
-        p.skip_ws();
-        let v = p.value()?;
-        p.skip_ws();
-        if p.i != p.b.len() {
-            return Err(p.err("trailing characters"));
-        }
+        let mut r = JsonReader::new(text.as_bytes());
+        let v = dom_value(&mut r, 0)?;
+        r.end()?;
         Ok(v)
     }
 }
@@ -82,13 +84,52 @@ impl fmt::Display for JsonError {
 
 impl std::error::Error for JsonError {}
 
-struct Parser<'a> {
+/// Any JSON error arriving from the wire is a malformed request: the
+/// client sent bytes the protocol cannot accept, and retrying the
+/// identical frame can never succeed.
+impl From<JsonError> for crate::util::error::TransformError {
+    fn from(e: JsonError) -> Self {
+        crate::util::error::TransformError::InvalidRequest(format!("wire json: {e}"))
+    }
+}
+
+/// Maximum container nesting depth both parsers accept. Deep enough for
+/// any real document this crate produces (snapshots nest 3–4 levels),
+/// shallow enough that a hostile `[[[[...` frame errors out long before
+/// the recursion threatens the stack.
+pub const MAX_DEPTH: usize = 64;
+
+/// Pull-based streaming JSON reader over a byte slice.
+///
+/// The caller drives the grammar: `obj_begin`/`obj_key` and
+/// `arr_begin`/`arr_next` step through containers, scalar methods
+/// consume one value, [`JsonReader::skip_value`] discards an
+/// unrecognized field (depth-capped), and
+/// [`JsonReader::read_f64_array`] parses a numeric array *directly into
+/// a caller-owned buffer* — the wire decoder hands it the transform
+/// input vector, so payload bytes become `f64`s with no intermediate
+/// DOM or per-element allocation.
+///
+/// Every method fails with a typed [`JsonError`] carrying the byte
+/// offset; nothing panics on malformed input (the fuzz harness in
+/// `tests/fuzz_wire.rs` holds it to that).
+pub struct JsonReader<'a> {
     b: &'a [u8],
     i: usize,
 }
 
-impl<'a> Parser<'a> {
-    fn err(&self, msg: &str) -> JsonError {
+impl<'a> JsonReader<'a> {
+    /// Reader over a byte slice (usually one wire frame body).
+    pub fn new(bytes: &'a [u8]) -> JsonReader<'a> {
+        JsonReader { b: bytes, i: 0 }
+    }
+
+    /// Current byte offset (for error context).
+    pub fn offset(&self) -> usize {
+        self.i
+    }
+
+    fn fail(&self, msg: &str) -> JsonError {
         JsonError { msg: msg.to_string(), offset: self.i }
     }
 
@@ -107,88 +148,74 @@ impl<'a> Parser<'a> {
             self.i += 1;
             Ok(())
         } else {
-            Err(self.err(&format!("expected '{}'", c as char)))
+            Err(self.fail(&format!("expected '{}'", c as char)))
         }
     }
 
-    fn lit(&mut self, s: &str, v: Json) -> Result<Json, JsonError> {
+    fn lit(&mut self, s: &str) -> Result<(), JsonError> {
         if self.b[self.i..].starts_with(s.as_bytes()) {
             self.i += s.len();
-            Ok(v)
+            Ok(())
         } else {
-            Err(self.err(&format!("expected literal {s}")))
+            Err(self.fail(&format!("expected literal {s}")))
         }
     }
 
-    fn value(&mut self) -> Result<Json, JsonError> {
+    /// Consume `{`.
+    pub fn obj_begin(&mut self) -> Result<(), JsonError> {
         self.skip_ws();
-        match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
-            Some(b'"') => Ok(Json::Str(self.string()?)),
-            Some(b't') => self.lit("true", Json::Bool(true)),
-            Some(b'f') => self.lit("false", Json::Bool(false)),
-            Some(b'n') => self.lit("null", Json::Null),
-            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            _ => Err(self.err("unexpected character")),
-        }
+        self.expect(b'{')
     }
 
-    fn object(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'{')?;
-        let mut m = BTreeMap::new();
+    /// Step to the next object entry: returns its key with the `:`
+    /// consumed (the next read is the value), or `None` after consuming
+    /// the closing `}`. Pass `first = true` for the entry right after
+    /// `obj_begin`, `false` once a value has been read.
+    pub fn obj_key(&mut self, first: bool) -> Result<Option<String>, JsonError> {
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
-            return Ok(Json::Obj(m));
+            return Ok(None);
         }
-        loop {
+        if !first {
+            self.expect(b',')?;
             self.skip_ws();
-            let k = self.string()?;
-            self.skip_ws();
-            self.expect(b':')?;
-            let v = self.value()?;
-            m.insert(k, v);
-            self.skip_ws();
-            match self.peek() {
-                Some(b',') => self.i += 1,
-                Some(b'}') => {
-                    self.i += 1;
-                    return Ok(Json::Obj(m));
-                }
-                _ => return Err(self.err("expected ',' or '}'")),
-            }
         }
+        let k = self.string_value()?;
+        self.skip_ws();
+        self.expect(b':')?;
+        Ok(Some(k))
     }
 
-    fn array(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'[')?;
-        let mut v = Vec::new();
+    /// Consume `[`.
+    pub fn arr_begin(&mut self) -> Result<(), JsonError> {
+        self.skip_ws();
+        self.expect(b'[')
+    }
+
+    /// Step to the next array element: `true` = an element follows (read
+    /// it next), `false` = the closing `]` was consumed. Pass
+    /// `first = true` right after `arr_begin`.
+    pub fn arr_next(&mut self, first: bool) -> Result<bool, JsonError> {
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.i += 1;
-            return Ok(Json::Arr(v));
+            return Ok(false);
         }
-        loop {
-            v.push(self.value()?);
-            self.skip_ws();
-            match self.peek() {
-                Some(b',') => self.i += 1,
-                Some(b']') => {
-                    self.i += 1;
-                    return Ok(Json::Arr(v));
-                }
-                _ => return Err(self.err("expected ',' or ']'")),
-            }
+        if !first {
+            self.expect(b',')?;
         }
+        Ok(true)
     }
 
-    fn string(&mut self) -> Result<String, JsonError> {
+    /// Consume one string value (full escape handling, UTF-8 validated).
+    pub fn string_value(&mut self) -> Result<String, JsonError> {
+        self.skip_ws();
         self.expect(b'"')?;
         let mut s = String::new();
         loop {
             match self.peek() {
-                None => return Err(self.err("unterminated string")),
+                None => return Err(self.fail("unterminated string")),
                 Some(b'"') => {
                     self.i += 1;
                     return Ok(s);
@@ -206,17 +233,17 @@ impl<'a> Parser<'a> {
                         Some(b't') => s.push('\t'),
                         Some(b'u') => {
                             if self.i + 4 >= self.b.len() {
-                                return Err(self.err("bad \\u escape"));
+                                return Err(self.fail("bad \\u escape"));
                             }
                             let hex =
                                 std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
-                                    .map_err(|_| self.err("bad \\u escape"))?;
+                                    .map_err(|_| self.fail("bad \\u escape"))?;
                             let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
+                                .map_err(|_| self.fail("bad \\u escape"))?;
                             s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
                             self.i += 4;
                         }
-                        _ => return Err(self.err("bad escape")),
+                        _ => return Err(self.fail("bad escape")),
                     }
                     self.i += 1;
                 }
@@ -229,14 +256,19 @@ impl<'a> Parser<'a> {
                     }
                     s.push_str(
                         std::str::from_utf8(&self.b[start..self.i])
-                            .map_err(|_| self.err("invalid utf-8"))?,
+                            .map_err(|_| self.fail("invalid utf-8"))?,
                     );
                 }
             }
         }
     }
 
-    fn number(&mut self) -> Result<Json, JsonError> {
+    /// Consume one finite number. `NaN`/`Infinity` tokens never match
+    /// the grammar, and an overflowing literal (`1e999`) is rejected
+    /// rather than parsed to `inf` — the transform pipeline only ever
+    /// sees finite payloads.
+    pub fn f64_value(&mut self) -> Result<f64, JsonError> {
+        self.skip_ws();
         let start = self.i;
         if self.peek() == Some(b'-') {
             self.i += 1;
@@ -260,9 +292,331 @@ impl<'a> Parser<'a> {
             }
         }
         let txt = std::str::from_utf8(&self.b[start..self.i]).unwrap();
-        txt.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|_| self.err("bad number"))
+        let v = txt.parse::<f64>().map_err(|_| self.fail("bad number"))?;
+        if !v.is_finite() {
+            return Err(self.fail("number overflows f64"));
+        }
+        Ok(v)
+    }
+
+    /// Consume one non-negative integer (an exactly-representable
+    /// integral number; `2.5`, negatives, and values past 2^53 fail).
+    pub fn u64_value(&mut self) -> Result<u64, JsonError> {
+        let at = self.i;
+        let v = self.f64_value()?;
+        if v < 0.0 || v.fract() != 0.0 || v > 9007199254740992.0 {
+            return Err(JsonError {
+                msg: format!("expected unsigned integer, got {v}"),
+                offset: at,
+            });
+        }
+        Ok(v as u64)
+    }
+
+    /// Consume `true` or `false`.
+    pub fn bool_value(&mut self) -> Result<bool, JsonError> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b't') => self.lit("true").map(|_| true),
+            Some(b'f') => self.lit("false").map(|_| false),
+            _ => Err(self.fail("expected bool")),
+        }
+    }
+
+    /// Consume `null`.
+    pub fn null_value(&mut self) -> Result<(), JsonError> {
+        self.skip_ws();
+        self.lit("null")
+    }
+
+    /// Consume a numeric array, appending each element to `out` — the
+    /// wire decoder's zero-DOM payload path. Returns the element count.
+    pub fn read_f64_array(&mut self, out: &mut Vec<f64>) -> Result<usize, JsonError> {
+        self.arr_begin()?;
+        let mut first = true;
+        let mut n = 0usize;
+        while self.arr_next(first)? {
+            first = false;
+            out.push(self.f64_value()?);
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Discard one value of any type (unknown fields stay
+    /// forward-compatible). Depth-capped at [`MAX_DEPTH`].
+    pub fn skip_value(&mut self) -> Result<(), JsonError> {
+        self.skip_value_depth(0)
+    }
+
+    fn skip_value_depth(&mut self, depth: usize) -> Result<(), JsonError> {
+        if depth > MAX_DEPTH {
+            return Err(self.fail("nesting too deep"));
+        }
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => {
+                self.obj_begin()?;
+                let mut first = true;
+                while self.obj_key(first)?.is_some() {
+                    first = false;
+                    self.skip_value_depth(depth + 1)?;
+                }
+                Ok(())
+            }
+            Some(b'[') => {
+                self.arr_begin()?;
+                let mut first = true;
+                while self.arr_next(first)? {
+                    first = false;
+                    self.skip_value_depth(depth + 1)?;
+                }
+                Ok(())
+            }
+            Some(b'"') => self.string_value().map(|_| ()),
+            Some(b't' | b'f') => self.bool_value().map(|_| ()),
+            Some(b'n') => self.null_value(),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.f64_value().map(|_| ()),
+            _ => Err(self.fail("unexpected character")),
+        }
+    }
+
+    /// Consume one value of any type as a DOM [`Json`] — for cold paths
+    /// like a metrics snapshot embedded in a reply frame. Depth-capped
+    /// at [`MAX_DEPTH`].
+    pub fn value(&mut self) -> Result<Json, JsonError> {
+        dom_value(self, 0)
+    }
+
+    /// Assert the input is exhausted (only trailing whitespace left).
+    pub fn end(&mut self) -> Result<(), JsonError> {
+        self.skip_ws();
+        if self.i != self.b.len() {
+            return Err(self.fail("trailing characters"));
+        }
+        Ok(())
+    }
+}
+
+/// DOM construction on top of the streaming reader (shared grammar,
+/// shared depth cap).
+fn dom_value(r: &mut JsonReader, depth: usize) -> Result<Json, JsonError> {
+    if depth > MAX_DEPTH {
+        return Err(r.fail("nesting too deep"));
+    }
+    r.skip_ws();
+    match r.peek() {
+        Some(b'{') => {
+            r.obj_begin()?;
+            let mut m = BTreeMap::new();
+            let mut first = true;
+            while let Some(k) = r.obj_key(first)? {
+                first = false;
+                m.insert(k, dom_value(r, depth + 1)?);
+            }
+            Ok(Json::Obj(m))
+        }
+        Some(b'[') => {
+            r.arr_begin()?;
+            let mut v = Vec::new();
+            let mut first = true;
+            while r.arr_next(first)? {
+                first = false;
+                v.push(dom_value(r, depth + 1)?);
+            }
+            Ok(Json::Arr(v))
+        }
+        Some(b'"') => Ok(Json::Str(r.string_value()?)),
+        Some(b't' | b'f') => Ok(Json::Bool(r.bool_value()?)),
+        Some(b'n') => {
+            r.null_value()?;
+            Ok(Json::Null)
+        }
+        Some(c) if c == b'-' || c.is_ascii_digit() => Ok(Json::Num(r.f64_value()?)),
+        _ => Err(r.fail("unexpected character")),
+    }
+}
+
+/// Escape a string into `out` per the JSON grammar (the writer-side
+/// twin of [`JsonReader::string_value`]).
+fn escape_into(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                use fmt::Write as _;
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Streaming JSON writer: appends tokens to one growing `String` with a
+/// comma-state stack, so a reply frame is serialized in a single pass
+/// with no intermediate values. [`JsonWriter::f64_slice`] streams a
+/// numeric array straight from a borrowed slice — the wire encoder
+/// hands it the transform output buffer directly.
+///
+/// `f64` values print via Rust's shortest-round-trip formatting, so
+/// `decode(encode(x))` is bit-identical for every finite value
+/// (including `-0.0` and subnormals); non-finite values are written as
+/// `null` (the reader side rejects non-finite numbers, so a round trip
+/// through the wire never manufactures them).
+pub struct JsonWriter {
+    s: String,
+    stack: Vec<bool>,
+    suppress: bool,
+}
+
+impl Default for JsonWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JsonWriter {
+    /// Empty writer.
+    pub fn new() -> JsonWriter {
+        Self::with_capacity(64)
+    }
+
+    /// Writer with a pre-sized output buffer (one allocation for a
+    /// reply whose payload size is known).
+    pub fn with_capacity(cap: usize) -> JsonWriter {
+        JsonWriter { s: String::with_capacity(cap), stack: Vec::new(), suppress: false }
+    }
+
+    /// Comma bookkeeping: emit a separator unless this is the first
+    /// element at the current level or the value right after a key.
+    fn sep(&mut self) {
+        if self.suppress {
+            self.suppress = false;
+            return;
+        }
+        if let Some(first_done) = self.stack.last_mut() {
+            if *first_done {
+                self.s.push(',');
+            } else {
+                *first_done = true;
+            }
+        }
+    }
+
+    /// Open an object.
+    pub fn obj_begin(&mut self) -> &mut Self {
+        self.sep();
+        self.s.push('{');
+        self.stack.push(false);
+        self
+    }
+
+    /// Close the current object.
+    pub fn obj_end(&mut self) -> &mut Self {
+        self.stack.pop();
+        self.s.push('}');
+        self
+    }
+
+    /// Open an array.
+    pub fn arr_begin(&mut self) -> &mut Self {
+        self.sep();
+        self.s.push('[');
+        self.stack.push(false);
+        self
+    }
+
+    /// Close the current array.
+    pub fn arr_end(&mut self) -> &mut Self {
+        self.stack.pop();
+        self.s.push(']');
+        self
+    }
+
+    /// Object key (escaped); the next value call attaches to it.
+    pub fn key(&mut self, k: &str) -> &mut Self {
+        self.sep();
+        escape_into(&mut self.s, k);
+        self.s.push(':');
+        self.suppress = true;
+        self
+    }
+
+    /// String value (escaped).
+    pub fn str_value(&mut self, v: &str) -> &mut Self {
+        self.sep();
+        escape_into(&mut self.s, v);
+        self
+    }
+
+    /// Finite `f64` value in shortest-round-trip form (`null` when
+    /// non-finite).
+    pub fn f64_value(&mut self, v: f64) -> &mut Self {
+        self.sep();
+        if v.is_finite() {
+            use fmt::Write as _;
+            let _ = write!(self.s, "{v}");
+        } else {
+            self.s.push_str("null");
+        }
+        self
+    }
+
+    /// Unsigned integer value.
+    pub fn u64_value(&mut self, v: u64) -> &mut Self {
+        self.sep();
+        use fmt::Write as _;
+        let _ = write!(self.s, "{v}");
+        self
+    }
+
+    /// Boolean value.
+    pub fn bool_value(&mut self, v: bool) -> &mut Self {
+        self.sep();
+        self.s.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    /// `null`.
+    pub fn null_value(&mut self) -> &mut Self {
+        self.sep();
+        self.s.push_str("null");
+        self
+    }
+
+    /// Embed pre-rendered JSON verbatim (e.g. a metrics snapshot's
+    /// `Display` output) as one value.
+    pub fn raw(&mut self, json: &str) -> &mut Self {
+        self.sep();
+        self.s.push_str(json);
+        self
+    }
+
+    /// Stream a borrowed slice as a numeric array — the zero-copy reply
+    /// path: output elements go from the transform buffer to wire bytes
+    /// without an intermediate collection.
+    pub fn f64_slice(&mut self, xs: &[f64]) -> &mut Self {
+        self.arr_begin();
+        for &x in xs {
+            self.f64_value(x);
+        }
+        self.arr_end()
+    }
+
+    /// The serialized document so far.
+    pub fn as_str(&self) -> &str {
+        &self.s
+    }
+
+    /// Finish and take the serialized document.
+    pub fn finish(self) -> String {
+        self.s
     }
 }
 
@@ -367,5 +721,126 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(Default::default()));
+    }
+
+    #[test]
+    fn rejects_nonfinite_numbers_as_typed_errors() {
+        // overflow must not become inf — the transform pipeline is
+        // guaranteed finite inputs by the decoder
+        assert!(Json::parse("1e999").is_err());
+        assert!(Json::parse("-1e999").is_err());
+        let mut r = JsonReader::new(b"1e999");
+        assert!(r.f64_value().is_err());
+        // NaN / Infinity tokens never match the grammar
+        assert!(Json::parse("NaN").is_err());
+        assert!(Json::parse("Infinity").is_err());
+        // underflow is fine (rounds to zero)
+        assert_eq!(Json::parse("1e-999").unwrap(), Json::Num(0.0));
+    }
+
+    #[test]
+    fn depth_cap_rejects_hostile_nesting_without_overflow() {
+        // far past MAX_DEPTH: must return a typed error, not blow the
+        // stack (this is the fuzz harness's deep-nesting class)
+        let hostile = "[".repeat(100_000);
+        assert!(Json::parse(&hostile).is_err());
+        let mut r = JsonReader::new(hostile.as_bytes());
+        assert!(r.skip_value().is_err());
+        // exactly at the cap still parses
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn streaming_reader_pulls_objects_and_arrays() {
+        let doc = br#" {"op":"dct2d", "shape":[8, 8], "extra":{"deep":[1,2]}, "data":[1.5,-2.0]} "#;
+        let mut r = JsonReader::new(doc);
+        r.obj_begin().unwrap();
+        let mut first = true;
+        let mut data: Vec<f64> = Vec::new();
+        let mut shape: Vec<u64> = Vec::new();
+        let mut op = String::new();
+        while let Some(k) = r.obj_key(first).unwrap() {
+            first = false;
+            match k.as_str() {
+                "op" => op = r.string_value().unwrap(),
+                "shape" => {
+                    r.arr_begin().unwrap();
+                    let mut f = true;
+                    while r.arr_next(f).unwrap() {
+                        f = false;
+                        shape.push(r.u64_value().unwrap());
+                    }
+                }
+                "data" => {
+                    assert_eq!(r.read_f64_array(&mut data).unwrap(), 2);
+                }
+                _ => r.skip_value().unwrap(),
+            }
+        }
+        r.end().unwrap();
+        assert_eq!(op, "dct2d");
+        assert_eq!(shape, [8, 8]);
+        assert_eq!(data, [1.5, -2.0]);
+    }
+
+    #[test]
+    fn u64_value_rejects_fractions_and_negatives() {
+        assert_eq!(JsonReader::new(b"42").u64_value().unwrap(), 42);
+        assert!(JsonReader::new(b"2.5").u64_value().is_err());
+        assert!(JsonReader::new(b"-1").u64_value().is_err());
+        assert!(JsonReader::new(b"1e20").u64_value().is_err());
+        // scientific notation for an exact integer is accepted
+        assert_eq!(JsonReader::new(b"1e3").u64_value().unwrap(), 1000);
+    }
+
+    #[test]
+    fn writer_builds_documents_the_reader_accepts() {
+        let mut w = JsonWriter::new();
+        w.obj_begin();
+        w.key("ok").bool_value(true);
+        w.key("id").u64_value(7);
+        w.key("msg").str_value("a \"quoted\"\nline");
+        w.key("data").f64_slice(&[1.5, -0.0, 3e-300]);
+        w.key("nested").obj_begin();
+        w.key("empty").arr_begin();
+        w.arr_end();
+        w.obj_end();
+        w.obj_end();
+        let doc = w.finish();
+        let v = Json::parse(&doc).unwrap();
+        assert_eq!(v.get("ok").unwrap(), &Json::Bool(true));
+        assert_eq!(v.get("id").unwrap().as_f64().unwrap(), 7.0);
+        assert_eq!(v.get("msg").unwrap().as_str().unwrap(), "a \"quoted\"\nline");
+        assert_eq!(v.get("nested").unwrap().get("empty").unwrap(), &Json::Arr(vec![]));
+    }
+
+    #[test]
+    fn writer_f64_round_trips_bit_identically() {
+        let edge = [
+            0.0,
+            -0.0,
+            1.0,
+            -1.5,
+            1e300,
+            -1e300,
+            f64::MIN_POSITIVE,
+            5e-324, // smallest subnormal
+            std::f64::consts::PI,
+            123456789.123456789,
+        ];
+        let mut w = JsonWriter::new();
+        w.f64_slice(&edge);
+        let doc = w.finish();
+        let mut back = Vec::new();
+        JsonReader::new(doc.as_bytes()).read_f64_array(&mut back).unwrap();
+        assert_eq!(back.len(), edge.len());
+        for (a, b) in edge.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+        // non-finite writes null (readable, but typed-rejected as f64)
+        let mut w = JsonWriter::new();
+        w.f64_value(f64::NAN);
+        assert_eq!(w.finish(), "null");
     }
 }

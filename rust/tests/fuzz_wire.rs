@@ -1,0 +1,246 @@
+//! Seeded fuzz sweep over the wire decoder: no input may panic, OOM,
+//! or produce anything other than a clean decode or a typed
+//! `TransformError::InvalidRequest`.
+//!
+//! Inputs are grown from valid frames by a seeded mutator
+//! (`util::rng`): byte flips, truncation, splices, length-prefix
+//! corruption, hostile token injection (`NaN`, `Infinity`, `1e999`,
+//! deep nesting), and raw random bytes (usually non-UTF8). Every input
+//! runs through `read_frame_slice` + `decode_request` under
+//! `catch_unwind`; a panic or an unexpected error variant fails the
+//! test with the seed, iteration, and a hex dump for replay.
+//!
+//! Knobs: `MDDCT_FUZZ_SEED` (default 20260808, always logged) and
+//! `MDDCT_FUZZ_ITERS` (default 10_000).
+
+use mddct::coordinator::TransformOp;
+use mddct::server::proto::{self, WireRequest};
+use mddct::util::error::TransformError;
+use mddct::util::rng::Rng;
+
+const MAX_FRAME: usize = 1 << 20;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn hex(bytes: &[u8]) -> String {
+    let shown = &bytes[..bytes.len().min(256)];
+    let mut s: String = shown.iter().map(|b| format!("{b:02x}")).collect();
+    if bytes.len() > shown.len() {
+        s.push_str(&format!("... ({} bytes total)", bytes.len()));
+    }
+    s
+}
+
+/// A small pool of valid frames the mutator grows from, so mutations
+/// explore the "almost valid" space where parser bugs live.
+fn seed_corpus() -> Vec<Vec<u8>> {
+    let reqs = [
+        WireRequest {
+            id: 1,
+            op: TransformOp::Dct2d,
+            shape: vec![4, 4],
+            batch: 1,
+            deadline_ms: None,
+            data: (0..16).map(|i| i as f64 - 7.5).collect(),
+        },
+        WireRequest {
+            id: u64::MAX >> 12,
+            op: TransformOp::IdxstIdct,
+            shape: vec![3, 5],
+            batch: 2,
+            deadline_ms: Some(250),
+            data: (0..30).map(|i| (i as f64) * 1e-3).collect(),
+        },
+        WireRequest {
+            id: 0,
+            op: TransformOp::Dct3d,
+            shape: vec![2, 3, 4],
+            batch: 1,
+            deadline_ms: Some(0),
+            data: vec![0.0; 24],
+        },
+    ];
+    let mut corpus: Vec<Vec<u8>> = Vec::new();
+    for r in &reqs {
+        let body = proto::encode_request(r);
+        let mut frame = Vec::new();
+        proto::write_frame(&mut frame, body.as_bytes()).unwrap();
+        corpus.push(frame);
+    }
+    let mut metrics = Vec::new();
+    proto::write_frame(&mut metrics, proto::encode_metrics_request().as_bytes()).unwrap();
+    corpus.push(metrics);
+    corpus
+}
+
+/// One seeded mutation: pick a corpus entry, apply 1..=4 mutators.
+fn mutate(rng: &mut Rng, corpus: &[Vec<u8>]) -> Vec<u8> {
+    let mut buf = corpus[rng.below(corpus.len())].clone();
+    for _ in 0..rng.range(1, 4) {
+        match rng.below(8) {
+            // flip random bytes
+            0 => {
+                for _ in 0..rng.range(1, 8) {
+                    if !buf.is_empty() {
+                        let i = rng.below(buf.len());
+                        buf[i] ^= rng.next_u64() as u8;
+                    }
+                }
+            }
+            // truncate anywhere, including inside the length prefix
+            1 => buf.truncate(rng.below(buf.len() + 1)),
+            // corrupt the length prefix (oversized / mismatched)
+            2 => {
+                let word = (rng.next_u64() as u32).to_be_bytes();
+                for (i, b) in word.iter().enumerate() {
+                    if i < buf.len() {
+                        buf[i] = *b;
+                    }
+                }
+            }
+            // splice a chunk of another corpus entry into the body
+            3 => {
+                let other = &corpus[rng.below(corpus.len())];
+                let at = rng.below(buf.len() + 1);
+                let from = rng.below(other.len());
+                let upto = rng.range(from, other.len());
+                let tail: Vec<u8> = buf.split_off(at);
+                buf.extend_from_slice(&other[from..upto]);
+                buf.extend_from_slice(&tail);
+            }
+            // inject hostile JSON tokens into the body
+            4 => {
+                let tok: &[u8] = [
+                    &b"NaN"[..],
+                    b"Infinity",
+                    b"-Infinity",
+                    b"1e999",
+                    b"-1e999",
+                    b"1e-999",
+                    b"18446744073709551616",
+                    b"\"\\udead\"",
+                ][rng.below(8)];
+                let at = 4.min(buf.len()) + rng.below(buf.len().saturating_sub(4) + 1);
+                let tail: Vec<u8> = buf.split_off(at.min(buf.len()));
+                buf.extend_from_slice(tok);
+                buf.extend_from_slice(&tail);
+            }
+            // wrap the payload in deep nesting
+            5 => {
+                let depth = rng.range(1, 200);
+                let mut body = vec![b'['; depth];
+                body.extend_from_slice(&buf[4.min(buf.len())..]);
+                body.extend_from_slice(&vec![b']'; depth]);
+                buf = frame(&body);
+            }
+            // raw random bytes (usually non-UTF8 garbage)
+            6 => {
+                let n = rng.range(0, 128);
+                buf = (0..n + 4).map(|_| rng.next_u64() as u8).collect();
+            }
+            // duplicate the buffer (multi-frame / trailing garbage)
+            7 => {
+                let copy = buf.clone();
+                buf.extend_from_slice(&copy);
+            }
+            _ => unreachable!(),
+        }
+        if buf.len() > MAX_FRAME + 8 {
+            buf.truncate(MAX_FRAME + 8);
+        }
+    }
+    buf
+}
+
+fn frame(body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(body.len() + 4);
+    proto::write_frame(&mut out, body).unwrap();
+    out
+}
+
+/// Decode one fuzz input the way a connection would: frame first, then
+/// body. Returns whether the input was accepted (for the accept-rate
+/// log line); any non-InvalidRequest failure panics with diagnostics.
+fn check_one(input: &[u8], seed: u64, iter: u64) -> bool {
+    let outcome = std::panic::catch_unwind(|| {
+        match proto::read_frame_slice(input, MAX_FRAME) {
+            Ok(None) => Ok(false),
+            Err(TransformError::InvalidRequest(_)) => Ok(false),
+            Err(other) => Err(format!("frame error not typed InvalidRequest: {other:?}")),
+            Ok(Some((body, _))) => match proto::decode_request(body) {
+                Ok(_) => Ok(true),
+                Err(TransformError::InvalidRequest(_)) => Ok(false),
+                Err(other) => Err(format!("decode error not typed InvalidRequest: {other:?}")),
+            },
+        }
+    });
+    match outcome {
+        Ok(Ok(accepted)) => accepted,
+        Ok(Err(msg)) => {
+            panic!("fuzz_wire seed={seed} iter={iter}: {msg}\ninput: {}", hex(input))
+        }
+        Err(_) => {
+            panic!("fuzz_wire seed={seed} iter={iter}: decoder PANICKED\ninput: {}", hex(input))
+        }
+    }
+}
+
+#[test]
+fn fuzz_decoder_never_panics_and_rejections_are_typed() {
+    let seed = env_u64("MDDCT_FUZZ_SEED", 20_260_808);
+    let iters = env_u64("MDDCT_FUZZ_ITERS", 10_000);
+    println!("fuzz_wire: seed={seed} iters={iters} (MDDCT_FUZZ_SEED / MDDCT_FUZZ_ITERS)");
+    let corpus = seed_corpus();
+    let mut rng = Rng::new(seed);
+    let mut accepted = 0u64;
+    for iter in 0..iters {
+        let input = mutate(&mut rng, &corpus);
+        if check_one(&input, seed, iter) {
+            accepted += 1;
+        }
+    }
+    println!(
+        "fuzz_wire: {iters} inputs, {accepted} still decoded cleanly ({:.1}%), zero panics",
+        100.0 * accepted as f64 / iters.max(1) as f64
+    );
+}
+
+#[test]
+fn hostile_nesting_is_rejected_without_stack_overflow() {
+    // unknown keys run through skip_value, the recursive path a depth
+    // bomb targets; far past MAX_DEPTH, unbounded recursion would blow
+    // the stack long before finishing
+    let mut arrays = b"{\"junk\":".to_vec();
+    arrays.extend_from_slice(&vec![b'['; 100_000]);
+    arrays.extend_from_slice(&vec![b']'; 100_000]);
+    arrays.push(b'}');
+    match proto::decode_request(&arrays) {
+        Err(TransformError::InvalidRequest(_)) => {}
+        other => panic!("wanted typed rejection, got {other:?}"),
+    }
+    let objects = "{\"junk\":".repeat(5_000) + "0" + &"}".repeat(5_000);
+    match proto::decode_request(objects.as_bytes()) {
+        Err(TransformError::InvalidRequest(_)) => {}
+        other => panic!("wanted typed rejection, got {other:?}"),
+    }
+}
+
+#[test]
+fn nonfinite_and_nonutf8_payloads_are_typed_rejections() {
+    let cases: &[&[u8]] = &[
+        br#"{"op":"dct2d","shape":[1,1],"data":[NaN]}"#,
+        br#"{"op":"dct2d","shape":[1,1],"data":[Infinity]}"#,
+        br#"{"op":"dct2d","shape":[1,1],"data":[1e999]}"#,
+        br#"{"op":"dct2d","shape":[1,1],"data":[-1e999]}"#,
+        b"{\"op\":\"dct2d\",\"shape\":[1,1],\"data\":[1.0],\"x\":\"\xff\xfe\"}",
+        b"\xff\xff\xff\xff",
+    ];
+    for body in cases {
+        match proto::decode_request(body) {
+            Err(TransformError::InvalidRequest(_)) => {}
+            other => panic!("wanted typed rejection for {:?}, got {other:?}", hex(body)),
+        }
+    }
+}

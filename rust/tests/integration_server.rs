@@ -1,0 +1,272 @@
+//! End-to-end loopback integration for the TCP front-end (the ISSUE's
+//! "mddct serve" acceptance path): concurrent mixed-shape clients over
+//! real sockets must get results *bit-identical* to direct in-process
+//! [`Service`] calls, and the PR-7 lifecycle must surface over the wire
+//! as typed error frames — a queued request whose deadline lapses comes
+//! back `deadline_exceeded`, a request the admission budget cannot
+//! admit comes back `overloaded` with a retry hint. The metrics route
+//! returns one merged document whose `_server` section counts the very
+//! frames this test sent.
+//!
+//! The lifecycle tests hold the single worker busy with the PR-7 fault
+//! layer (`delay:execute`), which is process-global — those tests
+//! serialize on one mutex and clear the spec on exit, exactly like
+//! `tests/fault_injection.rs`.
+
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use mddct::coordinator::{BatchPolicy, Service, ServiceConfig, TransformError, TransformOp};
+use mddct::parallel::{ExecPolicy, ShardPolicy};
+use mddct::server::proto::{self, WireReply, WireRequest};
+use mddct::server::{Server, ServerConfig};
+use mddct::util::json::Json;
+use mddct::util::rng::Rng;
+
+fn cfg(workers: usize) -> ServiceConfig {
+    ServiceConfig {
+        workers,
+        batch: BatchPolicy::default(),
+        exec: ExecPolicy::Serial,
+        shard: ShardPolicy::Auto,
+        trace: false,
+        default_deadline: None,
+        max_inflight_elems: usize::MAX,
+    }
+}
+
+fn serve(config: ServiceConfig) -> (Server, Arc<Service>) {
+    let svc = Arc::new(Service::start_native(config));
+    let server = Server::start(ServerConfig::ephemeral(), svc.clone()).expect("bind ephemeral");
+    (server, svc)
+}
+
+/// One blocking request/reply exchange on an open connection.
+fn exchange(stream: &mut TcpStream, body: &str) -> WireReply {
+    proto::write_frame(stream, body.as_bytes()).expect("write frame");
+    let reply = proto::read_frame(stream, proto::DEFAULT_MAX_FRAME_BYTES)
+        .expect("read frame")
+        .expect("reply before EOF");
+    proto::decode_reply(&reply).expect("decode reply")
+}
+
+/// The ISSUE's mixed-shape request stream: pow2 and Bluestein 2D, a
+/// fused combo, 1D, and a 3D volume.
+fn request_mix() -> Vec<(TransformOp, Vec<usize>)> {
+    vec![
+        (TransformOp::Dct2d, vec![8, 8]),
+        (TransformOp::Idct2d, vec![9, 15]),
+        (TransformOp::IdctIdxst, vec![8, 12]),
+        (TransformOp::Dct1d(mddct::dct::Algo1d::NPoint), vec![16]),
+        (TransformOp::Dct3d, vec![4, 4, 4]),
+    ]
+}
+
+#[test]
+fn concurrent_mixed_shape_clients_are_bit_equal_to_direct_calls() {
+    let (server, svc) = serve(cfg(2));
+    let addr = server.addr();
+    let clients: Vec<_> = (0..4u64)
+        .map(|c| {
+            let svc = svc.clone();
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).expect("connect");
+                let mut rng = Rng::new(0xC0FFEE + c);
+                for (round, (op, shape)) in request_mix().into_iter().enumerate() {
+                    let numel: usize = shape.iter().product();
+                    let data = rng.normal_vec(numel);
+                    // the in-process oracle: same service, same plans
+                    let want =
+                        svc.transform(op, shape.clone(), data.clone()).expect("direct call");
+                    let req = WireRequest {
+                        id: c * 100 + round as u64,
+                        op,
+                        shape: shape.clone(),
+                        batch: 1,
+                        deadline_ms: None,
+                        data,
+                    };
+                    match exchange(&mut stream, &proto::encode_request(&req)) {
+                        WireReply::Ok { id, data, .. } => {
+                            assert_eq!(id, req.id, "client {c} round {round}: id echo");
+                            assert_eq!(
+                                data.len(),
+                                want.output.len(),
+                                "client {c} round {round}: length"
+                            );
+                            for (i, (g, w)) in data.iter().zip(&want.output).enumerate() {
+                                assert_eq!(
+                                    g.to_bits(),
+                                    w.to_bits(),
+                                    "client {c} {op:?} {shape:?} elem {i}: wire vs direct"
+                                );
+                            }
+                        }
+                        other => panic!("client {c} round {round}: wanted ok, got {other:?}"),
+                    }
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().expect("client thread");
+    }
+    // 4 clients x 5 requests, one reply frame each
+    let stats = server.stats();
+    assert_eq!(stats.frames_in.load(std::sync::atomic::Ordering::Relaxed), 20);
+    assert_eq!(stats.frames_out.load(std::sync::atomic::Ordering::Relaxed), 20);
+}
+
+#[test]
+fn wire_batch_equals_per_block_direct_calls() {
+    let (server, svc) = serve(cfg(2));
+    let mut stream = TcpStream::connect(server.addr()).expect("connect");
+    let (n1, n2, batch) = (9usize, 7usize, 3usize);
+    let mut rng = Rng::new(31);
+    let data = rng.normal_vec(n1 * n2 * batch);
+    let mut want: Vec<f64> = Vec::with_capacity(data.len());
+    for b in 0..batch {
+        let block = data[b * n1 * n2..(b + 1) * n1 * n2].to_vec();
+        want.extend_from_slice(
+            &svc.transform(TransformOp::Idct2d, vec![n1, n2], block).expect("direct").output,
+        );
+    }
+    let req = WireRequest {
+        id: 5,
+        op: TransformOp::Idct2d,
+        shape: vec![n1, n2],
+        batch,
+        deadline_ms: None,
+        data,
+    };
+    match exchange(&mut stream, &proto::encode_request(&req)) {
+        WireReply::Ok { data, .. } => {
+            assert_eq!(data.len(), want.len());
+            for (g, w) in data.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "batched wire vs per-block direct");
+            }
+        }
+        other => panic!("wanted ok reply, got {other:?}"),
+    }
+}
+
+#[test]
+fn metrics_route_reports_the_traffic_this_connection_sent() {
+    let (server, svc) = serve(cfg(1));
+    let mut stream = TcpStream::connect(server.addr()).expect("connect");
+    let mut rng = Rng::new(7);
+    let req = WireRequest {
+        id: 1,
+        op: TransformOp::Dct2d,
+        shape: vec![8, 8],
+        batch: 1,
+        deadline_ms: None,
+        data: rng.normal_vec(64),
+    };
+    match exchange(&mut stream, &proto::encode_request(&req)) {
+        WireReply::Ok { .. } => {}
+        other => panic!("wanted ok reply, got {other:?}"),
+    }
+    match exchange(&mut stream, &proto::encode_metrics_request()) {
+        WireReply::Metrics(snap) => {
+            let srv = snap.get("_server").expect("_server section");
+            // the transform frame above, counted by the time the
+            // metrics frame is answered
+            assert_eq!(srv.get("frames_in").and_then(Json::as_f64), Some(2.0));
+            assert_eq!(srv.get("accepted_conns").and_then(Json::as_f64), Some(1.0));
+            assert!(
+                snap.get("dct2d").and_then(|d| d.get("requests")).and_then(Json::as_f64)
+                    >= Some(1.0),
+                "coordinator per-op rows ride in the same document"
+            );
+            assert!(snap.get("_admission").is_some());
+        }
+        other => panic!("wanted metrics reply, got {other:?}"),
+    }
+    drop(svc);
+}
+
+/// Lifecycle tests below install process-global fault specs; serialize
+/// them (same idiom as `tests/fault_injection.rs`).
+#[cfg(not(feature = "fault-off"))]
+mod lifecycle {
+    use super::*;
+    use mddct::coordinator::{fault, parse_spec, set_faults};
+    use std::sync::{Mutex, MutexGuard};
+
+    fn guard() -> MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn req_8x8(id: u64, deadline_ms: Option<u64>, fill: f64) -> String {
+        proto::encode_request(&WireRequest {
+            id,
+            op: TransformOp::Dct2d,
+            shape: vec![8, 8],
+            batch: 1,
+            deadline_ms,
+            data: vec![fill; 64],
+        })
+    }
+
+    #[test]
+    fn queued_past_deadline_requests_come_back_as_deadline_exceeded_frames() {
+        let _g = guard();
+        set_faults(parse_spec("delay:execute:80ms").unwrap());
+        let (server, _svc) = serve(cfg(1));
+        // conn A occupies the single worker for >= 80ms
+        let mut a = TcpStream::connect(server.addr()).expect("connect A");
+        proto::write_frame(&mut a, req_8x8(1, None, 1.0).as_bytes()).expect("send A");
+        std::thread::sleep(Duration::from_millis(15));
+        // conn B's request waits behind A, so its 10ms deadline lapses
+        // in the queue and the dequeue-side admit gate answers it
+        let mut b = TcpStream::connect(server.addr()).expect("connect B");
+        match exchange(&mut b, &req_8x8(2, Some(10), 2.0)) {
+            WireReply::Err { id, error: TransformError::DeadlineExceeded } => assert_eq!(id, 2),
+            other => panic!("wanted deadline_exceeded frame, got {other:?}"),
+        }
+        // conn A's request was never expired — it completes normally
+        let reply = proto::read_frame(&mut a, proto::DEFAULT_MAX_FRAME_BYTES)
+            .expect("read A")
+            .expect("A reply");
+        match proto::decode_reply(&reply).expect("decode A") {
+            WireReply::Ok { id, .. } => assert_eq!(id, 1),
+            other => panic!("wanted ok frame for A, got {other:?}"),
+        }
+        fault::clear();
+    }
+
+    #[test]
+    fn shed_requests_come_back_as_overloaded_frames_with_a_retry_hint() {
+        let _g = guard();
+        set_faults(parse_spec("delay:execute:80ms").unwrap());
+        let (server, _svc) = serve(ServiceConfig {
+            max_inflight_elems: 64, // exactly one 8x8 payload
+            ..cfg(1)
+        });
+        // conn A takes the whole budget and holds it inside the delay
+        let mut a = TcpStream::connect(server.addr()).expect("connect A");
+        proto::write_frame(&mut a, req_8x8(1, None, 1.0).as_bytes()).expect("send A");
+        std::thread::sleep(Duration::from_millis(15));
+        // conn B arrives while the budget is held: shed at submit,
+        // surfaced as a typed overloaded frame carrying the backoff hint
+        let mut b = TcpStream::connect(server.addr()).expect("connect B");
+        match exchange(&mut b, &req_8x8(2, None, 2.0)) {
+            WireReply::Err { id, error: TransformError::Overloaded { retry_after } } => {
+                assert_eq!(id, 2);
+                assert!(retry_after > Duration::ZERO, "overloaded frame carries retry_after_ms");
+            }
+            other => panic!("wanted overloaded frame, got {other:?}"),
+        }
+        let reply = proto::read_frame(&mut a, proto::DEFAULT_MAX_FRAME_BYTES)
+            .expect("read A")
+            .expect("A reply");
+        match proto::decode_reply(&reply).expect("decode A") {
+            WireReply::Ok { id, .. } => assert_eq!(id, 1),
+            other => panic!("wanted ok frame for A, got {other:?}"),
+        }
+        fault::clear();
+    }
+}

@@ -4,6 +4,7 @@
 //! be a deliberate, test-updating change.
 
 use mddct::coordinator::Metrics;
+use mddct::server::ServerStats;
 use mddct::util::json::Json;
 
 /// Sorted keys of a JSON object (panics on non-objects).
@@ -84,6 +85,32 @@ fn snapshot_schema_is_golden() {
         reparsed.get("dct2d").unwrap().get("errors").unwrap().as_f64().unwrap(),
         1.0
     );
+}
+
+#[test]
+fn server_section_schema_is_golden() {
+    // the `_server` section the TCP front-end merges into the snapshot
+    // (via Service::snapshot_with): fixed key set, all numeric, present
+    // even on a server that has seen no traffic
+    let stats = ServerStats::new();
+    let golden_server = [
+        "accepted_conns",
+        "active_conns",
+        "bytes_in",
+        "bytes_out",
+        "decode_errors",
+        "frames_in",
+        "frames_out",
+        "rejected_conns",
+    ];
+    let snap = stats.snapshot();
+    assert_eq!(keys(&snap), golden_server);
+    for k in golden_server {
+        assert_eq!(snap.get(k).and_then(Json::as_f64), Some(0.0), "{k} starts at zero");
+    }
+    // the section survives the crate's own JSON grammar round trip
+    let reparsed = Json::parse(&snap.to_string()).unwrap();
+    assert_eq!(keys(&reparsed), golden_server);
 }
 
 #[test]

@@ -6,7 +6,7 @@
 //! so no arithmetic may change. Cross-kernel agreement stays at the
 //! usual <= 1e-10 rounding envelope.
 
-use mddct::dct::{Algo1d, Dct1d, Dct2, Dst2, Idct1d, Idct2, Idst2};
+use mddct::dct::{Algo1d, Combo, Dct1d, Dct2, Dst2, Idct1d, Idct2, Idst2, IdxstCombo};
 use mddct::fft::{onesided_len, C64, FftKernel, Rfft2Plan, RfftPlan};
 use mddct::parallel::ExecPolicy;
 use mddct::util::rng::Rng;
@@ -85,6 +85,31 @@ fn dst2_and_idst2_forward_batch_are_bit_identical_to_solo_loop() {
             let mut got = vec![0.0; numel * batch];
             idst.forward_batch(&xs, &mut got, batch);
             assert_eq!(got, want, "idst2 ({n1},{n2}) B={batch}");
+        }
+    }
+}
+
+#[test]
+fn combo_forward_batch_is_bit_identical_to_solo_loop() {
+    // the DREAMPlace combos close the carried-over batch gap: their
+    // shift/sign folds sweep per block around the inner Idct2 batch
+    // path, so the whole-batch output must stay bit-equal to B
+    // independent forwards — same contract as every plan above
+    let mut rng = Rng::new(706);
+    for combo in [Combo::IdctIdxst, Combo::IdxstIdct] {
+        for &(n1, n2) in SHAPES {
+            let numel = n1 * n2;
+            for &batch in BATCHES {
+                let xs = rng.normal_vec(numel * batch);
+                let plan = IdxstCombo::new(n1, n2, combo);
+                let mut want = vec![0.0; numel * batch];
+                for (b, w) in want.chunks_mut(numel).enumerate() {
+                    plan.forward(&xs[b * numel..(b + 1) * numel], w);
+                }
+                let mut got = vec![0.0; numel * batch];
+                plan.forward_batch(&xs, &mut got, batch);
+                assert_eq!(got, want, "{combo:?} ({n1},{n2}) B={batch}");
+            }
         }
     }
 }

@@ -1,0 +1,167 @@
+//! Wire-protocol round-trip properties: `decode(encode(x)) == x`
+//! bit-identically, across every `TransformOp`, ranks 1–3, pow2 and
+//! Bluestein shapes, batched payloads, and adversarial f64 values
+//! (-0.0, subnormals, huge magnitudes).
+
+use std::time::Duration;
+
+use mddct::coordinator::TransformOp;
+use mddct::server::proto::{self, WireMsg, WireReply, WireRequest};
+use mddct::util::error::TransformError;
+use mddct::util::rng::Rng;
+
+const BATCHES: [usize; 3] = [1, 2, 5];
+
+/// One power-of-two and one Bluestein (mixed odd-factor) shape per rank.
+fn shapes_for(rank: usize) -> Vec<Vec<usize>> {
+    match rank {
+        1 => vec![vec![16], vec![15]],
+        2 => vec![vec![8, 8], vec![9, 15]],
+        _ => vec![vec![4, 4, 4], vec![3, 5, 7]],
+    }
+}
+
+/// Random payload with the adversarial f64 values the shortest
+/// round-trip formatter must preserve spliced into the front.
+fn payload(rng: &mut Rng, n: usize) -> Vec<f64> {
+    let mut data = rng.normal_vec(n);
+    let specials = [-0.0, 5e-324, -2.2250738585072014e-308, 1e300, -1e300, 1.0 + f64::EPSILON];
+    for (slot, s) in data.iter_mut().zip(specials.iter()) {
+        *slot = *s;
+    }
+    data
+}
+
+fn assert_bits_eq(got: &[f64], want: &[f64], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{ctx}: element {i} ({g:?} vs {w:?})");
+    }
+}
+
+#[test]
+fn requests_round_trip_bit_identically_across_all_ops() {
+    let mut rng = Rng::new(0x5eed);
+    for op in TransformOp::ALL {
+        for shape in shapes_for(op.rank()) {
+            let numel: usize = shape.iter().product();
+            for batch in BATCHES {
+                // 1 << 53 is the largest deadline the integer grammar
+                // carries exactly (the decoder rejects anything above)
+                for deadline_ms in [None, Some(0), Some(250), Some(1u64 << 53)] {
+                    let req = WireRequest {
+                        id: rng.next_u64() >> 12,
+                        op,
+                        shape: shape.clone(),
+                        batch,
+                        deadline_ms,
+                        data: payload(&mut rng, numel * batch),
+                    };
+                    let body = proto::encode_request(&req);
+                    let ctx = format!("{op:?} {shape:?} batch={batch}");
+                    match proto::decode_request(body.as_bytes()) {
+                        Ok(WireMsg::Transform(back)) => {
+                            assert_eq!(back.id, req.id, "{ctx}: id");
+                            assert_eq!(back.op, req.op, "{ctx}: op");
+                            assert_eq!(back.shape, req.shape, "{ctx}: shape");
+                            assert_eq!(back.batch, req.batch, "{ctx}: batch");
+                            assert_eq!(back.deadline_ms, req.deadline_ms, "{ctx}: deadline");
+                            assert_bits_eq(&back.data, &req.data, &ctx);
+                        }
+                        other => panic!("{ctx}: decode failed: {other:?}"),
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn second_encode_is_byte_identical() {
+    // encode -> decode -> encode is a fixpoint: the wire form is
+    // canonical, so clients and fuzz corpora can compare bytes
+    let mut rng = Rng::new(77);
+    for op in [TransformOp::Dct2d, TransformOp::IdctIdxst, TransformOp::Dct3d] {
+        let shape = shapes_for(op.rank()).pop().unwrap();
+        let numel: usize = shape.iter().product();
+        let req = WireRequest {
+            id: 9,
+            op,
+            shape,
+            batch: 2,
+            deadline_ms: Some(5),
+            data: payload(&mut rng, numel * 2),
+        };
+        let first = proto::encode_request(&req);
+        let back = match proto::decode_request(first.as_bytes()) {
+            Ok(WireMsg::Transform(r)) => r,
+            other => panic!("decode failed: {other:?}"),
+        };
+        assert_eq!(proto::encode_request(&back), first);
+    }
+}
+
+#[test]
+fn replies_round_trip_bit_identically() {
+    let mut rng = Rng::new(4242);
+    for n in [0usize, 1, 7, 256] {
+        let data = payload(&mut rng, n);
+        let body = proto::encode_response(11, "native", 4, 0.125, &data);
+        match proto::decode_reply(body.as_bytes()) {
+            Ok(WireReply::Ok { id, backend, batch, latency_ms, data: back }) => {
+                assert_eq!((id, backend.as_str(), batch), (11, "native", 4));
+                assert_eq!(latency_ms.to_bits(), 0.125f64.to_bits());
+                assert_bits_eq(&back, &data, &format!("reply n={n}"));
+            }
+            other => panic!("reply n={n}: decode failed: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn error_frames_reconstruct_every_variant() {
+    let errors = [
+        TransformError::InvalidRequest("shape [0] has a zero dim".into()),
+        TransformError::InvalidRequest("weird \"quotes\" and \\ backslashes \u{1f980}".into()),
+        TransformError::DeadlineExceeded,
+        TransformError::Overloaded { retry_after: Duration::from_millis(5) },
+        TransformError::Overloaded { retry_after: Duration::from_millis(12_000) },
+        TransformError::ExecutionPanicked("worker died".into()),
+        TransformError::ExecutionFailed("plan rejected".into()),
+        TransformError::ShuttingDown,
+    ];
+    for (i, err) in errors.iter().enumerate() {
+        let body = proto::encode_error(i as u64, err);
+        match proto::decode_reply(body.as_bytes()) {
+            Ok(WireReply::Err { id, error }) => {
+                assert_eq!(id, i as u64);
+                assert_eq!(proto::error_code(&error), proto::error_code(err));
+                assert_eq!(error.to_string(), err.to_string());
+                assert_eq!(error.is_retryable(), err.is_retryable());
+            }
+            other => panic!("error {err:?}: decode failed: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn frames_round_trip_through_the_slice_reader() {
+    let mut rng = Rng::new(99);
+    let mut stream = Vec::new();
+    let mut bodies = Vec::new();
+    for _ in 0..20 {
+        let n = rng.below(64);
+        let body: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        proto::write_frame(&mut stream, &body).unwrap();
+        bodies.push(body);
+    }
+    let mut at = 0usize;
+    for (i, want) in bodies.iter().enumerate() {
+        let (body, used) = proto::read_frame_slice(&stream[at..], 1 << 20)
+            .unwrap()
+            .unwrap_or_else(|| panic!("frame {i} missing"));
+        assert_eq!(body, &want[..], "frame {i}");
+        at += used;
+    }
+    assert!(proto::read_frame_slice(&stream[at..], 1 << 20).unwrap().is_none());
+}

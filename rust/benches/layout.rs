@@ -1,0 +1,179 @@
+//! Layout-polymorphism bench: the f32 element path and the strided
+//! (zero-pack) batch path against their f64 / pack-copy baselines.
+//!
+//! Two sections:
+//! * `elem` rows — the fused 2D DCT at f32 (`Dct2F32`) vs the same
+//!   generic kernel instantiated at f64 (`GenDct2<f64>`, the
+//!   apples-to-apples baseline: identical code, element width the only
+//!   variable) and vs the tuned native `Dct2` f64 plan, per size. On a
+//!   memory-bound transform halving the element width should buy
+//!   ~1.4x+ at 1024^2 and above (`speedup_f32` = generic f64 ms / f32
+//!   ms — the acceptance criterion row);
+//! * `strided` rows — a batch of blocks living strided inside a padded
+//!   arena: gather-pack-then-`forward_batch` (what the coordinator's
+//!   packed path did for every op before layouts) vs
+//!   `forward_batch_strided` running in place over the arena.
+//!
+//! Emits a human table plus machine-readable `BENCH_layout.json`
+//! (override the path with `MDDCT_BENCH_LAYOUT_JSON`); the bench-diff
+//! CI gate tracks every row. `MDDCT_BENCH_QUICK=1` runs a CI-sized
+//! subset (which keeps 1024^2 — the acceptance size).
+//!
+//! Run: `cargo bench --bench layout`
+
+use mddct::bench::{black_box, ms, time_fn, BenchConfig, Table};
+use mddct::dct::{Dct2, Dct2F32, GenDct2};
+use mddct::layout::Layout;
+use mddct::parallel::{default_threads, ExecPolicy};
+use mddct::util::rng::Rng;
+
+fn main() {
+    let cfg = BenchConfig::from_env(BenchConfig::default());
+    let quick = std::env::var("MDDCT_BENCH_QUICK").is_ok();
+    println!(
+        "\nLayout polymorphism: f32 element path and strided batch execution \
+         ({} pool threads under auto)\n",
+        default_threads()
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+
+    // ---- elem rows: f32 vs f64 on the same generic kernel ------------
+    let sizes: &[usize] = if quick { &[256, 1024] } else { &[256, 512, 1024, 2048] };
+    let mut te = Table::new(&["n", "native f64 ms", "gen f64 ms", "f32 ms", "f32 speedup"]);
+    for &n in sizes {
+        let mut rng = Rng::new(n as u64 + 7000);
+        let x = rng.normal_vec(n * n);
+        let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+
+        let native = Dct2::with_policy(n, n, ExecPolicy::Serial);
+        let mut y = vec![0.0; n * n];
+        let native_ms = time_fn(&cfg, || {
+            native.forward(&x, &mut y);
+            black_box(&y);
+        })
+        .mean;
+
+        let gen64: GenDct2<f64> = GenDct2::new(n, n);
+        let mut y64 = vec![0.0; n * n];
+        let gen64_ms = time_fn(&cfg, || {
+            gen64.forward(&x, &mut y64);
+            black_box(&y64);
+        })
+        .mean;
+
+        let gen32 = Dct2F32::new(n, n);
+        let mut y32 = vec![0.0f32; n * n];
+        // correctness gate before timing: f32 tracks the f64 result
+        gen32.forward(&x32, &mut y32);
+        let scale = y.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+        for (g, w) in y32.iter().zip(&y) {
+            assert!(
+                (f64::from(*g) - w).abs() <= 1e-3 * scale,
+                "f32 diverged at n={n}: {g} vs {w}"
+            );
+        }
+        let f32_ms = time_fn(&cfg, || {
+            gen32.forward(&x32, &mut y32);
+            black_box(&y32);
+        })
+        .mean;
+
+        let speedup = gen64_ms / f32_ms;
+        te.row(&[
+            n.to_string(),
+            ms(native_ms),
+            ms(gen64_ms),
+            ms(f32_ms),
+            format!("{speedup:.2}x"),
+        ]);
+        json_rows.push(format!(
+            "{{\"section\": \"elem\", \"n\": {n}, \"native_f64_ms\": {:.6}, \
+             \"gen_f64_ms\": {:.6}, \"f32_ms\": {:.6}, \"speedup_f32\": {speedup:.4}}}",
+            native_ms * 1e3,
+            gen64_ms * 1e3,
+            f32_ms * 1e3
+        ));
+    }
+    te.print();
+
+    // ---- strided rows: gather-pack vs in-place strided batch ---------
+    let cases: &[(usize, usize)] = if quick { &[(16, 256)] } else { &[(16, 256), (32, 256), (64, 64)] };
+    let mut ts = Table::new(&["n", "batch", "pack ms", "strided ms", "speedup"]);
+    for &(n, batch) in cases {
+        let numel = n * n;
+        // blocks tiled along the row axis of one padded arena row-block,
+        // 2x horizontal padding between columns of each block
+        let (s2, s1) = (2usize, 2 * n + 3);
+        let span = (n - 1) * s1 + (n - 1) * s2 + 1;
+        let bstride = span + 5;
+        let layout = Layout::contiguous(&[n, n])
+            .with_strides(&[s1, s2])
+            .with_batch_stride(bstride);
+        let mut rng = Rng::new((n * 31 + batch) as u64);
+        let arena = rng.normal_vec(layout.required_len(batch));
+        let plan = Dct2::with_policy(n, n, ExecPolicy::Auto);
+        let mut out = vec![0.0; numel * batch];
+
+        // the pre-layout behaviour: gather every block into a pack
+        // buffer, then run the packed batch
+        let mut packed = vec![0.0; numel * batch];
+        let gather_pack = |packed: &mut [f64]| {
+            for b in 0..batch {
+                let base = b * bstride;
+                for i in 0..n {
+                    for j in 0..n {
+                        packed[b * numel + i * n + j] = arena[base + i * s1 + j * s2];
+                    }
+                }
+            }
+        };
+
+        // correctness gate: strided == gather-then-pack, bitwise
+        gather_pack(&mut packed);
+        let mut want = vec![0.0; numel * batch];
+        plan.forward_batch(&packed, &mut want, batch);
+        plan.forward_batch_strided(&arena, &layout, &mut out, batch);
+        assert_eq!(out, want, "strided batch diverged at n={n} batch={batch}");
+
+        let pack_ms = time_fn(&cfg, || {
+            gather_pack(&mut packed);
+            plan.forward_batch(&packed, &mut out, batch);
+            black_box(&out);
+        })
+        .mean;
+        let strided_ms = time_fn(&cfg, || {
+            plan.forward_batch_strided(&arena, &layout, &mut out, batch);
+            black_box(&out);
+        })
+        .mean;
+        let speedup = pack_ms / strided_ms;
+        ts.row(&[
+            n.to_string(),
+            batch.to_string(),
+            ms(pack_ms),
+            ms(strided_ms),
+            format!("{speedup:.2}x"),
+        ]);
+        json_rows.push(format!(
+            "{{\"section\": \"strided\", \"n\": {n}, \"batch\": {batch}, \
+             \"pack_ms\": {:.6}, \"strided_ms\": {:.6}, \"speedup\": {speedup:.4}}}",
+            pack_ms * 1e3,
+            strided_ms * 1e3
+        ));
+    }
+    println!("\nStrided batch: gather-pack + forward_batch vs forward_batch_strided in place\n");
+    ts.print();
+
+    let path = std::env::var("MDDCT_BENCH_LAYOUT_JSON")
+        .unwrap_or_else(|_| "BENCH_layout.json".to_string());
+    let doc = format!(
+        "{{\n  \"bench\": \"layout\",\n  \"threads\": {},\n  \"unit\": \"forward_ms\",\n  \
+         \"rows\": [\n    {}\n  ]\n}}\n",
+        default_threads(),
+        json_rows.join(",\n    ")
+    );
+    match std::fs::write(&path, &doc) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

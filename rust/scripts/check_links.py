@@ -1,0 +1,72 @@
+#!/usr/bin/env python3
+"""Markdown dead-link check: every *relative* link target in the repo's
+markdown docs must exist on disk.
+
+Scans all ``*.md`` files under the given root (skipping VCS/target
+dirs), extracts inline ``[text](target)`` links, and resolves each
+relative target against the containing file's directory. External
+schemes (http/https/mailto), pure in-page anchors (``#...``), and
+autolinks are ignored; a ``path#anchor`` target is checked for the
+path part only. Exit status 1 iff at least one target is missing —
+renaming DESIGN.md or a bench artifact must not leave dangling
+references in README/ARCHITECTURE.
+
+Usage:
+    check_links.py [ROOT]
+"""
+
+import os
+import re
+import sys
+
+SKIP_DIRS = {".git", "target", ".bench-baseline", "node_modules", "__pycache__"}
+
+# Generated reference dumps (arxiv retrieval output), not docs we
+# author: their figure links point at assets that were never vendored.
+SKIP_FILES = {"PAPERS.md", "SNIPPETS.md"}
+
+# inline links only: [text](target). Reference-style links are not used
+# in this repo; images ![alt](path) match too via the optional bang.
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def iter_markdown(root):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for name in filenames:
+            if name.lower().endswith(".md") and name not in SKIP_FILES:
+                yield os.path.join(dirpath, name)
+
+
+def main():
+    root = sys.argv[1] if len(sys.argv) > 1 else "."
+    missing = []
+    files = checked = 0
+    for md in iter_markdown(root):
+        files += 1
+        with open(md, encoding="utf-8") as f:
+            text = f.read()
+        for target in LINK_RE.findall(text):
+            if target.startswith(EXTERNAL) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            checked += 1
+            resolved = os.path.normpath(os.path.join(os.path.dirname(md), path))
+            if not os.path.exists(resolved):
+                missing.append(f"{os.path.relpath(md, root)}: ({target}) -> {resolved}")
+    print(f"check_links: {files} markdown files, {checked} relative links")
+    if missing:
+        print(f"\n{len(missing)} dead link(s):", file=sys.stderr)
+        for m in missing:
+            print(f"  FAIL {m}", file=sys.stderr)
+        return 1
+    print("no dead links")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,7 +29,7 @@ use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
 
 use super::metrics::Metrics;
-use super::request::{PlanKey, Request, Response};
+use super::request::{PlanKey, Request, Response, TransformOp};
 use super::shard::{shard_min_numel, shard_min_numel_3d};
 use crate::util::env_usize;
 use crate::util::error::TransformError;
@@ -156,10 +156,14 @@ pub struct BatchPolicy {
     /// ([`shard_min_numel_3d`]), so lowering the 3D gate never disables
     /// co-batching for unrelated 2D/1D traffic.
     pub solo_numel: usize,
-    /// max total payload elements one batch may accumulate: a key
-    /// flushes as soon as its queued requests reach this many elements,
-    /// bounding the contiguous pack buffer the packed execution path
-    /// builds (and the latency a full-but-small batch window can add).
+    /// max elements of batch buffers one batch may *materialize*: a key
+    /// flushes as soon as its queued requests' footprint
+    /// ([`batch_footprint`]) reaches this many elements, bounding the
+    /// contiguous buffers the packed execution path builds (and the
+    /// latency a full-but-small batch window can add). Ops on the
+    /// zero-copy views path ([`TransformOp::supports_batch_views`])
+    /// materialize only the packed output, so they count `queued *
+    /// numel`; copy ops build an input pack too and count double.
     /// Defaults to [`max_batch_elems`] (`MDDCT_MAX_BATCH_ELEMS` env
     /// override included).
     pub max_batch_elems: usize,
@@ -187,6 +191,24 @@ pub const DEFAULT_MAX_BATCH_ELEMS: usize = 4 << 20;
 pub fn max_batch_elems() -> usize {
     static N: OnceLock<usize> = OnceLock::new();
     *N.get_or_init(|| env_usize("MDDCT_MAX_BATCH_ELEMS").unwrap_or(DEFAULT_MAX_BATCH_ELEMS))
+}
+
+/// Batch-buffer elements a packed execution of `queued` same-key
+/// requests of `numel` elements each will materialize — the quantity
+/// [`BatchPolicy::max_batch_elems`] caps. Ops whose plans accept
+/// per-request views never build an input pack (the payloads are
+/// borrowed in place), so only the packed output counts; every other
+/// op materializes an input pack *and* an output, so its requests
+/// count twice. Before this distinction the batcher charged both op
+/// classes identically, halving the useful batch depth of the
+/// zero-copy ops for no memory saved.
+pub fn batch_footprint(op: TransformOp, queued: usize, numel: usize) -> usize {
+    let payload = queued.saturating_mul(numel);
+    if op.supports_batch_views() {
+        payload
+    } else {
+        payload.saturating_mul(2)
+    }
 }
 
 /// Run the batching loop: drain `rx`, form batches, push to `tx`.
@@ -239,9 +261,10 @@ pub fn run_batcher(
                 }
                 let q = open.entry(key.clone()).or_default();
                 q.push(p);
-                // same-key requests share a shape, so the queue's total
-                // payload is len * numel
-                let full_elems = q.len().saturating_mul(numel) >= policy.max_batch_elems;
+                // same-key requests share a shape, so the queue's
+                // materialized footprint is a closed form of its length
+                let full_elems =
+                    batch_footprint(key.op, q.len(), numel) >= policy.max_batch_elems;
                 if q.len() >= policy.max_batch || full_elems || solo {
                     let items = open.remove(&key).unwrap();
                     if flush(key, items).is_err() {
@@ -427,6 +450,71 @@ mod tests {
         let b = batch_rx.recv_timeout(Duration::from_secs(1)).unwrap();
         assert_eq!(a.items.len(), 3);
         assert_eq!(b.items.len(), 3);
+        drop(req_tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn elems_cap_charges_copy_ops_double() {
+        // footprint accounting: a zero-copy op (dct2d) materializes only
+        // the packed output, a copy op (dst2d) an input pack too
+        assert_eq!(batch_footprint(TransformOp::Dct2d, 4, 16), 64);
+        assert_eq!(batch_footprint(TransformOp::Dst2d, 2, 16), 64);
+        assert_eq!(batch_footprint(TransformOp::RcDct2d, 2, 16), 64);
+        assert_eq!(batch_footprint(TransformOp::Dst2d, usize::MAX, 2), usize::MAX);
+
+        // under one 64-element cap, dst2d must flush every 2 requests
+        // while dct2d accumulates 4 — and the admission budget drains
+        // back to zero either way
+        let metrics = Arc::new(Metrics::new());
+        let budget = Arc::new(InflightBudget::new(1 << 20));
+        let (req_tx, req_rx) = channel();
+        let (batch_tx, batch_rx) = channel();
+        let policy = BatchPolicy {
+            max_batch: 1000,
+            max_wait: Duration::from_secs(10),
+            solo_numel: usize::MAX,
+            max_batch_elems: 64,
+        };
+        let h = {
+            let (m, b) = (metrics.clone(), budget.clone());
+            std::thread::spawn(move || run_batcher(req_rx, batch_tx, policy, m, b))
+        };
+        let mut replies = Vec::new();
+        for (id, op) in
+            [TransformOp::Dst2d; 4].into_iter().chain([TransformOp::Dct2d; 4]).enumerate()
+        {
+            let (tx, rx) = channel();
+            replies.push(rx);
+            let req = Request {
+                id: id as u64,
+                op,
+                shape: vec![4, 4],
+                data: vec![0.0; 16],
+                deadline: None,
+            };
+            assert!(budget.try_acquire(req.data.len()));
+            req_tx.send(Pending::new(req, tx)).unwrap();
+        }
+        let mut sizes: Vec<(TransformOp, usize)> = (0..3)
+            .map(|_| {
+                let b = batch_rx.recv_timeout(Duration::from_secs(1)).unwrap();
+                for p in &b.items {
+                    budget.release(p.request.data.len());
+                }
+                (b.key.op, b.items.len())
+            })
+            .collect();
+        sizes.sort_by_key(|&(op, _)| op.name());
+        assert_eq!(
+            sizes,
+            vec![
+                (TransformOp::Dct2d, 4),
+                (TransformOp::Dst2d, 2),
+                (TransformOp::Dst2d, 2),
+            ]
+        );
+        assert_eq!(budget.in_use(), 0, "admission budget must stay truthful");
         drop(req_tx);
         h.join().unwrap();
     }

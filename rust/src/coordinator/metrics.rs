@@ -29,6 +29,9 @@ struct OpMetrics {
     packed_requests: u64,
     /// packed batches executed
     packed_batches: u64,
+    /// packed batches that ran the zero-copy views path (no input pack
+    /// copy; requests fed to the plan as borrowed per-request views)
+    packed_zero_copy: u64,
     packed_max: usize,
     /// log2 histogram of packed batch sizes
     packed_hist: [u64; PACKED_BUCKETS],
@@ -107,6 +110,14 @@ impl Metrics {
         e.packed_hist[bucket.min(PACKED_BUCKETS - 1)] += 1;
     }
 
+    /// Record one packed batch that executed through the zero-copy views
+    /// path (no input pack copy) — always recorded *in addition to*
+    /// [`Metrics::record_packed`], so `packed_zero_copy <= packed_batches`.
+    pub fn record_packed_zero_copy(&self, op: &str) {
+        let mut t = self.inner.lock().unwrap();
+        t.ops.entry(op.to_string()).or_default().packed_zero_copy += 1;
+    }
+
     /// Record one failed request.
     pub fn record_error(&self, op: &str) {
         let mut t = self.inner.lock().unwrap();
@@ -182,6 +193,7 @@ impl Metrics {
             o.insert("max_bands".into(), Json::Num(e.bands_max as f64));
             o.insert("packed_requests".into(), Json::Num(e.packed_requests as f64));
             o.insert("packed_batches".into(), Json::Num(e.packed_batches as f64));
+            o.insert("packed_zero_copy".into(), Json::Num(e.packed_zero_copy as f64));
             o.insert("max_packed_batch".into(), Json::Num(e.packed_max as f64));
             if e.packed_batches > 0 {
                 // log2 size histogram, non-empty buckets only, keyed by
@@ -251,9 +263,12 @@ mod tests {
         m.record_packed("dct2d", 3);
         m.record_packed("dct2d", 16);
         m.record_packed("dct2d", 1 << 14); // clamps into the 4096+ bucket
+        m.record_packed_zero_copy("dct2d");
+        m.record_packed_zero_copy("dct2d");
         let snap = m.snapshot();
         let d = snap.get("dct2d").unwrap();
         assert_eq!(d.get("packed_batches").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(d.get("packed_zero_copy").unwrap().as_f64().unwrap(), 2.0);
         assert_eq!(
             d.get("packed_requests").unwrap().as_f64().unwrap(),
             (2 + 3 + 16 + (1 << 14)) as f64
@@ -271,6 +286,7 @@ mod tests {
         let snap = m.snapshot();
         let i = snap.get("idct2d").unwrap();
         assert_eq!(i.get("packed_batches").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(i.get("packed_zero_copy").unwrap().as_f64().unwrap(), 0.0);
         assert!(i.get("packed_batch_hist").is_none());
     }
 

@@ -9,10 +9,12 @@ use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::dct::{
-    Combo, Dct1d, Dct2, Dct3d, Dst2, Idct1d, Idct2, Idct3d, Idst2, Idxst1d, IdxstCombo,
-    RowColumn,
+    Combo, Dct1d, Dct2, Dct2F32, Dct3d, Dst2, Idct1d, Idct2, Idct2F32, Idct3d, Idst2, Idxst1d,
+    IdxstCombo, RowColumn,
 };
+use crate::layout::ElemType;
 use crate::parallel::{ExecPolicy, ShardPolicy};
+use crate::util::scratch;
 
 use super::request::{PlanKey, TransformOp};
 use super::shard;
@@ -43,6 +45,29 @@ pub enum NativePlan {
     Dst2(Dst2),
     /// Fused 2D inverse DST.
     Idst2(Idst2),
+    /// Fused 2D DCT executed in f32 ([`Dct2F32`]); the service's f64
+    /// payloads are narrowed at the plan boundary.
+    Dct2F32(Dct2F32),
+    /// Fused 2D IDCT executed in f32 ([`Idct2F32`]).
+    Idct2F32(Idct2F32),
+}
+
+/// Run `f` over f32 copies of `data`/`out`, widening the result back
+/// into `out`. The f32 staging buffers come from (and return to) the
+/// thread-local scratch pool, so steady-state callers stay
+/// allocation-free.
+fn run_f32(data: &[f64], out: &mut [f64], f: impl FnOnce(&[f32], &mut [f32])) {
+    let mut xs = scratch::take_f32(data.len());
+    for (d, s) in xs.iter_mut().zip(data) {
+        *d = *s as f32;
+    }
+    let mut ys = scratch::take_f32(out.len());
+    f(&xs, &mut ys);
+    for (d, s) in out.iter_mut().zip(&ys) {
+        *d = f64::from(*s);
+    }
+    scratch::give_f32(xs);
+    scratch::give_f32(ys);
 }
 
 impl NativePlan {
@@ -58,6 +83,20 @@ impl NativePlan {
     /// rank mismatch (validated upstream by `Request::validate`).
     pub fn build_with(key: &PlanKey, policy: ExecPolicy, shards: ShardPolicy) -> NativePlan {
         let s = &key.shape;
+        if key.elem == ElemType::F32 {
+            // The reduced-precision element path exists for the fused 2D
+            // pair; every other op serves an F32 key with its f64 plan
+            // (correct, just not narrowed).
+            match key.op {
+                TransformOp::Dct2d => {
+                    return NativePlan::Dct2F32(Dct2F32::with_policy(s[0], s[1], policy));
+                }
+                TransformOp::Idct2d => {
+                    return NativePlan::Idct2F32(Idct2F32::with_policy(s[0], s[1], policy));
+                }
+                _ => {}
+            }
+        }
         match key.op {
             TransformOp::Dct2d => {
                 NativePlan::Dct2(Dct2::with_policy(s[0], s[1], policy).with_shards(shards))
@@ -111,6 +150,8 @@ impl NativePlan {
             NativePlan::Idct3(p) => p.forward(data, out),
             NativePlan::Dst2(p) => p.forward(data, out),
             NativePlan::Idst2(p) => p.forward(data, out),
+            NativePlan::Dct2F32(p) => run_f32(data, out, |x, y| p.forward(x, y)),
+            NativePlan::Idct2F32(p) => run_f32(data, out, |x, y| p.forward(x, y)),
         }
     }
 
@@ -134,7 +175,41 @@ impl NativePlan {
                 | NativePlan::Combo(_)
                 | NativePlan::Dct1(_)
                 | NativePlan::Idct1(_)
+                | NativePlan::Dct2F32(_)
+                | NativePlan::Idct2F32(_)
         )
+    }
+
+    /// Whether [`NativePlan::execute_batch_views`] runs the zero-copy
+    /// per-request-view batch path for this plan (see
+    /// [`super::request::TransformOp::supports_batch_views`]).
+    pub fn supports_batch_views(&self) -> bool {
+        matches!(self, NativePlan::Dct2(_) | NativePlan::Idct2(_))
+    }
+
+    /// Execute a batch given one borrowed slice per payload, with no
+    /// packed input copy: the fused 2D DCT/IDCT pair feeds the views
+    /// straight into its batched stage-1 reorder; other plans fall back
+    /// to a per-item loop over the views. Output is packed in view
+    /// order and is bit-identical to [`NativePlan::execute_batch`] on
+    /// the concatenation of the views.
+    pub fn execute_batch_views(&self, views: &[&[f64]]) -> Vec<f64> {
+        let batch = views.len();
+        if batch == 0 {
+            return Vec::new();
+        }
+        let numel = views[0].len();
+        let mut out = vec![0.0; batch * numel];
+        match self {
+            NativePlan::Dct2(p) => p.forward_batch_views(views, &mut out),
+            NativePlan::Idct2(p) => p.forward_batch_views(views, &mut out),
+            _ => {
+                for (xb, ob) in views.iter().zip(out.chunks_mut(numel)) {
+                    self.execute_into(xb, ob);
+                }
+            }
+        }
+        out
     }
 
     /// Execute a packed batch of `batch` same-shape payloads: the
@@ -155,6 +230,12 @@ impl NativePlan {
             NativePlan::Combo(p) => p.forward_batch(data, &mut out, batch),
             NativePlan::Dct1(p) => p.forward_batch(data, &mut out, batch),
             NativePlan::Idct1(p) => p.forward_batch(data, &mut out, batch),
+            NativePlan::Dct2F32(p) => {
+                run_f32(data, &mut out, |x, y| p.forward_batch(x, y, batch))
+            }
+            NativePlan::Idct2F32(p) => {
+                run_f32(data, &mut out, |x, y| p.forward_batch(x, y, batch))
+            }
             _ => {
                 let numel = data.len() / batch;
                 if numel > 0 {
@@ -340,7 +421,7 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn key(op: TransformOp, shape: &[usize]) -> PlanKey {
-        PlanKey { op, shape: shape.to_vec() }
+        PlanKey::new(op, shape.to_vec())
     }
 
     #[test]
@@ -383,6 +464,71 @@ mod tests {
                 assert_eq!(got[b * numel..(b + 1) * numel], want[..], "{op:?} item {b}");
             }
         }
+    }
+
+    #[test]
+    fn execute_batch_views_matches_packed_execution() {
+        let mut rng = Rng::new(85);
+        let cache = PlanCache::new();
+        for (op, shape) in [
+            (TransformOp::Dct2d, vec![8usize, 12]),
+            (TransformOp::Idct2d, vec![9, 7]),
+            (TransformOp::Dst2d, vec![8, 12]), // per-item fallback
+        ] {
+            let numel: usize = shape.iter().product();
+            let batch = 4;
+            let packed = rng.normal_vec(numel * batch);
+            let views: Vec<&[f64]> = packed.chunks(numel).collect();
+            let plan = cache.get(&key(op, &shape));
+            assert_eq!(
+                plan.supports_batch_views(),
+                op.supports_batch_views(),
+                "{op:?}"
+            );
+            let got = plan.execute_batch_views(&views);
+            let want = plan.execute_batch(&packed, batch);
+            assert_eq!(got, want, "{op:?}: views batch must match packed batch bitwise");
+        }
+        assert!(NativePlan::build(&key(TransformOp::Dct2d, &[4, 4]))
+            .execute_batch_views(&[])
+            .is_empty());
+    }
+
+    #[test]
+    fn f32_plans_build_and_approximate_the_f64_transform() {
+        let mut rng = Rng::new(86);
+        let cache = PlanCache::new();
+        let x = rng.normal_vec(8 * 12);
+        for op in [TransformOp::Dct2d, TransformOp::Idct2d] {
+            let k64 = key(op, &[8, 12]);
+            let k32 = k64.clone().with_elem(ElemType::F32);
+            let p64 = cache.get(&k64);
+            let p32 = cache.get(&k32);
+            assert!(!Arc::ptr_eq(&p64, &p32), "{op:?}: elem must split cache entries");
+            let y64 = p64.execute(&x);
+            let y32 = p32.execute(&x);
+            let scale: f64 =
+                y64.iter().map(|v| v.abs()).fold(0.0, f64::max).max(1.0);
+            for (a, b) in y64.iter().zip(&y32) {
+                assert!(
+                    (a - b).abs() <= 1e-4 * scale,
+                    "{op:?}: f32 path drifted: {a} vs {b}"
+                );
+            }
+            // batch path stays consistent with solo f32 execution
+            let batch = 3;
+            let packed = rng.normal_vec(8 * 12 * batch);
+            let got = p32.execute_batch(&packed, batch);
+            for b in 0..batch {
+                let want = p32.execute(&packed[b * 96..(b + 1) * 96]);
+                assert_eq!(got[b * 96..(b + 1) * 96], want[..], "{op:?} item {b}");
+            }
+        }
+        // ops without a narrowed plan serve F32 keys with the f64 build
+        let fallback =
+            cache.get(&key(TransformOp::Dst2d, &[8, 12]).with_elem(ElemType::F32));
+        check_close(&fallback.execute(&x), &cache.get(&key(TransformOp::Dst2d, &[8, 12])).execute(&x), 0.0)
+            .unwrap();
     }
 
     #[test]

@@ -3,6 +3,7 @@
 use std::time::Instant;
 
 use crate::dct::Algo1d;
+use crate::layout::ElemType;
 use crate::util::error::TransformError;
 
 /// A transform the service can execute.
@@ -63,6 +64,15 @@ impl TransformOp {
                 | TransformOp::Dct3d
                 | TransformOp::Idct3d
         )
+    }
+
+    /// Whether this op's native plan can execute a batch directly over
+    /// caller-provided per-request views (`forward_batch_views`) with no
+    /// input pack copy — the coordinator's zero-copy packed path.
+    /// Currently the fused 2D DCT/IDCT pair; every other batch-capable
+    /// op still packs its inputs contiguously first.
+    pub fn supports_batch_views(self) -> bool {
+        matches!(self, TransformOp::Dct2d | TransformOp::Idct2d)
     }
 
     /// Whether this op's native plan has a true batched execution path
@@ -187,6 +197,23 @@ pub struct PlanKey {
     pub op: TransformOp,
     /// Input tensor shape, row-major.
     pub shape: Vec<usize>,
+    /// Element type the plan executes in ([`ElemType::F64`] is the
+    /// native precision; [`ElemType::F32`] selects the reduced-precision
+    /// generic plans where available).
+    pub elem: ElemType,
+}
+
+impl PlanKey {
+    /// Key for the default (f64, contiguous) execution of `op` on `shape`.
+    pub fn new(op: TransformOp, shape: Vec<usize>) -> PlanKey {
+        PlanKey { op, shape, elem: ElemType::F64 }
+    }
+
+    /// Same key, re-targeted at a different element type.
+    pub fn with_elem(mut self, elem: ElemType) -> PlanKey {
+        self.elem = elem;
+        self
+    }
 }
 
 /// A transform request.
@@ -210,7 +237,7 @@ pub struct Request {
 impl Request {
     /// The (op, shape) key this request batches and plans under.
     pub fn key(&self) -> PlanKey {
-        PlanKey { op: self.op, shape: self.shape.clone() }
+        PlanKey::new(self.op, self.shape.clone())
     }
 
     /// Whether this request's deadline has already passed.
@@ -370,5 +397,28 @@ mod tests {
         let c = req(3, TransformOp::Idct2d, vec![8, 8], vec![1.0; 64]);
         assert_eq!(a.key(), b.key());
         assert_ne!(a.key(), c.key());
+    }
+
+    #[test]
+    fn plan_keys_distinguish_element_type() {
+        let a = req(1, TransformOp::Dct2d, vec![8, 8], vec![0.0; 64]);
+        assert_eq!(a.key().elem, ElemType::F64, "requests default to f64 plans");
+        let f32_key = a.key().with_elem(ElemType::F32);
+        assert_ne!(a.key(), f32_key);
+        assert_eq!(f32_key.op, a.key().op);
+        assert_eq!(f32_key.shape, a.key().shape);
+    }
+
+    #[test]
+    fn batch_views_ops_are_a_subset_of_batch_ops() {
+        for op in TransformOp::ALL {
+            if op.supports_batch_views() {
+                assert!(op.supports_batch(), "{}: views implies batch", op.name());
+            }
+        }
+        assert!(TransformOp::Dct2d.supports_batch_views());
+        assert!(TransformOp::Idct2d.supports_batch_views());
+        assert!(!TransformOp::Dst2d.supports_batch_views());
+        assert!(!TransformOp::RcDct2d.supports_batch_views());
     }
 }

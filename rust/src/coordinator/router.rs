@@ -146,6 +146,21 @@ impl Router {
         Ok((plan.execute_batch(packed, batch), Route::Native))
     }
 
+    /// Execute a batch of same-key payloads given one borrowed view per
+    /// request, with no packed input copy (the coordinator's zero-copy
+    /// packed path; see
+    /// [`super::plan_cache::NativePlan::execute_batch_views`]). Native
+    /// only, like [`Router::execute_batch`]. Output is packed in view
+    /// order, bit-identical to the copy path.
+    pub fn execute_batch_views(
+        &self,
+        key: &PlanKey,
+        views: &[&[f64]],
+    ) -> Result<(Vec<f64>, Route), TransformError> {
+        let plan = self.plans.get(key);
+        Ok((plan.execute_batch_views(views), Route::Native))
+    }
+
     /// Execute one payload for a key on the routed backend.
     pub fn execute(
         &self,
@@ -199,7 +214,7 @@ mod tests {
     #[test]
     fn native_only_routes_native() {
         let r = Router::native_only();
-        let key = PlanKey { op: TransformOp::Dct2d, shape: vec![8, 8] };
+        let key = PlanKey::new(TransformOp::Dct2d, vec![8, 8]);
         assert_eq!(r.route(&key), Route::Native);
         let mut rng = Rng::new(90);
         let x = rng.normal_vec(64);
@@ -214,18 +229,18 @@ mod tests {
         let mut r = Router::native_only_with(ExecPolicy::Serial);
         r.set_shard_policy(ShardPolicy::MaxShards(4));
         // large request: sharded into 4 bands
-        let big = PlanKey { op: TransformOp::Dct2d, shape: vec![512, 512] };
+        let big = PlanKey::new(TransformOp::Dct2d, vec![512, 512]);
         assert_eq!(r.shard_plan(&big).band_count(), 4);
         assert_eq!(r.shard_bands(&big), 4);
         // small request: decide() keeps it unsharded
-        let small = PlanKey { op: TransformOp::Dct2d, shape: vec![16, 16] };
+        let small = PlanKey::new(TransformOp::Dct2d, vec![16, 16]);
         assert_eq!(r.shard_plan(&small).band_count(), 1);
         // large 3D request: sharded into 4 dim-0 slab bands
-        let big3 = PlanKey { op: TransformOp::Dct3d, shape: vec![64, 64, 64] };
+        let big3 = PlanKey::new(TransformOp::Dct3d, vec![64, 64, 64]);
         assert_eq!(r.shard_plan(&big3).band_count(), 4);
         assert_eq!(r.shard_bands(&big3), 4);
         // small 3D request: below the 3D gate, unsharded
-        let small3 = PlanKey { op: TransformOp::Idct3d, shape: vec![16, 16, 16] };
+        let small3 = PlanKey::new(TransformOp::Idct3d, vec![16, 16, 16]);
         assert_eq!(r.shard_plan(&small3).band_count(), 1);
         // sharded execution still produces correct output
         let mut rng = Rng::new(91);
@@ -239,7 +254,7 @@ mod tests {
         use crate::parallel::{ExecPolicy, ShardPolicy};
         let mut r = Router::native_only_with(ExecPolicy::Threads(4));
         r.set_shard_policy(ShardPolicy::MaxShards(4));
-        let key = PlanKey { op: TransformOp::Dct2d, shape: vec![32, 32] };
+        let key = PlanKey::new(TransformOp::Dct2d, vec![32, 32]);
         let mut rng = Rng::new(92);
         let x = rng.normal_vec(32 * 32);
         let degraded = r.execute_degraded(&key, &x);
@@ -254,9 +269,25 @@ mod tests {
     }
 
     #[test]
+    fn batch_views_matches_packed_batch_bitwise() {
+        let r = Router::native_only();
+        let mut rng = Rng::new(93);
+        for op in [TransformOp::Dct2d, TransformOp::Idct2d] {
+            let key = PlanKey::new(op, vec![8, 12]);
+            let (numel, batch) = (96usize, 4usize);
+            let packed = rng.normal_vec(numel * batch);
+            let views: Vec<&[f64]> = packed.chunks(numel).collect();
+            let (got, route) = r.execute_batch_views(&key, &views).unwrap();
+            assert_eq!(route, Route::Native);
+            let (want, _) = r.execute_batch(&key, &packed, batch).unwrap();
+            assert_eq!(got, want, "{op:?}");
+        }
+    }
+
+    #[test]
     fn ops_without_artifacts_stay_native() {
         let r = Router::native_only();
-        let key = PlanKey { op: TransformOp::Dct3d, shape: vec![4, 4, 4] };
+        let key = PlanKey::new(TransformOp::Dct3d, vec![4, 4, 4]);
         assert_eq!(r.route(&key), Route::Native);
     }
 
@@ -273,8 +304,8 @@ mod tests {
         .unwrap();
         let handle = PjrtHandle::spawn("/nonexistent");
         let r = Router::with_pjrt(handle, &manifest);
-        let hit = PlanKey { op: TransformOp::Dct2d, shape: vec![64, 64] };
-        let miss = PlanKey { op: TransformOp::Dct2d, shape: vec![63, 63] };
+        let hit = PlanKey::new(TransformOp::Dct2d, vec![64, 64]);
+        let miss = PlanKey::new(TransformOp::Dct2d, vec![63, 63]);
         assert_eq!(r.route(&hit), Route::Pjrt);
         assert_eq!(r.route(&miss), Route::Native);
     }

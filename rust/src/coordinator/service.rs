@@ -423,11 +423,16 @@ fn serve_degraded(
 }
 
 /// Execute a multi-request batch through the packed stage-fused path:
-/// pack the payloads contiguously, run one `execute_batch` (each
-/// transform stage sweeps the whole batch), scatter the outputs back to
-/// the per-request reply channels. A panic or error quarantines the key
-/// and retries every affected request once, individually, on the
-/// degraded serial plan (`pack` and `execute_batch` fault seams).
+/// run one batched plan call (each transform stage sweeps the whole
+/// batch), scatter the outputs back to the per-request reply channels.
+/// Ops whose plans take per-request views
+/// ([`TransformOp::supports_batch_views`]) skip the input pack copy
+/// entirely — the request payloads are borrowed in place and fed to
+/// `execute_batch_views` (counted by the `packed_zero_copy` metric);
+/// everything else packs the payloads contiguously first and runs
+/// `execute_batch`. A panic or error quarantines the key and retries
+/// every affected request once, individually, on the degraded serial
+/// plan (`pack` and `execute_batch` fault seams, both paths).
 #[allow(clippy::too_many_arguments)]
 fn execute_packed(
     key: PlanKey,
@@ -444,19 +449,28 @@ fn execute_packed(
     for p in &items {
         crate::obs::span_since("svc.queue_wait", p.enqueued);
     }
+    let zero_copy = key.op.supports_batch_views();
     let result = {
         let _s = crate::obs::SpanGuard::begin("svc.execute_batch");
         catch_unwind(AssertUnwindSafe(|| {
             fault::fire("pack", op_name)?;
-            let mut packed = Vec::with_capacity(n * numel);
-            {
-                let _s = crate::obs::SpanGuard::begin("svc.pack");
-                for p in &items {
-                    packed.extend_from_slice(&p.request.data);
+            if zero_copy {
+                // borrow the payloads in place — no pack copy at all
+                let views: Vec<&[f64]> =
+                    items.iter().map(|p| p.request.data.as_slice()).collect();
+                fault::fire("execute_batch", op_name)?;
+                router.execute_batch_views(&key, &views)
+            } else {
+                let mut packed = Vec::with_capacity(n * numel);
+                {
+                    let _s = crate::obs::SpanGuard::begin("svc.pack");
+                    for p in &items {
+                        packed.extend_from_slice(&p.request.data);
+                    }
                 }
+                fault::fire("execute_batch", op_name)?;
+                router.execute_batch(&key, &packed, n)
             }
-            fault::fire("execute_batch", op_name)?;
-            router.execute_batch(&key, &packed, n)
         }))
         .unwrap_or_else(|panic| Err(panic_message(op_name, panic)))
     };
@@ -464,6 +478,9 @@ fn execute_packed(
         Ok((output, route)) => {
             let _s = crate::obs::SpanGuard::begin("svc.scatter");
             metrics.record_packed(op_name, n);
+            if zero_copy {
+                metrics.record_packed_zero_copy(op_name);
+            }
             for (i, pending) in items.into_iter().enumerate() {
                 let latency = pending.enqueued.elapsed().as_secs_f64();
                 metrics.record(op_name, rank, latency, n, bands);
@@ -784,7 +801,7 @@ mod tests {
         let (reply_bad, rx_bad) = channel();
         batch_tx
             .send(Batch {
-                key: PlanKey { op: TransformOp::Dct2d, shape: vec![4] },
+                key: PlanKey::new(TransformOp::Dct2d, vec![4]),
                 items: vec![Pending::new(
                     Request {
                         id: 1,
@@ -801,7 +818,7 @@ mod tests {
         let err = bad.expect_err("panicking plan must surface as an error");
         assert!(err.to_string().contains("panicked"), "got: {err}");
         // the poisoned key is quarantined for later requests
-        assert!(router.is_quarantined(&PlanKey { op: TransformOp::Dct2d, shape: vec![4] }));
+        assert!(router.is_quarantined(&PlanKey::new(TransformOp::Dct2d, vec![4])));
 
         // the same worker thread must still serve well-formed batches
         let (reply_ok, rx_ok) = channel();
@@ -809,7 +826,7 @@ mod tests {
         let x = rng.normal_vec(16);
         batch_tx
             .send(Batch {
-                key: PlanKey { op: TransformOp::Dct2d, shape: vec![4, 4] },
+                key: PlanKey::new(TransformOp::Dct2d, vec![4, 4]),
                 items: vec![Pending::new(
                     Request {
                         id: 2,

@@ -197,7 +197,7 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn key(op: TransformOp, shape: &[usize]) -> PlanKey {
-        PlanKey { op, shape: shape.to_vec() }
+        PlanKey::new(op, shape.to_vec())
     }
 
     #[test]

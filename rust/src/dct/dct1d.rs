@@ -28,8 +28,10 @@ pub enum Algo1d {
 }
 
 impl Algo1d {
+    /// All four variants, in paper (Table IV) order.
     pub const ALL: [Algo1d; 4] = [Algo1d::FourN, Algo1d::Mirror2N, Algo1d::Pad2N, Algo1d::NPoint];
 
+    /// Human-readable variant name (bench tables / logs).
     pub fn name(self) -> &'static str {
         match self {
             Algo1d::FourN => "4N",
@@ -52,7 +54,9 @@ impl Algo1d {
 /// Forward 1D DCT plan.
 #[derive(Debug, Clone)]
 pub struct Dct1d {
+    /// Transform length.
     pub n: usize,
+    /// Which Algorithm-1 variant this plan executes.
     pub algo: Algo1d,
     rfft: RfftPlan,
     tw: Arc<Twiddle>,
@@ -61,6 +65,7 @@ pub struct Dct1d {
 }
 
 impl Dct1d {
+    /// Plan a length-`n` forward DCT-II with the given variant.
     pub fn new(n: usize, algo: Algo1d) -> Dct1d {
         Self::with_exec(n, algo, ExecPolicy::Auto)
     }
@@ -200,6 +205,7 @@ impl Dct1d {
 /// Inverse 1D DCT plan (N-point IRFFT; the 1D restriction of Eq. 15/16).
 #[derive(Debug, Clone)]
 pub struct Idct1d {
+    /// Transform length.
     pub n: usize,
     rfft: RfftPlan,
     tw: Arc<Twiddle>,
@@ -208,6 +214,7 @@ pub struct Idct1d {
 }
 
 impl Idct1d {
+    /// Plan a length-`n` inverse DCT (DCT-III, paper normalization).
     pub fn new(n: usize) -> Idct1d {
         Self::with_exec(n, ExecPolicy::Auto)
     }
@@ -235,6 +242,7 @@ impl Idct1d {
         self.ws.prewarm();
     }
 
+    /// Inverse-transform `x` into `out` (both length `n`).
     pub fn forward(&self, x: &[f64], out: &mut [f64]) {
         let n = self.n;
         assert_eq!(x.len(), n);
@@ -295,6 +303,7 @@ pub struct Idxst1d {
 }
 
 impl Idxst1d {
+    /// Plan a length-`n` IDXST.
     pub fn new(n: usize) -> Idxst1d {
         let idct = Idct1d::new(n);
         // the shift buffer is held across the whole inner IDCT, so it
@@ -323,10 +332,13 @@ impl Idxst1d {
         self.idct.n
     }
 
+    /// True iff the planned length is zero.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Transform `x` into `out` (both length `n`): reverse-shift, inner
+    /// IDCT, then sign-flip of the odd outputs.
     pub fn forward(&self, x: &[f64], out: &mut [f64]) {
         let n = self.idct.n;
         // pooled scratch, not a fresh vec: this buffer was the last

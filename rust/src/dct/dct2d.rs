@@ -14,10 +14,14 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::fft::{onesided_len, C64, Rfft2Plan};
-use crate::parallel::{global_pool, par_chunks_mut, split_groups, ExecPolicy, ShardPolicy};
+use crate::layout::Layout;
+use crate::parallel::{
+    global_pool, par_chunks_mut, par_strided_chunks_mut, split_groups, ExecPolicy, ShardPolicy,
+};
 
 use super::reorder::{
-    reorder_2d_gather_row, reorder_2d_scatter, unreorder_2d, unreorder_2d_row,
+    reorder_2d_gather_row, reorder_2d_gather_row_strided, reorder_2d_scatter,
+    reorder_2d_scatter_strided, unreorder_2d, unreorder_2d_row,
 };
 use super::twiddle::{twiddle, Twiddle};
 use crate::util::scratch;
@@ -25,12 +29,16 @@ use crate::util::scratch;
 /// Per-stage wall-clock breakdown (Figure 6).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct StageTimes {
+    /// Seconds in the preprocess (reorder/gather) stage.
     pub pre: f64,
+    /// Seconds in the MD RFFT stage.
     pub fft: f64,
+    /// Seconds in the postprocess (twiddle-combine) stage.
     pub post: f64,
 }
 
 impl StageTimes {
+    /// Sum of the three stage times.
     pub fn total(&self) -> f64 {
         self.pre + self.fft + self.post
     }
@@ -58,7 +66,9 @@ fn claim_row_pairs(
 /// Fused 2D DCT plan.
 #[derive(Debug, Clone)]
 pub struct Dct2 {
+    /// Number of rows.
     pub n1: usize,
+    /// Number of columns.
     pub n2: usize,
     h2: usize,
     rfft2: Rfft2Plan,
@@ -70,6 +80,7 @@ pub struct Dct2 {
 }
 
 impl Dct2 {
+    /// Plan an `n1 x n2` fused 2D DCT with the auto execution policy.
     pub fn new(n1: usize, n2: usize) -> Dct2 {
         Self::with_policy(n1, n2, ExecPolicy::Auto)
     }
@@ -234,18 +245,69 @@ impl Dct2 {
     /// the serial kernel's, so the output is bit-identical to `batch`
     /// solo [`Dct2::forward`] calls (for a fixed FFT kernel).
     pub fn forward_batch(&self, xs: &[f64], out: &mut [f64], batch: usize) {
+        let numel = self.n1 * self.n2;
+        assert_eq!(xs.len(), batch * numel);
+        self.forward_batch_with(|b| &xs[b * numel..(b + 1) * numel], out, batch);
+    }
+
+    /// Batched forward DCT over caller-provided per-block views: block
+    /// `b` is read from `xs[b]` (each view exactly `n1*n2` long) — no
+    /// pack copy of the inputs is ever made. Same stage fusion and
+    /// bit-identical output as [`Dct2::forward_batch`] on the packed
+    /// concatenation of the views; this is the coordinator's zero-copy
+    /// packed-batch path.
+    pub fn forward_batch_views(&self, xs: &[&[f64]], out: &mut [f64]) {
+        let numel = self.n1 * self.n2;
+        for (b, x) in xs.iter().enumerate() {
+            assert_eq!(x.len(), numel, "view {b}: expected {numel} elements");
+        }
+        self.forward_batch_with(|b| xs[b], out, xs.len());
+    }
+
+    /// Batched forward DCT over one strided arena: block `b` starts at
+    /// `xs[b * layout.batch_stride]` and is read at the layout's
+    /// per-axis strides (no gather pack first); output block `b` is
+    /// written row-major contiguous starting at
+    /// `out[b * layout.batch_stride]` (the inter-block padding is left
+    /// untouched). Per-block arithmetic is the contiguous batch
+    /// kernel's, so results are bit-identical to packing the views and
+    /// calling [`Dct2::forward_batch`].
+    pub fn forward_batch_strided(
+        &self,
+        xs: &[f64],
+        layout: &Layout,
+        out: &mut [f64],
+        batch: usize,
+    ) {
         let (n1, n2, h2) = (self.n1, self.n2, self.h2);
-        assert_eq!(xs.len(), batch * n1 * n2);
-        assert_eq!(out.len(), batch * n1 * n2);
+        let (s1, s2) = layout.expect_2d_f64(n1, n2);
+        let bstride = layout.batch_stride;
+        let numel = n1 * n2;
         if batch == 0 {
             return;
         }
-        let lanes = self.policy.lanes(batch * n1 * n2);
-        let mut pre = scratch::take_f64(batch * n1 * n2);
+        assert!(
+            xs.len() >= layout.required_len(batch),
+            "strided input too short: {} < {}",
+            xs.len(),
+            layout.required_len(batch)
+        );
+        assert!(
+            bstride >= numel,
+            "batch stride {bstride} cannot hold a packed {n1}x{n2} output block"
+        );
+        assert!(
+            out.len() >= (batch - 1) * bstride + numel,
+            "strided output too short: {} < {}",
+            out.len(),
+            (batch - 1) * bstride + numel
+        );
+        let lanes = self.policy.lanes(batch * numel);
+        let mut pre = scratch::take_f64(batch * numel);
         {
             let _s = crate::obs::SpanGuard::begin("dct2.batch.pre");
-            par_chunks_mut(&mut pre, n1 * n2, lanes, |b, block| {
-                reorder_2d_scatter(&xs[b * n1 * n2..(b + 1) * n1 * n2], block, n1, n2);
+            par_chunks_mut(&mut pre, numel, lanes, |b, block| {
+                reorder_2d_scatter_strided(&xs[b * bstride..], s1, s2, block, n1, n2);
             });
         }
         let mut spec = scratch::take_c64(batch * n1 * h2);
@@ -255,8 +317,87 @@ impl Dct2 {
         }
         {
             let _s = crate::obs::SpanGuard::begin("dct2.batch.post");
-            par_chunks_mut(out, n1 * n2, lanes, |b, block| {
+            par_strided_chunks_mut(out, numel, bstride, batch, lanes, |b, block| {
                 self.postprocess_serial(&spec[b * n1 * h2..(b + 1) * n1 * h2], block);
+            });
+        }
+        scratch::give_f64(pre);
+        scratch::give_c64(spec);
+    }
+
+    /// Single-transform forward over a strided view: the (n1 x n2)
+    /// block is read at `layout` strides straight from `x` (no gather
+    /// copy into a packed staging buffer first); the output is the
+    /// plan's usual packed row-major block. Bit-identical to packing
+    /// the view and calling [`Dct2::forward`].
+    pub fn forward_strided(&self, x: &[f64], layout: &Layout, out: &mut [f64]) {
+        let (n1, n2, h2) = (self.n1, self.n2, self.h2);
+        let (s1, s2) = layout.expect_2d_f64(n1, n2);
+        if s2 == 1 && s1 == n2 {
+            self.forward(&x[..n1 * n2], out);
+            return;
+        }
+        assert!(
+            x.len() > (n1 - 1) * s1 + (n2 - 1) * s2,
+            "strided view out of bounds: len {} for shape ({n1},{n2}) strides ({s1},{s2})",
+            x.len()
+        );
+        assert_eq!(out.len(), n1 * n2);
+        let t0 = Instant::now();
+        let mut pre = scratch::take_f64(n1 * n2);
+        let lanes = self.bands(n1);
+        if lanes > 1 {
+            par_chunks_mut(&mut pre, n2, lanes, |r, row| {
+                reorder_2d_gather_row_strided(x, s1, s2, row, r, n1, n2);
+            });
+        } else {
+            reorder_2d_scatter_strided(x, s1, s2, &mut pre, n1, n2);
+        }
+        let t1 = Instant::now();
+        let mut spec = scratch::take_c64(n1 * h2);
+        self.rfft2.forward(&pre, &mut spec);
+        let t2 = Instant::now();
+        self.postprocess(&spec, out);
+        let t3 = Instant::now();
+        scratch::give_f64(pre);
+        scratch::give_c64(spec);
+        crate::obs::stage_span("dct2.pre", t0, t1);
+        crate::obs::stage_span("dct2.fft", t1, t2);
+        crate::obs::stage_span("dct2.post", t2, t3);
+    }
+
+    /// The shared batched-forward core: block `b`'s input is whatever
+    /// slice `block(b)` returns (a packed sub-slice, a caller view, …),
+    /// the three fused stages run across the whole batch, and per-block
+    /// arithmetic is the serial kernel's — every public batch entry
+    /// point funnels here, which is what makes them bit-identical to
+    /// each other.
+    fn forward_batch_with<'x, F>(&self, block: F, out: &mut [f64], batch: usize)
+    where
+        F: Fn(usize) -> &'x [f64] + Sync,
+    {
+        let (n1, n2, h2) = (self.n1, self.n2, self.h2);
+        assert_eq!(out.len(), batch * n1 * n2);
+        if batch == 0 {
+            return;
+        }
+        let lanes = self.policy.lanes(batch * n1 * n2);
+        let mut pre = scratch::take_f64(batch * n1 * n2);
+        {
+            let _s = crate::obs::SpanGuard::begin("dct2.batch.pre");
+            par_chunks_mut(&mut pre, n1 * n2, lanes, |b, blk| {
+                reorder_2d_scatter(block(b), blk, n1, n2);
+            });
+        }
+        let mut spec = scratch::take_c64(batch * n1 * h2);
+        {
+            let _s = crate::obs::SpanGuard::begin("dct2.batch.fft");
+            self.rfft2.forward_batch(&pre, &mut spec, batch);
+        }
+        {
+            let _s = crate::obs::SpanGuard::begin("dct2.batch.post");
+            par_chunks_mut(out, n1 * n2, lanes, |b, blk| {
+                self.postprocess_serial(&spec[b * n1 * h2..(b + 1) * n1 * h2], blk);
             });
         }
         scratch::give_f64(pre);
@@ -333,7 +474,9 @@ impl Dct2 {
 /// Fused 2D IDCT plan.
 #[derive(Debug, Clone)]
 pub struct Idct2 {
+    /// Number of rows.
     pub n1: usize,
+    /// Number of columns.
     pub n2: usize,
     h2: usize,
     rfft2: Rfft2Plan,
@@ -345,6 +488,7 @@ pub struct Idct2 {
 }
 
 impl Idct2 {
+    /// Plan an `n1 x n2` fused 2D IDCT with the auto execution policy.
     pub fn new(n1: usize, n2: usize) -> Idct2 {
         Self::with_policy(n1, n2, ExecPolicy::Auto)
     }
@@ -397,6 +541,7 @@ impl Idct2 {
         self.shards.bands(rows, self.policy.lanes(self.n1 * self.n2))
     }
 
+    /// Inverse-transform `x` into `out` (both `n1 * n2` long).
     pub fn forward(&self, x: &[f64], out: &mut [f64]) {
         self.forward_timed(x, out);
     }
@@ -442,8 +587,135 @@ impl Idct2 {
     /// Bit-identical to `batch` solo [`Idct2::forward`] calls for a
     /// fixed FFT kernel.
     pub fn forward_batch(&self, xs: &[f64], out: &mut [f64], batch: usize) {
+        let numel = self.n1 * self.n2;
+        assert_eq!(xs.len(), batch * numel);
+        self.forward_batch_with(|b| &xs[b * numel..(b + 1) * numel], out, batch);
+    }
+
+    /// Batched inverse DCT over caller-provided per-block views (the
+    /// mirror of [`Dct2::forward_batch_views`]): block `b` is read from
+    /// `xs[b]` with no pack copy; bit-identical to
+    /// [`Idct2::forward_batch`] on the packed concatenation.
+    pub fn forward_batch_views(&self, xs: &[&[f64]], out: &mut [f64]) {
+        let numel = self.n1 * self.n2;
+        for (b, x) in xs.iter().enumerate() {
+            assert_eq!(x.len(), numel, "view {b}: expected {numel} elements");
+        }
+        self.forward_batch_with(|b| xs[b], out, xs.len());
+    }
+
+    /// Batched inverse DCT over one strided arena (the mirror of
+    /// [`Dct2::forward_batch_strided`]): input block `b` is read at
+    /// `layout` strides from `xs[b * layout.batch_stride]`, output
+    /// block `b` is written packed row-major at
+    /// `out[b * layout.batch_stride]` with inter-block padding left
+    /// untouched.
+    pub fn forward_batch_strided(
+        &self,
+        xs: &[f64],
+        layout: &Layout,
+        out: &mut [f64],
+        batch: usize,
+    ) {
         let (n1, n2, h2) = (self.n1, self.n2, self.h2);
-        assert_eq!(xs.len(), batch * n1 * n2);
+        let (s1, s2) = layout.expect_2d_f64(n1, n2);
+        let bstride = layout.batch_stride;
+        let numel = n1 * n2;
+        if batch == 0 {
+            return;
+        }
+        assert!(
+            xs.len() >= layout.required_len(batch),
+            "strided input too short: {} < {}",
+            xs.len(),
+            layout.required_len(batch)
+        );
+        assert!(
+            bstride >= numel,
+            "batch stride {bstride} cannot hold a packed {n1}x{n2} output block"
+        );
+        assert!(
+            out.len() >= (batch - 1) * bstride + numel,
+            "strided output too short: {} < {}",
+            out.len(),
+            (batch - 1) * bstride + numel
+        );
+        let lanes = self.policy.lanes(batch * numel);
+        let mut spec = scratch::take_c64(batch * n1 * h2);
+        {
+            let _s = crate::obs::SpanGuard::begin("idct2.batch.pre");
+            par_chunks_mut(&mut spec, n1 * h2, lanes, |b, sblock| {
+                let xb = &xs[b * bstride..];
+                for (k1, srow) in sblock.chunks_mut(h2).enumerate() {
+                    self.preprocess_row_strided(xb, s1, s2, k1, srow);
+                }
+            });
+        }
+        let mut v = scratch::take_f64(batch * numel);
+        {
+            let _s = crate::obs::SpanGuard::begin("idct2.batch.fft");
+            self.rfft2.inverse_batch(&spec, &mut v, batch);
+        }
+        {
+            let _s = crate::obs::SpanGuard::begin("idct2.batch.post");
+            par_strided_chunks_mut(out, numel, bstride, batch, lanes, |b, block| {
+                unreorder_2d(&v[b * numel..(b + 1) * numel], block, n1, n2);
+            });
+        }
+        scratch::give_c64(spec);
+        scratch::give_f64(v);
+    }
+
+    /// Single-transform inverse over a strided view (the mirror of
+    /// [`Dct2::forward_strided`]): the spectrum build reads the four
+    /// mirrored inputs at `layout` strides, the rest of the pipeline is
+    /// the contiguous one. Bit-identical to packing the view and
+    /// calling [`Idct2::forward`].
+    pub fn forward_strided(&self, x: &[f64], layout: &Layout, out: &mut [f64]) {
+        let (n1, n2, h2) = (self.n1, self.n2, self.h2);
+        let (s1, s2) = layout.expect_2d_f64(n1, n2);
+        if s2 == 1 && s1 == n2 {
+            self.forward(&x[..n1 * n2], out);
+            return;
+        }
+        assert!(
+            x.len() > (n1 - 1) * s1 + (n2 - 1) * s2,
+            "strided view out of bounds: len {} for shape ({n1},{n2}) strides ({s1},{s2})",
+            x.len()
+        );
+        assert_eq!(out.len(), n1 * n2);
+        let t0 = Instant::now();
+        let mut spec = scratch::take_c64(n1 * h2);
+        let lanes = self.bands(n1);
+        par_chunks_mut(&mut spec, h2, lanes, |k1, srow| {
+            self.preprocess_row_strided(x, s1, s2, k1, srow);
+        });
+        let t1 = Instant::now();
+        let mut v = scratch::take_f64(n1 * n2);
+        self.rfft2.inverse(&spec, &mut v);
+        let t2 = Instant::now();
+        if lanes > 1 {
+            par_chunks_mut(out, n2, lanes, |r, row| {
+                unreorder_2d_row(&v, row, r, n1, n2);
+            });
+        } else {
+            unreorder_2d(&v, out, n1, n2);
+        }
+        let t3 = Instant::now();
+        scratch::give_c64(spec);
+        scratch::give_f64(v);
+        crate::obs::stage_span("idct2.pre", t0, t1);
+        crate::obs::stage_span("idct2.fft", t1, t2);
+        crate::obs::stage_span("idct2.post", t2, t3);
+    }
+
+    /// The shared batched-inverse core (see [`Dct2::forward_batch_with`]
+    /// for the contract): every public batch entry point funnels here.
+    fn forward_batch_with<'x, F>(&self, block: F, out: &mut [f64], batch: usize)
+    where
+        F: Fn(usize) -> &'x [f64] + Sync,
+    {
+        let (n1, n2, h2) = (self.n1, self.n2, self.h2);
         assert_eq!(out.len(), batch * n1 * n2);
         if batch == 0 {
             return;
@@ -453,7 +725,7 @@ impl Idct2 {
         {
             let _s = crate::obs::SpanGuard::begin("idct2.batch.pre");
             par_chunks_mut(&mut spec, n1 * h2, lanes, |b, sblock| {
-                let xb = &xs[b * n1 * n2..(b + 1) * n1 * n2];
+                let xb = block(b);
                 for (k1, srow) in sblock.chunks_mut(h2).enumerate() {
                     self.preprocess_row(xb, k1, srow);
                 }
@@ -466,8 +738,8 @@ impl Idct2 {
         }
         {
             let _s = crate::obs::SpanGuard::begin("idct2.batch.post");
-            par_chunks_mut(out, n1 * n2, lanes, |b, block| {
-                unreorder_2d(&v[b * n1 * n2..(b + 1) * n1 * n2], block, n1, n2);
+            par_chunks_mut(out, n1 * n2, lanes, |b, blk| {
+                unreorder_2d(&v[b * n1 * n2..(b + 1) * n1 * n2], blk, n1, n2);
             });
         }
         scratch::give_c64(spec);
@@ -501,6 +773,29 @@ impl Idct2 {
                 0.0
             } else {
                 x[(n1 - k1) * n2 + (n2 - k2)]
+            };
+            let z = C64::new(x11 - x22, -(x21 + x12));
+            srow[k2] = (ac * bc * z).scale(0.25);
+        }
+    }
+
+    /// [`Idct2::preprocess_row`] over a strided view: identical
+    /// arithmetic, with every input read at `x[i1*s1 + i2*s2]` instead
+    /// of the packed row-major offset — so the spectrum (and therefore
+    /// the transform) is bit-identical to the contiguous path.
+    fn preprocess_row_strided(&self, x: &[f64], s1: usize, s2: usize, k1: usize, srow: &mut [C64]) {
+        let (n1, n2, h2) = (self.n1, self.n2, self.h2);
+        debug_assert_eq!(srow.len(), h2);
+        let ac = self.tw1.conj_at(k1);
+        for k2 in 0..h2 {
+            let bc = self.tw2.conj_at(k2);
+            let x11 = x[k1 * s1 + k2 * s2];
+            let x21 = if k1 == 0 { 0.0 } else { x[(n1 - k1) * s1 + k2 * s2] };
+            let x12 = if k2 == 0 { 0.0 } else { x[k1 * s1 + (n2 - k2) * s2] };
+            let x22 = if k1 == 0 || k2 == 0 {
+                0.0
+            } else {
+                x[(n1 - k1) * s1 + (n2 - k2) * s2]
             };
             let z = C64::new(x11 - x22, -(x21 + x12));
             srow[k2] = (ac * bc * z).scale(0.25);
@@ -634,6 +929,82 @@ mod tests {
                 let mut bgot = vec![0.0; numel * batch];
                 inv.forward_batch(&got, &mut bgot, batch);
                 assert_eq!(bgot, bwant, "idct2 ({n1},{n2}) batch={batch} {exec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn views_and_strided_match_packed_bitwise() {
+        use crate::layout::Layout;
+        use crate::parallel::ExecPolicy;
+        let mut rng = crate::util::rng::Rng::new(43);
+        for &(n1, n2, batch) in &[(8usize, 8usize, 3usize), (9, 15, 2), (13, 7, 4)] {
+            let numel = n1 * n2;
+            let xs = rng.normal_vec(numel * batch);
+            for exec in [ExecPolicy::Serial, ExecPolicy::Threads(4)] {
+                let fwd = Dct2::with_policy(n1, n2, exec);
+                let inv = Idct2::with_policy(n1, n2, exec);
+                let mut want = vec![0.0; numel * batch];
+                fwd.forward_batch(&xs, &mut want, batch);
+
+                // views path: per-block borrows, no pack copy
+                let views: Vec<&[f64]> =
+                    (0..batch).map(|b| &xs[b * numel..(b + 1) * numel]).collect();
+                let mut got = vec![0.0; numel * batch];
+                fwd.forward_batch_views(&views, &mut got);
+                assert_eq!(got, want, "dct2 views ({n1},{n2}) batch={batch} {exec:?}");
+
+                // strided path: blocks embedded in a padded arena
+                let (s2, s1) = (2usize, n2 * 2 + 3);
+                let layout = Layout::contiguous(&[n1, n2])
+                    .with_strides(&[s1, s2])
+                    .with_batch_stride((n1 - 1) * s1 + (n2 - 1) * s2 + 5);
+                let mut arena = vec![f64::NAN; layout.required_len(batch)];
+                for b in 0..batch {
+                    for i1 in 0..n1 {
+                        for i2 in 0..n2 {
+                            arena[b * layout.batch_stride + i1 * s1 + i2 * s2] =
+                                xs[b * numel + i1 * n2 + i2];
+                        }
+                    }
+                }
+                let mut sout = vec![f64::NAN; (batch - 1) * layout.batch_stride + numel];
+                fwd.forward_batch_strided(&arena, &layout, &mut sout, batch);
+                for b in 0..batch {
+                    let blk = &sout[b * layout.batch_stride..b * layout.batch_stride + numel];
+                    assert_eq!(blk, &want[b * numel..(b + 1) * numel], "dct2 strided b={b}");
+                }
+                // single-block strided forward
+                let mut one = vec![0.0; numel];
+                fwd.forward_strided(&arena, &layout, &mut one);
+                assert_eq!(one, &want[..numel], "dct2 forward_strided ({n1},{n2}) {exec:?}");
+
+                // inverse mirrors, fed the forward outputs
+                let mut bwant = vec![0.0; numel * batch];
+                inv.forward_batch(&want, &mut bwant, batch);
+                let wviews: Vec<&[f64]> =
+                    (0..batch).map(|b| &want[b * numel..(b + 1) * numel]).collect();
+                let mut bgot = vec![0.0; numel * batch];
+                inv.forward_batch_views(&wviews, &mut bgot);
+                assert_eq!(bgot, bwant, "idct2 views ({n1},{n2}) batch={batch} {exec:?}");
+                let mut warena = vec![f64::NAN; layout.required_len(batch)];
+                for b in 0..batch {
+                    for i1 in 0..n1 {
+                        for i2 in 0..n2 {
+                            warena[b * layout.batch_stride + i1 * s1 + i2 * s2] =
+                                want[b * numel + i1 * n2 + i2];
+                        }
+                    }
+                }
+                let mut bsout = vec![f64::NAN; (batch - 1) * layout.batch_stride + numel];
+                inv.forward_batch_strided(&warena, &layout, &mut bsout, batch);
+                for b in 0..batch {
+                    let blk = &bsout[b * layout.batch_stride..b * layout.batch_stride + numel];
+                    assert_eq!(blk, &bwant[b * numel..(b + 1) * numel], "idct2 strided b={b}");
+                }
+                let mut bone = vec![0.0; numel];
+                inv.forward_strided(&warena, &layout, &mut bone);
+                assert_eq!(bone, &bwant[..numel], "idct2 forward_strided ({n1},{n2}) {exec:?}");
             }
         }
     }

@@ -19,9 +19,13 @@ use crate::util::scratch;
 /// 4D DCT plan over a row-major (n1, n2, n3, n4) tensor.
 #[derive(Debug, Clone)]
 pub struct Dct4d {
+    /// Extent of the first (slowest) axis.
     pub n1: usize,
+    /// Extent of the second axis.
     pub n2: usize,
+    /// Extent of the third axis.
     pub n3: usize,
+    /// Extent of the fourth (contiguous) axis.
     pub n4: usize,
     /// fused 2D plan for the trailing axis pair (n3, n4)
     tail: Dct2,
@@ -32,6 +36,7 @@ pub struct Dct4d {
 }
 
 impl Dct4d {
+    /// Plan an `(n1, n2, n3, n4)` 4D DCT with the auto execution policy.
     pub fn new(n1: usize, n2: usize, n3: usize, n4: usize) -> Dct4d {
         Self::with_policy(n1, n2, n3, n4, ExecPolicy::Auto)
     }

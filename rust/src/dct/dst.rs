@@ -61,10 +61,12 @@ pub struct Dst1d {
 }
 
 impl Dst1d {
+    /// Plan a length-`n` DST-II.
     pub fn new(n: usize) -> Dst1d {
         Dst1d { dct: Dct1d::new(n, Algo1d::NPoint) }
     }
 
+    /// Transform `x` into `out` (both length `n`).
     pub fn forward(&self, x: &[f64], out: &mut [f64]) {
         let n = self.dct.n;
         let mut folded = crate::util::scratch::take_f64(n);
@@ -88,10 +90,12 @@ pub struct Idst1d {
 }
 
 impl Idst1d {
+    /// Plan a length-`n` inverse DST.
     pub fn new(n: usize) -> Idst1d {
         Idst1d { idct: Idct1d::new(n) }
     }
 
+    /// Inverse-transform `x` into `out` (both length `n`).
     pub fn forward(&self, x: &[f64], out: &mut [f64]) {
         let n = x.len();
         let mut rev = crate::util::scratch::take_f64(n);
@@ -111,12 +115,15 @@ impl Idst1d {
 /// Fused 2D DST-II plan (folds on both axes around the fused 2D DCT).
 #[derive(Debug, Clone)]
 pub struct Dst2 {
+    /// Number of rows.
     pub n1: usize,
+    /// Number of columns.
     pub n2: usize,
     dct: Dct2,
 }
 
 impl Dst2 {
+    /// Plan an `n1 x n2` 2D DST-II with the auto execution policy.
     pub fn new(n1: usize, n2: usize) -> Dst2 {
         Dst2 { n1, n2, dct: Dct2::new(n1, n2) }
     }
@@ -133,6 +140,7 @@ impl Dst2 {
         self
     }
 
+    /// Transform `x` into `out` (both `n1 * n2` long).
     pub fn forward(&self, x: &[f64], out: &mut [f64]) {
         let (n1, n2) = (self.n1, self.n2);
         assert_eq!(x.len(), n1 * n2);
@@ -196,12 +204,15 @@ impl Dst2 {
 /// Fused 2D inverse DST plan.
 #[derive(Debug, Clone)]
 pub struct Idst2 {
+    /// Number of rows.
     pub n1: usize,
+    /// Number of columns.
     pub n2: usize,
     idct: Idct2,
 }
 
 impl Idst2 {
+    /// Plan an `n1 x n2` 2D inverse DST with the auto execution policy.
     pub fn new(n1: usize, n2: usize) -> Idst2 {
         Idst2 { n1, n2, idct: Idct2::new(n1, n2) }
     }
@@ -218,6 +229,7 @@ impl Idst2 {
         self
     }
 
+    /// Inverse-transform `x` into `out` (both `n1 * n2` long).
     pub fn forward(&self, x: &[f64], out: &mut [f64]) {
         let (n1, n2) = (self.n1, self.n2);
         assert_eq!(x.len(), n1 * n2);

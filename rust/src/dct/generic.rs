@@ -1,0 +1,396 @@
+//! Generic-over-element fused 2D DCT / IDCT — the `f32` plan path.
+//!
+//! [`GenDct2`] / [`GenIdct2`] reproduce the three-stage factorization of
+//! [`super::dct2d::Dct2`] / [`super::dct2d::Idct2`] (Eq. (13) reorder →
+//! 2D RFFT → §III-B paired combine, and the corrected Eq. (15) spectrum
+//! build → 2D IRFFT → Eq. (16) unreorder) over any
+//! [`Element`](crate::fft::elem::Element), on the split-plane generic
+//! FFT core of [`crate::fft::generic`].
+//!
+//! The per-block kernel is deliberately serial — the dedicated `f64`
+//! plans keep the tuned band-sharded stages — and batching fans whole
+//! blocks out across pool lanes ([`GenDct2::forward_batch`]), which is
+//! the shape the coordinator's packed path wants anyway. The headline
+//! instantiations are the `f32` aliases [`Dct2F32`] / [`Idct2F32`]:
+//! half the memory traffic of the `f64` plans on a memory-bound
+//! transform (measured by `benches/layout.rs`), at ~1e-6 relative
+//! accuracy (pinned within 1e-4 by `tests/prop_layout.rs`).
+//!
+//! ```
+//! use mddct::dct::generic::Dct2F32;
+//!
+//! let plan = Dct2F32::new(4, 4);
+//! let x = vec![1.0f32; 16];
+//! let mut y = vec![0.0f32; 16];
+//! plan.forward(&x, &mut y);
+//! // constant input concentrates in DC: y[0] = 4 * N1 * N2
+//! assert!((y[0] - 64.0).abs() < 1e-3);
+//! assert!(y[1].abs() < 1e-3);
+//! ```
+
+use std::f64::consts::PI;
+
+use crate::fft::elem::{Cx, Element};
+use crate::fft::generic::GenRfft2;
+use crate::parallel::{par_chunks_mut, ExecPolicy};
+use crate::util::scratch::Workspace;
+
+use super::reorder::{reorder_2d_scatter, unreorder_2d};
+
+/// DCT twiddle planes w[k] = e^{-j π k / 2n} for one axis (the generic
+/// counterpart of [`super::twiddle::Twiddle`], split re/im, rounded
+/// once from `f64`).
+#[derive(Debug, Clone)]
+struct GenTwiddle<E> {
+    re: Vec<E>,
+    im: Vec<E>,
+}
+
+impl<E: Element> GenTwiddle<E> {
+    fn new(n: usize) -> GenTwiddle<E> {
+        let step = -PI / (2.0 * n as f64);
+        let mut re = Vec::with_capacity(n);
+        let mut im = Vec::with_capacity(n);
+        for k in 0..n {
+            let w: Cx<E> = Cx::cis(step * k as f64);
+            re.push(w.re);
+            im.push(w.im);
+        }
+        GenTwiddle { re, im }
+    }
+
+    #[inline(always)]
+    fn at(&self, k: usize) -> Cx<E> {
+        Cx::new(self.re[k], self.im[k])
+    }
+}
+
+/// Fused 2D DCT plan over a generic element (see the module docs; the
+/// `f32` alias is [`Dct2F32`]).
+#[derive(Debug, Clone)]
+pub struct GenDct2<E> {
+    /// Rows.
+    pub n1: usize,
+    /// Columns.
+    pub n2: usize,
+    h2: usize,
+    rfft2: GenRfft2<E>,
+    tw1: GenTwiddle<E>,
+    tw2: GenTwiddle<E>,
+    policy: ExecPolicy,
+    ws: Workspace,
+}
+
+impl<E: Element> GenDct2<E> {
+    /// Plan for `n1 x n2` inputs with the default (auto) batch policy.
+    pub fn new(n1: usize, n2: usize) -> GenDct2<E> {
+        Self::with_policy(n1, n2, ExecPolicy::Auto)
+    }
+
+    /// Plan with an explicit execution policy (used by
+    /// [`GenDct2::forward_batch`] to pick its lane count; the per-block
+    /// kernel itself is serial).
+    pub fn with_policy(n1: usize, n2: usize, policy: ExecPolicy) -> GenDct2<E> {
+        assert!(n1 >= 1 && n2 >= 1);
+        let rfft2 = GenRfft2::new(n1, n2);
+        let h2 = rfft2.h2;
+        let mut ws = Workspace::new();
+        E::register_scratch(&mut ws, n1 * n2); // reordered input
+        E::register_scratch(&mut ws, n1 * h2); // spectrum re plane
+        E::register_scratch(&mut ws, n1 * h2); // spectrum im plane
+        rfft2.register_scratch(&mut ws);
+        ws.prewarm();
+        GenDct2 {
+            n1,
+            n2,
+            h2,
+            rfft2,
+            tw1: GenTwiddle::new(n1),
+            tw2: GenTwiddle::new(n2),
+            policy,
+            ws,
+        }
+    }
+
+    /// Scratch manifest of one `forward` call (for prewarming worker
+    /// threads).
+    pub fn workspace(&self) -> &Workspace {
+        &self.ws
+    }
+
+    /// Compute the 2D DCT of row-major `x` into `out` (serial kernel).
+    pub fn forward(&self, x: &[E], out: &mut [E]) {
+        let (n1, n2, h2) = (self.n1, self.n2, self.h2);
+        assert_eq!(x.len(), n1 * n2);
+        assert_eq!(out.len(), n1 * n2);
+        let mut pre = E::take_scratch(n1 * n2);
+        reorder_2d_scatter(x, &mut pre, n1, n2);
+        let mut sre = E::take_scratch(n1 * h2);
+        let mut sim = E::take_scratch(n1 * h2);
+        self.rfft2.forward(&pre, &mut sre, &mut sim);
+        self.postprocess(&sre, &sim, out);
+        E::give_scratch(pre);
+        E::give_scratch(sre);
+        E::give_scratch(sim);
+    }
+
+    /// Batched forward: `batch` packed blocks in, `batch` packed blocks
+    /// out, whole blocks fanned out across pool lanes.
+    pub fn forward_batch(&self, xs: &[E], out: &mut [E], batch: usize) {
+        let numel = self.n1 * self.n2;
+        assert_eq!(xs.len(), batch * numel);
+        assert_eq!(out.len(), batch * numel);
+        if batch == 0 {
+            return;
+        }
+        let lanes = self.policy.lanes(batch * numel).min(batch);
+        par_chunks_mut(out, numel, lanes, |b, block| {
+            self.forward(&xs[b * numel..(b + 1) * numel], block);
+        });
+    }
+
+    /// §III-B paired-quadrant combine over split spectrum planes — the
+    /// same row-pair walk and arithmetic as `Dct2::postprocess_serial`.
+    fn postprocess(&self, sre: &[E], sim: &[E], out: &mut [E]) {
+        let (n1, n2, h2) = (self.n1, self.n2, self.h2);
+        let two = E::from_f64(2.0);
+        for k1 in 0..=n1 / 2 {
+            let m1 = (n1 - k1) % n1;
+            let (top, mut bot): (&mut [E], Option<&mut [E]>) = if m1 == k1 {
+                (&mut out[k1 * n2..(k1 + 1) * n2], None)
+            } else {
+                // k1 <= n1/2 <= m1 and they differ
+                let (head, tail) = out.split_at_mut(m1 * n2);
+                (&mut head[k1 * n2..(k1 + 1) * n2], Some(&mut tail[..n2]))
+            };
+            let a = self.tw1.at(k1);
+            let row1 = k1 * h2;
+            let row2 = m1 * h2;
+            for k2 in 0..h2 {
+                let b = self.tw2.at(k2);
+                let ab = a * b;
+                let abc = a * b.conj();
+                let v1 = Cx::new(sre[row1 + k2], sim[row1 + k2]);
+                let v2 = Cx::new(sre[row2 + k2], sim[row2 + k2]);
+                let p = ab * v1;
+                let q = abc * v2.conj();
+                top[k2] = two * (p.re + q.re);
+                let k2r = n2 - k2; // right-half partner column
+                let has_col = k2 > 0 && k2r != k2;
+                if has_col {
+                    top[k2r] = -(two * (p.im - q.im));
+                }
+                if let Some(bottom) = bot.as_deref_mut() {
+                    let r = abc.conj() * v2;
+                    let s = ab.conj() * v1.conj();
+                    bottom[k2] = two * (r.im + s.im);
+                    if has_col {
+                        bottom[k2r] = two * (r.re - s.re);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Fused 2D IDCT plan over a generic element (the `f32` alias is
+/// [`Idct2F32`]).
+#[derive(Debug, Clone)]
+pub struct GenIdct2<E> {
+    /// Rows.
+    pub n1: usize,
+    /// Columns.
+    pub n2: usize,
+    h2: usize,
+    rfft2: GenRfft2<E>,
+    tw1: GenTwiddle<E>,
+    tw2: GenTwiddle<E>,
+    policy: ExecPolicy,
+    ws: Workspace,
+}
+
+impl<E: Element> GenIdct2<E> {
+    /// Plan for `n1 x n2` inputs with the default (auto) batch policy.
+    pub fn new(n1: usize, n2: usize) -> GenIdct2<E> {
+        Self::with_policy(n1, n2, ExecPolicy::Auto)
+    }
+
+    /// Plan with an explicit execution policy (batch lane count).
+    pub fn with_policy(n1: usize, n2: usize, policy: ExecPolicy) -> GenIdct2<E> {
+        assert!(n1 >= 1 && n2 >= 1);
+        let rfft2 = GenRfft2::new(n1, n2);
+        let h2 = rfft2.h2;
+        let mut ws = Workspace::new();
+        E::register_scratch(&mut ws, n1 * h2); // spectrum re plane
+        E::register_scratch(&mut ws, n1 * h2); // spectrum im plane
+        E::register_scratch(&mut ws, n1 * n2); // IRFFT output pre-unreorder
+        rfft2.register_scratch(&mut ws);
+        ws.prewarm();
+        GenIdct2 {
+            n1,
+            n2,
+            h2,
+            rfft2,
+            tw1: GenTwiddle::new(n1),
+            tw2: GenTwiddle::new(n2),
+            policy,
+            ws,
+        }
+    }
+
+    /// Scratch manifest of one `forward` call.
+    pub fn workspace(&self) -> &Workspace {
+        &self.ws
+    }
+
+    /// Compute the 2D IDCT of row-major `x` into `out` (serial kernel).
+    pub fn forward(&self, x: &[E], out: &mut [E]) {
+        let (n1, n2, h2) = (self.n1, self.n2, self.h2);
+        assert_eq!(x.len(), n1 * n2);
+        assert_eq!(out.len(), n1 * n2);
+        let mut sre = E::take_scratch(n1 * h2);
+        let mut sim = E::take_scratch(n1 * h2);
+        for k1 in 0..n1 {
+            self.preprocess_row(x, k1, &mut sre[k1 * h2..(k1 + 1) * h2], &mut sim[k1 * h2..(k1 + 1) * h2]);
+        }
+        let mut v = E::take_scratch(n1 * n2);
+        self.rfft2.inverse(&mut sre, &mut sim, &mut v);
+        unreorder_2d(&v, out, n1, n2);
+        E::give_scratch(sre);
+        E::give_scratch(sim);
+        E::give_scratch(v);
+    }
+
+    /// Batched inverse: whole blocks fanned out across pool lanes.
+    pub fn forward_batch(&self, xs: &[E], out: &mut [E], batch: usize) {
+        let numel = self.n1 * self.n2;
+        assert_eq!(xs.len(), batch * numel);
+        assert_eq!(out.len(), batch * numel);
+        if batch == 0 {
+            return;
+        }
+        let lanes = self.policy.lanes(batch * numel).min(batch);
+        par_chunks_mut(out, numel, lanes, |b, block| {
+            self.forward(&xs[b * numel..(b + 1) * numel], block);
+        });
+    }
+
+    /// Build one onesided spectrum row (corrected Eq. 15), split-plane
+    /// version of `Idct2::preprocess_row`.
+    fn preprocess_row(&self, x: &[E], k1: usize, srow_re: &mut [E], srow_im: &mut [E]) {
+        let (n1, n2, h2) = (self.n1, self.n2, self.h2);
+        debug_assert_eq!(srow_re.len(), h2);
+        debug_assert_eq!(srow_im.len(), h2);
+        let quarter = E::from_f64(0.25);
+        let ac = self.tw1.at(k1).conj();
+        for k2 in 0..h2 {
+            let bc = self.tw2.at(k2).conj();
+            let x11 = x[k1 * n2 + k2];
+            let x21 = if k1 == 0 { E::ZERO } else { x[(n1 - k1) * n2 + k2] };
+            let x12 = if k2 == 0 { E::ZERO } else { x[k1 * n2 + (n2 - k2)] };
+            let x22 = if k1 == 0 || k2 == 0 {
+                E::ZERO
+            } else {
+                x[(n1 - k1) * n2 + (n2 - k2)]
+            };
+            let z = Cx::new(x11 - x22, -(x21 + x12));
+            let v = (ac * bc * z).scale(quarter);
+            srow_re[k2] = v.re;
+            srow_im[k2] = v.im;
+        }
+    }
+}
+
+/// Single-precision fused 2D DCT (the `ElemType::F32` plan).
+pub type Dct2F32 = GenDct2<f32>;
+/// Single-precision fused 2D IDCT (the `ElemType::F32` plan).
+pub type Idct2F32 = GenIdct2<f32>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dct::dct2d::{Dct2, Idct2};
+
+    fn rel_close(got: &[f32], want: &[f64], tol: f64) -> Result<(), String> {
+        let scale = want.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            let rel = (*g as f64 - w).abs() / scale;
+            if rel > tol {
+                return Err(format!("idx {i}: {g} vs {w} (rel {rel:.2e})"));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn gen_f64_matches_dedicated_plan() {
+        let mut rng = crate::util::rng::Rng::new(50);
+        for &(n1, n2) in &[(1usize, 8usize), (4, 4), (8, 8), (9, 15), (13, 7), (16, 16)] {
+            let x = rng.normal_vec(n1 * n2);
+            let mut want = vec![0.0; n1 * n2];
+            Dct2::new(n1, n2).forward(&x, &mut want);
+            let plan: GenDct2<f64> = GenDct2::new(n1, n2);
+            let mut got = vec![0.0; n1 * n2];
+            plan.forward(&x, &mut got);
+            let scale = (n1 * n2) as f64;
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-8 * scale, "dct2 {n1}x{n2}");
+            }
+            let mut iwant = vec![0.0; n1 * n2];
+            Idct2::new(n1, n2).forward(&want, &mut iwant);
+            let iplan: GenIdct2<f64> = GenIdct2::new(n1, n2);
+            let mut igot = vec![0.0; n1 * n2];
+            iplan.forward(&got, &mut igot);
+            for (g, w) in igot.iter().zip(&iwant) {
+                assert!((g - w).abs() < 1e-7 * scale, "idct2 {n1}x{n2}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_tracks_f64_oracle() {
+        let mut rng = crate::util::rng::Rng::new(51);
+        for &(n1, n2) in &[(8usize, 8usize), (9, 15), (16, 16), (13, 7)] {
+            let x = rng.normal_vec(n1 * n2);
+            let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+            let mut want = vec![0.0; n1 * n2];
+            Dct2::new(n1, n2).forward(&x, &mut want);
+            let plan = Dct2F32::new(n1, n2);
+            let mut got = vec![0.0f32; n1 * n2];
+            plan.forward(&x32, &mut got);
+            rel_close(&got, &want, 1e-4).unwrap();
+            // inverse roundtrips back to the input at f32 accuracy
+            let iplan = Idct2F32::new(n1, n2);
+            let mut back = vec![0.0f32; n1 * n2];
+            iplan.forward(&got, &mut back);
+            rel_close(&back, &x, 1e-3).unwrap();
+        }
+    }
+
+    #[test]
+    fn batch_matches_solo_bitwise() {
+        use crate::parallel::ExecPolicy;
+        let mut rng = crate::util::rng::Rng::new(52);
+        let (n1, n2, batch) = (8usize, 12usize, 5usize);
+        let numel = n1 * n2;
+        let xs: Vec<f32> = rng.normal_vec(numel * batch).iter().map(|&v| v as f32).collect();
+        for exec in [ExecPolicy::Serial, ExecPolicy::Threads(4)] {
+            let plan = Dct2F32::with_policy(n1, n2, exec);
+            let mut want = vec![0.0f32; numel * batch];
+            for (b, w) in want.chunks_mut(numel).enumerate() {
+                plan.forward(&xs[b * numel..(b + 1) * numel], w);
+            }
+            let mut got = vec![0.0f32; numel * batch];
+            plan.forward_batch(&xs, &mut got, batch);
+            assert_eq!(got, want, "{exec:?}");
+            let iplan = Idct2F32::with_policy(n1, n2, exec);
+            let mut iwant = vec![0.0f32; numel * batch];
+            for (b, w) in iwant.chunks_mut(numel).enumerate() {
+                iplan.forward(&want[b * numel..(b + 1) * numel], w);
+            }
+            let mut igot = vec![0.0f32; numel * batch];
+            iplan.forward_batch(&got, &mut igot, batch);
+            assert_eq!(igot, iwant, "{exec:?}");
+        }
+    }
+}

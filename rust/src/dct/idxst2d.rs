@@ -22,13 +22,17 @@ pub enum Combo {
 /// Fused IDCT_IDXST / IDXST_IDCT plan.
 #[derive(Debug, Clone)]
 pub struct IdxstCombo {
+    /// Number of rows.
     pub n1: usize,
+    /// Number of columns.
     pub n2: usize,
+    /// Which of the two DREAMPlace combinations this plan computes.
     pub combo: Combo,
     idct: Idct2,
 }
 
 impl IdxstCombo {
+    /// Plan an `n1 x n2` fused combo transform with the auto policy.
     pub fn new(n1: usize, n2: usize, combo: Combo) -> IdxstCombo {
         IdxstCombo { n1, n2, combo, idct: Idct2::new(n1, n2) }
     }
@@ -51,10 +55,12 @@ impl IdxstCombo {
         self
     }
 
+    /// Transform `x` into `out` (both `n1 * n2` long).
     pub fn forward(&self, x: &[f64], out: &mut [f64]) {
         self.forward_timed(x, out);
     }
 
+    /// Transform with the per-stage wall-clock breakdown.
     pub fn forward_timed(&self, x: &[f64], out: &mut [f64]) -> StageTimes {
         let (n1, n2) = (self.n1, self.n2);
         assert_eq!(x.len(), n1 * n2);

@@ -43,6 +43,7 @@
 //! Idct2::new(n1, n2).forward(&sharded, &mut back);
 //! assert!(x.iter().zip(&back).all(|(a, b)| (a - b).abs() < 1e-9));
 //! ```
+#![warn(missing_docs)]
 
 pub mod dct1d;
 pub mod dct2d;
@@ -50,6 +51,7 @@ pub mod dct3d;
 pub mod dct4d;
 pub mod direct;
 pub mod dst;
+pub mod generic;
 pub mod idxst2d;
 pub mod reorder;
 pub mod row_column;
@@ -57,6 +59,7 @@ pub mod twiddle;
 
 pub use dct1d::{Algo1d, Dct1d, Idct1d, Idxst1d};
 pub use dct2d::{Dct2, Idct2, StageTimes};
+pub use generic::{Dct2F32, GenDct2, GenIdct2, Idct2F32};
 pub use dct3d::{Dct3d, Idct3d};
 pub use dct4d::Dct4d;
 pub use dst::{Dst1d, Dst2, Idst1d, Idst2};

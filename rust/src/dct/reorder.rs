@@ -30,7 +30,10 @@ pub fn dst_index_1d(i: usize, n: usize) -> usize {
 }
 
 /// 1D reorder, gather order (loop over outputs; sequential writes).
-pub fn reorder_1d_gather(x: &[f64], out: &mut [f64]) {
+///
+/// Generic over the element (`f64` plans and the generic `f32` core
+/// share one reorder implementation; the index math is type-free).
+pub fn reorder_1d_gather<T: Copy>(x: &[T], out: &mut [T]) {
     let n = x.len();
     debug_assert_eq!(out.len(), n);
     for (i, o) in out.iter_mut().enumerate() {
@@ -39,7 +42,7 @@ pub fn reorder_1d_gather(x: &[f64], out: &mut [f64]) {
 }
 
 /// 1D reorder, scatter order (loop over inputs; sequential reads).
-pub fn reorder_1d_scatter(x: &[f64], out: &mut [f64]) {
+pub fn reorder_1d_scatter<T: Copy>(x: &[T], out: &mut [T]) {
     let n = x.len();
     debug_assert_eq!(out.len(), n);
     for (i, &v) in x.iter().enumerate() {
@@ -48,7 +51,7 @@ pub fn reorder_1d_scatter(x: &[f64], out: &mut [f64]) {
 }
 
 /// Inverse 1D reorder (Eq. 16 restricted to one axis).
-pub fn unreorder_1d(v: &[f64], out: &mut [f64]) {
+pub fn unreorder_1d<T: Copy>(v: &[T], out: &mut [T]) {
     let n = v.len();
     debug_assert_eq!(out.len(), n);
     for (i, o) in out.iter_mut().enumerate() {
@@ -60,7 +63,7 @@ pub fn unreorder_1d(v: &[f64], out: &mut [f64]) {
 /// reordered row `r`. Row-local writes make this the parallel kernel
 /// behind the fused preprocess (each pool lane owns a band of rows).
 #[inline]
-pub fn reorder_2d_gather_row(x: &[f64], out_row: &mut [f64], r: usize, n1: usize, n2: usize) {
+pub fn reorder_2d_gather_row<T: Copy>(x: &[T], out_row: &mut [T], r: usize, n1: usize, n2: usize) {
     debug_assert_eq!(x.len(), n1 * n2);
     debug_assert_eq!(out_row.len(), n2);
     let sr = src_index_1d(r, n1);
@@ -72,7 +75,7 @@ pub fn reorder_2d_gather_row(x: &[f64], out_row: &mut [f64], r: usize, n1: usize
 
 /// 2D fused butterfly reorder (Eq. 13), gather order: one pass over the
 /// output matrix, reading x[src1][src2].
-pub fn reorder_2d_gather(x: &[f64], out: &mut [f64], n1: usize, n2: usize) {
+pub fn reorder_2d_gather<T: Copy>(x: &[T], out: &mut [T], n1: usize, n2: usize) {
     debug_assert_eq!(x.len(), n1 * n2);
     debug_assert_eq!(out.len(), n1 * n2);
     for (r, row) in out.chunks_mut(n2).enumerate() {
@@ -83,7 +86,7 @@ pub fn reorder_2d_gather(x: &[f64], out: &mut [f64], n1: usize, n2: usize) {
 /// 2D fused butterfly reorder (Eq. 13), scatter order: one pass over the
 /// input matrix, writing out[dst1][dst2]. Sequential reads, strided
 /// writes — the order the paper adopts.
-pub fn reorder_2d_scatter(x: &[f64], out: &mut [f64], n1: usize, n2: usize) {
+pub fn reorder_2d_scatter<T: Copy>(x: &[T], out: &mut [T], n1: usize, n2: usize) {
     debug_assert_eq!(x.len(), n1 * n2);
     debug_assert_eq!(out.len(), n1 * n2);
     for r in 0..n1 {
@@ -96,10 +99,71 @@ pub fn reorder_2d_scatter(x: &[f64], out: &mut [f64], n1: usize, n2: usize) {
     }
 }
 
+/// Strided-view variant of [`reorder_2d_scatter`]: the logical
+/// `n1 x n2` input lives in `x` at per-axis element strides
+/// `(s1, s2)` — `x[r * s1 + c * s2]` is element `(r, c)`. The output
+/// is the same packed reordered matrix as the contiguous scatter: for
+/// `(s1, s2) = (n2, 1)` this reads exactly the same values in the same
+/// order, so the result is identical.
+pub fn reorder_2d_scatter_strided<T: Copy>(
+    x: &[T],
+    s1: usize,
+    s2: usize,
+    out: &mut [T],
+    n1: usize,
+    n2: usize,
+) {
+    debug_assert_eq!(out.len(), n1 * n2);
+    debug_assert!(x.len() > (n1 - 1) * s1 + (n2 - 1) * s2, "strided input too short");
+    for r in 0..n1 {
+        let dr = dst_index_1d(r, n1);
+        let dst = &mut out[dr * n2..(dr + 1) * n2];
+        let base = r * s1;
+        if s2 == 1 {
+            // unit inner stride: row is a contiguous slice
+            let src = &x[base..base + n2];
+            for (c, &v) in src.iter().enumerate() {
+                dst[dst_index_1d(c, n2)] = v;
+            }
+        } else {
+            for c in 0..n2 {
+                dst[dst_index_1d(c, n2)] = x[base + c * s2];
+            }
+        }
+    }
+}
+
+/// Strided-view variant of [`reorder_2d_gather_row`] (the parallel
+/// per-row kernel): fills packed output row `r` from the strided
+/// `(s1, s2)` view of the logical input.
+#[inline]
+pub fn reorder_2d_gather_row_strided<T: Copy>(
+    x: &[T],
+    s1: usize,
+    s2: usize,
+    out_row: &mut [T],
+    r: usize,
+    n1: usize,
+    n2: usize,
+) {
+    debug_assert_eq!(out_row.len(), n2);
+    let base = src_index_1d(r, n1) * s1;
+    if s2 == 1 {
+        let src = &x[base..base + n2];
+        for (c, d) in out_row.iter_mut().enumerate() {
+            *d = src[src_index_1d(c, n2)];
+        }
+    } else {
+        for (c, d) in out_row.iter_mut().enumerate() {
+            *d = x[base + src_index_1d(c, n2) * s2];
+        }
+    }
+}
+
 /// One output row of the 2D un-reorder (parallel kernel of the fused
 /// IDCT postprocess): y[r][c] = v[dst1(r)][dst2(c)].
 #[inline]
-pub fn unreorder_2d_row(v: &[f64], out_row: &mut [f64], r: usize, n1: usize, n2: usize) {
+pub fn unreorder_2d_row<T: Copy>(v: &[T], out_row: &mut [T], r: usize, n1: usize, n2: usize) {
     debug_assert_eq!(v.len(), n1 * n2);
     debug_assert_eq!(out_row.len(), n2);
     let sr = dst_index_1d(r, n1);
@@ -110,7 +174,7 @@ pub fn unreorder_2d_row(v: &[f64], out_row: &mut [f64], r: usize, n1: usize, n2:
 }
 
 /// Inverse of the 2D reorder (Eq. 16): y[r][c] = v[dst1(r)][dst2(c)].
-pub fn unreorder_2d(v: &[f64], out: &mut [f64], n1: usize, n2: usize) {
+pub fn unreorder_2d<T: Copy>(v: &[T], out: &mut [T], n1: usize, n2: usize) {
     debug_assert_eq!(v.len(), n1 * n2);
     debug_assert_eq!(out.len(), n1 * n2);
     for (r, row) in out.chunks_mut(n2).enumerate() {
@@ -172,6 +236,54 @@ mod tests {
             let mut back = vec![0.0; n1 * n2];
             unreorder_2d(&g, &mut back, n1, n2);
             crate::util::prop::check_close(&back, &x, 0.0)
+        });
+    }
+
+    #[test]
+    fn strided_scatter_matches_contiguous() {
+        forall(30, shapes(1, 16), |rng, &(n1, n2)| {
+            let x = rng.normal_vec(n1 * n2);
+            // embed in a padded arena with strides (s1, s2)
+            let (s1, s2) = (n2 * 3 + 1, 3);
+            let mut arena = vec![0.0f64; (n1 - 1) * s1 + (n2 - 1) * s2 + 1];
+            for r in 0..n1 {
+                for c in 0..n2 {
+                    arena[r * s1 + c * s2] = x[r * n2 + c];
+                }
+            }
+            let mut want = vec![0.0; n1 * n2];
+            reorder_2d_scatter(&x, &mut want, n1, n2);
+            let mut got = vec![0.0; n1 * n2];
+            reorder_2d_scatter_strided(&arena, s1, s2, &mut got, n1, n2);
+            if got != want {
+                return Err("strided scatter diverged".into());
+            }
+            // unit inner stride fast path
+            let mut padded = vec![0.0f64; n1 * (n2 + 5)];
+            for r in 0..n1 {
+                padded[r * (n2 + 5)..r * (n2 + 5) + n2].copy_from_slice(&x[r * n2..(r + 1) * n2]);
+            }
+            let mut got_unit = vec![0.0; n1 * n2];
+            reorder_2d_scatter_strided(&padded, n2 + 5, 1, &mut got_unit, n1, n2);
+            if got_unit != want {
+                return Err("unit-stride scatter diverged".into());
+            }
+            let mut grow = vec![0.0; n1 * n2];
+            for r in 0..n1 {
+                reorder_2d_gather_row_strided(
+                    &arena,
+                    s1,
+                    s2,
+                    &mut grow[r * n2..(r + 1) * n2],
+                    r,
+                    n1,
+                    n2,
+                );
+            }
+            if grow != want {
+                return Err("strided gather row diverged".into());
+            }
+            Ok(())
         });
     }
 

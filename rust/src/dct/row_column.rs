@@ -47,7 +47,9 @@ impl Axis1d {
 /// `col` along (what are now) rows, transpose back.
 #[derive(Debug, Clone)]
 pub struct RowColumn {
+    /// Number of rows.
     pub n1: usize,
+    /// Number of columns.
     pub n2: usize,
     row: Axis1d,
     col: Axis1d,

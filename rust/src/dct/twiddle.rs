@@ -12,11 +12,14 @@ use crate::fft::C64;
 /// Twiddle table for one size: w[k] = e^{-j pi k / 2n}, k = 0..n-1.
 #[derive(Debug, Clone)]
 pub struct Twiddle {
+    /// Table size (one entry per k in `0..n`).
     pub n: usize,
+    /// The table itself: `w[k] = e^{-j pi k / 2n}`.
     pub w: Vec<C64>,
 }
 
 impl Twiddle {
+    /// Build the size-`n` table (n cis evaluations, done once per size).
     pub fn new(n: usize) -> Twiddle {
         let step = -std::f64::consts::PI / (2.0 * n as f64);
         Twiddle { n, w: (0..n).map(|k| C64::cis(step * k as f64)).collect() }

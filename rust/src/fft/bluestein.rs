@@ -11,6 +11,7 @@ use super::kernel::{FftKernel, Pow2Plan};
 /// Precomputed Bluestein plan for one size.
 #[derive(Debug, Clone)]
 pub struct BluesteinPlan {
+    /// Transform length (any positive integer).
     pub n: usize,
     m: usize,
     /// power-of-two convolution FFT — the hottest consumer of the
@@ -23,6 +24,7 @@ pub struct BluesteinPlan {
 }
 
 impl BluesteinPlan {
+    /// Plan an arbitrary-length DFT with the process-default inner kernel.
     pub fn new(n: usize) -> BluesteinPlan {
         BluesteinPlan::with_kernel(n, FftKernel::default_kernel())
     }

@@ -5,14 +5,19 @@ use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
 /// A complex number with f64 components.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct C64 {
+    /// Real part.
     pub re: f64,
+    /// Imaginary part.
     pub im: f64,
 }
 
+/// The additive identity, `0 + 0j`.
 pub const ZERO: C64 = C64 { re: 0.0, im: 0.0 };
+/// The multiplicative identity, `1 + 0j`.
 pub const ONE: C64 = C64 { re: 1.0, im: 0.0 };
 
 impl C64 {
+    /// Build a complex number from its real and imaginary parts.
     #[inline(always)]
     pub fn new(re: f64, im: f64) -> C64 {
         C64 { re, im }
@@ -25,16 +30,19 @@ impl C64 {
         C64 { re: c, im: s }
     }
 
+    /// Complex conjugate (negated imaginary part).
     #[inline(always)]
     pub fn conj(self) -> C64 {
         C64 { re: self.re, im: -self.im }
     }
 
+    /// Squared magnitude `re^2 + im^2` (no square root).
     #[inline(always)]
     pub fn norm_sqr(self) -> f64 {
         self.re * self.re + self.im * self.im
     }
 
+    /// Magnitude `|z| = sqrt(re^2 + im^2)`.
     pub fn abs(self) -> f64 {
         self.norm_sqr().sqrt()
     }

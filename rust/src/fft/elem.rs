@@ -1,0 +1,240 @@
+//! Element-type abstraction behind the generic (f32/f64) transform
+//! core.
+//!
+//! The paper's three-stage factorization is memory-bound at the sizes
+//! the coordinator batches, so halving the element width is a direct
+//! bandwidth win. Rather than forking every kernel, the generic core in
+//! [`crate::fft::generic`] and [`crate::dct::generic`] is written once
+//! over the [`Element`] trait; `f64` keeps its hand-tuned dedicated
+//! plans (the public API is unchanged) and `f32` instantiates the same
+//! stage math at half the traffic.
+//!
+//! [`Cx`] is the matching generic complex value. Twiddle *construction*
+//! always happens in `f64` (via [`Cx::cis`]) and is rounded once to the
+//! target element type, so an `f32` table carries correctly-rounded
+//! coefficients rather than error accumulated in `f32` recurrences.
+
+use std::fmt::Debug;
+use std::ops::{Add, AddAssign, Mul, Neg, Sub, SubAssign};
+
+use crate::layout::ElemType;
+use crate::util::scratch::{self, Workspace};
+
+/// A real scalar the generic transform core can run on.
+///
+/// Implemented for `f64` and `f32`. The trait carries just enough to
+/// write the stage sweeps once: arithmetic, conversions through `f64`
+/// (used for twiddle construction and API boundaries), and hooks into
+/// the per-element-size scratch classes of [`crate::util::scratch`].
+pub trait Element:
+    Copy
+    + Default
+    + Debug
+    + PartialEq
+    + Send
+    + Sync
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + 'static
+{
+    /// Additive identity.
+    const ZERO: Self;
+    /// Multiplicative identity.
+    const ONE: Self;
+
+    /// Round an `f64` to this element type (twiddles, scale factors).
+    fn from_f64(v: f64) -> Self;
+
+    /// Widen to `f64` (API boundaries, accuracy checks).
+    fn to_f64(self) -> f64;
+
+    /// The [`ElemType`] tag of this element (layout keys, metrics).
+    fn elem_type() -> ElemType;
+
+    /// Take a scratch buffer of `len` from this element's pool class.
+    fn take_scratch(len: usize) -> Vec<Self>;
+
+    /// Return a scratch buffer to this element's pool class.
+    fn give_scratch(buf: Vec<Self>);
+
+    /// Register one scratch buffer of `len` in a plan workspace
+    /// manifest (so prewarming covers the generic plans too).
+    fn register_scratch(ws: &mut Workspace, len: usize);
+}
+
+impl Element for f64 {
+    const ZERO: f64 = 0.0;
+    const ONE: f64 = 1.0;
+
+    fn from_f64(v: f64) -> f64 {
+        v
+    }
+
+    fn to_f64(self) -> f64 {
+        self
+    }
+
+    fn elem_type() -> ElemType {
+        ElemType::F64
+    }
+
+    fn take_scratch(len: usize) -> Vec<f64> {
+        scratch::take_f64(len)
+    }
+
+    fn give_scratch(buf: Vec<f64>) {
+        scratch::give_f64(buf)
+    }
+
+    fn register_scratch(ws: &mut Workspace, len: usize) {
+        ws.add_f64(len)
+    }
+}
+
+impl Element for f32 {
+    const ZERO: f32 = 0.0;
+    const ONE: f32 = 1.0;
+
+    fn from_f64(v: f64) -> f32 {
+        v as f32
+    }
+
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+
+    fn elem_type() -> ElemType {
+        ElemType::F32
+    }
+
+    fn take_scratch(len: usize) -> Vec<f32> {
+        scratch::take_f32(len)
+    }
+
+    fn give_scratch(buf: Vec<f32>) {
+        scratch::give_f32(buf)
+    }
+
+    fn register_scratch(ws: &mut Workspace, len: usize) {
+        ws.add_f32(len)
+    }
+}
+
+/// Complex value over a generic [`Element`] — the generic counterpart
+/// of [`crate::fft::C64`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Cx<E> {
+    /// Real part.
+    pub re: E,
+    /// Imaginary part.
+    pub im: E,
+}
+
+impl<E: Element> Cx<E> {
+    /// Construct from parts.
+    pub fn new(re: E, im: E) -> Cx<E> {
+        Cx { re, im }
+    }
+
+    /// The complex zero.
+    pub fn zero() -> Cx<E> {
+        Cx { re: E::ZERO, im: E::ZERO }
+    }
+
+    /// `e^{i·theta}`, computed in `f64` and rounded once to `E`.
+    pub fn cis(theta: f64) -> Cx<E> {
+        Cx { re: E::from_f64(theta.cos()), im: E::from_f64(theta.sin()) }
+    }
+
+    /// Complex conjugate.
+    pub fn conj(self) -> Cx<E> {
+        Cx { re: self.re, im: -self.im }
+    }
+
+    /// Scale both parts by a real factor.
+    pub fn scale(self, s: E) -> Cx<E> {
+        Cx { re: self.re * s, im: self.im * s }
+    }
+
+    /// Multiply by `i` (the positive quarter turn): `i·(a+bi) = -b + ai`.
+    pub fn mul_j(self) -> Cx<E> {
+        Cx { re: -self.im, im: self.re }
+    }
+}
+
+impl<E: Element> Add for Cx<E> {
+    type Output = Cx<E>;
+    fn add(self, o: Cx<E>) -> Cx<E> {
+        Cx { re: self.re + o.re, im: self.im + o.im }
+    }
+}
+
+impl<E: Element> Sub for Cx<E> {
+    type Output = Cx<E>;
+    fn sub(self, o: Cx<E>) -> Cx<E> {
+        Cx { re: self.re - o.re, im: self.im - o.im }
+    }
+}
+
+impl<E: Element> Mul for Cx<E> {
+    type Output = Cx<E>;
+    fn mul(self, o: Cx<E>) -> Cx<E> {
+        Cx {
+            re: self.re * o.re - self.im * o.im,
+            im: self.re * o.im + self.im * o.re,
+        }
+    }
+}
+
+impl<E: Element> Neg for Cx<E> {
+    type Output = Cx<E>;
+    fn neg(self) -> Cx<E> {
+        Cx { re: -self.re, im: -self.im }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complex_algebra_matches_by_hand() {
+        let a: Cx<f64> = Cx::new(1.0, 2.0);
+        let b: Cx<f64> = Cx::new(3.0, -1.0);
+        assert_eq!(a + b, Cx::new(4.0, 1.0));
+        assert_eq!(a - b, Cx::new(-2.0, 3.0));
+        assert_eq!(a * b, Cx::new(5.0, 5.0)); // (1+2i)(3-i) = 5+5i
+        assert_eq!(a.conj(), Cx::new(1.0, -2.0));
+        assert_eq!(a.mul_j(), Cx::new(-2.0, 1.0));
+        assert_eq!(a.scale(2.0), Cx::new(2.0, 4.0));
+        assert_eq!(-a, Cx::new(-1.0, -2.0));
+        assert_eq!(Cx::<f64>::zero(), Cx::new(0.0, 0.0));
+    }
+
+    #[test]
+    fn cis_rounds_once_from_f64() {
+        let t = 0.731;
+        let c64: Cx<f64> = Cx::cis(t);
+        let c32: Cx<f32> = Cx::cis(t);
+        assert_eq!(c32.re, c64.re as f32);
+        assert_eq!(c32.im, c64.im as f32);
+    }
+
+    #[test]
+    fn element_roundtrips_and_tags() {
+        assert_eq!(<f32 as Element>::from_f64(1.5).to_f64(), 1.5);
+        assert_eq!(<f64 as Element>::from_f64(1.5), 1.5);
+        assert_eq!(<f32 as Element>::elem_type(), ElemType::F32);
+        assert_eq!(<f64 as Element>::elem_type(), ElemType::F64);
+        let buf = <f32 as Element>::take_scratch(8);
+        assert_eq!(buf.len(), 8);
+        <f32 as Element>::give_scratch(buf);
+        let mut ws = Workspace::new();
+        <f32 as Element>::register_scratch(&mut ws, 16);
+        assert_eq!(ws.f32_elems(), 16);
+    }
+}

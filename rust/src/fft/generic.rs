@@ -1,0 +1,694 @@
+//! Generic-over-element FFT core: the `f32` instantiation path.
+//!
+//! These plans mirror the dedicated `f64` plans ([`super::kernel`],
+//! [`super::bluestein`], [`super::rfft`], [`super::nd`]) stage for
+//! stage, but are written once over [`Element`](crate::fft::elem::Element)
+//! and store complex data as split re/im planes (structure-of-arrays:
+//! better vectorization and exactly the element width of traffic —
+//! the point of the `f32` path on a memory-bound transform).
+//!
+//! Design choices, deliberately boring:
+//! - the power-of-two kernel is an iterative radix-2 DIT with
+//!   precomputed per-stage twiddle tables (concatenated, stage `h`
+//!   starting at offset `h - 1`), the same scheme as
+//!   [`super::radix2::Radix2Plan`];
+//! - arbitrary sizes go through the same chirp-z construction as
+//!   [`super::bluestein::BluesteinPlan`], including the `i² mod 2n`
+//!   precision guard;
+//! - the real-input path packs even sizes into a half-length complex
+//!   transform with the identical unpack recombination as
+//!   [`super::rfft::RfftPlan`].
+//!
+//! All twiddles are computed in `f64` and rounded once to the target
+//! element, so `f32` tables are correctly rounded. Accuracy of the
+//! `f32` instantiation against the `f64` oracle is pinned by
+//! `tests/prop_layout.rs` (≤ 1e-4 relative).
+
+use std::f64::consts::PI;
+
+use super::elem::{Cx, Element};
+use crate::util::scratch::Workspace;
+
+/// Iterative radix-2 DIT FFT over split re/im planes, power-of-two
+/// sizes only.
+#[derive(Debug, Clone)]
+pub struct GenPow2<E> {
+    n: usize,
+    /// bit-reversal permutation table
+    rev: Vec<u32>,
+    /// per-stage twiddle tables, concatenated; stage `h` (half-butterfly
+    /// span) occupies `[h-1 .. 2h-1)` with entry k = e^{-j π k / h}
+    tw_re: Vec<E>,
+    tw_im: Vec<E>,
+}
+
+impl<E: Element> GenPow2<E> {
+    /// Build a plan for power-of-two `n`.
+    pub fn new(n: usize) -> GenPow2<E> {
+        assert!(n.is_power_of_two(), "GenPow2 requires a power of two, got {n}");
+        let bits = n.trailing_zeros();
+        let mut rev = vec![0u32; n];
+        if bits > 0 {
+            for (i, r) in rev.iter_mut().enumerate() {
+                *r = (i as u32).reverse_bits() >> (32 - bits);
+            }
+        }
+        let mut tw_re = Vec::with_capacity(n.saturating_sub(1));
+        let mut tw_im = Vec::with_capacity(n.saturating_sub(1));
+        let mut h = 1;
+        while h < n {
+            for k in 0..h {
+                let w: Cx<E> = Cx::cis(-PI * k as f64 / h as f64);
+                tw_re.push(w.re);
+                tw_im.push(w.im);
+            }
+            h *= 2;
+        }
+        GenPow2 { n, rev, tw_re, tw_im }
+    }
+
+    /// Transform size.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Forward DFT (unnormalized, negative-exponent convention),
+    /// in place over the two planes.
+    pub fn forward(&self, re: &mut [E], im: &mut [E]) {
+        self.run(re, im, false);
+    }
+
+    /// Inverse DFT including 1/N normalization, in place.
+    pub fn inverse(&self, re: &mut [E], im: &mut [E]) {
+        self.run(re, im, true);
+        let s = E::from_f64(1.0 / self.n as f64);
+        for v in re.iter_mut() {
+            *v = *v * s;
+        }
+        for v in im.iter_mut() {
+            *v = *v * s;
+        }
+    }
+
+    fn run(&self, re: &mut [E], im: &mut [E], invert: bool) {
+        let n = self.n;
+        assert_eq!(re.len(), n);
+        assert_eq!(im.len(), n);
+        for i in 0..n {
+            let j = self.rev[i] as usize;
+            if j > i {
+                re.swap(i, j);
+                im.swap(i, j);
+            }
+        }
+        let mut h = 1;
+        while h < n {
+            let twr = &self.tw_re[h - 1..2 * h - 1];
+            let twi = &self.tw_im[h - 1..2 * h - 1];
+            let mut s = 0;
+            while s < n {
+                for k in 0..h {
+                    let (i0, i1) = (s + k, s + k + h);
+                    let wr = twr[k];
+                    let wi = if invert { -twi[k] } else { twi[k] };
+                    let (ar, ai) = (re[i1], im[i1]);
+                    let tr = wr * ar - wi * ai;
+                    let ti = wr * ai + wi * ar;
+                    let (br, bi) = (re[i0], im[i0]);
+                    re[i1] = br - tr;
+                    im[i1] = bi - ti;
+                    re[i0] = br + tr;
+                    im[i0] = bi + ti;
+                }
+                s += 2 * h;
+            }
+            h *= 2;
+        }
+    }
+}
+
+/// Chirp-z (Bluestein) DFT over split planes for arbitrary sizes,
+/// mirroring [`super::bluestein::BluesteinPlan`].
+#[derive(Debug, Clone)]
+pub struct GenBluestein<E> {
+    n: usize,
+    m: usize,
+    inner: GenPow2<E>,
+    chirp_re: Vec<E>,
+    chirp_im: Vec<E>,
+    kern_re: Vec<E>,
+    kern_im: Vec<E>,
+}
+
+impl<E: Element> GenBluestein<E> {
+    /// Build a plan for any `n >= 1`.
+    pub fn new(n: usize) -> GenBluestein<E> {
+        assert!(n >= 1);
+        let m = (2 * n - 1).next_power_of_two();
+        let inner = GenPow2::new(m);
+        let mut chirp_re = Vec::with_capacity(n);
+        let mut chirp_im = Vec::with_capacity(n);
+        for i in 0..n {
+            // i² mod 2N keeps the angle argument small for large n
+            let sq = (i * i) % (2 * n);
+            let c: Cx<E> = Cx::cis(-PI * sq as f64 / n as f64);
+            chirp_re.push(c.re);
+            chirp_im.push(c.im);
+        }
+        let mut kern_re = vec![E::ZERO; m];
+        let mut kern_im = vec![E::ZERO; m];
+        for i in 0..n {
+            // conjugate chirp, mirrored into the tail for the circular
+            // convolution
+            kern_re[i] = chirp_re[i];
+            kern_im[i] = -chirp_im[i];
+            if i > 0 {
+                kern_re[m - i] = kern_re[i];
+                kern_im[m - i] = kern_im[i];
+            }
+        }
+        inner.forward(&mut kern_re, &mut kern_im);
+        GenBluestein { n, m, inner, chirp_re, chirp_im, kern_re, kern_im }
+    }
+
+    /// Transform size.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Forward DFT (unnormalized), in place over the two planes.
+    pub fn forward(&self, re: &mut [E], im: &mut [E]) {
+        self.transform(re, im);
+    }
+
+    /// Inverse DFT including 1/N normalization, in place:
+    /// `IDFT(x) = conj(DFT(conj(x))) / N`.
+    pub fn inverse(&self, re: &mut [E], im: &mut [E]) {
+        for v in im.iter_mut() {
+            *v = -*v;
+        }
+        self.transform(re, im);
+        let inv = E::from_f64(1.0 / self.n as f64);
+        for v in re.iter_mut() {
+            *v = *v * inv;
+        }
+        for v in im.iter_mut() {
+            *v = -*v * inv;
+        }
+    }
+
+    fn transform(&self, re: &mut [E], im: &mut [E]) {
+        let (n, m) = (self.n, self.m);
+        assert_eq!(re.len(), n);
+        assert_eq!(im.len(), n);
+        let mut br = E::take_scratch(m);
+        let mut bi = E::take_scratch(m);
+        br[n..].fill(E::ZERO);
+        bi[n..].fill(E::ZERO);
+        for i in 0..n {
+            let (ar, ai) = (re[i], im[i]);
+            let (cr, ci) = (self.chirp_re[i], self.chirp_im[i]);
+            br[i] = ar * cr - ai * ci;
+            bi[i] = ar * ci + ai * cr;
+        }
+        self.inner.forward(&mut br, &mut bi);
+        for i in 0..m {
+            let (ar, ai) = (br[i], bi[i]);
+            let (kr, ki) = (self.kern_re[i], self.kern_im[i]);
+            br[i] = ar * kr - ai * ki;
+            bi[i] = ar * ki + ai * kr;
+        }
+        self.inner.inverse(&mut br, &mut bi);
+        for i in 0..n {
+            let (ar, ai) = (br[i], bi[i]);
+            let (cr, ci) = (self.chirp_re[i], self.chirp_im[i]);
+            re[i] = ar * cr - ai * ci;
+            im[i] = ar * ci + ai * cr;
+        }
+        E::give_scratch(br);
+        E::give_scratch(bi);
+    }
+}
+
+/// Size-dispatching complex FFT over split planes: power-of-two sizes
+/// use [`GenPow2`], everything else [`GenBluestein`].
+#[derive(Debug, Clone)]
+pub enum GenFft<E> {
+    /// Iterative radix-2 plan (power-of-two sizes).
+    Pow2(GenPow2<E>),
+    /// Chirp-z plan (all other sizes).
+    Bluestein(GenBluestein<E>),
+}
+
+impl<E: Element> GenFft<E> {
+    /// Build the right plan for `n`.
+    pub fn new(n: usize) -> GenFft<E> {
+        if n.is_power_of_two() {
+            GenFft::Pow2(GenPow2::new(n))
+        } else {
+            GenFft::Bluestein(GenBluestein::new(n))
+        }
+    }
+
+    /// Transform size.
+    pub fn len(&self) -> usize {
+        match self {
+            GenFft::Pow2(p) => p.n(),
+            GenFft::Bluestein(p) => p.n(),
+        }
+    }
+
+    /// Whether the size is zero (never true; plans require `n >= 1`).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Forward DFT (unnormalized), in place over the two planes.
+    pub fn forward(&self, re: &mut [E], im: &mut [E]) {
+        match self {
+            GenFft::Pow2(p) => p.forward(re, im),
+            GenFft::Bluestein(p) => p.forward(re, im),
+        }
+    }
+
+    /// Inverse DFT with 1/N normalization, in place.
+    pub fn inverse(&self, re: &mut [E], im: &mut [E]) {
+        match self {
+            GenFft::Pow2(p) => p.inverse(re, im),
+            GenFft::Bluestein(p) => p.inverse(re, im),
+        }
+    }
+
+    /// Register one transform's scratch classes (the Bluestein
+    /// convolution planes; the pow2 kernel is allocation-free).
+    pub fn register_scratch(&self, ws: &mut Workspace) {
+        if let GenFft::Bluestein(p) = self {
+            E::register_scratch(ws, p.m);
+            E::register_scratch(ws, p.m);
+        }
+    }
+}
+
+/// Real-input FFT over split planes, mirroring
+/// [`super::rfft::RfftPlan`]: even sizes pack into a half-length
+/// complex transform, odd sizes run the full complex plan.
+#[derive(Debug, Clone)]
+pub struct GenRfft<E> {
+    /// Real input length.
+    pub n: usize,
+    inner: GenFft<E>,
+    /// recombination twiddles e^{-2π j k / n}, k in 0..=half/2
+    tw_re: Vec<E>,
+    tw_im: Vec<E>,
+    even: bool,
+}
+
+impl<E: Element> GenRfft<E> {
+    /// Build a plan for real inputs of length `n`.
+    pub fn new(n: usize) -> GenRfft<E> {
+        assert!(n >= 1);
+        let even = n % 2 == 0 && n > 1;
+        if even {
+            let half = n / 2;
+            let mut tw_re = Vec::with_capacity(half / 2 + 1);
+            let mut tw_im = Vec::with_capacity(half / 2 + 1);
+            for k in 0..half / 2 + 1 {
+                let w: Cx<E> = Cx::cis(-2.0 * PI * k as f64 / n as f64);
+                tw_re.push(w.re);
+                tw_im.push(w.im);
+            }
+            GenRfft { n, inner: GenFft::new(half), tw_re, tw_im, even }
+        } else {
+            GenRfft { n, inner: GenFft::new(n), tw_re: Vec::new(), tw_im: Vec::new(), even }
+        }
+    }
+
+    /// Onesided spectrum length, `n/2 + 1`.
+    pub fn onesided_len(&self) -> usize {
+        self.n / 2 + 1
+    }
+
+    fn twiddle_at(&self, k: usize) -> Cx<E> {
+        let half = self.n / 2;
+        if k <= half / 2 {
+            Cx::new(self.tw_re[k], self.tw_im[k])
+        } else {
+            // w^k = -conj(w^{half-k}) since w^{half} = -1
+            Cx::new(-self.tw_re[half - k], self.tw_im[half - k])
+        }
+    }
+
+    /// Forward RFFT: real input (len n) → onesided spectrum planes
+    /// (len n/2+1 each).
+    pub fn forward(&self, x: &[E], out_re: &mut [E], out_im: &mut [E]) {
+        let h = self.onesided_len();
+        assert_eq!(x.len(), self.n);
+        assert_eq!(out_re.len(), h);
+        assert_eq!(out_im.len(), h);
+        if !self.even {
+            let mut br = E::take_scratch(self.n);
+            let mut bi = E::take_scratch(self.n);
+            br.copy_from_slice(x);
+            bi.fill(E::ZERO);
+            self.inner.forward(&mut br, &mut bi);
+            out_re.copy_from_slice(&br[..h]);
+            out_im.copy_from_slice(&bi[..h]);
+            E::give_scratch(br);
+            E::give_scratch(bi);
+            return;
+        }
+        let half = self.n / 2;
+        let mut zr = E::take_scratch(half);
+        let mut zi = E::take_scratch(half);
+        for m in 0..half {
+            zr[m] = x[2 * m];
+            zi[m] = x[2 * m + 1];
+        }
+        self.inner.forward(&mut zr, &mut zi);
+        let half_e = E::from_f64(0.5);
+        for k in 0..=half {
+            let zk = if k == half {
+                Cx::new(zr[0], zi[0])
+            } else {
+                Cx::new(zr[k], zi[k])
+            };
+            let c = (half - k) % half;
+            let zc = Cx::new(zr[c], zi[c]).conj();
+            let e = (zk + zc).scale(half_e);
+            let o = (zk - zc).mul_j().scale(-half_e);
+            let v = e + self.twiddle_at(k) * o;
+            out_re[k] = v.re;
+            out_im[k] = v.im;
+        }
+        E::give_scratch(zr);
+        E::give_scratch(zi);
+    }
+
+    /// Inverse RFFT: onesided spectrum planes → real output (len n),
+    /// normalized.
+    pub fn inverse(&self, sre: &[E], sim: &[E], out: &mut [E]) {
+        let h = self.onesided_len();
+        assert_eq!(sre.len(), h);
+        assert_eq!(sim.len(), h);
+        assert_eq!(out.len(), self.n);
+        if !self.even {
+            let n = self.n;
+            let mut br = E::take_scratch(n);
+            let mut bi = E::take_scratch(n);
+            br[..h].copy_from_slice(sre);
+            bi[..h].copy_from_slice(sim);
+            for k in h..n {
+                br[k] = sre[n - k];
+                bi[k] = -sim[n - k];
+            }
+            self.inner.inverse(&mut br, &mut bi);
+            out.copy_from_slice(&br);
+            E::give_scratch(br);
+            E::give_scratch(bi);
+            return;
+        }
+        let half = self.n / 2;
+        let mut zr = E::take_scratch(half);
+        let mut zi = E::take_scratch(half);
+        let half_e = E::from_f64(0.5);
+        for k in 0..half {
+            let xk = Cx::new(sre[k], sim[k]);
+            let xc = Cx::new(sre[half - k], sim[half - k]).conj();
+            let e = (xk + xc).scale(half_e);
+            let o = (xk - xc).scale(half_e) * self.twiddle_at(k).conj();
+            let z = e + o.mul_j();
+            zr[k] = z.re;
+            zi[k] = z.im;
+        }
+        self.inner.inverse(&mut zr, &mut zi);
+        for m in 0..half {
+            out[2 * m] = zr[m];
+            out[2 * m + 1] = zi[m];
+        }
+        E::give_scratch(zr);
+        E::give_scratch(zi);
+    }
+
+    /// Register one transform's scratch classes.
+    pub fn register_scratch(&self, ws: &mut Workspace) {
+        let len = if self.even { self.n / 2 } else { self.n };
+        E::register_scratch(ws, len);
+        E::register_scratch(ws, len);
+        self.inner.register_scratch(ws);
+    }
+}
+
+/// 2-D real-input FFT over split planes: row RFFTs, then column FFTs
+/// routed through a tiled transpose (mirroring
+/// [`super::nd::Rfft2Plan`]'s transpose path, stage II of the fused
+/// 2-D DCT).
+#[derive(Debug, Clone)]
+pub struct GenRfft2<E> {
+    /// Rows.
+    pub n1: usize,
+    /// Columns.
+    pub n2: usize,
+    /// Onesided columns, `n2/2 + 1`.
+    pub h2: usize,
+    row: GenRfft<E>,
+    col: GenFft<E>,
+}
+
+impl<E: Element> GenRfft2<E> {
+    /// Build a plan for `n1 x n2` real inputs.
+    pub fn new(n1: usize, n2: usize) -> GenRfft2<E> {
+        assert!(n1 >= 1 && n2 >= 1);
+        let row = GenRfft::new(n2);
+        let h2 = row.onesided_len();
+        GenRfft2 { n1, n2, h2, row, col: GenFft::new(n1) }
+    }
+
+    /// Forward: `n1*n2` reals → `n1*h2` onesided spectrum planes.
+    pub fn forward(&self, x: &[E], sre: &mut [E], sim: &mut [E]) {
+        let (n1, n2, h2) = (self.n1, self.n2, self.h2);
+        assert_eq!(x.len(), n1 * n2);
+        assert_eq!(sre.len(), n1 * h2);
+        assert_eq!(sim.len(), n1 * h2);
+        for r in 0..n1 {
+            self.row.forward(
+                &x[r * n2..(r + 1) * n2],
+                &mut sre[r * h2..(r + 1) * h2],
+                &mut sim[r * h2..(r + 1) * h2],
+            );
+        }
+        self.col_fft(sre, sim, false);
+    }
+
+    /// Inverse: spectrum planes (consumed as scratch) → `n1*n2` reals.
+    pub fn inverse(&self, sre: &mut [E], sim: &mut [E], out: &mut [E]) {
+        let (n1, n2, h2) = (self.n1, self.n2, self.h2);
+        assert_eq!(sre.len(), n1 * h2);
+        assert_eq!(sim.len(), n1 * h2);
+        assert_eq!(out.len(), n1 * n2);
+        self.col_fft(sre, sim, true);
+        for r in 0..n1 {
+            self.row.inverse(
+                &sre[r * h2..(r + 1) * h2],
+                &sim[r * h2..(r + 1) * h2],
+                &mut out[r * n2..(r + 1) * n2],
+            );
+        }
+    }
+
+    /// Column FFTs via transpose → contiguous row FFTs → transpose back.
+    fn col_fft(&self, sre: &mut [E], sim: &mut [E], invert: bool) {
+        let (n1, h2) = (self.n1, self.h2);
+        if n1 == 1 {
+            return; // length-1 column transform is the identity
+        }
+        let mut tr = E::take_scratch(n1 * h2);
+        let mut ti = E::take_scratch(n1 * h2);
+        transpose_plane(sre, &mut tr, n1, h2);
+        transpose_plane(sim, &mut ti, n1, h2);
+        for c in 0..h2 {
+            let (re, im) = (&mut tr[c * n1..(c + 1) * n1], &mut ti[c * n1..(c + 1) * n1]);
+            if invert {
+                self.col.inverse(re, im);
+            } else {
+                self.col.forward(re, im);
+            }
+        }
+        transpose_plane(&tr, sre, h2, n1);
+        transpose_plane(&ti, sim, h2, n1);
+        E::give_scratch(tr);
+        E::give_scratch(ti);
+    }
+
+    /// Register one transform's scratch classes.
+    pub fn register_scratch(&self, ws: &mut Workspace) {
+        self.row.register_scratch(ws);
+        if self.n1 > 1 {
+            E::register_scratch(ws, self.n1 * self.h2);
+            E::register_scratch(ws, self.n1 * self.h2);
+            self.col.register_scratch(ws);
+        }
+    }
+}
+
+/// Cache-blocked out-of-place transpose of a `rows x cols` plane.
+fn transpose_plane<E: Element>(src: &[E], dst: &mut [E], rows: usize, cols: usize) {
+    const B: usize = 32;
+    debug_assert_eq!(src.len(), rows * cols);
+    debug_assert_eq!(dst.len(), rows * cols);
+    let mut ib = 0;
+    while ib < rows {
+        let imax = (ib + B).min(rows);
+        let mut jb = 0;
+        while jb < cols {
+            let jmax = (jb + B).min(cols);
+            for i in ib..imax {
+                for j in jb..jmax {
+                    dst[j * rows + i] = src[i * cols + j];
+                }
+            }
+            jb += B;
+        }
+        ib += B;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::radix2::dft_naive;
+    use crate::fft::C64;
+    use crate::util::rng::Rng;
+
+    fn planes_from(x: &[C64]) -> (Vec<f64>, Vec<f64>) {
+        (x.iter().map(|c| c.re).collect(), x.iter().map(|c| c.im).collect())
+    }
+
+    #[test]
+    fn gen_pow2_matches_naive_dft() {
+        let mut rng = Rng::new(41);
+        for &n in &[1usize, 2, 4, 8, 32, 128] {
+            let x: Vec<C64> = (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+            let want = dft_naive(&x, false);
+            let (mut re, mut im) = planes_from(&x);
+            let p: GenPow2<f64> = GenPow2::new(n);
+            p.forward(&mut re, &mut im);
+            for k in 0..n {
+                assert!((re[k] - want[k].re).abs() < 1e-8 * n as f64, "n={n} k={k}");
+                assert!((im[k] - want[k].im).abs() < 1e-8 * n as f64, "n={n} k={k}");
+            }
+            p.inverse(&mut re, &mut im);
+            for k in 0..n {
+                assert!((re[k] - x[k].re).abs() < 1e-9, "n={n}");
+                assert!((im[k] - x[k].im).abs() < 1e-9, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn gen_bluestein_matches_naive_dft() {
+        let mut rng = Rng::new(42);
+        for &n in &[1usize, 3, 5, 7, 12, 17, 100] {
+            let x: Vec<C64> = (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+            let want = dft_naive(&x, false);
+            let (mut re, mut im) = planes_from(&x);
+            let p: GenBluestein<f64> = GenBluestein::new(n);
+            p.forward(&mut re, &mut im);
+            for k in 0..n {
+                assert!((re[k] - want[k].re).abs() < 1e-8 * n as f64, "n={n} k={k}");
+                assert!((im[k] - want[k].im).abs() < 1e-8 * n as f64, "n={n} k={k}");
+            }
+            p.inverse(&mut re, &mut im);
+            for k in 0..n {
+                assert!((re[k] - x[k].re).abs() < 1e-9, "n={n}");
+                assert!((im[k] - x[k].im).abs() < 1e-9, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn gen_rfft_matches_f64_rfft_plan() {
+        use crate::fft::rfft::{onesided_len, RfftPlan};
+        let mut rng = Rng::new(43);
+        for &n in &[1usize, 2, 3, 4, 5, 8, 12, 15, 16, 64, 100] {
+            let x = rng.normal_vec(n);
+            let oracle = RfftPlan::new(n);
+            let mut want = vec![C64::default(); onesided_len(n)];
+            oracle.forward(&x, &mut want);
+            let p: GenRfft<f64> = GenRfft::new(n);
+            let h = p.onesided_len();
+            assert_eq!(h, onesided_len(n));
+            let mut sre = vec![0.0; h];
+            let mut sim = vec![0.0; h];
+            p.forward(&x, &mut sre, &mut sim);
+            for k in 0..h {
+                assert!((sre[k] - want[k].re).abs() < 1e-8 * n as f64, "n={n} k={k}");
+                assert!((sim[k] - want[k].im).abs() < 1e-8 * n as f64, "n={n} k={k}");
+            }
+            let mut back = vec![0.0; n];
+            p.inverse(&sre, &sim, &mut back);
+            for (a, b) in back.iter().zip(&x) {
+                assert!((a - b).abs() < 1e-9, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn gen_rfft2_matches_f64_rfft2_plan() {
+        use crate::fft::nd::Rfft2Plan;
+        let mut rng = Rng::new(44);
+        for &(n1, n2) in &[(1usize, 8usize), (4, 4), (8, 8), (5, 7), (9, 16), (16, 12)] {
+            let x = rng.normal_vec(n1 * n2);
+            let oracle = Rfft2Plan::new(n1, n2);
+            let mut want = vec![C64::default(); n1 * oracle.h2];
+            oracle.forward(&x, &mut want);
+            let p: GenRfft2<f64> = GenRfft2::new(n1, n2);
+            let mut sre = vec![0.0; n1 * p.h2];
+            let mut sim = vec![0.0; n1 * p.h2];
+            p.forward(&x, &mut sre, &mut sim);
+            let scale = (n1 * n2) as f64;
+            for k in 0..n1 * p.h2 {
+                assert!((sre[k] - want[k].re).abs() < 1e-8 * scale, "{n1}x{n2} k={k}");
+                assert!((sim[k] - want[k].im).abs() < 1e-8 * scale, "{n1}x{n2} k={k}");
+            }
+            let mut back = vec![0.0; n1 * n2];
+            p.inverse(&mut sre, &mut sim, &mut back);
+            for (a, b) in back.iter().zip(&x) {
+                assert!((a - b).abs() < 1e-8, "{n1}x{n2}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_instantiation_tracks_f64() {
+        let mut rng = Rng::new(45);
+        for &n in &[8usize, 15, 32] {
+            let x = rng.normal_vec(n);
+            let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+            let p64: GenRfft<f64> = GenRfft::new(n);
+            let p32: GenRfft<f32> = GenRfft::new(n);
+            let h = p64.onesided_len();
+            let (mut ar, mut ai) = (vec![0.0f64; h], vec![0.0f64; h]);
+            let (mut br, mut bi) = (vec![0.0f32; h], vec![0.0f32; h]);
+            p64.forward(&x, &mut ar, &mut ai);
+            p32.forward(&x32, &mut br, &mut bi);
+            let scale: f64 = ar.iter().chain(ai.iter()).fold(1.0f64, |m, v| m.max(v.abs()));
+            for k in 0..h {
+                assert!((br[k] as f64 - ar[k]).abs() / scale < 1e-5, "n={n} k={k}");
+                assert!((bi[k] as f64 - ai[k]).abs() / scale < 1e-5, "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_plane_roundtrips() {
+        let (r, c) = (5usize, 7usize);
+        let src: Vec<f64> = (0..r * c).map(|i| i as f64).collect();
+        let mut t = vec![0.0; r * c];
+        transpose_plane(&src, &mut t, r, c);
+        assert_eq!(t[0], 0.0);
+        assert_eq!(t[1], src[c]); // (1,0) of the transpose = (0,1) of src... column-major walk
+        let mut back = vec![0.0; r * c];
+        transpose_plane(&t, &mut back, c, r);
+        assert_eq!(back, src);
+    }
+}

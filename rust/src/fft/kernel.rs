@@ -83,7 +83,9 @@ pub fn panel_cols() -> usize {
 /// A power-of-two complex FFT plan executing one selected kernel.
 #[derive(Debug, Clone)]
 pub enum Pow2Plan {
+    /// Reference in-place scalar radix-2 kernel.
     Scalar(Radix2Plan),
+    /// Split-radix/radix-4 structure-of-arrays throughput kernel.
     SplitRadix(SoaPlan),
 }
 
@@ -101,6 +103,7 @@ impl Pow2Plan {
         }
     }
 
+    /// Transform length this plan was built for.
     pub fn n(&self) -> usize {
         match self {
             Pow2Plan::Scalar(p) => p.n,
@@ -108,6 +111,7 @@ impl Pow2Plan {
         }
     }
 
+    /// Which kernel variant this plan dispatches to.
     pub fn kernel(&self) -> FftKernel {
         match self {
             Pow2Plan::Scalar(_) => FftKernel::ScalarRadix2,

@@ -23,9 +23,12 @@
 //! assert!((spec[0].re - 8.0).abs() < 1e-12);
 //! assert!(spec[1..].iter().all(|c| c.abs() < 1e-12));
 //! ```
+#![warn(missing_docs)]
 
 pub mod bluestein;
 pub mod complex;
+pub mod elem;
+pub mod generic;
 pub mod kernel;
 pub mod nd;
 pub mod plan;
@@ -34,6 +37,8 @@ pub mod rfft;
 pub mod soa;
 
 pub use complex::C64;
+pub use elem::{Cx, Element};
+pub use generic::{GenFft, GenRfft, GenRfft2};
 pub use kernel::{panel_cols, FftKernel, Pow2Plan};
 pub use nd::{Rfft2Plan, Rfft3Plan};
 pub use plan::{cached_plan_count, plan, FftPlan};

@@ -26,14 +26,18 @@
 use super::complex::C64;
 use super::plan::plan;
 use super::rfft::{onesided_len, RfftPlan};
+use crate::layout::Layout;
 use crate::parallel::{par_chunks_mut, transpose_into, ExecPolicy, ShardPolicy};
 use crate::util::scratch;
 
 /// 2D RFFT plan for an (n1 x n2) real matrix -> (n1 x h2) onesided spectrum.
 #[derive(Debug, Clone)]
 pub struct Rfft2Plan {
+    /// Number of rows (first, slower axis).
     pub n1: usize,
+    /// Number of columns (second, contiguous axis).
     pub n2: usize,
+    /// Onesided spectrum width, `n2 / 2 + 1`.
     pub h2: usize,
     row: RfftPlan,
     col: std::sync::Arc<super::plan::FftPlan>,
@@ -42,6 +46,7 @@ pub struct Rfft2Plan {
 }
 
 impl Rfft2Plan {
+    /// Plan an `n1 x n2` real 2D FFT with the auto execution policy.
     pub fn new(n1: usize, n2: usize) -> Rfft2Plan {
         Self::with_policy(n1, n2, ExecPolicy::Auto)
     }
@@ -126,6 +131,50 @@ impl Rfft2Plan {
         // stage left in the serial path).
         let _s = crate::obs::SpanGuard::begin("rfft2.cols");
         if !self.col.try_transform_cols(out, h2, false) {
+            self.col_fft_via_transpose(out, false, 1);
+        }
+    }
+
+    /// Forward over a strided real view: the (n1 x n2) input block is
+    /// read at `layout` strides (`x[i1*s1 + i2*s2]`) straight from the
+    /// caller's buffer — no gather copy — into the same contiguous
+    /// (n1*h2) onesided spectrum as [`Rfft2Plan::forward`]. Per-row
+    /// arithmetic is [`RfftPlan::forward_strided`], which performs the
+    /// identical operation sequence as the contiguous row path, so the
+    /// output is bit-identical to packing the view and calling
+    /// `forward`. `layout` must be a 2D f64 descriptor matching this
+    /// plan's shape (see [`Layout::expect_2d_f64`]).
+    pub fn forward_strided(&self, x: &[f64], layout: &Layout, out: &mut [C64]) {
+        let (n1, n2, h2) = (self.n1, self.n2, self.h2);
+        let (s1, s2) = layout.expect_2d_f64(n1, n2);
+        if s2 == 1 && s1 == n2 {
+            // contiguous view: the plain path, sliced to the block
+            self.forward(&x[..n1 * n2], out);
+            return;
+        }
+        assert!(
+            x.len() > (n1 - 1) * s1 + (n2 - 1) * s2,
+            "strided view out of bounds: len {} for shape ({n1},{n2}) strides ({s1},{s2})",
+            x.len()
+        );
+        assert_eq!(out.len(), n1 * h2);
+        let (row_bands, col_bands) = (self.bands(n1), self.bands(h2));
+        {
+            // rows: real FFT straight off the strided view (each output
+            // row is an independent h2 chunk, so the banded fan-out is
+            // bit-identical to the serial row loop)
+            let _s = crate::obs::SpanGuard::begin("rfft2.rows");
+            let row = &self.row;
+            par_chunks_mut(out, h2, row_bands, |r, orow| {
+                row.forward_strided(&x[r * s1..], s2, orow);
+            });
+        }
+        // columns: identical to the contiguous forward — the spectrum
+        // is already contiguous at this point
+        let _s = crate::obs::SpanGuard::begin("rfft2.cols");
+        if col_bands > 1 {
+            self.col_fft_via_transpose(out, false, col_bands);
+        } else if !self.col.try_transform_cols(out, h2, false) {
             self.col_fft_via_transpose(out, false, 1);
         }
     }
@@ -598,6 +647,36 @@ mod tests {
                 for (u, v) in a.iter().zip(&b) {
                     assert!((*u - *v).abs() == 0.0, "({n1},{n2}) shards={shards}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn forward_strided_is_bit_identical() {
+        use crate::layout::Layout;
+        let mut rng = Rng::new(39);
+        // pow2, odd (Bluestein columns/rows), and mixed shapes
+        for &(n1, n2) in &[(4usize, 4usize), (8, 8), (9, 15), (7, 13), (1, 8), (16, 6)] {
+            let x = rng.normal_vec(n1 * n2);
+            let plan = Rfft2Plan::new(n1, n2);
+            let mut want = vec![C64::default(); n1 * plan.h2];
+            plan.forward(&x, &mut want);
+            for &(r1, r2) in &[(1usize, 1usize), (3, 1), (1, 2), (4, 3)] {
+                // embed the block in a padded arena at strides (s1, s2)
+                let (s2, s1) = (r2, n2 * r2 * r1 + 1);
+                let mut arena = vec![f64::NAN; (n1 - 1) * s1 + (n2 - 1) * s2 + 1];
+                for i1 in 0..n1 {
+                    for i2 in 0..n2 {
+                        arena[i1 * s1 + i2 * s2] = x[i1 * n2 + i2];
+                    }
+                }
+                let layout =
+                    Layout::contiguous(&[n1, n2]).with_strides(&[s1, s2]).with_batch_stride(
+                        (n1 - 1) * s1 + (n2 - 1) * s2 + 1,
+                    );
+                let mut got = vec![C64::default(); n1 * plan.h2];
+                plan.forward_strided(&arena, &layout, &mut got);
+                assert_eq!(got, want, "({n1},{n2}) strides ({s1},{s2})");
             }
         }
     }

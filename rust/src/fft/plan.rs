@@ -18,11 +18,14 @@ use super::kernel::{FftKernel, Pow2Plan};
 /// Bluestein else).
 #[derive(Debug, Clone)]
 pub enum FftPlan {
+    /// Power-of-two size: direct radix kernel.
     Pow2(Pow2Plan),
+    /// Any other size: chirp-z via a padded power-of-two convolution.
     Bluestein(BluesteinPlan),
 }
 
 impl FftPlan {
+    /// Plan a complex DFT of length `n` with the process-default kernel.
     pub fn new(n: usize) -> FftPlan {
         FftPlan::with_kernel(n, FftKernel::default_kernel())
     }
@@ -37,6 +40,7 @@ impl FftPlan {
         }
     }
 
+    /// Transform length this plan was built for.
     pub fn len(&self) -> usize {
         match self {
             FftPlan::Pow2(p) => p.n(),
@@ -44,6 +48,7 @@ impl FftPlan {
         }
     }
 
+    /// True iff the planned length is zero.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -13,6 +13,7 @@ use super::complex::C64;
 /// Precomputed state for power-of-two FFTs of one size.
 #[derive(Debug, Clone)]
 pub struct Radix2Plan {
+    /// Transform length (a power of two).
     pub n: usize,
     /// twiddles[s] holds the stage-s factors w_m^k, m = 2^(s+1)
     twiddles: Vec<Vec<C64>>,

@@ -20,6 +20,7 @@ pub fn onesided_len(n: usize) -> usize {
 /// Plan for real-input FFTs of one size.
 #[derive(Debug, Clone)]
 pub struct RfftPlan {
+    /// Real input length.
     pub n: usize,
     /// half-size complex plan (even n), or full-size plan (odd n)
     inner: Arc<FftPlan>,
@@ -29,6 +30,7 @@ pub struct RfftPlan {
 }
 
 impl RfftPlan {
+    /// Plan a real-input FFT of length `n` (shared complex-plan cache).
     pub fn new(n: usize) -> RfftPlan {
         RfftPlan::build(n, plan)
     }
@@ -85,6 +87,46 @@ impl RfftPlan {
         self.inner.forward(&mut z);
         // unpack: X[k] = E[k] + w^k O[k]
         //   E[k] = (Z[k] + conj(Z[h-k]))/2, O[k] = -j(Z[k] - conj(Z[h-k]))/2
+        for k in 0..=half {
+            let zk = if k == half { z[0] } else { z[k] };
+            let zc = z[(half - k) % half].conj();
+            let e = (zk + zc).scale(0.5);
+            let o = (zk - zc).mul_j().scale(-0.5);
+            out[k] = e + self.twiddle_at(k) * o;
+        }
+        scratch::give_c64(z);
+    }
+
+    /// Strided forward RFFT: the length-n real signal lives in `x` at
+    /// element stride `stride` (`x[m * stride]` is sample m). Gathers
+    /// exactly the values a contiguous [`RfftPlan::forward`] call would
+    /// see, in the same arithmetic order, so the output is
+    /// bit-identical; `stride == 1` *is* the contiguous call.
+    pub fn forward_strided(&self, x: &[f64], stride: usize, out: &mut [C64]) {
+        assert!(stride >= 1, "stride must be positive");
+        if stride == 1 {
+            self.forward(&x[..self.n], out);
+            return;
+        }
+        assert!(x.len() > (self.n - 1) * stride, "strided input too short");
+        assert_eq!(out.len(), onesided_len(self.n));
+        if !self.even {
+            let mut buf = scratch::take_c64(self.n);
+            for (i, b) in buf.iter_mut().enumerate() {
+                *b = C64::new(x[i * stride], 0.0);
+            }
+            self.inner.forward(&mut buf);
+            out.copy_from_slice(&buf[..onesided_len(self.n)]);
+            scratch::give_c64(buf);
+            return;
+        }
+        let half = self.n / 2;
+        // pack straight from the strided view: z[m] = x[2m·s] + j x[(2m+1)·s]
+        let mut z = scratch::take_c64(half);
+        for (m, zm) in z.iter_mut().enumerate() {
+            *zm = C64::new(x[2 * m * stride], x[(2 * m + 1) * stride]);
+        }
+        self.inner.forward(&mut z);
         for k in 0..=half {
             let zk = if k == half { z[0] } else { z[k] };
             let zc = z[(half - k) % half].conj();
@@ -236,6 +278,26 @@ mod tests {
                 for (a, b) in back.iter().zip(&x) {
                     assert!((a - b).abs() < 1e-9, "n={n} lanes={lanes}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn forward_strided_is_bit_identical() {
+        let mut rng = Rng::new(24);
+        for &n in &[1usize, 2, 4, 7, 9, 16, 15, 64] {
+            for &stride in &[1usize, 2, 3, 5] {
+                let x = rng.normal_vec(n);
+                let mut arena = vec![0.0; (n - 1) * stride + 1];
+                for (i, &v) in x.iter().enumerate() {
+                    arena[i * stride] = v;
+                }
+                let plan = RfftPlan::new(n);
+                let mut want = vec![C64::default(); onesided_len(n)];
+                plan.forward(&x, &mut want);
+                let mut got = vec![C64::default(); onesided_len(n)];
+                plan.forward_strided(&arena, stride, &mut got);
+                assert_eq!(got, want, "n={n} stride={stride}");
             }
         }
     }

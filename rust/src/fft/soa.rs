@@ -42,6 +42,7 @@ use crate::util::scratch;
 /// size, executing on planar scratch.
 #[derive(Debug, Clone)]
 pub struct SoaPlan {
+    /// Transform length (a power of two).
     pub n: usize,
     /// base-2 bit-reversal permutation (shared ordering with the scalar
     /// radix-2 kernel)

@@ -1,0 +1,287 @@
+//! Memory-layout descriptors for layout-polymorphic plan execution.
+//!
+//! Every plan in the tree historically assumed contiguous row-major
+//! `f64` input. [`Layout`] makes the assumption explicit and optional:
+//! it names the element type ([`ElemType`]), the per-axis strides, and
+//! the batch stride of a caller's buffer, so the strided entry points
+//! (`Dct2::forward_strided`, `Rfft2Plan::forward_strided`,
+//! `Dct2::forward_batch_strided`, …) can run directly over padded or
+//! interleaved views instead of forcing a gather copy first — the same
+//! "layout is a plan parameter" argument the flexible MD-DFT framework
+//! makes for slab/pencil views.
+//!
+//! Strides are in **elements** (not bytes) and must be positive; the
+//! innermost data order inside a block is whatever the strides say, the
+//! transform semantics are unchanged (outputs are always the plan's
+//! packed row-major order). The strided f64 paths gather exactly the
+//! same values a contiguous call would, in the same arithmetic order,
+//! so their outputs are bit-identical to the contiguous plan
+//! (`tests/prop_layout.rs` pins this).
+//!
+//! ```
+//! use mddct::layout::Layout;
+//!
+//! // an 8x8 tile inside a 32-column padded image, batches 40 rows apart
+//! let l = Layout::contiguous(&[8, 8]).with_strides(&[32, 1]).with_batch_stride(8 * 40);
+//! assert_eq!(l.numel(), 64);
+//! assert!(!l.is_contiguous());
+//! assert!(l.validate().is_ok());
+//! ```
+
+/// Element type a buffer holds — the precision half of a [`Layout`].
+///
+/// `F64` is the crate's native precision; `F32` plans run through the
+/// generic element core ([`crate::fft::elem`]) and halve the memory
+/// traffic of a memory-bound transform.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ElemType {
+    /// 64-bit IEEE-754 (the default everywhere).
+    #[default]
+    F64,
+    /// 32-bit IEEE-754 (the reduced-precision throughput path).
+    F32,
+}
+
+impl ElemType {
+    /// Size of one element in bytes.
+    pub fn size_bytes(self) -> usize {
+        match self {
+            ElemType::F64 => 8,
+            ElemType::F32 => 4,
+        }
+    }
+
+    /// Stable lowercase label (`"f64"` / `"f32"`) for metrics and
+    /// bench JSON rows.
+    pub fn name(self) -> &'static str {
+        match self {
+            ElemType::F64 => "f64",
+            ElemType::F32 => "f32",
+        }
+    }
+
+    /// Parse a label produced by [`ElemType::name`].
+    pub fn parse(s: &str) -> Option<ElemType> {
+        match s {
+            "f64" => Some(ElemType::F64),
+            "f32" => Some(ElemType::F32),
+            _ => None,
+        }
+    }
+}
+
+/// A strided view description: element type, logical shape, per-axis
+/// strides, and the stride between consecutive batch blocks.
+///
+/// All strides count **elements**. `strides[d]` is the distance between
+/// consecutive indices along axis `d`; `batch_stride` is the distance
+/// between block `b` and block `b + 1` of a batched buffer. The
+/// contiguous row-major layout of shape `[n1, n2]` is
+/// `strides = [n2, 1]`, `batch_stride = n1 * n2`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Layout {
+    /// Element type of the underlying buffer.
+    pub elem: ElemType,
+    /// Logical extent per axis (row-major order, outermost first).
+    pub shape: Vec<usize>,
+    /// Distance in elements between consecutive indices per axis.
+    pub strides: Vec<usize>,
+    /// Distance in elements between consecutive batch blocks.
+    pub batch_stride: usize,
+}
+
+impl Layout {
+    /// The contiguous row-major `f64` layout of `shape` — the layout
+    /// every plan assumed before layouts existed.
+    pub fn contiguous(shape: &[usize]) -> Layout {
+        let numel: usize = shape.iter().product();
+        Layout {
+            elem: ElemType::F64,
+            shape: shape.to_vec(),
+            strides: contiguous_strides(shape),
+            batch_stride: numel,
+        }
+    }
+
+    /// Same layout with a different element type.
+    pub fn with_elem(mut self, elem: ElemType) -> Layout {
+        self.elem = elem;
+        self
+    }
+
+    /// Same layout with explicit per-axis strides (must match the rank).
+    pub fn with_strides(mut self, strides: &[usize]) -> Layout {
+        assert_eq!(
+            strides.len(),
+            self.shape.len(),
+            "stride count must match the rank"
+        );
+        self.strides = strides.to_vec();
+        self
+    }
+
+    /// Same layout with an explicit batch stride (padding between
+    /// packed blocks).
+    pub fn with_batch_stride(mut self, batch_stride: usize) -> Layout {
+        self.batch_stride = batch_stride;
+        self
+    }
+
+    /// Number of axes.
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Logical elements per block (the product of the shape).
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Whether this is the plain packed row-major layout (unit inner
+    /// stride, row-major outer strides, blocks exactly `numel` apart).
+    pub fn is_contiguous(&self) -> bool {
+        self.strides == contiguous_strides(&self.shape) && self.batch_stride == self.numel()
+    }
+
+    /// Buffer extent in elements one block touches: one past the
+    /// largest reachable offset (0 for an empty shape).
+    pub fn block_span(&self) -> usize {
+        if self.shape.iter().any(|&d| d == 0) {
+            return 0;
+        }
+        1 + self
+            .shape
+            .iter()
+            .zip(&self.strides)
+            .map(|(&d, &s)| (d - 1) * s)
+            .sum::<usize>()
+    }
+
+    /// Minimum buffer length (in elements) holding `batch` blocks under
+    /// this layout. Trailing padding after the last block is not
+    /// required.
+    pub fn required_len(&self, batch: usize) -> usize {
+        if batch == 0 {
+            return 0;
+        }
+        (batch - 1) * self.batch_stride + self.block_span()
+    }
+
+    /// Element offset of a multi-index within one block.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        assert_eq!(idx.len(), self.rank(), "index rank mismatch");
+        idx.iter().zip(&self.strides).map(|(&i, &s)| i * s).sum()
+    }
+
+    /// Structural validation: rank ≥ 1, one stride per axis, positive
+    /// strides on every non-degenerate axis, and a batch stride large
+    /// enough that consecutive blocks cannot overlap.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.shape.is_empty() {
+            return Err("layout rank must be >= 1".into());
+        }
+        if self.strides.len() != self.shape.len() {
+            return Err(format!(
+                "{} strides for rank {}",
+                self.strides.len(),
+                self.shape.len()
+            ));
+        }
+        for (axis, (&d, &s)) in self.shape.iter().zip(&self.strides).enumerate() {
+            if d > 1 && s == 0 {
+                return Err(format!("axis {axis} has extent {d} but stride 0"));
+            }
+        }
+        if self.batch_stride < self.block_span() {
+            return Err(format!(
+                "batch stride {} < block span {} (blocks would overlap)",
+                self.batch_stride,
+                self.block_span()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Panic unless the layout is a valid rank-2 f64 view of shape
+    /// `(n1, n2)`; returns the two strides. The strided plan entry
+    /// points use this as their argument check.
+    pub fn expect_2d_f64(&self, n1: usize, n2: usize) -> (usize, usize) {
+        assert_eq!(self.elem, ElemType::F64, "f64 entry point given a {} layout", self.elem.name());
+        assert_eq!(self.shape, [n1, n2], "layout shape does not match the plan");
+        if let Err(e) = self.validate() {
+            panic!("invalid layout: {e}");
+        }
+        (self.strides[0], self.strides[1])
+    }
+}
+
+/// Row-major strides of `shape` (innermost stride 1).
+fn contiguous_strides(shape: &[usize]) -> Vec<usize> {
+    let mut strides = vec![1usize; shape.len()];
+    for d in (0..shape.len().saturating_sub(1)).rev() {
+        strides[d] = strides[d + 1] * shape[d + 1];
+    }
+    strides
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_layout_roundtrips() {
+        let l = Layout::contiguous(&[4, 6]);
+        assert_eq!(l.rank(), 2);
+        assert_eq!(l.numel(), 24);
+        assert_eq!(l.strides, vec![6, 1]);
+        assert_eq!(l.batch_stride, 24);
+        assert!(l.is_contiguous());
+        assert_eq!(l.block_span(), 24);
+        assert_eq!(l.required_len(3), 72);
+        assert_eq!(l.offset(&[2, 3]), 15);
+        assert!(l.validate().is_ok());
+    }
+
+    #[test]
+    fn padded_and_interleaved_views() {
+        // 8x8 tile of a 32-wide image
+        let l = Layout::contiguous(&[8, 8]).with_strides(&[32, 1]);
+        assert!(!l.is_contiguous());
+        assert_eq!(l.block_span(), 7 * 32 + 7 + 1);
+        assert_eq!(l.offset(&[1, 2]), 34);
+        // interleaved columns
+        let i = Layout::contiguous(&[4, 4]).with_strides(&[8, 2]).with_batch_stride(32);
+        assert!(i.validate().is_ok());
+        assert_eq!(i.block_span(), 3 * 8 + 3 * 2 + 1);
+    }
+
+    #[test]
+    fn validation_rejects_broken_layouts() {
+        assert!(Layout::contiguous(&[]).validate().is_err());
+        let zero_stride = Layout::contiguous(&[4, 4]).with_strides(&[0, 1]);
+        assert!(zero_stride.validate().is_err());
+        let overlapping = Layout::contiguous(&[4, 4]).with_batch_stride(3);
+        assert!(overlapping.validate().is_err());
+        // a degenerate axis may carry stride 0 (it is never advanced)
+        let degenerate = Layout::contiguous(&[1, 4]).with_strides(&[0, 1]);
+        assert!(degenerate.validate().is_ok());
+    }
+
+    #[test]
+    fn elem_type_labels() {
+        assert_eq!(ElemType::F64.size_bytes(), 8);
+        assert_eq!(ElemType::F32.size_bytes(), 4);
+        assert_eq!(ElemType::parse("f32"), Some(ElemType::F32));
+        assert_eq!(ElemType::parse(ElemType::F64.name()), Some(ElemType::F64));
+        assert_eq!(ElemType::parse("f16"), None);
+        assert_eq!(ElemType::default(), ElemType::F64);
+    }
+
+    #[test]
+    fn required_len_without_trailing_padding() {
+        let l = Layout::contiguous(&[2, 2]).with_batch_stride(10);
+        assert_eq!(l.required_len(0), 0);
+        assert_eq!(l.required_len(1), 4);
+        assert_eq!(l.required_len(3), 24);
+    }
+}

@@ -12,7 +12,11 @@
 //!   vs split-radix/radix-4 SoA butterflies on planar scratch, panel-
 //!   blocked column transforms), Bluestein for arbitrary N, RFFT,
 //!   2D/3D, plan cache
-//! * [`dct`]  — the paper's transforms: fused three-stage + baselines
+//! * [`dct`]  — the paper's transforms: fused three-stage + baselines,
+//!   plus the generic-element (`f32`) instantiations ([`dct::Dct2F32`])
+//! * [`layout`] — layout descriptors ([`layout::Layout`]): element type
+//!   (`f64`/`f32`), per-axis strides, batch stride — the parameter the
+//!   strided/zero-copy plan entry points take
 //! * [`parallel`] — work-sharing execution layer: process-wide scoped
 //!   thread pool, chunked parallel loops, parallel tiled transpose, the
 //!   [`parallel::ExecPolicy`] every plan carries (`Serial` /
@@ -61,6 +65,7 @@
 
 pub mod dct;
 pub mod fft;
+pub mod layout;
 pub mod util;
 // remaining layers added below as they land
 pub mod apps;

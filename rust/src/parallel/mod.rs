@@ -57,7 +57,8 @@ pub(crate) fn ceil_div(a: usize, b: usize) -> usize {
 }
 
 pub use par_iter::{
-    band_spans, par_chunks_mut, parallel_for, parallel_for_chunks, slab_spans, split_groups,
+    band_spans, par_chunks_mut, par_strided_chunks_mut, parallel_for, parallel_for_chunks,
+    slab_spans, split_groups,
 };
 pub use policy::{default_threads, ExecPolicy, ShardPolicy, AUTO_MIN_WORK};
 pub use pool::{global as global_pool, ThreadPool};

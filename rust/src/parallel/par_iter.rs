@@ -115,6 +115,71 @@ where
     pool::global().scope(jobs);
 }
 
+/// Strided sibling of [`par_chunks_mut`]: apply `f(i, chunk)` to
+/// `nchunks` fixed-size chunks that start `stride` elements apart in
+/// `data` (so there may be a gap of `stride - chunk_len` untouched
+/// elements between consecutive chunks — the padded-batch output shape
+/// a [`crate::layout::Layout`] with `batch_stride > numel` describes).
+/// The trailing chunk needs no padding after it: `data` must hold
+/// `(nchunks - 1) * stride + chunk_len` elements. Gap elements are
+/// never read or written. With `stride == chunk_len` and
+/// `data.len() == nchunks * chunk_len` this visits exactly the chunks
+/// [`par_chunks_mut`] would.
+pub fn par_strided_chunks_mut<T, F>(
+    data: &mut [T],
+    chunk_len: usize,
+    stride: usize,
+    nchunks: usize,
+    lanes: usize,
+    f: F,
+) where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    assert!(stride >= chunk_len, "stride must cover the chunk (chunks may not overlap)");
+    if nchunks == 0 {
+        return;
+    }
+    assert!(
+        data.len() >= (nchunks - 1) * stride + chunk_len,
+        "data too short for {nchunks} strided chunks"
+    );
+    if lanes <= 1 || nchunks <= 1 {
+        for i in 0..nchunks {
+            f(i, &mut data[i * stride..i * stride + chunk_len]);
+        }
+        return;
+    }
+    // carve every chunk slice up front (disjoint because stride >=
+    // chunk_len), then distribute groups of consecutive chunks exactly
+    // like par_chunks_mut
+    let mut chunks: Vec<(usize, &mut [T])> = Vec::with_capacity(nchunks);
+    let mut rest = data;
+    let mut consumed = 0;
+    for i in 0..nchunks {
+        let skip = i * stride - consumed;
+        let (_gap, tail) = std::mem::take(&mut rest).split_at_mut(skip);
+        let (chunk, tail) = tail.split_at_mut(chunk_len);
+        rest = tail;
+        consumed = i * stride + chunk_len;
+        chunks.push((i, chunk));
+    }
+    let fref = &f;
+    let groups = split_groups(chunks, lanes);
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = groups
+        .into_iter()
+        .map(|group| {
+            Box::new(move || {
+                for (i, ch) in group {
+                    fref(i, ch);
+                }
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool::global().scope(jobs);
+}
+
 /// Split `0..rows` into exactly `min(bands, rows)` contiguous row spans
 /// of near-equal height (earlier spans take the one extra row when the
 /// split is not divisible). This is the shard-band math: a span is the
@@ -220,6 +285,40 @@ mod tests {
             ch.fill(1);
         });
         assert!(data.iter().all(|&b| b == 1));
+    }
+
+    #[test]
+    fn par_strided_chunks_mut_touches_only_chunks() {
+        for &(chunk, stride, nchunks, lanes) in &[
+            (4usize, 7usize, 5usize, 1usize),
+            (4, 7, 5, 3),
+            (4, 4, 6, 4), // degenerate: stride == chunk_len
+            (1, 3, 9, 16),
+            (8, 13, 1, 4),
+        ] {
+            let len = (nchunks - 1) * stride + chunk;
+            let mut par = vec![0usize; len + 2]; // slack after the last chunk
+            par_strided_chunks_mut(&mut par, chunk, stride, nchunks, lanes, |i, ch| {
+                assert_eq!(ch.len(), chunk);
+                for (j, v) in ch.iter_mut().enumerate() {
+                    *v = i * 1000 + j + 1;
+                }
+            });
+            let mut ser = vec![0usize; len + 2];
+            for i in 0..nchunks {
+                for j in 0..chunk {
+                    ser[i * stride + j] = i * 1000 + j + 1;
+                }
+            }
+            assert_eq!(par, ser, "chunk={chunk} stride={stride} nchunks={nchunks} lanes={lanes}");
+            // gap elements stayed zero
+            let touched: usize = par.iter().filter(|&&v| v != 0).count();
+            assert_eq!(touched, nchunks * chunk);
+        }
+        // nchunks == 0 is a no-op
+        let mut empty = vec![1u8; 4];
+        par_strided_chunks_mut(&mut empty, 2, 3, 0, 4, |_, _| panic!("no chunks"));
+        assert_eq!(empty, vec![1u8; 4]);
     }
 
     #[test]

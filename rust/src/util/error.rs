@@ -80,6 +80,7 @@ pub struct Error {
 }
 
 impl Error {
+    /// Build an error from any displayable message.
     pub fn msg(msg: impl fmt::Display) -> Error {
         Error { msg: msg.to_string() }
     }
@@ -122,7 +123,9 @@ pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// Attach context to errors (or `None`s), like `anyhow::Context`.
 pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed context message.
     fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap with a lazily-built context message (skipped on success).
     fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
 }
 

@@ -17,11 +17,17 @@ use std::fmt;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// The `null` literal.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (always held as f64; must be finite).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array of values.
     Arr(Vec<Json>),
+    /// An object, key-sorted (BTreeMap) for deterministic serialization.
     Obj(BTreeMap<String, Json>),
 }
 
@@ -42,6 +48,7 @@ impl Json {
         }
     }
 
+    /// String view; `None` for non-strings.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -49,6 +56,7 @@ impl Json {
         }
     }
 
+    /// Numeric value; `None` for non-numbers.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -56,11 +64,22 @@ impl Json {
         }
     }
 
+    /// Numeric value truncated to usize; `None` for non-numbers.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f as usize)
     }
 
     /// Parse a JSON document from text.
+    ///
+    /// ```
+    /// use mddct::util::json::Json;
+    ///
+    /// let doc = Json::parse(r#"{"op": "dct2d", "shape": [8, 8]}"#).unwrap();
+    /// assert_eq!(doc.get("op").and_then(Json::as_str), Some("dct2d"));
+    /// assert_eq!(doc.get("shape").and_then(Json::as_arr).map(|a| a.len()), Some(2));
+    /// // numbers must be finite: 1e999 is a typed error, never `inf`
+    /// assert!(Json::parse("[1e999]").is_err());
+    /// ```
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut r = JsonReader::new(text.as_bytes());
         let v = dom_value(&mut r, 0)?;
@@ -72,7 +91,9 @@ impl Json {
 /// Parse error with byte offset.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// Byte offset into the input where the error was detected.
     pub offset: usize,
 }
 

@@ -1,5 +1,6 @@
 //! General-purpose substrates built in-repo because the offline crate set
 //! lacks serde_json / rand / proptest / criterion-statistics equivalents.
+#![warn(missing_docs)]
 
 pub mod error;
 pub mod json;

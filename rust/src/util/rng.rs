@@ -7,6 +7,7 @@
 pub struct SplitMix64(pub u64);
 
 impl SplitMix64 {
+    /// Next value in the stream (advances the state).
     pub fn next_u64(&mut self) -> u64 {
         self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
         let mut z = self.0;
@@ -31,6 +32,7 @@ impl Rng {
         Rng { s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()], spare: None }
     }
 
+    /// Next raw 64-bit value (advances the state).
     pub fn next_u64(&mut self) -> u64 {
         let r = self.s[0]
             .wrapping_add(self.s[3])

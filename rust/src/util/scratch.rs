@@ -48,6 +48,7 @@ static PREWARM_CALLS: AtomicU64 = AtomicU64::new(0);
 static PREWARM_BYTES: AtomicU64 = AtomicU64::new(0);
 
 const F64_BYTES: u64 = std::mem::size_of::<f64>() as u64;
+const F32_BYTES: u64 = std::mem::size_of::<f32>() as u64;
 const C64_BYTES: u64 = std::mem::size_of::<C64>() as u64;
 
 /// Max buffers retained per (thread, length) size class; extras given
@@ -57,6 +58,7 @@ pub const MAX_RETAINED_PER_CLASS: usize = 4;
 #[derive(Default)]
 struct Pool {
     f64s: HashMap<usize, Vec<Vec<f64>>>,
+    f32s: HashMap<usize, Vec<Vec<f32>>>,
     c64s: HashMap<usize, Vec<Vec<C64>>>,
 }
 
@@ -125,6 +127,10 @@ pub fn clear_thread_pool() {
             bufs += b.len() as u64;
             bytes += b.len() as u64 * *len as u64 * F64_BYTES;
         }
+        for (len, b) in p.f32s.iter() {
+            bufs += b.len() as u64;
+            bytes += b.len() as u64 * *len as u64 * F32_BYTES;
+        }
         for (len, b) in p.c64s.iter() {
             bufs += b.len() as u64;
             bytes += b.len() as u64 * *len as u64 * C64_BYTES;
@@ -132,6 +138,7 @@ pub fn clear_thread_pool() {
         RETAINED_BUFS.fetch_sub(bufs, Ordering::Relaxed);
         RETAINED_BYTES.fetch_sub(bytes, Ordering::Relaxed);
         p.f64s.clear();
+        p.f32s.clear();
         p.c64s.clear();
     });
 }
@@ -164,6 +171,40 @@ pub fn give_f64(v: Vec<f64>) {
             bucket.push(v);
             RETAINED_BUFS.fetch_add(1, Ordering::Relaxed);
             RETAINED_BYTES.fetch_add(len as u64 * F64_BYTES, Ordering::Relaxed);
+        }
+    });
+}
+
+/// Take an f32 buffer of exactly `len` (contents unspecified). The f32
+/// size classes back the generic-element (`ElemType::F32`) plans; they
+/// share the retention cap and miss accounting with the f64/C64 classes.
+pub fn take_f32(len: usize) -> Vec<f32> {
+    POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        match p.f32s.get_mut(&len).and_then(Vec::pop) {
+            Some(v) => {
+                RETAINED_BUFS.fetch_sub(1, Ordering::Relaxed);
+                RETAINED_BYTES.fetch_sub(len as u64 * F32_BYTES, Ordering::Relaxed);
+                v
+            }
+            None => {
+                note_miss();
+                vec![0.0f32; len]
+            }
+        }
+    })
+}
+
+/// Return an f32 buffer to the pool (dropped if the class is full).
+pub fn give_f32(v: Vec<f32>) {
+    let len = v.len();
+    POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        let bucket = p.f32s.entry(len).or_default();
+        if bucket.len() < MAX_RETAINED_PER_CLASS {
+            bucket.push(v);
+            RETAINED_BUFS.fetch_add(1, Ordering::Relaxed);
+            RETAINED_BYTES.fetch_add(len as u64 * F32_BYTES, Ordering::Relaxed);
         }
     });
 }
@@ -212,6 +253,12 @@ pub fn retained_c64(len: usize) -> usize {
     POOL.with(|p| p.borrow().c64s.get(&len).map_or(0, Vec::len))
 }
 
+/// Buffers currently retained for this thread's f32 class of `len`
+/// (tests / metrics).
+pub fn retained_f32(len: usize) -> usize {
+    POOL.with(|p| p.borrow().f32s.get(&len).map_or(0, Vec::len))
+}
+
 /// Plan-owned scratch manifest: the size classes (with multiplicity) a
 /// plan's hot path takes from the thread-local pool.
 ///
@@ -232,6 +279,7 @@ pub fn retained_c64(len: usize) -> usize {
 #[derive(Debug, Clone, Default)]
 pub struct Workspace {
     f64_lens: Vec<usize>,
+    f32_lens: Vec<usize>,
     c64_lens: Vec<usize>,
 }
 
@@ -249,6 +297,14 @@ impl Workspace {
         }
     }
 
+    /// Register one f32 scratch buffer of `len` elements (the generic
+    /// element core registers its planar scratch through this).
+    pub fn add_f32(&mut self, len: usize) {
+        if len > 0 {
+            self.f32_lens.push(len);
+        }
+    }
+
     /// Register one C64 scratch buffer of `len` elements.
     pub fn add_c64(&mut self, len: usize) {
         if len > 0 {
@@ -260,12 +316,18 @@ impl Workspace {
     /// their own classes with their sub-plans' this way).
     pub fn merge(&mut self, other: &Workspace) {
         self.f64_lens.extend_from_slice(&other.f64_lens);
+        self.f32_lens.extend_from_slice(&other.f32_lens);
         self.c64_lens.extend_from_slice(&other.c64_lens);
     }
 
     /// Total registered f64 elements (introspection / capacity planning).
     pub fn f64_elems(&self) -> usize {
         self.f64_lens.iter().sum()
+    }
+
+    /// Total registered f32 elements.
+    pub fn f32_elems(&self) -> usize {
+        self.f32_lens.iter().sum()
     }
 
     /// Total registered C64 elements.
@@ -275,7 +337,7 @@ impl Workspace {
 
     /// Whether nothing has been registered.
     pub fn is_empty(&self) -> bool {
-        self.f64_lens.is_empty() && self.c64_lens.is_empty()
+        self.f64_lens.is_empty() && self.f32_lens.is_empty() && self.c64_lens.is_empty()
     }
 
     /// Populate the **current thread's** pool so that every registered
@@ -285,13 +347,19 @@ impl Workspace {
     pub fn prewarm(&self) {
         PREWARM_CALLS.fetch_add(1, Ordering::Relaxed);
         PREWARM_BYTES.fetch_add(
-            self.f64_elems() as u64 * F64_BYTES + self.c64_elems() as u64 * C64_BYTES,
+            self.f64_elems() as u64 * F64_BYTES
+                + self.f32_elems() as u64 * F32_BYTES
+                + self.c64_elems() as u64 * C64_BYTES,
             Ordering::Relaxed,
         );
         let held_f: Vec<Vec<f64>> = self.f64_lens.iter().map(|&l| take_f64(l)).collect();
+        let held_s: Vec<Vec<f32>> = self.f32_lens.iter().map(|&l| take_f32(l)).collect();
         let held_c: Vec<Vec<C64>> = self.c64_lens.iter().map(|&l| take_c64(l)).collect();
         for v in held_f {
             give_f64(v);
+        }
+        for v in held_s {
+            give_f32(v);
         }
         for v in held_c {
             give_c64(v);
@@ -322,6 +390,32 @@ mod tests {
         assert_eq!(b.len(), 128);
         give_f64(a);
         give_f64(b);
+    }
+
+    #[test]
+    fn f32_pool_roundtrip_and_workspace_prewarm() {
+        let len = 76543; // unique length: guaranteed cold class
+        let before = pool_misses();
+        let mut a = take_f32(len);
+        assert_eq!(pool_misses(), before + 1);
+        a[0] = 1.5;
+        let ptr = a.as_ptr();
+        give_f32(a);
+        assert_eq!(retained_f32(len), 1);
+        let b = take_f32(len);
+        assert_eq!(b.as_ptr(), ptr, "same buffer should come back");
+        assert_eq!(pool_misses(), before + 1, "warm take must not miss");
+        give_f32(b);
+
+        let wlen = 76547;
+        let mut ws = Workspace::new();
+        ws.add_f32(wlen);
+        assert_eq!(ws.f32_elems(), wlen);
+        assert!(!ws.is_empty());
+        ws.prewarm();
+        assert_eq!(retained_f32(wlen), 1);
+        clear_thread_pool();
+        assert_eq!(retained_f32(wlen), 0);
     }
 
     #[test]

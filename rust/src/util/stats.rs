@@ -3,17 +3,34 @@
 /// Summary of a sample of f64 observations (times in seconds, sizes, ...).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Sample standard deviation (n-1 denominator).
     pub std: f64,
+    /// Smallest observation.
     pub min: f64,
+    /// Largest observation.
     pub max: f64,
+    /// 50th percentile (linear-interpolated).
     pub median: f64,
+    /// 95th percentile (linear-interpolated).
     pub p95: f64,
 }
 
 impl Summary {
     /// Compute a summary; panics on an empty sample.
+    ///
+    /// ```
+    /// use mddct::util::stats::Summary;
+    ///
+    /// let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+    /// assert_eq!(s.n, 4);
+    /// assert_eq!(s.mean, 2.5);
+    /// assert_eq!(s.median, 2.5);
+    /// assert_eq!((s.min, s.max), (1.0, 4.0));
+    /// ```
     pub fn of(samples: &[f64]) -> Summary {
         assert!(!samples.is_empty(), "empty sample");
         let n = samples.len();
@@ -65,8 +82,11 @@ pub struct LatencyHistogram {
     /// bucket upper bounds in seconds
     bounds: Vec<f64>,
     counts: Vec<u64>,
+    /// Number of recorded observations.
     pub total: u64,
+    /// Sum of all recorded values in seconds (for the mean).
     pub sum: f64,
+    /// Largest recorded value in seconds.
     pub max: f64,
 }
 
@@ -87,6 +107,7 @@ impl Default for LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// Record one observation (seconds) into its log-spaced bucket.
     pub fn record(&mut self, seconds: f64) {
         let idx = self
             .bounds
@@ -101,6 +122,7 @@ impl LatencyHistogram {
         }
     }
 
+    /// Mean of all recorded values; 0 when nothing was recorded.
     pub fn mean(&self) -> f64 {
         if self.total == 0 {
             0.0

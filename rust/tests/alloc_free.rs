@@ -16,6 +16,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use mddct::dct::{Algo1d, Dct1d, Dct2, Idct1d, Idct2, Idxst1d};
+use mddct::layout::Layout as MddctLayout;
 use mddct::parallel::ExecPolicy;
 use mddct::util::rng::Rng;
 use mddct::util::scratch;
@@ -77,6 +78,33 @@ fn warmed_fused_hot_paths_do_not_allocate() {
         assert_alloc_free(&format!("dct2 {n1}x{n2}"), || fwd.forward(&x, &mut y));
         let inv = Idct2::with_policy(n1, n2, ExecPolicy::Serial);
         assert_alloc_free(&format!("idct2 {n1}x{n2}"), || inv.forward(&x, &mut y));
+    }
+
+    // zero-copy batch entry points: the coordinator's packed views path
+    // (forward_batch_views) and the strided single-block path must also
+    // run allocation-free once warm — the whole point of taking views
+    // is that no pack buffer materializes. The views Vec and the output
+    // are built outside the measured closures.
+    {
+        let (n1, n2, batch) = (8usize, 12usize, 4usize);
+        let numel = n1 * n2;
+        let xs = rng.normal_vec(numel * batch);
+        let views: Vec<&[f64]> = xs.chunks(numel).collect();
+        let mut out = vec![0.0; numel * batch];
+        let fwd = Dct2::with_policy(n1, n2, ExecPolicy::Serial);
+        assert_alloc_free("dct2 batch views", || fwd.forward_batch_views(&views, &mut out));
+        let inv = Idct2::with_policy(n1, n2, ExecPolicy::Serial);
+        assert_alloc_free("idct2 batch views", || inv.forward_batch_views(&views, &mut out));
+
+        // strided view over a larger arena (row stride > n2)
+        let (s2, s1) = (1usize, n2 + 5);
+        let layout = MddctLayout::contiguous(&[n1, n2])
+            .with_strides(&[s1, s2])
+            .with_batch_stride((n1 - 1) * s1 + n2);
+        let arena = rng.normal_vec((n1 - 1) * s1 + n2);
+        let mut y = vec![0.0; numel];
+        assert_alloc_free("dct2 strided", || fwd.forward_strided(&arena, &layout, &mut y));
+        assert_alloc_free("idct2 strided", || inv.forward_strided(&arena, &layout, &mut y));
     }
 
     // 1D family: all four Algorithm-1 variants, the inverse, and IDXST

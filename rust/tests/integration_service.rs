@@ -158,6 +158,52 @@ fn same_shape_requests_pack_into_one_batched_execution() {
 }
 
 #[test]
+fn views_capable_ops_pack_without_an_input_copy() {
+    // dct2d/idct2d batches take the zero-copy views path (payloads
+    // borrowed in place, no contiguous input pack); a same-size dst2d
+    // burst through the same service still uses the copy path — the
+    // packed_zero_copy counter tells the two apart
+    let svc = Service::start_native(ServiceConfig {
+        workers: 1,
+        batch: BatchPolicy {
+            max_batch: 32,
+            max_wait: std::time::Duration::from_millis(20),
+            ..Default::default()
+        },
+        ..Default::default()
+    });
+    let mut rng = Rng::new(611);
+    for op in [TransformOp::Dct2d, TransformOp::Idct2d, TransformOp::Dst2d] {
+        let mut reqs = Vec::new();
+        for _ in 0..12 {
+            reqs.push((op, vec![8usize, 8], rng.normal_vec(64)));
+        }
+        let out = svc.transform_many(reqs).unwrap();
+        assert!(out.iter().any(|r| r.batch_size > 1), "{op:?}: never co-batched");
+    }
+    let snap = svc.metrics.snapshot();
+    for op in ["dct2d", "idct2d"] {
+        let row = snap.get(op).expect("metrics row");
+        let batches = row.get("packed_batches").unwrap().as_f64().unwrap();
+        let zero_copy = row.get("packed_zero_copy").unwrap().as_f64().unwrap();
+        assert!(batches >= 1.0, "{op}: no packed batch executed");
+        assert!(zero_copy >= 1.0, "{op}: packed batches never went zero-copy");
+        assert!(zero_copy <= batches, "{op}: zero-copy count exceeds batch count");
+    }
+    let dst = snap.get("dst2d").expect("dst2d metrics row");
+    assert!(dst.get("packed_batches").unwrap().as_f64().unwrap() >= 1.0);
+    assert_eq!(
+        dst.get("packed_zero_copy").unwrap().as_f64().unwrap(),
+        0.0,
+        "dst2d has no views path and must stay on the copy pack"
+    );
+    // correctness didn't regress on the zero-copy path
+    let x = rng.normal_vec(64);
+    let r = svc.transform(TransformOp::Dct2d, vec![8, 8], x.clone()).unwrap();
+    assert_close(&r.output, &dct2d_direct(&x, 8, 8), 1e-9);
+}
+
+#[test]
 fn sharded_3d_request_executes_as_slabs_through_the_service() {
     use mddct::dct::Dct3d;
     use mddct::parallel::{ExecPolicy, ShardPolicy};

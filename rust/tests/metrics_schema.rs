@@ -41,6 +41,7 @@ fn snapshot_schema_is_golden() {
         "packed_batch_hist",
         "packed_batches",
         "packed_requests",
+        "packed_zero_copy",
         "requests",
         "retried_degraded",
         "sharded_requests",

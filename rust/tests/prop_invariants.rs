@@ -264,7 +264,7 @@ fn prop_idct2_of_delta_is_bounded_basis_function() {
 fn prop_router_deterministic_and_native_correct() {
     let router = Router::native_only();
     forall(25, shapes(1, 20), |rng, &(n1, n2)| {
-        let key = PlanKey { op: TransformOp::Dct2d, shape: vec![n1, n2] };
+        let key = PlanKey::new(TransformOp::Dct2d, vec![n1, n2]);
         let x = rng.normal_vec(n1 * n2);
         let (a, ra) = router.execute(&key, &x).map_err(|e| e.to_string())?;
         let (b, rb) = router.execute(&key, &x).map_err(|e| e.to_string())?;

@@ -1,0 +1,167 @@
+//! Layout polymorphism properties (the layout PR's acceptance tests):
+//!
+//! * every f64 strided / views / batched entry point gathers exactly
+//!   the values a contiguous call would, in the same arithmetic order,
+//!   so its output is **bit-identical** to the contiguous-f64 oracle —
+//!   across pow2 and Bluestein shapes, batch sizes, exec policies, and
+//!   shard counts;
+//! * the f32 generic plans track the f64 oracle to 1e-4 relative
+//!   accuracy (forward) and roundtrip back to the input within 1e-3.
+
+use mddct::dct::{Dct2, Dct2F32, Idct2, Idct2F32};
+use mddct::fft::nd::Rfft2Plan;
+use mddct::layout::Layout;
+use mddct::parallel::{ExecPolicy, ShardPolicy};
+use mddct::util::rng::Rng;
+
+/// Embed `batch` contiguous `n1 x n2` blocks into a NaN-padded strided
+/// arena; returns the arena and its layout. NaN padding makes any
+/// out-of-view read poison the output, so bit-identity also proves the
+/// strided gather never strays.
+fn stride_blocks(
+    xs: &[f64],
+    n1: usize,
+    n2: usize,
+    batch: usize,
+    r1: usize,
+    r2: usize,
+) -> (Vec<f64>, Layout) {
+    let (s2, s1) = (r2, n2 * r2 * r1 + 1);
+    let span = (n1 - 1) * s1 + (n2 - 1) * s2 + 1;
+    let bstride = span + 3;
+    let layout = Layout::contiguous(&[n1, n2])
+        .with_strides(&[s1, s2])
+        .with_batch_stride(bstride);
+    assert!(layout.validate().is_ok());
+    let mut arena = vec![f64::NAN; layout.required_len(batch)];
+    for b in 0..batch {
+        for i in 0..n1 {
+            for j in 0..n2 {
+                arena[b * bstride + i * s1 + j * s2] = xs[b * n1 * n2 + i * n2 + j];
+            }
+        }
+    }
+    (arena, layout)
+}
+
+const SHAPES: [(usize, usize); 4] = [(8, 8), (16, 16), (9, 15), (13, 7)];
+
+#[test]
+fn strided_dct2_is_bit_identical_to_contiguous() {
+    let mut rng = Rng::new(900);
+    for &(n1, n2) in &SHAPES {
+        for shards in [1usize, 2, 3] {
+            for (r1, r2) in [(1usize, 2usize), (2, 1), (3, 3)] {
+                let fwd = Dct2::with_policy(n1, n2, ExecPolicy::Threads(shards))
+                    .with_shards(ShardPolicy::MaxShards(shards));
+                let x = rng.normal_vec(n1 * n2);
+                let mut want = vec![0.0; n1 * n2];
+                fwd.forward(&x, &mut want);
+                let (arena, layout) = stride_blocks(&x, n1, n2, 1, r1, r2);
+                let mut got = vec![0.0; n1 * n2];
+                fwd.forward_strided(&arena, &layout, &mut got);
+                assert_eq!(got, want, "dct2 {n1}x{n2} shards={shards} r=({r1},{r2})");
+
+                let inv = Idct2::with_policy(n1, n2, ExecPolicy::Threads(shards))
+                    .with_shards(ShardPolicy::MaxShards(shards));
+                let mut iwant = vec![0.0; n1 * n2];
+                inv.forward(&x, &mut iwant);
+                let mut igot = vec![0.0; n1 * n2];
+                inv.forward_strided(&arena, &layout, &mut igot);
+                assert_eq!(igot, iwant, "idct2 {n1}x{n2} shards={shards} r=({r1},{r2})");
+            }
+        }
+    }
+}
+
+#[test]
+fn strided_and_views_batches_are_bit_identical_to_packed() {
+    let mut rng = Rng::new(901);
+    for &(n1, n2) in &SHAPES {
+        let numel = n1 * n2;
+        for batch in [1usize, 3, 5] {
+            let xs = rng.normal_vec(numel * batch);
+            for exec in [ExecPolicy::Serial, ExecPolicy::Threads(4)] {
+                let fwd = Dct2::with_policy(n1, n2, exec);
+                let mut want = vec![0.0; numel * batch];
+                fwd.forward_batch(&xs, &mut want, batch);
+
+                let views: Vec<&[f64]> = xs.chunks(numel).collect();
+                let mut got = vec![0.0; numel * batch];
+                fwd.forward_batch_views(&views, &mut got);
+                assert_eq!(got, want, "dct2 views {n1}x{n2} b={batch} {exec:?}");
+
+                let (arena, layout) = stride_blocks(&xs, n1, n2, batch, 2, 1);
+                got.fill(0.0);
+                fwd.forward_batch_strided(&arena, &layout, &mut got, batch);
+                assert_eq!(got, want, "dct2 strided batch {n1}x{n2} b={batch} {exec:?}");
+
+                let inv = Idct2::with_policy(n1, n2, exec);
+                let mut iwant = vec![0.0; numel * batch];
+                inv.forward_batch(&xs, &mut iwant, batch);
+                let mut igot = vec![0.0; numel * batch];
+                inv.forward_batch_views(&views, &mut igot);
+                assert_eq!(igot, iwant, "idct2 views {n1}x{n2} b={batch} {exec:?}");
+                igot.fill(0.0);
+                inv.forward_batch_strided(&arena, &layout, &mut igot, batch);
+                assert_eq!(igot, iwant, "idct2 strided batch {n1}x{n2} b={batch} {exec:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn strided_rfft2_is_bit_identical_to_contiguous() {
+    let mut rng = Rng::new(902);
+    for &(n1, n2) in &SHAPES {
+        let plan = Rfft2Plan::new(n1, n2);
+        let x = rng.normal_vec(n1 * n2);
+        let h2 = n2 / 2 + 1;
+        let mut want = vec![mddct::fft::C64::default(); n1 * h2];
+        plan.forward(&x, &mut want);
+        let (arena, layout) = stride_blocks(&x, n1, n2, 1, 1, 3);
+        let mut got = vec![mddct::fft::C64::default(); n1 * h2];
+        plan.forward_strided(&arena, &layout, &mut got);
+        assert_eq!(got, want, "rfft2 {n1}x{n2}");
+    }
+}
+
+/// Max relative error of `got` against an f64 oracle, scaled by the
+/// oracle's max magnitude (coefficients span orders of magnitude, so
+/// per-element relative error would over-penalize near-zeros).
+fn rel_err(got: &[f32], want: &[f64]) -> f64 {
+    let scale = want.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+    got.iter()
+        .zip(want)
+        .map(|(g, w)| (f64::from(*g) - w).abs() / scale)
+        .fold(0.0, f64::max)
+}
+
+#[test]
+fn f32_plans_track_the_f64_oracle() {
+    let mut rng = Rng::new(903);
+    for &(n1, n2) in &SHAPES {
+        let numel = n1 * n2;
+        for batch in [1usize, 4] {
+            let xs = rng.normal_vec(numel * batch);
+            let xs32: Vec<f32> = xs.iter().map(|&v| v as f32).collect();
+
+            let oracle = Dct2::new(n1, n2);
+            let mut want = vec![0.0; numel * batch];
+            oracle.forward_batch(&xs, &mut want, batch);
+
+            let plan = Dct2F32::new(n1, n2);
+            let mut got = vec![0.0f32; numel * batch];
+            plan.forward_batch(&xs32, &mut got, batch);
+            let err = rel_err(&got, &want);
+            assert!(err <= 1e-4, "dct2 f32 {n1}x{n2} b={batch}: rel err {err:.2e}");
+
+            // inverse roundtrips back to the input at f32 accuracy
+            let inv = Idct2F32::new(n1, n2);
+            let mut back = vec![0.0f32; numel * batch];
+            inv.forward_batch(&got, &mut back, batch);
+            let err = rel_err(&back, &xs);
+            assert!(err <= 1e-3, "idct2(dct2) f32 {n1}x{n2} b={batch}: rel err {err:.2e}");
+        }
+    }
+}

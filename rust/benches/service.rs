@@ -130,6 +130,8 @@ fn main() {
                 shape: shape.clone(),
                 batch: 1,
                 deadline_ms: None,
+                tenant: None,
+                priority: 0,
                 data: rng.normal_vec(numel),
             })
         })

@@ -1,0 +1,234 @@
+//! Noisy-neighbor isolation bench for the per-tenant admission budget.
+//!
+//! Two tenants share one in-process [`Service`] with a deliberately
+//! tight in-flight budget. Tenant B is the well-behaved victim: it
+//! offers 0.25x the measured closed-loop capacity, first alone (the
+//! solo baseline) and then while tenant A — the noisy neighbor —
+//! offers 4x capacity on the same service. The weighted fair share
+//! (`MDDCT_TENANT_QUOTA`, equal weights here) must keep admitting B
+//! while A's over-share traffic is shed, and B's higher priority must
+//! keep its admitted requests at the front of the batcher drain: the
+//! acceptance bar is B's contended p99 within 2x of its solo p99.
+//!
+//! Latency is service-side (`Response::latency`: queue + execute), so
+//! the numbers isolate scheduling, not client pacing. Emits a human
+//! table and machine-readable `BENCH_tenants.json` (override with
+//! `MDDCT_BENCH_TENANTS_JSON`); the bench-diff CI gate tracks the
+//! `*_ms` columns per row, while shed ratios and the isolation ratio
+//! ride in ungated `speedup_*` fields. `MDDCT_BENCH_QUICK=1` runs a
+//! CI-sized subset.
+//!
+//! Run: `cargo bench --bench tenants`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mddct::bench::{ms, Table};
+use mddct::coordinator::{
+    BatchPolicy, Service, ServiceConfig, SubmitOptions, TransformError, TransformOp,
+};
+use mddct::parallel::{ExecPolicy, ShardPolicy};
+use mddct::util::rng::Rng;
+
+/// Fixed worker count: part of each row's identity, so it must not
+/// float with the runner's core count.
+const WORKERS: usize = 2;
+/// One 64x64 block per request — large enough that service time (not
+/// submit overhead) dominates the closed-loop calibration.
+const N1: usize = 64;
+const N2: usize = 64;
+/// In-flight budget: four blocks. Tight on purpose — the noisy
+/// neighbor must hit the budget, so isolation (not slack) is what
+/// keeps the victim's tail flat.
+const MAX_INFLIGHT: usize = N1 * N2 * 4;
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() - 1) as f64 * p).round() as usize]
+}
+
+/// Open-loop submitter for one tenant: submit `n` blocks at a fixed
+/// interarrival (sleep-until-due with catch-up, so the *average* rate
+/// holds even when a sleep overshoots), then wait every handle.
+/// Returns (service-side latencies, shed count).
+fn run_tenant(
+    svc: Arc<Service>,
+    tenant: &'static str,
+    priority: u8,
+    n: usize,
+    interarrival: Duration,
+) -> (Vec<f64>, usize) {
+    let mut rng = Rng::new(0xBEEF ^ tenant.len() as u64);
+    let data = rng.normal_vec(N1 * N2);
+    let start = Instant::now();
+    let mut handles = Vec::with_capacity(n);
+    let mut shed = 0usize;
+    for i in 0..n {
+        let due = start + interarrival * (i as u32);
+        let now = Instant::now();
+        if now < due {
+            std::thread::sleep(due - now);
+        }
+        let opts = SubmitOptions { deadline: None, tenant: Some(tenant.to_string()), priority };
+        match svc.submit_opts(TransformOp::Dct2d, vec![N1, N2], data.clone(), opts) {
+            Ok(h) => handles.push(h),
+            Err(TransformError::Overloaded { .. }) => shed += 1,
+            Err(e) => panic!("{tenant}: unexpected submit error: {e}"),
+        }
+    }
+    let mut lats = Vec::with_capacity(handles.len());
+    for h in handles {
+        match h.wait() {
+            Ok(resp) => lats.push(resp.latency),
+            Err(TransformError::Overloaded { .. }) => shed += 1,
+            Err(e) => panic!("{tenant}: unexpected reply error: {e}"),
+        }
+    }
+    (lats, shed)
+}
+
+struct Phase {
+    scenario: &'static str,
+    tenant: &'static str,
+    offered: f64,
+    ok: usize,
+    total: usize,
+    shed: usize,
+    p50: f64,
+    p99: f64,
+}
+
+fn phase_row(
+    scenario: &'static str,
+    tenant: &'static str,
+    offered: f64,
+    n: usize,
+    lats: &mut [f64],
+    shed: usize,
+) -> Phase {
+    lats.sort_by(|a, b| a.total_cmp(b));
+    Phase {
+        scenario,
+        tenant,
+        offered,
+        ok: lats.len(),
+        total: n,
+        shed,
+        p50: percentile(lats, 0.50),
+        p99: percentile(lats, 0.99),
+    }
+}
+
+fn main() {
+    let quick = std::env::var("MDDCT_BENCH_QUICK").is_ok();
+    let (mode, n_b) = if quick { ("quick", 200usize) } else { ("full", 1000usize) };
+    // equal fair shares, stated explicitly so the bench exercises the
+    // quota-spec path end to end (unlisted tenants would weigh 1.0
+    // anyway); must be set before the service constructs its budget
+    std::env::set_var("MDDCT_TENANT_QUOTA", "tenant-a:1,tenant-b:1");
+
+    let svc = Arc::new(Service::start_native(ServiceConfig {
+        workers: WORKERS,
+        batch: BatchPolicy::default(),
+        exec: ExecPolicy::Serial,
+        shard: ShardPolicy::Auto,
+        trace: false,
+        default_deadline: None,
+        max_inflight_elems: MAX_INFLIGHT,
+    }));
+
+    // closed-loop calibration (plans warm): capacity of the pool
+    let mut rng = Rng::new(7);
+    for _ in 0..8 {
+        svc.transform(TransformOp::Dct2d, vec![N1, N2], rng.normal_vec(N1 * N2)).expect("warmup");
+    }
+    let cal = 32;
+    let t0 = Instant::now();
+    for _ in 0..cal {
+        let data = rng.normal_vec(N1 * N2);
+        svc.transform(TransformOp::Dct2d, vec![N1, N2], data).expect("calibrate");
+    }
+    let svc_s = t0.elapsed().as_secs_f64() / cal as f64;
+    let capacity = WORKERS as f64 / svc_s;
+    println!(
+        "\nNoisy-neighbor isolation: {WORKERS} workers, {N1}x{N2} blocks, budget {} blocks, \
+         closed-loop service time {} => capacity ~{capacity:.0} req/s\n",
+        MAX_INFLIGHT / (N1 * N2),
+        ms(svc_s)
+    );
+
+    let rate_b = 0.25 * capacity;
+    let rate_a = 4.0 * capacity;
+    let ia_b = Duration::from_secs_f64(1.0 / rate_b);
+    let ia_a = Duration::from_secs_f64(1.0 / rate_a);
+    // A covers B's wall-clock window at 16x B's rate
+    let n_a = n_b * 16;
+
+    // phase 1 — solo baseline: the victim alone at 0.25x capacity
+    let (mut b_solo, b_solo_shed) = run_tenant(svc.clone(), "tenant-b", 1, n_b, ia_b);
+    let solo = phase_row("solo", "tenant-b", rate_b, n_b, &mut b_solo, b_solo_shed);
+
+    // phase 2 — contended: the same victim stream while the noisy
+    // neighbor offers 4x capacity (priority 0 vs the victim's 1)
+    let svc_a = svc.clone();
+    let noisy = std::thread::spawn(move || run_tenant(svc_a, "tenant-a", 0, n_a, ia_a));
+    let (mut b_cont, b_cont_shed) = run_tenant(svc.clone(), "tenant-b", 1, n_b, ia_b);
+    let (mut a_cont, a_cont_shed) = noisy.join().expect("noisy-neighbor thread");
+    let cont_a = phase_row("contended", "tenant-a", rate_a, n_a, &mut a_cont, a_cont_shed);
+    let cont_b = phase_row("contended", "tenant-b", rate_b, n_b, &mut b_cont, b_cont_shed);
+
+    let ratio = cont_b.p99 / solo.p99.max(1e-9);
+    let mut t = Table::new(&["scenario", "tenant", "offered req/s", "ok", "shed", "p50", "p99"]);
+    let mut json_rows: Vec<String> = Vec::new();
+    for ph in [&solo, &cont_a, &cont_b] {
+        let shed_ratio = ph.shed as f64 / ph.total as f64;
+        t.row(&[
+            ph.scenario.to_string(),
+            ph.tenant.to_string(),
+            format!("{:.0}", ph.offered),
+            format!("{}/{}", ph.ok, ph.total),
+            format!("{} ({:.1}%)", ph.shed, 100.0 * shed_ratio),
+            ms(ph.p50),
+            ms(ph.p99),
+        ]);
+        json_rows.push(format!(
+            "{{\"section\": \"tenants\", \"mode\": \"{mode}\", \"workers\": {WORKERS}, \
+             \"scenario\": \"{}\", \"tenant\": \"{}\", \"p50_ms\": {:.6}, \"p99_ms\": {:.6}, \
+             \"speedup_shed_ratio\": {shed_ratio:.4}}}",
+            ph.scenario,
+            ph.tenant,
+            ph.p50 * 1e3,
+            ph.p99 * 1e3
+        ));
+    }
+    t.print();
+    println!(
+        "\nisolation: victim p99 {} solo -> {} contended ({ratio:.2}x; acceptance bar 2x)",
+        ms(solo.p99),
+        ms(cont_b.p99)
+    );
+    if ratio > 2.0 {
+        eprintln!("WARNING: tenant-b contended p99 is {ratio:.2}x solo (> 2x isolation bar)");
+    }
+    // the isolation ratio is a cross-row quantity: its own row, with no
+    // gated *_ms fields, so runner noise cannot redden the trend gate
+    json_rows.push(format!(
+        "{{\"section\": \"tenants\", \"mode\": \"{mode}\", \"workers\": {WORKERS}, \
+         \"scenario\": \"isolation\", \"tenant\": \"tenant-b\", \
+         \"speedup_b_p99_ratio\": {ratio:.4}}}"
+    ));
+    println!("\nfinal snapshot: {}", svc.snapshot());
+
+    let path = std::env::var("MDDCT_BENCH_TENANTS_JSON")
+        .unwrap_or_else(|_| "BENCH_tenants.json".to_string());
+    let doc = format!(
+        "{{\n  \"bench\": \"tenants\",\n  \"unit\": \"latency_ms\",\n  \"rows\": [\n    {}\n  ]\n}}\n",
+        json_rows.join(",\n    ")
+    );
+    match std::fs::write(&path, &doc) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""End-to-end graceful-drain check for `mddct serve`, driven over a raw
+socket by an outside observer (no crate code on the client side).
+
+Spawns the release binary on an ephemeral port, and from a plain TCP
+socket speaking the 4-byte-BE-length + JSON framing:
+
+1. hits the `health` route (must report ``ok`` / ``ready: true``),
+2. runs one 8x8 dct2d transform (must answer ``ok`` with 64 outputs),
+3. sends the process SIGTERM, and
+4. asserts the drain contract: the idle connection receives one final
+   typed ``shutting_down`` error frame followed by EOF, and the process
+   itself exits 0 (having logged ``drained cleanly``) within the grace
+   window.
+
+Usage (from the `rust/` directory, binary already built):
+    drain_check.py [--timeout SECONDS]
+
+Exit status 1 with a diagnostic on any broken step.
+"""
+
+import argparse
+import json
+import re
+import signal
+import socket
+import struct
+import subprocess
+import sys
+import time
+
+
+def send_frame(sock, body):
+    raw = body.encode("utf-8")
+    sock.sendall(struct.pack(">I", len(raw)) + raw)
+
+
+def recv_exact(sock, n):
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            return None  # EOF mid-read (or clean EOF at n bytes short)
+        buf += chunk
+    return buf
+
+
+def recv_frame(sock):
+    """One length-prefixed frame, or None on clean EOF."""
+    prefix = recv_exact(sock, 4)
+    if prefix is None:
+        return None
+    (length,) = struct.unpack(">I", prefix)
+    body = recv_exact(sock, length)
+    if body is None:
+        raise RuntimeError("EOF inside a frame body")
+    return json.loads(body.decode("utf-8"))
+
+
+def fail(proc, msg):
+    proc.kill()
+    out, err = proc.communicate(timeout=10)
+    print(f"FAIL: {msg}", file=sys.stderr)
+    print(f"--- server stdout ---\n{out}", file=sys.stderr)
+    print(f"--- server stderr ---\n{err}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--timeout", type=float, default=60.0,
+                    help="overall deadline for the whole scenario")
+    args = ap.parse_args()
+
+    proc = subprocess.Popen(
+        ["cargo", "run", "--release", "-q", "--",
+         "serve", "--port", "0", "--workers", "1", "--drain-ms", "5000"],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True, bufsize=1,
+    )
+    deadline = time.monotonic() + args.timeout
+
+    # the serve banner carries the ephemeral address
+    banner = proc.stdout.readline()
+    m = re.search(r"mddct serving on (\S+):(\d+)", banner)
+    if not m:
+        fail(proc, f"no serve banner, got: {banner!r}")
+    host, port = m.group(1), int(m.group(2))
+
+    sock = socket.create_connection((host, port), timeout=10)
+    sock.settimeout(10)
+
+    # 1. health route before the drain: ok / ready
+    send_frame(sock, '{"op":"health"}')
+    reply = recv_frame(sock)
+    if reply is None or reply.get("health") != "ok" or reply.get("ready") is not True:
+        fail(proc, f"pre-drain health reply wrong: {reply!r}")
+
+    # 2. one real transform completes over the wire
+    data = ",".join(["0.5"] * 64)
+    send_frame(sock, f'{{"id":7,"op":"dct2d","shape":[8,8],"batch":1,"data":[{data}]}}')
+    reply = recv_frame(sock)
+    if reply is None or reply.get("ok") is not True or reply.get("id") != 7:
+        fail(proc, f"transform reply wrong: {reply!r}")
+    if len(reply.get("data", [])) != 64:
+        fail(proc, f"transform returned {len(reply.get('data', []))} values, wanted 64")
+
+    # 3. graceful shutdown: SIGTERM, then the drain contract on the
+    # still-open idle connection — one typed shutting_down frame, EOF
+    proc.send_signal(signal.SIGTERM)
+    goodbye = recv_frame(sock)
+    if goodbye is None:
+        fail(proc, "connection closed without the shutting_down goodbye frame")
+    if goodbye.get("ok") is not False or goodbye.get("error") != "shutting_down":
+        fail(proc, f"goodbye frame wrong: {goodbye!r}")
+    if recv_frame(sock) is not None:
+        fail(proc, "expected EOF after the goodbye frame")
+    sock.close()
+
+    # 4. the process itself exits 0 within the grace window
+    try:
+        code = proc.wait(timeout=max(1.0, deadline - time.monotonic()))
+    except subprocess.TimeoutExpired:
+        fail(proc, "server did not exit after SIGTERM")
+    out, err = proc.communicate(timeout=10)
+    if code != 0:
+        print(f"FAIL: server exited {code}", file=sys.stderr)
+        print(f"--- server stderr ---\n{err}", file=sys.stderr)
+        sys.exit(1)
+    if "drained cleanly" not in err:
+        print(f"FAIL: no 'drained cleanly' log; stderr:\n{err}", file=sys.stderr)
+        sys.exit(1)
+    print("drain_check: health + transform + SIGTERM drain contract all held")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,11 +25,11 @@
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use super::metrics::Metrics;
-use super::request::{PlanKey, Request, Response, TransformOp};
+use super::request::{PlanKey, Request, Response, TransformOp, DEFAULT_TENANT};
 use super::shard::{shard_min_numel, shard_min_numel_3d};
 use crate::util::env_usize;
 use crate::util::error::TransformError;
@@ -59,6 +59,95 @@ impl Pending {
     }
 }
 
+/// How long a quiescent tenant stays *active* for fair-share purposes
+/// after its last acquire attempt. A starved tenant becomes active on
+/// its very first (even rejected) attempt, which immediately reserves
+/// its share against further over-share borrowing by the hogs; once it
+/// goes quiet for this long while holding nothing, the reservation
+/// lapses and the budget is fully work-conserving again.
+const TENANT_ACTIVE_WINDOW: Duration = Duration::from_millis(500);
+
+/// Stale-entry sweep threshold for the per-tenant usage table: past
+/// this many tracked tenants, inactive zero-usage entries are dropped
+/// on the next acquire (bounds the table under hostile tenant churn).
+const TENANT_TABLE_SWEEP: usize = 256;
+
+/// Floor of the `Overloaded{retry_after}` hint (near-empty budget) ...
+const RETRY_AFTER_BASE: Duration = Duration::from_millis(1);
+/// ... and the extra backoff a fully occupied budget adds on top; the
+/// hint grows linearly with occupancy between the two.
+const RETRY_AFTER_FULL_EXTRA: Duration = Duration::from_millis(9);
+
+/// Parse a `MDDCT_TENANT_QUOTA`-style weight spec: comma-separated
+/// `tenant:weight` entries (e.g. `alice:3,bob:1`). Weights must be
+/// finite and positive; tenants not listed get weight 1.0.
+pub fn parse_tenant_quota(spec: &str) -> Result<Vec<(String, f64)>, String> {
+    let mut out = Vec::new();
+    for entry in spec.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let Some((name, weight)) = entry.split_once(':') else {
+            return Err(format!("quota entry '{entry}': expected tenant:weight"));
+        };
+        let name = name.trim();
+        if name.is_empty() {
+            return Err(format!("quota entry '{entry}': empty tenant name"));
+        }
+        let w: f64 = weight
+            .trim()
+            .parse()
+            .map_err(|_| format!("quota entry '{entry}': bad weight '{weight}'"))?;
+        if !w.is_finite() || w <= 0.0 {
+            return Err(format!("quota entry '{entry}': weight must be finite and > 0"));
+        }
+        out.push((name.to_string(), w));
+    }
+    Ok(out)
+}
+
+/// The `MDDCT_TENANT_QUOTA` weight table (empty = equal shares for
+/// every tenant); a malformed spec is reported and ignored.
+pub fn tenant_quota_from_env() -> Vec<(String, f64)> {
+    std::env::var("MDDCT_TENANT_QUOTA")
+        .ok()
+        .and_then(|v| match parse_tenant_quota(&v) {
+            Ok(q) => Some(q),
+            Err(e) => {
+                eprintln!("MDDCT_TENANT_QUOTA ignored: {e}");
+                None
+            }
+        })
+        .unwrap_or_default()
+}
+
+/// Per-tenant in-flight payload plus the instant of its last acquire
+/// attempt (admitted or not), which is what keeps its share reserved.
+#[derive(Debug)]
+struct TenantUsage {
+    elems: usize,
+    last_seen: Instant,
+}
+
+#[derive(Debug, Default)]
+struct TenantTable {
+    /// Configured fair-share weights (`MDDCT_TENANT_QUOTA`); anyone not
+    /// listed weighs 1.0.
+    weights: HashMap<String, f64>,
+    usage: HashMap<String, TenantUsage>,
+}
+
+impl TenantTable {
+    fn weight(&self, tenant: &str) -> f64 {
+        self.weights.get(tenant).copied().unwrap_or(1.0)
+    }
+
+    fn is_active(&self, u: &TenantUsage, now: Instant) -> bool {
+        u.elems > 0 || now.duration_since(u.last_seen) <= TENANT_ACTIVE_WINDOW
+    }
+}
+
 /// Elems-weighted admission budget shared by `Service::submit` (acquire)
 /// and the batcher/workers (release at every reply or drop): the total
 /// payload in flight — queued, batching, or executing — never exceeds
@@ -67,37 +156,129 @@ impl Pending {
 /// bound. Weighting by elements (like [`BatchPolicy::max_batch_elems`])
 /// makes one huge volume and ten thousand 8x8 blocks count the same way
 /// memory actually bills them.
+///
+/// The budget is split between tenants as a *weighted fair share with
+/// work-conserving borrowing*: a lone tenant may fill the whole budget,
+/// but while other tenants are active (holding payload, or having
+/// attempted an acquire within [`TENANT_ACTIVE_WINDOW`]) each tenant is
+/// guaranteed `max_elems * w / Σw` of capacity — over-share borrowing is
+/// admitted only into capacity no active tenant's unused share lays
+/// claim to. Weights come from `MDDCT_TENANT_QUOTA`
+/// ([`parse_tenant_quota`]); requests without a tenant share the
+/// [`DEFAULT_TENANT`] bucket.
 #[derive(Debug)]
 pub struct InflightBudget {
     max_elems: usize,
     current: AtomicUsize,
+    tenants: Mutex<TenantTable>,
 }
 
 impl InflightBudget {
-    /// Budget capped at `max_elems` total in-flight payload elements.
+    /// Budget capped at `max_elems` total in-flight payload elements,
+    /// with tenant weights taken from `MDDCT_TENANT_QUOTA`.
     pub fn new(max_elems: usize) -> InflightBudget {
-        InflightBudget { max_elems, current: AtomicUsize::new(0) }
+        Self::with_quota(max_elems, tenant_quota_from_env())
     }
 
-    /// Effectively unbounded budget (admission control off).
+    /// Budget capped at `max_elems` with an explicit tenant weight
+    /// table (tenants not listed weigh 1.0).
+    pub fn with_quota(max_elems: usize, quota: Vec<(String, f64)>) -> InflightBudget {
+        InflightBudget {
+            max_elems,
+            current: AtomicUsize::new(0),
+            tenants: Mutex::new(TenantTable {
+                weights: quota.into_iter().collect(),
+                usage: HashMap::new(),
+            }),
+        }
+    }
+
+    /// Effectively unbounded budget (admission control off — tenant
+    /// accounting is skipped entirely, nothing can shed).
     pub fn unlimited() -> InflightBudget {
-        Self::new(usize::MAX)
+        Self::with_quota(usize::MAX, Vec::new())
     }
 
-    /// Try to admit `elems` more payload; `false` = over budget (the
-    /// optimistic add is rolled back, nothing is held).
+    fn table(&self) -> std::sync::MutexGuard<'_, TenantTable> {
+        self.tenants.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Try to admit `elems` more payload for the [`DEFAULT_TENANT`];
+    /// `false` = over budget (nothing is held).
     pub fn try_acquire(&self, elems: usize) -> bool {
-        let prev = self.current.fetch_add(elems, Ordering::AcqRel);
-        if prev.saturating_add(elems) > self.max_elems {
-            self.current.fetch_sub(elems, Ordering::AcqRel);
+        self.try_acquire_for(DEFAULT_TENANT, elems)
+    }
+
+    /// Try to admit `elems` more payload charged to `tenant`; `false`
+    /// = over the global budget, or over this tenant's fair share while
+    /// other active tenants' unused shares cover the remaining space.
+    pub fn try_acquire_for(&self, tenant: &str, elems: usize) -> bool {
+        if self.max_elems == usize::MAX {
+            self.current.fetch_add(elems, Ordering::AcqRel);
+            return true;
+        }
+        let now = Instant::now();
+        let mut t = self.table();
+        if t.usage.len() > TENANT_TABLE_SWEEP {
+            t.usage.retain(|_, u| {
+                u.elems > 0 || now.duration_since(u.last_seen) <= TENANT_ACTIVE_WINDOW
+            });
+        }
+        // mark the applicant seen first: a rejected attempt still
+        // reserves its share against the tenants crowding it out
+        match t.usage.get_mut(tenant) {
+            Some(u) => u.last_seen = now,
+            None => {
+                t.usage.insert(tenant.to_string(), TenantUsage { elems: 0, last_seen: now });
+            }
+        }
+        let in_use = self.current.load(Ordering::Acquire);
+        if in_use.saturating_add(elems) > self.max_elems {
             return false;
         }
-        true
+        let wsum: f64 = t
+            .usage
+            .iter()
+            .filter(|(_, u)| t.is_active(u, now))
+            .map(|(name, _)| t.weight(name.as_str()))
+            .sum();
+        let share = |name: &str| self.max_elems as f64 * t.weight(name) / wsum;
+        let usage_t = t.usage[tenant].elems;
+        let admit = if (usage_t + elems) as f64 <= share(tenant) {
+            true
+        } else {
+            // over-share borrowing: only into capacity not reserved by
+            // another active tenant's unused share
+            let reserved: f64 = t
+                .usage
+                .iter()
+                .filter(|(name, u)| name.as_str() != tenant && t.is_active(u, now))
+                .map(|(name, u)| (share(name.as_str()) - u.elems as f64).max(0.0))
+                .sum();
+            (in_use + elems) as f64 + reserved <= self.max_elems as f64
+        };
+        if admit {
+            t.usage.get_mut(tenant).expect("marked seen above").elems += elems;
+            self.current.fetch_add(elems, Ordering::AcqRel);
+        }
+        admit
     }
 
-    /// Return `elems` of budget (request answered or dropped).
+    /// Return `elems` of [`DEFAULT_TENANT`] budget.
     pub fn release(&self, elems: usize) {
+        self.release_for(DEFAULT_TENANT, elems);
+    }
+
+    /// Return `elems` of `tenant`'s budget (request answered or
+    /// dropped).
+    pub fn release_for(&self, tenant: &str, elems: usize) {
         self.current.fetch_sub(elems, Ordering::AcqRel);
+        if self.max_elems == usize::MAX {
+            return;
+        }
+        if let Some(u) = self.table().usage.get_mut(tenant) {
+            u.elems = u.elems.saturating_sub(elems);
+        }
     }
 
     /// Payload elements currently admitted.
@@ -108,6 +289,19 @@ impl InflightBudget {
     /// The configured cap.
     pub fn max_elems(&self) -> usize {
         self.max_elems
+    }
+
+    /// Backoff hint for an `Overloaded` shed, derived from current
+    /// budget occupancy: [`RETRY_AFTER_BASE`] when the budget is empty
+    /// (the request was simply too big), growing monotonically by
+    /// [`RETRY_AFTER_FULL_EXTRA`] at full occupancy — clients back off
+    /// proportionally to actual pressure.
+    pub fn retry_after(&self) -> Duration {
+        if self.max_elems == 0 || self.max_elems == usize::MAX {
+            return RETRY_AFTER_BASE;
+        }
+        let occupancy = (self.in_use() as f64 / self.max_elems as f64).clamp(0.0, 1.0);
+        RETRY_AFTER_BASE + RETRY_AFTER_FULL_EXTRA.mul_f64(occupancy)
     }
 }
 
@@ -120,13 +314,16 @@ pub(crate) fn admit(p: Pending, metrics: &Metrics, budget: &InflightBudget) -> O
     if p.cancelled.load(Ordering::Relaxed) {
         metrics.record_dropped_reply(&p.request.op.name());
         crate::obs::instant_event("svc.dropped_reply");
-        budget.release(p.request.data.len());
+        budget.release_for(p.request.tenant_name(), p.request.data.len());
         return None;
     }
     if p.request.expired() {
         metrics.record_expired(&p.request.op.name());
+        if let Some(t) = &p.request.tenant {
+            metrics.record_tenant_expired(t);
+        }
         crate::obs::instant_event("svc.expired");
-        budget.release(p.request.data.len());
+        budget.release_for(p.request.tenant_name(), p.request.data.len());
         let _ = p.reply.send(Err(TransformError::DeadlineExceeded));
         return None;
     }
@@ -211,6 +408,34 @@ pub fn batch_footprint(op: TransformOp, queued: usize, numel: usize) -> usize {
     }
 }
 
+/// Flush order for a multi-key drain (co-batching window expired, or
+/// the request channel closed): highest max-priority key first, then
+/// earliest deadline (keys with no deadline last), then oldest
+/// enqueued — so under pressure the urgent work reaches a worker while
+/// the rest of the drain may still expire behind it.
+fn drain_order(open: &HashMap<PlanKey, Vec<Pending>>) -> Vec<PlanKey> {
+    let mut ranked: Vec<(u8, Option<Instant>, Instant, PlanKey)> = open
+        .iter()
+        .map(|(key, q)| {
+            let priority = q.iter().map(|p| p.request.priority).max().unwrap_or(0);
+            let deadline = q.iter().filter_map(|p| p.request.deadline).min();
+            let enqueued = q.iter().map(|p| p.enqueued).min();
+            (priority, deadline, enqueued.unwrap_or_else(Instant::now), key.clone())
+        })
+        .collect();
+    ranked.sort_by(|a, b| {
+        b.0.cmp(&a.0)
+            .then_with(|| match (a.1, b.1) {
+                (Some(x), Some(y)) => x.cmp(&y),
+                (Some(_), None) => std::cmp::Ordering::Less,
+                (None, Some(_)) => std::cmp::Ordering::Greater,
+                (None, None) => std::cmp::Ordering::Equal,
+            })
+            .then_with(|| a.2.cmp(&b.2))
+    });
+    ranked.into_iter().map(|(.., key)| key).collect()
+}
+
 /// Run the batching loop: drain `rx`, form batches, push to `tx`.
 /// Cancelled/expired requests are concluded at dequeue and again at
 /// flush time (see [`admit`]) so stale work never reaches a worker.
@@ -276,8 +501,9 @@ pub fn run_batcher(
                 }
             }
             Err(RecvTimeoutError::Timeout) => {
-                // flush everything currently held
-                for (key, items) in open.drain() {
+                // flush everything currently held, most urgent key first
+                for key in drain_order(&open) {
+                    let items = open.remove(&key).expect("drain_order keys come from open");
                     if flush(key, items).is_err() {
                         return;
                     }
@@ -285,7 +511,8 @@ pub fn run_batcher(
                 oldest = None;
             }
             Err(RecvTimeoutError::Disconnected) => {
-                for (key, items) in open.drain() {
+                for key in drain_order(&open) {
+                    let items = open.remove(&key).expect("drain_order keys come from open");
                     let _ = flush(key, items);
                 }
                 return;
@@ -314,6 +541,8 @@ mod tests {
                     shape,
                     data: vec![0.0; numel],
                     deadline: None,
+                    tenant: None,
+                    priority: 0,
                 },
                 tx,
             ),
@@ -417,6 +646,8 @@ mod tests {
                     shape: shape.clone(),
                     data: vec![0.0; numel],
                     deadline: None,
+                    tenant: None,
+                    priority: 0,
                 },
                 reply,
             ))
@@ -492,6 +723,8 @@ mod tests {
                 shape: vec![4, 4],
                 data: vec![0.0; 16],
                 deadline: None,
+                tenant: None,
+                priority: 0,
             };
             assert!(budget.try_acquire(req.data.len()));
             req_tx.send(Pending::new(req, tx)).unwrap();
@@ -588,6 +821,96 @@ mod tests {
         assert!(!InflightBudget::new(16).try_acquire(64));
         // ...but always fits the unlimited one
         assert!(InflightBudget::unlimited().try_acquire(usize::MAX / 2));
+    }
+
+    #[test]
+    fn tenant_fair_share_guards_a_starved_tenant() {
+        // equal weights, budget 100: a lone tenant is work-conserving
+        // and may fill everything ...
+        let b = InflightBudget::with_quota(100, Vec::new());
+        assert!(b.try_acquire_for("hog", 100));
+        // ... a newly arriving tenant is rejected right now (budget
+        // full) but its attempt reserves its share
+        assert!(!b.try_acquire_for("victim", 10));
+        // the hog can no longer borrow past its 50-share ...
+        b.release_for("hog", 10);
+        assert!(!b.try_acquire_for("hog", 10));
+        // ... while the victim gets in as capacity frees up
+        assert!(b.try_acquire_for("victim", 10));
+        assert_eq!(b.in_use(), 100);
+        // under its share the victim keeps being admitted even though
+        // the hog would love the space back
+        b.release_for("hog", 40);
+        assert!(b.try_acquire_for("victim", 40));
+        assert!(!b.try_acquire_for("hog", 10));
+        b.release_for("victim", 50);
+        b.release_for("hog", 50);
+        assert_eq!(b.in_use(), 0);
+    }
+
+    #[test]
+    fn tenant_quota_weights_skew_the_shares() {
+        // 3:1 weights over 100 elements -> shares 75 / 25
+        let quota = vec![("alice".to_string(), 3.0), ("bob".to_string(), 1.0)];
+        let b = InflightBudget::with_quota(100, quota);
+        // both active: alice under 75 admits, bob under 25 admits
+        assert!(b.try_acquire_for("alice", 70));
+        assert!(b.try_acquire_for("bob", 20));
+        // bob over his 25-share cannot borrow: alice's unused 5 is
+        // reserved and the request would exceed it
+        assert!(!b.try_acquire_for("bob", 10));
+        // alice still fits under her share
+        assert!(b.try_acquire_for("alice", 5));
+        assert_eq!(b.in_use(), 95);
+    }
+
+    #[test]
+    fn tenant_quota_spec_parses_and_rejects() {
+        let q = parse_tenant_quota("alice:3, bob:0.5").unwrap();
+        assert_eq!(q, vec![("alice".to_string(), 3.0), ("bob".to_string(), 0.5)]);
+        assert!(parse_tenant_quota("").unwrap().is_empty());
+        assert!(parse_tenant_quota(" , ").unwrap().is_empty());
+        assert!(parse_tenant_quota("alice").is_err()); // no weight
+        assert!(parse_tenant_quota(":3").is_err()); // no name
+        assert!(parse_tenant_quota("alice:zero").is_err()); // bad weight
+        assert!(parse_tenant_quota("alice:0").is_err()); // not > 0
+        assert!(parse_tenant_quota("alice:-1").is_err());
+        assert!(parse_tenant_quota("alice:inf").is_err());
+    }
+
+    #[test]
+    fn retry_after_hint_grows_with_occupancy() {
+        let b = InflightBudget::with_quota(100, Vec::new());
+        let empty = b.retry_after();
+        assert!(b.try_acquire(50));
+        let half = b.retry_after();
+        assert!(b.try_acquire(50));
+        let full = b.retry_after();
+        assert!(empty < half, "{empty:?} !< {half:?}");
+        assert!(half < full, "{half:?} !< {full:?}");
+        // degenerate budgets still give a sane floor
+        assert_eq!(InflightBudget::unlimited().retry_after(), empty);
+    }
+
+    #[test]
+    fn drain_flushes_urgent_keys_first() {
+        let mut open: HashMap<PlanKey, Vec<Pending>> = HashMap::new();
+        let mut put = |shape: Vec<usize>, priority: u8, deadline: Option<Instant>| {
+            let (mut p, _r) = pending(shape[0] as u64, shape);
+            p.request.priority = priority;
+            p.request.deadline = deadline;
+            open.entry(p.request.key()).or_default().push(p);
+        };
+        let soon = Instant::now() + Duration::from_millis(5);
+        let later = Instant::now() + Duration::from_secs(5);
+        put(vec![2, 2], 0, None);
+        put(vec![4, 4], 0, Some(later));
+        put(vec![8, 8], 0, Some(soon));
+        put(vec![16, 16], 3, None);
+        let order: Vec<Vec<usize>> =
+            drain_order(&open).into_iter().map(|k| k.shape).collect();
+        // priority 3 first, then by deadline, deadline-free last
+        assert_eq!(order, vec![vec![16, 16], vec![8, 8], vec![4, 4], vec![2, 2]]);
     }
 
     #[test]

@@ -12,12 +12,14 @@
 //!
 //! Each comma-separated entry is `kind:site[:arg][:prob]`:
 //!
-//! * `kind` — `panic` | `error` | `delay`;
+//! * `kind` — `panic` | `error` | `delay` at an execution seam, or a
+//!   network kind `stall` | `truncate` | `garbage` | `close` applied at
+//!   the wire (`site` must be `conn`; see [`conn_fault`]);
 //! * `site` — either a seam name (`execute`, `execute_batch`, `pack`)
 //!   or a transform-op name (`dct2d`, …), matching every seam that op
-//!   crosses;
-//! * `arg` — for `delay` only: a duration (`20ms`, `500us`, `1s`, or a
-//!   bare number meaning milliseconds);
+//!   crosses; network kinds use the pseudo-site `conn`;
+//! * `arg` — for `delay` and `stall` only: a duration (`20ms`, `500us`,
+//!   `1s`, or a bare number meaning milliseconds);
 //! * `prob` — firing probability in `[0, 1]`, default 1.0 (rolled per
 //!   seam crossing with a per-thread deterministic RNG).
 //!
@@ -49,6 +51,29 @@ pub enum FaultKind {
     Error,
     /// Sleep at the seam (exercises deadlines and overload shedding).
     Delay(Duration),
+    /// Conn-site: sleep before the next socket read/write (a slow or
+    /// stalling peer; exercises the read/idle timeouts).
+    Stall(Duration),
+    /// Conn-site: the next socket read reports EOF / the next write
+    /// stops short (a peer that vanished mid-frame).
+    Truncate,
+    /// Conn-site: corrupt a byte of the next read/write (exercises the
+    /// typed `invalid_request` + close-on-violation path).
+    Garbage,
+    /// Conn-site: the next socket operation fails as if the connection
+    /// was reset.
+    Close,
+}
+
+impl FaultKind {
+    /// Whether this kind fires at the wire ([`conn_fault`]) rather than
+    /// at a coordinator execution seam ([`fire`]).
+    pub fn is_conn(&self) -> bool {
+        matches!(
+            self,
+            FaultKind::Stall(_) | FaultKind::Truncate | FaultKind::Garbage | FaultKind::Close
+        )
+    }
 }
 
 /// One parsed `kind:site[:arg][:prob]` entry.
@@ -83,14 +108,26 @@ pub fn parse_spec(spec: &str) -> Result<Vec<FaultSpec>, String> {
         let (kind, rest) = match parts[0].trim() {
             "panic" => (FaultKind::Panic, &parts[2..]),
             "error" => (FaultKind::Error, &parts[2..]),
-            "delay" => {
+            "truncate" => (FaultKind::Truncate, &parts[2..]),
+            "garbage" => (FaultKind::Garbage, &parts[2..]),
+            "close" => (FaultKind::Close, &parts[2..]),
+            "delay" | "stall" => {
                 let Some(arg) = parts.get(2) else {
-                    return Err(format!("fault entry '{entry}': delay needs a duration"));
+                    return Err(format!("fault entry '{entry}': {} needs a duration", parts[0]));
                 };
-                (FaultKind::Delay(parse_duration(arg.trim())?), &parts[3..])
+                let d = parse_duration(arg.trim())?;
+                let kind = if parts[0].trim() == "delay" {
+                    FaultKind::Delay(d)
+                } else {
+                    FaultKind::Stall(d)
+                };
+                (kind, &parts[3..])
             }
             other => return Err(format!("fault entry '{entry}': unknown kind '{other}'")),
         };
+        if kind.is_conn() && site != "conn" {
+            return Err(format!("fault entry '{entry}': network kinds need site 'conn'"));
+        }
         let prob = match rest.first() {
             None => 1.0,
             Some(p) => {
@@ -251,7 +288,7 @@ fn fire_slow(seam: &str, op: &str) -> Result<(), TransformError> {
     let hit = state::with_specs(|specs| {
         specs
             .iter()
-            .find(|s| (s.site == seam || s.site == op) && state::roll(s.prob))
+            .find(|s| !s.kind.is_conn() && (s.site == seam || s.site == op) && state::roll(s.prob))
             .map(|s| s.kind)
     });
     match hit {
@@ -271,7 +308,44 @@ fn fire_slow(seam: &str, op: &str) -> Result<(), TransformError> {
             crate::obs::instant_event("fault.panic");
             panic!("injected fault: panic at {seam} ({op})");
         }
+        // conn kinds are filtered out of the seam search above
+        Some(_) => Ok(()),
     }
+}
+
+/// Cross the wire fault seam: the first `conn`-site network spec
+/// (`stall` / `truncate` / `garbage` / `close`) whose probability roll
+/// succeeds is returned for the caller (the server's `FaultStream`) to
+/// apply to the next socket operation. Costs one atomic load when
+/// disabled; compiles to `None` under `fault-off`.
+#[cfg(not(feature = "fault-off"))]
+pub fn conn_fault() -> Option<FaultKind> {
+    if !enabled() {
+        return None;
+    }
+    conn_fault_slow()
+}
+
+/// Compiled-out variant: never fires.
+#[cfg(feature = "fault-off")]
+#[inline(always)]
+pub fn conn_fault() -> Option<FaultKind> {
+    None
+}
+
+#[cfg(not(feature = "fault-off"))]
+#[cold]
+fn conn_fault_slow() -> Option<FaultKind> {
+    let hit = state::with_specs(|specs| {
+        specs
+            .iter()
+            .find(|s| s.kind.is_conn() && s.site == "conn" && state::roll(s.prob))
+            .map(|s| s.kind)
+    });
+    if hit.is_some() {
+        crate::obs::instant_event("fault.conn");
+    }
+    hit
 }
 
 #[cfg(test)]
@@ -323,6 +397,39 @@ mod tests {
         assert!(parse_spec("delay:execute").is_err()); // delay w/o duration
         assert!(parse_spec("panic:dct2d:1.5").is_err()); // prob out of range
         assert!(parse_spec("delay:execute:fast").is_err()); // bad duration
+        assert!(parse_spec("stall:conn").is_err()); // stall w/o duration
+        assert!(parse_spec("truncate:execute").is_err()); // conn kind off-site
+    }
+
+    #[test]
+    fn conn_kinds_parse_with_the_conn_site() {
+        let specs = parse_spec("stall:conn:2ms:0.5,truncate:conn,garbage:conn:0.1,close:conn")
+            .unwrap();
+        assert_eq!(specs.len(), 4);
+        assert_eq!(specs[0].kind, FaultKind::Stall(Duration::from_millis(2)));
+        assert_eq!(specs[0].prob, 0.5);
+        assert_eq!(specs[1].kind, FaultKind::Truncate);
+        assert_eq!(specs[2], FaultSpec { kind: FaultKind::Garbage, site: "conn".into(), prob: 0.1 });
+        assert_eq!(specs[3].kind, FaultKind::Close);
+        assert!(specs.iter().all(|s| s.kind.is_conn()));
+    }
+
+    #[cfg(not(feature = "fault-off"))]
+    #[test]
+    fn conn_faults_fire_at_the_wire_seam_only() {
+        let _g = crate::obs::test_guard();
+        set_faults(parse_spec("close:conn").unwrap());
+        // the execution seams never see a conn kind ...
+        assert!(fire("execute", "dct2d").is_ok());
+        assert!(fire("conn", "dct2d").is_ok());
+        // ... and the wire seam does
+        assert_eq!(conn_fault(), Some(FaultKind::Close));
+        // mixed spec: the wire seam skips execution kinds
+        set_faults(parse_spec("error:execute,stall:conn:1ms").unwrap());
+        assert_eq!(conn_fault(), Some(FaultKind::Stall(Duration::from_millis(1))));
+        assert!(fire("execute", "dct2d").is_err());
+        clear();
+        assert_eq!(conn_fault(), None);
     }
 
     #[cfg(not(feature = "fault-off"))]

@@ -54,12 +54,24 @@ struct RankMetrics {
     bands_max: usize,
 }
 
-/// Both metric tables behind one lock, so a snapshot always sees the
-/// per-op and per-rank aggregates in agreement.
+/// Lifecycle counters and latency per explicit tenant (requests
+/// submitted without a tenant are not tracked here — they are billed to
+/// the shared default budget bucket but add no metrics row).
+#[derive(Debug, Default)]
+struct TenantMetrics {
+    submitted: u64,
+    shed: u64,
+    expired: u64,
+    latency: LatencyHistogram,
+}
+
+/// All metric tables behind one lock, so a snapshot always sees the
+/// per-op, per-rank, and per-tenant aggregates in agreement.
 #[derive(Default)]
 struct Tables {
     ops: BTreeMap<String, OpMetrics>,
     by_rank: BTreeMap<usize, RankMetrics>,
+    tenants: BTreeMap<String, TenantMetrics>,
 }
 
 /// Thread-safe metrics registry.
@@ -151,6 +163,31 @@ impl Metrics {
         t.ops.entry(op.to_string()).or_default().retried_degraded += 1;
     }
 
+    /// Record one request entering admission under an explicit tenant.
+    pub fn record_tenant_submitted(&self, tenant: &str) {
+        let mut t = self.inner.lock().unwrap();
+        t.tenants.entry(tenant.to_string()).or_default().submitted += 1;
+    }
+
+    /// Record one explicit-tenant request shed at admission.
+    pub fn record_tenant_shed(&self, tenant: &str) {
+        let mut t = self.inner.lock().unwrap();
+        t.tenants.entry(tenant.to_string()).or_default().shed += 1;
+    }
+
+    /// Record one explicit-tenant request expired while queued.
+    pub fn record_tenant_expired(&self, tenant: &str) {
+        let mut t = self.inner.lock().unwrap();
+        t.tenants.entry(tenant.to_string()).or_default().expired += 1;
+    }
+
+    /// Record one completed explicit-tenant request with its
+    /// queue+execute latency (seconds).
+    pub fn record_tenant_done(&self, tenant: &str, latency: f64) {
+        let mut t = self.inner.lock().unwrap();
+        t.tenants.entry(tenant.to_string()).or_default().latency.record(latency);
+    }
+
     /// Total successful requests across all ops.
     pub fn total_requests(&self) -> u64 {
         self.inner.lock().unwrap().ops.values().map(|e| e.requests).sum()
@@ -162,6 +199,8 @@ impl Metrics {
     ///
     /// * `_sharding_by_rank` — shard fan-out keyed `"1d"` / `"2d"` /
     ///   `"3d"`, aggregating per transform dimensionality;
+    /// * `_tenants` — per-tenant lifecycle counters and latency
+    ///   quantiles, present only when explicit-tenant traffic was seen;
     /// * `_scratch` — process-wide scratch-pool statistics
     ///   ([`crate::util::scratch::stats_json`]), always present;
     /// * `_stage_breakdown` — the live Fig.-6-style per-(op,shape) stage
@@ -218,6 +257,22 @@ impl Metrics {
                 ranks.insert(format!("{rank}d"), Json::Obj(o));
             }
             root.insert("_sharding_by_rank".into(), Json::Obj(ranks));
+        }
+        if !t.tenants.is_empty() {
+            let mut tenants = BTreeMap::new();
+            for (name, e) in t.tenants.iter() {
+                let mut o = BTreeMap::new();
+                o.insert("submitted".into(), Json::Num(e.submitted as f64));
+                o.insert("completed".into(), Json::Num(e.latency.total as f64));
+                o.insert("shed_requests".into(), Json::Num(e.shed as f64));
+                o.insert("expired_requests".into(), Json::Num(e.expired as f64));
+                o.insert("mean_latency_s".into(), Json::Num(e.latency.mean()));
+                o.insert("p50_latency_s".into(), Json::Num(e.latency.quantile(0.5)));
+                o.insert("p95_latency_s".into(), Json::Num(e.latency.quantile(0.95)));
+                o.insert("p99_latency_s".into(), Json::Num(e.latency.quantile(0.99)));
+                tenants.insert(name.clone(), Json::Obj(o));
+            }
+            root.insert("_tenants".into(), Json::Obj(tenants));
         }
         root.insert("_scratch".into(), crate::util::scratch::stats_json());
         let breakdown = crate::obs::breakdown_json();
@@ -311,6 +366,29 @@ mod tests {
         assert_eq!(i.get("expired_requests").unwrap().as_f64().unwrap(), 0.0);
         assert_eq!(i.get("dropped_replies").unwrap().as_f64().unwrap(), 0.0);
         assert_eq!(i.get("retried_degraded").unwrap().as_f64().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn tenant_section_appears_only_with_explicit_tenants() {
+        let m = Metrics::new();
+        m.record("dct2d", 2, 0.001, 1, 1);
+        assert!(m.snapshot().get("_tenants").is_none());
+        m.record_tenant_submitted("alice");
+        m.record_tenant_submitted("alice");
+        m.record_tenant_done("alice", 0.002);
+        m.record_tenant_shed("bob");
+        m.record_tenant_expired("bob");
+        let snap = m.snapshot();
+        let tenants = snap.get("_tenants").unwrap();
+        let a = tenants.get("alice").unwrap();
+        assert_eq!(a.get("submitted").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(a.get("completed").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(a.get("shed_requests").unwrap().as_f64().unwrap(), 0.0);
+        assert!(a.get("p99_latency_s").unwrap().as_f64().unwrap() > 0.0);
+        let b = tenants.get("bob").unwrap();
+        assert_eq!(b.get("submitted").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(b.get("shed_requests").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(b.get("expired_requests").unwrap().as_f64().unwrap(), 1.0);
     }
 
     #[test]

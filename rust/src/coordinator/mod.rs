@@ -35,14 +35,17 @@ pub mod service;
 pub mod shard;
 
 pub use crate::util::error::TransformError;
-pub use batcher::{max_batch_elems, BatchPolicy, InflightBudget, DEFAULT_MAX_BATCH_ELEMS};
-pub use fault::{parse_spec, set_faults, FaultKind, FaultSpec};
+pub use batcher::{
+    max_batch_elems, parse_tenant_quota, tenant_quota_from_env, BatchPolicy, InflightBudget,
+    DEFAULT_MAX_BATCH_ELEMS,
+};
+pub use fault::{conn_fault, parse_spec, set_faults, FaultKind, FaultSpec};
 pub use metrics::Metrics;
 pub use plan_cache::{NativePlan, PlanCache};
-pub use request::{PlanKey, Request, Response, TransformOp};
+pub use request::{PlanKey, Request, Response, TransformOp, DEFAULT_TENANT};
 pub use router::{BackendPolicy, Route, Router};
 pub use service::{
-    default_workers, Handle, Service, ServiceConfig, DEFAULT_MAX_INFLIGHT_ELEMS,
+    default_workers, Handle, Service, ServiceConfig, SubmitOptions, DEFAULT_MAX_INFLIGHT_ELEMS,
 };
 pub use shard::{
     shard_min_numel, shard_min_numel_3d, ShardPlan, ShardPolicy, SHARD_MIN_NUMEL,

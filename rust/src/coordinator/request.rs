@@ -216,6 +216,11 @@ impl PlanKey {
     }
 }
 
+/// Tenant name charged for requests submitted without an explicit
+/// tenant: they all share one fair-share bucket in the
+/// [`InflightBudget`](super::batcher::InflightBudget).
+pub const DEFAULT_TENANT: &str = "default";
+
 /// A transform request.
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -232,12 +237,25 @@ pub struct Request {
     /// [`TransformError::DeadlineExceeded`]) instead of consuming pool
     /// work; `None` = no deadline.
     pub deadline: Option<Instant>,
+    /// Tenant this request's payload is charged to in the weighted
+    /// fair-share admission budget; `None` bills the shared
+    /// [`DEFAULT_TENANT`] bucket.
+    pub tenant: Option<String>,
+    /// Scheduling priority (higher = flushed first when the batcher
+    /// drains multiple plan keys at once; 0 = normal).
+    pub priority: u8,
 }
 
 impl Request {
     /// The (op, shape) key this request batches and plans under.
     pub fn key(&self) -> PlanKey {
         PlanKey::new(self.op, self.shape.clone())
+    }
+
+    /// The tenant charged for this request ([`DEFAULT_TENANT`] when
+    /// none was set).
+    pub fn tenant_name(&self) -> &str {
+        self.tenant.as_deref().unwrap_or(DEFAULT_TENANT)
     }
 
     /// Whether this request's deadline has already passed.
@@ -362,7 +380,7 @@ mod tests {
     }
 
     fn req(id: u64, op: TransformOp, shape: Vec<usize>, data: Vec<f64>) -> Request {
-        Request { id, op, shape, data, deadline: None }
+        Request { id, op, shape, data, deadline: None, tenant: None, priority: 0 }
     }
 
     #[test]

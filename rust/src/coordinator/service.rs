@@ -120,10 +120,21 @@ pub fn default_max_inflight_elems() -> usize {
     crate::util::env_usize("MDDCT_MAX_INFLIGHT").unwrap_or(DEFAULT_MAX_INFLIGHT_ELEMS)
 }
 
-/// Backoff hint carried by [`TransformError::Overloaded`]: long enough
-/// for a batching window + execution to drain budget, short enough that
-/// a client retry loop stays responsive.
-const RETRY_AFTER_HINT: Duration = Duration::from_millis(5);
+/// Per-request submission options beyond the payload itself. `Default`
+/// gives an untenanted, normal-priority request with no deadline.
+#[derive(Debug, Clone, Default)]
+pub struct SubmitOptions {
+    /// Absolute completion deadline (`None` = no deadline). Authoritative
+    /// as given — [`Service::submit`] stamps the service default before
+    /// delegating here.
+    pub deadline: Option<Instant>,
+    /// Tenant charged for the payload in the weighted fair-share
+    /// admission budget; `None` bills the shared default bucket.
+    pub tenant: Option<String>,
+    /// Scheduling priority (higher = flushed first on a multi-key
+    /// batcher drain).
+    pub priority: u8,
+}
 
 /// Handle to an in-flight request. Dropping it without waiting marks
 /// the request cancelled: the batcher/workers skip computing for it at
@@ -232,15 +243,11 @@ impl Service {
         data: Vec<f64>,
     ) -> Result<Handle, TransformError> {
         let deadline = self.default_deadline.map(|d| Instant::now() + d);
-        self.submit_with_deadline(op, shape, data, deadline)
+        self.submit_opts(op, shape, data, SubmitOptions { deadline, ..Default::default() })
     }
 
     /// Submit a transform with an explicit absolute deadline (`None` =
-    /// no deadline, overriding the service default). Validation and
-    /// admission control happen here, synchronously: a malformed request
-    /// fails [`TransformError::InvalidRequest`], and one the inflight
-    /// budget cannot admit is shed [`TransformError::Overloaded`]
-    /// without ever entering the queue.
+    /// no deadline, overriding the service default).
     pub fn submit_with_deadline(
         &self,
         op: TransformOp,
@@ -248,13 +255,38 @@ impl Service {
         data: Vec<f64>,
         deadline: Option<Instant>,
     ) -> Result<Handle, TransformError> {
+        self.submit_opts(op, shape, data, SubmitOptions { deadline, ..Default::default() })
+    }
+
+    /// Submit a transform with full per-request options (deadline,
+    /// tenant, priority — all authoritative as given). Validation and
+    /// admission control happen here, synchronously: a malformed request
+    /// fails [`TransformError::InvalidRequest`], and one the inflight
+    /// budget cannot admit — globally, or past its tenant's fair share —
+    /// is shed [`TransformError::Overloaded`] without ever entering the
+    /// queue, with a `retry_after` hint scaled to current budget
+    /// occupancy.
+    pub fn submit_opts(
+        &self,
+        op: TransformOp,
+        shape: Vec<usize>,
+        data: Vec<f64>,
+        opts: SubmitOptions,
+    ) -> Result<Handle, TransformError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let request = Request { id, op, shape, data, deadline };
+        let SubmitOptions { deadline, tenant, priority } = opts;
+        let request = Request { id, op, shape, data, deadline, tenant, priority };
         request.validate()?;
-        if !self.inflight.try_acquire(request.data.len()) {
+        if let Some(t) = &request.tenant {
+            self.metrics.record_tenant_submitted(t);
+        }
+        if !self.inflight.try_acquire_for(request.tenant_name(), request.data.len()) {
             self.metrics.record_shed(&op.name());
+            if let Some(t) = &request.tenant {
+                self.metrics.record_tenant_shed(t);
+            }
             crate::obs::instant_event("svc.shed");
-            return Err(TransformError::Overloaded { retry_after: RETRY_AFTER_HINT });
+            return Err(TransformError::Overloaded { retry_after: self.inflight.retry_after() });
         }
         let (reply, rx) = channel();
         let pending = Pending::new(request, reply);
@@ -262,10 +294,16 @@ impl Service {
         match self.req_tx.as_ref().expect("service running").send(pending) {
             Ok(()) => Ok(Handle { rx, cancelled }),
             Err(dead) => {
-                self.inflight.release(dead.0.request.data.len());
+                self.inflight.release_for(dead.0.request.tenant_name(), dead.0.request.data.len());
                 Err(TransformError::ShuttingDown)
             }
         }
+    }
+
+    /// The deadline stamped on requests submitted without an explicit
+    /// one ([`ServiceConfig::default_deadline`]).
+    pub fn default_deadline(&self) -> Option<Duration> {
+        self.default_deadline
     }
 
     /// Submit and block for the result.
@@ -394,7 +432,7 @@ fn serve_degraded(
     };
     // release before replying so a client that resubmits the moment
     // `wait` returns is never spuriously shed by budget still held here
-    budget.release(elems);
+    budget.release_for(pending.request.tenant_name(), elems);
     match result {
         Ok(output) => {
             if retry {
@@ -402,6 +440,9 @@ fn serve_degraded(
             }
             let latency = pending.enqueued.elapsed().as_secs_f64();
             metrics.record(op_name, rank, latency, 1, 1);
+            if let Some(t) = &pending.request.tenant {
+                metrics.record_tenant_done(t, latency);
+            }
             let sent = pending.reply.send(Ok(Response {
                 id: pending.request.id,
                 output,
@@ -484,7 +525,10 @@ fn execute_packed(
             for (i, pending) in items.into_iter().enumerate() {
                 let latency = pending.enqueued.elapsed().as_secs_f64();
                 metrics.record(op_name, rank, latency, n, bands);
-                budget.release(pending.request.data.len());
+                if let Some(t) = &pending.request.tenant {
+                    metrics.record_tenant_done(t, latency);
+                }
+                budget.release_for(pending.request.tenant_name(), pending.request.data.len());
                 let sent = pending.reply.send(Ok(Response {
                     id: pending.request.id,
                     output: output[i * numel..(i + 1) * numel].to_vec(),
@@ -592,7 +636,10 @@ fn worker_loop(
                 Ok((output, route)) => {
                     let latency = t0.elapsed().as_secs_f64();
                     metrics.record(&op_name, rank, latency, n, bands);
-                    budget.release(pending.request.data.len());
+                    if let Some(t) = &pending.request.tenant {
+                        metrics.record_tenant_done(t, latency);
+                    }
+                    budget.release_for(pending.request.tenant_name(), pending.request.data.len());
                     let sent = pending.reply.send(Ok(Response {
                         id: pending.request.id,
                         output,
@@ -776,6 +823,52 @@ mod tests {
     }
 
     #[test]
+    fn tenanted_requests_flow_and_surface_in_metrics() {
+        let s = svc(2);
+        let mut rng = Rng::new(206);
+        let x = rng.normal_vec(8 * 8);
+        let opts = SubmitOptions { tenant: Some("alice".into()), priority: 2, ..Default::default() };
+        let h = s.submit_opts(TransformOp::Dct2d, vec![8, 8], x.clone(), opts).unwrap();
+        let r = h.wait().unwrap();
+        check_close(&r.output, &dct2d_direct(&x, 8, 8), 1e-9).unwrap();
+        assert_eq!(s.inflight.in_use(), 0);
+        let snap = s.snapshot();
+        let a = snap.get("_tenants").and_then(|t| t.get("alice")).unwrap();
+        assert_eq!(a.get("submitted").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(a.get("completed").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(a.get("shed_requests").unwrap().as_f64().unwrap(), 0.0);
+        // untenanted traffic adds no tenant row
+        let _ = s.transform(TransformOp::Dct2d, vec![4, 4], vec![1.0; 16]).unwrap();
+        let snap = s.snapshot();
+        let tenants = snap.get("_tenants").unwrap();
+        assert!(tenants.get("alice").is_some());
+        assert!(tenants.get("default").is_none());
+    }
+
+    #[test]
+    fn shed_retry_after_scales_with_occupancy() {
+        // budget smaller than the request: the shed hint on an empty
+        // budget is the floor; a fuller budget hints a longer backoff
+        let s = Service::start_native(ServiceConfig {
+            workers: 1,
+            batch: BatchPolicy::default(),
+            exec: crate::parallel::ExecPolicy::Serial,
+            shard: ShardPolicy::Auto,
+            trace: false,
+            default_deadline: None,
+            max_inflight_elems: 8,
+        });
+        let err = s.transform(TransformOp::Dct2d, vec![4, 4], vec![1.0; 16]).unwrap_err();
+        let TransformError::Overloaded { retry_after: empty_hint } = err else {
+            panic!("expected Overloaded, got {err:?}");
+        };
+        assert_eq!(empty_hint, s.inflight.retry_after());
+        assert!(s.inflight.try_acquire(8));
+        assert!(s.inflight.retry_after() > empty_hint);
+        s.inflight.release(8);
+    }
+
+    #[test]
     fn worker_panic_becomes_request_error_and_worker_survives() {
         use super::super::batcher::{Batch, Pending};
         use super::super::request::{PlanKey, Request};
@@ -809,6 +902,8 @@ mod tests {
                         shape: vec![4],
                         data: vec![0.0; 4],
                         deadline: None,
+                        tenant: None,
+                        priority: 0,
                     },
                     reply_bad,
                 )],
@@ -834,6 +929,8 @@ mod tests {
                         shape: vec![4, 4],
                         data: x.clone(),
                         deadline: None,
+                        tenant: None,
+                        priority: 0,
                     },
                     reply_ok,
                 )],

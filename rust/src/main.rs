@@ -6,10 +6,16 @@
 //!                                 run one transform on random data
 //!   serve --port P [--workers W] [--max-conns C] [--pjrt]
 //!         [--deadline-ms D] [--max-inflight E] [--fault SPEC]
+//!         [--drain-ms G]
 //!                                 TCP front-end (length-framed JSON wire
 //!                                 protocol, see README); also honours
 //!                                 MDDCT_PORT / MDDCT_BIND / MDDCT_MAX_CONNS /
-//!                                 MDDCT_MAX_FRAME_BYTES. Without --port or
+//!                                 MDDCT_MAX_FRAME_BYTES plus the hardening
+//!                                 knobs MDDCT_READ_TIMEOUT_MS /
+//!                                 MDDCT_IDLE_TIMEOUT_MS / MDDCT_CONN_INFLIGHT.
+//!                                 SIGINT/SIGTERM trigger a graceful drain
+//!                                 bounded by --drain-ms / MDDCT_DRAIN_MS
+//!                                 (default 5000). Without --port or
 //!                                 MDDCT_PORT, falls back to the in-process
 //!                                 throughput demo (--requests N); lifecycle
 //!                                 knobs mirror MDDCT_DEADLINE_MS /
@@ -140,6 +146,37 @@ fn cmd_transform(args: &Args) -> i32 {
     }
 }
 
+/// Dependency-free SIGINT/SIGTERM latch: the handler only flips an
+/// atomic, the serve loop polls it and runs the drain from the main
+/// thread (nothing async-signal-unsafe happens in the handler).
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    pub static STOP: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_signal(_signum: i32) {
+        STOP.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    /// Install the latch for SIGINT (2) and SIGTERM (15).
+    #[allow(clippy::fn_to_numeric_cast_any)]
+    pub fn install() {
+        unsafe {
+            signal(2, on_signal as usize);
+            signal(15, on_signal as usize);
+        }
+    }
+
+    pub fn stopped() -> bool {
+        STOP.load(Ordering::SeqCst)
+    }
+}
+
 fn cmd_serve(args: &Args) -> i32 {
     // TCP mode: `--port P` (0 = ephemeral) or the MDDCT_PORT env knob
     let port_flag = args.flag_opt_usize("port");
@@ -151,8 +188,13 @@ fn cmd_serve(args: &Args) -> i32 {
         if let Some(c) = args.flag_opt_usize("max-conns") {
             cfg.max_conns = c;
         }
+        let grace_ms = args
+            .flag_opt_usize("drain-ms")
+            .or_else(|| mddct::util::env_usize("MDDCT_DRAIN_MS"))
+            .unwrap_or(5000);
         let svc = std::sync::Arc::new(service(args));
-        let server = match Server::start(cfg, svc) {
+        #[allow(unused_mut)]
+        let mut server = match Server::start(cfg, svc) {
             Ok(s) => s,
             Err(e) => {
                 eprintln!("serve failed to bind: {e}");
@@ -160,6 +202,22 @@ fn cmd_serve(args: &Args) -> i32 {
             }
         };
         println!("mddct serving on {} (frame = 4-byte BE length + JSON)", server.addr());
+        #[cfg(unix)]
+        {
+            sig::install();
+            while !sig::stopped() {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+            eprintln!("signal received; draining (up to {grace_ms} ms) ...");
+            let grace = std::time::Duration::from_millis(grace_ms as u64);
+            if server.drain(grace) {
+                eprintln!("drained cleanly");
+            } else {
+                eprintln!("drain deadline hit; remaining requests answered shutting_down");
+            }
+            return 0;
+        }
+        #[cfg(not(unix))]
         loop {
             std::thread::park();
         }

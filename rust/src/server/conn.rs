@@ -2,113 +2,402 @@
 //!
 //! Each accepted socket gets one blocking reader thread running
 //! [`handle_conn`]. Every request frame produces exactly one reply
-//! frame, in order, so clients may pipeline. Decode failures answer a
-//! typed `invalid_request` error frame; framing violations (truncated
-//! or oversized frames) answer one best-effort error frame and close
-//! the connection, since the stream offset can no longer be trusted.
+//! frame, in order, so clients may pipeline; a per-connection in-flight
+//! window caps how many decoded transform frames may be outstanding in
+//! the service at once.
+//!
+//! Hardening:
+//!
+//! * **Idle timeout** — a connection silent between frames for longer
+//!   than `idle_timeout` is closed without a reply.
+//! * **Read timeout** — once a frame's first byte arrives, the rest
+//!   must land within `read_timeout` or the reader answers one typed
+//!   `invalid_request` frame and closes (anti-slowloris: a peer
+//!   trickling bytes cannot pin the thread).
+//! * **Violation budget** — JSON decode failures answer a typed error
+//!   and count a strike; at [`MAX_CONN_VIOLATIONS`](super::MAX_CONN_VIOLATIONS)
+//!   strikes the connection is closed. Framing violations (truncated or
+//!   oversized frames) close immediately, since the stream offset can
+//!   no longer be trusted.
+//! * **Chaos seam** — all reads and writes flow through [`FaultStream`],
+//!   which applies injected network faults (`stall` / `truncate` /
+//!   `garbage` / `close` at site `conn`) so the chaos suite can exercise
+//!   every failure path above on a real socket.
 
-use std::io;
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use super::proto;
-use super::ServerStats;
-use crate::coordinator::{Handle, Service, TransformError};
+use super::{proto, ConnShared, ServerStats};
+use crate::coordinator::fault::{self, FaultKind};
+use crate::coordinator::{Handle, Service, SubmitOptions, TransformError};
+
+/// Frame bodies are read in chunks this large so a hostile length
+/// prefix under the cap still cannot force a large up-front allocation.
+const READ_CHUNK: usize = 16 * 1024;
 
 /// Everything a connection thread needs, cloned per connection.
 pub(crate) struct ConnCtx {
     pub(crate) service: Arc<Service>,
     pub(crate) stats: Arc<ServerStats>,
+    /// Shared write half + raw handle (drain says goodbye through it).
+    pub(crate) conn: Arc<ConnShared>,
+    /// Flips when a graceful drain starts.
+    pub(crate) draining: Arc<AtomicBool>,
     pub(crate) max_frame_bytes: usize,
+    /// Per-frame read deadline once a frame has started (`None` = unbounded).
+    pub(crate) read_timeout: Option<Duration>,
+    /// Close connections silent between frames this long (`None` = never).
+    pub(crate) idle_timeout: Option<Duration>,
+    /// Cap on outstanding transform submissions from one wire batch.
+    pub(crate) max_conn_inflight: usize,
 }
 
-/// Serve one connection until EOF, a framing violation, or a socket
-/// error.
-pub(crate) fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
-    let _ = stream.set_nodelay(true);
-    loop {
-        match proto::read_frame(&mut stream, ctx.max_frame_bytes) {
-            Ok(None) => break,
-            Ok(Some(body)) => {
-                ctx.stats.add_frame_in(body.len());
-                let reply = respond(&body, ctx);
-                ctx.stats.add_frame_out(reply.len());
-                if proto::write_frame(&mut stream, reply.as_bytes()).is_err() {
-                    break;
-                }
+/// Stream adapter applying injected connection faults
+/// ([`fault::conn_fault`]) to every read and write. With no faults
+/// configured (or under the `fault-off` feature) each call collapses to
+/// a plain delegate.
+struct FaultStream<'a, S> {
+    inner: &'a mut S,
+}
+
+impl<S: Read> Read for FaultStream<'_, S> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match fault::conn_fault() {
+            Some(FaultKind::Stall(d)) => {
+                std::thread::sleep(d);
+                self.inner.read(buf)
             }
-            Err(e)
-                if e.kind() == io::ErrorKind::InvalidData
-                    || e.kind() == io::ErrorKind::UnexpectedEof =>
-            {
-                // framing violation: answer once, then close
-                ctx.stats.record_decode_error();
-                let reply =
-                    proto::encode_error(0, &TransformError::InvalidRequest(e.to_string()));
-                let reply_len = reply.len();
-                if proto::write_frame(&mut stream, reply.as_bytes()).is_ok() {
-                    ctx.stats.add_frame_out(reply_len);
+            Some(FaultKind::Truncate) => Ok(0), // looks like a clean EOF
+            Some(FaultKind::Garbage) => {
+                let n = self.inner.read(buf)?;
+                if n > 0 {
+                    buf[0] ^= 0xA5;
                 }
-                break;
+                Ok(n)
             }
-            Err(_) => break,
+            Some(FaultKind::Close) => {
+                Err(io::Error::new(io::ErrorKind::ConnectionAborted, "injected connection close"))
+            }
+            _ => self.inner.read(buf),
         }
     }
 }
 
-/// Map one request body to one reply body.
-fn respond(body: &[u8], ctx: &ConnCtx) -> String {
-    match proto::decode_request(body) {
-        Err(e) => {
-            ctx.stats.record_decode_error();
-            proto::encode_error(0, &e)
+impl<S: Write> Write for FaultStream<'_, S> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match fault::conn_fault() {
+            Some(FaultKind::Stall(d)) => {
+                std::thread::sleep(d);
+                self.inner.write(buf)
+            }
+            Some(FaultKind::Truncate) => {
+                // deliver half the bytes, then fail: the peer sees a
+                // torn frame
+                let half = if buf.len() <= 1 { buf.len() } else { buf.len() / 2 };
+                self.inner.write_all(&buf[..half])?;
+                Err(io::Error::new(io::ErrorKind::ConnectionAborted, "injected write truncation"))
+            }
+            Some(FaultKind::Garbage) => {
+                let mut corrupted = buf.to_vec();
+                if let Some(b) = corrupted.first_mut() {
+                    *b ^= 0xA5;
+                }
+                self.inner.write_all(&corrupted)?;
+                Ok(buf.len())
+            }
+            Some(FaultKind::Close) => {
+                Err(io::Error::new(io::ErrorKind::ConnectionAborted, "injected connection close"))
+            }
+            _ => self.inner.write(buf),
         }
-        Ok(proto::WireMsg::Metrics) => {
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// RAII increment of the server-wide in-flight request gauge — what
+/// [`Server::drain`](super::Server::drain) waits on during the grace
+/// period.
+struct InflightGuard<'a>(&'a ServerStats);
+
+impl<'a> InflightGuard<'a> {
+    fn new(stats: &'a ServerStats) -> Self {
+        stats.inflight_requests.fetch_add(1, Ordering::SeqCst);
+        InflightGuard(stats)
+    }
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.inflight_requests.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Outcome of one timed frame read.
+enum FrameRead {
+    /// A complete frame body.
+    Frame(Vec<u8>),
+    /// Clean EOF before any prefix byte.
+    Eof,
+    /// No frame started within the idle timeout.
+    Idle,
+    /// A frame started but stalled past the read deadline.
+    TimedOut,
+    /// Framing violation (oversized or truncated frame) — the stream
+    /// offset can no longer be trusted.
+    Violation(String),
+    /// Unrecoverable socket error.
+    Io,
+}
+
+/// Outcome of one deadline-bounded `read_exact`-style fill.
+enum TimedRead {
+    Done,
+    Eof,
+    TimedOut,
+    Io,
+}
+
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+/// Fill `buf` completely, or fail by `deadline`. Each underlying read
+/// gets `set_read_timeout(remaining)` so a trickling peer makes
+/// progress toward the deadline instead of resetting it.
+fn read_within(stream: &mut TcpStream, buf: &mut [u8], deadline: Option<Instant>) -> TimedRead {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        let timeout = match deadline {
+            Some(d) => {
+                let now = Instant::now();
+                if now >= d {
+                    return TimedRead::TimedOut;
+                }
+                Some(d - now)
+            }
+            None => None,
+        };
+        if stream.set_read_timeout(timeout).is_err() {
+            return TimedRead::Io;
+        }
+        let mut fs = FaultStream { inner: stream };
+        match fs.read(&mut buf[filled..]) {
+            Ok(0) => return TimedRead::Eof,
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(&e) => return TimedRead::TimedOut,
+            Err(_) => return TimedRead::Io,
+        }
+    }
+    TimedRead::Done
+}
+
+/// Read one frame under the connection's timeout policy: the wait for a
+/// frame to *start* is bounded by the idle timeout; once the first
+/// prefix byte arrives, the whole frame must land before the per-frame
+/// read deadline.
+fn read_frame_timed(stream: &mut TcpStream, ctx: &ConnCtx) -> FrameRead {
+    // Phase 1: wait (up to idle_timeout) for the first prefix byte.
+    if stream.set_read_timeout(ctx.idle_timeout).is_err() {
+        return FrameRead::Io;
+    }
+    let mut first = [0u8; 1];
+    loop {
+        let mut fs = FaultStream { inner: stream };
+        match fs.read(&mut first) {
+            Ok(0) => return FrameRead::Eof,
+            Ok(_) => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(&e) => return FrameRead::Idle,
+            Err(_) => return FrameRead::Io,
+        }
+    }
+    // Phase 2: the frame has started — hard deadline for the rest.
+    let deadline = ctx.read_timeout.map(|t| Instant::now() + t);
+    let mut rest = [0u8; 3];
+    match read_within(stream, &mut rest, deadline) {
+        TimedRead::Done => {}
+        TimedRead::Eof => return FrameRead::Violation("truncated length prefix".to_string()),
+        TimedRead::TimedOut => return FrameRead::TimedOut,
+        TimedRead::Io => return FrameRead::Io,
+    }
+    let len = u32::from_be_bytes([first[0], rest[0], rest[1], rest[2]]) as usize;
+    if len > ctx.max_frame_bytes {
+        return FrameRead::Violation(format!(
+            "frame length {len} exceeds cap {}",
+            ctx.max_frame_bytes
+        ));
+    }
+    let mut body = Vec::new();
+    while body.len() < len {
+        let chunk = (len - body.len()).min(READ_CHUNK);
+        let old = body.len();
+        body.resize(old + chunk, 0);
+        match read_within(stream, &mut body[old..], deadline) {
+            TimedRead::Done => {}
+            TimedRead::Eof => {
+                return FrameRead::Violation(format!(
+                    "truncated frame: need {len} body bytes, stream ended early"
+                ));
+            }
+            TimedRead::TimedOut => return FrameRead::TimedOut,
+            TimedRead::Io => return FrameRead::Io,
+        }
+    }
+    FrameRead::Frame(body)
+}
+
+/// Write one reply frame through the connection's shared (locked) write
+/// half, applying injected connection faults.
+fn send_reply(ctx: &ConnCtx, reply: &str) -> io::Result<()> {
+    let mut w = super::lock(&ctx.conn.writer);
+    let mut fs = FaultStream { inner: &mut *w };
+    proto::write_frame(&mut fs, reply.as_bytes())?;
+    ctx.stats.add_frame_out(reply.len());
+    Ok(())
+}
+
+/// Serve one connection until EOF, a timeout, a framing violation, too
+/// many decode strikes, or a socket error.
+pub(crate) fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
+    let _ = stream.set_nodelay(true);
+    let mut violations: u32 = 0;
+    loop {
+        match read_frame_timed(&mut stream, ctx) {
+            FrameRead::Eof | FrameRead::Io => break,
+            FrameRead::Idle => {
+                // silent peer: close without a reply — there is no
+                // frame to answer
+                ctx.stats.idle_timeouts.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+            FrameRead::TimedOut => {
+                ctx.stats.read_timeouts.fetch_add(1, Ordering::Relaxed);
+                let e = TransformError::InvalidRequest("wire: read timed out mid-frame".into());
+                let _ = send_reply(ctx, &proto::encode_error(0, &e));
+                break;
+            }
+            FrameRead::Violation(msg) => {
+                ctx.stats.record_decode_error();
+                ctx.stats.violation_closes.fetch_add(1, Ordering::Relaxed);
+                let e = TransformError::InvalidRequest(format!("wire: {msg}"));
+                let _ = send_reply(ctx, &proto::encode_error(0, &e));
+                break;
+            }
+            FrameRead::Frame(body) => {
+                ctx.stats.add_frame_in(body.len());
+                let _guard = InflightGuard::new(&ctx.stats);
+                let reply = match proto::decode_request(&body) {
+                    Err(e) => {
+                        // recoverable (the framing layer is intact):
+                        // answer a typed error, count a strike
+                        ctx.stats.record_decode_error();
+                        violations += 1;
+                        let closing = violations >= super::MAX_CONN_VIOLATIONS;
+                        if closing {
+                            ctx.stats.violation_closes.fetch_add(1, Ordering::Relaxed);
+                        }
+                        if send_reply(ctx, &proto::encode_error(0, &e)).is_err() || closing {
+                            break;
+                        }
+                        continue;
+                    }
+                    Ok(msg) => respond(msg, ctx),
+                };
+                if send_reply(ctx, &reply).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Map one decoded request to one reply body.
+fn respond(msg: proto::WireMsg, ctx: &ConnCtx) -> String {
+    match msg {
+        proto::WireMsg::Metrics => {
             let snap = ctx.service.snapshot_with(&[("_server", ctx.stats.snapshot())]);
             proto::encode_metrics_reply(&snap)
         }
-        Ok(proto::WireMsg::Transform(req)) => serve_transform(req, ctx),
+        proto::WireMsg::Health | proto::WireMsg::Ready => {
+            proto::encode_health_reply(ctx.draining.load(Ordering::SeqCst))
+        }
+        proto::WireMsg::Transform(req) => {
+            if ctx.draining.load(Ordering::SeqCst) {
+                proto::encode_error(req.id, &TransformError::ShuttingDown)
+            } else {
+                serve_transform(req, ctx)
+            }
+        }
+    }
+}
+
+/// Running aggregate over the per-block service responses.
+struct Agg {
+    out: Vec<f64>,
+    backend: &'static str,
+    latency_ms: f64,
+    co_batch: usize,
+}
+
+impl Agg {
+    fn take(&mut self, h: Handle) -> Result<(), TransformError> {
+        let resp = h.wait()?;
+        self.out.extend_from_slice(&resp.output);
+        self.backend = resp.backend;
+        self.latency_ms = self.latency_ms.max(resp.latency * 1e3);
+        self.co_batch = self.co_batch.max(resp.batch_size);
+        Ok(())
     }
 }
 
 /// Submit a wire request's blocks and assemble the reply. A wire batch
 /// of B blocks becomes B individual submits — the service batcher
 /// co-batches same-plan work on its own — so the concatenated output is
-/// bit-identical to B direct [`Service::transform`] calls.
+/// bit-identical to B direct [`Service::transform`] calls. At most
+/// `max_conn_inflight` blocks are outstanding at once; the window
+/// retires oldest-first, which also keeps the output in block order.
 fn serve_transform(req: proto::WireRequest, ctx: &ConnCtx) -> String {
     let numel = req.data.len() / req.batch; // decoder guarantees batch >= 1 and exact division
-    let deadline =
-        req.deadline_ms.map(|ms| Instant::now().checked_add(Duration::from_millis(ms)));
-    let mut handles: Vec<Handle> = Vec::with_capacity(req.batch);
+    let deadline = match req.deadline_ms {
+        // explicit wire deadline (a checked_add overflow means
+        // "effectively unbounded", i.e. no deadline)
+        Some(ms) => Instant::now().checked_add(Duration::from_millis(ms)),
+        None => ctx.service.default_deadline().map(|d| Instant::now() + d),
+    };
+    let mut agg = Agg {
+        out: Vec::with_capacity(req.data.len()),
+        backend: "native",
+        latency_ms: 0.0,
+        co_batch: 1,
+    };
+    let mut window: VecDeque<Handle> = VecDeque::new();
     for b in 0..req.batch {
-        let block = req.data[b * numel..(b + 1) * numel].to_vec();
-        let submitted = match deadline {
-            // explicit wire deadline (a checked_add overflow means
-            // "effectively unbounded", i.e. no deadline)
-            Some(d) => ctx.service.submit_with_deadline(req.op, req.shape.clone(), block, d),
-            None => ctx.service.submit(req.op, req.shape.clone(), block),
-        };
-        match submitted {
-            Ok(h) => handles.push(h),
-            // dropping already-submitted handles cancels them
-            Err(e) => return proto::encode_error(req.id, &e),
-        }
-    }
-    let mut out: Vec<f64> = Vec::with_capacity(req.data.len());
-    let mut backend = "native";
-    let mut latency_ms = 0.0f64;
-    let mut co_batch = 1usize;
-    for h in handles {
-        match h.wait() {
-            Ok(resp) => {
-                out.extend_from_slice(&resp.output);
-                backend = resp.backend;
-                latency_ms = latency_ms.max(resp.latency * 1e3);
-                co_batch = co_batch.max(resp.batch_size);
+        if window.len() >= ctx.max_conn_inflight {
+            let oldest = window.pop_front().expect("window is non-empty at the cap");
+            if let Err(e) = agg.take(oldest) {
+                // dropping the rest of the window cancels those blocks
+                return proto::encode_error(req.id, &e);
             }
+        }
+        let block = req.data[b * numel..(b + 1) * numel].to_vec();
+        let opts = SubmitOptions { deadline, tenant: req.tenant.clone(), priority: req.priority };
+        match ctx.service.submit_opts(req.op, req.shape.clone(), block, opts) {
+            Ok(h) => window.push_back(h),
             Err(e) => return proto::encode_error(req.id, &e),
         }
     }
-    proto::encode_response(req.id, backend, co_batch, latency_ms, &out)
+    for h in window {
+        if let Err(e) = agg.take(h) {
+            return proto::encode_error(req.id, &e);
+        }
+    }
+    proto::encode_response(req.id, agg.backend, agg.co_batch, agg.latency_ms, &agg.out)
 }

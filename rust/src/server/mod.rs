@@ -12,9 +12,20 @@
 //! accepted connection gets its own thread sharing one
 //! [`Arc<Service>`]. Connections over
 //! [`ServerConfig::max_conns`] are answered with a single `overloaded`
-//! error frame and closed. Dropping the [`Server`] shuts everything
-//! down: the accept loop is poked awake, live sockets are shut down,
-//! and every thread is joined.
+//! error frame (with an occupancy-scaled `retry_after_ms` hint) and
+//! closed. Reader threads are protected against slowloris peers by a
+//! per-frame read timeout and an optional idle timeout, and a
+//! connection that keeps sending malformed frames is closed after
+//! [`MAX_CONN_VIOLATIONS`] strikes.
+//!
+//! Shutdown comes in two flavors. [`Server::shutdown`] (also the drop
+//! path) stops accepting, sends every live connection a final typed
+//! `shutting_down` frame, and joins all threads. [`Server::drain`]
+//! additionally grants in-flight requests a grace period first: the
+//! server flips to the draining state (`{"op":"health"}` reports
+//! `"draining"` / `ready:false`, new transforms get `shutting_down`
+//! frames), waits up to the deadline for in-flight work, then closes as
+//! above.
 //!
 //! ```no_run
 //! use std::sync::Arc;
@@ -31,7 +42,12 @@
 //! `127.0.0.1`), `MDDCT_PORT` (default [`DEFAULT_PORT`]),
 //! `MDDCT_MAX_CONNS` (default [`DEFAULT_MAX_CONNS`]),
 //! `MDDCT_MAX_FRAME_BYTES` (default
-//! [`proto::DEFAULT_MAX_FRAME_BYTES`]).
+//! [`proto::DEFAULT_MAX_FRAME_BYTES`]), `MDDCT_READ_TIMEOUT_MS`
+//! (per-frame read deadline once a frame starts, default
+//! [`DEFAULT_READ_TIMEOUT`], `0` disables), `MDDCT_IDLE_TIMEOUT_MS`
+//! (close connections silent between frames, default off), and
+//! `MDDCT_CONN_INFLIGHT` (per-connection in-flight request cap, default
+//! [`DEFAULT_CONN_INFLIGHT`]).
 
 #![warn(missing_docs)]
 
@@ -44,7 +60,7 @@ use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::{Service, TransformError};
 use crate::util::json::Json;
@@ -56,12 +72,50 @@ pub const DEFAULT_PORT: u16 = 7243;
 /// (`MDDCT_MAX_CONNS`).
 pub const DEFAULT_MAX_CONNS: usize = 256;
 
-/// Retry hint attached to the `overloaded` frame a connection over the
-/// cap receives before being closed.
-const CONN_RETRY_AFTER: Duration = Duration::from_millis(50);
+/// Default per-frame read deadline (`MDDCT_READ_TIMEOUT_MS`): once a
+/// frame's first byte arrives, the rest must follow within this window
+/// or the reader answers with a typed error and closes — a slowloris
+/// peer trickling a length prefix cannot pin a reader thread.
+pub const DEFAULT_READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Default per-connection in-flight request cap
+/// (`MDDCT_CONN_INFLIGHT`): how many decoded transform frames one
+/// connection may have outstanding in the service before the reader
+/// waits for replies to retire.
+pub const DEFAULT_CONN_INFLIGHT: usize = 64;
+
+/// Framing/decode violations tolerated before a connection is closed.
+pub const MAX_CONN_VIOLATIONS: u32 = 8;
+
+/// Base of the `retry_after_ms` hint on shed connections.
+const CONN_RETRY_AFTER_BASE: Duration = Duration::from_millis(10);
+
+/// Extra `retry_after_ms` added as the connection table fills.
+const CONN_RETRY_AFTER_FULL_EXTRA: Duration = Duration::from_millis(80);
+
+/// Retry hint for a connection shed at the `max_conns` cap, scaled by
+/// how far over the cap the accept loop currently is — the fuller the
+/// table, the longer the hinted backoff.
+fn conn_retry_after(active: u64, max_conns: usize) -> Duration {
+    let occupancy = if max_conns == 0 {
+        1.0
+    } else {
+        (active as f64 / max_conns as f64).min(1.0)
+    };
+    CONN_RETRY_AFTER_BASE + CONN_RETRY_AFTER_FULL_EXTRA.mul_f64(occupancy)
+}
 
 fn env_u16(name: &str) -> Option<u16> {
     crate::util::env_usize(name).and_then(|v| u16::try_from(v).ok())
+}
+
+/// Millisecond timeout knob: unset keeps `default`, `0` disables.
+fn env_timeout_ms(name: &str, default: Option<Duration>) -> Option<Duration> {
+    match crate::util::env_usize(name) {
+        Some(0) => None,
+        Some(ms) => Some(Duration::from_millis(ms as u64)),
+        None => default,
+    }
 }
 
 /// TCP front-end configuration. [`ServerConfig::default`] reads the
@@ -77,6 +131,14 @@ pub struct ServerConfig {
     pub max_conns: usize,
     /// Cap on a single frame body in bytes (`MDDCT_MAX_FRAME_BYTES`).
     pub max_frame_bytes: usize,
+    /// Per-frame read deadline once a frame has started arriving
+    /// (`MDDCT_READ_TIMEOUT_MS`; `None` = unbounded).
+    pub read_timeout: Option<Duration>,
+    /// Close connections silent between frames for this long
+    /// (`MDDCT_IDLE_TIMEOUT_MS`; `None` = never).
+    pub idle_timeout: Option<Duration>,
+    /// Per-connection in-flight request cap (`MDDCT_CONN_INFLIGHT`).
+    pub max_conn_inflight: usize,
 }
 
 impl Default for ServerConfig {
@@ -87,6 +149,11 @@ impl Default for ServerConfig {
             max_conns: crate::util::env_usize("MDDCT_MAX_CONNS").unwrap_or(DEFAULT_MAX_CONNS),
             max_frame_bytes: crate::util::env_usize("MDDCT_MAX_FRAME_BYTES")
                 .unwrap_or(proto::DEFAULT_MAX_FRAME_BYTES),
+            read_timeout: env_timeout_ms("MDDCT_READ_TIMEOUT_MS", Some(DEFAULT_READ_TIMEOUT)),
+            idle_timeout: env_timeout_ms("MDDCT_IDLE_TIMEOUT_MS", None),
+            max_conn_inflight: crate::util::env_usize("MDDCT_CONN_INFLIGHT")
+                .unwrap_or(DEFAULT_CONN_INFLIGHT)
+                .max(1),
         }
     }
 }
@@ -120,6 +187,17 @@ pub struct ServerStats {
     pub bytes_out: AtomicU64,
     /// Frames rejected as malformed (framing or JSON decode failures).
     pub decode_errors: AtomicU64,
+    /// Connections closed for exceeding the between-frames idle timeout.
+    pub idle_timeouts: AtomicU64,
+    /// Frames abandoned at the mid-frame read deadline (slowloris).
+    pub read_timeouts: AtomicU64,
+    /// Connections closed after [`MAX_CONN_VIOLATIONS`] decode strikes.
+    pub violation_closes: AtomicU64,
+    /// Transform requests currently in flight across all connections
+    /// (gauge; what [`Server::drain`] waits on).
+    pub inflight_requests: AtomicU64,
+    /// 1 once a drain/shutdown has started (gauge).
+    pub draining: AtomicU64,
 }
 
 impl ServerStats {
@@ -153,23 +231,41 @@ impl ServerStats {
         put("bytes_in", &self.bytes_in);
         put("bytes_out", &self.bytes_out);
         put("decode_errors", &self.decode_errors);
+        put("draining", &self.draining);
         put("frames_in", &self.frames_in);
         put("frames_out", &self.frames_out);
+        put("idle_timeouts", &self.idle_timeouts);
+        put("inflight_requests", &self.inflight_requests);
+        put("read_timeouts", &self.read_timeouts);
         put("rejected_conns", &self.rejected_conns);
+        put("violation_closes", &self.violation_closes);
         Json::Obj(m)
     }
+}
+
+/// Per-connection handles shared between the reader thread and the
+/// drain/shutdown path.
+pub(crate) struct ConnShared {
+    /// Serialized write half: reply frames and the final
+    /// `shutting_down` goodbye both go through this lock so drain never
+    /// interleaves bytes with an in-flight reply.
+    pub(crate) writer: Mutex<TcpStream>,
+    /// Un-locked clone used only for `shutdown()` — lets drain unblock
+    /// a reader even when the writer lock is held by a stuck peer.
+    raw: TcpStream,
 }
 
 /// State shared between the accept loop, connection threads, and
 /// shutdown.
 struct Shared {
-    /// Stream clones by connection id, so shutdown can unblock readers.
-    conns: Mutex<HashMap<u64, TcpStream>>,
+    /// Live connections by id, so drain can say goodbye and unblock
+    /// readers.
+    conns: Mutex<HashMap<u64, Arc<ConnShared>>>,
     /// Join handles for spawned connection threads.
     joins: Mutex<Vec<JoinHandle<()>>>,
 }
 
-fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
@@ -179,6 +275,7 @@ pub struct Server {
     addr: SocketAddr,
     stats: Arc<ServerStats>,
     stop: Arc<AtomicBool>,
+    draining: Arc<AtomicBool>,
     shared: Arc<Shared>,
     accept: Option<JoinHandle<()>>,
 }
@@ -190,13 +287,17 @@ impl Server {
         let addr = listener.local_addr()?;
         let stats = Arc::new(ServerStats::new());
         let stop = Arc::new(AtomicBool::new(false));
+        let draining = Arc::new(AtomicBool::new(false));
         let shared = Arc::new(Shared {
             conns: Mutex::new(HashMap::new()),
             joins: Mutex::new(Vec::new()),
         });
         let accept = {
             let (stats, stop, shared) = (stats.clone(), stop.clone(), shared.clone());
+            let draining = draining.clone();
             let (max_conns, max_frame_bytes) = (config.max_conns, config.max_frame_bytes);
+            let (read_timeout, idle_timeout) = (config.read_timeout, config.idle_timeout);
+            let max_conn_inflight = config.max_conn_inflight.max(1);
             std::thread::Builder::new().name("mddct-accept".into()).spawn(move || {
                 let mut next_conn: u64 = 0;
                 for incoming in listener.incoming() {
@@ -207,27 +308,42 @@ impl Server {
                         Ok(s) => s,
                         Err(_) => continue,
                     };
-                    if stats.active_conns.load(Ordering::SeqCst) >= max_conns as u64 {
+                    let active = stats.active_conns.load(Ordering::SeqCst);
+                    if active >= max_conns as u64 {
                         stats.rejected_conns.fetch_add(1, Ordering::Relaxed);
                         let mut s = stream;
                         let reply = proto::encode_error(
                             0,
-                            &TransformError::Overloaded { retry_after: CONN_RETRY_AFTER },
+                            &TransformError::Overloaded {
+                                retry_after: conn_retry_after(active, max_conns),
+                            },
                         );
                         let _ = proto::write_frame(&mut s, reply.as_bytes());
                         continue; // drop closes the socket
                     }
+                    // Both clones must exist before the connection is
+                    // admitted: without a writer clone there is no way
+                    // to answer, and without a raw clone no way to
+                    // unblock the reader at drain time.
+                    let (writer, raw) = match (stream.try_clone(), stream.try_clone()) {
+                        (Ok(w), Ok(r)) => (w, r),
+                        _ => continue, // drop closes the socket
+                    };
                     stats.accepted_conns.fetch_add(1, Ordering::Relaxed);
                     stats.active_conns.fetch_add(1, Ordering::SeqCst);
                     let conn_id = next_conn;
                     next_conn += 1;
-                    if let Ok(clone) = stream.try_clone() {
-                        lock(&shared.conns).insert(conn_id, clone);
-                    }
+                    let handle = Arc::new(ConnShared { writer: Mutex::new(writer), raw });
+                    lock(&shared.conns).insert(conn_id, handle.clone());
                     let ctx = conn::ConnCtx {
                         service: service.clone(),
                         stats: stats.clone(),
+                        conn: handle,
+                        draining: draining.clone(),
                         max_frame_bytes,
+                        read_timeout,
+                        idle_timeout,
+                        max_conn_inflight,
                     };
                     let (shared2, stats2) = (shared.clone(), stats.clone());
                     let join = std::thread::Builder::new()
@@ -242,7 +358,7 @@ impl Server {
                 }
             })?
         };
-        Ok(Server { addr, stats, stop, shared, accept: Some(accept) })
+        Ok(Server { addr, stats, stop, draining, shared, accept: Some(accept) })
     }
 
     /// The bound address (carries the OS-assigned port when the config
@@ -256,9 +372,30 @@ impl Server {
         &self.stats
     }
 
-    /// Stop accepting, shut every live connection down, and join all
-    /// threads. Idempotent; also runs on drop.
+    /// Whether a drain/shutdown has started. Once true, transform
+    /// frames are answered `shutting_down` and the health route reports
+    /// `"draining"` / `ready:false`.
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Stop accepting, shut every live connection down (after a final
+    /// typed `shutting_down` frame), and join all threads. Equivalent
+    /// to [`Server::drain`] with a zero grace period. Idempotent; also
+    /// runs on drop.
     pub fn shutdown(&mut self) {
+        self.drain(Duration::ZERO);
+    }
+
+    /// Gracefully drain: stop accepting, flip the draining state (new
+    /// transforms get `shutting_down`, health reports `"draining"`),
+    /// wait up to `grace` for in-flight requests to finish, then send
+    /// every remaining connection a final typed `shutting_down` frame,
+    /// close the sockets, and join all threads. Returns `true` when all
+    /// in-flight work finished inside the grace period. Idempotent.
+    pub fn drain(&mut self, grace: Duration) -> bool {
+        self.draining.store(true, Ordering::SeqCst);
+        self.stats.draining.store(1, Ordering::Relaxed);
         self.stop.store(true, Ordering::SeqCst);
         // poke the accept loop out of its blocking `incoming()`
         let poke = if self.addr.ip().is_unspecified() {
@@ -270,14 +407,35 @@ impl Server {
         if let Some(a) = self.accept.take() {
             let _ = a.join();
         }
-        // unblock reader threads parked in read_frame
-        for (_, s) in lock(&self.shared.conns).drain() {
-            let _ = s.shutdown(Shutdown::Both);
+        // grace period: connections stay open so in-flight replies can
+        // still be delivered
+        let deadline = Instant::now() + grace;
+        let mut finished = true;
+        while self.stats.inflight_requests.load(Ordering::SeqCst) > 0 {
+            if Instant::now() >= deadline {
+                finished = false;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // goodbye frame, then unblock reader threads parked in a read
+        let conns: Vec<_> = lock(&self.shared.conns).drain().map(|(_, c)| c).collect();
+        for c in conns {
+            // try_lock: a writer wedged mid-reply (stuck peer) must not
+            // stall the drain — the raw shutdown below still fires.
+            if let Ok(mut w) = c.writer.try_lock() {
+                let goodbye = proto::encode_error(0, &TransformError::ShuttingDown);
+                if proto::write_frame(&mut *w, goodbye.as_bytes()).is_ok() {
+                    self.stats.add_frame_out(goodbye.len());
+                }
+            }
+            let _ = c.raw.shutdown(Shutdown::Both);
         }
         let joins: Vec<_> = lock(&self.shared.joins).drain(..).collect();
         for j in joins {
             let _ = j.join();
         }
+        finished
     }
 }
 
@@ -319,6 +477,8 @@ mod tests {
             shape: vec![4, 4],
             batch: 1,
             deadline_ms: None,
+            tenant: None,
+            priority: 0,
             data: (0..16).map(|i| i as f64).collect(),
         };
         let want = svc
@@ -412,11 +572,51 @@ mod tests {
         }
         server.shutdown();
         server.shutdown();
+        // the idle connection gets a final typed goodbye frame ...
+        let goodbye = proto::read_frame(&mut idle, proto::DEFAULT_MAX_FRAME_BYTES)
+            .expect("goodbye frame readable")
+            .expect("goodbye frame before close");
+        match proto::decode_reply(&goodbye).unwrap() {
+            proto::WireReply::Err { error: TransformError::ShuttingDown, .. } => {}
+            other => panic!("wanted shutting_down frame, got {other:?}"),
+        }
+        // ... and is then released
         assert!(
             proto::read_frame(&mut idle, proto::DEFAULT_MAX_FRAME_BYTES)
                 .map(|f| f.is_none())
                 .unwrap_or(true),
             "idle connection is released by shutdown"
         );
+    }
+
+    #[test]
+    fn conn_retry_after_hint_grows_with_occupancy() {
+        let empty = conn_retry_after(0, 8);
+        let half = conn_retry_after(4, 8);
+        let full = conn_retry_after(8, 8);
+        let over = conn_retry_after(100, 8);
+        assert!(empty < half && half < full, "{empty:?} {half:?} {full:?}");
+        assert_eq!(full, over, "occupancy saturates at 1.0");
+        assert_eq!(empty, CONN_RETRY_AFTER_BASE);
+    }
+
+    #[test]
+    fn health_routes_flip_during_drain() {
+        let (mut server, _svc) = serve(4);
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        match roundtrip(&mut stream, &proto::encode_health_request()) {
+            proto::WireReply::Health { status, ready } => {
+                assert_eq!((status.as_str(), ready), ("ok", true));
+            }
+            other => panic!("wanted health reply, got {other:?}"),
+        }
+        match roundtrip(&mut stream, &proto::encode_ready_request()) {
+            proto::WireReply::Health { ready: true, .. } => {}
+            other => panic!("wanted ready reply, got {other:?}"),
+        }
+        assert!(!server.is_draining());
+        assert!(server.drain(Duration::from_millis(200)), "no in-flight work to wait for");
+        assert!(server.is_draining());
+        assert_eq!(server.stats().draining.load(Ordering::Relaxed), 1);
     }
 }

@@ -14,8 +14,14 @@
 //! ```
 //!
 //! `id`, `batch`, and `deadline_ms` are optional (`0`, `1`, and "no
-//! explicit deadline"). `{"op":"metrics"}` routes to the observability
-//! snapshot instead of a transform. Replies are either
+//! explicit deadline"), as are `tenant` (a string naming the fair-share
+//! budget bucket to bill; absent = the shared default bucket) and
+//! `priority` (`0..=255`, higher drains first under pressure).
+//! `{"op":"metrics"}` routes to the observability snapshot instead of a
+//! transform; `{"op":"health"}` / `{"op":"ready"}` answer the liveness
+//! probe `{"ok":true,"health":"ok"|"draining","ready":true|false}`
+//! (`ready` flips false the moment a graceful drain starts). Replies
+//! are either
 //!
 //! ```json
 //! {"ok":true,"id":7,"backend":"native","batch":4,"latency_ms":0.4,"data":[...]}
@@ -134,17 +140,28 @@ pub struct WireRequest {
     /// Relative deadline in milliseconds; `None` inherits the service
     /// default.
     pub deadline_ms: Option<u64>,
+    /// Tenant billed for this request in the fair-share admission
+    /// budget; `None` = the shared default bucket.
+    pub tenant: Option<String>,
+    /// Scheduling priority (higher drains first under pressure; 0 =
+    /// normal).
+    pub priority: u8,
     /// Row-major payload, `numel(shape) * batch` elements.
     pub data: Vec<f64>,
 }
 
-/// A decoded request frame: either a transform or the metrics route.
+/// A decoded request frame: a transform or one of the service routes.
 #[derive(Debug, Clone, PartialEq)]
 pub enum WireMsg {
     /// Run a transform.
     Transform(WireRequest),
     /// Return the service observability snapshot (`{"op":"metrics"}`).
     Metrics,
+    /// Liveness probe (`{"op":"health"}`).
+    Health,
+    /// Readiness probe (`{"op":"ready"}`) — same reply as `health`;
+    /// clients typically branch on the `ready` bool.
+    Ready,
 }
 
 /// A decoded reply frame (client side of the protocol).
@@ -173,6 +190,13 @@ pub enum WireReply {
     },
     /// Metrics snapshot (DOM — cold path).
     Metrics(Json),
+    /// Health/ready probe reply.
+    Health {
+        /// `"ok"` while serving, `"draining"` once a drain started.
+        status: String,
+        /// Whether the server accepts new transform work.
+        ready: bool,
+    },
 }
 
 fn invalid(msg: &str) -> TransformError {
@@ -190,6 +214,8 @@ pub fn decode_request(body: &[u8]) -> Result<WireMsg, TransformError> {
     let mut batch: usize = 1;
     let mut id: u64 = 0;
     let mut deadline_ms: Option<u64> = None;
+    let mut tenant: Option<String> = None;
+    let mut priority: u8 = 0;
     let mut data: Option<Vec<f64>> = None;
     let mut first = true;
     while let Some(key) = r.obj_key(first)? {
@@ -209,6 +235,14 @@ pub fn decode_request(body: &[u8]) -> Result<WireMsg, TransformError> {
             "batch" => batch = r.u64_value()? as usize,
             "id" => id = r.u64_value()?,
             "deadline_ms" => deadline_ms = Some(r.u64_value()?),
+            "tenant" => tenant = Some(r.string_value()?),
+            "priority" => {
+                let v = r.u64_value()?;
+                if v > u8::MAX as u64 {
+                    return Err(invalid(&format!("priority {v} must be 0..=255")));
+                }
+                priority = v as u8;
+            }
             "data" => {
                 let mut v = Vec::new();
                 r.read_f64_array(&mut v)?;
@@ -219,8 +253,11 @@ pub fn decode_request(body: &[u8]) -> Result<WireMsg, TransformError> {
     }
     r.end()?;
     let op_name = op.ok_or_else(|| invalid("missing 'op'"))?;
-    if op_name == "metrics" {
-        return Ok(WireMsg::Metrics);
+    match op_name.as_str() {
+        "metrics" => return Ok(WireMsg::Metrics),
+        "health" => return Ok(WireMsg::Health),
+        "ready" => return Ok(WireMsg::Ready),
+        _ => {}
     }
     let op = TransformOp::parse(&op_name)
         .ok_or_else(|| invalid(&format!("unknown op '{op_name}'")))?;
@@ -245,7 +282,16 @@ pub fn decode_request(body: &[u8]) -> Result<WireMsg, TransformError> {
             expected
         )));
     }
-    Ok(WireMsg::Transform(WireRequest { id, op, shape, batch, deadline_ms, data }))
+    Ok(WireMsg::Transform(WireRequest {
+        id,
+        op,
+        shape,
+        batch,
+        deadline_ms,
+        tenant,
+        priority,
+        data,
+    }))
 }
 
 /// Encode a transform request body (client side; also the generator the
@@ -264,6 +310,12 @@ pub fn encode_request(req: &WireRequest) -> String {
     if let Some(ms) = req.deadline_ms {
         w.key("deadline_ms").u64_value(ms);
     }
+    if let Some(tenant) = &req.tenant {
+        w.key("tenant").str_value(tenant);
+    }
+    if req.priority != 0 {
+        w.key("priority").u64_value(req.priority as u64);
+    }
     w.key("data").f64_slice(&req.data);
     w.obj_end();
     w.finish()
@@ -273,6 +325,34 @@ pub fn encode_request(req: &WireRequest) -> String {
 pub fn encode_metrics_request() -> String {
     let mut w = JsonWriter::with_capacity(16);
     w.obj_begin().key("op").str_value("metrics").obj_end();
+    w.finish()
+}
+
+/// Encode the health-route request body (`{"op":"health"}`).
+pub fn encode_health_request() -> String {
+    let mut w = JsonWriter::with_capacity(16);
+    w.obj_begin().key("op").str_value("health").obj_end();
+    w.finish()
+}
+
+/// Encode the readiness-route request body (`{"op":"ready"}`).
+pub fn encode_ready_request() -> String {
+    let mut w = JsonWriter::with_capacity(16);
+    w.obj_begin().key("op").str_value("ready").obj_end();
+    w.finish()
+}
+
+/// Encode the health/ready reply. `draining` reports the server's drain
+/// state: once a graceful drain starts, `health` flips to `"draining"`
+/// and `ready` to `false` so load balancers stop routing new work while
+/// in-flight requests finish.
+pub fn encode_health_reply(draining: bool) -> String {
+    let mut w = JsonWriter::with_capacity(64);
+    w.obj_begin();
+    w.key("ok").bool_value(true);
+    w.key("health").str_value(if draining { "draining" } else { "ok" });
+    w.key("ready").bool_value(!draining);
+    w.obj_end();
     w.finish()
 }
 
@@ -371,6 +451,8 @@ pub fn decode_reply(body: &[u8]) -> Result<WireReply, TransformError> {
     let mut message = String::new();
     let mut retry_after_ms: u64 = 0;
     let mut metrics: Option<Json> = None;
+    let mut health: Option<String> = None;
+    let mut ready = false;
     let mut first = true;
     while let Some(key) = r.obj_key(first)? {
         first = false;
@@ -387,14 +469,17 @@ pub fn decode_reply(body: &[u8]) -> Result<WireReply, TransformError> {
             "message" => message = r.string_value()?,
             "retry_after_ms" => retry_after_ms = r.u64_value()?,
             "metrics" => metrics = Some(r.value()?),
+            "health" => health = Some(r.string_value()?),
+            "ready" => ready = r.bool_value()?,
             _ => r.skip_value()?,
         }
     }
     r.end()?;
     match ok {
-        Some(true) => match metrics {
-            Some(m) => Ok(WireReply::Metrics(m)),
-            None => Ok(WireReply::Ok { id, backend, batch, latency_ms, data }),
+        Some(true) => match (health, metrics) {
+            (Some(status), _) => Ok(WireReply::Health { status, ready }),
+            (None, Some(m)) => Ok(WireReply::Metrics(m)),
+            (None, None) => Ok(WireReply::Ok { id, backend, batch, latency_ms, data }),
         },
         Some(false) => {
             let code = code.ok_or_else(|| invalid("error frame missing 'error' code"))?;
@@ -460,6 +545,8 @@ mod tests {
             shape: vec![3, 5],
             batch: 2,
             deadline_ms: Some(250),
+            tenant: Some("alice".into()),
+            priority: 7,
             data: (0..30).map(|i| i as f64 * 0.5 - 7.0).collect(),
         };
         let body = encode_request(&req);
@@ -467,9 +554,48 @@ mod tests {
             WireMsg::Transform(back) => assert_eq!(back, req),
             other => panic!("wanted transform, got {other:?}"),
         }
+        // Defaults (no tenant, priority 0) stay off the wire and decode
+        // back to themselves.
+        let plain = WireRequest { tenant: None, priority: 0, ..req };
+        let body = encode_request(&plain);
+        assert!(!body.contains("tenant") && !body.contains("priority"));
+        match decode_request(body.as_bytes()).unwrap() {
+            WireMsg::Transform(back) => assert_eq!(back, plain),
+            other => panic!("wanted transform, got {other:?}"),
+        }
         match decode_request(encode_metrics_request().as_bytes()).unwrap() {
             WireMsg::Metrics => {}
             other => panic!("wanted metrics route, got {other:?}"),
+        }
+        match decode_request(encode_health_request().as_bytes()).unwrap() {
+            WireMsg::Health => {}
+            other => panic!("wanted health route, got {other:?}"),
+        }
+        match decode_request(encode_ready_request().as_bytes()).unwrap() {
+            WireMsg::Ready => {}
+            other => panic!("wanted ready route, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn priority_above_255_is_a_typed_error() {
+        let body = r#"{"op":"dct2d","shape":[1,1],"priority":256,"data":[1.0]}"#;
+        match decode_request(body.as_bytes()) {
+            Err(TransformError::InvalidRequest(m)) => assert!(m.contains("priority")),
+            other => panic!("wanted priority rejection, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn health_replies_round_trip_both_drain_states() {
+        for (draining, status, ready) in [(false, "ok", true), (true, "draining", false)] {
+            let body = encode_health_reply(draining);
+            match decode_reply(body.as_bytes()).unwrap() {
+                WireReply::Health { status: s, ready: r } => {
+                    assert_eq!((s.as_str(), r), (status, ready));
+                }
+                other => panic!("wanted health reply, got {other:?}"),
+            }
         }
     }
 

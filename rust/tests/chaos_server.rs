@@ -1,0 +1,373 @@
+//! Wire-to-worker chaos soak (the ISSUE's resilience acceptance path):
+//! mixed-tenant loopback load under injected connection faults
+//! (`garbage` / `close` at site `conn`) crossed with execution panics,
+//! plus targeted scenarios for each hardening feature — slowloris
+//! partial frames, idle reaping, the decode-violation budget, and
+//! graceful drain under load.
+//!
+//! Invariants held throughout:
+//!
+//! * survivors are *bit-identical* to the serial oracle (the degrade
+//!   path guarantees this even when the primary plan panics);
+//! * victims get typed error frames or a clean close — never a hang,
+//!   never a panic across the wire;
+//! * no reader thread leaks: after the server drops, the process
+//!   thread count returns to its pre-server baseline;
+//! * a drain under load finishes in-flight work, answers everything
+//!   else `shutting_down`, and flips the health route to `draining`.
+//!
+//! Fault state is process-global, so every test serializes on one mutex
+//! and clears the spec on exit (same discipline as
+//! `tests/fault_injection.rs`).
+
+#![cfg(not(feature = "fault-off"))]
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use mddct::coordinator::fault;
+use mddct::coordinator::{
+    parse_spec, set_faults, BatchPolicy, Service, ServiceConfig, TransformError, TransformOp,
+};
+use mddct::dct::Dct2;
+use mddct::parallel::{ExecPolicy, ShardPolicy};
+use mddct::server::proto::{self, WireReply, WireRequest};
+use mddct::server::{Server, ServerConfig, MAX_CONN_VIOLATIONS};
+use mddct::util::rng::Rng;
+
+/// Serializes tests that install process-wide fault specs (and keeps
+/// the thread-count assertions deterministic).
+fn guard() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Serial, unsharded primary plans: primary and degraded outputs are
+/// bit-equal, so survivors can be compared to one oracle.
+fn cfg(workers: usize) -> ServiceConfig {
+    ServiceConfig {
+        workers,
+        batch: BatchPolicy::default(),
+        exec: ExecPolicy::Serial,
+        shard: ShardPolicy::Auto,
+        trace: false,
+        default_deadline: None,
+        max_inflight_elems: usize::MAX,
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn thread_count() -> usize {
+    std::fs::read_dir("/proc/self/task").map(|d| d.count()).unwrap_or(0)
+}
+
+/// Fallible request/reply exchange: any framing, socket, or decode
+/// failure comes back as `Err` so chaos victims can reconnect.
+fn try_exchange(stream: &mut TcpStream, body: &str) -> Result<WireReply, String> {
+    proto::write_frame(stream, body.as_bytes()).map_err(|e| e.to_string())?;
+    let frame = proto::read_frame(stream, proto::DEFAULT_MAX_FRAME_BYTES)
+        .map_err(|e| e.to_string())?
+        .ok_or_else(|| "eof before reply".to_string())?;
+    proto::decode_reply(&frame).map_err(|e| e.to_string())
+}
+
+fn serial_oracle(n1: usize, n2: usize, x: &[f64]) -> Vec<f64> {
+    let mut want = vec![0.0; n1 * n2];
+    Dct2::with_policy(n1, n2, ExecPolicy::Serial).forward(x, &mut want);
+    want
+}
+
+#[test]
+fn mixed_tenant_soak_survives_connection_chaos_without_leaking_threads() {
+    let _g = guard();
+    fault::clear();
+    let svc = Arc::new(Service::start_native(cfg(2)));
+    #[cfg(target_os = "linux")]
+    let baseline = thread_count();
+    // short read timeout so chaos-torn frames cannot stall a reader (or
+    // this test) for the default 30 s
+    let server_cfg = ServerConfig {
+        read_timeout: Some(Duration::from_millis(250)),
+        ..ServerConfig::ephemeral()
+    };
+    let server = Server::start(server_cfg, svc.clone()).expect("bind ephemeral");
+    let addr = server.addr();
+
+    let n = 8usize;
+    let mut rng = Rng::new(0xC4A05);
+    let x = rng.normal_vec(n * n);
+    let want = serial_oracle(n, n, &x);
+
+    // conn faults tear frames on the wire; the execution panic crosses
+    // them with the degrade-and-retry path. The CI chaos job appends
+    // its own spec (e.g. a conn stall) through MDDCT_FAULT.
+    let mut spec = String::from("garbage:conn:0.05,close:conn:0.02,panic:dct2d:0.2");
+    if let Ok(extra) = std::env::var("MDDCT_FAULT") {
+        if !extra.is_empty() {
+            spec.push(',');
+            spec.push_str(&extra);
+        }
+    }
+    set_faults(parse_spec(&spec).unwrap_or_else(|e| panic!("bad soak spec '{spec}': {e}")));
+
+    let tenants = ["alice", "bob", "carol"];
+    let mut joins = Vec::new();
+    for (t_idx, tenant) in tenants.iter().enumerate() {
+        let (x, want) = (x.clone(), want.clone());
+        joins.push(std::thread::spawn(move || {
+            let mut ok = 0usize;
+            let mut victims = 0usize;
+            let mut stream: Option<TcpStream> = None;
+            for i in 0..40u64 {
+                let mut s = match stream.take() {
+                    Some(s) => s,
+                    None => match TcpStream::connect(addr) {
+                        Ok(s) => {
+                            // a torn reply must not hang the client
+                            let _ = s.set_read_timeout(Some(Duration::from_secs(2)));
+                            s
+                        }
+                        Err(_) => {
+                            victims += 1;
+                            continue;
+                        }
+                    },
+                };
+                let req = WireRequest {
+                    id: i,
+                    op: TransformOp::Dct2d,
+                    shape: vec![n, n],
+                    batch: 1,
+                    deadline_ms: Some(10_000),
+                    tenant: Some(tenant.to_string()),
+                    priority: t_idx as u8,
+                    data: x.clone(),
+                };
+                match try_exchange(&mut s, &proto::encode_request(&req)) {
+                    Ok(WireReply::Ok { id, data, .. }) => {
+                        assert_eq!(id, i, "{tenant}: correlation id");
+                        assert_eq!(data, want, "{tenant}: survivor must be bit-equal");
+                        ok += 1;
+                        stream = Some(s); // healthy connection: reuse
+                    }
+                    // typed error frame: a legitimate victim — reconnect
+                    Ok(WireReply::Err { .. }) => victims += 1,
+                    Ok(other) => panic!("{tenant}: unexpected reply {other:?}"),
+                    // torn frame / injected close: reconnect
+                    Err(_) => victims += 1,
+                }
+            }
+            (ok, victims)
+        }));
+    }
+    let mut total_ok = 0usize;
+    for j in joins {
+        total_ok += j.join().expect("client thread must not panic").0;
+    }
+    fault::clear();
+    assert!(total_ok > 0, "some requests must survive the chaos");
+
+    // per-tenant accounting surfaced in the snapshot
+    let snap = svc.snapshot();
+    let tenants_section = snap.get("_tenants").expect("_tenants section after tenanted traffic");
+    for t in tenants {
+        let submitted = tenants_section
+            .get(t)
+            .and_then(|row| row.get("submitted"))
+            .and_then(mddct::util::json::Json::as_f64)
+            .unwrap_or_else(|| panic!("missing _tenants.{t}.submitted"));
+        assert!(submitted >= 1.0, "{t}: submitted {submitted}");
+    }
+
+    // clean drain under no remaining load, then no thread leak
+    drop(server);
+    #[cfg(target_os = "linux")]
+    {
+        let t0 = Instant::now();
+        loop {
+            let now = thread_count();
+            if now <= baseline {
+                break;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "reader threads leaked: {now} > baseline {baseline}"
+            );
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+}
+
+#[test]
+fn slowloris_partial_frame_gets_a_typed_timeout_frame() {
+    let _g = guard();
+    fault::clear();
+    let svc = Arc::new(Service::start_native(cfg(1)));
+    let server_cfg = ServerConfig {
+        read_timeout: Some(Duration::from_millis(200)),
+        ..ServerConfig::ephemeral()
+    };
+    let server = Server::start(server_cfg, svc).expect("bind ephemeral");
+    let mut stream = TcpStream::connect(server.addr()).expect("connect");
+    // two of four length-prefix bytes, then silence: the frame has
+    // started, so the per-frame deadline applies
+    stream.write_all(&[0x00, 0x00]).expect("partial prefix");
+    stream.flush().expect("flush");
+    let frame = proto::read_frame(&mut stream, proto::DEFAULT_MAX_FRAME_BYTES)
+        .expect("reply readable")
+        .expect("typed frame before close");
+    match proto::decode_reply(&frame).expect("decode") {
+        WireReply::Err { error: TransformError::InvalidRequest(m), .. } => {
+            assert!(m.contains("timed out"), "{m}");
+        }
+        other => panic!("wanted invalid_request timeout frame, got {other:?}"),
+    }
+    assert!(
+        proto::read_frame(&mut stream, proto::DEFAULT_MAX_FRAME_BYTES)
+            .map(|f| f.is_none())
+            .unwrap_or(true),
+        "connection closed after the timeout frame"
+    );
+    assert!(server.stats().read_timeouts.load(Ordering::Relaxed) >= 1);
+}
+
+#[test]
+fn idle_connections_are_reaped_silently() {
+    let _g = guard();
+    fault::clear();
+    let svc = Arc::new(Service::start_native(cfg(1)));
+    let server_cfg = ServerConfig {
+        idle_timeout: Some(Duration::from_millis(150)),
+        ..ServerConfig::ephemeral()
+    };
+    let server = Server::start(server_cfg, svc).expect("bind ephemeral");
+    let mut stream = TcpStream::connect(server.addr()).expect("connect");
+    // send nothing: between frames the idle timeout governs, and the
+    // close is silent (there is no frame to answer)
+    assert!(
+        proto::read_frame(&mut stream, proto::DEFAULT_MAX_FRAME_BYTES)
+            .map(|f| f.is_none())
+            .unwrap_or(true),
+        "idle connection closed without a frame"
+    );
+    assert!(server.stats().idle_timeouts.load(Ordering::Relaxed) >= 1);
+}
+
+#[test]
+fn repeated_decode_violations_close_the_connection() {
+    let _g = guard();
+    fault::clear();
+    let svc = Arc::new(Service::start_native(cfg(1)));
+    let server = Server::start(ServerConfig::ephemeral(), svc).expect("bind ephemeral");
+    let mut stream = TcpStream::connect(server.addr()).expect("connect");
+    // every strike is answered with a typed frame while the budget lasts
+    for i in 0..MAX_CONN_VIOLATIONS {
+        match try_exchange(&mut stream, "{never json") {
+            Ok(WireReply::Err { error: TransformError::InvalidRequest(_), .. }) => {}
+            other => panic!("strike {i}: wanted typed invalid_request, got {other:?}"),
+        }
+    }
+    // the budget is spent: the connection is gone
+    assert!(
+        proto::read_frame(&mut stream, proto::DEFAULT_MAX_FRAME_BYTES)
+            .map(|f| f.is_none())
+            .unwrap_or(true),
+        "connection closed after {MAX_CONN_VIOLATIONS} violations"
+    );
+    assert_eq!(server.stats().violation_closes.load(Ordering::Relaxed), 1);
+    assert_eq!(
+        server.stats().decode_errors.load(Ordering::Relaxed),
+        MAX_CONN_VIOLATIONS as u64
+    );
+}
+
+#[test]
+fn drain_under_load_completes_inflight_work_and_flips_health() {
+    let _g = guard();
+    fault::clear();
+    let svc = Arc::new(Service::start_native(cfg(1)));
+    let mut server = Server::start(ServerConfig::ephemeral(), svc).expect("bind ephemeral");
+    let addr = server.addr();
+
+    let mut rng = Rng::new(31);
+    let x = rng.normal_vec(64);
+    let want = serial_oracle(8, 8, &x);
+
+    // a probe connection opened before the drain starts (the accept
+    // loop stops once it begins)
+    let mut probe = TcpStream::connect(addr).expect("probe connect");
+    match try_exchange(&mut probe, &proto::encode_health_request()).expect("health") {
+        WireReply::Health { status, ready } => {
+            assert_eq!((status.as_str(), ready), ("ok", true));
+        }
+        other => panic!("wanted health reply, got {other:?}"),
+    }
+
+    // slow the execution down so the request is still in flight when
+    // the drain begins
+    set_faults(parse_spec("delay:execute:400ms").unwrap());
+    let data = x.clone();
+    let worker = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).expect("worker connect");
+        let req = WireRequest {
+            id: 7,
+            op: TransformOp::Dct2d,
+            shape: vec![8, 8],
+            batch: 1,
+            deadline_ms: Some(10_000),
+            tenant: Some("drain-tenant".to_string()),
+            priority: 1,
+            data,
+        };
+        try_exchange(&mut s, &proto::encode_request(&req)).expect("in-flight reply")
+    });
+    // wait until that request is actually in flight
+    let t0 = Instant::now();
+    while server.stats().inflight_requests.load(Ordering::SeqCst) == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "request never became in-flight");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // a second probe watches the health route flip while draining
+    let prober = std::thread::spawn(move || {
+        for _ in 0..200 {
+            match try_exchange(&mut probe, &proto::encode_health_request()) {
+                Ok(WireReply::Health { status, ready }) => {
+                    if status == "draining" {
+                        assert!(!ready, "draining implies not ready");
+                        return (true, probe);
+                    }
+                }
+                Ok(other) => panic!("wanted health reply, got {other:?}"),
+                Err(_) => return (false, probe),
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        (false, probe)
+    });
+    let drained = server.drain(Duration::from_secs(10));
+    fault::clear();
+    assert!(drained, "in-flight work must finish inside the grace period");
+
+    // the in-flight request survived the drain, bit-equal
+    match worker.join().expect("worker thread") {
+        WireReply::Ok { id, data, .. } => {
+            assert_eq!(id, 7);
+            assert_eq!(data, want, "drained survivor must be bit-equal");
+        }
+        other => panic!("wanted ok reply for the in-flight request, got {other:?}"),
+    }
+    let (saw_draining, mut probe) = prober.join().expect("prober thread");
+    assert!(saw_draining, "health route must report draining during the grace period");
+    // after the grace period the probe's connection gets the goodbye
+    let goodbye = proto::read_frame(&mut probe, proto::DEFAULT_MAX_FRAME_BYTES)
+        .expect("goodbye readable")
+        .expect("goodbye frame before close");
+    match proto::decode_reply(&goodbye).expect("decode goodbye") {
+        WireReply::Err { error: TransformError::ShuttingDown, .. } => {}
+        other => panic!("wanted shutting_down goodbye, got {other:?}"),
+    }
+    assert_eq!(server.stats().draining.load(Ordering::Relaxed), 1);
+}

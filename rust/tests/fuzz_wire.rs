@@ -43,6 +43,8 @@ fn seed_corpus() -> Vec<Vec<u8>> {
             shape: vec![4, 4],
             batch: 1,
             deadline_ms: None,
+            tenant: None,
+            priority: 0,
             data: (0..16).map(|i| i as f64 - 7.5).collect(),
         },
         WireRequest {
@@ -51,6 +53,8 @@ fn seed_corpus() -> Vec<Vec<u8>> {
             shape: vec![3, 5],
             batch: 2,
             deadline_ms: Some(250),
+            tenant: Some("fuzz-tenant".to_string()),
+            priority: 3,
             data: (0..30).map(|i| (i as f64) * 1e-3).collect(),
         },
         WireRequest {
@@ -59,6 +63,8 @@ fn seed_corpus() -> Vec<Vec<u8>> {
             shape: vec![2, 3, 4],
             batch: 1,
             deadline_ms: Some(0),
+            tenant: None,
+            priority: 0,
             data: vec![0.0; 24],
         },
     ];

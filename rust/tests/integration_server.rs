@@ -85,6 +85,8 @@ fn concurrent_mixed_shape_clients_are_bit_equal_to_direct_calls() {
                         shape: shape.clone(),
                         batch: 1,
                         deadline_ms: None,
+                        tenant: None,
+                        priority: 0,
                         data,
                     };
                     match exchange(&mut stream, &proto::encode_request(&req)) {
@@ -138,6 +140,8 @@ fn wire_batch_equals_per_block_direct_calls() {
         shape: vec![n1, n2],
         batch,
         deadline_ms: None,
+        tenant: None,
+        priority: 0,
         data,
     };
     match exchange(&mut stream, &proto::encode_request(&req)) {
@@ -162,6 +166,8 @@ fn metrics_route_reports_the_traffic_this_connection_sent() {
         shape: vec![8, 8],
         batch: 1,
         deadline_ms: None,
+        tenant: None,
+        priority: 0,
         data: rng.normal_vec(64),
     };
     match exchange(&mut stream, &proto::encode_request(&req)) {
@@ -207,6 +213,8 @@ mod lifecycle {
             shape: vec![8, 8],
             batch: 1,
             deadline_ms,
+            tenant: None,
+            priority: 0,
             data: vec![fill; 64],
         })
     }

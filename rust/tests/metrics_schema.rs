@@ -100,9 +100,14 @@ fn server_section_schema_is_golden() {
         "bytes_in",
         "bytes_out",
         "decode_errors",
+        "draining",
         "frames_in",
         "frames_out",
+        "idle_timeouts",
+        "inflight_requests",
+        "read_timeouts",
         "rejected_conns",
+        "violation_closes",
     ];
     let snap = stats.snapshot();
     assert_eq!(keys(&snap), golden_server);
@@ -112,6 +117,38 @@ fn server_section_schema_is_golden() {
     // the section survives the crate's own JSON grammar round trip
     let reparsed = Json::parse(&snap.to_string()).unwrap();
     assert_eq!(keys(&reparsed), golden_server);
+}
+
+#[test]
+fn tenant_section_schema_is_golden() {
+    // the `_tenants` section appears only once explicitly-tenanted
+    // traffic was recorded; each row has a fixed key set
+    let m = Metrics::new();
+    m.record("dct2d", 2, 0.002, 1, 1);
+    assert!(m.snapshot().get("_tenants").is_none(), "untenanted traffic adds no section");
+    m.record_tenant_submitted("alice");
+    m.record_tenant_done("alice", 0.004);
+    m.record_tenant_shed("alice");
+    m.record_tenant_expired("alice");
+    let snap = m.snapshot();
+    let tenants = snap.get("_tenants").expect("_tenants after tenanted traffic");
+    assert_eq!(keys(tenants), ["alice"]);
+    assert_eq!(
+        keys(tenants.get("alice").unwrap()),
+        [
+            "completed",
+            "expired_requests",
+            "mean_latency_s",
+            "p50_latency_s",
+            "p95_latency_s",
+            "p99_latency_s",
+            "shed_requests",
+            "submitted",
+        ]
+    );
+    // and survives the crate's own JSON grammar round trip
+    let reparsed = Json::parse(&snap.to_string()).unwrap();
+    assert_eq!(keys(reparsed.get("_tenants").unwrap()), ["alice"]);
 }
 
 #[test]

@@ -287,6 +287,8 @@ fn prop_request_validation_total() {
             shape: vec![n1, n2],
             data: vec![0.0; len],
             deadline: None,
+            tenant: None,
+            priority: 0,
         };
         match (req.validate(), len == numel) {
             (Ok(()), true) | (Err(_), false) => Ok(()),

@@ -49,12 +49,22 @@ fn requests_round_trip_bit_identically_across_all_ops() {
                 // 1 << 53 is the largest deadline the integer grammar
                 // carries exactly (the decoder rejects anything above)
                 for deadline_ms in [None, Some(0), Some(250), Some(1u64 << 53)] {
+                    // vary tenant/priority alongside the deadline so
+                    // every combination of optional fields round-trips
+                    let tenant = match deadline_ms {
+                        Some(250) => Some("tenant-a".to_string()),
+                        Some(0) => Some(String::new()),
+                        _ => None,
+                    };
+                    let priority = (rng.next_u64() % 256) as u8;
                     let req = WireRequest {
                         id: rng.next_u64() >> 12,
                         op,
                         shape: shape.clone(),
                         batch,
                         deadline_ms,
+                        tenant,
+                        priority,
                         data: payload(&mut rng, numel * batch),
                     };
                     let body = proto::encode_request(&req);
@@ -66,6 +76,8 @@ fn requests_round_trip_bit_identically_across_all_ops() {
                             assert_eq!(back.shape, req.shape, "{ctx}: shape");
                             assert_eq!(back.batch, req.batch, "{ctx}: batch");
                             assert_eq!(back.deadline_ms, req.deadline_ms, "{ctx}: deadline");
+                            assert_eq!(back.tenant, req.tenant, "{ctx}: tenant");
+                            assert_eq!(back.priority, req.priority, "{ctx}: priority");
                             assert_bits_eq(&back.data, &req.data, &ctx);
                         }
                         other => panic!("{ctx}: decode failed: {other:?}"),
@@ -90,6 +102,8 @@ fn second_encode_is_byte_identical() {
             shape,
             batch: 2,
             deadline_ms: Some(5),
+            tenant: None,
+            priority: 0,
             data: payload(&mut rng, numel * 2),
         };
         let first = proto::encode_request(&req);
